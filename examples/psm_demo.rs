@@ -1,0 +1,85 @@
+//! Prefix-Sharing Maximization demo (paper §4.3): the MMLU-style offline
+//! workload — 57 subjects, each with a long shared few-shot template — is
+//! served under FCFS, vanilla PSM, and fairness-extended PSM.
+//!
+//! Shows (a) the throughput win from scheduling prefix-sharers
+//! consecutively and (b) the starvation pathology of vanilla PSM that the
+//! utility-ratio extension fixes.
+//!
+//!     cargo run --release --example psm_demo
+
+use hygen::baselines::{SimSetup, System};
+use hygen::coordinator::queues::{OfflinePolicy, OfflineQueue};
+use hygen::coordinator::request::{Class, Request};
+use hygen::sim::costmodel::CostModel;
+use hygen::workload::datasets::{self, Dataset};
+
+fn main() -> anyhow::Result<()> {
+    println!("== part 1: offline throughput by queue policy (simulated A100/7B) ==\n");
+    let offline = datasets::generate(Dataset::Mmlu, 8000, 0);
+    let mut fcfs = 0.0;
+    for policy in [
+        OfflinePolicy::Fcfs,
+        OfflinePolicy::Psm,
+        OfflinePolicy::PsmFair { utility_ratio: 0.9 },
+        OfflinePolicy::PsmFair { utility_ratio: 0.5 },
+    ] {
+        let setup = SimSetup::new(CostModel::a100_llama7b()).with_policy(policy);
+        let r = setup.run_draining(
+            System::SarathiOffline { chunk_tokens: 1024 },
+            &offline,
+            240.0,
+        )?;
+        if policy == OfflinePolicy::Fcfs {
+            fcfs = r.report.offline_qps;
+        }
+        let name = match policy {
+            OfflinePolicy::PsmFair { utility_ratio } => format!("psm-fair(u={utility_ratio})"),
+            p => p.name().to_string(),
+        };
+        println!(
+            "  {name:<16} {:>8.1} req/s  {:>8.0} tok/s   ({:.2}x vs fcfs)",
+            r.report.offline_qps,
+            r.report.offline_tps,
+            r.report.offline_qps / fcfs.max(1e-9)
+        );
+    }
+
+    println!("\n== part 2: starvation — when does the lone request get served? ==\n");
+    // One loner with no prefix-sharing potential vs a stream of sharers.
+    for (name, policy) in [
+        ("psm (u=1.0)", OfflinePolicy::Psm),
+        ("psm-fair u=0.9", OfflinePolicy::PsmFair { utility_ratio: 0.9 }),
+        ("psm-fair u=0.5", OfflinePolicy::PsmFair { utility_ratio: 0.5 }),
+        ("fcfs", OfflinePolicy::Fcfs),
+    ] {
+        let mut q = OfflineQueue::new(policy, 42);
+        let loner_prompt: Vec<u32> = "zzz completely unique request".bytes().map(u32::from).collect();
+        q.push(
+            Request::new(0, Class::Offline, 0.0, loner_prompt.len(), 4)
+                .with_prompt(loner_prompt),
+        );
+        for i in 1..400u64 {
+            let p: Vec<u32> =
+                format!("aaa shared family question {i:04}").bytes().map(u32::from).collect();
+            q.push(Request::new(i, Class::Offline, i as f64 * 0.05, p.len(), 4).with_prompt(p));
+        }
+        let mut pos = None;
+        for step in 0.. {
+            match q.pop_next() {
+                Some(r) if r.id == 0 => {
+                    pos = Some(step);
+                    break;
+                }
+                Some(_) => {}
+                None => break,
+            }
+        }
+        match pos {
+            Some(p) => println!("  {name:<16} loner scheduled after {p:>3} pops"),
+            None => println!("  {name:<16} loner NEVER scheduled (starved)"),
+        }
+    }
+    println!("\nvanilla PSM schedules the loner dead last (or starves it under\narrivals); the utility ratio bounds its wait — Alg. 4 of the paper.");
+    Ok(())
+}

@@ -1,0 +1,159 @@
+"""AOT pipeline: lower the L2 step function to HLO *text* artifacts.
+
+The Rust runtime (rust/src/runtime) loads these with
+``HloModuleProto::from_text_file`` and compiles them on the PJRT CPU client.
+
+HLO text -- NOT ``lowered.compile().serialize()`` and NOT the serialized
+HloModuleProto -- is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (what the published
+``xla = 0.1.6`` crate binds) rejects with ``proto.id() <= INT_MAX``. The
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+One artifact is emitted per (B, C) shape bucket -- XLA executables have
+static shapes, so the Rust engine pads each iteration batch up to the
+nearest bucket. Model weights come from a fixed seed and are baked into
+the HLO as constants: Python never runs at serving time, and the Rust
+side ships only tokens/positions/caches.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+import numpy as np
+
+from .model import (
+    ModelConfig,
+    empty_cache,
+    flatten_params,
+    init_params,
+    make_step_fn,
+    num_params,
+)
+
+# (batch slots, chunk tokens per slot) buckets the Rust engine can pick from.
+BUCKETS = [(1, 1), (1, 32), (4, 1), (4, 8), (4, 32), (8, 1), (8, 8), (8, 32)]
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(cfg: ModelConfig, b: int, c: int) -> str:
+    """Lower one (B, C) shape bucket of the step fn to HLO text.
+
+    ABI (5 inputs / 3-tuple output) consumed by rust/src/runtime:
+      in:  flat_params f32[P], tokens s32[B,C], pos_base s32[B],
+           cache_k f32[L,B,T,H,D], cache_v f32[L,B,T,H,D]
+      out: (logits f32[B,C,V], cache_k', cache_v')
+    """
+    fn = make_step_fn(cfg, use_pallas=True)
+    flat = jax.ShapeDtypeStruct((num_params(cfg),), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((b, c), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    ck, cv = empty_cache(cfg, b)
+    cache = jax.ShapeDtypeStruct(ck.shape, ck.dtype)
+    return to_hlo_text(jax.jit(fn).lower(flat, tokens, pos, cache, cache))
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, so `make artifacts` can skip."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for rel in ["model.py", "aot.py", "kernels/attention.py", "kernels/ref.py"]:
+        with open(os.path.join(here, rel), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default=None, help="e.g. '1x1,8x32' to restrict")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    buckets = BUCKETS
+    if args.buckets:
+        buckets = [tuple(map(int, s.split("x"))) for s in args.buckets.split(",")]
+
+    cfg = ModelConfig()
+    params = init_params(jax.random.PRNGKey(SEED), cfg)
+    flat = np.asarray(flatten_params(params, cfg), dtype="<f4")
+    with open(os.path.join(args.out_dir, "params.bin"), "wb") as f:
+        f.write(flat.tobytes())
+    print(f"wrote params.bin: {flat.size} f32 ({flat.nbytes} bytes)")
+
+    manifest = {
+        "seed": SEED,
+        "fingerprint": input_fingerprint(),
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "num_params": int(flat.size),
+        },
+        "artifacts": [],
+    }
+    for b, c in buckets:
+        name = f"step_b{b}_c{c}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_bucket(cfg, b, c)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({"batch": b, "chunk": c, "file": name})
+        print(f"wrote {name}: {len(text)} chars")
+
+    # Cross-language fixture: greedy-decode a fixed prompt with the jax
+    # model; the Rust integration test must reproduce these exact token ids
+    # through the PJRT path (L1+L2+L3 consistency proof).
+    fixture = make_fixture(cfg, params)
+    with open(os.path.join(args.out_dir, "expected_tokens.json"), "w") as f:
+        json.dump(fixture, f)
+    print(f"wrote expected_tokens.json ({len(fixture['output_tokens'])} tokens)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(buckets)} buckets)")
+
+
+def make_fixture(cfg: ModelConfig, params: dict, prompt: str = "Hello, HyGen!", n_out: int = 12):
+    """Greedy generation fixture for the Rust integration test."""
+    from .model import step
+
+    tokens = [b for b in prompt.encode()]
+    ck, cv = empty_cache(cfg, 1)
+    t = jnp.asarray([tokens], jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    logits, ck, cv = step(params, t, pos, ck, cv, cfg=cfg)
+    out = [int(jnp.argmax(logits[0, len(tokens) - 1]))]
+    for i in range(n_out - 1):
+        t = jnp.asarray([[out[-1]]], jnp.int32)
+        pos = jnp.asarray([len(tokens) + i], jnp.int32)
+        logits, ck, cv = step(params, t, pos, ck, cv, cfg=cfg)
+        out.append(int(jnp.argmax(logits[0, 0])))
+    return {"prompt": prompt, "prompt_tokens": tokens, "output_tokens": out}
+
+
+if __name__ == "__main__":
+    main()

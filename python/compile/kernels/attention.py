@@ -1,0 +1,137 @@
+"""Layer-1 Pallas kernel: chunked-prefill / decode attention over a slotted KV cache.
+
+This is HyGen's compute hot-spot expressed for the TPU execution model
+(see DESIGN.md §Hardware-Adaptation for the CUDA->TPU mapping):
+
+  * the iteration batch is laid out as ``[B, C]`` -- ``B`` sequence slots,
+    each contributing up to ``C`` new tokens this iteration (``C == 1`` for a
+    pure decode slot, ``C`` up to the chunk budget for a prefill chunk).
+    This is exactly Sarathi-style iteration-level chunked prefill.
+  * each grid program ``(b, h)`` owns one (slot, head) pair; its Q tile
+    ``[C, D]`` and the slot's full K/V cache stripes ``[T, D]`` are staged
+    HBM->VMEM by ``BlockSpec`` index maps -- the declarative analogue of the
+    cooperative threadblock loads a CUDA kernel would issue.
+  * softmax uses the online (running max / running denominator) formulation
+    over K tiles of ``block_k`` so the working set stays in VMEM and the two
+    matmuls (QK^T, PV) are MXU-shaped.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and real-TPU
+performance is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps exp() NaN-free
+
+
+def _attention_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """One (slot, head) program: online-softmax attention of C queries vs T keys.
+
+    pos_ref: [1, 1] i32  -- first position of this slot's new tokens
+    q_ref:   [1, C, 1, D]  query tile (already RoPE-rotated)
+    k_ref:   [1, T, 1, D]  slot's key cache stripe for this head
+    v_ref:   [1, T, 1, D]  slot's value cache stripe
+    o_ref:   [1, C, 1, D]  output tile
+    """
+    q = q_ref[0, :, 0, :]  # [C, D]
+    c, d = q.shape
+    t = k_ref.shape[1]
+    pos0 = pos_ref[0, 0]
+    q_pos = pos0 + jax.lax.iota(jnp.int32, c)  # position of each query token
+    scale = 1.0 / math.sqrt(d)
+
+    m = jnp.full((c,), NEG_INF, dtype=jnp.float32)  # running max
+    l = jnp.zeros((c,), dtype=jnp.float32)  # running denominator
+    acc = jnp.zeros((c, d), dtype=jnp.float32)  # running numerator
+
+    # Static loop over K tiles: T and block_k are compile-time constants, so
+    # this unrolls into a fixed HBM->VMEM schedule (the BlockSpec already
+    # staged the full stripe; the tile loop keeps the MXU operands small).
+    for kb in range(t // block_k):
+        k = k_ref[0, kb * block_k : (kb + 1) * block_k, 0, :]  # [block_k, D]
+        v = v_ref[0, kb * block_k : (kb + 1) * block_k, 0, :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kv_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = kv_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(causal, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m = m_new
+
+    o_ref[0, :, 0, :] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def chunked_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos_base: jax.Array,
+    *,
+    block_k: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Attention of the iteration's new tokens against the slotted KV cache.
+
+    Args:
+      q:        [B, C, H, D] new-token queries (RoPE already applied).
+      k_cache:  [B, T, H, D] per-slot key cache; positions
+                ``[pos_base[b], pos_base[b] + C)`` hold this iteration's keys.
+      v_cache:  [B, T, H, D] value cache, same layout.
+      pos_base: [B] int32, first new-token position per slot.
+      block_k:  K-tile size for the online softmax (multiple of lane width).
+
+    Returns: [B, C, H, D] attention outputs. Padding queries (beyond a
+    slot's ``n_new``) produce garbage rows the model never reads.
+    """
+    b, c, h, d = q.shape
+    t = k_cache.shape[1]
+    if t % block_k != 0:
+        raise ValueError(f"T={t} must be a multiple of block_k={block_k}")
+    pos2 = pos_base.reshape(b, 1).astype(jnp.int32)
+    kernel = functools.partial(_attention_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((1, c, 1, d), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, t, 1, d), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, t, 1, d), lambda bi, hi: (bi, 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, d), lambda bi, hi: (bi, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, d), jnp.float32),
+        interpret=interpret,
+    )(pos2, q, k_cache, v_cache)
+
+
+def vmem_bytes(c: int, t: int, d: int, block_k: int) -> int:
+    """Estimated VMEM working set of one (slot, head) program, in bytes.
+
+    Used by the §Perf analysis: q tile + staged K/V stripes + accumulators.
+    """
+    f32 = 4
+    q_tile = c * d * f32
+    kv_stripes = 2 * t * d * f32
+    tiles = 2 * block_k * d * f32
+    acc = (c * d + 2 * c) * f32
+    scores = c * block_k * f32
+    return q_tile + kv_stripes + tiles + acc + scores
+
+
+def mxu_flops(c: int, t: int, d: int) -> int:
+    """MXU FLOPs of one (slot, head) program: QK^T + PV."""
+    return 2 * c * t * d * 2

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the Pallas chunked-attention kernel.
+
+No Pallas, no tiling, no online softmax -- a direct masked-softmax
+implementation that the kernel is tested against (pytest + hypothesis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos_base: jax.Array,
+) -> jax.Array:
+    """Reference attention; same contract as ``attention.chunked_attention``.
+
+    q:        [B, C, H, D]
+    k_cache:  [B, T, H, D]
+    v_cache:  [B, T, H, D]
+    pos_base: [B] int32
+    returns:  [B, C, H, D]
+    """
+    b, c, h, d = q.shape
+    t = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    # [B, H, C, T] scores
+    s = jnp.einsum("bchd,bthd->bhct", q, k_cache) * scale
+    q_pos = pos_base[:, None].astype(jnp.int32) + jnp.arange(c, dtype=jnp.int32)[None, :]
+    kv_pos = jnp.arange(t, dtype=jnp.int32)
+    causal = kv_pos[None, None, :] <= q_pos[:, :, None]  # [B, C, T]
+    s = jnp.where(causal[:, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhct,bthd->bchd", p, v_cache)
+    return o.astype(jnp.float32)

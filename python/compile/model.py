@@ -1,0 +1,267 @@
+"""Layer-2 JAX model: a tiny byte-level decoder transformer with a slotted KV
+cache, driven one iteration (= one mixed chunked-prefill/decode batch) at a
+time.
+
+This is the compute substrate the Rust coordinator schedules onto. The step
+function has exactly the contract HyGen's scheduler needs:
+
+    step(tokens[B, C], pos_base[B], n_new[B], cache_k, cache_v)
+        -> (logits[B, C, V], cache_k', cache_v')
+
+* ``B`` sequence slots (one per running request), ``C`` new tokens per slot
+  this iteration. A decode slot contributes 1 token; a prefill slot
+  contributes a chunk of up to ``C`` tokens (Sarathi-style chunked prefill).
+* ``pos_base[b]`` is the slot's current sequence length (where the new
+  tokens start); ``n_new[b] <= C`` is how many of the C are real. Padding
+  rows write garbage K/V *beyond* ``pos_base + n_new``, which is never read
+  (attention masks by position) and is overwritten by the next chunk.
+* caches are ``[L, B, T, H, D]`` and travel through the step as inputs and
+  outputs so the Rust runtime can keep them as XLA literals between calls.
+
+Model params are created from a fixed seed at AOT time and *baked into the
+HLO as constants* -- the Rust side only ever ships tokens/positions/caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import chunked_attention
+from .kernels.ref import attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-transformer hyperparameters (byte-level vocab)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    head_dim: int = 32
+    n_layers: int = 2
+    d_ff: int = 256
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+
+    def __post_init__(self):
+        assert self.n_heads * self.head_dim == self.d_model
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    """He-style init of all weights as a flat dict of arrays."""
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def dense(k, fan_in, shape):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(
+            jnp.float32
+        )
+
+    params = {
+        "embed": dense(ks[0], 1.0, (v, d)) * 0.02 * jnp.sqrt(1.0),
+        "lm_head": dense(ks[1], d, (d, v)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[2 + i], 7)
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((d,), jnp.float32),
+                "wq": dense(lk[0], d, (d, d)),
+                "wk": dense(lk[1], d, (d, d)),
+                "wv": dense(lk[2], d, (d, d)),
+                "wo": dense(lk[3], d, (d, d)),
+                "mlp_norm": jnp.ones((d,), jnp.float32),
+                "w_gate": dense(lk[4], d, (d, f)),
+                "w_up": dense(lk[5], d, (d, f)),
+                "w_down": dense(lk[6], f, (f, d)),
+            }
+        )
+    return params
+
+
+def _rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [B, C, H, D]; positions: [B, C] int32."""
+    b, c, h, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, C, half]
+    cos = jnp.cos(ang)[:, :, None, :]  # [B, C, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _update_cache(cache: jax.Array, new: jax.Array, pos_base: jax.Array) -> jax.Array:
+    """Write [B, C, H, D] new K/V into [B, T, H, D] cache at pos_base[b].
+
+    Whole-chunk dynamic_update_slice per slot: rows past ``n_new`` land as
+    garbage beyond the live region; they are masked out of attention and
+    overwritten by the next chunk starting exactly at pos_base + n_new.
+    """
+
+    def write_one(cache_b, new_b, start):
+        return jax.lax.dynamic_update_slice(cache_b, new_b, (start, 0, 0))
+
+    return jax.vmap(write_one)(cache, new, pos_base)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "use_pallas", "interpret")
+)
+def step(
+    params: dict,
+    tokens: jax.Array,
+    pos_base: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    *,
+    cfg: ModelConfig,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One engine iteration over a mixed prefill/decode batch.
+
+    tokens:   [B, C] int32 new token ids (padding rows arbitrary).
+    pos_base: [B] int32 current length of each slot.
+    cache_k/v: [L, B, T, H, D] f32.
+    Returns (logits [B, C, V], new cache_k, new cache_v).
+    """
+    b, c = tokens.shape
+    h, d = cfg.n_heads, cfg.head_dim
+    positions = pos_base[:, None].astype(jnp.int32) + jnp.arange(c, dtype=jnp.int32)
+
+    x = params["embed"][tokens]  # [B, C, d_model]
+    new_ks, new_vs = [], []
+    for li, layer in enumerate(params["layers"]):
+        xn = _rms_norm(x, layer["attn_norm"])
+        q = (xn @ layer["wq"]).reshape(b, c, h, d)
+        k = (xn @ layer["wk"]).reshape(b, c, h, d)
+        v = (xn @ layer["wv"]).reshape(b, c, h, d)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        ck = _update_cache(cache_k[li], k, pos_base)
+        cv = _update_cache(cache_v[li], v, pos_base)
+        new_ks.append(ck)
+        new_vs.append(cv)
+        if use_pallas:
+            o = chunked_attention(q, ck, cv, pos_base, interpret=interpret)
+        else:
+            o = attention_ref(q, ck, cv, pos_base)
+        x = x + o.reshape(b, c, cfg.d_model) @ layer["wo"]
+        xn = _rms_norm(x, layer["mlp_norm"])
+        x = x + (jax.nn.silu(xn @ layer["w_gate"]) * (xn @ layer["w_up"])) @ layer[
+            "w_down"
+        ]
+
+    x = _rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]  # [B, C, V]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def _param_layout(cfg: ModelConfig):
+    """Deterministic (name, shape) order used to (un)flatten the weights.
+
+    The same order defines ``artifacts/params.bin``: one little-endian f32
+    blob the Rust runtime loads at startup and ships as the step function's
+    first argument. (jax >= 0.5 lifts closed-over arrays to module
+    parameters rather than baking them as HLO constants, so the weights are
+    an *explicit* input -- which also matches how a real serving engine
+    loads checkpoints.)
+    """
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    layout = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        layout += [
+            (f"layers.{i}.attn_norm", (d,)),
+            (f"layers.{i}.wq", (d, d)),
+            (f"layers.{i}.wk", (d, d)),
+            (f"layers.{i}.wv", (d, d)),
+            (f"layers.{i}.wo", (d, d)),
+            (f"layers.{i}.mlp_norm", (d,)),
+            (f"layers.{i}.w_gate", (d, f)),
+            (f"layers.{i}.w_up", (d, f)),
+            (f"layers.{i}.w_down", (f, d)),
+        ]
+    layout += [("final_norm", (d,)), ("lm_head", (d, v))]
+    return layout
+
+
+def num_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in _param_layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def flatten_params(params: dict, cfg: ModelConfig) -> jax.Array:
+    """Flatten the params dict into one f32 vector per ``_param_layout``."""
+    flat = {}
+    flat["embed"] = params["embed"]
+    for i, layer in enumerate(params["layers"]):
+        for k, vv in layer.items():
+            flat[f"layers.{i}.{k}"] = vv
+    flat["final_norm"] = params["final_norm"]
+    flat["lm_head"] = params["lm_head"]
+    return jnp.concatenate(
+        [flat[name].reshape(-1) for name, _ in _param_layout(cfg)]
+    ).astype(jnp.float32)
+
+
+def unflatten_params(flat: jax.Array, cfg: ModelConfig) -> dict:
+    """Inverse of ``flatten_params`` (traced inside the lowered step fn)."""
+    out: dict = {"layers": [dict() for _ in range(cfg.n_layers)]}
+    off = 0
+    for name, shape in _param_layout(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        arr = jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+        off += n
+        if name.startswith("layers."):
+            _, idx, key = name.split(".")
+            out["layers"][int(idx)][key] = arr
+        else:
+            out[name] = arr
+    return out
+
+
+def make_step_fn(cfg: ModelConfig, *, use_pallas: bool = True):
+    """Build fn(flat_params, tokens, pos_base, cache_k, cache_v) for AOT.
+
+    This is the function ``aot.py`` lowers; its 5-array signature is the
+    runtime ABI between the artifacts and the Rust engine.
+    """
+
+    def fn(flat_params, tokens, pos_base, cache_k, cache_v):
+        params = unflatten_params(flat_params, cfg)
+        return step(
+            params,
+            tokens,
+            pos_base,
+            cache_k,
+            cache_v,
+            cfg=cfg,
+            use_pallas=use_pallas,
+        )
+
+    return fn
+
+
+def empty_cache(cfg: ModelConfig, batch: int) -> Tuple[jax.Array, jax.Array]:
+    shape = (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)

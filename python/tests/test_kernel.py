@@ -1,0 +1,109 @@
+"""L1 correctness: Pallas chunked-attention kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer -- hypothesis
+sweeps shapes, cache fills, and positions; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import chunked_attention, mxu_flops, vmem_bytes
+from compile.kernels.ref import attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_case(rng, b, c, h, d, t):
+    q = rng.standard_normal((b, c, h, d), dtype=np.float32)
+    k = rng.standard_normal((b, t, h, d), dtype=np.float32)
+    v = rng.standard_normal((b, t, h, d), dtype=np.float32)
+    # pos_base must leave room for the C new tokens: pos + C <= T
+    pos = rng.integers(0, t - c + 1, size=(b,)).astype(np.int32)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(pos)
+
+
+def _check(q, k, v, pos, block_k):
+    out = chunked_attention(q, k, v, pos, block_k=block_k)
+    ref = attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+class TestKernelVsRef:
+    def test_basic(self):
+        rng = np.random.default_rng(0)
+        _check(*_rand_case(rng, 4, 8, 4, 32, 128), block_k=64)
+
+    def test_decode_shape(self):
+        """C=1 pure-decode batch."""
+        rng = np.random.default_rng(1)
+        _check(*_rand_case(rng, 8, 1, 4, 32, 256), block_k=64)
+
+    def test_prefill_from_zero(self):
+        rng = np.random.default_rng(2)
+        q, k, v, _ = _rand_case(rng, 2, 32, 4, 32, 64)
+        pos = jnp.zeros((2,), jnp.int32)
+        _check(q, k, v, pos, block_k=32)
+
+    def test_single_slot_single_head(self):
+        rng = np.random.default_rng(3)
+        _check(*_rand_case(rng, 1, 4, 1, 16, 32), block_k=16)
+
+    def test_block_k_full_t(self):
+        """block_k == T degenerates to one tile."""
+        rng = np.random.default_rng(4)
+        _check(*_rand_case(rng, 2, 4, 2, 16, 64), block_k=64)
+
+    def test_block_k_indivisible_raises(self):
+        rng = np.random.default_rng(5)
+        q, k, v, pos = _rand_case(rng, 1, 2, 1, 8, 64)
+        with pytest.raises(ValueError):
+            chunked_attention(q, k, v, pos, block_k=48)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 5),
+        c=st.sampled_from([1, 2, 4, 8]),
+        h=st.integers(1, 4),
+        logd=st.integers(3, 5),
+        t_mult=st.integers(1, 4),
+        block_k=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, b, c, h, logd, t_mult, block_k, seed):
+        d = 2**logd
+        t = block_k * t_mult
+        if t < c:
+            t = block_k * ((c + block_k - 1) // block_k)
+        rng = np.random.default_rng(seed)
+        _check(*_rand_case(rng, b, c, h, d, t), block_k=block_k)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_scale_invariance_of_mask(self, seed):
+        """Garbage K/V beyond every query's position must not leak into out."""
+        rng = np.random.default_rng(seed)
+        b, c, h, d, t = 2, 4, 2, 16, 64
+        q, k, v, pos = _rand_case(rng, b, c, h, d, t)
+        out1 = chunked_attention(q, k, v, pos, block_k=32)
+        # poison all cache rows strictly beyond the last query position
+        last = np.asarray(pos) + c  # first untouched row per slot
+        k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+        for bi in range(b):
+            k2[bi, last[bi] :] = 1e4
+            v2[bi, last[bi] :] = -1e4
+        out2 = chunked_attention(q, jnp.asarray(k2), jnp.asarray(v2), pos, block_k=32)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+class TestRoofline:
+    """Sanity of the §Perf estimators (they feed EXPERIMENTS.md)."""
+
+    def test_vmem_fits_budget(self):
+        # production bucket: C=32, T=256, D=32, block_k=64 per (slot, head)
+        assert vmem_bytes(32, 256, 32, 64) < 16 * 1024 * 1024
+
+    def test_mxu_flops_positive_and_scales(self):
+        assert mxu_flops(32, 256, 32) == 2 * mxu_flops(16, 256, 32)

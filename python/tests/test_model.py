@@ -1,0 +1,142 @@
+"""L2 correctness: the step function's serving invariants.
+
+These are the invariants the Rust engine relies on:
+  * pallas path == ref-attention path,
+  * chunked prefill == monolithic prefill (Sarathi equivalence),
+  * incremental decode == full-sequence forward,
+  * padding slots/rows never perturb live slots.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import ModelConfig, empty_cache, init_params, step
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(max_seq=64, n_layers=2)
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def run_step(tokens, pos_base, ck, cv, use_pallas=True):
+    return step(
+        PARAMS,
+        jnp.asarray(tokens, jnp.int32),
+        jnp.asarray(pos_base, jnp.int32),
+        ck,
+        cv,
+        cfg=CFG,
+        use_pallas=use_pallas,
+    )
+
+
+def test_pallas_matches_ref_path():
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, CFG.vocab, size=(2, 8))
+    ck, cv = empty_cache(CFG, 2)
+    lp, ckp, cvp = run_step(tokens, [0, 0], ck, cv, use_pallas=True)
+    lr, ckr, cvr = run_step(tokens, [0, 0], ck, cv, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ckp), np.asarray(ckr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cvp), np.asarray(cvr), rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_prefill_equals_monolithic():
+    """Prefilling 16 tokens as 2x8-chunks must equal one 16-token prefill."""
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, CFG.vocab, size=(1, 16))
+    ck, cv = empty_cache(CFG, 1)
+    logits_full, _, _ = run_step(prompt, [0], ck, cv)
+
+    ck2, cv2 = empty_cache(CFG, 1)
+    _, ck2, cv2 = run_step(prompt[:, :8], [0], ck2, cv2)
+    logits_chunk2, _, _ = run_step(prompt[:, 8:], [8], ck2, cv2)
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, 8:]),
+        np.asarray(logits_chunk2),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_incremental_decode_equals_forward():
+    """Last-token logits from token-by-token decode == full forward pass."""
+    rng = np.random.default_rng(2)
+    seq = rng.integers(0, CFG.vocab, size=(1, 12))
+    ck, cv = empty_cache(CFG, 1)
+    logits_full, _, _ = run_step(seq, [0], ck, cv)
+
+    ck2, cv2 = empty_cache(CFG, 1)
+    _, ck2, cv2 = run_step(seq[:, :4], [0], ck2, cv2)  # prefill 4
+    outs = []
+    for i in range(4, 12):  # decode one at a time
+        lg, ck2, cv2 = run_step(seq[:, i : i + 1], [i], ck2, cv2)
+        outs.append(np.asarray(lg)[0, 0])
+    np.testing.assert_allclose(
+        np.asarray(logits_full)[0, 4:], np.stack(outs), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_padding_slot_does_not_perturb_live_slot():
+    """Slot 1's content must not change slot 0's logits (batch isolation)."""
+    rng = np.random.default_rng(3)
+    t0 = rng.integers(0, CFG.vocab, size=(8,))
+    pad_a = rng.integers(0, CFG.vocab, size=(8,))
+    pad_b = rng.integers(0, CFG.vocab, size=(8,))
+    ck, cv = empty_cache(CFG, 2)
+    la, _, _ = run_step(np.stack([t0, pad_a]), [0, 0], ck, cv)
+    lb, _, _ = run_step(np.stack([t0, pad_b]), [0, 0], ck, cv)
+    np.testing.assert_allclose(np.asarray(la[0]), np.asarray(lb[0]), rtol=1e-6)
+
+
+def test_padding_rows_within_chunk_do_not_perturb():
+    """Rows beyond n_new are padding; changing them must not affect the
+    logits of real rows (positions mask them out)."""
+    rng = np.random.default_rng(4)
+    real = rng.integers(0, CFG.vocab, size=(4,))
+    ck, cv = empty_cache(CFG, 1)
+    a = np.concatenate([real, rng.integers(0, CFG.vocab, size=(4,))])[None, :]
+    b = np.concatenate([real, rng.integers(0, CFG.vocab, size=(4,))])[None, :]
+    la, _, _ = run_step(a, [0], ck, cv)
+    lb, _, _ = run_step(b, [0], ck, cv)
+    np.testing.assert_allclose(np.asarray(la[0, :4]), np.asarray(lb[0, :4]), rtol=1e-6)
+
+
+def test_cache_garbage_overwritten_by_next_chunk():
+    """Padding K/V written past n_new is overwritten when the next chunk
+    starts at pos_base + n_new: two chunked runs with different padding
+    converge to identical caches over the live region."""
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, CFG.vocab, size=(10,))
+    pad1 = rng.integers(0, CFG.vocab, size=(2,))
+    pad2 = rng.integers(0, CFG.vocab, size=(2,))
+
+    def run(pad):
+        ck, cv = empty_cache(CFG, 1)
+        chunk1 = np.concatenate([prompt[:6], pad])[None, :]  # n_new=6, C=8
+        _, ck, cv = run_step(chunk1, [0], ck, cv)
+        lg, ck, cv = run_step(prompt[None, 6:10], [6], ck, cv)  # next at pos 6
+        return np.asarray(lg), np.asarray(ck)[:, :, :10], np.asarray(cv)[:, :, :10]
+
+    l1, k1, v1 = run(pad1)
+    l2, k2, v2 = run(pad2)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    np.testing.assert_allclose(k1, k2, rtol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6)
+
+
+def test_determinism():
+    rng = np.random.default_rng(6)
+    tokens = rng.integers(0, CFG.vocab, size=(2, 4))
+    ck, cv = empty_cache(CFG, 2)
+    l1, _, _ = run_step(tokens, [0, 0], ck, cv)
+    l2, _, _ = run_step(tokens, [0, 0], ck, cv)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_logit_shapes():
+    ck, cv = empty_cache(CFG, 4)
+    lg, ck2, cv2 = run_step(np.zeros((4, 8)), [0, 0, 0, 0], ck, cv)
+    assert lg.shape == (4, 8, CFG.vocab)
+    assert ck2.shape == ck.shape and cv2.shape == cv.shape

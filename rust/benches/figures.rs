@@ -1,0 +1,88 @@
+//! End-to-end benchmark rows — one per paper table/figure family — each
+//! timing a scaled-down regeneration of that experiment on the simulation
+//! backend. (`cargo run --release -- figures all` produces the full-size
+//! CSVs; these rows track the harness cost and guard against regressions
+//! in the end-to-end path.)
+
+use hygen::baselines::{SimSetup, System};
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::sim::costmodel::CostModel;
+use hygen::sim::profile_and_fit;
+use hygen::util::bench::{black_box, Bencher};
+use hygen::workload::azure::{self, AzureTraceConfig};
+use hygen::workload::datasets::{self, Dataset};
+use hygen::workload::mooncake::{self, MooncakeTraceConfig};
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // fig1/13 — trace synthesis
+    b.bench("fig1/azure 1h trace synthesis", || {
+        black_box(
+            azure::generate(&AzureTraceConfig::default(), 0).len(),
+        )
+    });
+    b.bench("fig13/mooncake 1h trace synthesis", || {
+        black_box(mooncake::generate(&MooncakeTraceConfig::default(), 0).len())
+    });
+
+    // fig5/16 — predictor profiling + fit
+    b.bench("fig5/profile+fit 20k samples", || {
+        black_box(profile_and_fit(&CostModel::a100_llama7b(), 0, 20_000).2)
+    });
+
+    // fig3/4/7..17 — one end-to-end co-location run (60 s horizon)
+    let setup = SimSetup::new(CostModel::a100_llama7b());
+    let online = azure::generate(
+        &AzureTraceConfig { duration_s: 45.0, mean_qps: 2.0, ..Default::default() },
+        0,
+    );
+    let offline = datasets::generate(Dataset::ArxivSummarization, 300, 0);
+    let workload = online.clone().merged(offline.clone());
+    b.bench("fig3/hygen 60s co-location run", || {
+        black_box(
+            setup
+                .run(System::HyGen { latency_budget_ms: 30.0 }, &workload, 60.0)
+                .unwrap()
+                .report
+                .total_tps,
+        )
+    });
+    b.bench("fig4/sarathi++ 60s run", || {
+        black_box(setup.run(System::SarathiPlusPlus, &workload, 60.0).unwrap().report.total_tps)
+    });
+    b.bench("fig4/sarathi-offline 60s run", || {
+        black_box(
+            setup
+                .run_draining(System::SarathiOffline { chunk_tokens: 1024 }, &offline, 60.0)
+                .unwrap()
+                .report
+                .offline_tps,
+        )
+    });
+
+    // fig6 — PSM policy run on prefix-heavy offline
+    let mmlu = datasets::generate(Dataset::Mmlu, 1500, 0);
+    for policy in [OfflinePolicy::Fcfs, OfflinePolicy::Psm] {
+        let s = SimSetup::new(CostModel::a100_llama7b()).with_policy(policy);
+        b.bench(&format!("fig6/mmlu 60s run [{}]", policy.name()), || {
+            black_box(
+                s.run_draining(System::HyGen { latency_budget_ms: 60.0 }, &mmlu, 60.0)
+                    .unwrap()
+                    .report
+                    .offline_qps,
+            )
+        });
+    }
+
+    // fig9 — TP/PP cost model
+    b.bench("fig9/yi34b tp2pp2 60s run", || {
+        let s = SimSetup::new(CostModel::a40x4_yi34b_tp2pp2());
+        black_box(
+            s.run(System::HyGen { latency_budget_ms: 80.0 }, &workload, 60.0)
+                .unwrap()
+                .report
+                .total_tps,
+        )
+    });
+}

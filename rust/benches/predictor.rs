@@ -1,0 +1,41 @@
+//! Latency-predictor micro-benchmarks — the paper's claims are ~15 ms
+//! training on 80k samples and ~18 µs per prediction per iteration.
+
+use hygen::coordinator::batch::Features;
+use hygen::coordinator::predictor::{LatencyPredictor, Sample};
+use hygen::util::bench::{black_box, Bencher};
+use hygen::util::rng::Rng;
+
+fn samples(n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut f = Features::default();
+            for _ in 0..rng.range(0, 3) {
+                f.add_prefill(rng.range_usize(16, 2048));
+            }
+            for _ in 0..rng.range(0, 64) {
+                f.add_decode();
+            }
+            let y = 5.0 + 0.08 * f.sp + 1.5e-5 * f.sp * f.sp + 0.2 * f.nd;
+            Sample { features: f, latency_ms: y * (1.0 + 0.02 * rng.normal()) }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let train = samples(80_000, 0);
+    b.bench("predictor/fit 80k samples (paper ~15ms)", || {
+        LatencyPredictor::fit(black_box(&train))
+    });
+    let p = LatencyPredictor::fit(&train);
+    let f = Features::default().with_prefill(512).with_decode().with_decode();
+    b.bench("predictor/predict (paper ~18us per iter)", || p.predict(black_box(&f)));
+    b.bench("predictor/decode_cost", || p.decode_cost(black_box(&f)));
+    b.bench("predictor/max_prefill_tokens", || {
+        p.max_prefill_tokens(black_box(&f), 30.0, 2048, 100_000, 1024)
+    });
+    let test = samples(8_000, 1);
+    b.bench("predictor/evaluate_mape 8k", || p.evaluate_mape(black_box(&test)));
+}

@@ -1,0 +1,79 @@
+//! Scheduler hot-path benchmarks: per-iteration scheduling cost (the
+//! paper's O(n) claim; scheduling must be negligible vs ~10ms batches).
+
+use hygen::coordinator::predictor::LatencyPredictor;
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::coordinator::request::{Class, Request};
+use hygen::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+use hygen::coordinator::state::EngineState;
+use hygen::util::bench::{black_box, Bencher};
+use hygen::util::rng::Rng;
+
+/// A steady-state engine: many running decodes + waiting queues.
+fn steady_state(n_running: usize, n_queued: usize, policy: OfflinePolicy) -> EngineState {
+    let mut st = EngineState::new(policy, 1 << 16, 16, 0);
+    let mut rng = Rng::new(7);
+    for i in 0..n_running {
+        let id = i as u64;
+        let mut r = Request::new(id, if i % 2 == 0 { Class::Online } else { Class::Offline }, 0.0, 256, 64)
+            .with_prompt((0..256u32).map(|k| k + id as u32 * 977).collect());
+        r.prefilled = 256;
+        r.generated = 1 + (i % 8);
+        r.phase = hygen::coordinator::request::Phase::Decode;
+        st.blocks.allocate(id, r.context_len(), &[]).unwrap();
+        if i % 2 == 0 {
+            st.running_online.push(id);
+        } else {
+            st.running_offline.push(id);
+        }
+        st.requests.insert(id, r);
+    }
+    for i in 0..n_queued {
+        let id = (10_000 + i) as u64;
+        let len = rng.range_usize(64, 2048);
+        let req = Request::new(id, Class::Offline, i as f64 * 0.01, len, 32)
+            .with_prompt((0..len as u32).map(|k| k + id as u32 * 131).collect());
+        st.offline_queue.push(req);
+    }
+    st
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    for (n_running, n_queued) in [(8, 16), (64, 256), (256, 1024)] {
+        for policy in [OfflinePolicy::Fcfs, OfflinePolicy::Psm] {
+            let mut st = steady_state(n_running, n_queued, policy);
+            let mut sched = HybridScheduler::new(
+                SchedulerConfig {
+                    latency_budget_ms: Some(40.0),
+                    chunk_tokens: 512,
+                    max_running: n_running, // no admissions: pure steady-state cost
+                    ..Default::default()
+                },
+                LatencyPredictor::default_seed(),
+            );
+            let mut now = 0.0;
+            b.bench(
+                &format!("schedule/steady r={n_running} q={n_queued} [{}]", policy.name()),
+                || {
+                    now += 0.01;
+                    black_box(sched.schedule(&mut st, now).len())
+                },
+            );
+        }
+    }
+
+    // Admission-heavy iteration (queue drains into the batch).
+    let mut sched = HybridScheduler::new(
+        SchedulerConfig {
+            latency_budget_ms: Some(100.0),
+            chunk_tokens: 4096,
+            ..Default::default()
+        },
+        LatencyPredictor::default_seed(),
+    );
+    b.bench("schedule/admission burst 64 offline", || {
+        let mut st = steady_state(0, 64, OfflinePolicy::Psm);
+        black_box(sched.schedule(&mut st, 0.0).len())
+    });
+}

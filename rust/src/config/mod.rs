@@ -1,0 +1,105 @@
+//! Configuration system: JSON config files + CLI overrides for the
+//! launcher. A config file holds everything needed to reproduce a serving
+//! deployment or a simulation run.
+
+use crate::coordinator::queues::OfflinePolicy;
+use crate::util::json::Json;
+
+/// Configuration of a real serving instance (`hygen serve`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: String,
+    pub bind: String,
+    /// Per-iteration latency budget (ms); None = SLO-unaware.
+    pub latency_budget_ms: Option<f64>,
+    pub policy: OfflinePolicy,
+    pub http_workers: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            bind: "127.0.0.1:8077".into(),
+            latency_budget_ms: None,
+            policy: OfflinePolicy::Psm,
+            http_workers: 4,
+            seed: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let policy_name = j.get("policy").as_str().unwrap_or("psm");
+        let utility = j.get("utility_ratio").as_f64().unwrap_or(0.9);
+        let policy = OfflinePolicy::parse(policy_name, utility)
+            .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_name}'"))?;
+        Ok(ServeConfig {
+            artifacts_dir: j
+                .get("artifacts_dir")
+                .as_str()
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            bind: j.get("bind").as_str().unwrap_or(&d.bind).to_string(),
+            latency_budget_ms: j.get("latency_budget_ms").as_f64(),
+            policy,
+            http_workers: j.get("http_workers").as_u64().unwrap_or(4) as usize,
+            seed: j.get("seed").as_u64().unwrap_or(0),
+        })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("artifacts_dir", Json::from(self.artifacts_dir.as_str())),
+            ("bind", Json::from(self.bind.as_str())),
+            ("policy", Json::from(self.policy.name())),
+            ("http_workers", Json::from(self.http_workers)),
+            ("seed", Json::from(self.seed)),
+        ];
+        if let Some(b) = self.latency_budget_ms {
+            pairs.push(("latency_budget_ms", Json::from(b)));
+        }
+        if let OfflinePolicy::PsmFair { utility_ratio } = self.policy {
+            pairs.push(("utility_ratio", Json::from(utility_ratio)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let c = ServeConfig::default();
+        let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.bind, c.bind);
+        assert_eq!(c2.policy, c.policy);
+        assert_eq!(c2.latency_budget_ms, None);
+    }
+
+    #[test]
+    fn parses_fair_policy_with_ratio() {
+        let j = Json::parse(r#"{"policy": "psm-fair", "utility_ratio": 0.7, "latency_budget_ms": 25}"#)
+            .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.policy, OfflinePolicy::PsmFair { utility_ratio: 0.7 });
+        assert_eq!(c.latency_budget_ms, Some(25.0));
+    }
+
+    #[test]
+    fn rejects_unknown_policy() {
+        let j = Json::parse(r#"{"policy": "magic"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Batch composition: what one engine iteration executes, plus the
+//! feature vector the latency predictor consumes (Eq. 1 of the paper).
+
+use super::request::{Class, RequestId};
+
+/// One request's share of an iteration batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchEntry {
+    pub id: RequestId,
+    pub class: Class,
+    /// New tokens processed this iteration: 1 for a decode step, the chunk
+    /// size for a prefill chunk.
+    pub n_tokens: usize,
+    /// Whether this entry is a prefill chunk (else a decode step).
+    pub is_prefill: bool,
+    /// Predictor's marginal-latency estimate for this entry (ms).
+    pub predicted_ms: f64,
+}
+
+/// A scheduled iteration batch.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub entries: Vec<BatchEntry>,
+}
+
+impl Batch {
+    pub fn new() -> Batch {
+        Batch::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn push(&mut self, e: BatchEntry) {
+        self.entries.push(e);
+    }
+
+    /// Total new tokens in the batch (the Sarathi "token budget" measure).
+    pub fn total_tokens(&self) -> usize {
+        self.entries.iter().map(|e| e.n_tokens).sum()
+    }
+
+    pub fn features(&self) -> Features {
+        let mut f = Features::default();
+        for e in &self.entries {
+            if e.is_prefill {
+                f.add_prefill(e.n_tokens);
+            } else {
+                f.add_decode();
+            }
+        }
+        f
+    }
+
+    pub fn num_online(&self) -> usize {
+        self.entries.iter().filter(|e| e.class.is_online()).count()
+    }
+
+    pub fn num_offline(&self) -> usize {
+        self.entries.len() - self.num_online()
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.entries.iter().any(|e| e.id == id)
+    }
+}
+
+/// Batch-composition features from the paper's latency model:
+///
+/// `T_batch = f(S_p, S_d, S_p^2, S_d^2, N_p, N_d)`   (Eq. 1)
+///
+/// where `S_p`/`S_d` are total prefill/decode tokens in the batch and
+/// `N_p`/`N_d` the request counts per phase. The quadratic terms capture
+/// the attention non-linearity of the prefill phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Features {
+    pub sp: f64,
+    pub sd: f64,
+    pub np: f64,
+    pub nd: f64,
+}
+
+/// Number of regression features (bias, sp, sd, sp^2, sd^2, np, nd).
+pub const NUM_FEATURES: usize = 7;
+
+impl Features {
+    pub fn add_prefill(&mut self, tokens: usize) {
+        self.sp += tokens as f64;
+        self.np += 1.0;
+    }
+
+    pub fn add_decode(&mut self) {
+        self.sd += 1.0;
+        self.nd += 1.0;
+    }
+
+    /// Copy with one more prefill chunk of `tokens`.
+    pub fn with_prefill(mut self, tokens: usize) -> Features {
+        self.add_prefill(tokens);
+        self
+    }
+
+    /// Copy with one more decode step.
+    pub fn with_decode(mut self) -> Features {
+        self.add_decode();
+        self
+    }
+
+    /// The regression design vector `[1, S_p, S_d, S_p^2, S_d^2, N_p, N_d]`.
+    pub fn design(&self) -> [f64; NUM_FEATURES] {
+        [1.0, self.sp, self.sd, self.sp * self.sp, self.sd * self.sd, self.np, self.nd]
+    }
+
+    pub fn total_tokens(&self) -> f64 {
+        self.sp + self.sd
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.np == 0.0 && self.nd == 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: RequestId, class: Class, n: usize, prefill: bool) -> BatchEntry {
+        BatchEntry { id, class, n_tokens: n, is_prefill: prefill, predicted_ms: 0.0 }
+    }
+
+    #[test]
+    fn features_accumulate() {
+        let mut b = Batch::new();
+        b.push(entry(1, Class::Online, 128, true));
+        b.push(entry(2, Class::Online, 1, false));
+        b.push(entry(3, Class::Offline, 1, false));
+        b.push(entry(4, Class::Offline, 64, true));
+        let f = b.features();
+        assert_eq!(f.sp, 192.0);
+        assert_eq!(f.sd, 2.0);
+        assert_eq!(f.np, 2.0);
+        assert_eq!(f.nd, 2.0);
+        assert_eq!(b.total_tokens(), 194);
+        assert_eq!(b.num_online(), 2);
+        assert_eq!(b.num_offline(), 2);
+    }
+
+    #[test]
+    fn design_vector_layout() {
+        let f = Features { sp: 3.0, sd: 2.0, np: 1.0, nd: 2.0 };
+        assert_eq!(f.design(), [1.0, 3.0, 2.0, 9.0, 4.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn with_helpers_do_not_mutate_original() {
+        let f = Features::default();
+        let g = f.with_prefill(10).with_decode();
+        assert!(f.is_empty());
+        assert_eq!(g.sp, 10.0);
+        assert_eq!(g.nd, 1.0);
+    }
+
+    #[test]
+    fn batch_contains() {
+        let mut b = Batch::new();
+        b.push(entry(7, Class::Online, 1, false));
+        assert!(b.contains(7));
+        assert!(!b.contains(8));
+    }
+}

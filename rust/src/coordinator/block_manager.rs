@@ -1,0 +1,378 @@
+//! Paged KV-cache block manager (vLLM-style) with hash-chain prefix
+//! caching.
+//!
+//! The scheduler treats memory as the third budget dimension (Alg. 1's
+//! `m`): every scheduled token must have a KV slot. Blocks hold
+//! `block_size` tokens; full *prompt* blocks are content-addressed by a
+//! rolling hash chain so requests sharing a prefix share physical blocks —
+//! this is what makes PSM's "schedule prefix-sharers together" pay off.
+
+use super::request::RequestId;
+use std::collections::HashMap;
+
+pub type BlockId = u32;
+
+#[derive(Debug, Clone)]
+struct Block {
+    refcount: u32,
+    /// Content hash for full, immutable prompt blocks (prefix-cacheable);
+    /// None for partially-filled or decode blocks.
+    hash: Option<u64>,
+}
+
+/// Per-request allocation state.
+#[derive(Debug, Clone, Default)]
+struct SeqAlloc {
+    blocks: Vec<BlockId>,
+    /// Token capacity = blocks.len() * block_size.
+    tokens_used: usize,
+}
+
+#[derive(Debug)]
+pub struct BlockManager {
+    block_size: usize,
+    blocks: Vec<Block>,
+    free: Vec<BlockId>,
+    /// content hash -> cached block (prefix cache).
+    cache: HashMap<u64, BlockId>,
+    seqs: HashMap<RequestId, SeqAlloc>,
+}
+
+/// Hash chain over token-block contents: block i's identity commits to all
+/// preceding tokens, exactly like vLLM's prefix-caching key.
+pub fn chain_hashes(tokens: &[u32], block_size: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / block_size);
+    let mut h: u64 = 0xcbf29ce484222325;
+    for chunk in tokens.chunks(block_size) {
+        if chunk.len() < block_size {
+            break; // only full blocks are content-addressable
+        }
+        for t in chunk {
+            h = (h ^ *t as u64).wrapping_mul(0x100000001b3);
+        }
+        out.push(h);
+    }
+    out
+}
+
+/// Synthetic hash chain for simulated requests: `group` identifies the
+/// shared template (same group + same index ⇒ same block identity).
+pub fn synthetic_chain(group: u64, shared_blocks: usize, unique_tag: u64, total_blocks: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(total_blocks);
+    let mut h = group.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xabcdef;
+    for i in 0..total_blocks {
+        if i == shared_blocks {
+            // diverge: mix in the request-unique tag from here on
+            h ^= unique_tag.wrapping_mul(0xff51afd7ed558ccd) | 1;
+        }
+        h = (h ^ i as u64).wrapping_mul(0x100000001b3);
+        out.push(h);
+    }
+    out
+}
+
+impl BlockManager {
+    pub fn new(num_blocks: usize, block_size: usize) -> BlockManager {
+        assert!(block_size > 0 && num_blocks > 0);
+        BlockManager {
+            block_size,
+            blocks: vec![Block { refcount: 0, hash: None }; num_blocks],
+            free: (0..num_blocks as BlockId).rev().collect(),
+            cache: HashMap::new(),
+            seqs: HashMap::new(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.blocks.len() - self.free.len()
+    }
+
+    /// Token capacity still allocatable (ignoring prefix-cache hits, so a
+    /// conservative lower bound — the scheduler's memory budget `m`).
+    pub fn free_tokens(&self) -> usize {
+        self.free.len() * self.block_size
+    }
+
+    pub fn is_allocated(&self, id: RequestId) -> bool {
+        self.seqs.contains_key(&id)
+    }
+
+    fn blocks_needed(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    fn take_free(&mut self) -> Option<BlockId> {
+        while let Some(b) = self.free.pop() {
+            // A cached block may sit in the free list with refcount 0
+            // (evictable). Claim it, dropping its cache entry.
+            let hash = self.blocks[b as usize].hash.take();
+            if let Some(h) = hash {
+                self.cache.remove(&h);
+            }
+            debug_assert_eq!(self.blocks[b as usize].refcount, 0);
+            return Some(b);
+        }
+        None
+    }
+
+    /// Admit a sequence: allocate blocks for `total_tokens`, reusing
+    /// prefix-cache hits from `hash_chain` (one hash per *full* prompt
+    /// block, in order). Returns the number of tokens satisfied from cache
+    /// (the prefill work saved), or `None` if memory is insufficient —
+    /// in which case nothing is allocated.
+    pub fn allocate(
+        &mut self,
+        id: RequestId,
+        total_tokens: usize,
+        hash_chain: &[u64],
+    ) -> Option<usize> {
+        assert!(!self.seqs.contains_key(&id), "request {id} already allocated");
+        let needed = self.blocks_needed(total_tokens.max(1));
+        // Count cache hits along the chain prefix (must be contiguous).
+        let mut hit_blocks = Vec::new();
+        for h in hash_chain.iter().take(needed) {
+            match self.cache.get(h) {
+                Some(&b) => hit_blocks.push(b),
+                None => break,
+            }
+        }
+        let fresh_needed = needed - hit_blocks.len();
+        // Evictable cache hits (refcount 0) still sit in the free list and
+        // will be resurrected out of it — count them against free capacity
+        // alongside the fresh blocks.
+        let evictable_hits = hit_blocks
+            .iter()
+            .filter(|&&b| self.blocks[b as usize].refcount == 0)
+            .count();
+        if fresh_needed + evictable_hits > self.free.len() {
+            return None;
+        }
+        let mut alloc = SeqAlloc { blocks: Vec::with_capacity(needed), tokens_used: total_tokens };
+        for &b in &hit_blocks {
+            let blk = &mut self.blocks[b as usize];
+            if blk.refcount == 0 {
+                // resurrect from the evictable free list
+                self.free.retain(|&x| x != b);
+            }
+            blk.refcount += 1;
+            alloc.blocks.push(b);
+        }
+        for i in 0..fresh_needed {
+            let b = self.take_free().expect("checked above");
+            let blk = &mut self.blocks[b as usize];
+            blk.refcount = 1;
+            // register full prompt blocks in the prefix cache
+            let chain_idx = hit_blocks.len() + i;
+            blk.hash = hash_chain.get(chain_idx).copied();
+            if let Some(h) = blk.hash {
+                self.cache.insert(h, b);
+            }
+            alloc.blocks.push(b);
+        }
+        let cached_tokens = (hit_blocks.len() * self.block_size).min(total_tokens);
+        self.seqs.insert(id, alloc);
+        Some(cached_tokens)
+    }
+
+    /// Grow a sequence's capacity to hold `new_total_tokens` (decode
+    /// appends). Returns false (and changes nothing) if memory is short.
+    pub fn grow(&mut self, id: RequestId, new_total_tokens: usize) -> bool {
+        let have = match self.seqs.get(&id) {
+            Some(a) => a.blocks.len(),
+            None => return false,
+        };
+        let need = self.blocks_needed(new_total_tokens.max(1));
+        if need <= have {
+            if let Some(a) = self.seqs.get_mut(&id) {
+                a.tokens_used = new_total_tokens;
+            }
+            return true;
+        }
+        let extra = need - have;
+        if extra > self.free.len() {
+            return false;
+        }
+        let mut fresh = Vec::with_capacity(extra);
+        for _ in 0..extra {
+            let b = self.take_free().expect("checked above");
+            self.blocks[b as usize].refcount = 1;
+            self.blocks[b as usize].hash = None; // decode blocks: not cacheable
+            fresh.push(b);
+        }
+        let a = self.seqs.get_mut(&id).unwrap();
+        a.blocks.extend(fresh);
+        a.tokens_used = new_total_tokens;
+        true
+    }
+
+    /// Release a sequence's blocks. Cached (hashed) blocks go to the free
+    /// list but stay in the prefix cache until reclaimed — so a later
+    /// prefix-sharing request can still hit them.
+    pub fn release(&mut self, id: RequestId) {
+        let Some(alloc) = self.seqs.remove(&id) else { return };
+        for b in alloc.blocks {
+            let blk = &mut self.blocks[b as usize];
+            debug_assert!(blk.refcount > 0);
+            blk.refcount -= 1;
+            if blk.refcount == 0 {
+                // Evictable: hashed blocks keep their cache entry until the
+                // block is actually reused by take_free().
+                self.free.push(b);
+            }
+        }
+    }
+
+    /// Tokens currently allocated for `id` (0 if unknown).
+    pub fn tokens_of(&self, id: RequestId) -> usize {
+        self.seqs.get(&id).map(|a| a.tokens_used).unwrap_or(0)
+    }
+
+    /// Number of live (allocated) sequences.
+    pub fn num_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Prefix-cache entries currently addressable.
+    pub fn cache_entries(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let mut bm = BlockManager::new(16, 16);
+        assert_eq!(bm.free_tokens(), 256);
+        let cached = bm.allocate(1, 100, &[]).unwrap();
+        assert_eq!(cached, 0);
+        assert_eq!(bm.used_blocks(), 7); // ceil(100/16)
+        assert_eq!(bm.tokens_of(1), 100);
+        bm.release(1);
+        assert_eq!(bm.used_blocks(), 0);
+        assert_eq!(bm.num_seqs(), 0);
+    }
+
+    #[test]
+    fn allocation_fails_atomically_when_full() {
+        let mut bm = BlockManager::new(4, 16);
+        assert!(bm.allocate(1, 48, &[]).is_some()); // 3 blocks
+        assert!(bm.allocate(2, 32, &[]).is_none()); // needs 2, only 1 free
+        assert_eq!(bm.free_blocks(), 1, "failed alloc must not leak");
+        assert!(!bm.is_allocated(2));
+    }
+
+    #[test]
+    fn grow_for_decode() {
+        let mut bm = BlockManager::new(4, 16);
+        bm.allocate(1, 16, &[]).unwrap();
+        assert!(bm.grow(1, 17)); // crosses into a 2nd block
+        assert_eq!(bm.used_blocks(), 2);
+        assert!(bm.grow(1, 64));
+        assert_eq!(bm.used_blocks(), 4);
+        assert!(!bm.grow(1, 65), "out of blocks");
+        assert_eq!(bm.tokens_of(1), 64);
+    }
+
+    #[test]
+    fn grow_unknown_request_fails() {
+        let mut bm = BlockManager::new(4, 16);
+        assert!(!bm.grow(9, 10));
+    }
+
+    #[test]
+    fn prefix_cache_shares_blocks() {
+        let mut bm = BlockManager::new(16, 16);
+        let tokens_a: Vec<u32> = (0..64).collect(); // 4 full blocks
+        let chain_a = chain_hashes(&tokens_a, 16);
+        assert_eq!(chain_a.len(), 4);
+        bm.allocate(1, 64, &chain_a).unwrap();
+        assert_eq!(bm.used_blocks(), 4);
+
+        // same first 32 tokens, then diverges
+        let mut tokens_b: Vec<u32> = (0..32).collect();
+        tokens_b.extend(100..132u32);
+        let chain_b = chain_hashes(&tokens_b, 16);
+        let cached = bm.allocate(2, 64, &chain_b).unwrap();
+        assert_eq!(cached, 32, "two shared blocks = 32 tokens saved");
+        assert_eq!(bm.used_blocks(), 6, "only 2 fresh blocks for request 2");
+    }
+
+    #[test]
+    fn cache_survives_release_until_eviction() {
+        let mut bm = BlockManager::new(8, 16);
+        let tokens: Vec<u32> = (0..64).collect();
+        let chain = chain_hashes(&tokens, 16);
+        bm.allocate(1, 64, &chain).unwrap();
+        bm.release(1);
+        assert_eq!(bm.free_blocks(), 8, "all blocks evictable");
+        // New request with the same prefix: full cache hit.
+        let cached = bm.allocate(2, 64, &chain).unwrap();
+        assert_eq!(cached, 64);
+        bm.release(2);
+        // Fill memory with unrelated sequences -> cache evicted.
+        bm.allocate(3, 128, &[]).unwrap();
+        bm.release(3);
+        let cached = bm.allocate(4, 64, &chain).unwrap();
+        assert_eq!(cached, 0, "cache entries were reclaimed");
+    }
+
+    #[test]
+    fn refcount_protects_shared_blocks() {
+        let mut bm = BlockManager::new(8, 16);
+        let tokens: Vec<u32> = (0..64).collect();
+        let chain = chain_hashes(&tokens, 16);
+        bm.allocate(1, 64, &chain).unwrap();
+        bm.allocate(2, 64, &chain).unwrap(); // full share
+        assert_eq!(bm.used_blocks(), 4);
+        bm.release(1);
+        assert_eq!(bm.used_blocks(), 4, "request 2 still holds them");
+        bm.release(2);
+        assert_eq!(bm.used_blocks(), 0);
+    }
+
+    #[test]
+    fn chain_hashes_properties() {
+        let a: Vec<u32> = (0..64).collect();
+        let b: Vec<u32> = (0..64).collect();
+        assert_eq!(chain_hashes(&a, 16), chain_hashes(&b, 16));
+        let mut c = a.clone();
+        c[0] = 999; // first token differs -> entire chain differs
+        let ha = chain_hashes(&a, 16);
+        let hc = chain_hashes(&c, 16);
+        assert!(ha.iter().zip(&hc).all(|(x, y)| x != y));
+        // partial last block is not hashed
+        assert_eq!(chain_hashes(&a[..60], 16).len(), 3);
+    }
+
+    #[test]
+    fn synthetic_chain_shares_exactly_prefix() {
+        let x = synthetic_chain(7, 3, 100, 6);
+        let y = synthetic_chain(7, 3, 200, 6);
+        assert_eq!(&x[..3], &y[..3]);
+        assert!(x[3..].iter().zip(&y[3..]).all(|(a, b)| a != b));
+        let z = synthetic_chain(8, 3, 100, 6);
+        assert!(x.iter().zip(&z).all(|(a, b)| a != b), "different groups never share");
+    }
+
+    #[test]
+    fn zero_token_allocation_takes_one_block() {
+        let mut bm = BlockManager::new(4, 16);
+        bm.allocate(1, 0, &[]).unwrap();
+        assert_eq!(bm.used_blocks(), 1);
+    }
+}

@@ -1,0 +1,247 @@
+//! Fairness-extended PSM (§4.3, Alg. 4): starvation avoidance.
+//!
+//! Vanilla PSM can starve requests with little prefix-sharing potential —
+//! a stream of "What is ..." arrivals keeps a lone "How to code" waiting
+//! forever. The extension keeps, next to the prefix tree, a freshness-
+//! ordered self-balancing tree (`BTreeMap` keyed by arrival), and draws
+//! each next request from the prefix tree with probability `u` (the
+//! *utility ratio*) or from the stalest end of the freshness tree with
+//! probability `1-u`. A request scheduled from either structure is removed
+//! from both, keeping them synchronized.
+
+use super::psm::PrefixTree;
+use super::request::RequestId;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Arrival-ordered index; `(arrival_ns, id)` keys make entries unique.
+#[derive(Debug, Default)]
+pub struct FreshnessTree {
+    by_age: BTreeMap<(u64, RequestId), ()>,
+    key_of: BTreeMap<RequestId, (u64, RequestId)>,
+}
+
+impl FreshnessTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, id: RequestId, arrival_s: f64) {
+        let key = ((arrival_s.max(0.0) * 1e9) as u64, id);
+        self.by_age.insert(key, ());
+        self.key_of.insert(id, key);
+    }
+
+    /// The stalest (earliest-arrival) request.
+    pub fn stalest(&self) -> Option<RequestId> {
+        self.by_age.keys().next().map(|&(_, id)| id)
+    }
+
+    pub fn remove(&mut self, id: RequestId) -> bool {
+        match self.key_of.remove(&id) {
+            Some(key) => {
+                self.by_age.remove(&key);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_age.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_age.is_empty()
+    }
+}
+
+/// The combined structure behind the fairness-aware PSM policy.
+#[derive(Debug)]
+pub struct FairPsm {
+    pub trie: PrefixTree,
+    pub fresh: FreshnessTree,
+    /// Probability of drawing from the prefix tree (1.0 = pure PSM,
+    /// 0.0 = pure FCFS-by-age).
+    pub utility_ratio: f64,
+    rng: Rng,
+    /// Cached draw so peek/pop agree (a peek must not re-flip the coin).
+    pending: Option<RequestId>,
+}
+
+impl FairPsm {
+    pub fn new(utility_ratio: f64, seed: u64) -> FairPsm {
+        assert!((0.0..=1.0).contains(&utility_ratio));
+        FairPsm {
+            trie: PrefixTree::new(),
+            fresh: FreshnessTree::new(),
+            utility_ratio,
+            rng: Rng::new(seed),
+            pending: None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.fresh.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fresh.is_empty()
+    }
+
+    pub fn insert(&mut self, id: RequestId, prompt: &[u32], arrival_s: f64) {
+        self.trie.insert(id, prompt);
+        self.fresh.insert(id, arrival_s);
+        // A newly inserted request may precede the cached pick in DFS
+        // order; drop the cache so the next peek re-draws.
+        self.pending = None;
+    }
+
+    /// Next request under the utility-ratio policy, without removing it.
+    pub fn peek_next(&mut self) -> Option<RequestId> {
+        if let Some(id) = self.pending {
+            return Some(id);
+        }
+        if self.is_empty() {
+            return None;
+        }
+        let from_trie = self.rng.chance(self.utility_ratio);
+        let id = if from_trie {
+            self.trie.peek_next().or_else(|| self.fresh.stalest())
+        } else {
+            self.fresh.stalest().or_else(|| self.trie.peek_next())
+        }?;
+        self.pending = Some(id);
+        Some(id)
+    }
+
+    /// Remove a request from both structures (after it was scheduled).
+    pub fn remove(&mut self, id: RequestId) -> bool {
+        if self.pending == Some(id) {
+            self.pending = None;
+        }
+        let a = self.trie.remove(id);
+        let b = self.fresh.remove(id);
+        debug_assert_eq!(a, b, "structures out of sync for {id}");
+        a
+    }
+
+    pub fn pop_next(&mut self) -> Option<RequestId> {
+        let id = self.peek_next()?;
+        self.remove(id);
+        Some(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<u32> {
+        s.bytes().map(|b| b as u32).collect()
+    }
+
+    #[test]
+    fn freshness_orders_by_arrival() {
+        let mut f = FreshnessTree::new();
+        f.insert(1, 5.0);
+        f.insert(2, 1.0);
+        f.insert(3, 3.0);
+        assert_eq!(f.stalest(), Some(2));
+        assert!(f.remove(2));
+        assert_eq!(f.stalest(), Some(3));
+        assert!(!f.remove(2));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn freshness_ties_break_by_id() {
+        let mut f = FreshnessTree::new();
+        f.insert(9, 1.0);
+        f.insert(4, 1.0);
+        assert_eq!(f.stalest(), Some(4));
+    }
+
+    #[test]
+    fn u1_is_pure_psm() {
+        let mut p = FairPsm::new(1.0, 42);
+        p.insert(1, &toks("zzz"), 0.0); // oldest but DFS-last
+        p.insert(2, &toks("aaa"), 1.0);
+        assert_eq!(p.pop_next(), Some(2), "u=1 always follows DFS order");
+        assert_eq!(p.pop_next(), Some(1));
+    }
+
+    #[test]
+    fn u0_is_pure_age_order() {
+        let mut p = FairPsm::new(0.0, 42);
+        p.insert(1, &toks("zzz"), 0.0);
+        p.insert(2, &toks("aaa"), 1.0);
+        assert_eq!(p.pop_next(), Some(1), "u=0 always picks stalest");
+        assert_eq!(p.pop_next(), Some(2));
+    }
+
+    #[test]
+    fn peek_is_stable_until_pop() {
+        let mut p = FairPsm::new(0.5, 7);
+        for i in 0..10u64 {
+            p.insert(i, &toks(&format!("req {i}")), i as f64);
+        }
+        let a = p.peek_next();
+        for _ in 0..20 {
+            assert_eq!(p.peek_next(), a, "peek must not re-flip the coin");
+        }
+        assert_eq!(p.pop_next(), a);
+    }
+
+    #[test]
+    fn starvation_bounded_with_mid_u() {
+        // One loner vs a continuous stream of prefix-sharers: with u=0.5
+        // the loner (always the stalest) must get scheduled long before the
+        // stream drains.
+        let mut p = FairPsm::new(0.5, 123);
+        p.insert(0, &toks("How to code"), 0.0);
+        for i in 1..200u64 {
+            p.insert(i, &toks(&format!("What is topic {i}")), i as f64 * 0.01);
+        }
+        let mut popped_at = None;
+        for step in 0..200 {
+            let id = p.pop_next().unwrap();
+            if id == 0 {
+                popped_at = Some(step);
+                break;
+            }
+        }
+        let at = popped_at.expect("loner must be scheduled");
+        assert!(at < 50, "loner waited {at} slots under u=0.5");
+    }
+
+    #[test]
+    fn pure_psm_starves_the_loner() {
+        // Control for the test above: with u=1.0 the loner goes last
+        // ('H' < 'W' would actually put it first — use a DFS-last prompt).
+        let mut p = FairPsm::new(1.0, 5);
+        p.insert(0, &toks("zzz loner"), 0.0);
+        for i in 1..50u64 {
+            p.insert(i, &toks(&format!("aaa family {i}")), i as f64);
+        }
+        let mut order = Vec::new();
+        while let Some(id) = p.pop_next() {
+            order.push(id);
+        }
+        assert_eq!(*order.last().unwrap(), 0, "pure PSM schedules the loner dead last");
+    }
+
+    #[test]
+    fn remove_keeps_structures_synced() {
+        let mut p = FairPsm::new(0.5, 9);
+        p.insert(1, &toks("a"), 0.0);
+        p.insert(2, &toks("b"), 1.0);
+        assert!(p.remove(1));
+        assert!(!p.remove(1));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.trie.len(), 1);
+        assert_eq!(p.fresh.len(), 1);
+        assert_eq!(p.pop_next(), Some(2));
+        assert!(p.is_empty());
+    }
+}

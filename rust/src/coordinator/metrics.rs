@@ -1,0 +1,253 @@
+//! Serving metrics: TTFT/TBT sample collection per class, throughput
+//! accounting (TPS/QPS), and windowed temporal series (Fig. 8's breakdown,
+//! the `/metrics` endpoint, and every figure harness).
+
+use super::request::{Class, RequestId, Slo, SloMetric};
+use crate::util::json::Json;
+use crate::util::stats::{Summary, WindowSeries};
+use std::collections::HashMap;
+
+/// Aggregated latency/throughput report for one run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub mean_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub mean_tbt_ms: f64,
+    pub p99_tbt_ms: f64,
+    pub online_finished: usize,
+    pub offline_finished: usize,
+    pub online_tps: f64,
+    pub offline_tps: f64,
+    pub total_tps: f64,
+    pub online_qps: f64,
+    pub offline_qps: f64,
+    pub duration_s: f64,
+}
+
+impl Report {
+    /// Value of one of the four statistical SLO metrics (online class).
+    pub fn metric(&self, m: SloMetric) -> f64 {
+        match m {
+            SloMetric::MeanTtft => self.mean_ttft_ms,
+            SloMetric::P99Ttft => self.p99_ttft_ms,
+            SloMetric::MeanTbt => self.mean_tbt_ms,
+            SloMetric::P99Tbt => self.p99_tbt_ms,
+        }
+    }
+
+    pub fn meets(&self, slo: &Slo) -> bool {
+        self.metric(slo.metric) <= slo.limit_ms
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mean_ttft_ms", self.mean_ttft_ms.into()),
+            ("p99_ttft_ms", self.p99_ttft_ms.into()),
+            ("mean_tbt_ms", self.mean_tbt_ms.into()),
+            ("p99_tbt_ms", self.p99_tbt_ms.into()),
+            ("online_finished", self.online_finished.into()),
+            ("offline_finished", self.offline_finished.into()),
+            ("online_tps", self.online_tps.into()),
+            ("offline_tps", self.offline_tps.into()),
+            ("total_tps", self.total_tps.into()),
+            ("online_qps", self.online_qps.into()),
+            ("offline_qps", self.offline_qps.into()),
+            ("duration_s", self.duration_s.into()),
+        ])
+    }
+}
+
+/// Streaming collector the engine feeds as tokens are produced.
+///
+/// TTFT and TBT are **online-class** metrics (the SLO-bound side);
+/// throughput is tracked per class. Times are in seconds.
+#[derive(Debug)]
+pub struct Metrics {
+    ttft: Summary,
+    tbt: Summary,
+    // request bookkeeping
+    arrival: HashMap<RequestId, (Class, f64)>,
+    last_token: HashMap<RequestId, f64>,
+    first_token_seen: HashMap<RequestId, bool>,
+    online_tokens: u64,
+    offline_tokens: u64,
+    online_finished: usize,
+    offline_finished: usize,
+    /// Temporal series (window = 1s by default) for Fig. 8-style plots.
+    pub online_tps_series: WindowSeries,
+    pub offline_tps_series: WindowSeries,
+    pub online_qps_series: WindowSeries,
+    end_time: f64,
+}
+
+impl Metrics {
+    pub fn new(window_s: f64) -> Metrics {
+        Metrics {
+            ttft: Summary::new(),
+            tbt: Summary::new(),
+            arrival: HashMap::new(),
+            last_token: HashMap::new(),
+            first_token_seen: HashMap::new(),
+            online_tokens: 0,
+            offline_tokens: 0,
+            online_finished: 0,
+            offline_finished: 0,
+            online_tps_series: WindowSeries::new(window_s),
+            offline_tps_series: WindowSeries::new(window_s),
+            online_qps_series: WindowSeries::new(window_s),
+            end_time: 0.0,
+        }
+    }
+
+    /// Request entered the system (its queue) at time `t`.
+    pub fn on_arrival(&mut self, id: RequestId, class: Class, t: f64) {
+        self.arrival.insert(id, (class, t));
+        if class.is_online() {
+            self.online_qps_series.record(t, 1.0);
+        }
+        self.end_time = self.end_time.max(t);
+    }
+
+    /// `n` output tokens became visible at time `t` (a decode step yields
+    /// 1; the final prefill chunk yields the first token).
+    pub fn on_tokens(&mut self, id: RequestId, t: f64, n: usize) {
+        let Some(&(class, arrived)) = self.arrival.get(&id) else { return };
+        self.end_time = self.end_time.max(t);
+        let first_seen = self.first_token_seen.get(&id).copied().unwrap_or(false);
+        if !first_seen {
+            if class.is_online() {
+                self.ttft.add((t - arrived) * 1e3);
+            }
+            self.first_token_seen.insert(id, true);
+        } else if class.is_online() {
+            if let Some(&last) = self.last_token.get(&id) {
+                self.tbt.add((t - last) * 1e3);
+            }
+        }
+        self.last_token.insert(id, t);
+        match class {
+            Class::Online => {
+                self.online_tokens += n as u64;
+                self.online_tps_series.record(t, n as f64);
+            }
+            Class::Offline => {
+                self.offline_tokens += n as u64;
+                self.offline_tps_series.record(t, n as f64);
+            }
+        }
+    }
+
+    pub fn on_finish(&mut self, id: RequestId, t: f64) {
+        self.end_time = self.end_time.max(t);
+        if let Some((class, _)) = self.arrival.get(&id) {
+            match class {
+                Class::Online => self.online_finished += 1,
+                Class::Offline => self.offline_finished += 1,
+            }
+        }
+        self.last_token.remove(&id);
+        self.first_token_seen.remove(&id);
+    }
+
+    pub fn online_token_count(&self) -> u64 {
+        self.online_tokens
+    }
+
+    pub fn offline_token_count(&self) -> u64 {
+        self.offline_tokens
+    }
+
+    /// Build the aggregate report over `[0, duration_s]` (defaults to the
+    /// last observed event time).
+    pub fn report(&mut self, duration_s: Option<f64>) -> Report {
+        let d = duration_s.unwrap_or(self.end_time).max(1e-9);
+        Report {
+            mean_ttft_ms: self.ttft.mean(),
+            p99_ttft_ms: self.ttft.p99(),
+            mean_tbt_ms: self.tbt.mean(),
+            p99_tbt_ms: self.tbt.p99(),
+            online_finished: self.online_finished,
+            offline_finished: self.offline_finished,
+            online_tps: self.online_tokens as f64 / d,
+            offline_tps: self.offline_tokens as f64 / d,
+            total_tps: (self.online_tokens + self.offline_tokens) as f64 / d,
+            online_qps: self.online_finished as f64 / d,
+            offline_qps: self.offline_finished as f64 / d,
+            duration_s: d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_and_tbt_online_only() {
+        let mut m = Metrics::new(1.0);
+        m.on_arrival(1, Class::Online, 0.0);
+        m.on_arrival(2, Class::Offline, 0.0);
+        m.on_tokens(1, 0.050, 1); // TTFT 50ms
+        m.on_tokens(1, 0.080, 1); // TBT 30ms
+        m.on_tokens(1, 0.120, 1); // TBT 40ms
+        m.on_tokens(2, 1.0, 1); // offline: no TTFT/TBT samples
+        m.on_tokens(2, 2.0, 1);
+        m.on_finish(1, 0.120);
+        let r = m.report(Some(2.0));
+        assert!((r.mean_ttft_ms - 50.0).abs() < 1e-9);
+        assert!((r.mean_tbt_ms - 35.0).abs() < 1e-9);
+        assert_eq!(r.online_finished, 1);
+        assert_eq!(r.offline_finished, 0);
+        assert!((r.online_tps - 1.5).abs() < 1e-9);
+        assert!((r.offline_tps - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefill_chunk_tokens_counted_in_tps() {
+        let mut m = Metrics::new(1.0);
+        m.on_arrival(1, Class::Offline, 0.0);
+        m.on_tokens(1, 0.5, 4); // e.g. speculative/multi-token event
+        let r = m.report(Some(1.0));
+        assert!((r.offline_tps - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_metric_and_slo() {
+        let mut m = Metrics::new(1.0);
+        m.on_arrival(1, Class::Online, 0.0);
+        m.on_tokens(1, 0.040, 1);
+        let r = m.report(Some(1.0));
+        assert_eq!(r.metric(SloMetric::MeanTtft), r.mean_ttft_ms);
+        assert!(r.meets(&Slo::new(SloMetric::MeanTtft, 41.0)));
+        assert!(!r.meets(&Slo::new(SloMetric::MeanTtft, 39.0)));
+    }
+
+    #[test]
+    fn unknown_request_token_ignored() {
+        let mut m = Metrics::new(1.0);
+        m.on_tokens(99, 1.0, 1); // no arrival recorded
+        let r = m.report(Some(1.0));
+        assert_eq!(r.total_tps, 0.0);
+    }
+
+    #[test]
+    fn qps_series_counts_arrivals() {
+        let mut m = Metrics::new(10.0);
+        for i in 0..30 {
+            m.on_arrival(i, Class::Online, i as f64);
+        }
+        let rates = m.online_qps_series.rates();
+        assert_eq!(rates.len(), 3);
+        assert!((rates[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_report_has_fields() {
+        let mut m = Metrics::new(1.0);
+        m.on_arrival(1, Class::Online, 0.0);
+        m.on_tokens(1, 0.1, 1);
+        let j = m.report(Some(1.0)).to_json();
+        assert!(j.get("mean_ttft_ms").as_f64().is_some());
+        assert!(j.get("total_tps").as_f64().is_some());
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer-3 coordination: the paper's system contribution.
+//!
+//! * [`request`] / [`batch`] — the request/batch domain model and the
+//!   predictor feature vector (Eq. 1).
+//! * [`predictor`] — the linear-regression latency predictor (§4.2).
+//! * [`profiler`] — the SLO-aware latency-budget profiler (§4.2).
+//! * [`scheduler`] — the two-phase SLO-aware scheduler (§4.1, Alg. 1–2)
+//!   with priority preemption.
+//! * [`psm`] / [`fairness`] / [`queues`] — offline scheduling policies:
+//!   FCFS, Prefix-Sharing Maximization (Alg. 3), fairness-extended PSM
+//!   (Alg. 4) behind the dual-queue architecture.
+//! * [`block_manager`] — paged KV accounting with prefix caching.
+//! * [`state`] — the engine state the scheduler mutates.
+//! * [`metrics`] — TTFT/TBT/TPS accounting the SLO checks run on.
+
+pub mod batch;
+pub mod block_manager;
+pub mod fairness;
+pub mod metrics;
+pub mod predictor;
+pub mod profiler;
+pub mod psm;
+pub mod queues;
+pub mod request;
+pub mod scheduler;
+pub mod state;

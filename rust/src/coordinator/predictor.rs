@@ -1,0 +1,373 @@
+//! The HyGen latency predictor (§4.2, Appendix B).
+//!
+//! A linear-regression model over batch-composition features
+//! `[1, S_p, S_d, S_p², S_d², N_p, N_d]` predicting batch execution time in
+//! milliseconds. Fit by normal equations with a tiny ridge term (7×7
+//! Gaussian elimination — the paper reports ~15 ms training for 80k samples
+//! and ~18 µs per prediction; ours is comfortably under both, see
+//! `rust/benches/predictor.rs`).
+//!
+//! Besides `predict`, the scheduler needs two derived queries (Alg. 1):
+//! * [`LatencyPredictor::decode_cost`] — marginal latency of adding one
+//!   decode request to a partial batch, and
+//! * [`LatencyPredictor::max_prefill_tokens`] — the largest prefill chunk
+//!   that fits the remaining latency/chunk/memory budget (the paper's
+//!   `PREDICTOR.get_max_tokens`).
+
+use super::batch::{Features, NUM_FEATURES};
+use crate::util::json::Json;
+use crate::util::stats::mape;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyPredictor {
+    pub coef: [f64; NUM_FEATURES],
+}
+
+/// One training sample: observed execution time of a batch composition.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub features: Features,
+    pub latency_ms: f64,
+}
+
+impl LatencyPredictor {
+    /// A conservative placeholder used before profiling data exists; the
+    /// coefficients are roughly an A100-class decode/prefill cost so early
+    /// scheduling decisions are sane rather than degenerate.
+    pub fn default_seed() -> LatencyPredictor {
+        LatencyPredictor {
+            //      bias    sp       sd      sp^2    sd^2    np     nd
+            coef: [4.0, 0.035, 0.02, 1.2e-5, 0.0, 0.4, 0.05],
+        }
+    }
+
+    /// Least-squares fit via normal equations `(XᵀX + λI) w = Xᵀy`.
+    ///
+    /// λ is a tiny ridge (1e-6, scaled by the diagonal) that keeps the
+    /// system well-posed when a feature is constant across samples (e.g.
+    /// profiling runs with no decode requests).
+    pub fn fit(samples: &[Sample]) -> LatencyPredictor {
+        assert!(!samples.is_empty(), "cannot fit on zero samples");
+        let n = NUM_FEATURES;
+        let mut xtx = [[0.0f64; NUM_FEATURES]; NUM_FEATURES];
+        let mut xty = [0.0f64; NUM_FEATURES];
+        for s in samples {
+            let x = s.features.design();
+            for i in 0..n {
+                xty[i] += x[i] * s.latency_ms;
+                for j in 0..n {
+                    xtx[i][j] += x[i] * x[j];
+                }
+            }
+        }
+        for (i, row) in xtx.iter_mut().enumerate() {
+            row[i] += 1e-6 * (row[i].abs() + 1.0);
+        }
+        let coef = solve_7x7(xtx, xty);
+        LatencyPredictor { coef }
+    }
+
+    /// Predicted execution time (ms) of a batch with the given features.
+    /// Clamped at 0 — a regression extrapolation must never go negative.
+    #[inline]
+    pub fn predict(&self, f: &Features) -> f64 {
+        let x = f.design();
+        let mut y = 0.0;
+        for i in 0..NUM_FEATURES {
+            y += self.coef[i] * x[i];
+        }
+        y.max(0.0)
+    }
+
+    /// Marginal cost (ms) of adding one decode request to `batch`.
+    /// This is the `t_req` of Alg. 1 line 7.
+    #[inline]
+    pub fn decode_cost(&self, batch: &Features) -> f64 {
+        (self.predict(&batch.with_decode()) - self.predict(batch)).max(0.0)
+    }
+
+    /// The paper's `get_max_tokens`: largest prefill chunk `l` such that
+    /// adding `(l tokens, 1 prefill request)` to `batch` keeps the marginal
+    /// latency within `budget_ms`, `l <= chunk_remaining` (token budget)
+    /// and `l <= mem_tokens` (KV blocks) and `l <= want` (prompt left).
+    ///
+    /// Returns `(l, t_req)`; `l == 0` means "does not fit".
+    ///
+    /// The marginal cost in `l` is quadratic:
+    /// `cost(l) = c_sp·l + c_sp2·((S_p+l)² − S_p²) + c_np`,
+    /// monotone for the physically meaningful coefficient signs; we solve
+    /// in closed form and verify by evaluation so pathological fitted
+    /// coefficients degrade gracefully instead of violating the budget.
+    pub fn max_prefill_tokens(
+        &self,
+        batch: &Features,
+        budget_ms: f64,
+        chunk_remaining: usize,
+        mem_tokens: usize,
+        want: usize,
+    ) -> (usize, f64) {
+        let cap = chunk_remaining.min(mem_tokens).min(want);
+        if cap == 0 || budget_ms <= 0.0 {
+            return (0, 0.0);
+        }
+        let cost = |l: usize| -> f64 {
+            (self.predict(&batch.with_prefill(l)) - self.predict(batch)).max(0.0)
+        };
+        // Fast path: everything fits.
+        let full = cost(cap);
+        if full <= budget_ms {
+            return (cap, full);
+        }
+        // Closed-form candidate from the quadratic, then verify/adjust.
+        let c_sp = self.coef[1];
+        let c_sp2 = self.coef[3];
+        let c_np = self.coef[5];
+        let rem = budget_ms - c_np;
+        let mut l = if rem <= 0.0 {
+            0
+        } else if c_sp2.abs() > 1e-18 {
+            // c_sp2·l² + (c_sp + 2·c_sp2·S_p)·l − rem = 0
+            let a = c_sp2;
+            let b = c_sp + 2.0 * c_sp2 * batch.sp;
+            let disc = b * b + 4.0 * a * rem;
+            if disc < 0.0 || a <= 0.0 {
+                cap
+            } else {
+                (((-b + disc.sqrt()) / (2.0 * a)).floor().max(0.0) as usize).min(cap)
+            }
+        } else if c_sp > 1e-18 {
+            ((rem / c_sp).floor().max(0.0) as usize).min(cap)
+        } else {
+            cap
+        };
+        // Verification loop: closed form can be off by one (floor) or the
+        // coefficients non-physical; walk down until the budget holds.
+        while l > 0 && cost(l) > budget_ms {
+            l -= 1;
+        }
+        if l == 0 {
+            (0, 0.0)
+        } else {
+            (l, cost(l))
+        }
+    }
+
+    /// Mean absolute percentage error on a held-out set (Fig. 5 metric).
+    pub fn evaluate_mape(&self, samples: &[Sample]) -> f64 {
+        let pred: Vec<f64> = samples.iter().map(|s| self.predict(&s.features)).collect();
+        let act: Vec<f64> = samples.iter().map(|s| s.latency_ms).collect();
+        mape(&pred, &act)
+    }
+
+    /// Return a copy with coefficients perturbed by `rel` relative noise —
+    /// the degraded predictors of the Fig. 16 robustness ablation.
+    pub fn degraded(&self, rel: f64, rng: &mut crate::util::rng::Rng) -> LatencyPredictor {
+        let mut coef = self.coef;
+        for c in coef.iter_mut() {
+            *c *= 1.0 + rel * rng.normal();
+        }
+        LatencyPredictor { coef }
+    }
+
+    // ---- persistence (predictor checkpoints survive across runs) ----
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "coef",
+            Json::Arr(self.coef.iter().map(|c| Json::Num(*c)).collect()),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Option<LatencyPredictor> {
+        let arr = j.get("coef").as_arr()?;
+        if arr.len() != NUM_FEATURES {
+            return None;
+        }
+        let mut coef = [0.0; NUM_FEATURES];
+        for (i, v) in arr.iter().enumerate() {
+            coef[i] = v.as_f64()?;
+        }
+        Some(LatencyPredictor { coef })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<LatencyPredictor> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j).ok_or_else(|| anyhow::anyhow!("bad predictor checkpoint"))
+    }
+}
+
+/// Solve `A x = b` for a 7×7 system by Gaussian elimination with partial
+/// pivoting. A is symmetric positive definite here (XᵀX + ridge), so this
+/// is numerically comfortable.
+fn solve_7x7(mut a: [[f64; NUM_FEATURES]; NUM_FEATURES], mut b: [f64; NUM_FEATURES]) -> [f64; NUM_FEATURES] {
+    let n = NUM_FEATURES;
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for row in col + 1..n {
+            if a[row][col].abs() > a[piv][col].abs() {
+                piv = row;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let diag = a[col][col];
+        if diag.abs() < 1e-30 {
+            continue; // degenerate direction: leave coefficient at 0
+        }
+        for row in col + 1..n {
+            let factor = a[row][col] / diag;
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= factor * a[col][k];
+            }
+            b[row] -= factor * b[col];
+        }
+    }
+    let mut x = [0.0; NUM_FEATURES];
+    for col in (0..n).rev() {
+        let mut sum = b[col];
+        for k in col + 1..n {
+            sum -= a[col][k] * x[k];
+        }
+        x[col] = if a[col][col].abs() < 1e-30 { 0.0 } else { sum / a[col][col] };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Ground-truth synthetic model for fit tests.
+    fn synth(f: &Features) -> f64 {
+        3.0 + 0.04 * f.sp + 0.015 * f.sd + 2.0e-5 * f.sp * f.sp + 0.3 * f.np + 0.08 * f.nd
+    }
+
+    fn synth_samples(n: usize, seed: u64, noise: f64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut f = Features::default();
+                let np = rng.range(0, 4);
+                for _ in 0..np {
+                    f.add_prefill(rng.range_usize(16, 1024));
+                }
+                for _ in 0..rng.range(0, 64) {
+                    f.add_decode();
+                }
+                let y = synth(&f) * (1.0 + noise * rng.normal());
+                Sample { features: f, latency_ms: y.max(0.1) }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fit_recovers_synthetic_model() {
+        let train = synth_samples(4000, 1, 0.0);
+        let p = LatencyPredictor::fit(&train);
+        let test = synth_samples(500, 2, 0.0);
+        let err = p.evaluate_mape(&test);
+        assert!(err < 0.5, "noise-free MAPE should be ~0, got {err}%");
+    }
+
+    #[test]
+    fn fit_with_noise_stays_accurate() {
+        let train = synth_samples(8000, 3, 0.02);
+        let p = LatencyPredictor::fit(&train);
+        let test = synth_samples(1000, 4, 0.0);
+        let err = p.evaluate_mape(&test);
+        assert!(err < 3.0, "2% noise -> low single-digit MAPE, got {err}%");
+    }
+
+    #[test]
+    fn predict_never_negative() {
+        let p = LatencyPredictor { coef: [-100.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0] };
+        assert_eq!(p.predict(&Features::default()), 0.0);
+    }
+
+    #[test]
+    fn decode_cost_is_marginal() {
+        let p = LatencyPredictor::default_seed();
+        let f = Features::default().with_prefill(256);
+        let cost = p.decode_cost(&f);
+        let direct = p.predict(&f.with_decode()) - p.predict(&f);
+        assert!((cost - direct).abs() < 1e-12);
+        assert!(cost > 0.0);
+    }
+
+    #[test]
+    fn max_prefill_respects_budget_exactly() {
+        let train = synth_samples(4000, 5, 0.0);
+        let p = LatencyPredictor::fit(&train);
+        let batch = Features::default().with_decode().with_decode();
+        for budget in [0.5, 2.0, 10.0, 50.0] {
+            let (l, t) = p.max_prefill_tokens(&batch, budget, 2048, 100_000, 100_000);
+            assert!(t <= budget + 1e-9, "t={t} > budget={budget}");
+            if l < 2048 {
+                // maximality: one more token must exceed the budget
+                let over = p.predict(&batch.with_prefill(l + 1)) - p.predict(&batch);
+                assert!(over > budget, "l={l} not maximal for budget={budget}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_prefill_respects_caps() {
+        let p = LatencyPredictor::default_seed();
+        let batch = Features::default();
+        let (l, _) = p.max_prefill_tokens(&batch, 1e9, 64, 100_000, 100_000);
+        assert_eq!(l, 64, "chunk budget caps l");
+        let (l, _) = p.max_prefill_tokens(&batch, 1e9, 2048, 10, 100_000);
+        assert_eq!(l, 10, "memory caps l");
+        let (l, _) = p.max_prefill_tokens(&batch, 1e9, 2048, 100_000, 7);
+        assert_eq!(l, 7, "prompt remaining caps l");
+        let (l, t) = p.max_prefill_tokens(&batch, 0.0, 2048, 100_000, 100_000);
+        assert_eq!((l, t), (0, 0.0), "zero budget fits nothing");
+    }
+
+    #[test]
+    fn zero_fit_cost_zero_budget_edge() {
+        let p = LatencyPredictor::default_seed();
+        // budget smaller than the per-request constant c_np: nothing fits
+        let (l, _) = p.max_prefill_tokens(&Features::default(), 0.3, 512, 1000, 1000);
+        assert_eq!(l, 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = LatencyPredictor::default_seed();
+        let q = LatencyPredictor::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+        assert!(LatencyPredictor::from_json(&Json::Null).is_none());
+    }
+
+    #[test]
+    fn degraded_increases_error() {
+        let train = synth_samples(4000, 6, 0.0);
+        let p = LatencyPredictor::fit(&train);
+        let test = synth_samples(500, 7, 0.0);
+        let base = p.evaluate_mape(&test);
+        let mut rng = Rng::new(8);
+        let bad = p.degraded(0.2, &mut rng);
+        assert!(bad.evaluate_mape(&test) > base + 1.0);
+    }
+
+    #[test]
+    fn training_is_fast_enough() {
+        // Paper: ~15 ms for 80k samples on CPU. Sanity-check the same order.
+        let train = synth_samples(80_000, 9, 0.01);
+        let t0 = std::time::Instant::now();
+        let _p = LatencyPredictor::fit(&train);
+        let dt = t0.elapsed();
+        assert!(dt.as_millis() < 500, "training took {dt:?}");
+    }
+}

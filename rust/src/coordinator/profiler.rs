@@ -1,0 +1,209 @@
+//! SLO-aware profiler (§4.2): turns a *statistical* SLO (mean/P99
+//! TTFT/TBT limit) into the per-iteration latency budget the scheduler
+//! enforces.
+//!
+//! A naive budget (= the SLO limit itself) is wrong in both directions:
+//! a mean-TBT SLO tolerates individual batches far above the limit, while
+//! a P99 SLO with queueing effects can require budgets *below* it. The
+//! profiler closes the gap empirically: it test-runs candidate budgets
+//! against the (sampled) workload and binary-searches the largest budget
+//! whose end-to-end report still meets the SLO — larger budget ⇒ more
+//! offline co-location ⇒ more interference, so compliance is monotone in
+//! the budget and binary search applies.
+//!
+//! The profiler is engine-agnostic: it takes an evaluation closure, so the
+//! same code profiles against the simulator (fast, used by the figure
+//! harnesses) or the real PJRT engine.
+
+use super::metrics::Report;
+use super::request::Slo;
+
+#[derive(Debug, Clone)]
+pub struct ProfilerConfig {
+    /// Budget search range (ms).
+    pub min_budget_ms: f64,
+    pub max_budget_ms: f64,
+    /// Binary-search refinement steps (each = one test run).
+    pub steps: usize,
+    /// Relative tolerance when comparing against the SLO limit.
+    pub slack: f64,
+}
+
+impl Default for ProfilerConfig {
+    fn default() -> Self {
+        ProfilerConfig { min_budget_ms: 1.0, max_budget_ms: 500.0, steps: 8, slack: 0.0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProfileResult {
+    /// The chosen per-iteration latency budget (ms).
+    pub budget_ms: f64,
+    /// The SLO metric achieved at that budget.
+    pub achieved_ms: f64,
+    /// Offline throughput at that budget (the profit of co-location).
+    pub offline_tps: f64,
+    /// Every (budget, metric, offline_tps) test run, for inspection.
+    pub trials: Vec<(f64, f64, f64)>,
+}
+
+/// Binary-search the largest compliant latency budget.
+///
+/// `eval(budget_ms)` must run the hybrid workload with that budget and
+/// return the resulting [`Report`].
+pub fn profile_latency_budget<F: FnMut(f64) -> Report>(
+    slo: &Slo,
+    cfg: &ProfilerConfig,
+    mut eval: F,
+) -> ProfileResult {
+    let limit = slo.limit_ms * (1.0 + cfg.slack);
+    let mut trials = Vec::new();
+    let mut run = |b: f64, trials: &mut Vec<(f64, f64, f64)>| -> (f64, f64) {
+        let report = eval(b);
+        // A budget too small to serve the online workload at all is a
+        // violation, not vacuous compliance.
+        let m = if report.online_finished == 0 {
+            f64::INFINITY
+        } else {
+            report.metric(slo.metric)
+        };
+        trials.push((b, m, report.offline_tps));
+        (m, report.offline_tps)
+    };
+
+    // Establish the bracket. The compliance region is an *interval*:
+    // budgets too small to serve the online workload violate TTFT via
+    // queueing, budgets too large violate via offline interference. Find
+    // a compliant anchor first (geometric scan from the minimum), then
+    // binary-search the interval's upper edge.
+    let (mut lo_m, mut lo_tps) = run(cfg.min_budget_ms, &mut trials);
+    let mut lo_budget = cfg.min_budget_ms;
+    if lo_m > limit {
+        let mut found = false;
+        let mut b = cfg.min_budget_ms * 2.0;
+        while b < cfg.max_budget_ms {
+            let (m, tps) = run(b, &mut trials);
+            if m <= limit {
+                lo_budget = b;
+                lo_m = m;
+                lo_tps = tps;
+                found = true;
+                break;
+            }
+            b *= 2.0;
+        }
+        if !found {
+            // Infeasible at every probed budget: report the least-bad probe.
+            let best = trials
+                .iter()
+                .cloned()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            return ProfileResult {
+                budget_ms: best.0,
+                achieved_ms: best.1,
+                offline_tps: best.2,
+                trials,
+            };
+        }
+    }
+    let (hi_m, hi_tps) = run(cfg.max_budget_ms, &mut trials);
+    if hi_m <= limit {
+        // Even the max budget complies (light workload): use it.
+        return ProfileResult {
+            budget_ms: cfg.max_budget_ms,
+            achieved_ms: hi_m,
+            offline_tps: hi_tps,
+            trials,
+        };
+    }
+
+    let mut lo = lo_budget; // compliant
+    let mut hi = cfg.max_budget_ms; // violating
+    let mut best = (lo_budget, lo_m, lo_tps);
+    for _ in 0..cfg.steps {
+        let mid = 0.5 * (lo + hi);
+        let (m, tps) = run(mid, &mut trials);
+        if m <= limit {
+            best = (mid, m, tps);
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    ProfileResult { budget_ms: best.0, achieved_ms: best.1, offline_tps: best.2, trials }
+}
+
+/// The Fig. 7 strawman: use the SLO limit itself as the batch budget.
+pub fn naive_budget(slo: &Slo) -> f64 {
+    slo.limit_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SloMetric;
+
+    /// Synthetic monotone response: metric grows with budget; offline
+    /// throughput too.
+    fn fake_eval(budget: f64) -> Report {
+        Report {
+            mean_ttft_ms: 0.0,
+            p99_ttft_ms: 0.0,
+            mean_tbt_ms: 10.0 + 0.5 * budget,
+            p99_tbt_ms: 0.0,
+            online_finished: 1,
+            offline_finished: 1,
+            online_tps: 0.0,
+            offline_tps: budget * 10.0,
+            total_tps: 0.0,
+            online_qps: 0.0,
+            offline_qps: 0.0,
+            duration_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn finds_largest_compliant_budget() {
+        // mean_tbt = 10 + 0.5 b <= 40  =>  b <= 60
+        let slo = Slo::new(SloMetric::MeanTbt, 40.0);
+        let cfg = ProfilerConfig { min_budget_ms: 1.0, max_budget_ms: 200.0, steps: 12, slack: 0.0 };
+        let r = profile_latency_budget(&slo, &cfg, fake_eval);
+        assert!((r.budget_ms - 60.0).abs() < 1.0, "budget {}", r.budget_ms);
+        assert!(r.achieved_ms <= 40.0);
+        assert!(r.trials.len() >= 10);
+    }
+
+    #[test]
+    fn infeasible_slo_returns_min_budget() {
+        let slo = Slo::new(SloMetric::MeanTbt, 5.0); // below the 10ms floor
+        let r = profile_latency_budget(&slo, &ProfilerConfig::default(), fake_eval);
+        assert_eq!(r.budget_ms, ProfilerConfig::default().min_budget_ms);
+        assert!(r.achieved_ms > 5.0, "reports the violation honestly");
+    }
+
+    #[test]
+    fn light_workload_returns_max_budget() {
+        let slo = Slo::new(SloMetric::MeanTbt, 1e6);
+        let cfg = ProfilerConfig::default();
+        let r = profile_latency_budget(&slo, &cfg, fake_eval);
+        assert_eq!(r.budget_ms, cfg.max_budget_ms);
+        assert_eq!(r.trials.len(), 2, "bracket probes only");
+    }
+
+    #[test]
+    fn budget_increases_with_looser_slo() {
+        let cfg = ProfilerConfig { steps: 10, ..Default::default() };
+        let tight =
+            profile_latency_budget(&Slo::new(SloMetric::MeanTbt, 20.0), &cfg, fake_eval);
+        let loose =
+            profile_latency_budget(&Slo::new(SloMetric::MeanTbt, 60.0), &cfg, fake_eval);
+        assert!(loose.budget_ms > tight.budget_ms);
+        assert!(loose.offline_tps > tight.offline_tps, "looser SLO buys throughput");
+    }
+
+    #[test]
+    fn naive_budget_is_the_limit() {
+        assert_eq!(naive_budget(&Slo::new(SloMetric::P99Tbt, 33.0)), 33.0);
+    }
+}

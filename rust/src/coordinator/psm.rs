@@ -1,0 +1,382 @@
+//! Prefix-Sharing Maximization (§4.3, Alg. 3): a compressed prefix trie
+//! over prompt tokens; offline requests are consumed in the trie's DFS
+//! order so consecutive scheduled requests share the longest possible
+//! prefixes (KV-cache reuse through the block manager's prefix cache).
+//!
+//! Insert/remove are O(L). `next_request` is O(1) amortized against a
+//! cached DFS order that is rebuilt lazily — mirroring the paper's
+//! "pre-processed list derived from the prefix tree, synced up
+//! asynchronously" (Appendix A.4).
+
+use super::request::RequestId;
+use std::collections::BTreeMap;
+
+type NodeId = u32;
+
+#[derive(Debug, Default)]
+struct Node {
+    /// Outgoing edges keyed by first token — BTreeMap gives a
+    /// deterministic DFS order.
+    edges: BTreeMap<u32, Edge>,
+    /// Requests whose prompt terminates exactly at this node.
+    requests: Vec<RequestId>,
+    parent: Option<(NodeId, u32)>, // (parent node, first token of edge in)
+}
+
+#[derive(Debug)]
+struct Edge {
+    label: Vec<u32>,
+    child: NodeId,
+}
+
+/// Compressed (radix) prefix trie with DFS-order consumption.
+#[derive(Debug)]
+pub struct PrefixTree {
+    nodes: Vec<Node>,
+    free: Vec<NodeId>,
+    len: usize,
+    /// Cached DFS order; `dirty` forces a rebuild on next access.
+    dfs_cache: Vec<RequestId>,
+    dfs_pos: usize,
+    dirty: bool,
+    /// id -> node holding it (for O(L)-free removal bookkeeping).
+    locations: BTreeMap<RequestId, NodeId>,
+}
+
+impl Default for PrefixTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PrefixTree {
+    pub fn new() -> PrefixTree {
+        PrefixTree {
+            nodes: vec![Node::default()],
+            free: Vec::new(),
+            len: 0,
+            dfs_cache: Vec::new(),
+            dfs_pos: 0,
+            dirty: false,
+            locations: BTreeMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn alloc_node(&mut self, parent: Option<(NodeId, u32)>) -> NodeId {
+        if let Some(id) = self.free.pop() {
+            self.nodes[id as usize] = Node { parent, ..Default::default() };
+            id
+        } else {
+            self.nodes.push(Node { parent, ..Default::default() });
+            (self.nodes.len() - 1) as NodeId
+        }
+    }
+
+    /// Insert a request keyed by its prompt tokens. O(|prompt|).
+    pub fn insert(&mut self, id: RequestId, prompt: &[u32]) {
+        assert!(!self.locations.contains_key(&id), "duplicate insert of request {id}");
+        let mut node = 0 as NodeId;
+        let mut rest = prompt;
+        loop {
+            if rest.is_empty() {
+                break;
+            }
+            let first = rest[0];
+            let Some(edge) = self.nodes[node as usize].edges.get(&first) else {
+                // no edge: attach the whole remainder as one edge
+                let child = self.alloc_node(Some((node, first)));
+                self.nodes[node as usize]
+                    .edges
+                    .insert(first, Edge { label: rest.to_vec(), child });
+                node = child;
+                rest = &[];
+                break;
+            };
+            let label = edge.label.clone();
+            let child = edge.child;
+            let common = lcp(&label, rest);
+            if common == label.len() {
+                // full edge match: descend
+                node = child;
+                rest = &rest[common..];
+            } else {
+                // split the edge at `common`
+                let mid = self.alloc_node(Some((node, first)));
+                let (head, tail) = label.split_at(common);
+                // node -> mid (head)
+                self.nodes[node as usize]
+                    .edges
+                    .insert(first, Edge { label: head.to_vec(), child: mid });
+                // mid -> old child (tail)
+                self.nodes[child as usize].parent = Some((mid, tail[0]));
+                self.nodes[mid as usize]
+                    .edges
+                    .insert(tail[0], Edge { label: tail.to_vec(), child });
+                node = mid;
+                rest = &rest[common..];
+                // loop continues; next iteration either attaches remainder
+                // or terminates here
+            }
+        }
+        let _ = rest;
+        self.nodes[node as usize].requests.push(id);
+        self.locations.insert(id, node);
+        self.len += 1;
+        self.dirty = true;
+    }
+
+    /// Remove a request (by id). O(L) worst case for path cleanup.
+    /// Returns true if it was present.
+    pub fn remove(&mut self, id: RequestId) -> bool {
+        let Some(node) = self.locations.remove(&id) else { return false };
+        let reqs = &mut self.nodes[node as usize].requests;
+        let Some(pos) = reqs.iter().position(|&r| r == id) else { return false };
+        reqs.swap_remove(pos);
+        self.len -= 1;
+        self.prune(node);
+        // Removal never changes relative DFS order of the survivors, so the
+        // cache stays valid — dead ids are skipped on read.
+        true
+    }
+
+    /// Prune empty leaf chains and merge single-child pass-through nodes.
+    fn prune(&mut self, mut node: NodeId) {
+        loop {
+            if node == 0 {
+                return;
+            }
+            let n = &self.nodes[node as usize];
+            if !n.requests.is_empty() {
+                return;
+            }
+            match n.edges.len() {
+                0 => {
+                    // empty leaf: detach from parent
+                    let (parent, tok) = n.parent.expect("non-root has parent");
+                    self.nodes[parent as usize].edges.remove(&tok);
+                    self.free.push(node);
+                    node = parent;
+                }
+                1 => {
+                    // pass-through: merge the single child edge into parent
+                    let (parent, ptok) = n.parent.expect("non-root has parent");
+                    let (_ctok, Edge { label: clabel, child }) =
+                        self.nodes[node as usize].edges.pop_first().unwrap();
+                    let parent_edge =
+                        self.nodes[parent as usize].edges.get_mut(&ptok).unwrap();
+                    parent_edge.label.extend_from_slice(&clabel);
+                    parent_edge.child = child;
+                    self.nodes[child as usize].parent = Some((parent, ptok));
+                    self.free.push(node);
+                    return;
+                }
+                _ => return,
+            }
+        }
+    }
+
+    fn rebuild_dfs(&mut self) {
+        self.dfs_cache.clear();
+        self.dfs_pos = 0;
+        // iterative DFS; shorter (ancestor) requests come before their
+        // extensions, siblings in token order.
+        let mut stack: Vec<NodeId> = vec![0];
+        while let Some(n) = stack.pop() {
+            let node = &self.nodes[n as usize];
+            let mut reqs = node.requests.clone();
+            reqs.sort_unstable(); // deterministic within a node
+            self.dfs_cache.extend(reqs);
+            // push children in reverse so smallest token pops first
+            for edge in node.edges.values().rev() {
+                stack.push(edge.child);
+            }
+        }
+        self.dirty = false;
+    }
+
+    /// Peek the next request in DFS order without removing it. O(1)
+    /// amortized (lazy rebuild after inserts).
+    pub fn peek_next(&mut self) -> Option<RequestId> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.dirty {
+            self.rebuild_dfs();
+        }
+        while self.dfs_pos < self.dfs_cache.len() {
+            let id = self.dfs_cache[self.dfs_pos];
+            if self.locations.contains_key(&id) {
+                return Some(id);
+            }
+            self.dfs_pos += 1; // skip removed ids
+        }
+        // cache exhausted but len > 0 can't happen unless dirty
+        debug_assert!(self.len == 0 || self.dirty);
+        if self.dirty {
+            self.rebuild_dfs();
+            return self.peek_next();
+        }
+        None
+    }
+
+    /// Pop the next request in DFS order.
+    pub fn pop_next(&mut self) -> Option<RequestId> {
+        let id = self.peek_next()?;
+        self.remove(id);
+        Some(id)
+    }
+
+    /// Full DFS order snapshot (tests/inspection).
+    pub fn dfs_order(&mut self) -> Vec<RequestId> {
+        if self.dirty {
+            self.rebuild_dfs();
+        }
+        self.dfs_cache
+            .iter()
+            .copied()
+            .filter(|id| self.locations.contains_key(id))
+            .collect()
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.locations.contains_key(&id)
+    }
+}
+
+/// Longest common prefix length of two token slices.
+pub fn lcp(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<u32> {
+        s.bytes().map(|b| b as u32).collect()
+    }
+
+    #[test]
+    fn paper_example_reorders_by_prefix() {
+        // Queue: (What is ML, How to code, What is AI, How to debug)
+        // PSM order groups the "What is" and "How to" families.
+        let mut t = PrefixTree::new();
+        t.insert(1, &toks("What is ML"));
+        t.insert(2, &toks("How to code"));
+        t.insert(3, &toks("What is AI"));
+        t.insert(4, &toks("How to debug"));
+        let order = t.dfs_order();
+        // 'H' < 'W' puts the How-to family first ("code" < "debug");
+        // within What-is, "AI" < "ML". Families are contiguous — that is
+        // the prefix-sharing win.
+        assert_eq!(order, vec![2, 4, 3, 1]);
+    }
+
+    #[test]
+    fn pop_consumes_in_dfs_order() {
+        let mut t = PrefixTree::new();
+        t.insert(1, &toks("aaa"));
+        t.insert(2, &toks("aab"));
+        t.insert(3, &toks("zzz"));
+        assert_eq!(t.pop_next(), Some(1));
+        assert_eq!(t.pop_next(), Some(2));
+        assert_eq!(t.pop_next(), Some(3));
+        assert_eq!(t.pop_next(), None);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn prefix_of_another_comes_first() {
+        let mut t = PrefixTree::new();
+        t.insert(1, &toks("abcdef"));
+        t.insert(2, &toks("abc"));
+        assert_eq!(t.dfs_order(), vec![2, 1], "ancestor (prefix) before extension");
+    }
+
+    #[test]
+    fn duplicate_prompts_coexist() {
+        let mut t = PrefixTree::new();
+        t.insert(1, &toks("same"));
+        t.insert(2, &toks("same"));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.pop_next(), Some(1));
+        assert_eq!(t.pop_next(), Some(2));
+    }
+
+    #[test]
+    fn empty_prompt_handled() {
+        let mut t = PrefixTree::new();
+        t.insert(1, &[]);
+        t.insert(2, &toks("x"));
+        assert_eq!(t.dfs_order(), vec![1, 2]);
+        assert!(t.remove(1));
+        assert_eq!(t.pop_next(), Some(2));
+    }
+
+    #[test]
+    fn remove_then_reuse_structure() {
+        let mut t = PrefixTree::new();
+        t.insert(1, &toks("hello world"));
+        t.insert(2, &toks("hello there"));
+        assert!(t.remove(1));
+        assert!(!t.remove(1), "double remove is a no-op");
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.pop_next(), Some(2));
+        // tree is reusable after full drain
+        t.insert(3, &toks("hello again"));
+        assert_eq!(t.pop_next(), Some(3));
+    }
+
+    #[test]
+    fn interleaved_insert_peek_remove() {
+        let mut t = PrefixTree::new();
+        t.insert(10, &toks("bb"));
+        assert_eq!(t.peek_next(), Some(10));
+        t.insert(5, &toks("aa")); // earlier in DFS than current peek
+        assert_eq!(t.peek_next(), Some(5), "insert invalidates cached order");
+        assert_eq!(t.pop_next(), Some(5));
+        assert_eq!(t.pop_next(), Some(10));
+    }
+
+    #[test]
+    fn edge_split_cases() {
+        let mut t = PrefixTree::new();
+        t.insert(1, &toks("abcd"));
+        t.insert(2, &toks("abxy")); // splits edge at "ab"
+        t.insert(3, &toks("ab")); // terminates exactly at split point
+        assert_eq!(t.dfs_order(), vec![3, 1, 2]);
+        assert!(t.remove(3));
+        assert_eq!(t.dfs_order(), vec![1, 2]);
+    }
+
+    #[test]
+    fn lcp_works() {
+        assert_eq!(lcp(&[1, 2, 3], &[1, 2, 9]), 2);
+        assert_eq!(lcp(&[], &[1]), 0);
+        assert_eq!(lcp(&[5], &[5]), 1);
+    }
+
+    #[test]
+    fn large_family_grouping() {
+        // Two template families interleaved on insert; DFS groups them.
+        let mut t = PrefixTree::new();
+        for i in 0..50u64 {
+            let fam = if i % 2 == 0 { "What is topic " } else { "Summarize doc " };
+            let prompt: Vec<u32> =
+                toks(fam).into_iter().chain(toks(&format!("{i:03}"))).collect();
+            t.insert(i, &prompt);
+        }
+        let order = t.dfs_order();
+        // All odd ids (S... family, 'S' < 'W') first, then all even.
+        let first_half: Vec<_> = order[..25].to_vec();
+        assert!(first_half.iter().all(|id| id % 2 == 1), "families grouped: {order:?}");
+    }
+}

@@ -1,0 +1,282 @@
+//! Dual-queue architecture (§4.1): a FCFS online queue and a pluggable
+//! offline queue policy (FCFS / PSM / fairness-extended PSM).
+//!
+//! Queues own waiting [`Request`]s; the scheduler peeks candidates in
+//! policy order, tries to fit them against its latency/chunk/memory
+//! budgets, and pops only what it actually schedules.
+
+use super::fairness::FairPsm;
+use super::psm::PrefixTree;
+use super::request::{Request, RequestId};
+use std::collections::{HashMap, VecDeque};
+
+/// FCFS online queue.
+#[derive(Debug, Default)]
+pub struct OnlineQueue {
+    q: VecDeque<Request>,
+}
+
+impl OnlineQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, req: Request) {
+        debug_assert!(req.class.is_online());
+        self.q.push_back(req);
+    }
+
+    /// Re-admit at the front (e.g. a request that could not be fully
+    /// scheduled keeps its FCFS position).
+    pub fn push_front(&mut self, req: Request) {
+        self.q.push_front(req);
+    }
+
+    pub fn peek(&self) -> Option<&Request> {
+        self.q.front()
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.q.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+/// Offline queue ordering policies (the §4.3 design space).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OfflinePolicy {
+    /// Arrival order (the no-PSM baseline).
+    Fcfs,
+    /// Prefix-Sharing Maximization: DFS order of the prefix trie (Alg. 3).
+    Psm,
+    /// PSM + freshness mixing with the given utility ratio (Alg. 4).
+    PsmFair { utility_ratio: f64 },
+}
+
+impl OfflinePolicy {
+    pub fn parse(s: &str, utility_ratio: f64) -> Option<OfflinePolicy> {
+        match s {
+            "fcfs" => Some(OfflinePolicy::Fcfs),
+            "psm" => Some(OfflinePolicy::Psm),
+            "psm-fair" => Some(OfflinePolicy::PsmFair { utility_ratio }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OfflinePolicy::Fcfs => "fcfs",
+            OfflinePolicy::Psm => "psm",
+            OfflinePolicy::PsmFair { .. } => "psm-fair",
+        }
+    }
+}
+
+enum Order {
+    Fcfs(VecDeque<RequestId>),
+    Psm(PrefixTree),
+    Fair(FairPsm),
+}
+
+/// The offline queue: request storage + one of the ordering structures.
+pub struct OfflineQueue {
+    reqs: HashMap<RequestId, Request>,
+    order: Order,
+    policy: OfflinePolicy,
+    /// Prompt of the most recently popped request — the PSM prefix-sharing
+    /// context for "deduct shared prefix between consecutive requests".
+    last_prompt: Vec<u32>,
+}
+
+impl OfflineQueue {
+    pub fn new(policy: OfflinePolicy, seed: u64) -> OfflineQueue {
+        let order = match policy {
+            OfflinePolicy::Fcfs => Order::Fcfs(VecDeque::new()),
+            OfflinePolicy::Psm => Order::Psm(PrefixTree::new()),
+            OfflinePolicy::PsmFair { utility_ratio } => {
+                Order::Fair(FairPsm::new(utility_ratio, seed))
+            }
+        };
+        OfflineQueue { reqs: HashMap::new(), order, policy, last_prompt: Vec::new() }
+    }
+
+    pub fn policy(&self) -> OfflinePolicy {
+        self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    pub fn push(&mut self, req: Request) {
+        debug_assert!(!req.class.is_online());
+        match &mut self.order {
+            Order::Fcfs(q) => q.push_back(req.id),
+            Order::Psm(t) => t.insert(req.id, &req.prompt),
+            Order::Fair(f) => f.insert(req.id, &req.prompt, req.arrival),
+        }
+        self.reqs.insert(req.id, req);
+    }
+
+    /// Next candidate in policy order (stable across repeated peeks).
+    pub fn peek_next(&mut self) -> Option<&Request> {
+        let id = match &mut self.order {
+            Order::Fcfs(q) => q.front().copied(),
+            Order::Psm(t) => t.peek_next(),
+            Order::Fair(f) => f.peek_next(),
+        }?;
+        self.reqs.get(&id)
+    }
+
+    /// Pop the candidate returned by the last `peek_next`. Also computes
+    /// the request's shared-prefix length vs the previously popped one
+    /// (PSM's KV-reuse accounting) and stores it on the request.
+    pub fn pop_next(&mut self) -> Option<Request> {
+        let id = match &mut self.order {
+            Order::Fcfs(q) => q.pop_front(),
+            Order::Psm(t) => t.pop_next(),
+            Order::Fair(f) => f.pop_next(),
+        }?;
+        let mut req = self.reqs.remove(&id).expect("order/storage in sync");
+        let shared = super::psm::lcp(&self.last_prompt, &req.prompt);
+        req.shared_prefix_len = shared;
+        self.last_prompt = req.prompt.clone();
+        Some(req)
+    }
+
+    /// Remove a specific request (e.g. client cancelled).
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        let req = self.reqs.remove(&id)?;
+        match &mut self.order {
+            Order::Fcfs(q) => {
+                q.retain(|&x| x != id);
+            }
+            Order::Psm(t) => {
+                t.remove(id);
+            }
+            Order::Fair(f) => {
+                f.remove(id);
+            }
+        }
+        Some(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Class;
+
+    fn offline(id: RequestId, prompt: &str, arrival: f64) -> Request {
+        Request::new(id, Class::Offline, arrival, prompt.len(), 8)
+            .with_prompt(prompt.bytes().map(|b| b as u32).collect())
+    }
+
+    #[test]
+    fn online_queue_fcfs() {
+        let mut q = OnlineQueue::new();
+        q.push(Request::new(1, Class::Online, 0.0, 4, 4));
+        q.push(Request::new(2, Class::Online, 1.0, 4, 4));
+        assert_eq!(q.peek().unwrap().id, 1);
+        let r = q.pop().unwrap();
+        assert_eq!(r.id, 1);
+        q.push_front(r);
+        assert_eq!(q.pop().unwrap().id, 1, "push_front restores position");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn fcfs_policy_is_arrival_order() {
+        let mut q = OfflineQueue::new(OfflinePolicy::Fcfs, 0);
+        q.push(offline(1, "zzz", 0.0));
+        q.push(offline(2, "aaa", 1.0));
+        assert_eq!(q.pop_next().unwrap().id, 1);
+        assert_eq!(q.pop_next().unwrap().id, 2);
+    }
+
+    #[test]
+    fn psm_policy_is_dfs_order_with_shared_prefix() {
+        let mut q = OfflineQueue::new(OfflinePolicy::Psm, 0);
+        q.push(offline(1, "What is ML", 0.0));
+        q.push(offline(2, "How to code", 1.0));
+        q.push(offline(3, "What is AI", 2.0));
+        q.push(offline(4, "How to debug", 3.0));
+        let order: Vec<(RequestId, usize)> = std::iter::from_fn(|| {
+            q.pop_next().map(|r| (r.id, r.shared_prefix_len))
+        })
+        .collect();
+        assert_eq!(
+            order.iter().map(|x| x.0).collect::<Vec<_>>(),
+            vec![2, 4, 3, 1],
+            "PSM groups families"
+        );
+        assert_eq!(order[0].1, 0);
+        assert_eq!(order[1].1, "How to ".len(), "consecutive share 'How to '");
+        assert_eq!(order[3].1, "What is ".len());
+    }
+
+    #[test]
+    fn fcfs_has_no_prefix_wins_on_interleaved_families() {
+        let mut q = OfflineQueue::new(OfflinePolicy::Fcfs, 0);
+        q.push(offline(1, "What is ML", 0.0));
+        q.push(offline(2, "How to code", 1.0));
+        q.push(offline(3, "What is AI", 2.0));
+        q.push(offline(4, "How to debug", 3.0));
+        let shared: usize =
+            std::iter::from_fn(|| q.pop_next().map(|r| r.shared_prefix_len)).sum();
+        assert_eq!(shared, 0, "arrival order alternates families");
+    }
+
+    #[test]
+    fn peek_then_pop_consistent() {
+        let mut q = OfflineQueue::new(OfflinePolicy::PsmFair { utility_ratio: 0.5 }, 3);
+        for i in 0..20u64 {
+            q.push(offline(i, &format!("prompt {i}"), i as f64));
+        }
+        for _ in 0..20 {
+            let peeked = q.peek_next().unwrap().id;
+            assert_eq!(q.peek_next().unwrap().id, peeked);
+            assert_eq!(q.pop_next().unwrap().id, peeked);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn remove_from_all_policies() {
+        for policy in [
+            OfflinePolicy::Fcfs,
+            OfflinePolicy::Psm,
+            OfflinePolicy::PsmFair { utility_ratio: 0.7 },
+        ] {
+            let mut q = OfflineQueue::new(policy, 1);
+            q.push(offline(1, "abc", 0.0));
+            q.push(offline(2, "abd", 1.0));
+            assert!(q.remove(1).is_some());
+            assert!(q.remove(1).is_none());
+            assert_eq!(q.len(), 1);
+            assert_eq!(q.pop_next().unwrap().id, 2);
+        }
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(OfflinePolicy::parse("fcfs", 0.5), Some(OfflinePolicy::Fcfs));
+        assert_eq!(OfflinePolicy::parse("psm", 0.5), Some(OfflinePolicy::Psm));
+        assert_eq!(
+            OfflinePolicy::parse("psm-fair", 0.5),
+            Some(OfflinePolicy::PsmFair { utility_ratio: 0.5 })
+        );
+        assert_eq!(OfflinePolicy::parse("nope", 0.5), None);
+    }
+}

@@ -1,0 +1,287 @@
+//! Request model: online/offline classes, lifecycle phases, SLO metrics,
+//! and per-request progress the scheduler and engine share.
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// Workload class — the paper's central dichotomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Class {
+    /// Latency-sensitive (chat-style): TTFT/TBT SLO-bound.
+    Online,
+    /// Throughput-oriented (batch-API-style): opportunistically scheduled.
+    Offline,
+}
+
+impl Class {
+    pub fn is_online(self) -> bool {
+        matches!(self, Class::Online)
+    }
+}
+
+/// Request lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In a queue, no prefill progress yet.
+    Waiting,
+    /// Partially prefilled (chunked prefill in flight).
+    Prefill,
+    /// Prefill complete; generating one token per scheduled iteration.
+    Decode,
+    /// Preempted with preserved state (re-admitted later).
+    Preempted,
+    /// Finished (all output tokens generated or budget exhausted).
+    Finished,
+}
+
+/// The four statistical SLO metrics from the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SloMetric {
+    MeanTtft,
+    P99Ttft,
+    MeanTbt,
+    P99Tbt,
+}
+
+impl SloMetric {
+    pub const ALL: [SloMetric; 4] =
+        [SloMetric::MeanTtft, SloMetric::P99Ttft, SloMetric::MeanTbt, SloMetric::P99Tbt];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloMetric::MeanTtft => "mean_ttft",
+            SloMetric::P99Ttft => "p99_ttft",
+            SloMetric::MeanTbt => "mean_tbt",
+            SloMetric::P99Tbt => "p99_tbt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloMetric> {
+        match s {
+            "mean_ttft" => Some(SloMetric::MeanTtft),
+            "p99_ttft" => Some(SloMetric::P99Ttft),
+            "mean_tbt" => Some(SloMetric::MeanTbt),
+            "p99_tbt" => Some(SloMetric::P99Tbt),
+            _ => None,
+        }
+    }
+
+    pub fn is_ttft(self) -> bool {
+        matches!(self, SloMetric::MeanTtft | SloMetric::P99Ttft)
+    }
+}
+
+/// One SLO constraint: `metric` must stay at or below `limit_ms`.
+///
+/// In the paper's experiments limits are expressed as an *interference
+/// tolerance ratio* over the pure-online baseline:
+/// `limit = baseline * (1 + tolerance)` — see [`Slo::from_tolerance`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    pub metric: SloMetric,
+    pub limit_ms: f64,
+}
+
+impl Slo {
+    pub fn new(metric: SloMetric, limit_ms: f64) -> Slo {
+        Slo { metric, limit_ms }
+    }
+
+    /// Build from a pure-online baseline measurement and a tolerance ratio
+    /// (e.g. baseline 40 ms, tolerance 0.05 -> limit 42 ms).
+    pub fn from_tolerance(metric: SloMetric, baseline_ms: f64, tolerance: f64) -> Slo {
+        Slo { metric, limit_ms: baseline_ms * (1.0 + tolerance) }
+    }
+}
+
+/// A request flowing through the system.
+///
+/// For the simulation backend `prompt` may be empty and only `prompt_len`
+/// / `output_len` matter; the real PJRT engine carries actual token ids.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub class: Class,
+    /// Arrival time in seconds (trace time for sim, engine-relative wall
+    /// clock for the real path).
+    pub arrival: f64,
+    /// Prompt token ids (real engine). Empty in pure simulation.
+    pub prompt: Vec<u32>,
+    /// Prompt length in tokens (== prompt.len() when prompt is real).
+    pub prompt_len: usize,
+    /// Number of output tokens to generate (sim: sampled from the trace;
+    /// real engine: generation budget / until EOS).
+    pub output_len: usize,
+    /// Preemption priority: higher wins. Online requests default to 100,
+    /// offline to 0 (paid/free tiers can sit in between).
+    pub priority: u8,
+    /// Tokens of this prompt reusable from the prefix cache at schedule
+    /// time (set by the PSM policy; "deduct shared prefix" simulation).
+    pub shared_prefix_len: usize,
+
+    // ---- progress (owned by the engine/scheduler) ----
+    pub phase: Phase,
+    /// Prompt tokens prefilled so far (chunked prefill cursor).
+    pub prefilled: usize,
+    /// Output tokens generated so far.
+    pub generated: usize,
+    /// Times the request was preempted (fairness / starvation accounting).
+    pub preemptions: u32,
+    /// Generated token ids (real engine only).
+    pub output_tokens: Vec<u32>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, class: Class, arrival: f64, prompt_len: usize, output_len: usize) -> Request {
+        Request {
+            id,
+            class,
+            arrival,
+            prompt: Vec::new(),
+            prompt_len,
+            output_len: output_len.max(1),
+            priority: if class.is_online() { 100 } else { 0 },
+            shared_prefix_len: 0,
+            phase: Phase::Waiting,
+            prefilled: 0,
+            generated: 0,
+            preemptions: 0,
+            output_tokens: Vec::new(),
+        }
+    }
+
+    pub fn with_prompt(mut self, prompt: Vec<u32>) -> Request {
+        self.prompt_len = prompt.len();
+        self.prompt = prompt;
+        self
+    }
+
+    /// Prompt tokens still to prefill (after chunking and prefix reuse).
+    pub fn prefill_remaining(&self) -> usize {
+        self.prompt_len.saturating_sub(self.prefilled)
+    }
+
+    /// True once every prompt token is in the KV cache.
+    pub fn prefill_done(&self) -> bool {
+        self.prefilled >= self.prompt_len
+    }
+
+    /// Current sequence length (context held in KV cache).
+    pub fn context_len(&self) -> usize {
+        self.prefilled + self.generated
+    }
+
+    /// Total sequence length at completion.
+    pub fn total_len(&self) -> usize {
+        self.prompt_len + self.output_len
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    /// Advance the prefill cursor by a scheduled chunk of `n` tokens; flips
+    /// to Decode when the prompt completes.
+    pub fn advance_prefill(&mut self, n: usize) {
+        debug_assert!(n <= self.prefill_remaining());
+        self.prefilled += n;
+        self.phase = if self.prefill_done() { Phase::Decode } else { Phase::Prefill };
+    }
+
+    /// Record one generated token; flips to Finished at the output budget.
+    pub fn advance_decode(&mut self) {
+        debug_assert!(self.prefill_done());
+        self.generated += 1;
+        if self.generated >= self.output_len {
+            self.phase = Phase::Finished;
+        }
+    }
+
+    /// Preempt with state preserved (paper's default preemption mechanism).
+    pub fn preempt_preserve(&mut self) {
+        self.preemptions += 1;
+        self.phase = Phase::Preempted;
+    }
+
+    /// Preempt discarding computed state: prefill restarts from the shared
+    /// prefix, generated tokens are lost (InferCept's "discard" class).
+    pub fn preempt_discard(&mut self) {
+        self.preemptions += 1;
+        self.prefilled = 0;
+        self.generated = 0;
+        self.output_tokens.clear();
+        self.phase = Phase::Waiting;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_prefill_then_decode_then_finish() {
+        let mut r = Request::new(1, Class::Online, 0.0, 10, 3);
+        assert_eq!(r.phase, Phase::Waiting);
+        assert_eq!(r.prefill_remaining(), 10);
+        r.advance_prefill(6);
+        assert_eq!(r.phase, Phase::Prefill);
+        assert_eq!(r.prefill_remaining(), 4);
+        r.advance_prefill(4);
+        assert_eq!(r.phase, Phase::Decode);
+        assert!(r.prefill_done());
+        r.advance_decode();
+        r.advance_decode();
+        assert_eq!(r.phase, Phase::Decode);
+        r.advance_decode();
+        assert_eq!(r.phase, Phase::Finished);
+        assert_eq!(r.context_len(), 13);
+    }
+
+    #[test]
+    fn preempt_preserve_keeps_progress() {
+        let mut r = Request::new(1, Class::Offline, 0.0, 10, 5);
+        r.advance_prefill(10);
+        r.advance_decode();
+        r.preempt_preserve();
+        assert_eq!(r.phase, Phase::Preempted);
+        assert_eq!(r.prefilled, 10);
+        assert_eq!(r.generated, 1);
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    fn preempt_discard_resets_progress() {
+        let mut r = Request::new(1, Class::Offline, 0.0, 10, 5);
+        r.advance_prefill(10);
+        r.advance_decode();
+        r.preempt_discard();
+        assert_eq!(r.phase, Phase::Waiting);
+        assert_eq!(r.prefilled, 0);
+        assert_eq!(r.generated, 0);
+    }
+
+    #[test]
+    fn default_priorities() {
+        assert_eq!(Request::new(1, Class::Online, 0.0, 1, 1).priority, 100);
+        assert_eq!(Request::new(2, Class::Offline, 0.0, 1, 1).priority, 0);
+    }
+
+    #[test]
+    fn slo_from_tolerance() {
+        let s = Slo::from_tolerance(SloMetric::P99Tbt, 40.0, 0.10);
+        assert!((s.limit_ms - 44.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_metric_roundtrip() {
+        for m in SloMetric::ALL {
+            assert_eq!(SloMetric::parse(m.name()), Some(m));
+        }
+        assert_eq!(SloMetric::parse("bogus"), None);
+    }
+
+    #[test]
+    fn output_len_at_least_one() {
+        assert_eq!(Request::new(1, Class::Online, 0.0, 5, 0).output_len, 1);
+    }
+}

@@ -1,0 +1,764 @@
+//! The HyGen two-phase SLO-aware scheduler (§4.1, Alg. 1–2).
+//!
+//! Each engine iteration builds one hybrid batch under three budgets:
+//!
+//! * **latency** `t` — the profiled per-iteration latency budget (ms); the
+//!   predictor charges every scheduling decision against it. `None`
+//!   disables SLO-awareness (that is exactly the Sarathi++ baseline).
+//! * **chunk** `c` — the Sarathi token budget per iteration.
+//! * **memory** `m` — free KV blocks via the [`BlockManager`].
+//!
+//! Phase 1 (online) schedules online decodes unconditionally and online
+//! prefill chunks under `c`/`m`, preempting offline requests for memory.
+//! Phase 2 (offline) pours the *residual* budgets into offline work:
+//! resumed preempted requests first, then running offline, then new
+//! requests drawn from the queue policy (FCFS / PSM / fair-PSM).
+//!
+//! The same struct, differently configured, implements every baseline in
+//! the paper's evaluation — see [`SchedulerConfig`] and `baselines/`.
+
+use super::batch::{Batch, BatchEntry, Features};
+use super::predictor::LatencyPredictor;
+use super::request::{Class, Phase, RequestId};
+#[cfg(test)]
+use super::request::Request;
+use super::state::EngineState;
+
+/// How preempted offline requests are handled (InferCept's taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptionMode {
+    /// Keep prefill/decode progress; only KV blocks are released
+    /// (swap-to-host semantics). The paper's default.
+    Preserve,
+    /// Drop computed state; the request re-enters the offline queue and
+    /// recomputes its prefill.
+    Discard,
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Per-iteration latency budget in ms (from the SLO-aware profiler).
+    /// `None` = SLO-unaware hybrid scheduling (Sarathi++).
+    pub latency_budget_ms: Option<f64>,
+    /// Token budget per iteration (Sarathi chunk size).
+    pub chunk_tokens: usize,
+    /// Max prefill tokens for one request in one iteration (the real
+    /// engine's per-slot chunk bucket; `usize::MAX` to disable).
+    pub max_chunk_per_request: usize,
+    /// Max concurrently running requests (the real engine has 8 slots).
+    pub max_running: usize,
+    pub preemption: PreemptionMode,
+    /// Schedule offline work at all (false = pure-online Sarathi).
+    pub enable_offline: bool,
+    /// HyGen* baseline: cap offline admissions at this rate (req/s).
+    pub offline_qps_cap: Option<f64>,
+    /// Blocks held back from admissions so running decodes can grow.
+    pub watermark_blocks: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            latency_budget_ms: Some(50.0),
+            chunk_tokens: 512,
+            max_chunk_per_request: usize::MAX,
+            max_running: 256,
+            preemption: PreemptionMode::Preserve,
+            enable_offline: true,
+            offline_qps_cap: None,
+            watermark_blocks: 8,
+        }
+    }
+}
+
+/// Simple token-bucket rate limiter (HyGen*'s fixed offline QPS).
+#[derive(Debug, Clone)]
+pub struct RateLimiter {
+    rate: f64,
+    tokens: f64,
+    last: f64,
+    burst: f64,
+}
+
+impl RateLimiter {
+    pub fn new(rate: f64) -> RateLimiter {
+        RateLimiter { rate, tokens: 1.0, last: 0.0, burst: 1.0_f64.max(rate) }
+    }
+
+    /// Try to consume one permit at time `now` (seconds).
+    pub fn admit(&mut self, now: f64) -> bool {
+        if now > self.last {
+            self.tokens = (self.tokens + (now - self.last) * self.rate).min(self.burst);
+            self.last = now;
+        }
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-iteration scheduling statistics (observability + tests).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScheduleStats {
+    pub preemptions: usize,
+    pub online_stalls: usize,
+    pub predicted_ms: f64,
+}
+
+pub struct HybridScheduler {
+    pub cfg: SchedulerConfig,
+    pub predictor: LatencyPredictor,
+    offline_limiter: Option<RateLimiter>,
+    pub last_stats: ScheduleStats,
+}
+
+impl HybridScheduler {
+    pub fn new(cfg: SchedulerConfig, predictor: LatencyPredictor) -> HybridScheduler {
+        let offline_limiter = cfg.offline_qps_cap.map(RateLimiter::new);
+        HybridScheduler { cfg, predictor, offline_limiter, last_stats: ScheduleStats::default() }
+    }
+
+    /// Build the next iteration batch at time `now` (Alg. 2's two
+    /// invocations of Alg. 1). Mutates `state`: admissions move queue
+    /// requests into the running sets (with block allocation), and memory
+    /// pressure may preempt offline requests.
+    pub fn schedule(&mut self, state: &mut EngineState, now: f64) -> Batch {
+        let mut stats = ScheduleStats::default();
+        let mut t = self.cfg.latency_budget_ms.unwrap_or(f64::INFINITY);
+        if t.is_finite() {
+            // Charge the empty-batch baseline (the regression bias) so the
+            // sum of marginal costs telescopes to the full batch prediction
+            // and `predicted_ms <= latency_budget_ms` holds exactly.
+            t -= self.predictor.predict(&Features::default());
+        }
+        let mut c = self.cfg.chunk_tokens;
+        let mut batch = Batch::new();
+        let mut feats = Features::default();
+
+        self.online_phase(state, &mut batch, &mut feats, &mut t, &mut c, &mut stats);
+        if self.cfg.enable_offline {
+            self.offline_phase(state, now, &mut batch, &mut feats, &mut t, &mut c);
+        }
+        stats.predicted_ms = self.predictor.predict(&feats);
+        self.last_stats = stats;
+        batch
+    }
+
+    // ---------------------------------------------------------------- online
+
+    fn online_phase(
+        &mut self,
+        state: &mut EngineState,
+        batch: &mut Batch,
+        feats: &mut Features,
+        t: &mut f64,
+        c: &mut usize,
+        stats: &mut ScheduleStats,
+    ) {
+        let discard = self.cfg.preemption == PreemptionMode::Discard;
+
+        // 1. Online decodes: scheduled regardless of latency budget
+        //    (Alg. 1 line 8: "online" bypasses the `t_req <= t` check);
+        //    memory pressure preempts offline requests.
+        let decode_ids: Vec<RequestId> = state
+            .running_online
+            .iter()
+            .copied()
+            .filter(|id| state.requests[id].phase == Phase::Decode)
+            .collect();
+        for id in decode_ids {
+            let need = state.requests[&id].context_len() + 1;
+            let mut ok = state.blocks.grow(id, need);
+            while !ok {
+                if state.preempt_last_offline(discard).is_none() {
+                    break;
+                }
+                stats.preemptions += 1;
+                ok = state.blocks.grow(id, need);
+            }
+            if !ok {
+                // No offline left to preempt and no memory: the decode
+                // stalls one iteration. (With online-only load this means
+                // the instance is over-committed.)
+                stats.online_stalls += 1;
+                continue;
+            }
+            let t_req = self.predictor.decode_cost(feats);
+            *t -= t_req;
+            feats.add_decode();
+            batch.push(BatchEntry {
+                id,
+                class: Class::Online,
+                n_tokens: 1,
+                is_prefill: false,
+                predicted_ms: t_req,
+            });
+        }
+
+        // 2. Online prefill continuations (already admitted, mid-prompt).
+        let cont_ids: Vec<RequestId> = state
+            .running_online
+            .iter()
+            .copied()
+            .filter(|id| state.requests[id].phase == Phase::Prefill)
+            .collect();
+        for id in cont_ids {
+            if *c == 0 {
+                break;
+            }
+            let want = state.requests[&id].prefill_remaining();
+            let cap = want.min(self.cfg.max_chunk_per_request);
+            // Memory already allocated at admission: pass unlimited mem.
+            let (l, t_req) =
+                self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, cap);
+            if l == 0 {
+                break;
+            }
+            *t -= t_req;
+            *c -= l;
+            feats.add_prefill(l);
+            batch.push(BatchEntry {
+                id,
+                class: Class::Online,
+                n_tokens: l,
+                is_prefill: true,
+                predicted_ms: t_req,
+            });
+        }
+
+        // 3. Online admissions from the FCFS queue.
+        while *c > 0 && state.num_running() < self.cfg.max_running {
+            let Some(next) = state.online_queue.peek() else { break };
+            let prompt_len = next.prompt_len;
+            // Memory: the full prompt KV must fit (chunked prefill still
+            // writes every prompt token's KV), modulo prefix-cache hits.
+            let mut free =
+                state.blocks.free_tokens().saturating_sub(self.cfg.watermark_blocks * state.blocks.block_size());
+            while free < prompt_len {
+                if state.preempt_last_offline(discard).is_none() {
+                    break;
+                }
+                stats.preemptions += 1;
+                free = state
+                    .blocks
+                    .free_tokens()
+                    .saturating_sub(self.cfg.watermark_blocks * state.blocks.block_size());
+            }
+            if free < prompt_len {
+                stats.online_stalls += 1;
+                break; // FCFS head-of-line: wait for memory
+            }
+            let mut req = state.online_queue.pop().expect("peeked");
+            let chain = state.prompt_chain(&req);
+            let cached = match state.blocks.allocate(req.id, prompt_len.max(1), &chain) {
+                Some(cached) => cached,
+                None => {
+                    // racing watermark arithmetic; requeue and stop
+                    state.online_queue.push_front(req);
+                    break;
+                }
+            };
+            // Prefix-cache hits skip prefill work, but at least one token
+            // must be processed to produce the first logits.
+            req.prefilled = cached.min(prompt_len.saturating_sub(1));
+            let want = req.prefill_remaining().min(self.cfg.max_chunk_per_request);
+            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+            if l == 0 {
+                // Latency/chunk budget exhausted: undo the admission.
+                state.blocks.release(req.id);
+                req.prefilled = 0;
+                state.online_queue.push_front(req);
+                break;
+            }
+            *t -= t_req;
+            *c -= l;
+            feats.add_prefill(l);
+            req.phase = Phase::Prefill;
+            batch.push(BatchEntry {
+                id: req.id,
+                class: Class::Online,
+                n_tokens: l,
+                is_prefill: true,
+                predicted_ms: t_req,
+            });
+            state.running_online.push(req.id);
+            state.requests.insert(req.id, req);
+        }
+    }
+
+    // --------------------------------------------------------------- offline
+
+    fn offline_phase(
+        &mut self,
+        state: &mut EngineState,
+        now: f64,
+        batch: &mut Batch,
+        feats: &mut Features,
+        t: &mut f64,
+        c: &mut usize,
+    ) {
+        let discard = self.cfg.preemption == PreemptionMode::Discard;
+        // 1. Offline decodes — only within the residual latency budget
+        //    (Alg. 3 lines 7-11; stop at the first that does not fit).
+        let decode_ids: Vec<RequestId> = state
+            .running_offline
+            .iter()
+            .copied()
+            .filter(|id| state.requests[id].phase == Phase::Decode)
+            .collect();
+        for id in decode_ids {
+            if !state.running_offline.contains(&id) {
+                continue; // preempted below by an earlier decode's growth
+            }
+            let t_req = self.predictor.decode_cost(feats);
+            if t_req > *t {
+                break;
+            }
+            let need = state.requests[&id].context_len() + 1;
+            let mut ok = state.blocks.grow(id, need);
+            while !ok {
+                // Self-preemption (vLLM-style): free the *newest* running
+                // offline request so older decodes keep making progress —
+                // without this, a full KV pool deadlocks pure-offline work.
+                match state.running_offline.last() {
+                    Some(&last) if last != id => {
+                        state.preempt_last_offline(discard);
+                        ok = state.blocks.grow(id, need);
+                    }
+                    _ => break,
+                }
+            }
+            if !ok {
+                break;
+            }
+            *t -= t_req;
+            feats.add_decode();
+            batch.push(BatchEntry {
+                id,
+                class: Class::Offline,
+                n_tokens: 1,
+                is_prefill: false,
+                predicted_ms: t_req,
+            });
+        }
+
+        // 2. Offline prefill continuations, in preserved (DFS) order.
+        let cont_ids: Vec<RequestId> = state
+            .running_offline
+            .iter()
+            .copied()
+            .filter(|id| state.requests[id].phase == Phase::Prefill)
+            .collect();
+        for id in cont_ids {
+            if *c == 0 || *t <= 0.0 {
+                break;
+            }
+            let want =
+                state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
+            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+            if l == 0 {
+                break;
+            }
+            *t -= t_req;
+            *c -= l;
+            feats.add_prefill(l);
+            batch.push(BatchEntry {
+                id,
+                class: Class::Offline,
+                n_tokens: l,
+                is_prefill: true,
+                predicted_ms: t_req,
+            });
+        }
+
+        // 3. Resume preempted offline requests (FIFO — oldest progress
+        //    first), re-allocating their context. Preserve semantics: no
+        //    recompute; the request continues where it stopped.
+        while !state.preempted_offline.is_empty() {
+            if state.num_running() >= self.cfg.max_running || *t <= 0.0 {
+                break;
+            }
+            let id = state.preempted_offline[0];
+            let req = &state.requests[&id];
+            let ctx = req.context_len().max(1);
+            let chain = state.prompt_chain(req);
+            if state.blocks.allocate(id, ctx, &chain).is_none() {
+                break; // not enough memory yet
+            }
+            state.preempted_offline.remove(0);
+            let req = state.requests.get_mut(&id).unwrap();
+            req.phase = if req.prefill_done() { Phase::Decode } else { Phase::Prefill };
+            state.running_offline.push(id);
+            // It also gets work this iteration if budget allows.
+            if state.requests[&id].phase == Phase::Decode {
+                let t_req = self.predictor.decode_cost(feats);
+                let need = state.requests[&id].context_len() + 1;
+                if t_req <= *t && state.blocks.grow(id, need) {
+                    *t -= t_req;
+                    feats.add_decode();
+                    batch.push(BatchEntry {
+                        id,
+                        class: Class::Offline,
+                        n_tokens: 1,
+                        is_prefill: false,
+                        predicted_ms: t_req,
+                    });
+                }
+            } else {
+                let want =
+                    state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
+                let (l, t_req) =
+                    self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+                if l > 0 {
+                    *t -= t_req;
+                    *c -= l;
+                    feats.add_prefill(l);
+                    batch.push(BatchEntry {
+                        id,
+                        class: Class::Offline,
+                        n_tokens: l,
+                        is_prefill: true,
+                        predicted_ms: t_req,
+                    });
+                }
+            }
+        }
+
+        // 4. New offline admissions in queue-policy order (PSM's DFS).
+        while *c > 0 && *t > 0.0 && state.num_running() < self.cfg.max_running {
+            let Some(next) = state.offline_queue.peek_next() else { break };
+            let prompt_len = next.prompt_len;
+            let free = state
+                .blocks
+                .free_tokens()
+                .saturating_sub(self.cfg.watermark_blocks * state.blocks.block_size());
+            if free < prompt_len {
+                break; // offline waits; never preempts
+            }
+            // HyGen*'s admission rate cap.
+            if let Some(lim) = &mut self.offline_limiter {
+                if !lim.admit(now) {
+                    break;
+                }
+            }
+            let mut req = state.offline_queue.pop_next().expect("peeked");
+            let chain = state.prompt_chain(&req);
+            let cached = match state.blocks.allocate(req.id, prompt_len.max(1), &chain) {
+                Some(cached) => cached,
+                None => {
+                    state.offline_queue.push(req);
+                    break;
+                }
+            };
+            // Prefix reuse: cache hits (real prompts) or the queue's
+            // consecutive-LCP estimate (simulated prompts) skip work.
+            let reuse = if state.prefix_caching {
+                cached.max(req.shared_prefix_len.min(prompt_len))
+            } else {
+                0
+            };
+            req.prefilled = reuse.min(prompt_len.saturating_sub(1));
+            let want = req.prefill_remaining().min(self.cfg.max_chunk_per_request);
+            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+            if l == 0 {
+                state.blocks.release(req.id);
+                req.prefilled = 0;
+                state.offline_queue.push(req);
+                break;
+            }
+            *t -= t_req;
+            *c -= l;
+            feats.add_prefill(l);
+            req.phase = Phase::Prefill;
+            batch.push(BatchEntry {
+                id: req.id,
+                class: Class::Offline,
+                n_tokens: l,
+                is_prefill: true,
+                predicted_ms: t_req,
+            });
+            state.running_offline.push(req.id);
+            state.requests.insert(req.id, req);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queues::OfflinePolicy;
+    use crate::coordinator::request::Request;
+
+    fn mk_state(blocks: usize) -> EngineState {
+        EngineState::new(OfflinePolicy::Fcfs, blocks, 16, 0)
+    }
+
+    fn sched(cfg: SchedulerConfig) -> HybridScheduler {
+        HybridScheduler::new(cfg, LatencyPredictor::default_seed())
+    }
+
+    fn online(id: RequestId, prompt: usize, out: usize) -> Request {
+        Request::new(id, Class::Online, 0.0, prompt, out)
+            .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect())
+    }
+
+    fn offline(id: RequestId, prompt: usize, out: usize) -> Request {
+        Request::new(id, Class::Offline, 0.0, prompt, out)
+            .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect())
+    }
+
+    /// Apply a batch the way the engine would (progress only).
+    fn apply(state: &mut EngineState, batch: &Batch) {
+        for e in &batch.entries {
+            let r = state.req_mut(e.id);
+            if e.is_prefill {
+                r.advance_prefill(e.n_tokens);
+            } else {
+                r.advance_decode();
+            }
+        }
+        let done: Vec<RequestId> = batch
+            .entries
+            .iter()
+            .map(|e| e.id)
+            .filter(|&id| state.requests[&id].is_finished())
+            .collect();
+        for id in done {
+            state.finish(id);
+        }
+    }
+
+    #[test]
+    fn online_prefill_then_decode_roundtrip() {
+        let mut st = mk_state(256);
+        let mut s = sched(SchedulerConfig::default());
+        st.enqueue(online(1, 100, 2));
+        let b = s.schedule(&mut st, 0.0);
+        assert_eq!(b.len(), 1);
+        assert!(b.entries[0].is_prefill);
+        assert_eq!(b.entries[0].n_tokens, 100, "whole prompt fits the chunk budget");
+        apply(&mut st, &b);
+        assert_eq!(st.requests[&1].phase, Phase::Decode);
+        let b2 = s.schedule(&mut st, 0.1);
+        assert_eq!(b2.len(), 1);
+        assert!(!b2.entries[0].is_prefill);
+        apply(&mut st, &b2);
+        let b3 = s.schedule(&mut st, 0.2);
+        apply(&mut st, &b3);
+        assert!(st.finished.iter().any(|r| r.id == 1));
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn chunked_prefill_splits_long_prompt() {
+        let mut st = mk_state(1024);
+        let mut s = sched(SchedulerConfig {
+            chunk_tokens: 128,
+            latency_budget_ms: None,
+            ..SchedulerConfig::default()
+        });
+        st.enqueue(online(1, 300, 1));
+        let b1 = s.schedule(&mut st, 0.0);
+        assert_eq!(b1.entries[0].n_tokens, 128);
+        apply(&mut st, &b1);
+        let b2 = s.schedule(&mut st, 0.1);
+        assert_eq!(b2.entries[0].n_tokens, 128);
+        apply(&mut st, &b2);
+        let b3 = s.schedule(&mut st, 0.2);
+        assert_eq!(b3.entries[0].n_tokens, 44);
+        apply(&mut st, &b3);
+        assert_eq!(st.requests[&1].phase, Phase::Decode);
+    }
+
+    #[test]
+    fn offline_fills_residual_budget_only() {
+        let mut st = mk_state(1024);
+        // Tight latency budget: online prefill eats most of it.
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: Some(12.0),
+            chunk_tokens: 4096,
+            ..SchedulerConfig::default()
+        });
+        st.enqueue(online(1, 200, 4));
+        st.enqueue(offline(10, 400, 4));
+        let b = s.schedule(&mut st, 0.0);
+        let online_tokens: usize =
+            b.entries.iter().filter(|e| e.class.is_online()).map(|e| e.n_tokens).sum();
+        let offline_tokens: usize =
+            b.entries.iter().filter(|e| !e.class.is_online()).map(|e| e.n_tokens).sum();
+        assert_eq!(online_tokens, 200, "online gets its full prompt first");
+        // Offline only gets what the residual latency allows — and the
+        // predicted total must respect the budget.
+        assert!(s.last_stats.predicted_ms <= 12.0 + 1e-6, "{}", s.last_stats.predicted_ms);
+        assert!(offline_tokens < 400, "offline chunk must be throttled");
+    }
+
+    #[test]
+    fn slo_unaware_mode_fills_chunk_budget() {
+        let mut st = mk_state(1024);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: None, // Sarathi++
+            chunk_tokens: 512,
+            ..SchedulerConfig::default()
+        });
+        st.enqueue(online(1, 200, 4));
+        st.enqueue(offline(10, 400, 4));
+        let b = s.schedule(&mut st, 0.0);
+        assert_eq!(b.total_tokens(), 512, "chunk budget fully used when SLO-unaware");
+    }
+
+    #[test]
+    fn disable_offline_is_pure_online() {
+        let mut st = mk_state(1024);
+        let mut s = sched(SchedulerConfig { enable_offline: false, ..Default::default() });
+        st.enqueue(online(1, 50, 2));
+        st.enqueue(offline(10, 50, 2));
+        let b = s.schedule(&mut st, 0.0);
+        assert!(b.entries.iter().all(|e| e.class.is_online()));
+        assert_eq!(st.offline_queue.len(), 1);
+    }
+
+    #[test]
+    fn online_admission_preempts_offline_for_memory() {
+        // 16 blocks * 16 tokens = 256 tokens of KV. Offline fills most.
+        let mut st = mk_state(16);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: None,
+            chunk_tokens: 512,
+            watermark_blocks: 0,
+            ..SchedulerConfig::default()
+        });
+        st.enqueue(offline(10, 200, 64));
+        let b = s.schedule(&mut st, 0.0);
+        apply(&mut st, &b);
+        assert_eq!(st.running_offline, vec![10]);
+        // Online request needs 200 tokens; only ~56 free -> preemption.
+        st.enqueue(online(1, 200, 2));
+        let b2 = s.schedule(&mut st, 0.1);
+        assert!(b2.entries.iter().any(|e| e.id == 1 && e.is_prefill));
+        assert_eq!(s.last_stats.preemptions, 1);
+        assert_eq!(st.preempted_offline, vec![10]);
+        assert_eq!(st.requests[&10].prefilled, 200, "preserve keeps progress");
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempted_offline_resumes_when_memory_frees() {
+        let mut st = mk_state(16);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: None,
+            chunk_tokens: 512,
+            watermark_blocks: 0,
+            ..SchedulerConfig::default()
+        });
+        st.enqueue(offline(10, 200, 4));
+        let b = s.schedule(&mut st, 0.0);
+        apply(&mut st, &b);
+        st.enqueue(online(1, 200, 1));
+        let b = s.schedule(&mut st, 0.1);
+        apply(&mut st, &b); // preempts 10, prefills 1
+        let b = s.schedule(&mut st, 0.2);
+        apply(&mut st, &b); // 1 decodes once -> finished
+        assert!(st.finished.iter().any(|r| r.id == 1));
+        // Next iteration: 10 resumes with preserved progress.
+        let b = s.schedule(&mut st, 0.3);
+        assert!(st.running_offline.contains(&10));
+        assert!(st.preempted_offline.is_empty());
+        assert!(b.entries.iter().any(|e| e.id == 10));
+        assert_eq!(st.requests[&10].prefilled, 200);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn discard_preemption_requeues_and_recomputes() {
+        let mut st = mk_state(16);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: None,
+            chunk_tokens: 512,
+            watermark_blocks: 0,
+            preemption: PreemptionMode::Discard,
+            ..SchedulerConfig::default()
+        });
+        st.enqueue(offline(10, 200, 4));
+        let b = s.schedule(&mut st, 0.0);
+        apply(&mut st, &b);
+        st.enqueue(online(1, 200, 2));
+        let b = s.schedule(&mut st, 0.1);
+        apply(&mut st, &b);
+        assert!(st.preempted_offline.is_empty());
+        assert_eq!(st.offline_queue.len(), 1, "discarded -> requeued");
+    }
+
+    #[test]
+    fn offline_qps_cap_limits_admissions() {
+        let mut st = mk_state(4096);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: None,
+            chunk_tokens: 1 << 20,
+            offline_qps_cap: Some(1.0), // 1 admission/s
+            ..SchedulerConfig::default()
+        });
+        for i in 0..10 {
+            st.enqueue(offline(10 + i, 32, 4));
+        }
+        let b = s.schedule(&mut st, 0.0);
+        let admissions = b.entries.iter().filter(|e| e.is_prefill).count();
+        assert_eq!(admissions, 1, "token bucket starts with 1 permit");
+        apply(&mut st, &b);
+        // 5 seconds later: ~5 more permits accumulated (burst-capped at 1).
+        let b2 = s.schedule(&mut st, 5.0);
+        let admissions2 = b2.entries.iter().filter(|e| e.is_prefill).count();
+        assert_eq!(admissions2, 1, "burst cap 1 -> one admission per call");
+    }
+
+    #[test]
+    fn max_running_bounds_admissions() {
+        let mut st = mk_state(4096);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: None,
+            chunk_tokens: 1 << 20,
+            max_running: 3,
+            ..SchedulerConfig::default()
+        });
+        for i in 0..10 {
+            st.enqueue(online(i, 16, 4));
+        }
+        let b = s.schedule(&mut st, 0.0);
+        assert_eq!(b.len(), 3);
+        assert_eq!(st.num_running(), 3);
+    }
+
+    #[test]
+    fn latency_budget_respected_by_prediction() {
+        let mut st = mk_state(4096);
+        let budget = 25.0;
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: Some(budget),
+            chunk_tokens: 1 << 20,
+            ..SchedulerConfig::default()
+        });
+        for i in 0..50 {
+            st.enqueue(offline(i, 512, 8));
+        }
+        let b = s.schedule(&mut st, 0.0);
+        assert!(!b.is_empty());
+        assert!(
+            s.last_stats.predicted_ms <= budget + 1e-6,
+            "predicted {} > budget {budget}",
+            s.last_stats.predicted_ms
+        );
+    }
+
+    #[test]
+    fn rate_limiter_basic() {
+        let mut rl = RateLimiter::new(2.0);
+        assert!(rl.admit(0.0));
+        assert!(!rl.admit(0.0));
+        assert!(rl.admit(0.5)); // 0.5s * 2/s = 1 token
+        assert!(!rl.admit(0.5));
+        assert!(rl.admit(10.0));
+    }
+}

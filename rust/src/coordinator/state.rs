@@ -1,0 +1,217 @@
+//! Shared engine state the scheduler operates on: queues, running sets,
+//! preempted set, the block manager, and the request table.
+
+use super::block_manager::{chain_hashes, BlockManager};
+use super::queues::{OfflinePolicy, OfflineQueue, OnlineQueue};
+use super::request::{Class, Phase, Request, RequestId};
+use std::collections::HashMap;
+
+/// All mutable serving state of one engine instance.
+pub struct EngineState {
+    /// Every request known to the instance (waiting, running, preempted).
+    /// Finished requests are moved to `finished`.
+    pub requests: HashMap<RequestId, Request>,
+    pub online_queue: OnlineQueue,
+    pub offline_queue: OfflineQueue,
+    /// Running online requests in admission order.
+    pub running_online: Vec<RequestId>,
+    /// Running offline requests — kept in their scheduling (DFS) order, per
+    /// Alg. 3 ("running requests keep their original DFS order").
+    pub running_offline: Vec<RequestId>,
+    /// Offline requests preempted with preserved state, newest last.
+    /// Re-admitted (LIFO) before fresh queue requests.
+    pub preempted_offline: Vec<RequestId>,
+    pub blocks: BlockManager,
+    pub finished: Vec<Request>,
+    /// Keep finished request bodies (tests want them; long sims can turn
+    /// this off to bound memory).
+    pub keep_finished: bool,
+    /// Honor prefix-cache hits as skipped prefill work. True for the
+    /// simulation backend; the real PJRT backend keeps a *per-slot* KV
+    /// layout where cross-request row reuse is physically impossible, so
+    /// it runs with this off (block sharing then degrades to plain
+    /// accounting with empty hash chains).
+    pub prefix_caching: bool,
+}
+
+impl EngineState {
+    pub fn new(policy: OfflinePolicy, num_blocks: usize, block_size: usize, seed: u64) -> Self {
+        EngineState {
+            requests: HashMap::new(),
+            online_queue: OnlineQueue::new(),
+            offline_queue: OfflineQueue::new(policy, seed),
+            running_online: Vec::new(),
+            running_offline: Vec::new(),
+            preempted_offline: Vec::new(),
+            blocks: BlockManager::new(num_blocks, block_size),
+            finished: Vec::new(),
+            keep_finished: true,
+            prefix_caching: true,
+        }
+    }
+
+    /// Admit an arriving request into its class queue.
+    pub fn enqueue(&mut self, req: Request) {
+        match req.class {
+            Class::Online => self.online_queue.push(req),
+            Class::Offline => self.offline_queue.push(req),
+        }
+    }
+
+    pub fn req(&self, id: RequestId) -> &Request {
+        &self.requests[&id]
+    }
+
+    pub fn req_mut(&mut self, id: RequestId) -> &mut Request {
+        self.requests.get_mut(&id).expect("request exists")
+    }
+
+    /// Total requests currently running (both classes).
+    pub fn num_running(&self) -> usize {
+        self.running_online.len() + self.running_offline.len()
+    }
+
+    /// KV hash chain for a request's prompt (prefix-cache key). Empty
+    /// when prefix caching is disabled (real backend).
+    pub fn prompt_chain(&self, req: &Request) -> Vec<u64> {
+        if !self.prefix_caching {
+            return Vec::new();
+        }
+        chain_hashes(&req.prompt, self.blocks.block_size())
+    }
+
+    /// Move a running request to `finished`, releasing its blocks.
+    pub fn finish(&mut self, id: RequestId) {
+        self.blocks.release(id);
+        self.running_online.retain(|&x| x != id);
+        self.running_offline.retain(|&x| x != id);
+        if let Some(mut r) = self.requests.remove(&id) {
+            r.phase = Phase::Finished;
+            if self.keep_finished {
+                self.finished.push(r);
+            }
+        }
+    }
+
+    /// Preempt one running offline request (the most recently admitted,
+    /// vLLM-style LIFO so earlier requests keep progress), releasing its
+    /// blocks. Returns the id, or None if nothing can be preempted.
+    pub fn preempt_last_offline(&mut self, discard: bool) -> Option<RequestId> {
+        let id = self.running_offline.pop()?;
+        self.blocks.release(id);
+        let req = self.requests.get_mut(&id).expect("running request exists");
+        if discard {
+            req.preempt_discard();
+            // discarded state returns to the offline queue for rescheduling
+            let req = self.requests.remove(&id).unwrap();
+            self.offline_queue.push(req);
+        } else {
+            req.preempt_preserve();
+            self.preempted_offline.push(id);
+        }
+        Some(id)
+    }
+
+    /// Sanity invariant used by tests: every running id has a request and
+    /// an allocation; no id is in two places at once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for &id in self.running_online.iter().chain(&self.running_offline) {
+            let r = self
+                .requests
+                .get(&id)
+                .ok_or_else(|| format!("running {id} missing from table"))?;
+            if !self.blocks.is_allocated(id) {
+                return Err(format!("running {id} has no blocks"));
+            }
+            if matches!(r.phase, Phase::Waiting | Phase::Finished | Phase::Preempted) {
+                return Err(format!("running {id} in phase {:?}", r.phase));
+            }
+        }
+        for &id in &self.preempted_offline {
+            if self.blocks.is_allocated(id) {
+                return Err(format!("preempted {id} still holds blocks"));
+            }
+            if self.running_offline.contains(&id) {
+                return Err(format!("{id} both running and preempted"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queues::OfflinePolicy;
+
+    fn state() -> EngineState {
+        EngineState::new(OfflinePolicy::Fcfs, 64, 16, 0)
+    }
+
+    #[test]
+    fn enqueue_routes_by_class() {
+        let mut s = state();
+        s.enqueue(Request::new(1, Class::Online, 0.0, 4, 4));
+        s.enqueue(Request::new(2, Class::Offline, 0.0, 4, 4));
+        assert_eq!(s.online_queue.len(), 1);
+        assert_eq!(s.offline_queue.len(), 1);
+    }
+
+    #[test]
+    fn finish_releases_everything() {
+        let mut s = state();
+        let mut r = Request::new(1, Class::Online, 0.0, 16, 2);
+        r.phase = Phase::Decode;
+        r.prefilled = 16;
+        s.blocks.allocate(1, 16, &[]).unwrap();
+        s.requests.insert(1, r);
+        s.running_online.push(1);
+        s.check_invariants().unwrap();
+        s.finish(1);
+        assert_eq!(s.num_running(), 0);
+        assert_eq!(s.blocks.used_blocks(), 0);
+        assert_eq!(s.finished.len(), 1);
+        assert_eq!(s.finished[0].phase, Phase::Finished);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempt_preserve_moves_to_preempted() {
+        let mut s = state();
+        let mut r = Request::new(5, Class::Offline, 0.0, 16, 4);
+        r.phase = Phase::Decode;
+        r.prefilled = 16;
+        r.generated = 2;
+        s.blocks.allocate(5, 18, &[]).unwrap();
+        s.requests.insert(5, r);
+        s.running_offline.push(5);
+        let got = s.preempt_last_offline(false);
+        assert_eq!(got, Some(5));
+        assert_eq!(s.preempted_offline, vec![5]);
+        assert_eq!(s.requests[&5].generated, 2, "state preserved");
+        assert_eq!(s.blocks.used_blocks(), 0);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempt_discard_requeues() {
+        let mut s = state();
+        let mut r = Request::new(5, Class::Offline, 0.0, 16, 4);
+        r.phase = Phase::Decode;
+        r.prefilled = 16;
+        r.generated = 2;
+        s.blocks.allocate(5, 18, &[]).unwrap();
+        s.requests.insert(5, r);
+        s.running_offline.push(5);
+        s.preempt_last_offline(true);
+        assert!(s.preempted_offline.is_empty());
+        assert_eq!(s.offline_queue.len(), 1, "discarded request requeued");
+        assert!(!s.requests.contains_key(&5));
+    }
+
+    #[test]
+    fn preempt_on_empty_is_none() {
+        let mut s = state();
+        assert_eq!(s.preempt_last_offline(false), None);
+    }
+}

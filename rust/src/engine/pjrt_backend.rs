@@ -1,0 +1,331 @@
+//! Real execution backend: runs scheduled batches on the AOT-compiled
+//! step function via PJRT (CPU). This is the path that proves the three
+//! layers compose — the Rust scheduler's decisions (chunk sizes, batch
+//! composition, preemption) drive actual transformer compute with real
+//! sampled tokens and measured latencies.
+//!
+//! Layout: the backend owns `nslots` fixed sequence slots mapped onto the
+//! artifact's batch dimension; the slotted KV caches travel between steps
+//! as XLA literals (decomposed tuples, no host reshaping). A scheduler
+//! batch may exceed one step's shape bucket (e.g. a 200-token prefill
+//! chunk with C=32 buckets); the backend transparently splits it into
+//! sub-steps and reports the summed wallclock.
+//!
+//! Invariants relied on (tested in python/tests/test_model.py):
+//! * padding rows/slots never perturb live logits,
+//! * garbage K/V written past a slot's live rows is overwritten before it
+//!   can be read — which requires `rows + C <= max_seq` for every slot,
+//!   enforced here by capping request length at `max_request_len()`.
+
+use super::ExecutionBackend;
+use crate::coordinator::batch::Batch;
+use crate::coordinator::request::RequestId;
+use crate::coordinator::state::EngineState;
+use crate::runtime::PjrtRuntime;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub struct PjrtBackend {
+    pub rt: PjrtRuntime,
+    nslots: usize,
+    /// Chunk buckets available at batch = nslots, ascending.
+    chunks: Vec<usize>,
+    slots: Vec<Option<RequestId>>,
+    slot_of: HashMap<RequestId, usize>,
+    /// KV rows written per live request (== tokens whose K/V are cached).
+    rows: HashMap<RequestId, usize>,
+    cache_k: xla::Literal,
+    cache_v: xla::Literal,
+    /// Total PJRT steps executed (observability).
+    pub steps: u64,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: PjrtRuntime) -> Result<PjrtBackend> {
+        let nslots =
+            rt.buckets().iter().map(|&(b, _)| b).max().ok_or_else(|| anyhow!("no buckets"))?;
+        let mut chunks: Vec<usize> =
+            rt.buckets().iter().filter(|&&(b, _)| b == nslots).map(|&(_, c)| c).collect();
+        chunks.sort();
+        if chunks.is_empty() {
+            bail!("no chunk buckets at batch {nslots}");
+        }
+        let (cache_k, cache_v) = rt.empty_caches(nslots);
+        Ok(PjrtBackend {
+            rt,
+            nslots,
+            chunks,
+            slots: vec![None; nslots],
+            slot_of: HashMap::new(),
+            rows: HashMap::new(),
+            cache_k,
+            cache_v,
+            steps: 0,
+        })
+    }
+
+    pub fn nslots(&self) -> usize {
+        self.nslots
+    }
+
+    /// Longest request (prompt + output) this backend can hold: padding
+    /// writes of up to `max_chunk` must never clamp into live rows.
+    pub fn max_request_len(&self) -> usize {
+        self.rt.dims.max_seq - self.chunks.last().unwrap()
+    }
+
+    /// Largest per-slot chunk the artifacts support (the scheduler's
+    /// `max_chunk_per_request` should be set to this).
+    pub fn max_chunk(&self) -> usize {
+        *self.chunks.last().unwrap()
+    }
+
+    fn free_slot(&mut self, id: RequestId) {
+        if let Some(slot) = self.slot_of.remove(&id) {
+            self.slots[slot] = None;
+        }
+        self.rows.remove(&id);
+    }
+
+    /// Drop slots whose request is no longer running (finished handled via
+    /// on_removed; this catches scheduler-side preemption).
+    fn reconcile(&mut self, state: &EngineState) {
+        let stale: Vec<RequestId> = self
+            .slot_of
+            .keys()
+            .copied()
+            .filter(|id| {
+                !state.running_online.contains(id) && !state.running_offline.contains(id)
+            })
+            .collect();
+        for id in stale {
+            self.free_slot(id);
+        }
+    }
+
+    fn assign_slot(&mut self, id: RequestId) -> Result<usize> {
+        if let Some(&s) = self.slot_of.get(&id) {
+            return Ok(s);
+        }
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow!("no free slot for request {id} (max_running too high?)"))?;
+        self.slots[slot] = Some(id);
+        self.slot_of.insert(id, slot);
+        self.rows.insert(id, 0);
+        Ok(slot)
+    }
+
+    /// Smallest chunk bucket >= `need` (or the largest available).
+    fn pick_chunk(&self, need: usize) -> usize {
+        for &c in &self.chunks {
+            if c >= need {
+                return c;
+            }
+        }
+        *self.chunks.last().unwrap()
+    }
+
+    /// Profile this hardware: execute a sweep of batch compositions
+    /// through the real step function and record (features, measured ms)
+    /// samples — the paper's §4.2 profiling phase, against PJRT wallclock.
+    /// Runs before serving; uses throwaway caches.
+    pub fn profile(&mut self, reps: usize, seed: u64) -> Result<Vec<crate::coordinator::predictor::Sample>> {
+        use crate::coordinator::batch::Features;
+        use crate::coordinator::predictor::Sample;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let b = self.nslots;
+        let (ck, cv) = self.rt.empty_caches(b);
+        let mut samples = Vec::new();
+        let chunks = self.chunks.clone();
+        for &c in &chunks {
+            for active in 1..=b {
+                // `active` slots doing prefill chunks of c; the rest idle.
+                let mut f = Features::default();
+                for _ in 0..active {
+                    f.add_prefill(c);
+                }
+                let tokens = vec![1i32; b * c];
+                let pos = vec![0i32; b];
+                let mut best = f64::INFINITY;
+                for _ in 0..reps.max(1) {
+                    let t0 = Instant::now();
+                    let _ = self.rt.step(b, c, &tokens, &pos, &ck, &cv)?;
+                    best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                samples.push(Sample { features: f, latency_ms: best });
+                // decode-style composition at the same bucket: mixed
+                let mut fd = Features::default();
+                for i in 0..active {
+                    if i % 2 == 0 {
+                        fd.add_decode();
+                    } else {
+                        fd.add_prefill(c);
+                    }
+                }
+                let t0 = Instant::now();
+                let _ = self.rt.step(b, c, &tokens, &pos, &ck, &cv)?;
+                samples.push(Sample {
+                    features: fd,
+                    latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+                let _ = &mut rng;
+            }
+        }
+        Ok(samples)
+    }
+}
+
+/// Per-entry work left within one `execute` call.
+struct Pending {
+    id: RequestId,
+    slot: usize,
+    is_prefill: bool,
+    remaining: usize,
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn execute(&mut self, batch: &Batch, state: &mut EngineState) -> Result<f64> {
+        let t0 = Instant::now();
+        self.reconcile(state);
+
+        let mut pending = Vec::with_capacity(batch.len());
+        for e in &batch.entries {
+            let req = state
+                .requests
+                .get(&e.id)
+                .ok_or_else(|| anyhow!("batch references unknown request {}", e.id))?;
+            if req.prompt.is_empty() {
+                bail!("real backend needs prompt tokens for request {}", e.id);
+            }
+            if req.total_len() > self.max_request_len() {
+                bail!(
+                    "request {} total len {} exceeds engine cap {}",
+                    e.id,
+                    req.total_len(),
+                    self.max_request_len()
+                );
+            }
+            let slot = self.assign_slot(e.id)?;
+            pending.push(Pending {
+                id: e.id,
+                slot,
+                is_prefill: e.is_prefill,
+                remaining: if e.is_prefill { e.n_tokens } else { 1 },
+            });
+        }
+
+        // Sub-step loop: consume up to one chunk bucket per slot per step.
+        while pending.iter().any(|p| p.remaining > 0) {
+            let need =
+                pending.iter().map(|p| p.remaining.min(self.max_chunk())).max().unwrap();
+            let c = self.pick_chunk(need);
+            let b = self.nslots;
+            let mut tokens = vec![0i32; b * c];
+            let mut pos_base = vec![0i32; b];
+            // Inactive slots: point padding writes at their current row
+            // cursor (overwritten by their own next real write).
+            for (slot, occupant) in self.slots.iter().enumerate() {
+                if let Some(id) = occupant {
+                    pos_base[slot] = *self.rows.get(id).unwrap_or(&0) as i32;
+                }
+            }
+            // sampling plan: (request, slot, logits row) per emitted token
+            let mut samples: Vec<(RequestId, usize, usize)> = Vec::new();
+            for p in pending.iter_mut().filter(|p| p.remaining > 0) {
+                let req = &state.requests[&p.id];
+                let rows = *self.rows.get(&p.id).unwrap();
+                let take = p.remaining.min(c);
+                pos_base[p.slot] = rows as i32;
+                if p.is_prefill {
+                    // Next `take` prompt tokens. The scheduler guarantees
+                    // rows..rows+take stays within the prompt.
+                    for k in 0..take {
+                        tokens[p.slot * c + k] = req.prompt[rows + k] as i32;
+                    }
+                    if rows + take == req.prompt_len {
+                        // prompt completes: sample the first output token
+                        samples.push((p.id, p.slot, take - 1));
+                    }
+                } else {
+                    let last = *req
+                        .output_tokens
+                        .last()
+                        .ok_or_else(|| anyhow!("decode before first token for {}", p.id))?;
+                    tokens[p.slot * c] = last as i32;
+                    samples.push((p.id, p.slot, 0));
+                }
+                self.rows.insert(p.id, rows + take);
+                p.remaining -= take;
+            }
+
+            let out = self.rt.step(b, c, &tokens, &pos_base, &self.cache_k, &self.cache_v)?;
+            for &(id, slot, row) in &samples {
+                let tok = self.rt.argmax(&out, slot, row);
+                state.req_mut(id).output_tokens.push(tok);
+            }
+            self.cache_k = out.cache_k;
+            self.cache_v = out.cache_v;
+            self.steps += 1;
+        }
+
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn on_removed(&mut self, id: RequestId) {
+        self.free_slot(id);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}
+
+/// Build a fully-wired real engine over the AOT artifacts with a scheduler
+/// configuration matched to the backend's physical limits (slot count,
+/// chunk buckets, discard-preemption, no prefix caching).
+///
+/// When `latency_budget_ms` is set, the latency predictor is fitted on a
+/// measured PJRT profiling sweep so the budget is meaningful in real
+/// milliseconds; otherwise a generic seed predictor is used (budgets are
+/// disabled anyway).
+pub fn build_real_engine(
+    artifacts_dir: &str,
+    latency_budget_ms: Option<f64>,
+    policy: crate::coordinator::queues::OfflinePolicy,
+    seed: u64,
+) -> Result<crate::engine::Engine<PjrtBackend>> {
+    use crate::coordinator::predictor::LatencyPredictor;
+    use crate::coordinator::scheduler::{HybridScheduler, PreemptionMode, SchedulerConfig};
+
+    let rt = PjrtRuntime::load(artifacts_dir)?;
+    let mut backend = PjrtBackend::new(rt)?;
+    let predictor = if latency_budget_ms.is_some() {
+        let samples = backend.profile(2, seed ^ 0x9e37)?;
+        LatencyPredictor::fit(&samples)
+    } else {
+        LatencyPredictor::default_seed()
+    };
+    let block_size = 16;
+    // KV pool mirrors the artifacts' physical capacity: nslots sequences
+    // of up to max_seq tokens.
+    let num_blocks = backend.nslots() * backend.rt.dims.max_seq / block_size;
+    let mut state =
+        crate::coordinator::state::EngineState::new(policy, num_blocks, block_size, seed);
+    state.prefix_caching = false; // per-slot layout: no physical row sharing
+    let cfg = SchedulerConfig {
+        latency_budget_ms,
+        chunk_tokens: backend.nslots() * backend.max_chunk() / 2,
+        max_chunk_per_request: backend.max_chunk(),
+        max_running: backend.nslots(),
+        preemption: PreemptionMode::Discard, // preserve needs KV swap; see DESIGN.md
+        enable_offline: true,
+        offline_qps_cap: None,
+        watermark_blocks: 2,
+    };
+    let sched = HybridScheduler::new(cfg, predictor);
+    Ok(crate::engine::Engine::new(sched, state, backend))
+}

@@ -1,0 +1,38 @@
+//! # HyGen — elastic online/offline LLM request co-location
+//!
+//! Reproduction of *HyGen: Efficient LLM Serving via Elastic Online-Offline
+//! Request Co-location* (Sun, Wang, Lai; cs.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: dual-queue
+//!   request management, the SLO-aware two-phase scheduler, the linear-
+//!   regression latency predictor, the SLO-aware profiler, prefix-sharing-
+//!   maximizing offline scheduling with a fairness extension, priority
+//!   preemption, and a paged KV block manager.
+//! * **Layer 2** — a JAX step function (mixed chunked-prefill/decode batch
+//!   over a slotted KV cache) AOT-lowered to HLO text at build time
+//!   (`python/compile/`); loaded and executed here via the PJRT C API
+//!   ([`runtime`]). Python never runs on the request path.
+//! * **Layer 1** — a Pallas online-softmax attention kernel inside that
+//!   step function (`python/compile/kernels/`).
+//!
+//! Two interchangeable execution backends drive the *same* scheduler:
+//! [`engine::pjrt_backend::PjrtBackend`] executes the real AOT artifacts on
+//! the PJRT CPU client, and [`sim::SimBackend`] is a calibrated discrete-
+//! event cost model used to regenerate the paper's evaluation at
+//! A100/A40/A5000 scale (see DESIGN.md for the substitution table).
+//!
+//! Entry points: the `hygen` binary (`serve`, `run-trace`, `figures`,
+//! `profile`, `train-predictor` subcommands), the `examples/`, and the
+//! bench targets under `rust/benches/`.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;

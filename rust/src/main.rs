@@ -1,0 +1,262 @@
+//! `hygen` — the launcher.
+//!
+//! Subcommands:
+//! * `serve`            — start the real HTTP serving instance (PJRT engine)
+//! * `run-trace`        — replay a synthetic workload in simulation, print the report
+//! * `figures <id|all>` — regenerate the paper's evaluation figures (results/*.csv)
+//! * `profile`          — SLO-aware profiler: derive the latency budget for an SLO
+//! * `train-predictor`  — profile a cost model and fit/save the LR latency predictor
+//! * `gen-trace`        — emit a synthetic trace CSV (azure | mooncake | datasets)
+
+use hygen::baselines::{SimSetup, System};
+use hygen::config::ServeConfig;
+use hygen::coordinator::predictor::LatencyPredictor;
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::coordinator::request::{Slo, SloMetric};
+use hygen::engine::pjrt_backend::build_real_engine;
+use hygen::experiments::{figures, hygen_profiled, online_baseline, Ctx};
+use hygen::server::Server;
+use hygen::sim::costmodel::CostModel;
+use hygen::sim::profile_and_fit;
+use hygen::util::cli::Args;
+use hygen::workload::azure::{self, AzureTraceConfig};
+use hygen::workload::datasets::{self, Dataset};
+use hygen::workload::mooncake::{self, MooncakeTraceConfig};
+use hygen::workload::trace::Trace;
+
+const USAGE: &str = "\
+hygen — elastic online/offline LLM request co-location (HyGen reproduction)
+
+USAGE:
+  hygen serve        [--config serve.json] [--bind ADDR] [--budget-ms N]
+                     [--policy fcfs|psm|psm-fair] [--artifacts DIR]
+  hygen run-trace    [--system hygen|hygen-star|sarathi|sarathi++|sarathi-offline]
+                     [--model NAME] [--online-qps N] [--offline-dataset arxiv|cnn|mmlu]
+                     [--offline-n N] [--budget-ms N] [--policy P] [--duration S]
+                     [--seed N]
+  hygen figures      <1|3|4|...|17|all> [--out DIR] [--quick] [--seed N]
+  hygen profile      [--metric mean_tbt|p99_tbt|mean_ttft|p99_ttft]
+                     [--tolerance R] [--model NAME] [--online-qps N] [--quick]
+  hygen train-predictor [--model NAME] [--samples N] [--out FILE]
+  hygen gen-trace    [--kind azure|mooncake|arxiv|cnn|mmlu] [--out FILE]
+                     [--qps N] [--duration S] [--n N] [--seed N]
+
+MODELS: a100-llama2-7b (default), a40-qwen-14b, a40x4-yi-34b-tp2pp2,
+        a100-mistral-7b, a5000-sheared-2.7b
+";
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("run-trace") => cmd_run_trace(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("train-predictor") => cmd_train_predictor(&args),
+        Some("gen-trace") => cmd_gen_trace(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_from(args: &Args) -> Ctx {
+    let mut ctx = if args.get_bool("quick") { Ctx::quick() } else { Ctx::default() };
+    ctx.seed = args.get_u64("seed", ctx.seed);
+    ctx.out_dir = args.get_or("out", &ctx.out_dir).to_string();
+    ctx
+}
+
+fn parse_model(args: &Args) -> anyhow::Result<CostModel> {
+    let name = args.get_or("model", "a100-llama2-7b");
+    CostModel::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'; see --help"))
+}
+
+fn parse_policy(args: &Args) -> anyhow::Result<OfflinePolicy> {
+    let name = args.get_or("policy", "psm");
+    let u = args.get_f64("utility-ratio", 0.9);
+    OfflinePolicy::parse(name, u).ok_or_else(|| anyhow::anyhow!("unknown policy '{name}'"))
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::load(path)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(b) = args.get("bind") {
+        cfg.bind = b.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    if args.get("budget-ms").is_some() {
+        cfg.latency_budget_ms = Some(args.get_f64("budget-ms", 50.0));
+    }
+    if args.get("policy").is_some() {
+        cfg.policy = parse_policy(args)?;
+    }
+    println!("loading artifacts from {} ...", cfg.artifacts_dir);
+    let server = {
+        let cfg = cfg.clone();
+        Server::start(
+            &cfg.bind.clone(),
+            move || {
+                let engine = build_real_engine(
+                    &cfg.artifacts_dir,
+                    cfg.latency_budget_ms,
+                    cfg.policy,
+                    cfg.seed,
+                )?;
+                println!(
+                    "engine ready: {} slots, max chunk {}, max request len {}",
+                    engine.backend.nslots(),
+                    engine.backend.max_chunk(),
+                    engine.backend.max_request_len()
+                );
+                Ok(engine)
+            },
+            cfg.http_workers,
+        )?
+    };
+    println!("hygen serving on http://{}  (POST /v1/completions, GET /metrics)", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_run_trace(args: &Args) -> anyhow::Result<()> {
+    let model = parse_model(args)?;
+    let policy = parse_policy(args)?;
+    let seed = args.get_u64("seed", 0);
+    let duration = args.get_f64("duration", 300.0);
+    let online = azure::generate(
+        &AzureTraceConfig {
+            duration_s: duration,
+            mean_qps: args.get_f64("online-qps", 2.0),
+            ..Default::default()
+        },
+        seed,
+    );
+    let dataset = Dataset::parse(args.get_or("offline-dataset", "arxiv"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let offline = datasets::generate(dataset, args.get_usize("offline-n", 1500), seed);
+    let workload = online.merged(offline);
+
+    let system = match args.get_or("system", "hygen") {
+        "sarathi" => System::Sarathi,
+        "sarathi++" | "sarathi-pp" => System::SarathiPlusPlus,
+        "sarathi-offline" => System::SarathiOffline { chunk_tokens: 1024 },
+        "hygen-star" => System::HyGenStar { offline_qps: args.get_f64("offline-qps-cap", 1.0) },
+        "hygen" => System::HyGen { latency_budget_ms: args.get_f64("budget-ms", 40.0) },
+        other => anyhow::bail!("unknown system '{other}'"),
+    };
+    let setup = SimSetup::new(model).with_policy(policy).with_seed(seed);
+    println!("running {} on {} ({} events) ...", system.name(), setup.model.name, workload.len());
+    let r = setup.run(system, &workload, duration * 1.5)?;
+    println!("{}", r.report.to_json().to_pretty());
+    println!(
+        "iterations={} sched_overhead_total={:?} ({:.1} µs/iter)",
+        r.iterations,
+        r.sched_overhead,
+        r.sched_overhead.as_secs_f64() * 1e6 / r.iterations.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let ctx = ctx_from(args);
+    figures::run(&ctx, which)
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let model = parse_model(args)?;
+    let metric = SloMetric::parse(args.get_or("metric", "p99_tbt"))
+        .ok_or_else(|| anyhow::anyhow!("bad metric"))?;
+    let tol = args.get_f64("tolerance", 0.1);
+    let setup = SimSetup::new(model).with_seed(ctx.seed);
+    let online = azure::generate(
+        &AzureTraceConfig {
+            duration_s: ctx.trace_s,
+            mean_qps: args.get_f64("online-qps", 2.0),
+            ..Default::default()
+        },
+        ctx.seed,
+    );
+    let offline = datasets::generate(Dataset::ArxivSummarization, 2000, ctx.seed);
+    let base = online_baseline(&setup, &online, &ctx)?;
+    let slo = Slo::from_tolerance(metric, base.metric(metric), tol);
+    println!(
+        "baseline {} = {:.2} ms; SLO limit = {:.2} ms (tolerance {:.0}%)",
+        metric.name(),
+        base.metric(metric),
+        slo.limit_ms,
+        tol * 100.0
+    );
+    let workload = online.merged(offline);
+    let (prof, report) = hygen_profiled(&setup, &workload, &slo, &ctx)?;
+    println!("profiled latency budget: {:.2} ms", prof.budget_ms);
+    println!("achieved {} = {:.2} ms; offline tps = {:.1}", metric.name(), report.metric(metric), report.offline_tps);
+    println!("trials:");
+    for (b, m, tps) in &prof.trials {
+        println!("  budget {b:>8.2} ms -> {} {m:>8.2} ms, offline {tps:>8.1} tok/s", metric.name());
+    }
+    Ok(())
+}
+
+fn cmd_train_predictor(args: &Args) -> anyhow::Result<()> {
+    let model = parse_model(args)?;
+    let n = args.get_usize("samples", 80_000);
+    let t0 = std::time::Instant::now();
+    let (predictor, _samples, mape) = profile_and_fit(&model, args.get_u64("seed", 0), n);
+    println!(
+        "profiled {} with {} samples in {:?}; held-out MAPE {:.2}%",
+        model.name,
+        n,
+        t0.elapsed(),
+        mape
+    );
+    let out = args.get_or("out", "predictor.json");
+    predictor.save(out)?;
+    println!("saved {out}: coef {:?}", predictor.coef);
+    let _ = LatencyPredictor::load(out)?;
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
+    let seed = args.get_u64("seed", 0);
+    let duration = args.get_f64("duration", 3600.0);
+    let kind = args.get_or("kind", "azure");
+    let trace: Trace = match kind {
+        "azure" => azure::generate(
+            &AzureTraceConfig {
+                duration_s: duration,
+                mean_qps: args.get_f64("qps", 2.0),
+                ..Default::default()
+            },
+            seed,
+        ),
+        "mooncake" => mooncake::generate(
+            &MooncakeTraceConfig {
+                duration_s: duration,
+                mean_qps: args.get_f64("qps", 1.2),
+                ..Default::default()
+            },
+            seed,
+        ),
+        other => {
+            let d = Dataset::parse(other).ok_or_else(|| anyhow::anyhow!("unknown kind"))?;
+            datasets::generate(d, args.get_usize("n", 1000), seed)
+        }
+    };
+    let out = args.get_or("out", "trace.csv");
+    trace.save(out)?;
+    println!("wrote {} events to {out} (mean qps {:.2})", trace.len(), trace.mean_qps());
+    Ok(())
+}

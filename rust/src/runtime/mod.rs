@@ -1,0 +1,244 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `params.bin` + `manifest.json`, produced once by `make artifacts`) and
+//! executes the Layer-2 step function on the PJRT CPU client via the `xla`
+//! crate. Python never runs here — this is the request path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).
+
+pub mod tokenizer;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Model dimensions from `manifest.json` (must match the AOT'd weights).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub num_params: usize,
+}
+
+/// One compiled (batch-slots, chunk-tokens) shape bucket.
+struct Bucket {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The loaded runtime: PJRT client + per-bucket executables + weights.
+pub struct PjrtRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub dims: ModelDims,
+    params: xla::Literal,
+    buckets: HashMap<(usize, usize), Bucket>,
+    bucket_keys: Vec<(usize, usize)>,
+}
+
+/// Output of one step execution.
+pub struct StepOutput {
+    /// Row-major logits `[B, C, V]`.
+    pub logits: Vec<f32>,
+    pub b: usize,
+    pub c: usize,
+    /// Updated caches, to be fed to the next step.
+    pub cache_k: xla::Literal,
+    pub cache_v: xla::Literal,
+}
+
+impl PjrtRuntime {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// on a fresh PJRT CPU client.
+    pub fn load(dir: &str) -> Result<PjrtRuntime> {
+        let dir = Path::new(dir);
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let manifest = Json::parse(&manifest_text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let m = manifest.get("model");
+        let geti = |k: &str| -> Result<usize> {
+            m.get(k)
+                .as_u64()
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("manifest model.{k} missing"))
+        };
+        let dims = ModelDims {
+            vocab: geti("vocab")?,
+            d_model: geti("d_model")?,
+            n_heads: geti("n_heads")?,
+            head_dim: geti("head_dim")?,
+            n_layers: geti("n_layers")?,
+            d_ff: geti("d_ff")?,
+            max_seq: geti("max_seq")?,
+            num_params: geti("num_params")?,
+        };
+
+        let params_bytes = std::fs::read(dir.join("params.bin"))
+            .with_context(|| "reading params.bin")?;
+        if params_bytes.len() != dims.num_params * 4 {
+            bail!(
+                "params.bin has {} bytes, manifest says {} f32",
+                params_bytes.len(),
+                dims.num_params
+            );
+        }
+        let params_f32: Vec<f32> = params_bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let params = xla::Literal::vec1(&params_f32);
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut buckets = HashMap::new();
+        let mut bucket_keys = Vec::new();
+        let arts = manifest
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest.artifacts missing"))?;
+        for a in arts {
+            let b = a.get("batch").as_u64().ok_or_else(|| anyhow!("artifact.batch"))? as usize;
+            let c = a.get("chunk").as_u64().ok_or_else(|| anyhow!("artifact.chunk"))? as usize;
+            let file = a.get("file").as_str().ok_or_else(|| anyhow!("artifact.file"))?;
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {file}: {e:?}"))?;
+            buckets.insert((b, c), Bucket { exe });
+            bucket_keys.push((b, c));
+        }
+        if buckets.is_empty() {
+            bail!("no artifacts in manifest");
+        }
+        bucket_keys.sort();
+        Ok(PjrtRuntime { client, dims, params, buckets, bucket_keys })
+    }
+
+    /// Available (B, C) shape buckets, sorted.
+    pub fn buckets(&self) -> &[(usize, usize)] {
+        &self.bucket_keys
+    }
+
+    /// Smallest bucket with `batch >= b` and `chunk >= c` (padding target).
+    pub fn pick_bucket(&self, b: usize, c: usize) -> Option<(usize, usize)> {
+        self.bucket_keys
+            .iter()
+            .copied()
+            .filter(|&(bb, cc)| bb >= b && cc >= c)
+            .min_by_key(|&(bb, cc)| bb * 1_000_000 + cc)
+    }
+
+    /// Fresh zeroed KV caches for bucket batch size `b`.
+    pub fn empty_caches(&self, b: usize) -> (xla::Literal, xla::Literal) {
+        let d = &self.dims;
+        let n = d.n_layers * b * d.max_seq * d.n_heads * d.head_dim;
+        let zeros = vec![0f32; n];
+        let shape = [
+            d.n_layers as i64,
+            b as i64,
+            d.max_seq as i64,
+            d.n_heads as i64,
+            d.head_dim as i64,
+        ];
+        let k = xla::Literal::vec1(&zeros).reshape(&shape).expect("shape");
+        let v = xla::Literal::vec1(&zeros).reshape(&shape).expect("shape");
+        (k, v)
+    }
+
+    /// Execute one step on bucket `(b, c)`.
+    ///
+    /// * `tokens` — `b*c` i32 token ids, row-major (padding arbitrary).
+    /// * `pos_base` — `b` i32 first-new-token positions. Callers must keep
+    ///   every slot's live rows `<= max_seq - c` so padding writes cannot
+    ///   clamp into live data (see pjrt_backend).
+    pub fn step(
+        &self,
+        b: usize,
+        c: usize,
+        tokens: &[i32],
+        pos_base: &[i32],
+        cache_k: &xla::Literal,
+        cache_v: &xla::Literal,
+    ) -> Result<StepOutput> {
+        let bucket = self
+            .buckets
+            .get(&(b, c))
+            .ok_or_else(|| anyhow!("no artifact for bucket ({b},{c})"))?;
+        if tokens.len() != b * c || pos_base.len() != b {
+            bail!("bad step inputs: tokens {} pos {}", tokens.len(), pos_base.len());
+        }
+        for (slot, &p) in pos_base.iter().enumerate() {
+            if p < 0 || p as usize + c > self.dims.max_seq {
+                bail!("slot {slot}: pos_base {p} + chunk {c} exceeds max_seq {}", self.dims.max_seq);
+            }
+        }
+        let tokens_lit = xla::Literal::vec1(tokens).reshape(&[b as i64, c as i64])?;
+        let pos_lit = xla::Literal::vec1(pos_base);
+        let args: [&xla::Literal; 5] = [&self.params, &tokens_lit, &pos_lit, cache_k, cache_v];
+        let result = bucket.exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (logits_lit, ck, cv) = out.to_tuple3()?;
+        let logits = logits_lit.to_vec::<f32>()?;
+        debug_assert_eq!(logits.len(), b * c * self.dims.vocab);
+        Ok(StepOutput { logits, b, c, cache_k: ck, cache_v: cv })
+    }
+
+    /// Greedy argmax over the logits row `(slot, row)`.
+    pub fn argmax(&self, out: &StepOutput, slot: usize, row: usize) -> u32 {
+        let v = self.dims.vocab;
+        let base = (slot * out.c + row) * v;
+        let row = &out.logits[base..base + v];
+        let mut best = 0usize;
+        let mut bestv = f32::NEG_INFINITY;
+        for (i, &x) in row.iter().enumerate() {
+            if x > bestv {
+                bestv = x;
+                best = i;
+            }
+        }
+        best as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in rust/tests/integration.rs
+    // (they require `make artifacts` and a PJRT client). Here: pure logic.
+    use super::*;
+
+    #[test]
+    fn pick_bucket_logic() {
+        // Build the lookup structure without a client by testing the
+        // selection math on a bare sorted key list.
+        let keys = vec![(1, 1), (1, 32), (4, 8), (8, 1), (8, 32)];
+        let pick = |b: usize, c: usize| {
+            keys.iter()
+                .copied()
+                .filter(|&(bb, cc)| bb >= b && cc >= c)
+                .min_by_key(|&(bb, cc)| bb * 1_000_000 + cc)
+        };
+        assert_eq!(pick(1, 1), Some((1, 1)));
+        assert_eq!(pick(2, 4), Some((4, 8)));
+        assert_eq!(pick(5, 1), Some((8, 1)));
+        assert_eq!(pick(8, 9), Some((8, 32)));
+        assert_eq!(pick(9, 1), None);
+    }
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let err = match PjrtRuntime::load("/nonexistent-dir") {
+            Ok(_) => panic!("load must fail"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+    }
+}

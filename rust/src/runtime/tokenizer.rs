@@ -1,0 +1,44 @@
+//! Byte-level tokenizer for the tiny AOT model (vocab = 256 = raw bytes).
+//!
+//! Deliberately trivial: the reproduction's contribution is scheduling,
+//! not tokenization — byte-level keeps the Python and Rust sides exactly
+//! consistent with zero shared vocabulary files.
+
+/// Encode UTF-8 text as byte token ids.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+/// Decode byte token ids back to text (lossy on invalid UTF-8).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "Summarize: the quick brown fox.";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo → wörld";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn out_of_range_ids_masked() {
+        assert_eq!(decode(&[72, 105, 256 + 33]), "Hi!"); // 289 & 0xFF = '!'
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(encode(""), Vec::<u32>::new());
+        assert_eq!(decode(&[]), "");
+    }
+}

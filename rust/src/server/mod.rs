@@ -1,0 +1,382 @@
+//! HTTP serving front end: the leader process of a HyGen instance.
+//!
+//! Architecture (the paper's Fig. 2, one instance): connection handling on
+//! a thread pool; a single *engine thread* owning the scheduler, queues,
+//! and backend; `std::sync::mpsc` message queues between them — the same
+//! message-passing structure as the paper's asynchronous two-queue
+//! workflow (Appendix A.1).
+//!
+//! API:
+//! * `POST /v1/completions` `{"prompt": str, "max_tokens": n,
+//!   "class": "online"|"offline"}` → `{"text", "tokens", "latency_ms", ...}`
+//! * `GET /metrics` → aggregate serving report (JSON)
+//! * `GET /health` → `{"status":"ok"}`
+
+pub mod http;
+
+use crate::coordinator::request::{Class, Request, RequestId};
+use crate::engine::{Engine, ExecutionBackend};
+use crate::runtime::tokenizer;
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use http::{read_request, write_response};
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A submission travelling from a connection handler to the engine thread.
+struct Job {
+    prompt: Vec<u32>,
+    max_tokens: usize,
+    class: Class,
+    reply: Sender<Completion>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: RequestId,
+    pub text: String,
+    pub tokens: Vec<u32>,
+    pub latency_ms: f64,
+}
+
+/// Shared server state published by the engine thread.
+#[derive(Default)]
+struct Shared {
+    metrics_json: Mutex<String>,
+}
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    engine_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving on `bind`. The engine is *constructed on* a dedicated
+    /// engine thread by `factory` — PJRT handles are not `Send`, so they
+    /// must never cross threads; handlers talk to the engine thread via a
+    /// message queue only.
+    pub fn start<B, F>(bind: &str, factory: F, workers: usize) -> anyhow::Result<Server>
+    where
+        B: ExecutionBackend + 'static,
+        F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+    {
+        let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(Shared::default());
+        let (tx, rx) = channel::<Job>();
+
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let engine_thread = {
+            let stop = Arc::clone(&stop);
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new().name("hygen-engine".into()).spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                engine_loop(engine, rx, stop, shared)
+            })?
+        };
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let shared = Arc::clone(&shared);
+            let pool = ThreadPool::new(workers);
+            std::thread::Builder::new().name("hygen-accept".into()).spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            let tx = tx.clone();
+                            let shared = Arc::clone(&shared);
+                            pool.execute(move || {
+                                let _ = handle_connection(&mut stream, &tx, &shared);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                // pool drops here, joining workers
+            })?
+        };
+
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread), engine_thread: Some(engine_thread) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn engine_loop<B: ExecutionBackend>(
+    mut engine: Engine<B>,
+    rx: Receiver<Job>,
+    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+) {
+    let start = Instant::now();
+    let mut inflight: HashMap<RequestId, (Sender<Completion>, Instant)> = HashMap::new();
+    engine.state.keep_finished = true;
+    let mut last_publish = Instant::now();
+    while !stop.load(Ordering::SeqCst) {
+        // ingest
+        loop {
+            match rx.try_recv() {
+                Ok(job) => {
+                    let id = engine.fresh_id();
+                    let now = start.elapsed().as_secs_f64();
+                    let req = Request::new(id, job.class, now, job.prompt.len(), job.max_tokens)
+                        .with_prompt(job.prompt);
+                    inflight.insert(id, (job.reply, Instant::now()));
+                    engine.submit(req);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        if engine.has_work() {
+            if engine.step().is_err() {
+                // execution error: fail all inflight requests
+                for (_, (reply, _)) in inflight.drain() {
+                    let _ = reply.send(Completion {
+                        id: 0,
+                        text: String::new(),
+                        tokens: vec![],
+                        latency_ms: -1.0,
+                    });
+                }
+            }
+            // deliver completions
+            for req in engine.state.finished.drain(..) {
+                if let Some((reply, t0)) = inflight.remove(&req.id) {
+                    let _ = reply.send(Completion {
+                        id: req.id,
+                        text: tokenizer::decode(&req.output_tokens),
+                        tokens: req.output_tokens,
+                        latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+            }
+        } else {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if last_publish.elapsed() > Duration::from_millis(200) {
+            let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
+            *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
+            last_publish = Instant::now();
+        }
+    }
+}
+
+fn handle_connection(
+    stream: &mut std::net::TcpStream,
+    tx: &Sender<Job>,
+    shared: &Shared,
+) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let req = match read_request(stream) {
+        Ok(r) => r,
+        Err(_) => return write_response(stream, 400, "application/json", b"{\"error\":\"bad request\"}"),
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => write_response(stream, 200, "application/json", b"{\"status\":\"ok\"}"),
+        ("GET", "/metrics") => {
+            let body = shared.metrics_json.lock().unwrap().clone();
+            let body = if body.is_empty() { "{}".to_string() } else { body };
+            write_response(stream, 200, "application/json", body.as_bytes())
+        }
+        ("POST", "/v1/completions") => {
+            let parsed = Json::parse(&String::from_utf8_lossy(&req.body));
+            let Ok(j) = parsed else {
+                return write_response(stream, 400, "application/json", b"{\"error\":\"bad json\"}");
+            };
+            let Some(prompt) = j.get("prompt").as_str() else {
+                return write_response(stream, 400, "application/json", b"{\"error\":\"missing prompt\"}");
+            };
+            let max_tokens = j.get("max_tokens").as_u64().unwrap_or(16) as usize;
+            let class = match j.get("class").as_str().unwrap_or("online") {
+                "offline" => Class::Offline,
+                _ => Class::Online,
+            };
+            let (reply_tx, reply_rx) = channel();
+            let job = Job {
+                prompt: tokenizer::encode(prompt),
+                max_tokens: max_tokens.clamp(1, 1024),
+                class,
+                reply: reply_tx,
+            };
+            if tx.send(job).is_err() {
+                return write_response(stream, 503, "application/json", b"{\"error\":\"engine down\"}");
+            }
+            match reply_rx.recv_timeout(Duration::from_secs(120)) {
+                Ok(c) if c.latency_ms >= 0.0 => {
+                    let body = Json::obj(vec![
+                        ("id", c.id.into()),
+                        ("text", c.text.into()),
+                        ("num_tokens", c.tokens.len().into()),
+                        ("latency_ms", c.latency_ms.into()),
+                    ]);
+                    write_response(stream, 200, "application/json", body.to_string().as_bytes())
+                }
+                Ok(_) => write_response(stream, 500, "application/json", b"{\"error\":\"execution failed\"}"),
+                Err(_) => write_response(stream, 500, "application/json", b"{\"error\":\"timeout\"}"),
+            }
+        }
+        ("POST", _) | ("GET", _) => write_response(stream, 404, "application/json", b"{\"error\":\"not found\"}"),
+        _ => write_response(stream, 405, "application/json", b"{\"error\":\"method\"}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batch::Batch;
+    use crate::coordinator::predictor::LatencyPredictor;
+    use crate::coordinator::queues::OfflinePolicy;
+    use crate::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+    use crate::coordinator::state::EngineState;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    /// Echo-ish backend: generates deterministic tokens without PJRT.
+    struct EchoBackend;
+    impl ExecutionBackend for EchoBackend {
+        fn execute(&mut self, batch: &Batch, state: &mut EngineState) -> anyhow::Result<f64> {
+            for e in &batch.entries {
+                let req = state.req_mut(e.id);
+                let emit = if e.is_prefill {
+                    req.prefilled + e.n_tokens >= req.prompt_len
+                } else {
+                    true
+                };
+                if emit {
+                    let n = req.output_tokens.len();
+                    let tok = req.prompt.get(n).copied().unwrap_or(b'!' as u32);
+                    req.output_tokens.push(tok);
+                }
+            }
+            Ok(0.0005)
+        }
+    }
+
+    fn http(addr: std::net::SocketAddr, raw: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn start_echo_server() -> Server {
+        Server::start(
+            "127.0.0.1:0",
+            || {
+                let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+                let sched = HybridScheduler::new(
+                    SchedulerConfig { latency_budget_ms: None, ..Default::default() },
+                    LatencyPredictor::default_seed(),
+                );
+                Ok(Engine::new(sched, state, EchoBackend))
+            },
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn health_and_metrics_endpoints() {
+        let server = start_echo_server();
+        let r = http(server.addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK") && r.contains("\"ok\""), "{r}");
+        let r = http(server.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn completion_roundtrip() {
+        let server = start_echo_server();
+        let body = r#"{"prompt": "abcd", "max_tokens": 3, "class": "online"}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let r = http(server.addr, &raw);
+        assert!(r.contains("200 OK"), "{r}");
+        // Echo backend repeats the prompt: 3 tokens -> "abc"
+        assert!(r.contains("\"text\":\"abc\""), "{r}");
+        assert!(r.contains("\"num_tokens\":3"), "{r}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = start_echo_server();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let body = format!(r#"{{"prompt": "req{i}xx", "max_tokens": 2}}"#);
+                    let raw = format!(
+                        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+                        body.len(),
+                        body
+                    );
+                    http(addr, &raw)
+                })
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap();
+            assert!(r.contains("200 OK"), "{r}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let server = start_echo_server();
+        let r = http(server.addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("404"));
+        let raw = "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\nnotjson";
+        let r = http(server.addr, raw);
+        assert!(r.contains("400"), "{r}");
+        let raw = "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 2\r\n\r\n{}";
+        let r = http(server.addr, raw);
+        assert!(r.contains("missing prompt"), "{r}");
+        server.shutdown();
+    }
+}

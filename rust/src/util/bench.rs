@@ -1,0 +1,130 @@
+//! Micro-benchmark harness for the `cargo bench` targets (`harness =
+//! false`; the offline registry has no criterion). Provides warmup,
+//! calibrated iteration counts, and criterion-style median/mean/p99 rows.
+
+use std::time::{Duration, Instant};
+
+/// A black-box hint to prevent the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{:.1} ns", ns)
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner: prints a header once and a row per benchmark.
+pub struct Bencher {
+    target_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Respect a quick mode for CI-ish runs.
+        let target_ms = std::env::var("BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(800);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}",
+            "benchmark", "median", "mean", "p99", "iters"
+        );
+        Bencher { target_time: Duration::from_millis(target_ms), results: Vec::new() }
+    }
+
+    /// Run `f` repeatedly; each call should perform one unit of work and
+    /// return a value (passed through `black_box`).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: estimate per-iter cost.
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < Duration::from_millis(50) {
+            black_box(f());
+            cal_iters += 1;
+            if cal_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = cal_start.elapsed().as_nanos() as f64 / cal_iters as f64;
+        // Aim for ~200 timed samples of batched iterations.
+        let samples = 200usize;
+        let batch =
+            ((self.target_time.as_nanos() as f64 / samples as f64 / per_iter).ceil() as u64).max(1);
+
+        let mut times = Vec::with_capacity(samples);
+        let mut total_iters = 0u64;
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            times.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+            median_ns: times[times.len() / 2],
+            p99_ns: times[((times.len() as f64 * 0.99) as usize).min(times.len() - 1)],
+            min_ns: times[0],
+        };
+        println!("{}", result.row());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny CLI argument parser for the launcher (the offline registry has no
+//! `clap`). Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and a usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.flags.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    // (or absent), in which case it's a boolean flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(rest.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(rest.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["serve", "--port", "8080", "--qps=2.5", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert_eq!(a.get_f64("qps", 0.0), 2.5);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["--flag", "--other", "x"]);
+        assert!(a.get_bool("flag"));
+        assert_eq!(a.get("other"), Some("x"));
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse(&["cmd", "--done"]);
+        assert!(a.get_bool("done"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--offset", "-3"]);
+        // "-3" does not start with "--", so it is consumed as the value.
+        assert_eq!(a.get_f64("offset", 0.0), -3.0);
+    }
+}

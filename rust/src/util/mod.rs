@@ -1,0 +1,12 @@
+//! Foundation substrates built in-repo (the offline registry only resolves
+//! `xla` + `anyhow`): JSON, deterministic RNG + distributions, streaming
+//! statistics, CLI parsing, a micro-benchmark harness, a property-testing
+//! harness, and a small thread pool.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,142 @@
+//! Property-testing harness (the offline registry has no proptest).
+//!
+//! A property runs against many seeded random cases; on failure the seed is
+//! printed so the case replays deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath in this environment)
+//! use hygen::util::prop::{check, Gen};
+//! check("sorted stays sorted", 200, |g: &mut Gen| {
+//!     let mut v = g.vec_u64(0, 100, 0..20);
+//!     v.sort();
+//!     for w in v.windows(2) { assert!(w[0] <= w[1]); }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.range_usize(0, items.len())]
+    }
+
+    pub fn vec_u64(&mut self, lo: u64, hi: u64, len: Range<usize>) -> Vec<u64> {
+        let n = self.usize(len.start, len.end.max(len.start + 1));
+        (0..n).map(|_| self.u64(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, lo: usize, hi: usize, len: Range<usize>) -> Vec<usize> {
+        let n = self.usize(len.start, len.end.max(len.start + 1));
+        (0..n).map(|_| self.usize(lo, hi)).collect()
+    }
+
+    /// Random ASCII-lowercase token string of the given length range.
+    pub fn word(&mut self, len: Range<usize>) -> String {
+        let n = self.usize(len.start, len.end.max(len.start + 1));
+        (0..n).map(|_| (b'a' + self.rng.range(0, 26) as u8) as char).collect()
+    }
+}
+
+/// Run `cases` seeded invocations of `prop`. Panics (with the failing seed
+/// in the message) if any case panics. Honor `PROP_SEED` to replay one case
+/// and `PROP_CASES` to scale effort.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    if let Ok(seed) = std::env::var("PROP_SEED").map(|s| s.parse::<u64>().unwrap_or(0)) {
+        let mut g = Gen::new(seed);
+        prop(&mut g);
+        return;
+    }
+    let cases = std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    for i in 0..cases {
+        // Base seed differs per property name so properties don't share
+        // case streams.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let seed = h.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {i} (replay: PROP_SEED={seed}):\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add commutes", 50, |g| {
+            let a = g.u64(0, 1000);
+            let b = g.u64(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failing_seed() {
+        check("always fails", 5, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen ranges", 100, |g| {
+            let x = g.usize(3, 10);
+            assert!((3..10).contains(&x));
+            let v = g.vec_u64(5, 6, 2..4);
+            assert!(v.len() >= 2 && v.len() < 4);
+            assert!(v.iter().all(|&x| x == 5));
+            let w = g.word(1..5);
+            assert!(!w.is_empty() && w.len() < 5);
+        });
+    }
+}

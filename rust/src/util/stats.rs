@@ -1,0 +1,251 @@
+//! Statistics substrate: exact percentile summaries, streaming mean/max,
+//! windowed rate series, and regression-quality metrics (MAPE).
+//!
+//! SLO metrics in the paper are *statistical* (mean TTFT/TBT and P99
+//! TTFT/TBT), so the profiler and the evaluation harness both lean on this
+//! module. Sample counts are bounded (one TTFT per request, one TBT per
+//! generated token), so we keep exact samples and sort on demand.
+
+/// Exact sample collection with lazily-sorted percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Percentile by linear interpolation between closest ranks
+    /// (matches numpy's default). `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = q / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi.min(n - 1)] * frac
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+}
+
+/// Mean absolute percentage error of predictions vs actuals — the paper's
+/// predictor-accuracy metric (Fig. 5: 1.78% / 1.07%).
+pub fn mape(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (p, a) in pred.iter().zip(actual) {
+        if a.abs() > 1e-12 {
+            total += ((p - a) / a).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * total / n as f64
+    }
+}
+
+/// Time-bucketed rate/throughput series: counts events (or token weights)
+/// per fixed window. Used for Figs. 1, 8, 13 and the /metrics endpoint.
+#[derive(Debug, Clone)]
+pub struct WindowSeries {
+    window_s: f64,
+    buckets: Vec<f64>,
+}
+
+impl WindowSeries {
+    pub fn new(window_s: f64) -> Self {
+        assert!(window_s > 0.0);
+        WindowSeries { window_s, buckets: Vec::new() }
+    }
+
+    /// Record `weight` at time `t` (seconds). Weight 1.0 = one request;
+    /// token counts give a TPS series.
+    pub fn record(&mut self, t: f64, weight: f64) {
+        if t < 0.0 {
+            return;
+        }
+        let idx = (t / self.window_s) as usize;
+        if idx >= self.buckets.len() {
+            self.buckets.resize(idx + 1, 0.0);
+        }
+        self.buckets[idx] += weight;
+    }
+
+    /// Per-window *rates* (weight / window seconds).
+    pub fn rates(&self) -> Vec<f64> {
+        self.buckets.iter().map(|c| c / self.window_s).collect()
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    pub fn num_windows(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// max/mean rate ratio — the paper's "varies up to 3x" burstiness stat.
+    pub fn burstiness(&self) -> f64 {
+        let rates = self.rates();
+        if rates.is_empty() {
+            return 0.0;
+        }
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        if mean == 0.0 {
+            0.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_mean_percentiles() {
+        let mut s = Summary::new();
+        for x in 1..=100 {
+            s.add(x as f64);
+        }
+        assert_eq!(s.len(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_single_sample_and_empty() {
+        let mut s = Summary::new();
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        s.add(3.5);
+        assert_eq!(s.p99(), 3.5);
+        assert_eq!(s.percentile(1.0), 3.5);
+    }
+
+    #[test]
+    fn summary_interleaved_add_and_query() {
+        let mut s = Summary::new();
+        s.add(10.0);
+        s.add(0.0);
+        assert_eq!(s.p50(), 5.0);
+        s.add(20.0); // must re-sort after new sample
+        assert_eq!(s.p50(), 10.0);
+    }
+
+    #[test]
+    fn summary_std_and_merge() {
+        let mut a = Summary::new();
+        a.add(2.0);
+        a.add(4.0);
+        assert!((a.std() - std::f64::consts::SQRT_2).abs() < 1e-12);
+        let mut b = Summary::new();
+        b.add(6.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert!((a.mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_basic() {
+        assert!((mape(&[110.0, 90.0], &[100.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert_eq!(mape(&[1.0], &[0.0]), 0.0); // zero-actuals skipped
+    }
+
+    #[test]
+    fn window_series_rates_and_burstiness() {
+        let mut w = WindowSeries::new(10.0);
+        for i in 0..100 {
+            w.record(i as f64, 1.0); // uniform: 1 req/s
+        }
+        w.record(5.0, 20.0); // burst in window 0
+        let rates = w.rates();
+        assert_eq!(rates.len(), 10);
+        assert!((rates[1] - 1.0).abs() < 1e-9);
+        assert!((rates[0] - 3.0).abs() < 1e-9);
+        assert!(w.burstiness() > 2.0);
+    }
+
+    #[test]
+    fn window_series_ignores_negative_time() {
+        let mut w = WindowSeries::new(1.0);
+        w.record(-5.0, 1.0);
+        assert_eq!(w.num_windows(), 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Azure-LLM-inference-2023-like online trace generator.
+//!
+//! The real one-hour conversation trace (Patel et al., Splitwise) is not
+//! distributable here, so we synthesize a trace reproducing its published
+//! shape (the properties the scheduler is sensitive to — Fig. 1 / §3.2):
+//!
+//! * a slow diurnal-style envelope over the hour,
+//! * minute-scale bursts: rate can swing ≥3× within a couple of minutes
+//!   (modelled by a log-normal modulating process resampled per window),
+//! * Poisson arrivals within each window,
+//! * conversation-style lengths: log-normal prompts (median ≈ 1k tokens,
+//!   long tail) and shorter log-normal outputs (median ≈ 120-200).
+
+use super::trace::{Trace, TraceEvent};
+use crate::coordinator::request::Class;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct AzureTraceConfig {
+    /// Trace span in seconds (the paper uses a one-hour trace).
+    pub duration_s: f64,
+    /// Target mean request rate (the paper samples to a QPS that suits the
+    /// hardware, §5.1).
+    pub mean_qps: f64,
+    /// Burst modulation window (rate is re-drawn each window).
+    pub burst_window_s: f64,
+    /// Log-normal sigma of the burst modulation (0.45 gives ~3x swings).
+    pub burst_sigma: f64,
+    /// Diurnal envelope amplitude in [0, 1).
+    pub diurnal_amplitude: f64,
+    /// Prompt length log-normal (mu, sigma) in ln-tokens.
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    /// Output length log-normal (mu, sigma).
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    /// Hard caps keeping lengths inside the engine's context budget.
+    pub max_prompt: usize,
+    pub max_output: usize,
+}
+
+impl Default for AzureTraceConfig {
+    fn default() -> Self {
+        AzureTraceConfig {
+            duration_s: 3600.0,
+            mean_qps: 2.0,
+            burst_window_s: 30.0,
+            burst_sigma: 0.45,
+            diurnal_amplitude: 0.35,
+            prompt_mu: 6.9,    // e^6.9 ~ 1000 tokens median
+            prompt_sigma: 0.8, // heavy tail up to several k
+            output_mu: 5.0,    // ~150 tokens median
+            output_sigma: 0.7,
+            max_prompt: 6000,
+            max_output: 1500,
+        }
+    }
+}
+
+impl AzureTraceConfig {
+    /// Scaled-down variant for the real (CPU PJRT) engine: tiny context.
+    pub fn tiny() -> AzureTraceConfig {
+        AzureTraceConfig {
+            duration_s: 30.0,
+            mean_qps: 2.0,
+            burst_window_s: 5.0,
+            prompt_mu: 3.4, // ~30 tokens
+            prompt_sigma: 0.5,
+            output_mu: 2.0, // ~8 tokens
+            output_sigma: 0.4,
+            max_prompt: 120,
+            max_output: 32,
+            ..Default::default()
+        }
+    }
+}
+
+/// Generate the online trace. Prompts get synthetic token ids (unique per
+/// request — conversations rarely share long prefixes, unlike the offline
+/// datasets).
+pub fn generate(cfg: &AzureTraceConfig, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xA2u64.rotate_left(32));
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    let mut window_end = 0.0f64;
+    let mut rate = cfg.mean_qps;
+    // Normalize the log-normal modulation so the mean stays ~mean_qps.
+    let ln_mean_correction = (-0.5 * cfg.burst_sigma * cfg.burst_sigma).exp();
+    let mut uniq: u32 = 1 << 20; // token-id space distinct from datasets
+    while t < cfg.duration_s {
+        if t >= window_end {
+            // diurnal envelope (one slow sinusoid across the span)
+            let phase = 2.0 * std::f64::consts::PI * (t / cfg.duration_s);
+            let envelope = 1.0 + cfg.diurnal_amplitude * phase.sin();
+            let burst = rng.lognormal(0.0, cfg.burst_sigma) * ln_mean_correction;
+            rate = (cfg.mean_qps * envelope * burst).max(0.02);
+            window_end = t + cfg.burst_window_s;
+        }
+        t += rng.exp(rate);
+        if t >= cfg.duration_s {
+            break;
+        }
+        let prompt_len =
+            (rng.lognormal(cfg.prompt_mu, cfg.prompt_sigma) as usize).clamp(4, cfg.max_prompt);
+        let output_len =
+            (rng.lognormal(cfg.output_mu, cfg.output_sigma) as usize).clamp(1, cfg.max_output);
+        // unique prompt tokens (no accidental prefix sharing online)
+        let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| uniq.wrapping_add(i)).collect();
+        uniq = uniq.wrapping_add(prompt_len as u32 + 17);
+        events.push(TraceEvent { arrival_s: t, class: Class::Online, prompt_len, output_len, prompt });
+    }
+    Trace::new(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::WindowSeries;
+
+    #[test]
+    fn mean_rate_close_to_target() {
+        let cfg = AzureTraceConfig { duration_s: 3600.0, mean_qps: 2.0, ..Default::default() };
+        let tr = generate(&cfg, 0);
+        let qps = tr.len() as f64 / cfg.duration_s;
+        assert!((qps - 2.0).abs() < 0.5, "qps={qps}");
+    }
+
+    #[test]
+    fn bursts_reach_3x_within_minutes() {
+        // The Fig. 1 property: minute-window rates vary >= 3x.
+        let cfg = AzureTraceConfig::default();
+        let tr = generate(&cfg, 1);
+        let mut w = WindowSeries::new(120.0);
+        for e in &tr.events {
+            w.record(e.arrival_s, 1.0);
+        }
+        let rates = w.rates();
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min.max(1e-9) >= 3.0, "burstiness {}", max / min);
+    }
+
+    #[test]
+    fn lengths_within_caps_and_plausible() {
+        let cfg = AzureTraceConfig::default();
+        let tr = generate(&cfg, 2);
+        assert!(tr.len() > 1000);
+        let mean_prompt: f64 =
+            tr.events.iter().map(|e| e.prompt_len as f64).sum::<f64>() / tr.len() as f64;
+        assert!(mean_prompt > 400.0 && mean_prompt < 3000.0, "mean prompt {mean_prompt}");
+        assert!(tr.events.iter().all(|e| e.prompt_len <= cfg.max_prompt));
+        assert!(tr.events.iter().all(|e| e.output_len <= cfg.max_output && e.output_len >= 1));
+        assert!(tr.events.iter().all(|e| e.prompt.len() == e.prompt_len));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = AzureTraceConfig::tiny();
+        let a = generate(&cfg, 42);
+        let b = generate(&cfg, 42);
+        assert_eq!(a.events, b.events);
+        let c = generate(&cfg, 43);
+        assert_ne!(a.events.len(), 0);
+        assert!(a.events != c.events);
+    }
+
+    #[test]
+    fn tiny_profile_fits_small_context() {
+        let tr = generate(&AzureTraceConfig::tiny(), 3);
+        assert!(tr.events.iter().all(|e| e.prompt_len + e.output_len <= 160));
+    }
+}

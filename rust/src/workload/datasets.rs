@@ -1,0 +1,210 @@
+//! Offline dataset models: synthetic stand-ins for the paper's offline
+//! workloads with the two properties PSM and the throughput analysis
+//! depend on — the *length distribution* and the *shared-prefix structure*.
+//!
+//! * **arXiv summarization** (Cohan et al.): long documents (median ≈ 3k
+//!   tokens, heavy tail, capped), short summaries; a shared instruction
+//!   preamble ("Summarize the following article: ...") of ~30 tokens.
+//! * **CNN/DailyMail**: medium articles (median ≈ 780 tokens), highlights
+//!   of ~60 tokens, same-style shared preamble.
+//! * **MMLU**: short multiple-choice questions (~100-300 tokens) drawn
+//!   from 57 subjects; all questions of a subject share a long few-shot
+//!   template prefix (hundreds of tokens) — the prefix-sharing-heavy
+//!   workload of Fig. 6.
+//!
+//! Prompts carry real synthetic token ids: a family/template prefix
+//! (identical ids for the same family) followed by unique body tokens, so
+//! the PSM trie, the block-manager prefix cache, and the consecutive-LCP
+//! accounting all operate exactly as they would on tokenized text.
+
+use super::trace::{Trace, TraceEvent};
+use crate::coordinator::request::Class;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    ArxivSummarization,
+    CnnDailyMail,
+    Mmlu,
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s {
+            "arxiv" | "arxiv-summarization" => Some(Dataset::ArxivSummarization),
+            "cnn" | "cnn-dailymail" => Some(Dataset::CnnDailyMail),
+            "mmlu" => Some(Dataset::Mmlu),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::ArxivSummarization => "arxiv-summarization",
+            Dataset::CnnDailyMail => "cnn-dailymail",
+            Dataset::Mmlu => "mmlu",
+        }
+    }
+
+    fn params(&self) -> DatasetParams {
+        match self {
+            Dataset::ArxivSummarization => DatasetParams {
+                prompt_mu: 8.0, // ~3000 tokens median
+                prompt_sigma: 0.6,
+                output_mu: 5.2, // ~180-token summaries
+                output_sigma: 0.4,
+                max_prompt: 7000,
+                max_output: 600,
+                families: 1, // one shared instruction preamble
+                family_prefix_tokens: 32,
+            },
+            Dataset::CnnDailyMail => DatasetParams {
+                prompt_mu: 6.66, // ~780 tokens median
+                prompt_sigma: 0.45,
+                output_mu: 4.1, // ~60-token highlights
+                output_sigma: 0.35,
+                max_prompt: 2500,
+                max_output: 200,
+                families: 1,
+                family_prefix_tokens: 24,
+            },
+            Dataset::Mmlu => DatasetParams {
+                prompt_mu: 5.0, // ~150-token questions
+                prompt_sigma: 0.35,
+                output_mu: 0.7, // a few tokens (the answer letter + expl.)
+                output_sigma: 0.5,
+                max_prompt: 600,
+                max_output: 16,
+                families: 57, // subjects, each with a few-shot template
+                family_prefix_tokens: 320,
+            },
+        }
+    }
+}
+
+struct DatasetParams {
+    prompt_mu: f64,
+    prompt_sigma: f64,
+    output_mu: f64,
+    output_sigma: f64,
+    max_prompt: usize,
+    max_output: usize,
+    families: usize,
+    family_prefix_tokens: usize,
+}
+
+/// Generate `n` offline requests, all available at time 0 (the paper's
+/// offline backlog model: Batch-API-style jobs queued up front). Arrival
+/// order interleaves families — exactly the situation PSM reorders.
+pub fn generate(dataset: Dataset, n: usize, seed: u64) -> Trace {
+    generate_arrivals(dataset, n, 0.0, seed)
+}
+
+/// Like [`generate`] but spreading arrivals uniformly over `span_s`
+/// seconds (for experiments with a trickling offline feed).
+pub fn generate_arrivals(dataset: Dataset, n: usize, span_s: f64, seed: u64) -> Trace {
+    let p = dataset.params();
+    let mut rng = Rng::new(seed ^ (dataset.name().len() as u64).rotate_left(40));
+    let mut events = Vec::with_capacity(n);
+    // Unique-token space per dataset, away from online ids.
+    let mut uniq: u32 = 1 << 28;
+    for i in 0..n {
+        let family = rng.range_usize(0, p.families);
+        let prompt_len = (rng.lognormal(p.prompt_mu, p.prompt_sigma) as usize)
+            .clamp(p.family_prefix_tokens + 4, p.max_prompt);
+        let output_len =
+            (rng.lognormal(p.output_mu, p.output_sigma) as usize).clamp(1, p.max_output);
+        let mut prompt = Vec::with_capacity(prompt_len);
+        // family template prefix: identical ids within a family
+        for k in 0..p.family_prefix_tokens.min(prompt_len) {
+            prompt.push((family as u32) << 16 | (k as u32 & 0xFFFF) | (1 << 30));
+        }
+        // unique body
+        while prompt.len() < prompt_len {
+            prompt.push(uniq);
+            uniq = uniq.wrapping_add(1);
+        }
+        let arrival_s = if span_s > 0.0 { span_s * (i as f64 / n as f64) } else { 0.0 };
+        events.push(TraceEvent {
+            arrival_s,
+            class: Class::Offline,
+            prompt_len,
+            output_len,
+            prompt,
+        });
+    }
+    Trace::new(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::psm::lcp;
+
+    #[test]
+    fn arxiv_is_long_cnn_medium_mmlu_short() {
+        let mean_prompt = |d: Dataset| {
+            let tr = generate(d, 2000, 0);
+            tr.events.iter().map(|e| e.prompt_len as f64).sum::<f64>() / tr.len() as f64
+        };
+        let arxiv = mean_prompt(Dataset::ArxivSummarization);
+        let cnn = mean_prompt(Dataset::CnnDailyMail);
+        let mmlu = mean_prompt(Dataset::Mmlu);
+        assert!(arxiv > cnn && cnn > mmlu, "{arxiv} > {cnn} > {mmlu}");
+        assert!(arxiv > 2000.0, "arxiv docs are long: {arxiv}");
+        assert!(mmlu < 600.0, "mmlu questions are short: {mmlu}");
+    }
+
+    #[test]
+    fn mmlu_same_family_shares_long_prefix() {
+        let tr = generate(Dataset::Mmlu, 500, 1);
+        // find two requests of the same subject
+        let mut by_family: std::collections::HashMap<u32, Vec<usize>> = Default::default();
+        for (i, e) in tr.events.iter().enumerate() {
+            by_family.entry(e.prompt[0]).or_default().push(i);
+        }
+        let family = by_family.values().find(|v| v.len() >= 2).expect("families repeat");
+        let a = &tr.events[family[0]].prompt;
+        let b = &tr.events[family[1]].prompt;
+        assert_eq!(lcp(a, b), 320, "full few-shot template shared");
+        // different families share nothing
+        let other = by_family
+            .iter()
+            .find(|(k, v)| **k != tr.events[family[0]].prompt[0] && !v.is_empty());
+        if let Some((_, v)) = other {
+            assert_eq!(lcp(a, &tr.events[v[0]].prompt), 0);
+        }
+    }
+
+    #[test]
+    fn arxiv_shares_instruction_preamble_only() {
+        let tr = generate(Dataset::ArxivSummarization, 50, 2);
+        let a = &tr.events[0].prompt;
+        let b = &tr.events[1].prompt;
+        assert_eq!(lcp(a, b), 32, "common instruction preamble");
+    }
+
+    #[test]
+    fn output_lengths_positive_and_capped() {
+        for d in [Dataset::ArxivSummarization, Dataset::CnnDailyMail, Dataset::Mmlu] {
+            let tr = generate(d, 500, 3);
+            assert!(tr.events.iter().all(|e| e.output_len >= 1));
+            assert!(tr.events.iter().all(|e| e.prompt.len() == e.prompt_len));
+        }
+    }
+
+    #[test]
+    fn arrivals_spread_over_span() {
+        let tr = generate_arrivals(Dataset::CnnDailyMail, 100, 50.0, 4);
+        assert_eq!(tr.events[0].arrival_s, 0.0);
+        assert!(tr.duration_s() > 40.0);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Dataset::parse("arxiv"), Some(Dataset::ArxivSummarization));
+        assert_eq!(Dataset::parse("cnn-dailymail"), Some(Dataset::CnnDailyMail));
+        assert_eq!(Dataset::parse("mmlu"), Some(Dataset::Mmlu));
+        assert_eq!(Dataset::parse("wikipedia"), None);
+    }
+}

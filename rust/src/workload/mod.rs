@@ -1,0 +1,15 @@
+//! Workload substrate: trace model + generators standing in for the
+//! paper's datasets (DESIGN.md substitution table).
+//!
+//! * [`azure`] — Azure-LLM-inference-2023-like conversation trace
+//!   (diurnal envelope + minute-scale bursts, ≥3× rate swings).
+//! * [`mooncake`] — Mooncake-like trace (burstier, heavier-tailed).
+//! * [`datasets`] — offline request sets modelled on arXiv-summarization,
+//!   CNN/DailyMail and MMLU (length distributions + shared-prefix
+//!   structure driving PSM).
+//! * [`trace`] — the trace record type + CSV persistence.
+
+pub mod azure;
+pub mod datasets;
+pub mod mooncake;
+pub mod trace;

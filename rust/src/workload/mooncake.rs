@@ -1,0 +1,127 @@
+//! Mooncake-trace-like online workload (Qin et al., Kimi's serving trace).
+//!
+//! Relative to the Azure conversation trace, the published Mooncake trace
+//! shows (Fig. 13 of the paper): much longer prompts (KV-centric workload,
+//! many tens of k context — capped here to the simulated engines' budget),
+//! shorter outputs, and *spikier* arrivals (request storms on ten-minute
+//! scales). We model it as a gamma-modulated Poisson process with a
+//! heavier burst tail plus occasional storm windows.
+
+use super::trace::{Trace, TraceEvent};
+use crate::coordinator::request::Class;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct MooncakeTraceConfig {
+    pub duration_s: f64,
+    pub mean_qps: f64,
+    pub burst_window_s: f64,
+    /// Gamma shape for rate modulation (smaller = spikier). 1.2 gives the
+    /// pronounced trough/storm alternation of Fig. 13.
+    pub gamma_shape: f64,
+    /// Probability a window is a storm (rate multiplied by `storm_boost`).
+    pub storm_prob: f64,
+    pub storm_boost: f64,
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    pub output_mu: f64,
+    pub output_sigma: f64,
+    pub max_prompt: usize,
+    pub max_output: usize,
+}
+
+impl Default for MooncakeTraceConfig {
+    fn default() -> Self {
+        MooncakeTraceConfig {
+            duration_s: 3600.0,
+            mean_qps: 1.2,
+            burst_window_s: 60.0,
+            gamma_shape: 1.2,
+            storm_prob: 0.04,
+            storm_boost: 4.0,
+            prompt_mu: 7.6, // ~2000 tokens median: long-context workload
+            prompt_sigma: 0.9,
+            output_mu: 4.3, // ~75 tokens median
+            output_sigma: 0.6,
+            max_prompt: 8000,
+            max_output: 800,
+        }
+    }
+}
+
+pub fn generate(cfg: &MooncakeTraceConfig, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x3A00Cu64.rotate_left(24));
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    let mut window_end = 0.0f64;
+    let mut rate = cfg.mean_qps;
+    let mut uniq: u32 = 1 << 24;
+    while t < cfg.duration_s {
+        if t >= window_end {
+            // gamma-modulated base rate, mean 1
+            let g = rng.gamma(cfg.gamma_shape, 1.0 / cfg.gamma_shape);
+            let storm = if rng.chance(cfg.storm_prob) { cfg.storm_boost } else { 1.0 };
+            rate = (cfg.mean_qps * g * storm).max(0.01);
+            window_end = t + cfg.burst_window_s;
+        }
+        t += rng.exp(rate);
+        if t >= cfg.duration_s {
+            break;
+        }
+        let prompt_len =
+            (rng.lognormal(cfg.prompt_mu, cfg.prompt_sigma) as usize).clamp(8, cfg.max_prompt);
+        let output_len =
+            (rng.lognormal(cfg.output_mu, cfg.output_sigma) as usize).clamp(1, cfg.max_output);
+        let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| uniq.wrapping_add(i)).collect();
+        uniq = uniq.wrapping_add(prompt_len as u32 + 29);
+        events.push(TraceEvent { arrival_s: t, class: Class::Online, prompt_len, output_len, prompt });
+    }
+    Trace::new(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::WindowSeries;
+    use crate::workload::azure::{self, AzureTraceConfig};
+
+    #[test]
+    fn mean_rate_roughly_target() {
+        let cfg = MooncakeTraceConfig::default();
+        let tr = generate(&cfg, 0);
+        let qps = tr.len() as f64 / cfg.duration_s;
+        assert!(qps > 0.5 * cfg.mean_qps && qps < 2.0 * cfg.mean_qps, "qps {qps}");
+    }
+
+    #[test]
+    fn spikier_than_azure() {
+        // Fig. 13 vs Fig. 1: Mooncake's windowed rates are burstier.
+        let mk = generate(&MooncakeTraceConfig::default(), 1);
+        let az = azure::generate(&AzureTraceConfig::default(), 1);
+        let burst = |tr: &Trace| {
+            let mut w = WindowSeries::new(120.0);
+            for e in &tr.events {
+                w.record(e.arrival_s, 1.0);
+            }
+            w.burstiness()
+        };
+        assert!(burst(&mk) > burst(&az), "mooncake {} vs azure {}", burst(&mk), burst(&az));
+    }
+
+    #[test]
+    fn prompts_longer_outputs_shorter_than_azure() {
+        let mk = generate(&MooncakeTraceConfig::default(), 2);
+        let az = azure::generate(&AzureTraceConfig::default(), 2);
+        let mean = |tr: &Trace, f: fn(&TraceEvent) -> usize| {
+            tr.events.iter().map(|e| f(e) as f64).sum::<f64>() / tr.len() as f64
+        };
+        assert!(mean(&mk, |e| e.prompt_len) > mean(&az, |e| e.prompt_len));
+        assert!(mean(&mk, |e| e.output_len) < mean(&az, |e| e.output_len));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = MooncakeTraceConfig { duration_s: 120.0, ..Default::default() };
+        assert_eq!(generate(&cfg, 9).events, generate(&cfg, 9).events);
+    }
+}

@@ -1,0 +1,176 @@
+//! Trace model: a sequence of timestamped requests with length metadata,
+//! plus CSV persistence so generated workloads can be inspected, diffed,
+//! and replayed exactly.
+
+use crate::coordinator::request::Class;
+
+/// One trace record (the unit both generators and the engine replay).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    pub class: Class,
+    pub prompt_len: usize,
+    pub output_len: usize,
+    /// Prompt token ids; generators synthesize these so PSM/prefix caching
+    /// operate on real token content even in simulation.
+    pub prompt: Vec<u32>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new(mut events: Vec<TraceEvent>) -> Trace {
+        events.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        Trace { events }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.events.last().map(|e| e.arrival_s).unwrap_or(0.0)
+    }
+
+    /// Merge two traces (e.g. an online trace with an offline backlog).
+    pub fn merged(mut self, other: Trace) -> Trace {
+        self.events.extend(other.events);
+        Trace::new(self.events)
+    }
+
+    /// Mean arrival rate over the trace span (req/s).
+    pub fn mean_qps(&self) -> f64 {
+        if self.events.len() < 2 {
+            return 0.0;
+        }
+        self.events.len() as f64 / self.duration_s().max(1e-9)
+    }
+
+    /// Random subsample to a target QPS, preserving timestamps — the
+    /// paper's "sample T*Q requests over T seconds" methodology (§5.1).
+    pub fn sample_to_qps(&self, qps: f64, rng: &mut crate::util::rng::Rng) -> Trace {
+        let keep = (qps / self.mean_qps()).min(1.0);
+        let events =
+            self.events.iter().filter(|_| rng.chance(keep)).cloned().collect::<Vec<_>>();
+        Trace::new(events)
+    }
+
+    // ---- CSV persistence (arrival,class,prompt_len,output_len) ----
+    // Prompt token ids are regenerated from lengths on load (seeded), so
+    // traces stay compact; exact-token replay uses the in-memory form.
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("arrival_s,class,prompt_len,output_len\n");
+        for e in &self.events {
+            out.push_str(&format!(
+                "{:.6},{},{},{}\n",
+                e.arrival_s,
+                if e.class.is_online() { "online" } else { "offline" },
+                e.prompt_len,
+                e.output_len
+            ));
+        }
+        out
+    }
+
+    pub fn from_csv(text: &str) -> anyhow::Result<Trace> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header / blanks
+            }
+            let parts: Vec<&str> = line.split(',').collect();
+            if parts.len() != 4 {
+                anyhow::bail!("line {}: expected 4 fields, got {}", i + 1, parts.len());
+            }
+            let class = match parts[1] {
+                "online" => Class::Online,
+                "offline" => Class::Offline,
+                other => anyhow::bail!("line {}: bad class '{other}'", i + 1),
+            };
+            events.push(TraceEvent {
+                arrival_s: parts[0].parse()?,
+                class,
+                prompt_len: parts[2].parse()?,
+                output_len: parts[3].parse()?,
+                prompt: Vec::new(),
+            });
+        }
+        Ok(Trace::new(events))
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Trace> {
+        Trace::from_csv(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ev(t: f64, class: Class, p: usize, o: usize) -> TraceEvent {
+        TraceEvent { arrival_s: t, class, prompt_len: p, output_len: o, prompt: vec![] }
+    }
+
+    #[test]
+    fn new_sorts_by_arrival() {
+        let tr = Trace::new(vec![
+            ev(2.0, Class::Online, 10, 5),
+            ev(1.0, Class::Offline, 20, 5),
+        ]);
+        assert_eq!(tr.events[0].arrival_s, 1.0);
+        assert_eq!(tr.duration_s(), 2.0);
+    }
+
+    #[test]
+    fn merged_interleaves() {
+        let a = Trace::new(vec![ev(1.0, Class::Online, 1, 1), ev(3.0, Class::Online, 1, 1)]);
+        let b = Trace::new(vec![ev(2.0, Class::Offline, 1, 1)]);
+        let m = a.merged(b);
+        assert_eq!(m.len(), 3);
+        assert!(m.events.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let tr = Trace::new(vec![
+            ev(0.5, Class::Online, 128, 64),
+            ev(1.25, Class::Offline, 4096, 512),
+        ]);
+        let parsed = Trace::from_csv(&tr.to_csv()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed.events[1].prompt_len, 4096);
+        assert_eq!(parsed.events[0].class, Class::Online);
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        assert!(Trace::from_csv("arrival\n1,online\n").is_err());
+        assert!(Trace::from_csv("h\n1.0,middleware,5,5\n").is_err());
+    }
+
+    #[test]
+    fn sample_to_qps_reduces_rate() {
+        let events: Vec<TraceEvent> =
+            (0..1000).map(|i| ev(i as f64 * 0.1, Class::Online, 10, 10)).collect();
+        let tr = Trace::new(events);
+        assert!((tr.mean_qps() - 10.0).abs() < 0.2);
+        let mut rng = Rng::new(0);
+        let sampled = tr.sample_to_qps(2.0, &mut rng);
+        let q = sampled.mean_qps();
+        assert!((q - 2.0).abs() < 0.6, "sampled qps {q}");
+    }
+}

@@ -1,0 +1,196 @@
+//! End-to-end simulation tests: the paper's qualitative results must hold
+//! on the calibrated cost models (these are the cheap, always-on versions
+//! of the figure harnesses).
+
+use hygen::baselines::{SimSetup, System};
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::coordinator::request::{Slo, SloMetric};
+use hygen::experiments::{hygen_profiled, online_baseline, Ctx};
+use hygen::sim::costmodel::CostModel;
+use hygen::workload::azure::{self, AzureTraceConfig};
+use hygen::workload::datasets::{self, Dataset};
+use hygen::workload::mooncake::{self, MooncakeTraceConfig};
+
+fn ctx() -> Ctx {
+    Ctx { horizon_s: 150.0, trace_s: 90.0, profile_steps: 5, ..Default::default() }
+}
+
+fn azure_online(qps: f64, seed: u64) -> hygen::workload::trace::Trace {
+    azure::generate(
+        &AzureTraceConfig { duration_s: 90.0, mean_qps: qps, ..Default::default() },
+        seed,
+    )
+}
+
+#[test]
+fn hygen_meets_slo_while_colocating() {
+    let ctx = ctx();
+    let setup = SimSetup::new(CostModel::a100_llama7b());
+    let online = azure_online(2.0, 0);
+    let offline = datasets::generate(Dataset::ArxivSummarization, 800, 0);
+    let workload = online.clone().merged(offline);
+    let base = online_baseline(&setup, &online, &ctx).unwrap();
+    let slo = Slo::from_tolerance(SloMetric::P99Tbt, base.p99_tbt_ms, 0.2);
+    let (prof, report) = hygen_profiled(&setup, &workload, &slo, &ctx).unwrap();
+    assert!(
+        report.p99_tbt_ms <= slo.limit_ms * 1.05,
+        "p99 tbt {} > slo {}",
+        report.p99_tbt_ms,
+        slo.limit_ms
+    );
+    assert!(report.offline_tps > 0.0, "co-location must add offline throughput");
+    assert!(prof.budget_ms > 0.0);
+}
+
+#[test]
+fn hygen_beats_pure_online_total_throughput() {
+    // Fig. 4 headline: co-location multiplies total throughput.
+    let ctx = ctx();
+    let setup = SimSetup::new(CostModel::a100_llama7b());
+    let online = azure_online(1.0, 1);
+    let offline = datasets::generate(Dataset::ArxivSummarization, 800, 1);
+    let workload = online.clone().merged(offline);
+    let base = online_baseline(&setup, &online, &ctx).unwrap();
+    let r = setup
+        .run(System::HyGen { latency_budget_ms: 60.0 }, &workload, ctx.horizon_s)
+        .unwrap()
+        .report;
+    assert!(
+        r.total_tps > 2.0 * base.total_tps,
+        "hygen {} !>> online-only {}",
+        r.total_tps,
+        base.total_tps
+    );
+}
+
+#[test]
+fn sarathi_pp_violates_what_hygen_holds() {
+    // Fig. 3's contrast: same workload, same SLO — Sarathi++ (no latency
+    // budget) violates where profiled HyGen complies.
+    let ctx = ctx();
+    let setup = SimSetup::new(CostModel::a100_llama7b());
+    let online = azure_online(2.0, 2);
+    let offline = datasets::generate(Dataset::ArxivSummarization, 800, 2);
+    let workload = online.clone().merged(offline);
+    let base = online_baseline(&setup, &online, &ctx).unwrap();
+    let slo = Slo::from_tolerance(SloMetric::MeanTbt, base.mean_tbt_ms, 0.1);
+    let spp = setup.run(System::SarathiPlusPlus, &workload, ctx.horizon_s).unwrap().report;
+    let (_prof, hygen) = hygen_profiled(&setup, &workload, &slo, &ctx).unwrap();
+    assert!(spp.mean_tbt_ms > slo.limit_ms, "sarathi++ should violate: {}", spp.mean_tbt_ms);
+    assert!(hygen.mean_tbt_ms <= slo.limit_ms * 1.05, "hygen must comply: {}", hygen.mean_tbt_ms);
+}
+
+#[test]
+fn psm_beats_fcfs_on_prefix_heavy_offline() {
+    // Fig. 6 shape.
+    let offline = datasets::generate(Dataset::Mmlu, 4000, 3);
+    let run = |policy| {
+        let setup = SimSetup::new(CostModel::a100_llama7b()).with_policy(policy);
+        setup
+            .run_draining(System::SarathiOffline { chunk_tokens: 1024 }, &offline, 120.0)
+            .unwrap()
+            .report
+            .offline_qps
+    };
+    let fcfs = run(OfflinePolicy::Fcfs);
+    let psm = run(OfflinePolicy::Psm);
+    assert!(psm > 1.3 * fcfs, "psm {psm} !>> fcfs {fcfs}");
+}
+
+#[test]
+fn offline_throughput_shrinks_with_online_load() {
+    // Fig. 17 shape: more online QPS -> less residual capacity.
+    let ctx = ctx();
+    let setup = SimSetup::new(CostModel::a100_llama7b());
+    let offline = datasets::generate(Dataset::ArxivSummarization, 800, 4);
+    let mut last = f64::INFINITY;
+    for qps in [0.5, 2.0, 4.0] {
+        let online = azure_online(qps, 5);
+        let workload = online.merged(offline.clone());
+        let r = setup
+            .run(System::HyGen { latency_budget_ms: 25.0 }, &workload, ctx.horizon_s)
+            .unwrap()
+            .report;
+        assert!(
+            r.offline_tps < last * 1.1,
+            "offline tps should not grow with online load: {} after {last}",
+            r.offline_tps
+        );
+        last = r.offline_tps;
+    }
+}
+
+#[test]
+fn mooncake_trace_served_on_mistral() {
+    // Fig. 14 smoke: the Mooncake + Mistral combination runs end to end.
+    let online = mooncake::generate(
+        &MooncakeTraceConfig { duration_s: 60.0, mean_qps: 0.8, ..Default::default() },
+        6,
+    );
+    let offline = datasets::generate(Dataset::ArxivSummarization, 300, 6);
+    let setup = SimSetup::new(CostModel::a100_mistral7b());
+    let r = setup
+        .run(System::HyGen { latency_budget_ms: 40.0 }, &online.merged(offline), 120.0)
+        .unwrap();
+    assert!(r.finished_online > 10);
+    assert!(r.report.offline_tps > 0.0);
+}
+
+#[test]
+fn a5000_small_model_served() {
+    // Fig. 15 smoke.
+    let online = azure::generate(
+        &AzureTraceConfig {
+            duration_s: 60.0,
+            mean_qps: 2.0,
+            max_prompt: 2000,
+            ..Default::default()
+        },
+        7,
+    );
+    let offline = datasets::generate(Dataset::CnnDailyMail, 500, 7);
+    let setup = SimSetup::new(CostModel::a5000_sheared27b());
+    let r = setup
+        .run(System::HyGen { latency_budget_ms: 30.0 }, &online.merged(offline), 120.0)
+        .unwrap();
+    assert!(r.finished_online > 20);
+    assert!(r.report.offline_tps > 0.0);
+}
+
+#[test]
+fn tp_pp_run_completes_with_lower_latency_than_serial() {
+    // Fig. 9 structural check: the TP2/PP2 cost model serves the same
+    // workload with lower TBT than a hypothetical serial 34B.
+    let online = azure_online(0.4, 8);
+    let offline = datasets::generate(Dataset::ArxivSummarization, 200, 8);
+    let workload = online.merged(offline);
+    let par = SimSetup::new(CostModel::a40x4_yi34b_tp2pp2());
+    let serial = SimSetup::new(CostModel::a40x4_yi34b_tp2pp2().with_parallelism(1, 1));
+    let rp = par.run(System::SarathiPlusPlus, &workload, 120.0).unwrap().report;
+    let rs = serial.run(System::SarathiPlusPlus, &workload, 120.0).unwrap().report;
+    assert!(rp.mean_tbt_ms < rs.mean_tbt_ms, "{} !< {}", rp.mean_tbt_ms, rs.mean_tbt_ms);
+}
+
+#[test]
+fn predictor_degradation_is_tolerated() {
+    // Fig. 16 shape: a 20%-noisy predictor still serves with bounded SLO
+    // damage (the profiler's macro budget absorbs micro errors).
+    let ctx = ctx();
+    let online = azure_online(1.5, 9);
+    let offline = datasets::generate(Dataset::ArxivSummarization, 500, 9);
+    let workload = online.clone().merged(offline);
+    let accurate = SimSetup::new(CostModel::a100_llama7b());
+    let base = online_baseline(&accurate, &online, &ctx).unwrap();
+    let slo = Slo::from_tolerance(SloMetric::P99Tbt, base.p99_tbt_ms, 0.2);
+    let mut rng = hygen::util::rng::Rng::new(10);
+    let degraded_predictor = accurate.predictor.degraded(0.2, &mut rng);
+    let degraded = SimSetup::new(CostModel::a100_llama7b()).with_predictor(degraded_predictor);
+    let (_p, r) = hygen_profiled(&degraded, &workload, &slo, &ctx).unwrap();
+    assert!(
+        r.p99_tbt_ms <= slo.limit_ms * 1.1,
+        "degraded predictor broke the SLO badly: {} vs {}",
+        r.p99_tbt_ms,
+        slo.limit_ms
+    );
+    assert!(r.offline_tps > 0.0);
+}

@@ -1,0 +1,176 @@
+//! Integration tests over the real PJRT runtime + backend.
+//!
+//! These need `make artifacts` to have run (they are skipped with a
+//! message otherwise, so `cargo test` stays green on a fresh checkout).
+
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::coordinator::request::{Class, Request};
+use hygen::engine::pjrt_backend::build_real_engine;
+use hygen::runtime::{tokenizer, PjrtRuntime};
+use hygen::util::json::Json;
+use hygen::workload::trace::{Trace, TraceEvent};
+
+const ARTIFACTS: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn runtime_loads_all_buckets() {
+    require_artifacts!();
+    let rt = PjrtRuntime::load(ARTIFACTS).unwrap();
+    assert!(rt.buckets().len() >= 4);
+    assert!(rt.buckets().contains(&(8, 32)));
+    assert_eq!(rt.dims.vocab, 256);
+    assert_eq!(rt.pick_bucket(3, 5), Some((4, 8)));
+}
+
+#[test]
+fn step_executes_and_shapes_match() {
+    require_artifacts!();
+    let rt = PjrtRuntime::load(ARTIFACTS).unwrap();
+    let (ck, cv) = rt.empty_caches(1);
+    let tokens = vec![72i32; 1]; // 'H'
+    let out = rt.step(1, 1, &tokens, &[0], &ck, &cv).unwrap();
+    assert_eq!(out.logits.len(), 256);
+    let tok = rt.argmax(&out, 0, 0);
+    assert!(tok < 256);
+}
+
+#[test]
+fn step_rejects_out_of_range_positions() {
+    require_artifacts!();
+    let rt = PjrtRuntime::load(ARTIFACTS).unwrap();
+    let (ck, cv) = rt.empty_caches(1);
+    let max = rt.dims.max_seq as i32;
+    assert!(rt.step(1, 1, &[0], &[max], &ck, &cv).is_err());
+    assert!(rt.step(1, 1, &[0], &[-1], &ck, &cv).is_err());
+    assert!(rt.step(1, 1, &[0, 0], &[0], &ck, &cv).is_err(), "bad token count");
+}
+
+/// THE cross-layer consistency check: greedy generation through the Rust
+/// PJRT path must reproduce the jax reference generation token-for-token
+/// (fixture produced by python/compile/aot.py at artifact-build time).
+#[test]
+fn greedy_generation_matches_jax_reference() {
+    require_artifacts!();
+    let fixture_text =
+        std::fs::read_to_string(format!("{ARTIFACTS}/expected_tokens.json")).unwrap();
+    let fixture = Json::parse(&fixture_text).unwrap();
+    let prompt: Vec<u32> = fixture
+        .get("prompt_tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap() as u32)
+        .collect();
+    let expected: Vec<u32> = fixture
+        .get("output_tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_u64().unwrap() as u32)
+        .collect();
+
+    let mut engine =
+        build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, 0).unwrap();
+    let id = engine.fresh_id();
+    let req = Request::new(id, Class::Online, 0.0, prompt.len(), expected.len())
+        .with_prompt(prompt);
+    engine.submit(req);
+    while engine.has_work() {
+        engine.step().unwrap();
+    }
+    assert_eq!(engine.state.finished.len(), 1);
+    let got = &engine.state.finished[0].output_tokens;
+    assert_eq!(got, &expected, "rust PJRT generation != jax reference");
+}
+
+#[test]
+fn chunked_prefill_equals_monolithic_through_pjrt() {
+    require_artifacts!();
+    // Generate with a prompt long enough to be chunked (> max_chunk).
+    let run = |max_chunk: usize| -> Vec<u32> {
+        let mut engine =
+            build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, 0).unwrap();
+        engine.scheduler.cfg.max_chunk_per_request =
+            max_chunk.min(engine.scheduler.cfg.max_chunk_per_request);
+        let prompt = tokenizer::encode(
+            "This prompt is deliberately longer than one chunk bucket so that \
+             the scheduler must split it across iterations.",
+        );
+        let id = engine.fresh_id();
+        engine.submit(
+            Request::new(id, Class::Online, 0.0, prompt.len(), 6).with_prompt(prompt),
+        );
+        while engine.has_work() {
+            engine.step().unwrap();
+        }
+        engine.state.finished[0].output_tokens.clone()
+    };
+    let chunked = run(8); // forces many chunks
+    let monolithic = run(32);
+    assert_eq!(chunked, monolithic, "chunked prefill must be numerically invisible");
+}
+
+#[test]
+fn colocated_batch_serves_online_and_offline() {
+    require_artifacts!();
+    let mut engine =
+        build_real_engine(ARTIFACTS, None, OfflinePolicy::Psm, 0).unwrap();
+    let mut events = Vec::new();
+    for i in 0..3 {
+        events.push(TraceEvent {
+            arrival_s: i as f64 * 0.001,
+            class: Class::Online,
+            prompt_len: 24,
+            output_len: 4,
+            prompt: tokenizer::encode(&format!("online request number {i} body")),
+        });
+    }
+    for i in 0..4 {
+        let p = tokenizer::encode(&format!("Summarize the following: doc {i}"));
+        events.push(TraceEvent {
+            arrival_s: 0.0,
+            class: Class::Offline,
+            prompt_len: p.len(),
+            output_len: 3,
+            prompt: p,
+        });
+    }
+    let r = engine.run_trace(&Trace::new(events), 300.0, true).unwrap();
+    assert_eq!(r.finished_online, 3);
+    assert_eq!(r.finished_offline, 4);
+    assert!(r.report.mean_ttft_ms > 0.0);
+    assert!(engine.backend.steps > 0);
+    engine.state.check_invariants().unwrap();
+}
+
+#[test]
+fn deterministic_generation_across_runs() {
+    require_artifacts!();
+    let run = || {
+        let mut engine =
+            build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, 0).unwrap();
+        let prompt = tokenizer::encode("determinism check");
+        let id = engine.fresh_id();
+        engine.submit(
+            Request::new(id, Class::Online, 0.0, prompt.len(), 8).with_prompt(prompt),
+        );
+        while engine.has_work() {
+            engine.step().unwrap();
+        }
+        engine.state.finished[0].output_tokens.clone()
+    };
+    assert_eq!(run(), run());
+}

@@ -1,0 +1,232 @@
+//! Property tests on the PSM prefix trie, the fairness extension, and the
+//! block manager (Alg. 3/4 invariants + memory-safety invariants).
+
+use hygen::coordinator::block_manager::{chain_hashes, BlockManager};
+use hygen::coordinator::fairness::FairPsm;
+use hygen::coordinator::psm::{lcp, PrefixTree};
+use hygen::util::prop::{check, Gen};
+
+fn random_prompt(g: &mut Gen) -> Vec<u32> {
+    // family-structured prompts: shared template + unique suffix
+    let fam = g.u64(0, 6) as u32;
+    let shared = g.usize(0, 40);
+    let unique = g.usize(1, 40);
+    let tag = g.u64(0, 1 << 30) as u32;
+    (0..shared as u32)
+        .map(|k| fam * 10_000 + k)
+        .chain((0..unique as u32).map(|k| tag.wrapping_mul(2654435761).wrapping_add(k)))
+        .collect()
+}
+
+#[test]
+fn prop_trie_drains_exactly_once_each() {
+    check("trie drain", 200, |g| {
+        let mut t = PrefixTree::new();
+        let n = g.usize(1, 60);
+        let prompts: Vec<Vec<u32>> = (0..n).map(|_| random_prompt(g)).collect();
+        for (i, p) in prompts.iter().enumerate() {
+            t.insert(i as u64, p);
+        }
+        assert_eq!(t.len(), n);
+        let mut seen = std::collections::HashSet::new();
+        while let Some(id) = t.pop_next() {
+            assert!(seen.insert(id), "id {id} popped twice");
+        }
+        assert_eq!(seen.len(), n, "every request popped exactly once");
+        assert!(t.is_empty());
+    });
+}
+
+#[test]
+fn prop_dfs_order_adjacent_lcp_dominates_arrival_order() {
+    check("dfs maximizes adjacent sharing", 100, |g| {
+        let n = g.usize(8, 60);
+        let prompts: Vec<Vec<u32>> = (0..n).map(|_| random_prompt(g)).collect();
+        let mut t = PrefixTree::new();
+        for (i, p) in prompts.iter().enumerate() {
+            t.insert(i as u64, p);
+        }
+        let order = t.dfs_order();
+        let dfs_sharing: usize = order
+            .windows(2)
+            .map(|w| lcp(&prompts[w[0] as usize], &prompts[w[1] as usize]))
+            .sum();
+        let arrival_sharing: usize =
+            prompts.windows(2).map(|w| lcp(&w[0], &w[1])).sum();
+        assert!(
+            dfs_sharing >= arrival_sharing,
+            "DFS adjacent sharing {dfs_sharing} < arrival {arrival_sharing}"
+        );
+    });
+}
+
+#[test]
+fn prop_dfs_order_is_sorted_order() {
+    check("dfs == lexicographic", 100, |g| {
+        // DFS over a trie with token-ordered edges == lexicographic sort.
+        let n = g.usize(1, 50);
+        let prompts: Vec<Vec<u32>> = (0..n).map(|_| random_prompt(g)).collect();
+        let mut t = PrefixTree::new();
+        for (i, p) in prompts.iter().enumerate() {
+            t.insert(i as u64, p);
+        }
+        let order = t.dfs_order();
+        for w in order.windows(2) {
+            let a = &prompts[w[0] as usize];
+            let b = &prompts[w[1] as usize];
+            assert!(a <= b, "DFS order not lexicographic: {a:?} > {b:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_trie_interleaved_ops_stay_consistent() {
+    check("trie interleaved", 150, |g| {
+        let mut t = PrefixTree::new();
+        let mut live = std::collections::HashSet::new();
+        let mut next_id = 0u64;
+        for _ in 0..g.usize(10, 120) {
+            match g.usize(0, 3) {
+                0 => {
+                    let p = random_prompt(g);
+                    t.insert(next_id, &p);
+                    live.insert(next_id);
+                    next_id += 1;
+                }
+                1 => {
+                    if let Some(id) = t.pop_next() {
+                        assert!(live.remove(&id));
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let id = *live.iter().next().unwrap();
+                        assert!(t.remove(id));
+                        live.remove(&id);
+                    }
+                }
+            }
+            assert_eq!(t.len(), live.len());
+            if let Some(id) = t.peek_next() {
+                assert!(live.contains(&id));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fair_psm_sync_and_no_loss() {
+    check("fair psm sync", 150, |g| {
+        let u = g.f64(0.0, 1.0);
+        let mut f = FairPsm::new(u, g.u64(0, 1 << 40));
+        let n = g.usize(1, 80);
+        for i in 0..n {
+            f.insert(i as u64, &random_prompt(g), g.f64(0.0, 100.0));
+        }
+        let mut popped = std::collections::HashSet::new();
+        while let Some(id) = f.pop_next() {
+            assert!(popped.insert(id));
+            assert_eq!(f.trie.len(), f.fresh.len(), "structures out of sync");
+        }
+        assert_eq!(popped.len(), n);
+    });
+}
+
+#[test]
+fn prop_fair_psm_bounded_staleness_at_low_u() {
+    check("bounded staleness", 40, |g| {
+        // With u <= 0.5 the stalest request is picked with prob >= 0.5 per
+        // pop; over a 120-pop window the oldest must surface w.h.p.
+        let mut f = FairPsm::new(0.3, g.u64(0, 1 << 40));
+        f.insert(0, &random_prompt(g), 0.0); // the oldest
+        for i in 1..120u64 {
+            f.insert(i, &random_prompt(g), 1.0 + i as f64);
+        }
+        let mut found = false;
+        for _ in 0..60 {
+            if f.pop_next() == Some(0) {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "oldest request starved under u=0.3");
+    });
+}
+
+#[test]
+fn prop_block_manager_conservation() {
+    check("block conservation", 200, |g| {
+        let num_blocks = g.usize(8, 128);
+        let mut bm = BlockManager::new(num_blocks, 16);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..g.usize(10, 150) {
+            match g.usize(0, 3) {
+                0 => {
+                    let tokens = g.usize(1, 400);
+                    let chain: Vec<u64> = if g.bool() {
+                        let toks: Vec<u32> =
+                            (0..tokens as u32).map(|k| (k / 64) * 7 + g.u64(0, 3) as u32).collect();
+                        chain_hashes(&toks, 16)
+                    } else {
+                        vec![]
+                    };
+                    if bm.allocate(next, tokens, &chain).is_some() {
+                        live.push(next);
+                    }
+                    next += 1;
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let idx = g.usize(0, live.len());
+                        bm.release(live.swap_remove(idx));
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let idx = g.usize(0, live.len());
+                        let id = live[idx];
+                        let grown = bm.tokens_of(id) + g.usize(1, 32);
+                        let _ = bm.grow(id, grown);
+                    }
+                }
+            }
+            assert!(bm.used_blocks() + bm.free_blocks() == num_blocks, "blocks leaked");
+            assert_eq!(bm.num_seqs(), live.len());
+        }
+        for id in live {
+            bm.release(id);
+        }
+        assert_eq!(bm.used_blocks(), 0, "all blocks returned after release");
+    });
+}
+
+#[test]
+fn prop_prefix_sharing_never_exceeds_actual_lcp() {
+    check("lcp honesty", 150, |g| {
+        use hygen::coordinator::queues::{OfflinePolicy, OfflineQueue};
+        use hygen::coordinator::request::{Class, Request};
+        let mut q = OfflineQueue::new(OfflinePolicy::Psm, g.u64(0, 1 << 30));
+        let n = g.usize(2, 50);
+        let prompts: Vec<Vec<u32>> = (0..n).map(|_| random_prompt(g)).collect();
+        for (i, p) in prompts.iter().enumerate() {
+            q.push(
+                Request::new(i as u64, Class::Offline, i as f64, p.len(), 4)
+                    .with_prompt(p.clone()),
+            );
+        }
+        let mut prev: Option<Vec<u32>> = None;
+        while let Some(r) = q.pop_next() {
+            if let Some(p) = &prev {
+                assert_eq!(
+                    r.shared_prefix_len,
+                    lcp(p, &r.prompt),
+                    "reported sharing must equal the true LCP"
+                );
+            } else {
+                assert_eq!(r.shared_prefix_len, 0);
+            }
+            prev = Some(r.prompt.clone());
+        }
+    });
+}

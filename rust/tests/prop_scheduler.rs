@@ -1,0 +1,244 @@
+//! Property tests on scheduler/coordinator invariants (routing, batching,
+//! budgets, preemption, memory) using the in-repo prop harness.
+
+use hygen::coordinator::batch::Features;
+use hygen::coordinator::predictor::LatencyPredictor;
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::coordinator::request::{Class, Request};
+use hygen::coordinator::scheduler::{HybridScheduler, PreemptionMode, SchedulerConfig};
+use hygen::coordinator::state::EngineState;
+use hygen::util::prop::{check, Gen};
+
+fn random_state(g: &mut Gen) -> EngineState {
+    let blocks = g.usize(32, 1024);
+    let policy = *g.pick(&[
+        OfflinePolicy::Fcfs,
+        OfflinePolicy::Psm,
+        OfflinePolicy::PsmFair { utility_ratio: 0.5 },
+    ]);
+    let mut st = EngineState::new(policy, blocks, 16, g.u64(0, 1 << 32));
+    let n = g.usize(0, 30);
+    for i in 0..n {
+        let class = if g.bool() { Class::Online } else { Class::Offline };
+        let plen = g.usize(1, 600);
+        let prompt: Vec<u32> = if g.bool() {
+            // family-structured prompts exercise the trie
+            let fam = g.u64(0, 5) as u32;
+            (0..plen as u32)
+                .map(|k| if k < 32 { fam * 1000 + k } else { i as u32 * 7919 + k })
+                .collect()
+        } else {
+            (0..plen as u32).map(|k| i as u32 * 104729 + k).collect()
+        };
+        st.enqueue(
+            Request::new(i as u64, class, g.f64(0.0, 10.0), plen, g.usize(1, 64))
+                .with_prompt(prompt),
+        );
+    }
+    st
+}
+
+fn random_config(g: &mut Gen) -> SchedulerConfig {
+    SchedulerConfig {
+        latency_budget_ms: if g.bool() { Some(g.f64(5.0, 200.0)) } else { None },
+        chunk_tokens: g.usize(16, 2048),
+        max_chunk_per_request: *g.pick(&[8usize, 32, 512, usize::MAX]),
+        max_running: g.usize(1, 64),
+        preemption: if g.bool() { PreemptionMode::Preserve } else { PreemptionMode::Discard },
+        enable_offline: g.bool(),
+        offline_qps_cap: if g.bool() { Some(g.f64(0.1, 10.0)) } else { None },
+        watermark_blocks: g.usize(0, 4),
+    }
+}
+
+/// Apply a batch like the engine would; returns finished ids.
+fn apply(st: &mut EngineState, batch: &hygen::coordinator::batch::Batch) {
+    let mut done = Vec::new();
+    for e in &batch.entries {
+        let r = st.req_mut(e.id);
+        if e.is_prefill {
+            r.advance_prefill(e.n_tokens);
+            if r.prefill_done() {
+                r.advance_decode();
+            }
+        } else {
+            r.advance_decode();
+        }
+        if st.requests[&e.id].is_finished() {
+            done.push(e.id);
+        }
+    }
+    for id in done {
+        st.finish(id);
+    }
+}
+
+/// Drive a random workload through many schedule/apply rounds.
+fn drive(
+    g: &mut Gen,
+    rounds: usize,
+    mut inspect: impl FnMut(&HybridScheduler, &EngineState, &hygen::coordinator::batch::Batch),
+) {
+    let mut st = random_state(g);
+    let cfg = random_config(g);
+    let mut sched = HybridScheduler::new(cfg, LatencyPredictor::default_seed());
+    for round in 0..rounds {
+        let now = round as f64 * 0.02;
+        let batch = sched.schedule(&mut st, now);
+        inspect(&sched, &st, &batch);
+        apply(&mut st, &batch);
+    }
+}
+
+#[test]
+fn prop_state_invariants_hold_under_random_workloads() {
+    check("state invariants", 150, |g| {
+        drive(g, 40, |_s, st, _b| {
+            st.check_invariants().unwrap();
+        });
+    });
+}
+
+#[test]
+fn prop_batch_never_exceeds_budgets() {
+    check("budget compliance", 150, |g| {
+        drive(g, 30, |s, _st, b| {
+            // chunk budget: scheduled prefill tokens never exceed the
+            // iteration token budget (decodes ride along, matching the
+            // scheduler's `c` accounting).
+            let prefill_tokens: usize =
+                b.entries.iter().filter(|e| e.is_prefill).map(|e| e.n_tokens).sum();
+            assert!(
+                prefill_tokens <= s.cfg.chunk_tokens,
+                "prefill {prefill_tokens} > chunk {}",
+                s.cfg.chunk_tokens
+            );
+            for e in &b.entries {
+                if e.is_prefill {
+                    assert!(e.n_tokens <= s.cfg.max_chunk_per_request);
+                    assert!(e.n_tokens > 0);
+                }
+            }
+            assert!(b.len() <= s.cfg.max_running, "batch larger than slot bound");
+        });
+    });
+}
+
+#[test]
+fn prop_latency_budget_respected_on_offline_only_workloads() {
+    check("latency budget", 100, |g| {
+        // All-offline workloads: nothing may bypass the budget.
+        let blocks = g.usize(256, 2048);
+        let mut st = EngineState::new(OfflinePolicy::Fcfs, blocks, 16, 1);
+        for i in 0..g.usize(1, 40) {
+            let plen = g.usize(16, 1500);
+            st.enqueue(
+                Request::new(i as u64, Class::Offline, 0.0, plen, g.usize(1, 32))
+                    .with_prompt((0..plen as u32).collect()),
+            );
+        }
+        let budget = g.f64(8.0, 80.0);
+        let mut sched = HybridScheduler::new(
+            SchedulerConfig {
+                latency_budget_ms: Some(budget),
+                chunk_tokens: 1 << 20,
+                ..Default::default()
+            },
+            LatencyPredictor::default_seed(),
+        );
+        for round in 0..10 {
+            let b = sched.schedule(&mut st, round as f64);
+            assert!(
+                sched.last_stats.predicted_ms <= budget + 1e-6,
+                "predicted {} > budget {budget}",
+                sched.last_stats.predicted_ms
+            );
+            apply(&mut st, &b);
+        }
+    });
+}
+
+#[test]
+fn prop_no_request_lost_or_duplicated() {
+    check("request conservation", 150, |g| {
+        let mut st = random_state(g);
+        let total = st.online_queue.len() + st.offline_queue.len();
+        let cfg = random_config(g);
+        let mut sched = HybridScheduler::new(cfg, LatencyPredictor::default_seed());
+        for round in 0..60 {
+            let b = sched.schedule(&mut st, round as f64 * 0.02);
+            apply(&mut st, &b);
+            // conservation: queued + running + preempted + finished == total
+            let now = st.online_queue.len()
+                + st.offline_queue.len()
+                + st.num_running()
+                + st.preempted_offline.len()
+                + st.finished.len();
+            assert_eq!(now, total, "requests lost/duplicated at round {round}");
+            // no id in two running/preempted sets at once
+            let mut seen = std::collections::HashSet::new();
+            for &id in
+                st.running_online.iter().chain(&st.running_offline).chain(&st.preempted_offline)
+            {
+                assert!(seen.insert(id), "id {id} in two sets");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_only_offline_requests_are_preempted() {
+    check("preemption direction", 100, |g| {
+        drive(g, 40, |_s, st, _b| {
+            for id in &st.preempted_offline {
+                assert_eq!(st.requests[id].class, Class::Offline);
+            }
+        });
+    });
+}
+
+#[test]
+fn prop_disable_offline_schedules_online_only() {
+    check("pure-online mode", 80, |g| {
+        let mut st = random_state(g);
+        let mut cfg = random_config(g);
+        cfg.enable_offline = false;
+        let mut sched = HybridScheduler::new(cfg, LatencyPredictor::default_seed());
+        for round in 0..20 {
+            let b = sched.schedule(&mut st, round as f64 * 0.02);
+            assert!(b.entries.iter().all(|e| e.class.is_online()));
+            apply(&mut st, &b);
+        }
+    });
+}
+
+#[test]
+fn prop_max_prefill_tokens_always_within_budget() {
+    check("predictor inversion", 300, |g| {
+        // Random (even partially non-physical) coefficients: the
+        // verification loop must still never exceed the budget.
+        let mut coef = [0.0; 7];
+        for c in coef.iter_mut() {
+            *c = g.f64(-0.01, 0.3);
+        }
+        coef[3] = g.f64(0.0, 1e-4); // sp^2 >= 0
+        let p = LatencyPredictor { coef };
+        let mut f = Features::default();
+        for _ in 0..g.usize(0, 5) {
+            f.add_prefill(g.usize(1, 1024));
+        }
+        for _ in 0..g.usize(0, 32) {
+            f.add_decode();
+        }
+        let budget = g.f64(0.0, 50.0);
+        let cap = g.usize(1, 4096);
+        let (l, t_req) =
+            p.max_prefill_tokens(&f, budget, cap, g.usize(1, 1 << 16), g.usize(1, 1 << 16));
+        assert!(l <= cap);
+        if l > 0 {
+            assert!(t_req <= budget + 1e-9, "t_req {t_req} > budget {budget}");
+            let real = (p.predict(&f.with_prefill(l)) - p.predict(&f)).max(0.0);
+            assert!(real <= budget + 1e-9, "real marginal {real} > budget {budget}");
+        }
+    });
+}
