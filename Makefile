@@ -1,0 +1,24 @@
+# HyGen build entry points. The Rust crate is the primary artifact
+# (`cargo build --release` / `cargo test -q` work without any of this);
+# `make artifacts` produces the AOT HLO artifacts the PJRT execution path
+# (`--features pjrt`) loads at startup.
+
+.PHONY: all artifacts test bench clean
+
+all:
+	cargo build --release
+
+# AOT-lower the Layer-2 JAX step function (with the Layer-1 Pallas kernel
+# inside) to HLO text + weights + manifest under artifacts/.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench
+
+clean:
+	cargo clean
+	rm -rf artifacts results

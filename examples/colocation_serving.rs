@@ -1,11 +1,14 @@
-//! End-to-end co-location driver on the REAL engine (the serving-paper
-//! validation run required by EXPERIMENTS.md): an Azure-like online trace
+//! End-to-end co-location driver on the REAL engine (the cross-layer
+//! validation run of DESIGN.md's experiment index): an Azure-like online trace
 //! and an offline summarization backlog are served *together* through the
 //! AOT-compiled model on PJRT, with HyGen's scheduler enforcing a latency
 //! budget. Reports TTFT/TBT/TPS for both classes, with and without
 //! co-location.
 //!
-//!     make artifacts && cargo run --release --example colocation_serving
+//!     make artifacts && cargo run --release --features pjrt --example colocation_serving
+//!
+//! (Without `--features pjrt` this compiles against the stub backend and
+//! exits with an explanatory error.)
 
 use hygen::coordinator::queues::OfflinePolicy;
 use hygen::coordinator::request::Class;
@@ -100,8 +103,8 @@ fn main() -> anyhow::Result<()> {
          slots), so Sarathi++'s interference is milder than on a GPU; the\n\
          budget's effect shows mostly in tail TTFT. The fine-grained\n\
          latency/throughput tradeoff is reproduced at paper scale by the\n\
-         simulator figures (cargo run --release -- figures all). Recorded in\n\
-         EXPERIMENTS.md §E2E."
+         simulator figures (cargo run --release -- figures all); see\n\
+         DESIGN.md's experiment index."
     );
     Ok(())
 }

@@ -1,7 +1,10 @@
 //! Quickstart: load the AOT artifacts, run one completion end-to-end
 //! through the real PJRT engine, and print the result.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     make artifacts && cargo run --release --features pjrt --example quickstart
+//!
+//! (Without `--features pjrt` this compiles against the stub backend and
+//! exits with an explanatory error.)
 //!
 //! Everything on the request path is Rust: the scheduler builds the
 //! batches, the PJRT CPU client executes the AOT-compiled JAX/Pallas step

@@ -7,8 +7,8 @@ HLO text -- NOT ``lowered.compile().serialize()`` and NOT the serialized
 HloModuleProto -- is the interchange format: jax >= 0.5 emits protos with
 64-bit instruction ids which xla_extension 0.5.1 (what the published
 ``xla = 0.1.6`` crate binds) rejects with ``proto.id() <= INT_MAX``. The
-text parser reassigns ids, so text round-trips cleanly. See
-/opt/xla-example/README.md.
+text parser reassigns ids, so text round-trips cleanly (see
+rust/src/runtime/mod.rs).
 
 One artifact is emitted per (B, C) shape bucket -- XLA executables have
 static shapes, so the Rust engine pads each iteration batch up to the

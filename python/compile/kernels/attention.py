@@ -17,7 +17,7 @@ This is HyGen's compute hot-spot expressed for the TPU execution model
 
 Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
 Mosaic custom-calls, so interpret mode is the correctness path and real-TPU
-performance is estimated analytically (EXPERIMENTS.md §Perf).
+performance is estimated analytically (see DESIGN.md §5).
 """
 
 from __future__ import annotations

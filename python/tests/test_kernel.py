@@ -99,7 +99,7 @@ class TestKernelVsRef:
 
 
 class TestRoofline:
-    """Sanity of the §Perf estimators (they feed EXPERIMENTS.md)."""
+    """Sanity of the roofline estimators (they feed the analytic cost models; DESIGN.md §5)."""
 
     def test_vmem_fits_budget(self):
         # production bucket: C=32, T=256, D=32, block_k=64 per (slot, head)

@@ -5,6 +5,10 @@
 use crate::coordinator::queues::OfflinePolicy;
 use crate::util::json::Json;
 
+/// The crate's top-level config type (alias kept so docs and tests can
+/// refer to `config::Config` generically).
+pub type Config = ServeConfig;
+
 /// Configuration of a real serving instance (`hygen serve`).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {

@@ -6,7 +6,8 @@
 //!   predictor charges every scheduling decision against it. `None`
 //!   disables SLO-awareness (that is exactly the Sarathi++ baseline).
 //! * **chunk** `c` — the Sarathi token budget per iteration.
-//! * **memory** `m` — free KV blocks via the [`BlockManager`].
+//! * **memory** `m` — free KV blocks via the
+//!   [`BlockManager`](super::block_manager::BlockManager).
 //!
 //! Phase 1 (online) schedules online decodes unconditionally and online
 //! prefill chunks under `c`/`m`, preempting offline requests for memory.
@@ -20,8 +21,6 @@
 use super::batch::{Batch, BatchEntry, Features};
 use super::predictor::LatencyPredictor;
 use super::request::{Class, Phase, RequestId};
-#[cfg(test)]
-use super::request::Request;
 use super::state::EngineState;
 
 /// How preempted offline requests are handled (InferCept's taxonomy).

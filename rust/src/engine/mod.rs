@@ -4,10 +4,76 @@
 //! `Engine` is backend-generic: the *same* scheduler decisions run against
 //! [`crate::sim::SimBackend`] (paper-scale experiments) and
 //! [`pjrt_backend::PjrtBackend`] (the real AOT artifacts on the PJRT CPU
-//! client). Time is a virtual clock advanced by each batch's execution
-//! latency; the real backend reports measured wallclock.
+//! client, behind the `pjrt` cargo feature). Time is a virtual clock
+//! advanced by each batch's execution latency; the real backend reports
+//! measured wallclock.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt_backend;
+
+/// Stub of the real execution backend for builds without the `pjrt`
+/// feature (the default). It keeps every `pjrt_backend` path compiling —
+/// the `hygen serve` subcommand, `examples/quickstart.rs`, and
+/// `examples/colocation_serving.rs` — while reporting at runtime that the
+/// crate was built without PJRT support. See DESIGN.md §"Execution
+/// backends" for when to enable the real path.
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt_backend {
+    use super::{Engine, ExecutionBackend};
+    use crate::coordinator::batch::Batch;
+    use crate::coordinator::queues::OfflinePolicy;
+    use crate::coordinator::state::EngineState;
+
+    /// Placeholder for the PJRT execution backend; executing anything
+    /// through it is an error.
+    pub struct PjrtBackend {
+        /// Total PJRT steps executed (always 0 in the stub).
+        pub steps: u64,
+    }
+
+    impl PjrtBackend {
+        /// Sequence slots of the loaded artifacts (0 in the stub).
+        pub fn nslots(&self) -> usize {
+            0
+        }
+
+        /// Largest per-slot chunk bucket (0 in the stub).
+        pub fn max_chunk(&self) -> usize {
+            0
+        }
+
+        /// Longest request the backend can hold (0 in the stub).
+        pub fn max_request_len(&self) -> usize {
+            0
+        }
+    }
+
+    impl ExecutionBackend for PjrtBackend {
+        fn execute(&mut self, _batch: &Batch, _state: &mut EngineState) -> anyhow::Result<f64> {
+            anyhow::bail!("hygen was built without the `pjrt` feature")
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-stub"
+        }
+    }
+
+    /// Always errors: building the real engine requires the `pjrt`
+    /// feature (which pulls in the `xla` crate and its PJRT plugin).
+    pub fn build_real_engine(
+        _artifacts_dir: &str,
+        _latency_budget_ms: Option<f64>,
+        _policy: OfflinePolicy,
+        _seed: u64,
+    ) -> anyhow::Result<Engine<PjrtBackend>> {
+        anyhow::bail!(
+            "this hygen build has no PJRT support; rebuild with \
+             `cargo build --release --features pjrt` (and run `make artifacts` \
+             first), or use the simulation backend (`hygen run-trace`, \
+             `hygen figures`)"
+        )
+    }
+}
 
 use crate::coordinator::batch::Batch;
 use crate::coordinator::metrics::{Metrics, Report};

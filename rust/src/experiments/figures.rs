@@ -2,7 +2,8 @@
 //! scratch (trace synthesis → profiling → runs) and returns a [`Table`]
 //! that is printed and written to `results/figN.csv`.
 //!
-//! Expected *shapes* (what EXPERIMENTS.md checks against the paper):
+//! Expected *shapes* (checked against the paper in DESIGN.md's
+//! experiment index):
 //! * fig1/13 — request-rate burstiness of the online traces
 //! * fig3 — HyGen tracks each SLO limit; Sarathi++ is flat and violating
 //! * fig4 — offline/total TPS grows with tolerance; HyGen ≥ HyGen*;

@@ -18,9 +18,11 @@
 //!
 //! Two interchangeable execution backends drive the *same* scheduler:
 //! [`engine::pjrt_backend::PjrtBackend`] executes the real AOT artifacts on
-//! the PJRT CPU client, and [`sim::SimBackend`] is a calibrated discrete-
-//! event cost model used to regenerate the paper's evaluation at
-//! A100/A40/A5000 scale (see DESIGN.md for the substitution table).
+//! the PJRT CPU client (behind the `pjrt` cargo feature, which pulls in
+//! the `xla` crate), and [`sim::SimBackend`] — the default — is a
+//! calibrated discrete-event cost model used to regenerate the paper's
+//! evaluation at A100/A40/A5000 scale (see DESIGN.md for the substitution
+//! table).
 //!
 //! Entry points: the `hygen` binary (`serve`, `run-trace`, `figures`,
 //! `profile`, `train-predictor` subcommands), the `examples/`, and the

@@ -30,6 +30,7 @@ hygen — elastic online/offline LLM request co-location (HyGen reproduction)
 USAGE:
   hygen serve        [--config serve.json] [--bind ADDR] [--budget-ms N]
                      [--policy fcfs|psm|psm-fair] [--artifacts DIR]
+                     (requires a build with `--features pjrt` + `make artifacts`)
   hygen run-trace    [--system hygen|hygen-star|sarathi|sarathi++|sarathi-offline]
                      [--model NAME] [--online-qps N] [--offline-dataset arxiv|cnn|mmlu]
                      [--offline-n N] [--budget-ms N] [--policy P] [--duration S]

@@ -3,16 +3,24 @@
 //! executes the Layer-2 step function on the PJRT CPU client via the `xla`
 //! crate. Python never runs here — this is the request path.
 //!
+//! Everything that touches the `xla` crate is gated behind the `pjrt`
+//! cargo feature; the default build ships only [`tokenizer`] and
+//! [`ModelDims`] so the crate compiles on machines without a PJRT plugin
+//! (the calibrated `sim` backend is the default execution path).
+//!
 //! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and
-//! python/compile/aot.py).
+//! parser reassigns ids (see python/compile/aot.py).
 
 pub mod tokenizer;
 
+#[cfg(feature = "pjrt")]
 use crate::util::json::Json;
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// Model dimensions from `manifest.json` (must match the AOT'd weights).
@@ -29,11 +37,13 @@ pub struct ModelDims {
 }
 
 /// One compiled (batch-slots, chunk-tokens) shape bucket.
+#[cfg(feature = "pjrt")]
 struct Bucket {
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The loaded runtime: PJRT client + per-bucket executables + weights.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -44,6 +54,7 @@ pub struct PjrtRuntime {
 }
 
 /// Output of one step execution.
+#[cfg(feature = "pjrt")]
 pub struct StepOutput {
     /// Row-major logits `[B, C, V]`.
     pub logits: Vec<f32>,
@@ -54,6 +65,7 @@ pub struct StepOutput {
     pub cache_v: xla::Literal,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Load every artifact listed in `<dir>/manifest.json` and compile it
     /// on a fresh PJRT CPU client.
@@ -213,7 +225,6 @@ impl PjrtRuntime {
 mod tests {
     // Runtime tests that need artifacts live in rust/tests/integration.rs
     // (they require `make artifacts` and a PJRT client). Here: pure logic.
-    use super::*;
 
     #[test]
     fn pick_bucket_logic() {
@@ -233,9 +244,10 @@ mod tests {
         assert_eq!(pick(9, 1), None);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn load_fails_cleanly_without_artifacts() {
-        let err = match PjrtRuntime::load("/nonexistent-dir") {
+        let err = match super::PjrtRuntime::load("/nonexistent-dir") {
             Ok(_) => panic!("load must fail"),
             Err(e) => e,
         };

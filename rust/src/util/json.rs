@@ -111,13 +111,6 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
-    }
-
     /// Serialize with 2-space indentation.
     pub fn to_pretty(&self) -> String {
         let mut out = String::new();
@@ -170,6 +163,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization (`.to_string()` comes via the blanket
+/// [`ToString`] impl).
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
     }
 }
 

@@ -4,7 +4,8 @@
 //! printed so the case replays deterministically:
 //!
 //! ```no_run
-//! // (no_run: doctest binaries lack the xla rpath in this environment)
+//! // (no_run: keeps `cargo test` cheap — the harness itself is exercised
+//! // by the unit tests below and by rust/tests/prop_*.rs)
 //! use hygen::util::prop::{check, Gen};
 //! check("sorted stays sorted", 200, |g: &mut Gen| {
 //!     let mut v = g.vec_u64(0, 100, 0..20);

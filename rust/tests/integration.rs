@@ -1,7 +1,11 @@
 //! Integration tests over the real PJRT runtime + backend.
 //!
-//! These need `make artifacts` to have run (they are skipped with a
-//! message otherwise, so `cargo test` stays green on a fresh checkout).
+//! The whole target is gated on the `pjrt` cargo feature (the default
+//! build has no PJRT runtime). With the feature on, the tests additionally
+//! need `make artifacts` to have run (they are skipped with a message
+//! otherwise, so `cargo test --features pjrt` stays green on a fresh
+//! checkout).
+#![cfg(feature = "pjrt")]
 
 use hygen::coordinator::queues::OfflinePolicy;
 use hygen::coordinator::request::{Class, Request};

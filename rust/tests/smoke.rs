@@ -1,0 +1,49 @@
+//! Build-surface smoke tests: the example targets must keep compiling
+//! (they live outside the crate directory and are easy to orphan when the
+//! manifest changes), and the default config must survive a round trip
+//! through the in-tree JSON substrate.
+
+use hygen::config::{Config, ServeConfig};
+use hygen::util::json::Json;
+
+#[test]
+fn config_defaults_roundtrip_through_util_json() {
+    let c = Config::default();
+    let text = c.to_json().to_pretty();
+    let parsed = Json::parse(&text).expect("serialized config must reparse");
+    let c2 = ServeConfig::from_json(&parsed).expect("reparsed config must validate");
+    assert_eq!(c2.artifacts_dir, c.artifacts_dir);
+    assert_eq!(c2.bind, c.bind);
+    assert_eq!(c2.latency_budget_ms, c.latency_budget_ms);
+    assert_eq!(c2.policy, c.policy);
+    assert_eq!(c2.http_workers, c.http_workers);
+    assert_eq!(c2.seed, c.seed);
+    // Compact form parses to the same document as the pretty form.
+    assert_eq!(Json::parse(&c.to_json().to_string()).unwrap(), parsed);
+}
+
+/// The examples live outside the crate directory, so they are easy to
+/// orphan when the manifest changes: a deleted `[[example]]` entry makes
+/// `cargo build --examples` quietly stop building the file. Guard both
+/// directions — every expected target is declared and its source exists,
+/// and the declared set actually compiles.
+#[test]
+fn every_example_target_compiles() {
+    let manifest_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let manifest = std::fs::read_to_string(manifest_dir.join("Cargo.toml")).unwrap();
+    for name in ["quickstart", "colocation_serving", "psm_demo", "slo_sweep"] {
+        assert!(
+            manifest.contains(&format!("name = \"{name}\"")),
+            "example `{name}` missing from rust/Cargo.toml"
+        );
+        let src = manifest_dir.join("../examples").join(format!("{name}.rs"));
+        assert!(src.exists(), "example source missing: {}", src.display());
+    }
+    let cargo = std::env::var("CARGO").unwrap_or_else(|_| "cargo".to_string());
+    let status = std::process::Command::new(cargo)
+        .args(["build", "--examples", "--quiet"])
+        .current_dir(manifest_dir)
+        .status()
+        .expect("failed to spawn cargo");
+    assert!(status.success(), "`cargo build --examples` failed: {status}");
+}
