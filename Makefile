@@ -3,7 +3,7 @@
 # `make artifacts` produces the AOT HLO artifacts the PJRT execution path
 # (`--features pjrt`) loads at startup.
 
-.PHONY: all artifacts test bench clean
+.PHONY: all artifacts test bench bench-sched clean
 
 all:
 	cargo build --release
@@ -18,6 +18,11 @@ test:
 
 bench:
 	cargo bench
+
+# Scheduling-overhead trajectory (10k-request mixed trace + scaling probe)
+# -> BENCH_sched.json
+bench-sched:
+	cargo run --release -- bench-sched
 
 clean:
 	cargo clean

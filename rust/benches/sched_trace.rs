@@ -1,0 +1,22 @@
+//! End-to-end scheduling-overhead bench: drives the synthetic mixed trace
+//! through `Engine::run_trace` on the sim backend and emits
+//! `BENCH_sched.json` — the same harness as `hygen bench-sched`, exposed
+//! as a bench target so `cargo bench` records the trajectory too.
+//!
+//! Env knobs: `BENCH_SCHED_FULL=1` for the 10 k-request shape (default is
+//! the quick CI shape), `BENCH_SCHED_OUT` to override the output path.
+
+use hygen::experiments::bench_sched::{run_and_save, BenchConfig};
+
+fn main() {
+    let cfg = if std::env::var("BENCH_SCHED_FULL").is_ok() {
+        BenchConfig::full()
+    } else {
+        BenchConfig::quick()
+    };
+    let out = std::env::var("BENCH_SCHED_OUT").unwrap_or_else(|_| "BENCH_sched.json".into());
+    if let Err(e) = run_and_save(&cfg, &out) {
+        eprintln!("bench-sched failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -21,12 +21,7 @@ fn steady_state(n_running: usize, n_queued: usize, policy: OfflinePolicy) -> Eng
         r.generated = 1 + (i % 8);
         r.phase = hygen::coordinator::request::Phase::Decode;
         st.blocks.allocate(id, r.context_len(), &[]).unwrap();
-        if i % 2 == 0 {
-            st.running_online.push(id);
-        } else {
-            st.running_offline.push(id);
-        }
-        st.requests.insert(id, r);
+        st.insert_running(r);
     }
     for i in 0..n_queued {
         let id = (10_000 + i) as u64;

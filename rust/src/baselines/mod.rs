@@ -130,13 +130,19 @@ impl SimSetup {
     }
 
     pub fn build(&self, system: System) -> Engine<SimBackend> {
+        self.build_with_config(system.scheduler_config(self.chunk_tokens))
+    }
+
+    /// Build a simulated engine with an explicit scheduler configuration —
+    /// for harnesses that need settings outside the paper's systems (the
+    /// scheduling micro-bench runs with thousands of slots, for example).
+    pub fn build_with_config(&self, cfg: SchedulerConfig) -> Engine<SimBackend> {
         let state = EngineState::new(
             self.policy,
             self.model.num_blocks(self.block_size),
             self.block_size,
             self.seed,
         );
-        let cfg = system.scheduler_config(self.chunk_tokens);
         let sched = HybridScheduler::new(cfg, self.predictor.clone());
         Engine::new(sched, state, SimBackend::new(self.model.clone(), self.seed))
     }

@@ -10,6 +10,7 @@
 //!   FCFS, Prefix-Sharing Maximization (Alg. 3), fairness-extended PSM
 //!   (Alg. 4) behind the dual-queue architecture.
 //! * [`block_manager`] — paged KV accounting with prefix caching.
+//! * [`runset`] — order-preserving indexed running sets (O(1) hot path).
 //! * [`state`] — the engine state the scheduler mutates.
 //! * [`metrics`] — TTFT/TBT/TPS accounting the SLO checks run on.
 
@@ -22,5 +23,6 @@ pub mod profiler;
 pub mod psm;
 pub mod queues;
 pub mod request;
+pub mod runset;
 pub mod scheduler;
 pub mod state;

@@ -47,6 +47,16 @@ impl OnlineQueue {
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
     }
+
+    /// Ids of all waiting requests, front to back (invariant checks).
+    pub fn ids(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.q.iter().map(|r| r.id)
+    }
+
+    /// Drop every waiting request (server abort path).
+    pub fn clear(&mut self) {
+        self.q.clear();
+    }
 }
 
 /// Offline queue ordering policies (the §4.3 design space).
@@ -149,10 +159,42 @@ impl OfflineQueue {
             Order::Fair(f) => f.pop_next(),
         }?;
         let mut req = self.reqs.remove(&id).expect("order/storage in sync");
-        let shared = super::psm::lcp(&self.last_prompt, &req.prompt);
-        req.shared_prefix_len = shared;
-        self.last_prompt = req.prompt.clone();
+        req.shared_prefix_len = super::psm::lcp(&self.last_prompt, &req.prompt);
+        // Reuse the context buffer instead of allocating a fresh clone of
+        // every popped prompt (pops are on the admission hot path).
+        self.last_prompt.clear();
+        self.last_prompt.extend_from_slice(&req.prompt);
         Some(req)
+    }
+
+    /// Forget the last-popped prompt (the LCP baseline). Must be called
+    /// when a popped request is returned *unscheduled* — admission undo,
+    /// discard-mode preemption — otherwise the baseline is that request's
+    /// own prompt and its next pop gets a bogus self-LCP credit (near-full
+    /// "shared" prefix that is resident nowhere).
+    pub fn reset_prefix_context(&mut self) {
+        self.last_prompt.clear();
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.reqs.contains_key(&id)
+    }
+
+    /// Ids of all waiting requests, in storage (not policy) order.
+    pub fn ids(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.reqs.keys().copied()
+    }
+
+    /// Drop every waiting request (server abort path).
+    pub fn clear(&mut self) {
+        // Drain through the policy structure so its bookkeeping (trie,
+        // fairness heap) empties alongside the storage map.
+        while self.pop_next().is_some() {}
+        debug_assert!(self.reqs.is_empty());
+        // The drain walked pop_next, leaving the last drained prompt as
+        // the LCP baseline — but every KV block was (or is about to be)
+        // released, so nothing popped after the abort shares state with it.
+        self.last_prompt.clear();
     }
 
     /// Remove a specific request (e.g. client cancelled).

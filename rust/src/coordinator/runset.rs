@@ -1,0 +1,287 @@
+//! [`RunSet`] — an order-preserving indexed set of running request ids.
+//!
+//! The scheduler needs three things from the running sets that a plain
+//! `Vec<RequestId>` cannot provide together at scale:
+//!
+//! * **stable order** — running offline requests keep their original DFS
+//!   (prefix-sharing) order across iterations (Alg. 3), and online
+//!   requests keep admission order;
+//! * **O(1) membership** — the offline decode loop must detect ids that a
+//!   self-preemption removed mid-pass (`Vec::contains` made one iteration
+//!   O(running²));
+//! * **O(1) removal** — `finish()` removes an arbitrary id per completed
+//!   request (`Vec::retain` over both sets made a drain of n requests
+//!   O(n²)).
+//!
+//! Implementation: a slab of doubly-linked nodes plus a
+//! `HashMap<RequestId, slot>` index. Push/pop/remove/contains are O(1);
+//! iteration is O(len) in insertion order. Freed slots are recycled so a
+//! steady-state engine does not grow the slab.
+
+use super::request::RequestId;
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+struct Node {
+    id: RequestId,
+    prev: usize,
+    next: usize,
+}
+
+/// Order-preserving set of request ids with O(1) insert/remove/contains.
+#[derive(Debug, Clone)]
+pub struct RunSet {
+    slab: Vec<Node>,
+    free: Vec<usize>,
+    index: HashMap<RequestId, usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl Default for RunSet {
+    fn default() -> Self {
+        RunSet::new()
+    }
+}
+
+impl RunSet {
+    pub fn new() -> RunSet {
+        RunSet { slab: Vec::new(), free: Vec::new(), index: HashMap::new(), head: NIL, tail: NIL }
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// First (oldest) id in order.
+    pub fn front(&self) -> Option<RequestId> {
+        (self.head != NIL).then(|| self.slab[self.head].id)
+    }
+
+    /// Last (newest) id in order.
+    pub fn last(&self) -> Option<RequestId> {
+        (self.tail != NIL).then(|| self.slab[self.tail].id)
+    }
+
+    /// Append `id`; ids are unique, pushing a present id is a logic error.
+    pub fn push(&mut self, id: RequestId) {
+        debug_assert!(!self.contains(id), "duplicate id {id} in RunSet");
+        let node = Node { id, prev: self.tail, next: NIL };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s] = node;
+                s
+            }
+            None => {
+                self.slab.push(node);
+                self.slab.len() - 1
+            }
+        };
+        if self.tail != NIL {
+            self.slab[self.tail].next = slot;
+        } else {
+            self.head = slot;
+        }
+        self.tail = slot;
+        self.index.insert(id, slot);
+    }
+
+    /// Remove and return the newest id (LIFO preemption order).
+    pub fn pop(&mut self) -> Option<RequestId> {
+        let id = self.last()?;
+        self.remove(id);
+        Some(id)
+    }
+
+    /// Remove `id` if present; returns whether it was a member.
+    pub fn remove(&mut self, id: RequestId) -> bool {
+        let Some(slot) = self.index.remove(&id) else { return false };
+        let Node { prev, next, .. } = self.slab[slot];
+        if prev != NIL {
+            self.slab[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slab[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.free.push(slot);
+        true
+    }
+
+    pub fn clear(&mut self) {
+        self.slab.clear();
+        self.free.clear();
+        self.index.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    /// Iterate ids in insertion order.
+    pub fn iter(&self) -> Iter<'_> {
+        Iter { set: self, at: self.head }
+    }
+
+    pub fn to_vec(&self) -> Vec<RequestId> {
+        self.iter().collect()
+    }
+}
+
+pub struct Iter<'a> {
+    set: &'a RunSet,
+    at: usize,
+}
+
+impl Iterator for Iter<'_> {
+    type Item = RequestId;
+
+    fn next(&mut self) -> Option<RequestId> {
+        if self.at == NIL {
+            return None;
+        }
+        let node = &self.set.slab[self.at];
+        self.at = node.next;
+        Some(node.id)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (0, Some(self.set.len()))
+    }
+}
+
+impl<'a> IntoIterator for &'a RunSet {
+    type Item = RequestId;
+    type IntoIter = Iter<'a>;
+
+    fn into_iter(self) -> Iter<'a> {
+        self.iter()
+    }
+}
+
+// Test-ergonomics: compare a RunSet against literal id sequences.
+impl PartialEq<Vec<RequestId>> for RunSet {
+    fn eq(&self, other: &Vec<RequestId>) -> bool {
+        self.len() == other.len() && self.iter().eq(other.iter().copied())
+    }
+}
+
+impl<const N: usize> PartialEq<[RequestId; N]> for RunSet {
+    fn eq(&self, other: &[RequestId; N]) -> bool {
+        self.len() == N && self.iter().eq(other.iter().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_preserves_order() {
+        let mut s = RunSet::new();
+        for id in [3, 1, 4, 1 + 4, 9] {
+            s.push(id);
+        }
+        assert_eq!(s.to_vec(), vec![3, 1, 4, 5, 9]);
+        assert_eq!(s.front(), Some(3));
+        assert_eq!(s.last(), Some(9));
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn remove_middle_keeps_order_and_recycles_slots() {
+        let mut s = RunSet::new();
+        for id in 0..6 {
+            s.push(id);
+        }
+        assert!(s.remove(3));
+        assert!(!s.remove(3));
+        assert_eq!(s.to_vec(), vec![0, 1, 2, 4, 5]);
+        let slab_len = s.slab.len();
+        s.push(100); // reuses the freed slot
+        assert_eq!(s.slab.len(), slab_len);
+        assert_eq!(s.to_vec(), vec![0, 1, 2, 4, 5, 100]);
+    }
+
+    #[test]
+    fn pop_is_lifo() {
+        let mut s = RunSet::new();
+        s.push(1);
+        s.push(2);
+        s.push(3);
+        assert_eq!(s.pop(), Some(3));
+        assert_eq!(s.pop(), Some(2));
+        assert_eq!(s.to_vec(), vec![1]);
+        assert_eq!(s.pop(), Some(1));
+        assert_eq!(s.pop(), None);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn remove_head_and_tail() {
+        let mut s = RunSet::new();
+        for id in [10, 20, 30] {
+            s.push(id);
+        }
+        assert!(s.remove(10));
+        assert_eq!(s.front(), Some(20));
+        assert!(s.remove(30));
+        assert_eq!(s.last(), Some(20));
+        assert_eq!(s.to_vec(), vec![20]);
+    }
+
+    #[test]
+    fn contains_and_eq_helpers() {
+        let mut s = RunSet::new();
+        s.push(7);
+        s.push(8);
+        assert!(s.contains(7));
+        assert!(!s.contains(9));
+        assert_eq!(s, vec![7, 8]);
+        assert_eq!(s, [7, 8]);
+        s.clear();
+        assert_eq!(s, Vec::<RequestId>::new());
+    }
+
+    #[test]
+    fn interleaved_ops_stay_consistent() {
+        // Mini-fuzz against a Vec model.
+        let mut s = RunSet::new();
+        let mut model: Vec<RequestId> = Vec::new();
+        let mut x = 0x9e3779b97f4a7c15u64;
+        for step in 0..2000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let id = x % 64;
+            match step % 3 {
+                0 if !model.contains(&id) => {
+                    s.push(id);
+                    model.push(id);
+                }
+                1 => {
+                    let was = model.iter().position(|&m| m == id);
+                    assert_eq!(s.remove(id), was.is_some());
+                    if let Some(p) = was {
+                        model.remove(p);
+                    }
+                }
+                _ => {
+                    assert_eq!(s.pop(), model.pop());
+                }
+            }
+            assert_eq!(s.to_vec(), model);
+            assert_eq!(s.front(), model.first().copied());
+            assert_eq!(s.last(), model.last().copied());
+        }
+    }
+}

@@ -89,6 +89,12 @@ impl RateLimiter {
         if now > self.last {
             self.tokens = (self.tokens + (now - self.last) * self.rate).min(self.burst);
             self.last = now;
+        } else if now < self.last {
+            // Non-monotonic clock (NTP step, cross-source timestamps):
+            // re-anchor at the earlier time without granting retroactive
+            // tokens, so refill resumes as the clock moves forward again
+            // instead of being skipped forever.
+            self.last = now;
         }
         if self.tokens >= 1.0 {
             self.tokens -= 1.0;
@@ -112,12 +118,37 @@ pub struct HybridScheduler {
     pub predictor: LatencyPredictor,
     offline_limiter: Option<RateLimiter>,
     pub last_stats: ScheduleStats,
+    /// Reused id buffer for the per-phase passes (no per-iteration
+    /// allocation once warm).
+    scratch: Vec<RequestId>,
 }
 
 impl HybridScheduler {
     pub fn new(cfg: SchedulerConfig, predictor: LatencyPredictor) -> HybridScheduler {
         let offline_limiter = cfg.offline_qps_cap.map(RateLimiter::new);
-        HybridScheduler { cfg, predictor, offline_limiter, last_stats: ScheduleStats::default() }
+        HybridScheduler {
+            cfg,
+            predictor,
+            offline_limiter,
+            last_stats: ScheduleStats::default(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Snapshot the ids of `set` members currently in `phase` into the
+    /// reused scratch buffer (callers put it back when done). The
+    /// [`PhaseCounts`](super::state::PhaseCounts) census lets hot
+    /// iterations skip phases with no candidates without scanning.
+    fn take_phase_ids(
+        &mut self,
+        state: &EngineState,
+        set: &super::runset::RunSet,
+        phase: Phase,
+    ) -> Vec<RequestId> {
+        let mut ids = std::mem::take(&mut self.scratch);
+        ids.clear();
+        ids.extend(set.iter().filter(|&id| state.requests[&id].phase == phase));
+        ids
     }
 
     /// Build the next iteration batch at time `now` (Alg. 2's two
@@ -162,70 +193,66 @@ impl HybridScheduler {
         // 1. Online decodes: scheduled regardless of latency budget
         //    (Alg. 1 line 8: "online" bypasses the `t_req <= t` check);
         //    memory pressure preempts offline requests.
-        let decode_ids: Vec<RequestId> = state
-            .running_online
-            .iter()
-            .copied()
-            .filter(|id| state.requests[id].phase == Phase::Decode)
-            .collect();
-        for id in decode_ids {
-            let need = state.requests[&id].context_len() + 1;
-            let mut ok = state.blocks.grow(id, need);
-            while !ok {
-                if state.preempt_last_offline(discard).is_none() {
-                    break;
+        if state.counts.decode(Class::Online) > 0 {
+            let ids = self.take_phase_ids(state, &state.running_online, Phase::Decode);
+            for &id in &ids {
+                let need = state.requests[&id].context_len() + 1;
+                let mut ok = state.blocks.grow(id, need);
+                while !ok {
+                    if state.preempt_last_offline(discard).is_none() {
+                        break;
+                    }
+                    stats.preemptions += 1;
+                    ok = state.blocks.grow(id, need);
                 }
-                stats.preemptions += 1;
-                ok = state.blocks.grow(id, need);
+                if !ok {
+                    // No offline left to preempt and no memory: the decode
+                    // stalls one iteration. (With online-only load this means
+                    // the instance is over-committed.)
+                    stats.online_stalls += 1;
+                    continue;
+                }
+                let t_req = self.predictor.decode_cost(feats);
+                *t -= t_req;
+                feats.add_decode();
+                batch.push(BatchEntry {
+                    id,
+                    class: Class::Online,
+                    n_tokens: 1,
+                    is_prefill: false,
+                    predicted_ms: t_req,
+                });
             }
-            if !ok {
-                // No offline left to preempt and no memory: the decode
-                // stalls one iteration. (With online-only load this means
-                // the instance is over-committed.)
-                stats.online_stalls += 1;
-                continue;
-            }
-            let t_req = self.predictor.decode_cost(feats);
-            *t -= t_req;
-            feats.add_decode();
-            batch.push(BatchEntry {
-                id,
-                class: Class::Online,
-                n_tokens: 1,
-                is_prefill: false,
-                predicted_ms: t_req,
-            });
+            self.scratch = ids;
         }
 
         // 2. Online prefill continuations (already admitted, mid-prompt).
-        let cont_ids: Vec<RequestId> = state
-            .running_online
-            .iter()
-            .copied()
-            .filter(|id| state.requests[id].phase == Phase::Prefill)
-            .collect();
-        for id in cont_ids {
-            if *c == 0 {
-                break;
+        if state.counts.prefill(Class::Online) > 0 {
+            let ids = self.take_phase_ids(state, &state.running_online, Phase::Prefill);
+            for &id in &ids {
+                if *c == 0 {
+                    break;
+                }
+                let want = state.requests[&id].prefill_remaining();
+                let cap = want.min(self.cfg.max_chunk_per_request);
+                // Memory already allocated at admission: pass unlimited mem.
+                let (l, t_req) =
+                    self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, cap);
+                if l == 0 {
+                    break;
+                }
+                *t -= t_req;
+                *c -= l;
+                feats.add_prefill(l);
+                batch.push(BatchEntry {
+                    id,
+                    class: Class::Online,
+                    n_tokens: l,
+                    is_prefill: true,
+                    predicted_ms: t_req,
+                });
             }
-            let want = state.requests[&id].prefill_remaining();
-            let cap = want.min(self.cfg.max_chunk_per_request);
-            // Memory already allocated at admission: pass unlimited mem.
-            let (l, t_req) =
-                self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, cap);
-            if l == 0 {
-                break;
-            }
-            *t -= t_req;
-            *c -= l;
-            feats.add_prefill(l);
-            batch.push(BatchEntry {
-                id,
-                class: Class::Online,
-                n_tokens: l,
-                is_prefill: true,
-                predicted_ms: t_req,
-            });
+            self.scratch = ids;
         }
 
         // 3. Online admissions from the FCFS queue.
@@ -283,8 +310,7 @@ impl HybridScheduler {
                 is_prefill: true,
                 predicted_ms: t_req,
             });
-            state.running_online.push(req.id);
-            state.requests.insert(req.id, req);
+            state.insert_running(req);
         }
     }
 
@@ -302,97 +328,90 @@ impl HybridScheduler {
         let discard = self.cfg.preemption == PreemptionMode::Discard;
         // 1. Offline decodes — only within the residual latency budget
         //    (Alg. 3 lines 7-11; stop at the first that does not fit).
-        let decode_ids: Vec<RequestId> = state
-            .running_offline
-            .iter()
-            .copied()
-            .filter(|id| state.requests[id].phase == Phase::Decode)
-            .collect();
-        for id in decode_ids {
-            if !state.running_offline.contains(&id) {
-                continue; // preempted below by an earlier decode's growth
-            }
-            let t_req = self.predictor.decode_cost(feats);
-            if t_req > *t {
-                break;
-            }
-            let need = state.requests[&id].context_len() + 1;
-            let mut ok = state.blocks.grow(id, need);
-            while !ok {
-                // Self-preemption (vLLM-style): free the *newest* running
-                // offline request so older decodes keep making progress —
-                // without this, a full KV pool deadlocks pure-offline work.
-                match state.running_offline.last() {
-                    Some(&last) if last != id => {
-                        state.preempt_last_offline(discard);
-                        ok = state.blocks.grow(id, need);
-                    }
-                    _ => break,
+        if state.counts.decode(Class::Offline) > 0 {
+            let ids = self.take_phase_ids(state, &state.running_offline, Phase::Decode);
+            for &id in &ids {
+                if !state.running_offline.contains(id) {
+                    continue; // preempted below by an earlier decode's growth
                 }
+                let t_req = self.predictor.decode_cost(feats);
+                if t_req > *t {
+                    break;
+                }
+                let need = state.requests[&id].context_len() + 1;
+                let mut ok = state.blocks.grow(id, need);
+                while !ok {
+                    // Self-preemption (vLLM-style): free the *newest* running
+                    // offline request so older decodes keep making progress —
+                    // without this, a full KV pool deadlocks pure-offline work.
+                    match state.running_offline.last() {
+                        Some(last) if last != id => {
+                            state.preempt_last_offline(discard);
+                            ok = state.blocks.grow(id, need);
+                        }
+                        _ => break,
+                    }
+                }
+                if !ok {
+                    break;
+                }
+                *t -= t_req;
+                feats.add_decode();
+                batch.push(BatchEntry {
+                    id,
+                    class: Class::Offline,
+                    n_tokens: 1,
+                    is_prefill: false,
+                    predicted_ms: t_req,
+                });
             }
-            if !ok {
-                break;
-            }
-            *t -= t_req;
-            feats.add_decode();
-            batch.push(BatchEntry {
-                id,
-                class: Class::Offline,
-                n_tokens: 1,
-                is_prefill: false,
-                predicted_ms: t_req,
-            });
+            self.scratch = ids;
         }
 
         // 2. Offline prefill continuations, in preserved (DFS) order.
-        let cont_ids: Vec<RequestId> = state
-            .running_offline
-            .iter()
-            .copied()
-            .filter(|id| state.requests[id].phase == Phase::Prefill)
-            .collect();
-        for id in cont_ids {
-            if *c == 0 || *t <= 0.0 {
-                break;
+        if state.counts.prefill(Class::Offline) > 0 {
+            let ids = self.take_phase_ids(state, &state.running_offline, Phase::Prefill);
+            for &id in &ids {
+                if *c == 0 || *t <= 0.0 {
+                    break;
+                }
+                let want =
+                    state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
+                let (l, t_req) =
+                    self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+                if l == 0 {
+                    break;
+                }
+                *t -= t_req;
+                *c -= l;
+                feats.add_prefill(l);
+                batch.push(BatchEntry {
+                    id,
+                    class: Class::Offline,
+                    n_tokens: l,
+                    is_prefill: true,
+                    predicted_ms: t_req,
+                });
             }
-            let want =
-                state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
-            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
-            if l == 0 {
-                break;
-            }
-            *t -= t_req;
-            *c -= l;
-            feats.add_prefill(l);
-            batch.push(BatchEntry {
-                id,
-                class: Class::Offline,
-                n_tokens: l,
-                is_prefill: true,
-                predicted_ms: t_req,
-            });
+            self.scratch = ids;
         }
 
         // 3. Resume preempted offline requests (FIFO — oldest progress
         //    first), re-allocating their context. Preserve semantics: no
         //    recompute; the request continues where it stopped.
-        while !state.preempted_offline.is_empty() {
+        while let Some(&id) = state.preempted_offline.front() {
             if state.num_running() >= self.cfg.max_running || *t <= 0.0 {
                 break;
             }
-            let id = state.preempted_offline[0];
             let req = &state.requests[&id];
             let ctx = req.context_len().max(1);
             let chain = state.prompt_chain(req);
             if state.blocks.allocate(id, ctx, &chain).is_none() {
                 break; // not enough memory yet
             }
-            state.preempted_offline.remove(0);
-            let req = state.requests.get_mut(&id).unwrap();
-            req.phase = if req.prefill_done() { Phase::Decode } else { Phase::Prefill };
-            state.running_offline.push(id);
+            let resumed_phase = state.resume_front_preempted();
             // It also gets work this iteration if budget allows.
-            if state.requests[&id].phase == Phase::Decode {
+            if resumed_phase == Phase::Decode {
                 let t_req = self.predictor.decode_cost(feats);
                 let need = state.requests[&id].context_len() + 1;
                 if t_req <= *t && state.blocks.grow(id, need) {
@@ -449,6 +468,7 @@ impl HybridScheduler {
                 Some(cached) => cached,
                 None => {
                     state.offline_queue.push(req);
+                    state.offline_queue.reset_prefix_context();
                     break;
                 }
             };
@@ -466,6 +486,7 @@ impl HybridScheduler {
                 state.blocks.release(req.id);
                 req.prefilled = 0;
                 state.offline_queue.push(req);
+                state.offline_queue.reset_prefix_context();
                 break;
             }
             *t -= t_req;
@@ -479,8 +500,7 @@ impl HybridScheduler {
                 is_prefill: true,
                 predicted_ms: t_req,
             });
-            state.running_offline.push(req.id);
-            state.requests.insert(req.id, req);
+            state.insert_running(req);
         }
     }
 }
@@ -509,22 +529,21 @@ mod tests {
             .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect())
     }
 
-    /// Apply a batch the way the engine would (progress only).
+    /// Apply a batch the way the engine would (progress only; same
+    /// semantics as `Engine::apply` — the chunk that completes the prompt
+    /// also emits the first output token).
     fn apply(state: &mut EngineState, batch: &Batch) {
+        let mut done: Vec<RequestId> = Vec::new();
         for e in &batch.entries {
-            let r = state.req_mut(e.id);
-            if e.is_prefill {
-                r.advance_prefill(e.n_tokens);
+            let finished = if e.is_prefill {
+                state.advance_prefill(e.id, e.n_tokens) && state.advance_decode(e.id)
             } else {
-                r.advance_decode();
+                state.advance_decode(e.id)
+            };
+            if finished {
+                done.push(e.id);
             }
         }
-        let done: Vec<RequestId> = batch
-            .entries
-            .iter()
-            .map(|e| e.id)
-            .filter(|&id| state.requests[&id].is_finished())
-            .collect();
         for id in done {
             state.finish(id);
         }
@@ -569,7 +588,10 @@ mod tests {
         let b3 = s.schedule(&mut st, 0.2);
         assert_eq!(b3.entries[0].n_tokens, 44);
         apply(&mut st, &b3);
-        assert_eq!(st.requests[&1].phase, Phase::Decode);
+        // Completing the prompt emits the first (and, with out=1, only)
+        // output token, so the request finishes at the final chunk.
+        assert!(st.finished.iter().any(|r| r.id == 1));
+        st.check_invariants().unwrap();
     }
 
     #[test]
@@ -664,7 +686,7 @@ mod tests {
         assert!(st.finished.iter().any(|r| r.id == 1));
         // Next iteration: 10 resumes with preserved progress.
         let b = s.schedule(&mut st, 0.3);
-        assert!(st.running_offline.contains(&10));
+        assert!(st.running_offline.contains(10));
         assert!(st.preempted_offline.is_empty());
         assert!(b.entries.iter().any(|e| e.id == 10));
         assert_eq!(st.requests[&10].prefilled, 200);
@@ -759,5 +781,19 @@ mod tests {
         assert!(rl.admit(0.5)); // 0.5s * 2/s = 1 token
         assert!(!rl.admit(0.5));
         assert!(rl.admit(10.0));
+    }
+
+    #[test]
+    fn rate_limiter_tolerates_non_monotonic_clock() {
+        let mut rl = RateLimiter::new(2.0);
+        assert!(rl.admit(10.0)); // refilled to the burst cap (2) at t=10
+        assert!(rl.admit(10.0)); // drain the bucket
+        assert!(!rl.admit(10.0));
+        // Clock steps backwards: no retroactive refill, but the anchor
+        // must follow, otherwise refill is skipped forever.
+        assert!(!rl.admit(4.0));
+        assert!(rl.admit(4.5), "refill resumed after the backwards step");
+        assert!(!rl.admit(4.5));
+        assert!(rl.admit(5.0));
     }
 }

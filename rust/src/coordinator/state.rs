@@ -1,26 +1,91 @@
 //! Shared engine state the scheduler operates on: queues, running sets,
 //! preempted set, the block manager, and the request table.
+//!
+//! Hot-path complexity contract (see DESIGN.md "Scheduler data
+//! structures"): one `schedule()` + apply iteration is O(batch). The
+//! running sets are [`RunSet`]s (O(1) insert/remove/contains, ordered
+//! iteration), the preempted set is a `VecDeque` (O(1) resume pop), and
+//! [`PhaseCounts`] tracks how many running requests sit in each
+//! (class, phase) bucket so scheduler passes with no candidates are
+//! skipped without touching the sets at all.
 
 use super::block_manager::{chain_hashes, BlockManager};
 use super::queues::{OfflinePolicy, OfflineQueue, OnlineQueue};
 use super::request::{Class, Phase, Request, RequestId};
-use std::collections::HashMap;
+use super::runset::RunSet;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// Counts of *running* requests by (class, phase). Maintained by every
+/// [`EngineState`] transition so the scheduler can size (or skip) its
+/// per-phase passes without re-scanning the running sets.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseCounts {
+    pub online_prefill: usize,
+    pub online_decode: usize,
+    pub offline_prefill: usize,
+    pub offline_decode: usize,
+}
+
+impl PhaseCounts {
+    pub fn prefill(&self, class: Class) -> usize {
+        match class {
+            Class::Online => self.online_prefill,
+            Class::Offline => self.offline_prefill,
+        }
+    }
+
+    pub fn decode(&self, class: Class) -> usize {
+        match class {
+            Class::Online => self.online_decode,
+            Class::Offline => self.offline_decode,
+        }
+    }
+
+    fn slot(&mut self, class: Class, phase: Phase) -> Option<&mut usize> {
+        match (class, phase) {
+            (Class::Online, Phase::Prefill) => Some(&mut self.online_prefill),
+            (Class::Online, Phase::Decode) => Some(&mut self.online_decode),
+            (Class::Offline, Phase::Prefill) => Some(&mut self.offline_prefill),
+            (Class::Offline, Phase::Decode) => Some(&mut self.offline_decode),
+            // Waiting/Preempted/Finished requests are not "running work".
+            _ => None,
+        }
+    }
+
+    fn add(&mut self, class: Class, phase: Phase) {
+        if let Some(c) = self.slot(class, phase) {
+            *c += 1;
+        }
+    }
+
+    fn sub(&mut self, class: Class, phase: Phase) {
+        if let Some(c) = self.slot(class, phase) {
+            debug_assert!(*c > 0, "phase count underflow for {class:?}/{phase:?}");
+            *c = c.saturating_sub(1);
+        }
+    }
+}
 
 /// All mutable serving state of one engine instance.
 pub struct EngineState {
-    /// Every request known to the instance (waiting, running, preempted).
-    /// Finished requests are moved to `finished`.
+    /// Every request known to the instance (running or preempted).
+    /// Waiting requests live in their queue; finished ones in `finished`.
     pub requests: HashMap<RequestId, Request>,
     pub online_queue: OnlineQueue,
     pub offline_queue: OfflineQueue,
     /// Running online requests in admission order.
-    pub running_online: Vec<RequestId>,
+    pub running_online: RunSet,
     /// Running offline requests — kept in their scheduling (DFS) order, per
     /// Alg. 3 ("running requests keep their original DFS order").
-    pub running_offline: Vec<RequestId>,
+    pub running_offline: RunSet,
     /// Offline requests preempted with preserved state, newest last.
-    /// Re-admitted (LIFO) before fresh queue requests.
-    pub preempted_offline: Vec<RequestId>,
+    /// Resumed FIFO (oldest progress first) from the front.
+    pub preempted_offline: VecDeque<RequestId>,
+    /// Running-request census by (class, phase); kept in lockstep with the
+    /// sets above by the transition methods. Mutate phases through
+    /// [`EngineState`] methods or the census drifts (`check_invariants`
+    /// verifies it).
+    pub counts: PhaseCounts,
     pub blocks: BlockManager,
     pub finished: Vec<Request>,
     /// Keep finished request bodies (tests want them; long sims can turn
@@ -40,9 +105,10 @@ impl EngineState {
             requests: HashMap::new(),
             online_queue: OnlineQueue::new(),
             offline_queue: OfflineQueue::new(policy, seed),
-            running_online: Vec::new(),
-            running_offline: Vec::new(),
-            preempted_offline: Vec::new(),
+            running_online: RunSet::new(),
+            running_offline: RunSet::new(),
+            preempted_offline: VecDeque::new(),
+            counts: PhaseCounts::default(),
             blocks: BlockManager::new(num_blocks, block_size),
             finished: Vec::new(),
             keep_finished: true,
@@ -80,12 +146,59 @@ impl EngineState {
         chain_hashes(&req.prompt, self.blocks.block_size())
     }
 
+    /// Move an admitted request (blocks already allocated, phase set to
+    /// `Prefill`/`Decode`) into its class's running set.
+    pub fn insert_running(&mut self, req: Request) {
+        debug_assert!(
+            matches!(req.phase, Phase::Prefill | Phase::Decode),
+            "admitting {} in phase {:?}",
+            req.id,
+            req.phase
+        );
+        self.counts.add(req.class, req.phase);
+        match req.class {
+            Class::Online => self.running_online.push(req.id),
+            Class::Offline => self.running_offline.push(req.id),
+        }
+        self.requests.insert(req.id, req);
+    }
+
+    /// Advance a running request's prefill cursor by a scheduled chunk of
+    /// `n` tokens. Returns true when this chunk completed the prompt (the
+    /// same iteration emits the first output token).
+    pub fn advance_prefill(&mut self, id: RequestId, n: usize) -> bool {
+        let req = self.requests.get_mut(&id).expect("request exists");
+        let (class, before) = (req.class, req.phase);
+        req.advance_prefill(n);
+        if req.phase != before {
+            self.counts.sub(class, before);
+            self.counts.add(class, req.phase);
+        }
+        req.prefill_done()
+    }
+
+    /// Record one generated token for a running request. Returns true
+    /// when the request reached its output budget (caller should
+    /// [`finish`](Self::finish) it).
+    pub fn advance_decode(&mut self, id: RequestId) -> bool {
+        let req = self.requests.get_mut(&id).expect("request exists");
+        let (class, before) = (req.class, req.phase);
+        req.advance_decode();
+        if req.phase != before {
+            self.counts.sub(class, before);
+            self.counts.add(class, req.phase);
+        }
+        req.is_finished()
+    }
+
     /// Move a running request to `finished`, releasing its blocks.
     pub fn finish(&mut self, id: RequestId) {
         self.blocks.release(id);
-        self.running_online.retain(|&x| x != id);
-        self.running_offline.retain(|&x| x != id);
+        if !self.running_online.remove(id) {
+            self.running_offline.remove(id);
+        }
         if let Some(mut r) = self.requests.remove(&id) {
+            self.counts.sub(r.class, r.phase);
             r.phase = Phase::Finished;
             if self.keep_finished {
                 self.finished.push(r);
@@ -100,22 +213,75 @@ impl EngineState {
         let id = self.running_offline.pop()?;
         self.blocks.release(id);
         let req = self.requests.get_mut(&id).expect("running request exists");
+        self.counts.sub(req.class, req.phase);
         if discard {
             req.preempt_discard();
             // discarded state returns to the offline queue for rescheduling
             let req = self.requests.remove(&id).unwrap();
             self.offline_queue.push(req);
+            // Its KV (and the whole LCP baseline's residency assumption)
+            // is gone; without this its next pop would claim a self-LCP.
+            self.offline_queue.reset_prefix_context();
         } else {
             req.preempt_preserve();
-            self.preempted_offline.push(id);
+            self.preempted_offline.push_back(id);
         }
         Some(id)
     }
 
-    /// Sanity invariant used by tests: every running id has a request and
-    /// an allocation; no id is in two places at once.
+    /// Re-admit the *front* (oldest-progress) preempted offline request —
+    /// the caller already re-allocated its context. Returns the phase it
+    /// resumes in.
+    pub fn resume_front_preempted(&mut self) -> Phase {
+        let id = self.preempted_offline.pop_front().expect("preempted request to resume");
+        let req = self.requests.get_mut(&id).expect("preempted request in table");
+        debug_assert_eq!(req.phase, Phase::Preempted);
+        req.phase = if req.prefill_done() { Phase::Decode } else { Phase::Prefill };
+        let phase = req.phase;
+        self.counts.add(req.class, phase);
+        self.running_offline.push(id);
+        phase
+    }
+
+    /// Abort every queued, running, and preempted request, releasing all
+    /// KV blocks. Returns the ids that were running *or* preempted —
+    /// backends hold per-request resources (e.g. sequence slots) for both,
+    /// since preempted requests only get reconciled lazily on the next
+    /// execute, which never comes after an abort. Used by the server when
+    /// the execution backend fails: the engine must not keep re-scheduling
+    /// a doomed batch.
+    pub fn abort_all(&mut self) -> Vec<RequestId> {
+        let torn_down: Vec<RequestId> = self
+            .running_online
+            .iter()
+            .chain(self.running_offline.iter())
+            .chain(self.preempted_offline.iter().copied())
+            .collect();
+        // Only running requests hold blocks (preemption already released
+        // theirs); release() is a no-op for unallocated ids.
+        for &id in &torn_down {
+            self.blocks.release(id);
+        }
+        self.running_online.clear();
+        self.running_offline.clear();
+        self.preempted_offline.clear();
+        self.requests.clear();
+        self.online_queue.clear();
+        self.offline_queue.clear();
+        self.counts = PhaseCounts::default();
+        torn_down
+    }
+
+    /// Sanity invariants used by tests: every running id has a request and
+    /// an allocation; no id is in two places at once; queued requests are
+    /// not also tracked in the table; the phase census matches the sets.
     pub fn check_invariants(&self) -> Result<(), String> {
-        for &id in self.running_online.iter().chain(&self.running_offline) {
+        let mut seen: HashSet<RequestId> = HashSet::new();
+        let mut recount = PhaseCounts::default();
+        for id in self.running_online.iter().chain(self.running_offline.iter()) {
+            if !seen.insert(id) {
+                return Err(format!("{id} in two running sets"));
+            }
             let r = self
                 .requests
                 .get(&id)
@@ -126,13 +292,31 @@ impl EngineState {
             if matches!(r.phase, Phase::Waiting | Phase::Finished | Phase::Preempted) {
                 return Err(format!("running {id} in phase {:?}", r.phase));
             }
+            recount.add(r.class, r.phase);
         }
         for &id in &self.preempted_offline {
+            if !seen.insert(id) {
+                return Err(format!("{id} both running and preempted"));
+            }
             if self.blocks.is_allocated(id) {
                 return Err(format!("preempted {id} still holds blocks"));
             }
-            if self.running_offline.contains(&id) {
-                return Err(format!("{id} both running and preempted"));
+            if !self.requests.contains_key(&id) {
+                return Err(format!("preempted {id} missing from table"));
+            }
+        }
+        if recount != self.counts {
+            return Err(format!(
+                "phase census drift: counted {recount:?}, tracked {:?}",
+                self.counts
+            ));
+        }
+        for id in self.online_queue.ids().chain(self.offline_queue.ids()) {
+            if self.requests.contains_key(&id) {
+                return Err(format!("queued {id} also in the request table"));
+            }
+            if !seen.insert(id) {
+                return Err(format!("queued {id} also running/preempted"));
             }
         }
         Ok(())
@@ -148,6 +332,14 @@ mod tests {
         EngineState::new(OfflinePolicy::Fcfs, 64, 16, 0)
     }
 
+    fn running(state: &mut EngineState, id: RequestId, class: Class, prompt: usize, out: usize) {
+        let mut r = Request::new(id, class, 0.0, prompt, out);
+        r.phase = Phase::Decode;
+        r.prefilled = prompt;
+        state.blocks.allocate(id, r.context_len().max(1), &[]).unwrap();
+        state.insert_running(r);
+    }
+
     #[test]
     fn enqueue_routes_by_class() {
         let mut s = state();
@@ -155,20 +347,18 @@ mod tests {
         s.enqueue(Request::new(2, Class::Offline, 0.0, 4, 4));
         assert_eq!(s.online_queue.len(), 1);
         assert_eq!(s.offline_queue.len(), 1);
+        s.check_invariants().unwrap();
     }
 
     #[test]
     fn finish_releases_everything() {
         let mut s = state();
-        let mut r = Request::new(1, Class::Online, 0.0, 16, 2);
-        r.phase = Phase::Decode;
-        r.prefilled = 16;
-        s.blocks.allocate(1, 16, &[]).unwrap();
-        s.requests.insert(1, r);
-        s.running_online.push(1);
+        running(&mut s, 1, Class::Online, 16, 2);
+        assert_eq!(s.counts.decode(Class::Online), 1);
         s.check_invariants().unwrap();
         s.finish(1);
         assert_eq!(s.num_running(), 0);
+        assert_eq!(s.counts, PhaseCounts::default());
         assert_eq!(s.blocks.used_blocks(), 0);
         assert_eq!(s.finished.len(), 1);
         assert_eq!(s.finished[0].phase, Phase::Finished);
@@ -183,13 +373,13 @@ mod tests {
         r.prefilled = 16;
         r.generated = 2;
         s.blocks.allocate(5, 18, &[]).unwrap();
-        s.requests.insert(5, r);
-        s.running_offline.push(5);
+        s.insert_running(r);
         let got = s.preempt_last_offline(false);
         assert_eq!(got, Some(5));
         assert_eq!(s.preempted_offline, vec![5]);
         assert_eq!(s.requests[&5].generated, 2, "state preserved");
         assert_eq!(s.blocks.used_blocks(), 0);
+        assert_eq!(s.counts, PhaseCounts::default());
         s.check_invariants().unwrap();
     }
 
@@ -201,17 +391,94 @@ mod tests {
         r.prefilled = 16;
         r.generated = 2;
         s.blocks.allocate(5, 18, &[]).unwrap();
-        s.requests.insert(5, r);
-        s.running_offline.push(5);
+        s.insert_running(r);
         s.preempt_last_offline(true);
         assert!(s.preempted_offline.is_empty());
         assert_eq!(s.offline_queue.len(), 1, "discarded request requeued");
         assert!(!s.requests.contains_key(&5));
+        s.check_invariants().unwrap();
     }
 
     #[test]
     fn preempt_on_empty_is_none() {
         let mut s = state();
         assert_eq!(s.preempt_last_offline(false), None);
+    }
+
+    #[test]
+    fn resume_front_restores_counts_and_order() {
+        let mut s = state();
+        for id in [5, 6] {
+            let mut r = Request::new(id, Class::Offline, 0.0, 16, 4);
+            r.phase = Phase::Decode;
+            r.prefilled = 16;
+            s.blocks.allocate(id, 17, &[]).unwrap();
+            s.insert_running(r);
+        }
+        s.preempt_last_offline(false); // 6
+        s.preempt_last_offline(false); // 5
+        assert_eq!(s.preempted_offline, vec![6, 5]);
+        s.blocks.allocate(6, 17, &[]).unwrap();
+        let phase = s.resume_front_preempted();
+        assert_eq!(phase, Phase::Decode);
+        assert_eq!(s.running_offline, vec![6]);
+        assert_eq!(s.preempted_offline, vec![5]);
+        assert_eq!(s.counts.decode(Class::Offline), 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn advance_transitions_update_census() {
+        let mut s = state();
+        let mut r = Request::new(9, Class::Online, 0.0, 8, 2);
+        r.phase = Phase::Prefill;
+        s.blocks.allocate(9, 8, &[]).unwrap();
+        s.insert_running(r);
+        assert_eq!(s.counts.prefill(Class::Online), 1);
+        assert!(!s.advance_prefill(9, 4), "prompt not done yet");
+        assert!(s.advance_prefill(9, 4), "prompt completed");
+        assert_eq!(s.counts.prefill(Class::Online), 0);
+        assert_eq!(s.counts.decode(Class::Online), 1);
+        assert!(!s.advance_decode(9));
+        assert!(s.advance_decode(9), "output budget reached");
+        s.finish(9);
+        assert_eq!(s.counts, PhaseCounts::default());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn abort_all_clears_every_set() {
+        let mut s = state();
+        running(&mut s, 1, Class::Online, 16, 4);
+        running(&mut s, 2, Class::Offline, 16, 4);
+        s.preempt_last_offline(false);
+        s.enqueue(Request::new(3, Class::Online, 0.0, 4, 4));
+        s.enqueue(Request::new(4, Class::Offline, 0.0, 4, 4));
+        let aborted = s.abort_all();
+        assert_eq!(aborted, vec![1, 2], "running and preempted ids both reported");
+        assert_eq!(s.num_running(), 0);
+        assert!(s.preempted_offline.is_empty());
+        assert!(s.online_queue.is_empty() && s.offline_queue.is_empty());
+        assert_eq!(s.blocks.used_blocks(), 0);
+        assert_eq!(s.counts, PhaseCounts::default());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invariants_reject_queue_table_overlap() {
+        let mut s = state();
+        running(&mut s, 7, Class::Online, 8, 2);
+        // Simulate a duplication bug: the running request also re-enters
+        // the queue.
+        s.enqueue(Request::new(7, Class::Online, 0.0, 8, 2));
+        assert!(s.check_invariants().is_err());
+    }
+
+    #[test]
+    fn invariants_reject_census_drift() {
+        let mut s = state();
+        running(&mut s, 7, Class::Online, 8, 2);
+        s.counts.online_decode = 0; // simulate drift
+        assert!(s.check_invariants().is_err());
     }
 }

@@ -103,6 +103,9 @@ pub struct RunResult {
     pub iterations: u64,
     /// Wallclock spent inside `scheduler.schedule` (scheduling overhead).
     pub sched_overhead: std::time::Duration,
+    /// Per-iteration `schedule()` wallclock in ns (only when the engine
+    /// runs with [`Engine::record_sched_samples`] on; empty otherwise).
+    pub sched_ns_samples: Vec<u64>,
     /// Iterations where work existed but nothing could be scheduled.
     pub stalled_iterations: u64,
     pub metrics: Metrics,
@@ -117,7 +120,11 @@ pub struct Engine<B: ExecutionBackend> {
     pub metrics: Metrics,
     pub clock_s: f64,
     pub iterations: u64,
+    /// Record per-iteration scheduling overhead samples (bench harness;
+    /// off by default to keep long sims allocation-free).
+    pub record_sched_samples: bool,
     sched_overhead: std::time::Duration,
+    sched_samples: Vec<u64>,
     stalled: u64,
     next_id: RequestId,
 }
@@ -131,10 +138,42 @@ impl<B: ExecutionBackend> Engine<B> {
             metrics: Metrics::new(1.0),
             clock_s: 0.0,
             iterations: 0,
+            record_sched_samples: false,
             sched_overhead: std::time::Duration::ZERO,
+            sched_samples: Vec::new(),
             stalled: 0,
             next_id: 1,
         }
+    }
+
+    /// Total wallclock spent inside `scheduler.schedule` so far.
+    pub fn sched_overhead(&self) -> std::time::Duration {
+        self.sched_overhead
+    }
+
+    /// Per-iteration scheduling overhead samples (ns), when recording.
+    pub fn sched_samples(&self) -> &[u64] {
+        &self.sched_samples
+    }
+
+    /// Iterations that found work but could schedule nothing.
+    pub fn stalled_iterations(&self) -> u64 {
+        self.stalled
+    }
+
+    /// Abort all queued, running, and preempted work, releasing KV blocks
+    /// and notifying the backend for every running *and* preempted request
+    /// (slot-holding backends reconcile preempted slots lazily on the next
+    /// execute — which never comes after an abort). The server calls this
+    /// when the backend fails persistently — without it the engine
+    /// re-schedules the same doomed batch forever. Returns how many
+    /// requests were torn down.
+    pub fn abort_all(&mut self) -> usize {
+        let torn_down = self.state.abort_all();
+        for &id in &torn_down {
+            self.backend.on_removed(id);
+        }
+        torn_down.len()
     }
 
     /// Allocate a request id (server-mode ingestion).
@@ -164,9 +203,13 @@ impl<B: ExecutionBackend> Engine<B> {
     pub fn step(&mut self) -> anyhow::Result<usize> {
         let t0 = std::time::Instant::now();
         let batch = self.scheduler.schedule(&mut self.state, self.clock_s);
-        self.sched_overhead += t0.elapsed();
+        let sched_ns = t0.elapsed();
+        self.sched_overhead += sched_ns;
         if batch.is_empty() {
             return Ok(0);
+        }
+        if self.record_sched_samples {
+            self.sched_samples.push(sched_ns.as_nanos() as u64);
         }
         self.iterations += 1;
         let latency_s = self.backend.execute(&batch, &mut self.state)?;
@@ -181,20 +224,22 @@ impl<B: ExecutionBackend> Engine<B> {
         let now = self.clock_s;
         let mut finished: Vec<RequestId> = Vec::new();
         for e in &batch.entries {
-            let req = self.state.req_mut(e.id);
-            if e.is_prefill {
-                req.advance_prefill(e.n_tokens);
-                if req.prefill_done() {
+            let done = if e.is_prefill {
+                if self.state.advance_prefill(e.id, e.n_tokens) {
                     // The iteration that completes the prompt also emits
                     // the first output token (TTFT lands here).
-                    req.advance_decode();
+                    let done = self.state.advance_decode(e.id);
                     self.metrics.on_tokens(e.id, now, 1);
+                    done
+                } else {
+                    false
                 }
             } else {
-                req.advance_decode();
+                let done = self.state.advance_decode(e.id);
                 self.metrics.on_tokens(e.id, now, 1);
-            }
-            if self.state.requests[&e.id].is_finished() {
+                done
+            };
+            if done {
                 finished.push(e.id);
             }
         }
@@ -280,6 +325,7 @@ impl<B: ExecutionBackend> Engine<B> {
             report,
             iterations: self.iterations,
             sched_overhead: self.sched_overhead,
+            sched_ns_samples: std::mem::take(&mut self.sched_samples),
             stalled_iterations: self.stalled,
             metrics: std::mem::replace(&mut self.metrics, Metrics::new(1.0)),
         })

@@ -95,7 +95,7 @@ impl PjrtBackend {
             .slot_of
             .keys()
             .copied()
-            .filter(|id| {
+            .filter(|&id| {
                 !state.running_online.contains(id) && !state.running_offline.contains(id)
             })
             .collect();

@@ -1,0 +1,441 @@
+//! `hygen bench-sched` — the scheduling-overhead micro-bench and its
+//! `BENCH_sched.json` trajectory record.
+//!
+//! HyGen's premise is that per-iteration scheduling stays negligible
+//! against ~10 ms batches (the paper reports ~18 µs per latency
+//! prediction, §4.2). This harness pins that down for the reproduction
+//! and guards the hot path against complexity regressions:
+//!
+//! 1. **Trace run** — a synthetic mixed trace (Azure-shaped online
+//!    arrivals + an offline dataset backlog, 10 k requests by default)
+//!    replayed through [`Engine::run_trace`](crate::engine::Engine) on the
+//!    sim backend with per-iteration `schedule()` wallclock sampling on.
+//!    Reported: iterations/s, mean/p50/p99 scheduling overhead per
+//!    iteration, the scheduler's share of total wallclock, stall count.
+//! 2. **Scaling probe** — steady state with N running offline decodes
+//!    *and* an N-deep preempted offline set, for N = 100 and N = 5 000:
+//!    `schedule()` cost per batch entry, plus the cost of one
+//!    preempt-preserve + resume-front pair churned against the full-depth
+//!    preempted set. Both must stay ~flat across N (linear total cost).
+//!    Before the [`RunSet`](crate::coordinator::runset::RunSet)/`VecDeque`
+//!    refactor the running sets were `Vec`s with O(n) membership/removal
+//!    and resume was `Vec::remove(0)`, so these ratios blew up ~n-fold.
+//!
+//! The JSON schema is documented in README §"Tests and benches"; every PR
+//! appends a datapoint so the trajectory catches regressions that small
+//! test workloads hide.
+
+use crate::baselines::SimSetup;
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::queues::OfflinePolicy;
+use crate::coordinator::request::{Class, Phase, Request};
+use crate::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+use crate::coordinator::state::EngineState;
+use crate::sim::costmodel::CostModel;
+use crate::util::bench::black_box;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Bench shape; see [`BenchConfig::full`] and [`BenchConfig::quick`].
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Total mixed-trace size (online + offline requests).
+    pub n_requests: usize,
+    /// Online arrival rate for the Azure-shaped portion.
+    pub online_qps: f64,
+    /// Online trace span (s); the offline portion is a t=0 backlog.
+    pub trace_s: f64,
+    /// Steady-state sizes for the scaling probe (running = preempted = N).
+    pub scaling_sizes: Vec<usize>,
+    /// Timed `schedule()` iterations per scaling size.
+    pub scaling_iters: usize,
+    pub seed: u64,
+}
+
+impl BenchConfig {
+    /// The acceptance-criteria shape: a 10 k-request mixed trace and the
+    /// 100-vs-5000 backlog scaling datapoints.
+    pub fn full() -> BenchConfig {
+        BenchConfig {
+            n_requests: 10_000,
+            online_qps: 8.0,
+            trace_s: 600.0,
+            scaling_sizes: vec![100, 1_000, 5_000],
+            scaling_iters: 30,
+            seed: 0,
+        }
+    }
+
+    /// A few-hundred-request smoke shape for CI (same code paths, seconds
+    /// of wallclock).
+    pub fn quick() -> BenchConfig {
+        BenchConfig {
+            n_requests: 300,
+            online_qps: 4.0,
+            trace_s: 30.0,
+            scaling_sizes: vec![50, 400],
+            scaling_iters: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// One scaling-probe datapoint: `schedule()` cost with `n` running
+/// offline decodes + `n` preempted offline requests (batch size = `n`),
+/// plus the preempt/resume churn cost against that `n`-deep preempted set.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub n: usize,
+    pub batch_len: usize,
+    pub mean_us_per_iter: f64,
+    pub ns_per_batch_entry: f64,
+    /// Mean cost of one preempt-preserve + resume-front pair while the
+    /// preempted set stays `n` deep. O(1) with the `VecDeque`; O(n) with
+    /// the old `Vec::remove(0)` resume, so this column scales with `n`
+    /// exactly when that regression reappears.
+    pub churn_ns_per_op: f64,
+}
+
+/// Everything the bench measured (also serialized to JSON).
+#[derive(Debug, Clone)]
+pub struct BenchOutcome {
+    pub n_online: usize,
+    pub n_offline: usize,
+    pub iterations: u64,
+    pub wall_s: f64,
+    pub iters_per_sec: f64,
+    pub sched_mean_us: f64,
+    pub sched_p50_us: f64,
+    pub sched_p99_us: f64,
+    /// Scheduler share of the run's total wallclock, in [0, 1].
+    pub sched_share: f64,
+    pub stalled_iterations: u64,
+    pub online_finished: usize,
+    pub offline_finished: usize,
+    pub scaling: Vec<ScalePoint>,
+    /// ns-per-batch-entry at the largest scaling size over the smallest:
+    /// ~1 when one iteration is O(batch), ~n/n0 when quadratic.
+    pub ns_per_entry_ratio: f64,
+    /// Same ratio for the preempt/resume churn cost: ~1 with O(1)
+    /// preempted-set ops, ~n/n0 if resume shifts the whole set again.
+    pub churn_ratio: f64,
+}
+
+impl BenchOutcome {
+    pub fn to_json(&self) -> Json {
+        let scaling = self
+            .scaling
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("n_running_offline", p.n.into()),
+                    ("n_preempted_offline", p.n.into()),
+                    ("batch_len", p.batch_len.into()),
+                    ("mean_us_per_iter", round2(p.mean_us_per_iter).into()),
+                    ("ns_per_batch_entry", round2(p.ns_per_batch_entry).into()),
+                    ("churn_ns_per_op", round2(p.churn_ns_per_op).into()),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("bench", "sched".into()),
+            ("schema_version", 1u64.into()),
+            (
+                "trace",
+                Json::obj(vec![
+                    ("n_online", self.n_online.into()),
+                    ("n_offline", self.n_offline.into()),
+                ]),
+            ),
+            (
+                "trace_run",
+                Json::obj(vec![
+                    ("iterations", self.iterations.into()),
+                    ("wall_s", round3(self.wall_s).into()),
+                    ("iters_per_sec", round2(self.iters_per_sec).into()),
+                    ("sched_overhead_mean_us_per_iter", round3(self.sched_mean_us).into()),
+                    ("sched_overhead_p50_us", round3(self.sched_p50_us).into()),
+                    ("sched_overhead_p99_us", round3(self.sched_p99_us).into()),
+                    ("sched_share_of_wallclock", round3(self.sched_share).into()),
+                    ("stalled_iterations", self.stalled_iterations.into()),
+                    ("online_finished", self.online_finished.into()),
+                    ("offline_finished", self.offline_finished.into()),
+                ]),
+            ),
+            ("scaling", Json::Arr(scaling)),
+            ("ns_per_entry_ratio_largest_vs_smallest", round2(self.ns_per_entry_ratio).into()),
+            ("churn_ratio_largest_vs_smallest", round2(self.churn_ratio).into()),
+        ])
+    }
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+fn percentile_ns(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q) as usize).min(sorted.len() - 1);
+    sorted[idx] as f64
+}
+
+/// Part 1: replay the mixed trace end-to-end on the sim backend with
+/// per-iteration scheduling-overhead sampling enabled.
+fn trace_run(cfg: &BenchConfig) -> anyhow::Result<BenchOutcome> {
+    let online = crate::workload::azure::generate(
+        &crate::workload::azure::AzureTraceConfig {
+            duration_s: cfg.trace_s,
+            mean_qps: cfg.online_qps,
+            ..Default::default()
+        },
+        cfg.seed,
+    );
+    let n_online = online.len();
+    let n_offline = cfg.n_requests.saturating_sub(n_online).max(1);
+    let offline = crate::workload::datasets::generate(
+        crate::workload::datasets::Dataset::ArxivSummarization,
+        n_offline,
+        cfg.seed,
+    );
+    let trace = online.merged(offline);
+
+    // Seed predictor (no profiling fit): the bench measures scheduling
+    // cost, not prediction quality, and must start instantly.
+    let setup = SimSetup::with_seed_predictor(CostModel::a100_llama7b())
+        .with_policy(OfflinePolicy::Psm)
+        .with_seed(cfg.seed);
+    // HyGen's configuration, but with a slot bound sized for the bench's
+    // thousands-deep offline backlog rather than the paper-experiment
+    // default — hence build_with_config instead of a named System.
+    let mut engine = setup.build_with_config(SchedulerConfig {
+        latency_budget_ms: Some(40.0),
+        chunk_tokens: 512,
+        max_running: 1024,
+        ..SchedulerConfig::default()
+    });
+    engine.state.keep_finished = false;
+    engine.record_sched_samples = true;
+
+    let wall0 = Instant::now();
+    let r = engine.run_trace(&trace, 1e6, true)?;
+    let wall_s = wall0.elapsed().as_secs_f64();
+
+    let mut samples = r.sched_ns_samples;
+    samples.sort_unstable();
+    let mean_ns = if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<u64>() as f64 / samples.len() as f64
+    };
+    Ok(BenchOutcome {
+        n_online,
+        n_offline,
+        iterations: r.iterations,
+        wall_s,
+        iters_per_sec: r.iterations as f64 / wall_s.max(1e-9),
+        sched_mean_us: mean_ns / 1e3,
+        sched_p50_us: percentile_ns(&samples, 0.50) / 1e3,
+        sched_p99_us: percentile_ns(&samples, 0.99) / 1e3,
+        sched_share: (r.sched_overhead.as_secs_f64() / wall_s.max(1e-9)).min(1.0),
+        stalled_iterations: r.stalled_iterations,
+        online_finished: r.finished_online,
+        offline_finished: r.finished_offline,
+        scaling: Vec::new(),
+        ns_per_entry_ratio: 0.0,
+        churn_ratio: 0.0,
+    })
+}
+
+/// Steady state for the scaling probe: `n` running offline decodes plus
+/// `n` preempted offline requests (and nothing admissible, so every
+/// `schedule()` call builds the identical n-entry decode batch).
+fn scaling_state(n: usize) -> EngineState {
+    // ~17 blocks per 257-token context; ample headroom so growth never
+    // preempts mid-probe.
+    let mut st = EngineState::new(OfflinePolicy::Fcfs, n * 40 + 64, 16, 0);
+    for id in 0..(2 * n) as u64 {
+        let mut r = Request::new(id, Class::Offline, 0.0, 256, 1 << 20);
+        r.prefilled = 256;
+        r.generated = 1;
+        r.phase = Phase::Decode;
+        st.blocks.allocate(id, r.context_len(), &[]).expect("probe pool sized for 2n");
+        st.insert_running(r);
+    }
+    for _ in 0..n {
+        st.preempt_last_offline(false);
+    }
+    debug_assert_eq!(st.running_offline.len(), n);
+    debug_assert_eq!(st.preempted_offline.len(), n);
+    st
+}
+
+/// Part 2: time `schedule()` at each steady-state size.
+fn scaling_probe(cfg: &BenchConfig) -> Vec<ScalePoint> {
+    let mut points = Vec::new();
+    for &n in &cfg.scaling_sizes {
+        let mut st = scaling_state(n);
+        // SLO-unaware so all n decodes are scheduled; max_running == n
+        // keeps admissions and resumes out (pure steady-state cost).
+        let mut sched = HybridScheduler::new(
+            SchedulerConfig {
+                latency_budget_ms: None,
+                chunk_tokens: 512,
+                max_running: n,
+                ..SchedulerConfig::default()
+            },
+            LatencyPredictor::default_seed(),
+        );
+        let mut now = 0.0;
+        let mut batch_len = 0;
+        for _ in 0..3 {
+            now += 0.01;
+            batch_len = black_box(sched.schedule(&mut st, now).len());
+        }
+        let t0 = Instant::now();
+        for _ in 0..cfg.scaling_iters {
+            now += 0.01;
+            batch_len = black_box(sched.schedule(&mut st, now).len());
+        }
+        let mean_ns = t0.elapsed().as_nanos() as f64 / cfg.scaling_iters.max(1) as f64;
+
+        // Churn the n-deep preempted set: resume k from the front, then
+        // preempt those k back (LIFO pops exactly the just-resumed ids, so
+        // the sets stay size n — a steady rotation). Each pair is O(1)
+        // with the VecDeque; an O(n) front-removal regression makes this
+        // column track n.
+        let k = n.clamp(1, 8);
+        let churn_rounds = cfg.scaling_iters.max(1) * 4;
+        let t0 = Instant::now();
+        for _ in 0..churn_rounds {
+            for _ in 0..k {
+                let id = *st.preempted_offline.front().expect("probe keeps n preempted");
+                let ctx = st.req(id).context_len().max(1);
+                st.blocks.allocate(id, ctx, &[]).expect("probe pool has churn headroom");
+                black_box(st.resume_front_preempted());
+            }
+            for _ in 0..k {
+                black_box(st.preempt_last_offline(false));
+            }
+        }
+        let churn_ns_per_op = t0.elapsed().as_nanos() as f64 / (churn_rounds * k * 2) as f64;
+
+        points.push(ScalePoint {
+            n,
+            batch_len,
+            mean_us_per_iter: mean_ns / 1e3,
+            ns_per_batch_entry: mean_ns / batch_len.max(1) as f64,
+            churn_ns_per_op,
+        });
+    }
+    points
+}
+
+/// Run both parts and return the combined outcome.
+pub fn run(cfg: &BenchConfig) -> anyhow::Result<BenchOutcome> {
+    let mut outcome = trace_run(cfg)?;
+    outcome.scaling = scaling_probe(cfg);
+    if let (Some(a), Some(b)) = (outcome.scaling.first(), outcome.scaling.last()) {
+        if a.ns_per_batch_entry > 0.0 {
+            outcome.ns_per_entry_ratio = b.ns_per_batch_entry / a.ns_per_batch_entry;
+        }
+        if a.churn_ns_per_op > 0.0 {
+            outcome.churn_ratio = b.churn_ns_per_op / a.churn_ns_per_op;
+        }
+    }
+    Ok(outcome)
+}
+
+/// Run, print a human summary, and write `BENCH_sched.json` to `out`.
+pub fn run_and_save(cfg: &BenchConfig, out: &str) -> anyhow::Result<BenchOutcome> {
+    let outcome = run(cfg)?;
+    println!(
+        "trace: {} online + {} offline requests, {} iterations in {:.2}s ({:.0} iters/s)",
+        outcome.n_online,
+        outcome.n_offline,
+        outcome.iterations,
+        outcome.wall_s,
+        outcome.iters_per_sec
+    );
+    println!(
+        "sched overhead/iter: mean {:.2} µs, p50 {:.2} µs, p99 {:.2} µs ({:.2}% of wallclock); {} stalled iters",
+        outcome.sched_mean_us,
+        outcome.sched_p50_us,
+        outcome.sched_p99_us,
+        outcome.sched_share * 100.0,
+        outcome.stalled_iterations
+    );
+    for p in &outcome.scaling {
+        println!(
+            "scaling n={:<6} batch={:<6} schedule() {:.1} µs/iter ({:.1} ns/entry), preempt/resume churn {:.1} ns/op",
+            p.n, p.batch_len, p.mean_us_per_iter, p.ns_per_batch_entry, p.churn_ns_per_op
+        );
+    }
+    println!(
+        "largest-vs-smallest ratios: {:.2} ns/entry, {:.2} churn (~1 linear; ~{} if quadratic)",
+        outcome.ns_per_entry_ratio,
+        outcome.churn_ratio,
+        outcome.scaling.last().map(|p| p.n).unwrap_or(0)
+            / outcome.scaling.first().map(|p| p.n.max(1)).unwrap_or(1)
+    );
+    std::fs::write(out, outcome.to_json().to_pretty())?;
+    println!("wrote {out}");
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny end-to-end smoke: both parts run, JSON carries the documented
+    /// keys, and the probe's steady state is exactly what it claims.
+    #[test]
+    fn bench_smoke_and_schema() {
+        let cfg = BenchConfig {
+            n_requests: 40,
+            online_qps: 2.0,
+            trace_s: 5.0,
+            scaling_sizes: vec![4, 16],
+            scaling_iters: 3,
+            seed: 1,
+        };
+        let o = run(&cfg).unwrap();
+        assert!(o.iterations > 0);
+        assert!(o.sched_mean_us >= 0.0);
+        assert_eq!(o.scaling.len(), 2);
+        assert_eq!(o.scaling[0].batch_len, 4, "probe batch = n running decodes");
+        assert_eq!(o.scaling[1].batch_len, 16);
+        assert!(o.ns_per_entry_ratio.is_finite());
+        assert!(o.scaling.iter().all(|p| p.churn_ns_per_op > 0.0), "churn probe ran");
+        assert!(o.churn_ratio.is_finite());
+        let j = o.to_json();
+        assert_eq!(j.get("bench").as_str(), Some("sched"));
+        assert!(j.get("trace_run").get("iters_per_sec").as_f64().unwrap() > 0.0);
+        assert!(j.get("trace_run").get("sched_overhead_p99_us").as_f64().is_some());
+        assert!(j.get("trace_run").get("stalled_iterations").as_u64().is_some());
+        assert!(matches!(j.get("scaling"), Json::Arr(a) if a.len() == 2));
+    }
+
+    #[test]
+    fn scaling_state_is_well_formed() {
+        let st = scaling_state(8);
+        assert_eq!(st.running_offline.len(), 8);
+        assert_eq!(st.preempted_offline.len(), 8);
+        assert_eq!(st.counts.decode(Class::Offline), 8);
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn presets_are_sane() {
+        let f = BenchConfig::full();
+        assert_eq!(f.n_requests, 10_000);
+        assert!(f.scaling_sizes.contains(&100) && f.scaling_sizes.contains(&5_000));
+        let q = BenchConfig::quick();
+        assert!(q.n_requests <= 500, "quick stays CI-sized");
+    }
+}

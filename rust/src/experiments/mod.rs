@@ -1,7 +1,10 @@
 //! Experiment harness: regenerates every table/figure of the paper's
 //! evaluation (see DESIGN.md's experiment index). Each `fig*` function in
 //! [`figures`] prints a table and writes `results/fig<N>.csv`.
+//! [`bench_sched`] is the scheduling-overhead micro-bench behind
+//! `hygen bench-sched` (writes `BENCH_sched.json`).
 
+pub mod bench_sched;
 pub mod figures;
 
 use crate::baselines::{SimSetup, System};

@@ -25,8 +25,8 @@
 //! table).
 //!
 //! Entry points: the `hygen` binary (`serve`, `run-trace`, `figures`,
-//! `profile`, `train-predictor` subcommands), the `examples/`, and the
-//! bench targets under `rust/benches/`.
+//! `profile`, `train-predictor`, `bench-sched` subcommands), the
+//! `examples/`, and the bench targets under `rust/benches/`.
 
 pub mod baselines;
 pub mod config;

@@ -7,6 +7,7 @@
 //! * `profile`          — SLO-aware profiler: derive the latency budget for an SLO
 //! * `train-predictor`  — profile a cost model and fit/save the LR latency predictor
 //! * `gen-trace`        — emit a synthetic trace CSV (azure | mooncake | datasets)
+//! * `bench-sched`      — scheduling-overhead micro-bench; writes BENCH_sched.json
 
 use hygen::baselines::{SimSetup, System};
 use hygen::config::ServeConfig;
@@ -41,6 +42,9 @@ USAGE:
   hygen train-predictor [--model NAME] [--samples N] [--out FILE]
   hygen gen-trace    [--kind azure|mooncake|arxiv|cnn|mmlu] [--out FILE]
                      [--qps N] [--duration S] [--n N] [--seed N]
+  hygen bench-sched  [--out FILE] [--quick] [--n N] [--seed N]
+                     (10k-request mixed trace by default; --quick is the
+                     few-hundred-request CI smoke shape)
 
 MODELS: a100-llama2-7b (default), a40-qwen-14b, a40x4-yi-34b-tp2pp2,
         a100-mistral-7b, a5000-sheared-2.7b
@@ -55,6 +59,7 @@ fn main() {
         Some("profile") => cmd_profile(&args),
         Some("train-predictor") => cmd_train_predictor(&args),
         Some("gen-trace") => cmd_gen_trace(&args),
+        Some("bench-sched") => cmd_bench_sched(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -227,6 +232,36 @@ fn cmd_train_predictor(args: &Args) -> anyhow::Result<()> {
     predictor.save(out)?;
     println!("saved {out}: coef {:?}", predictor.coef);
     let _ = LatencyPredictor::load(out)?;
+    Ok(())
+}
+
+fn cmd_bench_sched(args: &Args) -> anyhow::Result<()> {
+    use hygen::experiments::bench_sched::{self, BenchConfig};
+    let mut cfg = if args.get_bool("quick") { BenchConfig::quick() } else { BenchConfig::full() };
+    cfg.n_requests = args.get_usize("n", cfg.n_requests);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    let out = args.get_or("out", "BENCH_sched.json");
+    let outcome = bench_sched::run_and_save(&cfg, out)?;
+    // A super-linear hot path makes the largest-vs-smallest per-entry (or
+    // churn per-op) cost ratio grow toward the size ratio, while a linear
+    // one keeps both ~flat (constant terms even pull them below 1). Gate
+    // well under the quadratic signal but well above noise. Sensitivity
+    // scales with the probe sizes: the full 100→5000 shape resolves even
+    // small per-entry O(n) terms; the --quick shape (50→400) is mainly a
+    // pipeline smoke test and only trips on gross regressions.
+    let size_ratio = cfg.scaling_sizes.last().copied().unwrap_or(1) as f64
+        / cfg.scaling_sizes.first().copied().unwrap_or(1).max(1) as f64;
+    let threshold = (size_ratio / 4.0).max(4.0);
+    for (name, ratio) in
+        [("per-entry", outcome.ns_per_entry_ratio), ("preempt/resume churn", outcome.churn_ratio)]
+    {
+        anyhow::ensure!(
+            ratio < threshold,
+            "{name} scheduling cost grew {ratio:.1}x from n={} to n={} (threshold {threshold:.1}) — super-linear hot path",
+            cfg.scaling_sizes.first().copied().unwrap_or(0),
+            cfg.scaling_sizes.last().copied().unwrap_or(0),
+        );
+    }
     Ok(())
 }
 

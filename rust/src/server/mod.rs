@@ -40,13 +40,30 @@ pub struct Completion {
     pub id: RequestId,
     pub text: String,
     pub tokens: Vec<u32>,
+    /// Negative = the request failed (backend error); see
+    /// [`Completion::failed`].
     pub latency_ms: f64,
+}
+
+impl Completion {
+    /// Error marker sent when the execution backend failed.
+    fn failed() -> Completion {
+        Completion { id: 0, text: String::new(), tokens: vec![], latency_ms: -1.0 }
+    }
+
+    fn is_failed(&self) -> bool {
+        self.latency_ms < 0.0
+    }
 }
 
 /// Shared server state published by the engine thread.
 #[derive(Default)]
 struct Shared {
     metrics_json: Mutex<String>,
+    /// Set by the engine thread after a persistent backend failure: the
+    /// engine aborted its work and new completions are refused with 503
+    /// (health/metrics stay up for observability).
+    engine_failed: AtomicBool,
 }
 
 pub struct Server {
@@ -123,6 +140,10 @@ impl Server {
     }
 
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -135,7 +156,10 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // A dropped-without-shutdown server must not leak the accept and
+        // engine threads (and with them the bound port) — join like
+        // `shutdown()` does.
+        self.stop_and_join();
     }
 }
 
@@ -154,6 +178,13 @@ fn engine_loop<B: ExecutionBackend>(
         loop {
             match rx.try_recv() {
                 Ok(job) => {
+                    if shared.engine_failed.load(Ordering::SeqCst) {
+                        // Backend already declared dead: refuse instead of
+                        // queueing work that can never execute (jobs racing
+                        // the handler's own engine_failed check land here).
+                        let _ = job.reply.send(Completion::failed());
+                        continue;
+                    }
                     let id = engine.fresh_id();
                     let now = start.elapsed().as_secs_f64();
                     let req = Request::new(id, job.class, now, job.prompt.len(), job.max_tokens)
@@ -166,16 +197,28 @@ fn engine_loop<B: ExecutionBackend>(
             }
         }
         if engine.has_work() {
-            if engine.step().is_err() {
-                // execution error: fail all inflight requests
-                for (_, (reply, _)) in inflight.drain() {
-                    let _ = reply.send(Completion {
-                        id: 0,
-                        text: String::new(),
-                        tokens: vec![],
-                        latency_ms: -1.0,
-                    });
+            match engine.step() {
+                Err(_) => {
+                    // Execution error: fail all inflight requests AND tear
+                    // the engine's in-flight work down (release blocks,
+                    // empty the queues/running sets). Leaving it intact
+                    // re-schedules the same doomed batch every loop — a
+                    // 100% CPU livelock with no reply channels left to
+                    // observe it.
+                    for (_, (reply, _)) in inflight.drain() {
+                        let _ = reply.send(Completion::failed());
+                    }
+                    engine.abort_all();
+                    shared.engine_failed.store(true, Ordering::SeqCst);
                 }
+                Ok(0) => {
+                    // Work exists but nothing is schedulable right now
+                    // (e.g. a queued prompt waiting on KV memory): back
+                    // off instead of re-running the scheduler at 100% CPU
+                    // until something changes.
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(_) => {}
             }
             // deliver completions
             for req in engine.state.finished.drain(..) {
@@ -218,6 +261,14 @@ fn handle_connection(
             write_response(stream, 200, "application/json", body.as_bytes())
         }
         ("POST", "/v1/completions") => {
+            if shared.engine_failed.load(Ordering::SeqCst) {
+                return write_response(
+                    stream,
+                    503,
+                    "application/json",
+                    b"{\"error\":\"backend failed\"}",
+                );
+            }
             let parsed = Json::parse(&String::from_utf8_lossy(&req.body));
             let Ok(j) = parsed else {
                 return write_response(stream, 400, "application/json", b"{\"error\":\"bad json\"}");
@@ -241,7 +292,7 @@ fn handle_connection(
                 return write_response(stream, 503, "application/json", b"{\"error\":\"engine down\"}");
             }
             match reply_rx.recv_timeout(Duration::from_secs(120)) {
-                Ok(c) if c.latency_ms >= 0.0 => {
+                Ok(c) if !c.is_failed() => {
                     let body = Json::obj(vec![
                         ("id", c.id.into()),
                         ("text", c.text.into()),
@@ -250,7 +301,7 @@ fn handle_connection(
                     ]);
                     write_response(stream, 200, "application/json", body.to_string().as_bytes())
                 }
-                Ok(_) => write_response(stream, 500, "application/json", b"{\"error\":\"execution failed\"}"),
+                Ok(_) => write_response(stream, 503, "application/json", b"{\"error\":\"backend failed\"}"),
                 Err(_) => write_response(stream, 500, "application/json", b"{\"error\":\"timeout\"}"),
             }
         }
@@ -364,6 +415,69 @@ mod tests {
             assert!(r.contains("200 OK"), "{r}");
         }
         server.shutdown();
+    }
+
+    /// Backend that fails every execution (persistent hardware fault).
+    struct FailBackend;
+    impl ExecutionBackend for FailBackend {
+        fn execute(&mut self, _batch: &Batch, _state: &mut EngineState) -> anyhow::Result<f64> {
+            anyhow::bail!("injected backend failure")
+        }
+    }
+
+    fn completions_request(prompt: &str) -> String {
+        let body = format!(r#"{{"prompt": "{prompt}", "max_tokens": 2}}"#);
+        format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    }
+
+    #[test]
+    fn failing_backend_errors_requests_without_livelock() {
+        let server = Server::start(
+            "127.0.0.1:0",
+            || {
+                let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+                let sched = HybridScheduler::new(
+                    SchedulerConfig { latency_budget_ms: None, ..Default::default() },
+                    LatencyPredictor::default_seed(),
+                );
+                Ok(Engine::new(sched, state, FailBackend))
+            },
+            2,
+        )
+        .unwrap();
+        // First request reaches the engine, the backend fails, and the
+        // inflight reply channel must carry the error back promptly — not
+        // spin until the 120 s handler timeout.
+        let t0 = std::time::Instant::now();
+        let r = http(server.addr, &completions_request("abcd"));
+        assert!(r.contains("503"), "{r}");
+        assert!(r.contains("backend failed"), "{r}");
+        assert!(t0.elapsed() < Duration::from_secs(10), "reply was not prompt");
+        // The engine aborted its work: the process stays responsive and
+        // subsequent completions are refused with 503 up front.
+        let r = http(server.addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK") && r.contains("\"ok\""), "{r}");
+        let r = http(server.addr, &completions_request("efgh"));
+        assert!(r.contains("503"), "{r}");
+        let r = http(server.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(r.contains("200 OK"), "{r}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn drop_joins_threads_and_frees_port() {
+        let server = start_echo_server();
+        let addr = server.addr;
+        drop(server); // no explicit shutdown()
+        // Drop must join the accept thread and release the listener: the
+        // port is immediately rebindable and nothing serves on it.
+        let listener = std::net::TcpListener::bind(addr)
+            .expect("port still bound after Server::drop");
+        drop(listener);
     }
 
     #[test]

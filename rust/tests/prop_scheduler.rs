@@ -51,20 +51,20 @@ fn random_config(g: &mut Gen) -> SchedulerConfig {
     }
 }
 
-/// Apply a batch like the engine would; returns finished ids.
+/// Apply a batch like the engine would; progress goes through the
+/// census-maintaining [`EngineState`] transitions (mutating `Request`
+/// phases directly would drift the phase counts the scheduler relies on).
 fn apply(st: &mut EngineState, batch: &hygen::coordinator::batch::Batch) {
     let mut done = Vec::new();
     for e in &batch.entries {
-        let r = st.req_mut(e.id);
-        if e.is_prefill {
-            r.advance_prefill(e.n_tokens);
-            if r.prefill_done() {
-                r.advance_decode();
-            }
+        let finished = if e.is_prefill {
+            // The chunk that completes the prompt also emits the first
+            // output token, mirroring Engine::apply.
+            st.advance_prefill(e.id, e.n_tokens) && st.advance_decode(e.id)
         } else {
-            r.advance_decode();
-        }
-        if st.requests[&e.id].is_finished() {
+            st.advance_decode(e.id)
+        };
+        if finished {
             done.push(e.id);
         }
     }
@@ -87,6 +87,12 @@ fn drive(
         let batch = sched.schedule(&mut st, now);
         inspect(&sched, &st, &batch);
         apply(&mut st, &batch);
+        // The full structural invariants (no dual membership, queue/table
+        // disjointness, phase-census consistency) must hold after *every*
+        // schedule+apply iteration, for every random workload and config.
+        if let Err(e) = st.check_invariants() {
+            panic!("invariant violated after round {round}: {e}");
+        }
     }
 }
 
@@ -177,11 +183,15 @@ fn prop_no_request_lost_or_duplicated() {
             assert_eq!(now, total, "requests lost/duplicated at round {round}");
             // no id in two running/preempted sets at once
             let mut seen = std::collections::HashSet::new();
-            for &id in
-                st.running_online.iter().chain(&st.running_offline).chain(&st.preempted_offline)
+            for id in st
+                .running_online
+                .iter()
+                .chain(st.running_offline.iter())
+                .chain(st.preempted_offline.iter().copied())
             {
                 assert!(seen.insert(id), "id {id} in two sets");
             }
+            st.check_invariants().unwrap_or_else(|e| panic!("round {round}: {e}"));
         }
     });
 }
