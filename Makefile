@@ -3,7 +3,7 @@
 # `make artifacts` produces the AOT HLO artifacts the PJRT execution path
 # (`--features pjrt`) loads at startup.
 
-.PHONY: all artifacts test bench bench-sched clean
+.PHONY: all artifacts test bench bench-sched bench-replay microbench clean
 
 all:
 	cargo build --release
@@ -16,13 +16,24 @@ artifacts:
 test:
 	cargo build --release && cargo test -q
 
-bench:
-	cargo bench
+# Regenerate both tracked perf-trajectory files
+# (BENCH_sched.json + BENCH_e2e.json).
+bench: bench-sched bench-replay
 
 # Scheduling-overhead trajectory (10k-request mixed trace + scaling probe)
 # -> BENCH_sched.json
 bench-sched:
 	cargo run --release -- bench-sched
+
+# End-to-end replay trajectory (multi-scale mixed-trace replay +
+# zero-allocation steady-decode probe) -> BENCH_e2e.json
+bench-replay:
+	cargo run --release -- bench-replay
+
+# In-tree Bencher micro-benchmarks (scheduler, PSM, predictor, figures,
+# sched_trace, replay bench targets).
+microbench:
+	cargo bench
 
 clean:
 	cargo clean

@@ -31,7 +31,7 @@ fn online_trace(n: usize, qps: f64, seed: u64) -> Vec<TraceEvent> {
                 class: Class::Online,
                 prompt_len: prompt.len(),
                 output_len: 6 + (i % 6),
-                prompt,
+                prompt: prompt.into(),
             }
         })
         .collect()
@@ -48,7 +48,7 @@ fn offline_backlog(n: usize) -> Vec<TraceEvent> {
                 class: Class::Offline,
                 prompt_len: prompt.len(),
                 output_len: 8,
-                prompt,
+                prompt: prompt.into(),
             }
         })
         .collect()

@@ -1,0 +1,28 @@
+//! End-to-end replay-throughput bench: the same harness as
+//! `hygen bench-replay`, exposed as a bench target so `cargo bench`
+//! records the trajectory too. Registers the counting allocator so the
+//! allocation columns (and the zero-allocation steady-state contract)
+//! are measured for real.
+//!
+//! Env knobs: `BENCH_REPLAY_FULL=1` for the multi-scale trajectory shape
+//! (default is the quick CI shape), `BENCH_REPLAY_OUT` to override the
+//! output path.
+
+use hygen::experiments::bench_replay::{check_gates, run_and_save, ReplayConfig};
+use hygen::util::alloc::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let cfg = if std::env::var("BENCH_REPLAY_FULL").is_ok() {
+        ReplayConfig::full()
+    } else {
+        ReplayConfig::quick()
+    };
+    let out = std::env::var("BENCH_REPLAY_OUT").unwrap_or_else(|_| "BENCH_e2e.json".into());
+    if let Err(e) = run_and_save(&cfg, &out).and_then(|outcome| check_gates(&outcome)) {
+        eprintln!("bench-replay failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -16,7 +16,7 @@ fn steady_state(n_running: usize, n_queued: usize, policy: OfflinePolicy) -> Eng
     for i in 0..n_running {
         let id = i as u64;
         let mut r = Request::new(id, if i % 2 == 0 { Class::Online } else { Class::Offline }, 0.0, 256, 64)
-            .with_prompt((0..256u32).map(|k| k + id as u32 * 977).collect());
+            .with_prompt((0..256u32).map(|k| k + id as u32 * 977).collect::<Vec<u32>>());
         r.prefilled = 256;
         r.generated = 1 + (i % 8);
         r.phase = hygen::coordinator::request::Phase::Decode;
@@ -27,7 +27,7 @@ fn steady_state(n_running: usize, n_queued: usize, policy: OfflinePolicy) -> Eng
         let id = (10_000 + i) as u64;
         let len = rng.range_usize(64, 2048);
         let req = Request::new(id, Class::Offline, i as f64 * 0.01, len, 32)
-            .with_prompt((0..len as u32).map(|k| k + id as u32 * 131).collect());
+            .with_prompt((0..len as u32).map(|k| k + id as u32 * 131).collect::<Vec<u32>>());
         st.offline_queue.push(req);
     }
     st
@@ -48,11 +48,14 @@ fn main() {
                 LatencyPredictor::default_seed(),
             );
             let mut now = 0.0;
+            // Reused iteration batch, exactly like the engine's hot loop.
+            let mut batch = hygen::coordinator::batch::Batch::new();
             b.bench(
                 &format!("schedule/steady r={n_running} q={n_queued} [{}]", policy.name()),
                 || {
                     now += 0.01;
-                    black_box(sched.schedule(&mut st, now).len())
+                    sched.schedule(&mut st, now, &mut batch);
+                    black_box(batch.len())
                 },
             );
         }
@@ -69,6 +72,6 @@ fn main() {
     );
     b.bench("schedule/admission burst 64 offline", || {
         let mut st = steady_state(0, 64, OfflinePolicy::Psm);
-        black_box(sched.schedule(&mut st, 0.0).len())
+        black_box(sched.schedule_owned(&mut st, 0.0).len())
     });
 }

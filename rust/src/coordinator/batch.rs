@@ -40,6 +40,12 @@ impl Batch {
         self.entries.push(e);
     }
 
+    /// Empty the batch, keeping its capacity (the engine reuses one batch
+    /// across iterations — the allocation-free-loop contract).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
     /// Total new tokens in the batch (the Sarathi "token budget" measure).
     pub fn total_tokens(&self) -> usize {
         self.entries.iter().map(|e| e.n_tokens).sum()

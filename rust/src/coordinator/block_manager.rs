@@ -204,15 +204,16 @@ impl BlockManager {
         if extra > self.free.len() {
             return false;
         }
-        let mut fresh = Vec::with_capacity(extra);
+        // No temporary buffer: blocks are claimed and appended one at a
+        // time (decode-path growth is at most one block per call, and the
+        // hot loop must not allocate).
         for _ in 0..extra {
             let b = self.take_free().expect("checked above");
             self.blocks[b as usize].refcount = 1;
             self.blocks[b as usize].hash = None; // decode blocks: not cacheable
-            fresh.push(b);
+            self.seqs.get_mut(&id).expect("checked above").blocks.push(b);
         }
-        let a = self.seqs.get_mut(&id).unwrap();
-        a.blocks.extend(fresh);
+        let a = self.seqs.get_mut(&id).expect("checked above");
         a.tokens_used = new_total_tokens;
         true
     }

@@ -1,14 +1,21 @@
 //! Serving metrics: TTFT/TBT sample collection per class, throughput
 //! accounting (TPS/QPS), and windowed temporal series (Fig. 8's breakdown,
 //! the `/metrics` endpoint, and every figure harness).
+//!
+//! Per-request bookkeeping lives in one dense slab indexed by
+//! [`RequestId`] (ids are allocated monotonically from 1 by the engine),
+//! replacing the previous three `HashMap`s that each cost a probe *per
+//! generated token*. A slot is written at arrival, updated per token, and
+//! marked finished — never removed mid-run, so the steady-state token
+//! path is a single bounds-checked index with zero hashing and zero
+//! allocation (the slab only grows at admission time, amortized).
 
 use super::request::{Class, RequestId, Slo, SloMetric};
 use crate::util::json::Json;
 use crate::util::stats::{Summary, WindowSeries};
-use std::collections::HashMap;
 
 /// Aggregated latency/throughput report for one run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Report {
     pub mean_ttft_ms: f64,
     pub p99_ttft_ms: f64,
@@ -57,6 +64,34 @@ impl Report {
     }
 }
 
+/// One request's bookkeeping slot in the dense slab.
+#[derive(Debug, Clone, Copy)]
+struct ReqSlot {
+    class: Class,
+    /// Arrival time (s).
+    arrival: f64,
+    /// Time of the most recent token (meaningful once `seen_first`).
+    last_token: f64,
+    seen_first: bool,
+    finished: bool,
+    /// An id is live between `on_arrival` and `on_finish`; untouched
+    /// slots (never-arrived ids) ignore token/finish events.
+    occupied: bool,
+}
+
+impl Default for ReqSlot {
+    fn default() -> Self {
+        ReqSlot {
+            class: Class::Online,
+            arrival: 0.0,
+            last_token: 0.0,
+            seen_first: false,
+            finished: false,
+            occupied: false,
+        }
+    }
+}
+
 /// Streaming collector the engine feeds as tokens are produced.
 ///
 /// TTFT and TBT are **online-class** metrics (the SLO-bound side);
@@ -65,10 +100,8 @@ impl Report {
 pub struct Metrics {
     ttft: Summary,
     tbt: Summary,
-    // request bookkeeping
-    arrival: HashMap<RequestId, (Class, f64)>,
-    last_token: HashMap<RequestId, f64>,
-    first_token_seen: HashMap<RequestId, bool>,
+    /// Dense per-request slab, indexed by `RequestId`.
+    slots: Vec<ReqSlot>,
     online_tokens: u64,
     offline_tokens: u64,
     online_finished: usize,
@@ -85,9 +118,7 @@ impl Metrics {
         Metrics {
             ttft: Summary::new(),
             tbt: Summary::new(),
-            arrival: HashMap::new(),
-            last_token: HashMap::new(),
-            first_token_seen: HashMap::new(),
+            slots: Vec::new(),
             online_tokens: 0,
             offline_tokens: 0,
             online_finished: 0,
@@ -99,9 +130,37 @@ impl Metrics {
         }
     }
 
-    /// Request entered the system (its queue) at time `t`.
+    /// Pre-size internal storage so a bounded measurement window is
+    /// allocation-free: slab slots for ids below `max_id`, capacity for
+    /// `extra_samples` more TTFT/TBT samples, and series bucket capacity
+    /// out to `horizon_s`. Used by the steady-state allocation probe.
+    pub fn preallocate(&mut self, max_id: RequestId, extra_samples: usize, horizon_s: f64) {
+        let want = max_id as usize + 1;
+        if want > self.slots.len() {
+            self.slots.resize(want, ReqSlot::default());
+        }
+        self.ttft.reserve(extra_samples);
+        self.tbt.reserve(extra_samples);
+        self.online_tps_series.reserve_until(horizon_s);
+        self.offline_tps_series.reserve_until(horizon_s);
+        self.online_qps_series.reserve_until(horizon_s);
+    }
+
+    /// Request entered the system (its queue) at time `t`. Re-arrival of
+    /// an already-used id (id reuse across logical runs) resets its slot.
     pub fn on_arrival(&mut self, id: RequestId, class: Class, t: f64) {
-        self.arrival.insert(id, (class, t));
+        let idx = id as usize;
+        if idx >= self.slots.len() {
+            self.slots.resize(idx + 1, ReqSlot::default());
+        }
+        self.slots[idx] = ReqSlot {
+            class,
+            arrival: t,
+            last_token: 0.0,
+            seen_first: false,
+            finished: false,
+            occupied: true,
+        };
         if class.is_online() {
             self.online_qps_series.record(t, 1.0);
         }
@@ -109,23 +168,24 @@ impl Metrics {
     }
 
     /// `n` output tokens became visible at time `t` (a decode step yields
-    /// 1; the final prefill chunk yields the first token).
+    /// 1; the final prefill chunk yields the first token). Tokens for
+    /// unknown or already-finished ids are ignored.
     pub fn on_tokens(&mut self, id: RequestId, t: f64, n: usize) {
-        let Some(&(class, arrived)) = self.arrival.get(&id) else { return };
-        self.end_time = self.end_time.max(t);
-        let first_seen = self.first_token_seen.get(&id).copied().unwrap_or(false);
-        if !first_seen {
-            if class.is_online() {
-                self.ttft.add((t - arrived) * 1e3);
-            }
-            self.first_token_seen.insert(id, true);
-        } else if class.is_online() {
-            if let Some(&last) = self.last_token.get(&id) {
-                self.tbt.add((t - last) * 1e3);
-            }
+        let Some(slot) = self.slots.get_mut(id as usize) else { return };
+        if !slot.occupied || slot.finished {
+            return;
         }
-        self.last_token.insert(id, t);
-        match class {
+        self.end_time = self.end_time.max(t);
+        if !slot.seen_first {
+            slot.seen_first = true;
+            if slot.class.is_online() {
+                self.ttft.add((t - slot.arrival) * 1e3);
+            }
+        } else if slot.class.is_online() {
+            self.tbt.add((t - slot.last_token) * 1e3);
+        }
+        slot.last_token = t;
+        match slot.class {
             Class::Online => {
                 self.online_tokens += n as u64;
                 self.online_tps_series.record(t, n as f64);
@@ -137,16 +197,20 @@ impl Metrics {
         }
     }
 
+    /// Request completed at time `t`. Double-finish and unknown ids are
+    /// ignored (the slot stays in the slab, marked finished, so late
+    /// token events for the id are dropped rather than miscounted).
     pub fn on_finish(&mut self, id: RequestId, t: f64) {
-        self.end_time = self.end_time.max(t);
-        if let Some((class, _)) = self.arrival.get(&id) {
-            match class {
-                Class::Online => self.online_finished += 1,
-                Class::Offline => self.offline_finished += 1,
-            }
+        let Some(slot) = self.slots.get_mut(id as usize) else { return };
+        if !slot.occupied || slot.finished {
+            return;
         }
-        self.last_token.remove(&id);
-        self.first_token_seen.remove(&id);
+        slot.finished = true;
+        self.end_time = self.end_time.max(t);
+        match slot.class {
+            Class::Online => self.online_finished += 1,
+            Class::Offline => self.offline_finished += 1,
+        }
     }
 
     pub fn online_token_count(&self) -> u64 {
@@ -226,8 +290,10 @@ mod tests {
     fn unknown_request_token_ignored() {
         let mut m = Metrics::new(1.0);
         m.on_tokens(99, 1.0, 1); // no arrival recorded
+        m.on_finish(99, 1.0);
         let r = m.report(Some(1.0));
         assert_eq!(r.total_tps, 0.0);
+        assert_eq!(r.online_finished, 0);
     }
 
     #[test]
@@ -249,5 +315,53 @@ mod tests {
         let j = m.report(Some(1.0)).to_json();
         assert!(j.get("mean_ttft_ms").as_f64().is_some());
         assert!(j.get("total_tps").as_f64().is_some());
+    }
+
+    #[test]
+    fn slab_id_reuse_resets_slot() {
+        let mut m = Metrics::new(1.0);
+        m.on_arrival(5, Class::Online, 0.0);
+        m.on_tokens(5, 0.010, 1);
+        m.on_finish(5, 0.010);
+        // Same id arrives again (logical id reuse): fresh TTFT baseline,
+        // fresh finished state.
+        m.on_arrival(5, Class::Offline, 1.0);
+        m.on_tokens(5, 1.5, 1);
+        m.on_finish(5, 1.5);
+        let r = m.report(Some(2.0));
+        assert_eq!(r.online_finished, 1);
+        assert_eq!(r.offline_finished, 1);
+        assert!((r.mean_ttft_ms - 10.0).abs() < 1e-9, "second life took no TTFT sample");
+    }
+
+    #[test]
+    fn slab_out_of_order_and_double_finish() {
+        let mut m = Metrics::new(1.0);
+        m.on_arrival(1, Class::Online, 0.0);
+        m.on_arrival(2, Class::Online, 0.0);
+        m.on_tokens(2, 0.020, 1);
+        m.on_tokens(1, 0.030, 1);
+        // Out-of-order finish: 2 before 1; then double-finish 2.
+        m.on_finish(2, 0.020);
+        m.on_finish(2, 0.025);
+        m.on_finish(1, 0.030);
+        // Tokens after finish are dropped, not miscounted.
+        m.on_tokens(2, 0.050, 1);
+        let r = m.report(Some(1.0));
+        assert_eq!(r.online_finished, 2, "double-finish must not double-count");
+        assert_eq!(m.online_token_count(), 2, "post-finish token dropped");
+    }
+
+    #[test]
+    fn preallocate_prevents_slab_growth() {
+        let mut m = Metrics::new(1.0);
+        m.preallocate(128, 16, 60.0);
+        let cap = m.slots.capacity();
+        for id in 0..100u64 {
+            m.on_arrival(id, Class::Offline, 0.0);
+            m.on_tokens(id, 0.5, 1);
+        }
+        assert_eq!(m.slots.capacity(), cap, "slab pre-sized, no growth");
+        assert_eq!(m.report(Some(1.0)).offline_tps, 100.0);
     }
 }

@@ -222,7 +222,7 @@ mod tests {
 
     fn offline(id: RequestId, prompt: &str, arrival: f64) -> Request {
         Request::new(id, Class::Offline, arrival, prompt.len(), 8)
-            .with_prompt(prompt.bytes().map(|b| b as u32).collect())
+            .with_prompt(prompt.bytes().map(|b| b as u32).collect::<Vec<u32>>())
     }
 
     #[test]

@@ -1,8 +1,18 @@
 //! Request model: online/offline classes, lifecycle phases, SLO metrics,
 //! and per-request progress the scheduler and engine share.
 
+use std::sync::Arc;
+
 /// Monotonic request identifier.
 pub type RequestId = u64;
+
+/// Shared empty prompt: every `Request::new` clones one static `Arc`
+/// instead of allocating (trace replay admits thousands of requests per
+/// second; prompts are shared with their `TraceEvent`, never copied).
+pub fn empty_prompt() -> Arc<[u32]> {
+    static EMPTY: std::sync::OnceLock<Arc<[u32]>> = std::sync::OnceLock::new();
+    EMPTY.get_or_init(|| Vec::new().into()).clone()
+}
 
 /// Workload class — the paper's central dichotomy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -105,8 +115,10 @@ pub struct Request {
     /// Arrival time in seconds (trace time for sim, engine-relative wall
     /// clock for the real path).
     pub arrival: f64,
-    /// Prompt token ids (real engine). Empty in pure simulation.
-    pub prompt: Vec<u32>,
+    /// Prompt token ids (real engine), shared with the trace event that
+    /// spawned the request (`Arc`: admission is a refcount bump, not a
+    /// copy). Empty in pure simulation.
+    pub prompt: Arc<[u32]>,
     /// Prompt length in tokens (== prompt.len() when prompt is real).
     pub prompt_len: usize,
     /// Number of output tokens to generate (sim: sampled from the trace;
@@ -137,7 +149,7 @@ impl Request {
             id,
             class,
             arrival,
-            prompt: Vec::new(),
+            prompt: empty_prompt(),
             prompt_len,
             output_len: output_len.max(1),
             priority: if class.is_online() { 100 } else { 0 },
@@ -150,9 +162,9 @@ impl Request {
         }
     }
 
-    pub fn with_prompt(mut self, prompt: Vec<u32>) -> Request {
-        self.prompt_len = prompt.len();
-        self.prompt = prompt;
+    pub fn with_prompt(mut self, prompt: impl Into<Arc<[u32]>>) -> Request {
+        self.prompt = prompt.into();
+        self.prompt_len = self.prompt.len();
         self
     }
 
@@ -283,5 +295,15 @@ mod tests {
     #[test]
     fn output_len_at_least_one() {
         assert_eq!(Request::new(1, Class::Online, 0.0, 5, 0).output_len, 1);
+    }
+
+    #[test]
+    fn prompts_are_shared_not_copied() {
+        let prompt: Arc<[u32]> = vec![1, 2, 3].into();
+        let r = Request::new(1, Class::Online, 0.0, 0, 4).with_prompt(prompt.clone());
+        assert_eq!(r.prompt_len, 3);
+        assert!(Arc::ptr_eq(&r.prompt, &prompt), "admission must not copy the prompt");
+        let fresh = Request::new(2, Class::Offline, 0.0, 8, 1);
+        assert!(fresh.prompt.is_empty());
     }
 }

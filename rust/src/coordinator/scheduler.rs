@@ -152,10 +152,14 @@ impl HybridScheduler {
     }
 
     /// Build the next iteration batch at time `now` (Alg. 2's two
-    /// invocations of Alg. 1). Mutates `state`: admissions move queue
-    /// requests into the running sets (with block allocation), and memory
-    /// pressure may preempt offline requests.
-    pub fn schedule(&mut self, state: &mut EngineState, now: f64) -> Batch {
+    /// invocations of Alg. 1) into the caller-owned `out`, which is
+    /// cleared first and reused across iterations — the engine's hot loop
+    /// is allocation-free once `out` (and the internal scratch) is warm.
+    /// Mutates `state`: admissions move queue requests into the running
+    /// sets (with block allocation), and memory pressure may preempt
+    /// offline requests.
+    pub fn schedule(&mut self, state: &mut EngineState, now: f64, out: &mut Batch) {
+        out.clear();
         let mut stats = ScheduleStats::default();
         let mut t = self.cfg.latency_budget_ms.unwrap_or(f64::INFINITY);
         if t.is_finite() {
@@ -165,16 +169,22 @@ impl HybridScheduler {
             t -= self.predictor.predict(&Features::default());
         }
         let mut c = self.cfg.chunk_tokens;
-        let mut batch = Batch::new();
         let mut feats = Features::default();
 
-        self.online_phase(state, &mut batch, &mut feats, &mut t, &mut c, &mut stats);
+        self.online_phase(state, out, &mut feats, &mut t, &mut c, &mut stats);
         if self.cfg.enable_offline {
-            self.offline_phase(state, now, &mut batch, &mut feats, &mut t, &mut c);
+            self.offline_phase(state, now, out, &mut feats, &mut t, &mut c);
         }
         stats.predicted_ms = self.predictor.predict(&feats);
         self.last_stats = stats;
-        batch
+    }
+
+    /// Allocating convenience wrapper around [`HybridScheduler::schedule`]
+    /// (tests and probes; the engine reuses its own scratch batch).
+    pub fn schedule_owned(&mut self, state: &mut EngineState, now: f64) -> Batch {
+        let mut out = Batch::new();
+        self.schedule(state, now, &mut out);
+        out
     }
 
     // ---------------------------------------------------------------- online
@@ -521,12 +531,12 @@ mod tests {
 
     fn online(id: RequestId, prompt: usize, out: usize) -> Request {
         Request::new(id, Class::Online, 0.0, prompt, out)
-            .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect())
+            .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect::<Vec<u32>>())
     }
 
     fn offline(id: RequestId, prompt: usize, out: usize) -> Request {
         Request::new(id, Class::Offline, 0.0, prompt, out)
-            .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect())
+            .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect::<Vec<u32>>())
     }
 
     /// Apply a batch the way the engine would (progress only; same
@@ -554,17 +564,17 @@ mod tests {
         let mut st = mk_state(256);
         let mut s = sched(SchedulerConfig::default());
         st.enqueue(online(1, 100, 2));
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         assert_eq!(b.len(), 1);
         assert!(b.entries[0].is_prefill);
         assert_eq!(b.entries[0].n_tokens, 100, "whole prompt fits the chunk budget");
         apply(&mut st, &b);
         assert_eq!(st.requests[&1].phase, Phase::Decode);
-        let b2 = s.schedule(&mut st, 0.1);
+        let b2 = s.schedule_owned(&mut st, 0.1);
         assert_eq!(b2.len(), 1);
         assert!(!b2.entries[0].is_prefill);
         apply(&mut st, &b2);
-        let b3 = s.schedule(&mut st, 0.2);
+        let b3 = s.schedule_owned(&mut st, 0.2);
         apply(&mut st, &b3);
         assert!(st.finished.iter().any(|r| r.id == 1));
         st.check_invariants().unwrap();
@@ -579,13 +589,13 @@ mod tests {
             ..SchedulerConfig::default()
         });
         st.enqueue(online(1, 300, 1));
-        let b1 = s.schedule(&mut st, 0.0);
+        let b1 = s.schedule_owned(&mut st, 0.0);
         assert_eq!(b1.entries[0].n_tokens, 128);
         apply(&mut st, &b1);
-        let b2 = s.schedule(&mut st, 0.1);
+        let b2 = s.schedule_owned(&mut st, 0.1);
         assert_eq!(b2.entries[0].n_tokens, 128);
         apply(&mut st, &b2);
-        let b3 = s.schedule(&mut st, 0.2);
+        let b3 = s.schedule_owned(&mut st, 0.2);
         assert_eq!(b3.entries[0].n_tokens, 44);
         apply(&mut st, &b3);
         // Completing the prompt emits the first (and, with out=1, only)
@@ -605,7 +615,7 @@ mod tests {
         });
         st.enqueue(online(1, 200, 4));
         st.enqueue(offline(10, 400, 4));
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         let online_tokens: usize =
             b.entries.iter().filter(|e| e.class.is_online()).map(|e| e.n_tokens).sum();
         let offline_tokens: usize =
@@ -627,7 +637,7 @@ mod tests {
         });
         st.enqueue(online(1, 200, 4));
         st.enqueue(offline(10, 400, 4));
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         assert_eq!(b.total_tokens(), 512, "chunk budget fully used when SLO-unaware");
     }
 
@@ -637,7 +647,7 @@ mod tests {
         let mut s = sched(SchedulerConfig { enable_offline: false, ..Default::default() });
         st.enqueue(online(1, 50, 2));
         st.enqueue(offline(10, 50, 2));
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         assert!(b.entries.iter().all(|e| e.class.is_online()));
         assert_eq!(st.offline_queue.len(), 1);
     }
@@ -653,12 +663,12 @@ mod tests {
             ..SchedulerConfig::default()
         });
         st.enqueue(offline(10, 200, 64));
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         apply(&mut st, &b);
         assert_eq!(st.running_offline, vec![10]);
         // Online request needs 200 tokens; only ~56 free -> preemption.
         st.enqueue(online(1, 200, 2));
-        let b2 = s.schedule(&mut st, 0.1);
+        let b2 = s.schedule_owned(&mut st, 0.1);
         assert!(b2.entries.iter().any(|e| e.id == 1 && e.is_prefill));
         assert_eq!(s.last_stats.preemptions, 1);
         assert_eq!(st.preempted_offline, vec![10]);
@@ -676,16 +686,16 @@ mod tests {
             ..SchedulerConfig::default()
         });
         st.enqueue(offline(10, 200, 4));
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         apply(&mut st, &b);
         st.enqueue(online(1, 200, 1));
-        let b = s.schedule(&mut st, 0.1);
+        let b = s.schedule_owned(&mut st, 0.1);
         apply(&mut st, &b); // preempts 10, prefills 1
-        let b = s.schedule(&mut st, 0.2);
+        let b = s.schedule_owned(&mut st, 0.2);
         apply(&mut st, &b); // 1 decodes once -> finished
         assert!(st.finished.iter().any(|r| r.id == 1));
         // Next iteration: 10 resumes with preserved progress.
-        let b = s.schedule(&mut st, 0.3);
+        let b = s.schedule_owned(&mut st, 0.3);
         assert!(st.running_offline.contains(10));
         assert!(st.preempted_offline.is_empty());
         assert!(b.entries.iter().any(|e| e.id == 10));
@@ -704,10 +714,10 @@ mod tests {
             ..SchedulerConfig::default()
         });
         st.enqueue(offline(10, 200, 4));
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         apply(&mut st, &b);
         st.enqueue(online(1, 200, 2));
-        let b = s.schedule(&mut st, 0.1);
+        let b = s.schedule_owned(&mut st, 0.1);
         apply(&mut st, &b);
         assert!(st.preempted_offline.is_empty());
         assert_eq!(st.offline_queue.len(), 1, "discarded -> requeued");
@@ -725,12 +735,12 @@ mod tests {
         for i in 0..10 {
             st.enqueue(offline(10 + i, 32, 4));
         }
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         let admissions = b.entries.iter().filter(|e| e.is_prefill).count();
         assert_eq!(admissions, 1, "token bucket starts with 1 permit");
         apply(&mut st, &b);
         // 5 seconds later: ~5 more permits accumulated (burst-capped at 1).
-        let b2 = s.schedule(&mut st, 5.0);
+        let b2 = s.schedule_owned(&mut st, 5.0);
         let admissions2 = b2.entries.iter().filter(|e| e.is_prefill).count();
         assert_eq!(admissions2, 1, "burst cap 1 -> one admission per call");
     }
@@ -747,7 +757,7 @@ mod tests {
         for i in 0..10 {
             st.enqueue(online(i, 16, 4));
         }
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         assert_eq!(b.len(), 3);
         assert_eq!(st.num_running(), 3);
     }
@@ -764,7 +774,7 @@ mod tests {
         for i in 0..50 {
             st.enqueue(offline(i, 512, 8));
         }
-        let b = s.schedule(&mut st, 0.0);
+        let b = s.schedule_owned(&mut st, 0.0);
         assert!(!b.is_empty());
         assert!(
             s.last_stats.predicted_ms <= budget + 1e-6,

@@ -121,12 +121,19 @@ pub struct Engine<B: ExecutionBackend> {
     pub clock_s: f64,
     pub iterations: u64,
     /// Record per-iteration scheduling overhead samples (bench harness;
-    /// off by default to keep long sims allocation-free).
+    /// off by default to keep long sims allocation-free — `step` pushes
+    /// into `sched_samples` *only* under this flag, and `run_trace`
+    /// asserts the vec stays empty otherwise).
     pub record_sched_samples: bool,
     sched_overhead: std::time::Duration,
     sched_samples: Vec<u64>,
     stalled: u64,
     next_id: RequestId,
+    /// The engine-owned iteration batch, reused across `step` calls
+    /// (cleared by `schedule`, never reallocated once warm).
+    batch: Batch,
+    /// Reused buffer of request ids finished by the current batch.
+    finished_scratch: Vec<RequestId>,
 }
 
 impl<B: ExecutionBackend> Engine<B> {
@@ -143,6 +150,8 @@ impl<B: ExecutionBackend> Engine<B> {
             sched_samples: Vec::new(),
             stalled: 0,
             next_id: 1,
+            batch: Batch::new(),
+            finished_scratch: Vec::new(),
         }
     }
 
@@ -199,54 +208,71 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// Run one scheduling + execution iteration. Returns the executed
-    /// batch size (0 = nothing schedulable).
+    /// batch size (0 = nothing schedulable). The iteration batch and the
+    /// finished-id buffer are engine-owned scratch: a steady-state decode
+    /// iteration performs no heap allocation (see `tests/alloc_free_loop`
+    /// and the `bench-replay` steady probe).
     pub fn step(&mut self) -> anyhow::Result<usize> {
         let t0 = std::time::Instant::now();
-        let batch = self.scheduler.schedule(&mut self.state, self.clock_s);
+        self.scheduler.schedule(&mut self.state, self.clock_s, &mut self.batch);
         let sched_ns = t0.elapsed();
         self.sched_overhead += sched_ns;
-        if batch.is_empty() {
+        if self.batch.is_empty() {
             return Ok(0);
         }
         if self.record_sched_samples {
             self.sched_samples.push(sched_ns.as_nanos() as u64);
         }
         self.iterations += 1;
-        let latency_s = self.backend.execute(&batch, &mut self.state)?;
+        let latency_s = self.backend.execute(&self.batch, &mut self.state)?;
         self.clock_s += latency_s;
-        self.apply(&batch);
-        Ok(batch.len())
+        Self::apply(
+            &mut self.state,
+            &mut self.metrics,
+            &mut self.backend,
+            &mut self.finished_scratch,
+            &self.batch,
+            self.clock_s,
+        );
+        Ok(self.batch.len())
     }
 
     /// Apply progress + metrics for an executed batch at the (already
-    /// advanced) clock.
-    fn apply(&mut self, batch: &Batch) {
-        let now = self.clock_s;
-        let mut finished: Vec<RequestId> = Vec::new();
+    /// advanced) clock. Takes the engine fields it needs explicitly so the
+    /// engine-owned `batch` can be borrowed alongside them.
+    fn apply(
+        state: &mut EngineState,
+        metrics: &mut Metrics,
+        backend: &mut B,
+        finished: &mut Vec<RequestId>,
+        batch: &Batch,
+        now: f64,
+    ) {
+        finished.clear();
         for e in &batch.entries {
             let done = if e.is_prefill {
-                if self.state.advance_prefill(e.id, e.n_tokens) {
+                if state.advance_prefill(e.id, e.n_tokens) {
                     // The iteration that completes the prompt also emits
                     // the first output token (TTFT lands here).
-                    let done = self.state.advance_decode(e.id);
-                    self.metrics.on_tokens(e.id, now, 1);
+                    let done = state.advance_decode(e.id);
+                    metrics.on_tokens(e.id, now, 1);
                     done
                 } else {
                     false
                 }
             } else {
-                let done = self.state.advance_decode(e.id);
-                self.metrics.on_tokens(e.id, now, 1);
+                let done = state.advance_decode(e.id);
+                metrics.on_tokens(e.id, now, 1);
                 done
             };
             if done {
                 finished.push(e.id);
             }
         }
-        for id in finished {
-            self.metrics.on_finish(id, now);
-            self.state.finish(id);
-            self.backend.on_removed(id);
+        for &id in finished.iter() {
+            metrics.on_finish(id, now);
+            state.finish(id);
+            backend.on_removed(id);
         }
     }
 
@@ -265,8 +291,9 @@ impl<B: ExecutionBackend> Engine<B> {
     ) -> anyhow::Result<RunResult> {
         let mut next_event = 0usize;
         let events = &trace.events;
-        // Online events not yet admitted (avoids rescanning the tail).
-        let mut online_ahead = events.iter().filter(|e| e.class == Class::Online).count();
+        // Online events not yet admitted (precomputed by `Trace::new`;
+        // replays no longer rescan the event list per run).
+        let mut online_ahead = trace.num_online();
         loop {
             // Admit everything that has arrived.
             while next_event < events.len() && events[next_event].arrival_s <= self.clock_s {
@@ -318,6 +345,12 @@ impl<B: ExecutionBackend> Engine<B> {
             }
         }
         let duration = self.clock_s;
+        // Sampling is strictly opt-in: any push outside the
+        // `record_sched_samples` gate is a hot-loop regression.
+        debug_assert!(
+            self.record_sched_samples || self.sched_samples.is_empty(),
+            "sched samples accumulated with record_sched_samples off"
+        );
         let report = self.metrics.report(Some(duration.max(1e-9)));
         Ok(RunResult {
             finished_online: report.online_finished,
@@ -356,7 +389,7 @@ mod tests {
     }
 
     fn ev(t: f64, class: Class, p: usize, o: usize) -> TraceEvent {
-        TraceEvent { arrival_s: t, class, prompt_len: p, output_len: o, prompt: vec![] }
+        TraceEvent { arrival_s: t, class, prompt_len: p, output_len: o, prompt: Vec::new().into() }
     }
 
     #[test]
@@ -447,6 +480,18 @@ mod tests {
         }
         assert!(produced >= 4);
         assert_eq!(e.state.finished.len(), 1);
+    }
+
+    #[test]
+    fn sched_samples_gated_by_flag() {
+        let tr = Trace::new(vec![ev(0.0, Class::Online, 64, 8)]);
+        let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
+        let r = e.run_trace(&tr, 100.0, true).unwrap();
+        assert!(r.sched_ns_samples.is_empty(), "sampling must be opt-in");
+        let mut e2 = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
+        e2.record_sched_samples = true;
+        let r2 = e2.run_trace(&tr, 100.0, true).unwrap();
+        assert_eq!(r2.sched_ns_samples.len() as u64, r2.iterations);
     }
 
     #[test]

@@ -1,0 +1,428 @@
+//! `hygen bench-replay` — the end-to-end replay-throughput bench and its
+//! `BENCH_e2e.json` trajectory record (first entry of the e2e perf
+//! trajectory; the scheduling-only view lives in `BENCH_sched.json`).
+//!
+//! Two parts:
+//!
+//! 1. **Scale sweep** — calibrated mixed traces (Azure-shaped online
+//!    arrivals + an arXiv offline backlog) replayed end to end through
+//!    [`Engine::run_trace`](crate::engine::Engine) on the sim backend at
+//!    several request counts. Reported per scale: iterations/s, generated
+//!    tokens/s (wallclock), simulated TPS, peak RSS, and — when the
+//!    binary registers [`CountingAlloc`](crate::util::alloc) — total heap
+//!    allocations. The per-token wallclock must stay ~flat across scales
+//!    (the regression gate; super-linear replay cost reappears here).
+//! 2. **Steady-state allocation probe** — N running offline decodes with
+//!    pre-sized KV/metrics storage, stepped directly. After warmup, a
+//!    measured window of engine iterations must perform **zero heap
+//!    allocations** (the allocation-free-loop contract; also asserted by
+//!    `tests/alloc_free_loop.rs` with its own counting allocator).
+//!
+//! JSON schema: README §"Tests and benches". The gates applied by the
+//! subcommand live in `main.rs` next to the bench-sched gates.
+
+use crate::baselines::SimSetup;
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::queues::OfflinePolicy;
+use crate::coordinator::request::{Class, Phase, Request};
+use crate::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+use crate::coordinator::state::EngineState;
+use crate::engine::Engine;
+use crate::sim::costmodel::CostModel;
+use crate::sim::SimBackend;
+use crate::util::alloc::{alloc_count, counting_active};
+use crate::util::bench::peak_rss_mb;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Bench shape; see [`ReplayConfig::full`] and [`ReplayConfig::quick`].
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Total mixed-trace sizes (requests) for the scale sweep.
+    pub scales: Vec<usize>,
+    /// Online arrival rate of the Azure-shaped portion.
+    pub online_qps: f64,
+    /// Online trace span (s); the offline rest is a t=0 backlog.
+    pub trace_s: f64,
+    /// Running offline decodes in the steady-state probe.
+    pub steady_n: usize,
+    /// Measured iterations in the steady-state probe (after warmup).
+    pub steady_iters: usize,
+    pub seed: u64,
+}
+
+impl ReplayConfig {
+    /// The trajectory shape: three scales up to 20k requests.
+    pub fn full() -> ReplayConfig {
+        ReplayConfig {
+            scales: vec![1_000, 5_000, 20_000],
+            online_qps: 8.0,
+            trace_s: 300.0,
+            steady_n: 256,
+            steady_iters: 200,
+            seed: 0,
+        }
+    }
+
+    /// CI smoke shape: same pipeline, seconds of wallclock.
+    pub fn quick() -> ReplayConfig {
+        ReplayConfig {
+            scales: vec![200, 1_000],
+            online_qps: 4.0,
+            trace_s: 60.0,
+            steady_n: 64,
+            steady_iters: 100,
+            seed: 0,
+        }
+    }
+}
+
+/// One end-to-end replay datapoint.
+#[derive(Debug, Clone)]
+pub struct ScaleResult {
+    pub requests: usize,
+    pub n_online: usize,
+    pub n_offline: usize,
+    pub iterations: u64,
+    pub wall_s: f64,
+    pub iters_per_sec: f64,
+    /// Generated (output) tokens across both classes.
+    pub out_tokens: u64,
+    /// Generated tokens per *wallclock* second (the replay-throughput
+    /// headline; `sim_total_tps` is the simulated-time view).
+    pub tokens_per_sec: f64,
+    pub sim_total_tps: f64,
+    pub stalled_iterations: u64,
+    /// Process peak RSS (MiB) observed after this scale's run.
+    pub peak_rss_mb: f64,
+    /// Heap allocations during the replay (0 when no counting allocator
+    /// is registered).
+    pub allocs: u64,
+    /// Wallclock per generated token (ns) — the scale-regression metric.
+    pub wall_ns_per_token: f64,
+}
+
+/// Steady-state probe result (see module docs, part 2).
+#[derive(Debug, Clone)]
+pub struct SteadyProbe {
+    pub n_running: usize,
+    pub iterations: u64,
+    /// Heap allocations across the measured window (must be 0 when a
+    /// counting allocator is registered).
+    pub allocs_total: u64,
+    pub allocs_per_iter: f64,
+    pub ns_per_iter: f64,
+}
+
+/// Everything the bench measured (also serialized to `BENCH_e2e.json`).
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    pub scales: Vec<ScaleResult>,
+    pub steady: SteadyProbe,
+    /// wall-ns-per-token at the largest scale over the smallest: ~1 when
+    /// replay cost is linear in trace size.
+    pub wall_per_token_ratio: f64,
+    /// Whether a counting allocator was registered in this process (the
+    /// alloc columns are meaningful only if true).
+    pub counting_allocator: bool,
+}
+
+impl ReplayOutcome {
+    pub fn to_json(&self) -> Json {
+        let scales = self
+            .scales
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("requests", s.requests.into()),
+                    ("n_online", s.n_online.into()),
+                    ("n_offline", s.n_offline.into()),
+                    ("iterations", s.iterations.into()),
+                    ("wall_s", round3(s.wall_s).into()),
+                    ("iters_per_sec", round2(s.iters_per_sec).into()),
+                    ("out_tokens", s.out_tokens.into()),
+                    ("tokens_per_sec", round2(s.tokens_per_sec).into()),
+                    ("sim_total_tps", round2(s.sim_total_tps).into()),
+                    ("stalled_iterations", s.stalled_iterations.into()),
+                    ("peak_rss_mb", round2(s.peak_rss_mb).into()),
+                    ("allocs", s.allocs.into()),
+                    ("wall_ns_per_token", round2(s.wall_ns_per_token).into()),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::obj(vec![
+            ("bench", "e2e-replay".into()),
+            ("schema_version", 1u64.into()),
+            ("counting_allocator", self.counting_allocator.into()),
+            ("scales", Json::Arr(scales)),
+            (
+                "steady_decode",
+                Json::obj(vec![
+                    ("n_running", self.steady.n_running.into()),
+                    ("iterations", self.steady.iterations.into()),
+                    ("allocs_total", self.steady.allocs_total.into()),
+                    ("allocs_per_iter", round3(self.steady.allocs_per_iter).into()),
+                    ("ns_per_iter", round2(self.steady.ns_per_iter).into()),
+                ]),
+            ),
+            ("wall_per_token_ratio_largest_vs_smallest", round2(self.wall_per_token_ratio).into()),
+        ])
+    }
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Replay one calibrated mixed trace of `n_requests` end to end.
+fn replay_scale(cfg: &ReplayConfig, n_requests: usize) -> anyhow::Result<ScaleResult> {
+    let online_full = crate::workload::azure::generate(
+        &crate::workload::azure::AzureTraceConfig {
+            duration_s: cfg.trace_s,
+            mean_qps: cfg.online_qps,
+            ..Default::default()
+        },
+        cfg.seed,
+    );
+    // Cap the online portion at half the scale (earliest arrivals) so
+    // every scale actually replays ~n_requests with a meaningful mix —
+    // without the cap, small scales silently replay the full generated
+    // online trace and the sweep's smallest datapoint never runs.
+    let n_online = online_full.len().min((n_requests / 2).max(1));
+    let online =
+        crate::workload::trace::Trace::new(online_full.events.into_iter().take(n_online).collect());
+    let n_offline = n_requests.saturating_sub(n_online).max(1);
+    let offline = crate::workload::datasets::generate(
+        crate::workload::datasets::Dataset::ArxivSummarization,
+        n_offline,
+        cfg.seed,
+    );
+    let trace = online.merged(offline);
+
+    // Seed predictor: the bench measures replay throughput, not
+    // prediction quality, and must start instantly.
+    let setup = SimSetup::with_seed_predictor(CostModel::a100_llama7b())
+        .with_policy(OfflinePolicy::Psm)
+        .with_seed(cfg.seed);
+    let mut engine = setup.build_with_config(SchedulerConfig {
+        latency_budget_ms: Some(40.0),
+        chunk_tokens: 512,
+        max_running: 1024,
+        ..SchedulerConfig::default()
+    });
+    engine.state.keep_finished = false;
+
+    let a0 = alloc_count();
+    let wall0 = Instant::now();
+    let r = engine.run_trace(&trace, 1e6, true)?;
+    let wall_s = wall0.elapsed().as_secs_f64();
+    let allocs = alloc_count() - a0;
+
+    let out_tokens = r.metrics.online_token_count() + r.metrics.offline_token_count();
+    Ok(ScaleResult {
+        requests: trace.len(),
+        n_online: trace.num_online(),
+        n_offline: trace.num_offline(),
+        iterations: r.iterations,
+        wall_s,
+        iters_per_sec: r.iterations as f64 / wall_s.max(1e-9),
+        out_tokens,
+        tokens_per_sec: out_tokens as f64 / wall_s.max(1e-9),
+        sim_total_tps: r.report.total_tps,
+        stalled_iterations: r.stalled_iterations,
+        peak_rss_mb: peak_rss_mb(),
+        allocs,
+        wall_ns_per_token: wall_s * 1e9 / out_tokens.max(1) as f64,
+    })
+}
+
+/// Steady-state decode probe: `n` running offline decodes with pre-sized
+/// KV and metrics storage, stepped `iters` times after warmup while the
+/// allocation counter is sampled. Public so `tests/alloc_free_loop.rs`
+/// can assert the zero-allocation contract under its own counting
+/// allocator.
+pub fn steady_probe(n: usize, iters: usize) -> anyhow::Result<SteadyProbe> {
+    let warmup = 32usize;
+    // Every request holds ctx tokens now and decodes one more per
+    // iteration; over-allocate its KV up front so block growth (which
+    // legitimately allocates, amortized) never lands inside the window.
+    let ctx_tokens = 256usize;
+    let total_ctx = ctx_tokens + warmup + iters + 64;
+    let block_size = 16usize;
+    let blocks = n * (total_ctx / block_size + 2) + 64;
+    let mut state = EngineState::new(OfflinePolicy::Fcfs, blocks, block_size, 0);
+    for id in 0..n as u64 {
+        let mut r = Request::new(id, Class::Offline, 0.0, ctx_tokens, 1 << 20);
+        r.prefilled = ctx_tokens;
+        r.generated = 1;
+        r.phase = Phase::Decode;
+        state.blocks.allocate(id, total_ctx, &[]).expect("probe pool sized for n requests");
+        state.insert_running(r);
+    }
+    let sched = HybridScheduler::new(
+        SchedulerConfig {
+            latency_budget_ms: None,
+            chunk_tokens: 512,
+            max_running: n,
+            ..SchedulerConfig::default()
+        },
+        LatencyPredictor::default_seed(),
+    );
+    let backend = SimBackend::new(CostModel::a100_llama7b(), 0);
+    let mut engine = Engine::new(sched, state, backend);
+    engine.state.keep_finished = false;
+    // Pre-size the metrics slab/series so the window allocates nothing.
+    engine.metrics.preallocate(n as u64 + 1, 64, 3600.0);
+    for id in 0..n as u64 {
+        engine.metrics.on_arrival(id, Class::Offline, 0.0);
+    }
+    for _ in 0..warmup {
+        anyhow::ensure!(engine.step()? == n, "probe must schedule all {n} decodes");
+    }
+    let a0 = alloc_count();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.step()?;
+    }
+    let elapsed = t0.elapsed();
+    let allocs_total = alloc_count() - a0;
+    Ok(SteadyProbe {
+        n_running: n,
+        iterations: iters as u64,
+        allocs_total,
+        allocs_per_iter: allocs_total as f64 / iters.max(1) as f64,
+        ns_per_iter: elapsed.as_nanos() as f64 / iters.max(1) as f64,
+    })
+}
+
+/// Run both parts and combine.
+pub fn run(cfg: &ReplayConfig) -> anyhow::Result<ReplayOutcome> {
+    let mut scales = Vec::new();
+    for &n in &cfg.scales {
+        scales.push(replay_scale(cfg, n)?);
+    }
+    let steady = steady_probe(cfg.steady_n, cfg.steady_iters)?;
+    let wall_per_token_ratio = match (scales.first(), scales.last()) {
+        (Some(a), Some(b)) if a.wall_ns_per_token > 0.0 => {
+            b.wall_ns_per_token / a.wall_ns_per_token
+        }
+        _ => 0.0,
+    };
+    Ok(ReplayOutcome { scales, steady, wall_per_token_ratio, counting_allocator: counting_active() })
+}
+
+/// The embedded regression gates, shared by `hygen bench-replay` and the
+/// `replay` bench target so they cannot drift:
+///
+/// 1. replay cost must stay ~linear in trace size (the workload mix
+///    shifts toward prefix-heavy offline work at larger scales, so the
+///    threshold is generous — a super-linear hot path tracks the scale
+///    ratio, far beyond 4x);
+/// 2. the steady-state decode loop must be allocation-free (enforceable
+///    only when a counting allocator is registered in the process).
+pub fn check_gates(outcome: &ReplayOutcome) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        outcome.wall_per_token_ratio < 4.0,
+        "wallclock per generated token grew {:.1}x from the smallest to the largest scale \
+         (threshold 4.0) — super-linear replay cost",
+        outcome.wall_per_token_ratio
+    );
+    if outcome.counting_allocator {
+        anyhow::ensure!(
+            outcome.steady.allocs_total == 0,
+            "steady-state decode iterations performed {} heap allocations over {} iterations \
+             (contract: zero)",
+            outcome.steady.allocs_total,
+            outcome.steady.iterations
+        );
+    }
+    Ok(())
+}
+
+/// Run, print a human summary, and write `BENCH_e2e.json` to `out`.
+pub fn run_and_save(cfg: &ReplayConfig, out: &str) -> anyhow::Result<ReplayOutcome> {
+    let outcome = run(cfg)?;
+    for s in &outcome.scales {
+        println!(
+            "scale {:>6} reqs ({} online / {} offline): {} iters in {:.2}s ({:.0} iters/s, {:.0} tok/s wall, {:.0} tok/s sim), peak RSS {:.1} MiB, {} allocs, {} stalled",
+            s.requests,
+            s.n_online,
+            s.n_offline,
+            s.iterations,
+            s.wall_s,
+            s.iters_per_sec,
+            s.tokens_per_sec,
+            s.sim_total_tps,
+            s.peak_rss_mb,
+            s.allocs,
+            s.stalled_iterations
+        );
+    }
+    println!(
+        "steady decode (n={}): {:.1} µs/iter, {} allocs over {} iters ({})",
+        outcome.steady.n_running,
+        outcome.steady.ns_per_iter / 1e3,
+        outcome.steady.allocs_total,
+        outcome.steady.iterations,
+        if outcome.counting_allocator { "counting allocator active" } else { "no counting allocator: alloc columns are 0" }
+    );
+    println!(
+        "wall-ns-per-token largest-vs-smallest ratio: {:.2} (~1 linear replay cost)",
+        outcome.wall_per_token_ratio
+    );
+    std::fs::write(out, outcome.to_json().to_pretty())?;
+    println!("wrote {out}");
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_smoke_and_schema() {
+        let cfg = ReplayConfig {
+            scales: vec![30, 80],
+            online_qps: 2.0,
+            trace_s: 5.0,
+            steady_n: 8,
+            steady_iters: 10,
+            seed: 1,
+        };
+        let o = run(&cfg).unwrap();
+        assert_eq!(o.scales.len(), 2);
+        assert!(o.scales.iter().all(|s| s.iterations > 0 && s.out_tokens > 0));
+        assert!(o.scales[1].requests > o.scales[0].requests);
+        assert!(o.wall_per_token_ratio.is_finite());
+        assert_eq!(o.steady.n_running, 8);
+        assert_eq!(o.steady.iterations, 10);
+        // The lib test binary registers no counting allocator, so the
+        // alloc columns must read 0 and the flag false.
+        assert!(!o.counting_allocator);
+        assert_eq!(o.steady.allocs_total, 0);
+        let j = o.to_json();
+        assert_eq!(j.get("bench").as_str(), Some("e2e-replay"));
+        assert!(matches!(j.get("scales"), Json::Arr(a) if a.len() == 2));
+        assert!(j.get("steady_decode").get("ns_per_iter").as_f64().unwrap() > 0.0);
+        assert!(j.get("wall_per_token_ratio_largest_vs_smallest").as_f64().is_some());
+    }
+
+    #[test]
+    fn steady_probe_is_pure_decode() {
+        let p = steady_probe(16, 5).unwrap();
+        assert_eq!(p.n_running, 16);
+        assert!(p.ns_per_iter > 0.0);
+    }
+
+    #[test]
+    fn presets_are_sane() {
+        let f = ReplayConfig::full();
+        assert!(f.scales.len() >= 3 && f.scales.windows(2).all(|w| w[0] < w[1]));
+        let q = ReplayConfig::quick();
+        assert!(q.scales.iter().max().unwrap() <= &1_000, "quick stays CI-sized");
+    }
+}

@@ -293,14 +293,18 @@ fn scaling_probe(cfg: &BenchConfig) -> Vec<ScalePoint> {
         );
         let mut now = 0.0;
         let mut batch_len = 0;
+        // Reused iteration batch, exactly like the engine's hot loop.
+        let mut batch = crate::coordinator::batch::Batch::new();
         for _ in 0..3 {
             now += 0.01;
-            batch_len = black_box(sched.schedule(&mut st, now).len());
+            sched.schedule(&mut st, now, &mut batch);
+            batch_len = black_box(batch.len());
         }
         let t0 = Instant::now();
         for _ in 0..cfg.scaling_iters {
             now += 0.01;
-            batch_len = black_box(sched.schedule(&mut st, now).len());
+            sched.schedule(&mut st, now, &mut batch);
+            batch_len = black_box(batch.len());
         }
         let mean_ns = t0.elapsed().as_nanos() as f64 / cfg.scaling_iters.max(1) as f64;
 

@@ -2,6 +2,16 @@
 //! scratch (trace synthesis → profiling → runs) and returns a [`Table`]
 //! that is printed and written to `results/figN.csv`.
 //!
+//! **Parallelism & determinism:** independent full-trace runs — the
+//! figure list in [`run`], the metric×tolerance grid of [`fig3_and_4`],
+//! the policy panel of [`fig6`], the QPS sweeps of [`fig10`]/[`fig17`],
+//! the tolerance sweep of [`fig11`], and the per-system runs inside
+//! `endtoend_compare` — execute as seeded jobs on `Ctx::jobs` worker
+//! threads (`util::parallel::run_jobs`). Every job owns its engines and
+//! RNGs and results are collected in submission order, so the emitted
+//! tables/CSVs are **byte-identical** for any `-j`; only progress lines
+//! may interleave.
+//!
 //! Expected *shapes* (checked against the paper in DESIGN.md's
 //! experiment index):
 //! * fig1/13 — request-rate burstiness of the online traces
@@ -21,11 +31,13 @@ use super::{
     f1, f2, hygen_profiled, hygen_star_profiled, metric_list, online_baseline, Ctx, Table,
 };
 use crate::baselines::{tune_offline_chunk, SimSetup, System};
+use crate::coordinator::metrics::Report;
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::queues::OfflinePolicy;
 use crate::coordinator::request::{Slo, SloMetric};
 use crate::sim::costmodel::CostModel;
 use crate::sim::profile_and_fit;
+use crate::util::parallel::{job, run_jobs, Job};
 use crate::util::rng::Rng;
 use crate::util::stats::WindowSeries;
 use crate::workload::azure::{self, AzureTraceConfig};
@@ -86,11 +98,12 @@ pub fn fig1(ctx: &Ctx) -> anyhow::Result<Table> {
 /// Shared sweep for Fig. 3 (SLO compliance) and Fig. 4 (throughput):
 /// 4 SLO metrics x tolerance ratios; HyGen (profiled budget), HyGen*
 /// (profiled offline QPS), Sarathi++ (SLO-unaware), Sarathi (pure online)
-/// and Sarathi-offline (tuned chunk upper bound).
+/// and Sarathi-offline (tuned chunk upper bound). The 16-cell grid runs
+/// as parallel jobs, one per (metric, tolerance).
 pub fn fig3_and_4(ctx: &Ctx) -> anyhow::Result<(Table, Table)> {
     let setup = setup_llama(ctx);
     let online = online_azure(ctx, 2.0);
-    let offline = offline_backlog(Dataset::ArxivSummarization, 2500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(2500), ctx.seed);
     let workload = online.clone().merged(offline.clone());
 
     let base = online_baseline(&setup, &online, ctx)?;
@@ -98,6 +111,26 @@ pub fn fig3_and_4(ctx: &Ctx) -> anyhow::Result<(Table, Table)> {
     let (chunk, offline_tps_ub, _) =
         tune_offline_chunk(&setup, &offline, &[256, 512, 1024, 2048], ctx.horizon_s * 0.4)?;
     println!("fig4: sarathi-offline tuned chunk = {chunk} ({offline_tps_ub:.0} tok/s)");
+
+    let cases: Vec<(SloMetric, f64)> = metric_list()
+        .iter()
+        .flat_map(|&m| TOLERANCES.iter().map(move |&tol| (m, tol)))
+        .collect();
+    let setup_ref = &setup;
+    let workload_ref = &workload;
+    let base_ref = &base;
+    let jobs: Vec<Job<'_, anyhow::Result<(Slo, Report, Report)>>> = cases
+        .iter()
+        .map(|&(metric, tol)| {
+            job(move || {
+                let slo = Slo::from_tolerance(metric, base_ref.metric(metric), tol);
+                let (_prof, hygen) = hygen_profiled(setup_ref, workload_ref, &slo, ctx)?;
+                let (_qps, star) = hygen_star_profiled(setup_ref, workload_ref, &slo, ctx)?;
+                Ok((slo, hygen, star))
+            })
+        })
+        .collect();
+    let runs = run_jobs(ctx.jobs, jobs);
 
     let mut t3 = Table::new(
         "fig3",
@@ -118,37 +151,32 @@ pub fn fig3_and_4(ctx: &Ctx) -> anyhow::Result<(Table, Table)> {
             "frac_of_offline_ub",
         ],
     );
-    for metric in metric_list() {
+    for (&(metric, tol), run) in cases.iter().zip(runs) {
+        let (slo, hygen, star) = run?;
         let baseline_ms = base.metric(metric);
-        for tol in TOLERANCES {
-            let slo = Slo::from_tolerance(metric, baseline_ms, tol);
-            let (prof, hygen) = hygen_profiled(&setup, &workload, &slo, ctx)?;
-            let (_qps, star) = hygen_star_profiled(&setup, &workload, &slo, ctx)?;
-            t3.row(vec![
-                metric.name().into(),
-                f2(tol),
-                f2(baseline_ms),
-                f2(slo.limit_ms),
-                f2(hygen.metric(metric)),
-                f2(spp.metric(metric)),
-                format!("{}", hygen.metric(metric) <= slo.limit_ms * 1.02),
-            ]);
-            let gain_vs_online = hygen.total_tps / base.total_tps.max(1e-9);
-            let gain_vs_star = hygen.offline_tps / star.offline_tps.max(1e-9);
-            t4.row(vec![
-                metric.name().into(),
-                f2(tol),
-                f1(hygen.offline_tps),
-                f1(hygen.total_tps),
-                f1(star.offline_tps),
-                f1(base.total_tps),
-                f1(offline_tps_ub),
-                f2(gain_vs_online),
-                f2(gain_vs_star),
-                f2(hygen.total_tps / offline_tps_ub.max(1e-9)),
-            ]);
-            let _ = prof;
-        }
+        t3.row(vec![
+            metric.name().into(),
+            f2(tol),
+            f2(baseline_ms),
+            f2(slo.limit_ms),
+            f2(hygen.metric(metric)),
+            f2(spp.metric(metric)),
+            format!("{}", hygen.metric(metric) <= slo.limit_ms * 1.02),
+        ]);
+        let gain_vs_online = hygen.total_tps / base.total_tps.max(1e-9);
+        let gain_vs_star = hygen.offline_tps / star.offline_tps.max(1e-9);
+        t4.row(vec![
+            metric.name().into(),
+            f2(tol),
+            f1(hygen.offline_tps),
+            f1(hygen.total_tps),
+            f1(star.offline_tps),
+            f1(base.total_tps),
+            f1(offline_tps_ub),
+            f2(gain_vs_online),
+            f2(gain_vs_star),
+            f2(hygen.total_tps / offline_tps_ub.max(1e-9)),
+        ]);
     }
     Ok((t3, t4))
 }
@@ -176,26 +204,41 @@ pub fn fig5(ctx: &Ctx) -> anyhow::Result<Table> {
 // ------------------------------------------------------------------ fig 6
 
 /// Prefix-Sharing Maximization: offline throughput by queue policy on the
-/// prefix-heavy MMLU offline set.
+/// prefix-heavy MMLU offline set. The three policy runs are independent
+/// and execute in parallel.
 pub fn fig6(ctx: &Ctx) -> anyhow::Result<Table> {
     // Low online load: the figure isolates the prefix-sharing effect on
     // the offline side (the paper ran this as a simulation experiment).
     let online = online_azure(ctx, 0.4);
-    let offline = offline_backlog(Dataset::Mmlu, 60_000, ctx.seed);
+    let offline = offline_backlog(Dataset::Mmlu, ctx.offline_n(60_000), ctx.seed);
     let workload = online.merged(offline);
-    let mut t =
-        Table::new("fig6", &["policy", "offline_tps", "offline_qps", "gain_vs_fcfs"]);
-    let mut fcfs_tps = 0.0;
-    for policy in [
+    let policies = [
         OfflinePolicy::Fcfs,
         OfflinePolicy::Psm,
         OfflinePolicy::PsmFair { utility_ratio: 0.9 },
-    ] {
-        let setup = setup_llama(ctx).with_policy(policy);
-        let r = setup
-            .run(System::HyGen { latency_budget_ms: 60.0 }, &workload, ctx.horizon_s)?
-            .report;
-        if policy == OfflinePolicy::Fcfs {
+    ];
+    let workload_ref = &workload;
+    let jobs: Vec<Job<'_, anyhow::Result<Report>>> = policies
+        .iter()
+        .map(|&policy| {
+            job(move || {
+                let setup = setup_llama(ctx).with_policy(policy);
+                let run = setup.run(
+                    System::HyGen { latency_budget_ms: 60.0 },
+                    workload_ref,
+                    ctx.horizon_s,
+                )?;
+                Ok(run.report)
+            })
+        })
+        .collect();
+    let reports = run_jobs(ctx.jobs, jobs);
+
+    let mut t = Table::new("fig6", &["policy", "offline_tps", "offline_qps", "gain_vs_fcfs"]);
+    let mut fcfs_tps = 0.0;
+    for (policy, report) in policies.iter().zip(reports) {
+        let r = report?;
+        if *policy == OfflinePolicy::Fcfs {
             fcfs_tps = r.offline_tps;
         }
         t.row(vec![
@@ -214,7 +257,7 @@ pub fn fig6(ctx: &Ctx) -> anyhow::Result<Table> {
 pub fn fig7(ctx: &Ctx) -> anyhow::Result<Table> {
     let setup = setup_llama(ctx);
     let online = online_azure(ctx, 2.0);
-    let offline = offline_backlog(Dataset::ArxivSummarization, 2500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(2500), ctx.seed);
     let workload = online.clone().merged(offline);
     let base = online_baseline(&setup, &online, ctx)?;
     let metric = SloMetric::MeanTbt;
@@ -262,7 +305,7 @@ pub fn fig8(ctx: &Ctx) -> anyhow::Result<Table> {
         },
         ctx.seed,
     );
-    let offline = offline_backlog(Dataset::ArxivSummarization, 2500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(2500), ctx.seed);
     let workload = online.clone().merged(offline);
     let base = online_baseline(&setup, &online, ctx)?;
     let slo = Slo::from_tolerance(SloMetric::P99Tbt, base.p99_tbt_ms, 0.1);
@@ -292,7 +335,8 @@ pub fn fig8(ctx: &Ctx) -> anyhow::Result<Table> {
 
 /// The recurring end-to-end comparison: HyGen vs HyGen* (profiled) vs
 /// Sarathi++ on a (model, online trace, offline dataset) combination,
-/// under a P99-TBT 10% SLO.
+/// under a P99-TBT 10% SLO. The three system runs after the shared
+/// baseline are independent and execute in parallel.
 fn endtoend_compare(
     name: &str,
     ctx: &Ctx,
@@ -307,9 +351,24 @@ fn endtoend_compare(
     // moved by co-location in the cost models), giving the paper's
     // hygen-vs-baselines discrimination.
     let slo = Slo::from_tolerance(SloMetric::MeanTbt, base.mean_tbt_ms, 0.15);
-    let (prof, hygen) = hygen_profiled(&setup, &workload, &slo, ctx)?;
-    let (star_qps, star) = hygen_star_profiled(&setup, &workload, &slo, ctx)?;
-    let spp = setup.run(System::SarathiPlusPlus, &workload, ctx.horizon_s)?.report;
+    let setup_ref = &setup;
+    let workload_ref = &workload;
+    let slo_ref = &slo;
+    let jobs: Vec<Job<'_, anyhow::Result<(f64, Report)>>> = vec![
+        job(move || {
+            let (prof, hygen) = hygen_profiled(setup_ref, workload_ref, slo_ref, ctx)?;
+            Ok((prof.budget_ms, hygen))
+        }),
+        job(move || hygen_star_profiled(setup_ref, workload_ref, slo_ref, ctx)),
+        job(move || {
+            let run = setup_ref.run(System::SarathiPlusPlus, workload_ref, ctx.horizon_s)?;
+            Ok((0.0, run.report))
+        }),
+    ];
+    let mut results = run_jobs(ctx.jobs, jobs).into_iter();
+    let (budget_ms, hygen) = results.next().expect("three jobs")?;
+    let (star_qps, star) = results.next().expect("three jobs")?;
+    let (_, spp) = results.next().expect("three jobs")?;
 
     let mut t = Table::new(
         name,
@@ -324,7 +383,7 @@ fn endtoend_compare(
             "total_gain_vs_star",
         ],
     );
-    let mut row = |sys: &str, r: &crate::coordinator::metrics::Report| {
+    let mut row = |sys: &str, r: &Report| {
         t.row(vec![
             sys.into(),
             f2(r.mean_tbt_ms),
@@ -340,7 +399,7 @@ fn endtoend_compare(
     row("sarathi++", &spp);
     row("hygen*", &star);
     row("hygen", &hygen);
-    println!("{name}: hygen budget {:.1} ms, hygen* offline cap {star_qps:.2} qps", prof.budget_ms);
+    println!("{name}: hygen budget {budget_ms:.1} ms, hygen* offline cap {star_qps:.2} qps");
     Ok(t)
 }
 
@@ -350,47 +409,125 @@ pub fn fig9(ctx: &Ctx) -> anyhow::Result<Table> {
         &AzureTraceConfig { duration_s: ctx.trace_s, mean_qps: 0.6, ..Default::default() },
         ctx.seed,
     );
-    let offline = offline_backlog(Dataset::ArxivSummarization, 1500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(1500), ctx.seed);
     endtoend_compare("fig9", ctx, CostModel::a40x4_yi34b_tp2pp2(), online, offline)
 }
 
 /// SLO attainment across online QPS settings, 4 metrics, 5% tolerance.
+/// One parallel job per QPS level.
 pub fn fig10(ctx: &Ctx) -> anyhow::Result<Table> {
     let setup = setup_llama(ctx);
-    let offline = offline_backlog(Dataset::ArxivSummarization, 2500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(2500), ctx.seed);
+    let setup_ref = &setup;
+    let offline_ref = &offline;
+    let jobs: Vec<Job<'_, anyhow::Result<Vec<Vec<String>>>>> = [0.5, 1.0, 2.0, 3.0]
+        .iter()
+        .map(|&qps| {
+            job(move || {
+                let online = online_azure(ctx, qps);
+                let base = online_baseline(setup_ref, &online, ctx)?;
+                let workload = online.merged(offline_ref.clone());
+                let mut rows = Vec::new();
+                for metric in metric_list() {
+                    let slo = Slo::from_tolerance(metric, base.metric(metric), 0.05);
+                    let (_prof, r) = hygen_profiled(setup_ref, &workload, &slo, ctx)?;
+                    rows.push(vec![
+                        f2(qps),
+                        metric.name().into(),
+                        f2(slo.limit_ms),
+                        f2(r.metric(metric)),
+                        format!("{}", r.metric(metric) <= slo.limit_ms * 1.02),
+                        f1(r.offline_tps),
+                    ]);
+                }
+                Ok(rows)
+            })
+        })
+        .collect();
     let mut t = Table::new(
         "fig10",
         &["online_qps", "metric", "slo_ms", "achieved_ms", "ok", "offline_tps"],
     );
-    for qps in [0.5, 1.0, 2.0, 3.0] {
-        let online = online_azure(ctx, qps);
-        let base = online_baseline(&setup, &online, ctx)?;
-        let workload = online.clone().merged(offline.clone());
-        for metric in metric_list() {
-            let slo = Slo::from_tolerance(metric, base.metric(metric), 0.05);
-            let (_prof, r) = hygen_profiled(&setup, &workload, &slo, ctx)?;
-            t.row(vec![
-                f2(qps),
-                metric.name().into(),
-                f2(slo.limit_ms),
-                f2(r.metric(metric)),
-                format!("{}", r.metric(metric) <= slo.limit_ms * 1.02),
-                f1(r.offline_tps),
-            ]);
+    for rows in run_jobs(ctx.jobs, jobs) {
+        for row in rows? {
+            t.row(row);
         }
     }
     Ok(t)
 }
 
 /// Multiple simultaneous SLOs: P99 TTFT fixed at 8% tolerance; mean TBT
-/// tolerance swept 10%..50% (Fig. 11).
+/// tolerance swept 10%..50% (Fig. 11). One parallel job per tolerance.
 pub fn fig11(ctx: &Ctx) -> anyhow::Result<Table> {
     let setup = setup_llama(ctx);
     let online = online_azure(ctx, 2.0);
-    let offline = offline_backlog(Dataset::ArxivSummarization, 2500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(2500), ctx.seed);
     let workload = online.clone().merged(offline);
     let base = online_baseline(&setup, &online, ctx)?;
     let ttft_slo = Slo::from_tolerance(SloMetric::P99Ttft, base.p99_ttft_ms, 0.08);
+
+    let setup_ref = &setup;
+    let workload_ref = &workload;
+    let base_ref = &base;
+    let jobs: Vec<Job<'_, anyhow::Result<Vec<String>>>> = [0.1, 0.2, 0.3, 0.4, 0.5]
+        .iter()
+        .map(|&tol| {
+            job(move || {
+                let tbt_slo = Slo::from_tolerance(SloMetric::MeanTbt, base_ref.mean_tbt_ms, tol);
+                // Joint profiling: binary search the budget satisfying BOTH SLOs.
+                let floor = setup_ref
+                    .predictor
+                    .predict(&crate::coordinator::batch::Features::default())
+                    + 4.0;
+                let pcfg = crate::coordinator::profiler::ProfilerConfig {
+                    min_budget_ms: floor,
+                    max_budget_ms: (tbt_slo.limit_ms * 4.0).clamp(floor * 2.0, 1500.0),
+                    steps: ctx.profile_steps,
+                    slack: 0.0,
+                };
+                let horizon = (ctx.horizon_s * 0.4).max(60.0);
+                // Encode joint compliance as a pseudo-metric: max of
+                // violation ratios.
+                let prof = crate::coordinator::profiler::profile_latency_budget(
+                    &Slo::new(SloMetric::MeanTbt, 1.0),
+                    &pcfg,
+                    |budget| {
+                        let r = setup_ref
+                            .run(
+                                System::HyGen { latency_budget_ms: budget },
+                                workload_ref,
+                                horizon,
+                            )
+                            .map(|x| x.report)
+                            .unwrap();
+                        let viol = (r.mean_tbt_ms / tbt_slo.limit_ms)
+                            .max(r.p99_ttft_ms / ttft_slo.limit_ms);
+                        // report the joint violation ratio through the
+                        // profiled metric
+                        Report { mean_tbt_ms: viol, ..r }
+                    },
+                );
+                let r = setup_ref
+                    .run(
+                        System::HyGen { latency_budget_ms: prof.budget_ms },
+                        workload_ref,
+                        ctx.horizon_s,
+                    )?
+                    .report;
+                let both = r.mean_tbt_ms <= tbt_slo.limit_ms * 1.02
+                    && r.p99_ttft_ms <= ttft_slo.limit_ms * 1.05;
+                Ok(vec![
+                    f2(tol),
+                    f2(tbt_slo.limit_ms),
+                    f2(r.mean_tbt_ms),
+                    f2(ttft_slo.limit_ms),
+                    f2(r.p99_ttft_ms),
+                    format!("{both}"),
+                    f1(r.offline_tps),
+                ])
+            })
+        })
+        .collect();
 
     let mut t = Table::new(
         "fig11",
@@ -404,49 +541,8 @@ pub fn fig11(ctx: &Ctx) -> anyhow::Result<Table> {
             "offline_tps",
         ],
     );
-    for tol in [0.1, 0.2, 0.3, 0.4, 0.5] {
-        let tbt_slo = Slo::from_tolerance(SloMetric::MeanTbt, base.mean_tbt_ms, tol);
-        // Joint profiling: binary search the budget satisfying BOTH SLOs.
-        let floor = setup
-            .predictor
-            .predict(&crate::coordinator::batch::Features::default())
-            + 4.0;
-        let pcfg = crate::coordinator::profiler::ProfilerConfig {
-            min_budget_ms: floor,
-            max_budget_ms: (tbt_slo.limit_ms * 4.0).clamp(floor * 2.0, 1500.0),
-            steps: ctx.profile_steps,
-            slack: 0.0,
-        };
-        let horizon = (ctx.horizon_s * 0.4).max(60.0);
-        // Encode joint compliance as a pseudo-metric: max of violation ratios.
-        let prof = crate::coordinator::profiler::profile_latency_budget(
-            &Slo::new(SloMetric::MeanTbt, 1.0),
-            &pcfg,
-            |budget| {
-                let r = setup
-                    .run(System::HyGen { latency_budget_ms: budget }, &workload, horizon)
-                    .map(|x| x.report)
-                    .unwrap();
-                let viol = (r.mean_tbt_ms / tbt_slo.limit_ms)
-                    .max(r.p99_ttft_ms / ttft_slo.limit_ms);
-                // report the joint violation ratio through the profiled metric
-                crate::coordinator::metrics::Report { mean_tbt_ms: viol, ..r }
-            },
-        );
-        let r = setup
-            .run(System::HyGen { latency_budget_ms: prof.budget_ms }, &workload, ctx.horizon_s)?
-            .report;
-        let both =
-            r.mean_tbt_ms <= tbt_slo.limit_ms * 1.02 && r.p99_ttft_ms <= ttft_slo.limit_ms * 1.05;
-        t.row(vec![
-            f2(tol),
-            f2(tbt_slo.limit_ms),
-            f2(r.mean_tbt_ms),
-            f2(ttft_slo.limit_ms),
-            f2(r.p99_ttft_ms),
-            format!("{both}"),
-            f1(r.offline_tps),
-        ]);
+    for row in run_jobs(ctx.jobs, jobs) {
+        t.row(row?);
     }
     Ok(t)
 }
@@ -454,7 +550,7 @@ pub fn fig11(ctx: &Ctx) -> anyhow::Result<Table> {
 /// CNN/DailyMail as the offline dataset (Fig. 12).
 pub fn fig12(ctx: &Ctx) -> anyhow::Result<Table> {
     let online = online_azure(ctx, 2.0);
-    let offline = offline_backlog(Dataset::CnnDailyMail, 4000, ctx.seed);
+    let offline = offline_backlog(Dataset::CnnDailyMail, ctx.offline_n(4000), ctx.seed);
     endtoend_compare("fig12", ctx, CostModel::a100_llama7b(), online, offline)
 }
 
@@ -489,7 +585,7 @@ pub fn fig14(ctx: &Ctx) -> anyhow::Result<Table> {
         &MooncakeTraceConfig { duration_s: ctx.trace_s, mean_qps: 0.8, ..Default::default() },
         ctx.seed,
     );
-    let offline = offline_backlog(Dataset::ArxivSummarization, 1500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(1500), ctx.seed);
     endtoend_compare("fig14", ctx, CostModel::a100_mistral7b(), online, offline)
 }
 
@@ -504,7 +600,7 @@ pub fn fig15(ctx: &Ctx) -> anyhow::Result<Table> {
         },
         ctx.seed,
     );
-    let offline = offline_backlog(Dataset::CnnDailyMail, 3000, ctx.seed);
+    let offline = offline_backlog(Dataset::CnnDailyMail, ctx.offline_n(3000), ctx.seed);
     endtoend_compare("fig15", ctx, CostModel::a5000_sheared27b(), online, offline)
 }
 
@@ -513,7 +609,7 @@ pub fn fig15(ctx: &Ctx) -> anyhow::Result<Table> {
 pub fn fig16(ctx: &Ctx) -> anyhow::Result<Table> {
     let setup0 = setup_llama(ctx);
     let online = online_azure(ctx, 2.0);
-    let offline = offline_backlog(Dataset::ArxivSummarization, 2500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(2500), ctx.seed);
     let workload = online.clone().merged(offline);
     let base = online_baseline(&setup0, &online, ctx)?;
     let slo = Slo::from_tolerance(SloMetric::P99Tbt, base.p99_tbt_ms, 0.1);
@@ -558,58 +654,101 @@ pub fn fig16(ctx: &Ctx) -> anyhow::Result<Table> {
 }
 
 /// Offline throughput vs online arrival rate, 5% P99-TBT tol (Fig. 17).
+/// One parallel job per QPS level.
 pub fn fig17(ctx: &Ctx) -> anyhow::Result<Table> {
     let setup = setup_llama(ctx);
-    let offline = offline_backlog(Dataset::ArxivSummarization, 2500, ctx.seed);
+    let offline = offline_backlog(Dataset::ArxivSummarization, ctx.offline_n(2500), ctx.seed);
+    let setup_ref = &setup;
+    let offline_ref = &offline;
+    let jobs: Vec<Job<'_, anyhow::Result<Vec<String>>>> = [0.25, 0.5, 1.0, 2.0, 3.0, 4.0]
+        .iter()
+        .map(|&qps| {
+            job(move || {
+                let online = online_azure(ctx, qps);
+                let base = online_baseline(setup_ref, &online, ctx)?;
+                let workload = online.merged(offline_ref.clone());
+                let slo = Slo::from_tolerance(SloMetric::P99Tbt, base.p99_tbt_ms, 0.05);
+                let (prof, r) = hygen_profiled(setup_ref, &workload, &slo, ctx)?;
+                Ok(vec![f2(qps), f1(r.offline_tps), f1(r.total_tps), f2(prof.budget_ms)])
+            })
+        })
+        .collect();
     let mut t = Table::new("fig17", &["online_qps", "offline_tps", "total_tps", "budget_ms"]);
-    for qps in [0.25, 0.5, 1.0, 2.0, 3.0, 4.0] {
-        let online = online_azure(ctx, qps);
-        let base = online_baseline(&setup, &online, ctx)?;
-        let workload = online.clone().merged(offline.clone());
-        let slo = Slo::from_tolerance(SloMetric::P99Tbt, base.p99_tbt_ms, 0.05);
-        let (prof, r) = hygen_profiled(&setup, &workload, &slo, ctx)?;
-        t.row(vec![f2(qps), f1(r.offline_tps), f1(r.total_tps), f2(prof.budget_ms)]);
+    for row in run_jobs(ctx.jobs, jobs) {
+        t.row(row?);
     }
     Ok(t)
 }
 
-/// Run figure(s) by id ("all" or "1", "3", "4", ..., "17").
+/// All figure ids, in `figures all` order.
+pub const ALL_FIGURES: [&str; 15] =
+    ["1", "3", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "17"];
+
+/// Regenerate one figure's table(s) without printing/saving them — the
+/// unit of work for the parallel runner and the determinism tests
+/// (`fig3_and_4` produces two tables; everything else one).
+pub fn run_figure(ctx: &Ctx, id: &str) -> anyhow::Result<Vec<Table>> {
+    Ok(match id {
+        "1" => vec![fig1(ctx)?],
+        "3" | "4" => {
+            let (t3, t4) = fig3_and_4(ctx)?;
+            vec![t3, t4]
+        }
+        "5" => vec![fig5(ctx)?],
+        "6" => vec![fig6(ctx)?],
+        "7" => vec![fig7(ctx)?],
+        "8" => vec![fig8(ctx)?],
+        "9" => vec![fig9(ctx)?],
+        "10" => vec![fig10(ctx)?],
+        "11" => vec![fig11(ctx)?],
+        "12" => vec![fig12(ctx)?],
+        "13" => vec![fig13(ctx)?],
+        "14" => vec![fig14(ctx)?],
+        "15" => vec![fig15(ctx)?],
+        "16" => vec![fig16(ctx)?],
+        "17" => vec![fig17(ctx)?],
+        other => anyhow::bail!("unknown figure '{other}'"),
+    })
+}
+
+/// Run figure(s) by id ("all" or "1", "3", "4", ..., "17"). With
+/// `ctx.jobs > 1` the figures execute concurrently; tables are printed
+/// and saved in figure order regardless, so CSVs are byte-identical to a
+/// serial run (progress lines from inside the figures may interleave).
 pub fn run(ctx: &Ctx, which: &str) -> anyhow::Result<()> {
-    let emit = |t: Table| -> anyhow::Result<()> {
-        t.print();
-        t.save(ctx)?;
-        println!("-> {}/{}.csv", ctx.out_dir, t.name);
+    let ids: Vec<&str> = if which == "all" { ALL_FIGURES.to_vec() } else { vec![which] };
+    let emit = |id: &str, tables: Vec<Table>| -> anyhow::Result<()> {
+        println!("\n##### figure {id} #####");
+        for t in tables {
+            t.print();
+            t.save(ctx)?;
+            println!("-> {}/{}.csv", ctx.out_dir, t.name);
+        }
         Ok(())
     };
-    let ids: Vec<&str> = if which == "all" {
-        vec!["1", "3", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "17"]
-    } else {
-        vec![which]
-    };
-    for id in ids {
-        println!("\n##### figure {id} #####");
-        match id {
-            "1" => emit(fig1(ctx)?)?,
-            "3" | "4" => {
-                let (t3, t4) = fig3_and_4(ctx)?;
-                emit(t3)?;
-                emit(t4)?;
-            }
-            "5" => emit(fig5(ctx)?)?,
-            "6" => emit(fig6(ctx)?)?,
-            "7" => emit(fig7(ctx)?)?,
-            "8" => emit(fig8(ctx)?)?,
-            "9" => emit(fig9(ctx)?)?,
-            "10" => emit(fig10(ctx)?)?,
-            "11" => emit(fig11(ctx)?)?,
-            "12" => emit(fig12(ctx)?)?,
-            "13" => emit(fig13(ctx)?)?,
-            "14" => emit(fig14(ctx)?)?,
-            "15" => emit(fig15(ctx)?)?,
-            "16" => emit(fig16(ctx)?)?,
-            "17" => emit(fig17(ctx)?)?,
-            other => anyhow::bail!("unknown figure '{other}'"),
+    if ctx.jobs <= 1 || ids.len() <= 1 {
+        // No cross-figure fan-out: stream each figure's tables as it
+        // completes (fail-fast, CSVs land incrementally). A single
+        // figure still uses its full inner parallelism.
+        for id in ids {
+            emit(id, run_figure(ctx, id)?)?;
         }
+        return Ok(());
+    }
+    // Cross-figure fan-out. One shared worker budget: the figures'
+    // internal sweeps go serial (inner jobs = 1) so `figures all -j N`
+    // uses ~N threads total instead of N per figure. Results are
+    // collected in figure order after the fan-out completes — CSVs are
+    // byte-identical to the serial path, they just land at the end.
+    let inner = Ctx { jobs: 1, ..ctx.clone() };
+    let inner_ref = &inner;
+    let jobs: Vec<Job<'_, anyhow::Result<Vec<Table>>>> = ids
+        .iter()
+        .map(|&id| job(move || run_figure(inner_ref, id)))
+        .collect();
+    let results = run_jobs(ctx.jobs, jobs);
+    for (&id, tables) in ids.iter().zip(results) {
+        emit(id, tables?)?;
     }
     Ok(())
 }

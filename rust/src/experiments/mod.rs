@@ -1,9 +1,14 @@
 //! Experiment harness: regenerates every table/figure of the paper's
 //! evaluation (see DESIGN.md's experiment index). Each `fig*` function in
-//! [`figures`] prints a table and writes `results/fig<N>.csv`.
+//! [`figures`] prints a table and writes `results/fig<N>.csv`; independent
+//! runs execute on `Ctx::jobs` worker threads with order-preserving
+//! collection, so `-j N` output is byte-identical to serial.
 //! [`bench_sched`] is the scheduling-overhead micro-bench behind
-//! `hygen bench-sched` (writes `BENCH_sched.json`).
+//! `hygen bench-sched` (writes `BENCH_sched.json`); [`bench_replay`] is
+//! the end-to-end replay-throughput bench behind `hygen bench-replay`
+//! (writes `BENCH_e2e.json`).
 
+pub mod bench_replay;
 pub mod bench_sched;
 pub mod figures;
 
@@ -24,18 +29,50 @@ pub struct Ctx {
     pub trace_s: f64,
     /// Profiler binary-search steps.
     pub profile_steps: usize,
+    /// Worker threads for independent experiment runs (`figures -j`).
+    /// Results are collected in submission order, so any value produces
+    /// byte-identical CSVs; only wallclock changes.
+    pub jobs: usize,
+    /// Scale factor on offline-backlog sizes (quick/test shapes shrink
+    /// the backlogs; 1.0 = the paper-scale counts).
+    pub offline_frac: f64,
 }
 
 impl Default for Ctx {
     fn default() -> Self {
-        Ctx { out_dir: "results".into(), seed: 0, horizon_s: 900.0, trace_s: 600.0, profile_steps: 7 }
+        Ctx {
+            out_dir: "results".into(),
+            seed: 0,
+            horizon_s: 900.0,
+            trace_s: 600.0,
+            profile_steps: 7,
+            jobs: default_jobs(),
+            offline_frac: 1.0,
+        }
     }
 }
 
 impl Ctx {
     pub fn quick() -> Ctx {
-        Ctx { horizon_s: 240.0, trace_s: 150.0, profile_steps: 5, ..Default::default() }
+        Ctx {
+            horizon_s: 240.0,
+            trace_s: 150.0,
+            profile_steps: 5,
+            offline_frac: 0.25,
+            ..Default::default()
+        }
     }
+
+    /// Offline-backlog size after scaling (`full` is the paper-scale
+    /// request count used at `offline_frac = 1.0`).
+    pub fn offline_n(&self, full: usize) -> usize {
+        ((full as f64 * self.offline_frac).round() as usize).max(1)
+    }
+}
+
+/// Default experiment parallelism: every hardware thread.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// A printable/CSV-able result table.

@@ -24,8 +24,9 @@
 //! evaluation at A100/A40/A5000 scale (see DESIGN.md for the substitution
 //! table).
 //!
-//! Entry points: the `hygen` binary (`serve`, `run-trace`, `figures`,
-//! `profile`, `train-predictor`, `bench-sched` subcommands), the
+//! Entry points: the `hygen` binary (`serve`, `run-trace`, `figures`
+//! — with `-j` parallel experiment execution —, `profile`,
+//! `train-predictor`, `bench-sched`, `bench-replay` subcommands), the
 //! `examples/`, and the bench targets under `rust/benches/`.
 
 pub mod baselines;

@@ -8,6 +8,7 @@
 //! * `train-predictor`  — profile a cost model and fit/save the LR latency predictor
 //! * `gen-trace`        — emit a synthetic trace CSV (azure | mooncake | datasets)
 //! * `bench-sched`      — scheduling-overhead micro-bench; writes BENCH_sched.json
+//! * `bench-replay`     — end-to-end replay throughput bench; writes BENCH_e2e.json
 
 use hygen::baselines::{SimSetup, System};
 use hygen::config::ServeConfig;
@@ -19,6 +20,7 @@ use hygen::experiments::{figures, hygen_profiled, online_baseline, Ctx};
 use hygen::server::Server;
 use hygen::sim::costmodel::CostModel;
 use hygen::sim::profile_and_fit;
+use hygen::util::alloc::CountingAlloc;
 use hygen::util::cli::Args;
 use hygen::workload::azure::{self, AzureTraceConfig};
 use hygen::workload::datasets::{self, Dataset};
@@ -36,7 +38,11 @@ USAGE:
                      [--model NAME] [--online-qps N] [--offline-dataset arxiv|cnn|mmlu]
                      [--offline-n N] [--budget-ms N] [--policy P] [--duration S]
                      [--seed N]
-  hygen figures      <1|3|4|...|17|all> [--out DIR] [--quick] [--seed N]
+  hygen figures      <1|3|4|...|17|all> [-j/--jobs N] [--out DIR] [--quick]
+                     [--seed N]
+                     (-j runs independent figure/sweep jobs on N worker
+                     threads, default = all hardware threads; CSV output
+                     is byte-identical for any -j)
   hygen profile      [--metric mean_tbt|p99_tbt|mean_ttft|p99_ttft]
                      [--tolerance R] [--model NAME] [--online-qps N] [--quick]
   hygen train-predictor [--model NAME] [--samples N] [--out FILE]
@@ -45,10 +51,20 @@ USAGE:
   hygen bench-sched  [--out FILE] [--quick] [--n N] [--seed N]
                      (10k-request mixed trace by default; --quick is the
                      few-hundred-request CI smoke shape)
+  hygen bench-replay [--out FILE] [--quick] [--seed N]
+                     (end-to-end mixed-trace replay at several scales +
+                     the zero-allocation steady-decode probe; writes
+                     BENCH_e2e.json and fails on regression ratios)
 
 MODELS: a100-llama2-7b (default), a40-qwen-14b, a40x4-yi-34b-tp2pp2,
         a100-mistral-7b, a5000-sheared-2.7b
 ";
+
+/// Count heap allocations process-wide so `bench-replay` can enforce the
+/// allocation-free steady-state contract with real numbers (one relaxed
+/// atomic add per allocation; negligible for every other subcommand).
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn main() {
     let args = Args::from_env();
@@ -60,6 +76,7 @@ fn main() {
         Some("train-predictor") => cmd_train_predictor(&args),
         Some("gen-trace") => cmd_gen_trace(&args),
         Some("bench-sched") => cmd_bench_sched(&args),
+        Some("bench-replay") => cmd_bench_replay(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -75,6 +92,7 @@ fn ctx_from(args: &Args) -> Ctx {
     let mut ctx = if args.get_bool("quick") { Ctx::quick() } else { Ctx::default() };
     ctx.seed = args.get_u64("seed", ctx.seed);
     ctx.out_dir = args.get_or("out", &ctx.out_dir).to_string();
+    ctx.jobs = args.get_usize_alias("jobs", "j", ctx.jobs).max(1);
     ctx
 }
 
@@ -263,6 +281,17 @@ fn cmd_bench_sched(args: &Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+fn cmd_bench_replay(args: &Args) -> anyhow::Result<()> {
+    use hygen::experiments::bench_replay::{self, ReplayConfig};
+    let mut cfg = if args.get_bool("quick") { ReplayConfig::quick() } else { ReplayConfig::full() };
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    let out = args.get_or("out", "BENCH_e2e.json");
+    let outcome = bench_replay::run_and_save(&cfg, out)?;
+    // Both regression gates (linear replay cost across scales; zero-alloc
+    // steady decode — live here because this binary registers `ALLOC`).
+    bench_replay::check_gates(&outcome)
 }
 
 fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {

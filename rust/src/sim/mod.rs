@@ -99,7 +99,7 @@ mod tests {
     use crate::workload::trace::{Trace, TraceEvent};
 
     fn ev(t: f64, class: Class, p: usize, o: usize) -> TraceEvent {
-        TraceEvent { arrival_s: t, class, prompt_len: p, output_len: o, prompt: vec![] }
+        TraceEvent { arrival_s: t, class, prompt_len: p, output_len: o, prompt: Vec::new().into() }
     }
 
     #[test]

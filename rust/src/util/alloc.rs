@@ -1,0 +1,75 @@
+//! Heap-allocation counting hook for the allocation-free-loop contract.
+//!
+//! [`CountingAlloc`] is a `System`-delegating allocator that counts every
+//! allocation event in a global relaxed atomic. The *library* never
+//! installs it — each binary that wants real counts registers it as its
+//! own `#[global_allocator]` (the `hygen` launcher, the `replay` bench
+//! target, and `tests/alloc_free_loop.rs` all do). Binaries that don't
+//! register it keep the plain system allocator and [`alloc_count`] stays
+//! at 0, which [`counting_active`] exposes so gates can distinguish "zero
+//! allocations" from "nobody is counting".
+//!
+//! The counter is process-global: a measurement window is only meaningful
+//! when nothing else allocates concurrently (the e2e replay bench and the
+//! steady-state probe are single-threaded for exactly this reason).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper counting allocation events (alloc, realloc,
+/// and zeroed alloc; frees are not counted — the contract is about
+/// allocation pressure per iteration, and any steady-state free implies a
+/// matching allocation).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Total allocation events since process start (0 unless a
+/// [`CountingAlloc`] is registered as the global allocator).
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Whether a counting allocator is actually installed in this process.
+/// Any Rust program allocates long before user code runs, so a zero
+/// counter means the hook is not registered.
+pub fn counting_active() -> bool {
+    alloc_count() > 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The library test binary does NOT register the allocator: the
+    // counter must stay flat no matter what we allocate.
+    #[test]
+    fn counter_inert_without_registration() {
+        let before = alloc_count();
+        let v: Vec<u64> = (0..1024).collect();
+        assert_eq!(v.len(), 1024);
+        assert_eq!(alloc_count(), before);
+        assert!(!counting_active() || before > 0);
+    }
+}

@@ -33,6 +33,22 @@ impl BenchResult {
     }
 }
 
+/// Process peak resident set size in MiB (`VmHWM` from
+/// `/proc/self/status`); 0.0 when unavailable (non-Linux platforms).
+pub fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 =
+                rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{:.1} ns", ns)
@@ -119,6 +135,16 @@ impl Bencher {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn peak_rss_positive_on_linux() {
+        let rss = peak_rss_mb();
+        if cfg!(target_os = "linux") {
+            assert!(rss > 0.0, "VmHWM should parse on Linux: {rss}");
+        } else {
+            assert!(rss >= 0.0);
+        }
+    }
 
     #[test]
     fn fmt_ns_units() {

@@ -1,6 +1,9 @@
 //! Tiny CLI argument parser for the launcher (the offline registry has no
-//! `clap`). Supports `--key value`, `--key=value`, boolean `--flag`, and
-//! positional arguments, with typed getters and a usage string.
+//! `clap`). Supports `--key value`, `--key=value`, boolean `--flag`,
+//! single-letter short flags (`-j 4` / `-j4`, stored under the letter),
+//! and positional arguments, with typed getters and a usage string.
+//! Negative numbers (`--offset -3`) are still consumed as values: only
+//! `-<letter>` forms parse as short flags.
 
 use std::collections::BTreeMap;
 
@@ -21,14 +24,31 @@ impl Args {
                     out.flags.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
                 } else {
                     // `--key value` unless the next token is another flag
-                    // (or absent), in which case it's a boolean flag.
+                    // (long or short, or absent), in which case it's a
+                    // boolean flag.
                     match it.peek() {
-                        Some(next) if !next.starts_with("--") => {
+                        Some(next) if !next.starts_with("--") && !is_short_flag(next) => {
                             let v = it.next().unwrap();
                             out.flags.insert(rest.to_string(), v);
                         }
                         _ => {
                             out.flags.insert(rest.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if is_short_flag(&a) {
+                let key = a[1..2].to_string();
+                if a.len() > 2 {
+                    // attached value: -j4
+                    out.flags.insert(key, a[2..].to_string());
+                } else {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") && !is_short_flag(next) => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(key, v);
+                        }
+                        _ => {
+                            out.flags.insert(key, "true".to_string());
                         }
                     }
                 }
@@ -41,6 +61,11 @@ impl Args {
 
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
+    }
+
+    /// Typed getter honoring a long/short alias pair (e.g. `--jobs`/`-j`).
+    pub fn get_usize_alias(&self, long: &str, short: &str, default: usize) -> usize {
+        self.get_usize(long, self.get_usize(short, default))
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -71,6 +96,15 @@ impl Args {
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
+}
+
+/// `-j`, `-j4` style: a dash followed by an ASCII letter (so `-3` stays a
+/// negative-number value, not a flag).
+fn is_short_flag(s: &str) -> bool {
+    s.len() >= 2
+        && s.starts_with('-')
+        && !s.starts_with("--")
+        && s.as_bytes()[1].is_ascii_alphabetic()
 }
 
 #[cfg(test)]
@@ -115,7 +149,27 @@ mod tests {
     #[test]
     fn negative_number_values() {
         let a = parse(&["--offset", "-3"]);
-        // "-3" does not start with "--", so it is consumed as the value.
+        // "-3" is not a short flag (digit), so it is consumed as the value.
         assert_eq!(a.get_f64("offset", 0.0), -3.0);
+    }
+
+    #[test]
+    fn short_flags() {
+        let a = parse(&["figures", "all", "-j", "4"]);
+        assert_eq!(a.get_usize("j", 0), 4);
+        assert_eq!(a.positional, vec!["figures", "all"]);
+        let b = parse(&["-j8", "--quick"]);
+        assert_eq!(b.get_usize("j", 0), 8);
+        assert!(b.get_bool("quick"));
+        let c = parse(&["-v", "-j", "2"]);
+        assert!(c.get_bool("v"), "short flag before another short flag is boolean");
+        assert_eq!(c.get_usize("j", 0), 2);
+        let d = parse(&["--quick", "-j", "1", "--out", "/tmp/x"]);
+        assert!(d.get_bool("quick"), "--quick before -j stays boolean");
+        assert_eq!(d.get_usize("j", 0), 1);
+        assert_eq!(d.get("out"), Some("/tmp/x"));
+        assert_eq!(parse(&["--jobs", "3"]).get_usize_alias("jobs", "j", 1), 3);
+        assert_eq!(parse(&["-j", "3"]).get_usize_alias("jobs", "j", 1), 3);
+        assert_eq!(parse(&[]).get_usize_alias("jobs", "j", 5), 5);
     }
 }

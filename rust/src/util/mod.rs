@@ -1,11 +1,14 @@
 //! Foundation substrates built in-repo (the offline registry only resolves
 //! `xla` + `anyhow`): JSON, deterministic RNG + distributions, streaming
 //! statistics, CLI parsing, a micro-benchmark harness, a property-testing
-//! harness, and a small thread pool.
+//! harness, a small thread pool, an allocation-counting hook, and a
+//! deterministic fork-join job runner.
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

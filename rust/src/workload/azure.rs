@@ -107,7 +107,13 @@ pub fn generate(cfg: &AzureTraceConfig, seed: u64) -> Trace {
         // unique prompt tokens (no accidental prefix sharing online)
         let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| uniq.wrapping_add(i)).collect();
         uniq = uniq.wrapping_add(prompt_len as u32 + 17);
-        events.push(TraceEvent { arrival_s: t, class: Class::Online, prompt_len, output_len, prompt });
+        events.push(TraceEvent {
+            arrival_s: t,
+            class: Class::Online,
+            prompt_len,
+            output_len,
+            prompt: prompt.into(),
+        });
     }
     Trace::new(events)
 }

@@ -130,7 +130,7 @@ pub fn generate_arrivals(dataset: Dataset, n: usize, span_s: f64, seed: u64) -> 
             class: Class::Offline,
             prompt_len,
             output_len,
-            prompt,
+            prompt: prompt.into(),
         });
     }
     Trace::new(events)

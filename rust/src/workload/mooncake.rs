@@ -74,7 +74,13 @@ pub fn generate(cfg: &MooncakeTraceConfig, seed: u64) -> Trace {
             (rng.lognormal(cfg.output_mu, cfg.output_sigma) as usize).clamp(1, cfg.max_output);
         let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| uniq.wrapping_add(i)).collect();
         uniq = uniq.wrapping_add(prompt_len as u32 + 29);
-        events.push(TraceEvent { arrival_s: t, class: Class::Online, prompt_len, output_len, prompt });
+        events.push(TraceEvent {
+            arrival_s: t,
+            class: Class::Online,
+            prompt_len,
+            output_len,
+            prompt: prompt.into(),
+        });
     }
     Trace::new(events)
 }

@@ -2,7 +2,8 @@
 //! plus CSV persistence so generated workloads can be inspected, diffed,
 //! and replayed exactly.
 
-use crate::coordinator::request::Class;
+use crate::coordinator::request::{empty_prompt, Class};
+use std::sync::Arc;
 
 /// One trace record (the unit both generators and the engine replay).
 #[derive(Debug, Clone, PartialEq)]
@@ -13,19 +14,24 @@ pub struct TraceEvent {
     pub prompt_len: usize,
     pub output_len: usize,
     /// Prompt token ids; generators synthesize these so PSM/prefix caching
-    /// operate on real token content even in simulation.
-    pub prompt: Vec<u32>,
+    /// operate on real token content even in simulation. `Arc`-shared with
+    /// every `Request` admitted from this event (replay never copies it).
+    pub prompt: Arc<[u32]>,
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
+    /// Events sorted by arrival. Treat as read-only after construction:
+    /// the per-class counts below are computed once in [`Trace::new`].
     pub events: Vec<TraceEvent>,
+    n_online: usize,
 }
 
 impl Trace {
     pub fn new(mut events: Vec<TraceEvent>) -> Trace {
         events.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-        Trace { events }
+        let n_online = events.iter().filter(|e| e.class == Class::Online).count();
+        Trace { events, n_online }
     }
 
     pub fn len(&self) -> usize {
@@ -34,6 +40,18 @@ impl Trace {
 
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
+    }
+
+    /// Online events in the trace (precomputed — `run_trace`'s admission
+    /// lookahead and the bench trace stats read this every replay instead
+    /// of rescanning the event list).
+    pub fn num_online(&self) -> usize {
+        self.n_online
+    }
+
+    /// Offline events in the trace (precomputed, see [`Trace::num_online`]).
+    pub fn num_offline(&self) -> usize {
+        self.events.len() - self.n_online
     }
 
     pub fn duration_s(&self) -> f64 {
@@ -101,7 +119,7 @@ impl Trace {
                 class,
                 prompt_len: parts[2].parse()?,
                 output_len: parts[3].parse()?,
-                prompt: Vec::new(),
+                prompt: empty_prompt(),
             });
         }
         Ok(Trace::new(events))
@@ -122,7 +140,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn ev(t: f64, class: Class, p: usize, o: usize) -> TraceEvent {
-        TraceEvent { arrival_s: t, class, prompt_len: p, output_len: o, prompt: vec![] }
+        TraceEvent { arrival_s: t, class, prompt_len: p, output_len: o, prompt: Vec::new().into() }
     }
 
     #[test]
@@ -133,6 +151,21 @@ mod tests {
         ]);
         assert_eq!(tr.events[0].arrival_s, 1.0);
         assert_eq!(tr.duration_s(), 2.0);
+    }
+
+    #[test]
+    fn per_class_counts_precomputed() {
+        let tr = Trace::new(vec![
+            ev(0.0, Class::Online, 1, 1),
+            ev(1.0, Class::Offline, 1, 1),
+            ev(2.0, Class::Online, 1, 1),
+        ]);
+        assert_eq!(tr.num_online(), 2);
+        assert_eq!(tr.num_offline(), 1);
+        let merged = tr.merged(Trace::new(vec![ev(0.5, Class::Offline, 1, 1)]));
+        assert_eq!(merged.num_online(), 2);
+        assert_eq!(merged.num_offline(), 2);
+        assert_eq!(Trace::default().num_online(), 0);
     }
 
     #[test]

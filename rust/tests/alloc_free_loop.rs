@@ -1,0 +1,30 @@
+//! The allocation-free-loop contract, asserted for real: this test
+//! binary registers the counting allocator as its global allocator and
+//! drives the steady-state decode probe (`bench_replay::steady_probe`) —
+//! after warmup, a window of engine iterations (schedule → execute →
+//! apply → metrics) must perform **zero** heap allocations.
+//!
+//! This file holds exactly one test so no concurrent test thread can
+//! allocate inside the measured window (the counter is process-global).
+
+use hygen::experiments::bench_replay::steady_probe;
+use hygen::util::alloc::{alloc_count, counting_active, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_decode_iterations_do_not_allocate() {
+    assert!(counting_active(), "counting allocator must be registered in this binary");
+    let before = alloc_count();
+    let probe = steady_probe(64, 100).expect("probe runs");
+    assert!(alloc_count() > before, "setup itself allocates; the counter is live");
+    assert_eq!(probe.iterations, 100);
+    assert!(probe.ns_per_iter > 0.0);
+    assert_eq!(
+        probe.allocs_total, 0,
+        "steady-state decode iterations allocated {} times over {} iterations \
+         (contract: zero once scratch buffers are warm)",
+        probe.allocs_total, probe.iterations
+    );
+}

@@ -1,0 +1,92 @@
+//! Determinism contracts of the experiment harness:
+//!
+//! * the same seed must produce an identical `Report` across two full
+//!   replays (every RNG is engine-owned and seeded);
+//! * the parallel figure runner (`figures -j N`) must produce CSVs
+//!   **byte-identical** to the serial run — parallelism only changes
+//!   wallclock, never content. Checked here on scaled-down shapes of
+//!   fig 6 (policy panel) and fig 10 (QPS × metric sweep), the two
+//!   figures whose internal grids run as parallel jobs; CI re-checks the
+//!   full `--quick` shapes through the CLI.
+
+use hygen::baselines::{SimSetup, System};
+use hygen::experiments::{figures, Ctx};
+use hygen::sim::costmodel::CostModel;
+use hygen::workload::azure::{self, AzureTraceConfig};
+use hygen::workload::datasets::{self, Dataset};
+
+/// A deliberately tiny ctx so the figure determinism check stays
+/// test-suite-sized (the horizons/backlogs only need to be big enough to
+/// produce non-trivial tables).
+fn tiny_ctx(jobs: usize) -> Ctx {
+    Ctx {
+        horizon_s: 40.0,
+        trace_s: 25.0,
+        profile_steps: 2,
+        offline_frac: 0.02,
+        jobs,
+        ..Ctx::default()
+    }
+}
+
+#[test]
+fn same_seed_identical_report() {
+    let run = || {
+        let setup = SimSetup::new(CostModel::a100_llama7b()).with_seed(3);
+        let online = azure::generate(
+            &AzureTraceConfig { duration_s: 30.0, mean_qps: 2.0, ..Default::default() },
+            3,
+        );
+        let offline = datasets::generate(Dataset::ArxivSummarization, 200, 3);
+        let workload = online.merged(offline);
+        setup
+            .run(System::HyGen { latency_budget_ms: 40.0 }, &workload, 90.0)
+            .unwrap()
+            .report
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must reproduce the report bit-for-bit");
+}
+
+#[test]
+fn different_seed_differs() {
+    let run = |seed: u64| {
+        let setup = SimSetup::new(CostModel::a100_llama7b()).with_seed(seed);
+        let online = azure::generate(
+            &AzureTraceConfig { duration_s: 30.0, mean_qps: 2.0, ..Default::default() },
+            seed,
+        );
+        let offline = datasets::generate(Dataset::ArxivSummarization, 200, seed);
+        setup
+            .run(System::HyGen { latency_budget_ms: 40.0 }, &online.merged(offline), 90.0)
+            .unwrap()
+            .report
+    };
+    assert_ne!(run(3), run(4), "the seed must actually steer the run");
+}
+
+fn figure_csvs(id: &str, jobs: usize) -> Vec<String> {
+    let ctx = tiny_ctx(jobs);
+    figures::run_figure(&ctx, id)
+        .unwrap_or_else(|e| panic!("figure {id} with jobs={jobs}: {e:#}"))
+        .iter()
+        .map(|t| t.to_csv())
+        .collect()
+}
+
+#[test]
+fn fig6_parallel_output_is_byte_identical() {
+    let serial = figure_csvs("6", 1);
+    let parallel = figure_csvs("6", 2);
+    assert!(!serial.is_empty() && serial.iter().all(|c| c.lines().count() > 1));
+    assert_eq!(serial, parallel, "fig6 CSV bytes must not depend on -j");
+}
+
+#[test]
+fn fig10_parallel_output_is_byte_identical() {
+    let serial = figure_csvs("10", 1);
+    let parallel = figure_csvs("10", 2);
+    assert!(!serial.is_empty() && serial.iter().all(|c| c.lines().count() > 1));
+    assert_eq!(serial, parallel, "fig10 CSV bytes must not depend on -j");
+}

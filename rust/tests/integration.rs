@@ -139,7 +139,7 @@ fn colocated_batch_serves_online_and_offline() {
             class: Class::Online,
             prompt_len: 24,
             output_len: 4,
-            prompt: tokenizer::encode(&format!("online request number {i} body")),
+            prompt: tokenizer::encode(&format!("online request number {i} body")).into(),
         });
     }
     for i in 0..4 {
@@ -149,7 +149,7 @@ fn colocated_batch_serves_online_and_offline() {
             class: Class::Offline,
             prompt_len: p.len(),
             output_len: 3,
-            prompt: p,
+            prompt: p.into(),
         });
     }
     let r = engine.run_trace(&Trace::new(events), 300.0, true).unwrap();

@@ -215,7 +215,7 @@ fn prop_prefix_sharing_never_exceeds_actual_lcp() {
                     .with_prompt(p.clone()),
             );
         }
-        let mut prev: Option<Vec<u32>> = None;
+        let mut prev: Option<std::sync::Arc<[u32]>> = None;
         while let Some(r) = q.pop_next() {
             if let Some(p) = &prev {
                 assert_eq!(

@@ -84,7 +84,7 @@ fn drive(
     let mut sched = HybridScheduler::new(cfg, LatencyPredictor::default_seed());
     for round in 0..rounds {
         let now = round as f64 * 0.02;
-        let batch = sched.schedule(&mut st, now);
+        let batch = sched.schedule_owned(&mut st, now);
         inspect(&sched, &st, &batch);
         apply(&mut st, &batch);
         // The full structural invariants (no dual membership, queue/table
@@ -140,7 +140,7 @@ fn prop_latency_budget_respected_on_offline_only_workloads() {
             let plen = g.usize(16, 1500);
             st.enqueue(
                 Request::new(i as u64, Class::Offline, 0.0, plen, g.usize(1, 32))
-                    .with_prompt((0..plen as u32).collect()),
+                    .with_prompt((0..plen as u32).collect::<Vec<u32>>()),
             );
         }
         let budget = g.f64(8.0, 80.0);
@@ -153,7 +153,7 @@ fn prop_latency_budget_respected_on_offline_only_workloads() {
             LatencyPredictor::default_seed(),
         );
         for round in 0..10 {
-            let b = sched.schedule(&mut st, round as f64);
+            let b = sched.schedule_owned(&mut st, round as f64);
             assert!(
                 sched.last_stats.predicted_ms <= budget + 1e-6,
                 "predicted {} > budget {budget}",
@@ -172,7 +172,7 @@ fn prop_no_request_lost_or_duplicated() {
         let cfg = random_config(g);
         let mut sched = HybridScheduler::new(cfg, LatencyPredictor::default_seed());
         for round in 0..60 {
-            let b = sched.schedule(&mut st, round as f64 * 0.02);
+            let b = sched.schedule_owned(&mut st, round as f64 * 0.02);
             apply(&mut st, &b);
             // conservation: queued + running + preempted + finished == total
             let now = st.online_queue.len()
@@ -215,7 +215,7 @@ fn prop_disable_offline_schedules_online_only() {
         cfg.enable_offline = false;
         let mut sched = HybridScheduler::new(cfg, LatencyPredictor::default_seed());
         for round in 0..20 {
-            let b = sched.schedule(&mut st, round as f64 * 0.02);
+            let b = sched.schedule_owned(&mut st, round as f64 * 0.02);
             assert!(b.entries.iter().all(|e| e.class.is_online()));
             apply(&mut st, &b);
         }
