@@ -3,7 +3,7 @@
 # `make artifacts` produces the AOT HLO artifacts the PJRT execution path
 # (`--features pjrt`) loads at startup.
 
-.PHONY: all artifacts test bench bench-sched bench-replay microbench clean
+.PHONY: all artifacts test bench bench-sched bench-replay cluster microbench clean
 
 all:
 	cargo build --release
@@ -29,6 +29,13 @@ bench-sched:
 # zero-allocation steady-decode probe) -> BENCH_e2e.json
 bench-replay:
 	cargo run --release -- bench-replay
+
+# Multi-replica router comparison on the calibrated mixed trace
+# (1/2/4/8 replicas x round-robin/jsq/slo-headroom, with the
+# slo-headroom-vs-round-robin acceptance gate)
+# -> artifacts/cluster_compare.csv
+cluster:
+	cargo run --release -- cluster-sim --check
 
 # In-tree Bencher micro-benchmarks (scheduler, PSM, predictor, figures,
 # sched_trace, replay bench targets).

@@ -1,0 +1,158 @@
+//! Multi-replica cluster layer: SLO-aware request routing and elastic
+//! offline placement across engine instances.
+//!
+//! One HyGen instance co-locates online and offline work inside a single
+//! engine (the paper's Fig. 2). A production deployment runs *N* such
+//! replicas behind a router — and multi-SLO dispatch decisions belong
+//! above the per-engine scheduler (SLOs-Serve), while idle capacity
+//! across serving instances can be harvested for offline work (ConServe).
+//! This module is that layer:
+//!
+//! * [`router::Router`] — the routing policy interface over per-replica
+//!   [`ReplicaSnapshot`]s, with three implementations:
+//!   [`router::RoundRobin`], [`router::JoinShortestQueue`], and
+//!   [`router::SloHeadroom`] (routes online requests to the replica with
+//!   the most SLO headroom and elastically places the shared offline
+//!   backlog onto replicas whose predicted batch time leaves slack — the
+//!   cross-replica analogue of the paper's SLO-aware offline scheduling).
+//! * [`replica::Replica`] — one engine on its own thread behind an mpsc
+//!   job queue (the `server::engine_loop` message-passing shape),
+//!   publishing a census snapshot and a metrics report, and draining
+//!   in-flight work gracefully on shutdown.
+//! * [`sim::ClusterSim`] — a deterministic virtual-clock driver over N
+//!   sim-backend engines with a shared offline backlog and periodic
+//!   rebalance ticks; `hygen cluster-sim` measures the policies on the
+//!   calibrated mixed trace (`artifacts/cluster_compare.csv`).
+//!
+//! The server front end ([`crate::server`]) builds on [`replica`] for
+//! `hygen serve --replicas N --router <policy>`.
+
+pub mod replica;
+pub mod router;
+pub mod sim;
+
+use crate::coordinator::batch::Features;
+use crate::coordinator::request::Class;
+use crate::engine::{Engine, ExecutionBackend};
+
+/// A point-in-time census of one replica, published by its engine thread
+/// (server mode) or computed on demand (simulation). Routers make every
+/// decision from these snapshots only — they never touch engine state.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ReplicaSnapshot {
+    /// Online requests waiting in the replica's FCFS queue.
+    pub online_waiting: usize,
+    /// Offline requests waiting in the replica's offline queue.
+    pub offline_waiting: usize,
+    pub running_online: usize,
+    pub running_offline: usize,
+    pub preempted_offline: usize,
+    /// Free KV-cache capacity in tokens.
+    pub free_kv_tokens: usize,
+    /// Latency-predictor estimate (ms) of the replica's next iteration
+    /// given its running census — the load signal `SloHeadroom` routes on.
+    pub predicted_iter_ms: f64,
+    /// Per-iteration latency budget the replica schedules under
+    /// (`f64::INFINITY` when SLO-unaware).
+    pub latency_budget_ms: f64,
+    /// The replica's backend failed persistently; routers must prefer any
+    /// live replica over a failed one.
+    pub failed: bool,
+}
+
+impl ReplicaSnapshot {
+    /// Snapshot an engine's current census (any backend).
+    pub fn of<B: ExecutionBackend>(engine: &Engine<B>) -> ReplicaSnapshot {
+        let counts = engine.state.counts;
+        // Estimate the next iteration from the running census: every
+        // running decode contributes one token; running prefills are
+        // assumed to fill the chunk budget between them (the scheduler
+        // schedules at most `chunk_tokens` of prefill per iteration).
+        // Snapshots are taken every engine-loop iteration, so this is
+        // O(1) in the running-set size.
+        let decodes = (counts.decode(Class::Online) + counts.decode(Class::Offline)) as f64;
+        let mut f = Features { sp: 0.0, sd: decodes, np: 0.0, nd: decodes };
+        let prefills = counts.prefill(Class::Online) + counts.prefill(Class::Offline);
+        if prefills > 0 {
+            f.add_prefill(engine.scheduler.cfg.chunk_tokens);
+        }
+        ReplicaSnapshot {
+            online_waiting: engine.state.online_queue.len(),
+            offline_waiting: engine.state.offline_queue.len(),
+            running_online: engine.state.running_online.len(),
+            running_offline: engine.state.running_offline.len(),
+            preempted_offline: engine.state.preempted_offline.len(),
+            free_kv_tokens: engine.state.blocks.free_tokens(),
+            predicted_iter_ms: engine.scheduler.predictor.predict(&f),
+            latency_budget_ms: engine.scheduler.cfg.latency_budget_ms.unwrap_or(f64::INFINITY),
+            failed: false,
+        }
+    }
+
+    /// Everything queued or in flight on the replica (JSQ's load measure).
+    pub fn total_depth(&self) -> usize {
+        self.online_waiting
+            + self.offline_waiting
+            + self.running_online
+            + self.running_offline
+            + self.preempted_offline
+    }
+
+    /// Online-only load (waiting + running).
+    pub fn online_depth(&self) -> usize {
+        self.online_waiting + self.running_online
+    }
+
+    /// Predicted slack (ms) between the replica's latency budget and its
+    /// next iteration — the `SloHeadroom` routing signal. Infinite when
+    /// the replica is SLO-unaware.
+    pub fn headroom_ms(&self) -> f64 {
+        self.latency_budget_ms - self.predicted_iter_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::predictor::LatencyPredictor;
+    use crate::coordinator::queues::OfflinePolicy;
+    use crate::coordinator::request::Request;
+    use crate::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+    use crate::coordinator::state::EngineState;
+    use crate::sim::costmodel::CostModel;
+    use crate::sim::SimBackend;
+
+    fn engine(budget: Option<f64>) -> Engine<SimBackend> {
+        let state = EngineState::new(OfflinePolicy::Fcfs, 1024, 16, 0);
+        let sched = HybridScheduler::new(
+            SchedulerConfig { latency_budget_ms: budget, ..Default::default() },
+            LatencyPredictor::default_seed(),
+        );
+        Engine::new(sched, state, SimBackend::new(CostModel::a100_llama7b(), 0))
+    }
+
+    #[test]
+    fn snapshot_reflects_census() {
+        let mut e = engine(Some(40.0));
+        e.submit(Request::new(1, Class::Online, 0.0, 64, 8));
+        e.submit(Request::new(2, Class::Offline, 0.0, 64, 8));
+        let s = ReplicaSnapshot::of(&e);
+        assert_eq!(s.online_waiting, 1);
+        assert_eq!(s.offline_waiting, 1);
+        assert_eq!(s.total_depth(), 2);
+        assert_eq!(s.latency_budget_ms, 40.0);
+        assert!(s.headroom_ms() < 40.0, "empty-batch bias charged");
+        e.step().unwrap();
+        let s2 = ReplicaSnapshot::of(&e);
+        assert!(s2.running_online + s2.running_offline > 0);
+        assert!(s2.predicted_iter_ms > s.predicted_iter_ms, "load raises the estimate");
+    }
+
+    #[test]
+    fn slo_unaware_headroom_is_infinite() {
+        let e = engine(None);
+        let s = ReplicaSnapshot::of(&e);
+        assert_eq!(s.latency_budget_ms, f64::INFINITY);
+        assert_eq!(s.headroom_ms(), f64::INFINITY);
+    }
+}

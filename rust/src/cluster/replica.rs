@@ -1,0 +1,303 @@
+//! One engine replica on its own thread behind an mpsc job queue — the
+//! `server::engine_loop` message-passing shape, factored out so the HTTP
+//! front end and the multi-replica cluster share it.
+//!
+//! The engine is *constructed on* the replica thread by the factory (PJRT
+//! handles are not `Send`, so they must never cross threads). The thread:
+//!
+//! * ingests [`Job`]s, replying on each job's channel with an explicit
+//!   `Result` — there is no in-band failure sentinel (a `Completion` with
+//!   a fake request id 0 used to mean "failed", which collided with
+//!   nothing only by luck);
+//! * publishes a [`ReplicaSnapshot`] every loop iteration (cheap copy)
+//!   and a metrics report every [`PUBLISH_INTERVAL`] for `/metrics`;
+//! * on stop, **drains**: in-flight requests keep executing until they
+//!   complete or the drain deadline passes, at which point the stragglers
+//!   get [`JobError::DrainTimeout`] instead of a dropped channel.
+
+use super::ReplicaSnapshot;
+use crate::coordinator::request::{Class, Request, RequestId};
+use crate::engine::{Engine, ExecutionBackend};
+use crate::runtime::tokenizer;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How often the replica thread refreshes its published metrics report.
+pub const PUBLISH_INTERVAL: Duration = Duration::from_millis(200);
+
+/// A submission travelling from a connection handler to a replica thread.
+pub struct Job {
+    pub prompt: Vec<u32>,
+    pub max_tokens: usize,
+    pub class: Class,
+    pub reply: Sender<Result<Completion, JobError>>,
+}
+
+/// A successfully served request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// Replica-local request id (each replica numbers its own requests).
+    pub id: RequestId,
+    pub text: String,
+    pub tokens: Vec<u32>,
+    pub latency_ms: f64,
+}
+
+/// Why a job could not be served. Explicit on the reply channel — callers
+/// never have to sniff sentinel field values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobError {
+    /// The execution backend failed persistently; the replica aborted its
+    /// work and refuses new jobs.
+    BackendFailed,
+    /// The server stopped and the drain deadline passed before this
+    /// request completed.
+    DrainTimeout,
+}
+
+impl JobError {
+    pub fn message(&self) -> &'static str {
+        match self {
+            JobError::BackendFailed => "backend failed",
+            JobError::DrainTimeout => "server stopping",
+        }
+    }
+}
+
+/// State a replica thread publishes for the front end and the router.
+#[derive(Default)]
+pub struct ReplicaShared {
+    /// Latest metrics report (pretty JSON), refreshed every
+    /// [`PUBLISH_INTERVAL`].
+    pub metrics_json: Mutex<String>,
+    /// Latest census snapshot (refreshed every loop iteration).
+    pub snapshot: Mutex<ReplicaSnapshot>,
+    /// Jobs sent toward this replica per class (incremented by submitters
+    /// *before* sending). Together with the `ingested_*` counters this
+    /// gives the router an estimate of work still in the channel, so a
+    /// burst between two snapshot refreshes does not all land on the same
+    /// replica — and offline bursts count against the offline buffer, not
+    /// the online depth.
+    pub submitted_online: AtomicUsize,
+    pub submitted_offline: AtomicUsize,
+    /// Jobs the engine thread has taken off the channel, per class.
+    pub ingested_online: AtomicUsize,
+    pub ingested_offline: AtomicUsize,
+    /// Set after a persistent backend failure: the engine aborted its
+    /// work and new completions are refused (health/metrics stay up).
+    pub failed: AtomicBool,
+}
+
+impl ReplicaShared {
+    /// The published snapshot plus the not-yet-ingested job count — the
+    /// router's view of this replica.
+    pub fn routing_snapshot(&self) -> ReplicaSnapshot {
+        let mut s = *self.snapshot.lock().unwrap();
+        // Saturating: a submitter that skips the counters (tests driving
+        // a replica directly) must not underflow the estimates.
+        s.online_waiting += self
+            .submitted_online
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.ingested_online.load(Ordering::Relaxed));
+        s.offline_waiting += self
+            .submitted_offline
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.ingested_offline.load(Ordering::Relaxed));
+        s.failed = self.failed.load(Ordering::SeqCst);
+        s
+    }
+
+    /// Record a job heading toward this replica (call before sending).
+    pub fn note_submitted(&self, class: Class) {
+        match class {
+            Class::Online => self.submitted_online.fetch_add(1, Ordering::Relaxed),
+            Class::Offline => self.submitted_offline.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+}
+
+/// Handle to one running replica: the job sender, the published state,
+/// and the thread handle (joined by [`Replica::join`]).
+pub struct Replica {
+    pub tx: Sender<Job>,
+    pub shared: Arc<ReplicaShared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Replica {
+    /// Spawn a replica thread. Blocks until the factory has run; a
+    /// factory error is returned here rather than left to surface on the
+    /// first request.
+    pub fn spawn<B, F>(
+        name: String,
+        factory: F,
+        stop: Arc<AtomicBool>,
+        drain: Duration,
+    ) -> anyhow::Result<Replica>
+    where
+        B: ExecutionBackend + 'static,
+        F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+    {
+        let shared = Arc::new(ReplicaShared::default());
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let thread = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new().name(name).spawn(move || {
+                let engine = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                engine_loop(engine, rx, stop, shared, drain)
+            })?
+        };
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("replica thread died during startup"))??;
+        Ok(Replica { tx, shared, thread: Some(thread) })
+    }
+
+    /// Join the replica thread (idempotent). The caller must have set the
+    /// shared stop flag first or this blocks until every submitter hangs
+    /// up and the engine drains.
+    pub fn join(&mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The replica iteration loop: ingest -> step -> deliver -> publish, with
+/// graceful drain on stop. See the module docs for the contract.
+pub fn engine_loop<B: ExecutionBackend>(
+    mut engine: Engine<B>,
+    rx: Receiver<Job>,
+    stop: Arc<AtomicBool>,
+    shared: Arc<ReplicaShared>,
+    drain: Duration,
+) {
+    let start = Instant::now();
+    type Reply = Sender<Result<Completion, JobError>>;
+    let mut inflight: HashMap<RequestId, (Reply, Instant)> = HashMap::new();
+    engine.state.keep_finished = true;
+    let mut last_publish = Instant::now();
+    let mut drain_deadline: Option<Instant> = None;
+    let mut disconnected = false;
+    loop {
+        if drain_deadline.is_none() && stop.load(Ordering::SeqCst) {
+            drain_deadline = Some(Instant::now() + drain);
+        }
+        // Ingest everything already queued (jobs sent before the stop
+        // flag flipped were *accepted* and still participate in the
+        // drain).
+        loop {
+            match rx.try_recv() {
+                Ok(job) => {
+                    match job.class {
+                        Class::Online => shared.ingested_online.fetch_add(1, Ordering::Relaxed),
+                        Class::Offline => shared.ingested_offline.fetch_add(1, Ordering::Relaxed),
+                    };
+                    if shared.failed.load(Ordering::SeqCst) {
+                        // Backend already declared dead: refuse instead of
+                        // queueing work that can never execute (jobs racing
+                        // the handler's own failed check land here).
+                        let _ = job.reply.send(Err(JobError::BackendFailed));
+                        continue;
+                    }
+                    let id = engine.fresh_id();
+                    let now = start.elapsed().as_secs_f64();
+                    let req = Request::new(id, job.class, now, job.prompt.len(), job.max_tokens)
+                        .with_prompt(job.prompt);
+                    inflight.insert(id, (job.reply, Instant::now()));
+                    engine.submit(req);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        // Publish *after* ingest, before the (possibly tens-of-ms) step:
+        // routers must see a burst in the queue census as soon as it is
+        // ingested, or the submitted/ingested in-channel delta drops to
+        // zero while the published depth still shows the pre-burst state
+        // — exactly the misrouting window the counters exist to close.
+        *shared.snapshot.lock().unwrap() = ReplicaSnapshot::of(&engine);
+        if let Some(deadline) = drain_deadline {
+            if inflight.is_empty() {
+                break; // drained: every accepted request was answered
+            }
+            if Instant::now() >= deadline {
+                for (_, (reply, _)) in inflight.drain() {
+                    let _ = reply.send(Err(JobError::DrainTimeout));
+                }
+                break;
+            }
+        } else if disconnected && inflight.is_empty() {
+            return; // every submitter hung up with nothing in flight
+        }
+        if engine.has_work() {
+            match engine.step() {
+                Err(_) => {
+                    // Execution error: fail all inflight requests AND tear
+                    // the engine's in-flight work down (release blocks,
+                    // empty the queues/running sets). Leaving it intact
+                    // re-schedules the same doomed batch every loop — a
+                    // 100% CPU livelock with no reply channels left to
+                    // observe it.
+                    for (_, (reply, _)) in inflight.drain() {
+                        let _ = reply.send(Err(JobError::BackendFailed));
+                    }
+                    engine.abort_all();
+                    shared.failed.store(true, Ordering::SeqCst);
+                }
+                Ok(0) => {
+                    // Work exists but nothing is schedulable right now
+                    // (e.g. a queued prompt waiting on KV memory): back
+                    // off instead of re-running the scheduler at 100% CPU
+                    // until something changes.
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(_) => {}
+            }
+            // deliver completions
+            for req in engine.state.finished.drain(..) {
+                if let Some((reply, t0)) = inflight.remove(&req.id) {
+                    let _ = reply.send(Ok(Completion {
+                        id: req.id,
+                        text: tokenizer::decode(&req.output_tokens),
+                        tokens: req.output_tokens,
+                        latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    }));
+                }
+            }
+        } else {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if last_publish.elapsed() > PUBLISH_INTERVAL {
+            let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
+            *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
+            last_publish = Instant::now();
+        }
+    }
+    // Jobs that raced into the channel after the final ingest pass get an
+    // explicit error instead of a dropped reply channel (the handler also
+    // maps a disconnected reply to 503 — belt and braces for the race).
+    while let Ok(job) = rx.try_recv() {
+        let _ = job.reply.send(Err(JobError::DrainTimeout));
+    }
+    // Final publish so a post-shutdown `/metrics` scrape (or a test)
+    // observes the drained state.
+    let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
+    *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
+}

@@ -1,0 +1,276 @@
+//! Routing policies: which replica serves the next request.
+//!
+//! A [`Router`] sees only [`ReplicaSnapshot`]s — never engine state — so
+//! the same policy drives the threaded server front end and the
+//! deterministic cluster simulation. All tie-breaks resolve to the lowest
+//! replica index, which keeps every decision (and therefore the
+//! `cluster-sim` CSV) byte-reproducible for a fixed seed.
+//!
+//! Online requests need an immediate placement ([`Router::route_online`]
+//! always returns an index). Offline work is a *shared backlog*:
+//! [`Router::route_offline`] may return `None` to keep a request in the
+//! backlog until a later rebalance tick — that deferral is how
+//! [`SloHeadroom`] implements elastic placement, while [`RoundRobin`] and
+//! [`JoinShortestQueue`] dispatch the backlog eagerly.
+
+use super::ReplicaSnapshot;
+
+/// A cluster routing policy. Implementations must be deterministic
+/// functions of their own state and the snapshot slice.
+pub trait Router: Send {
+    fn name(&self) -> &'static str;
+
+    /// Replica for an arriving online request. `snaps` is non-empty and
+    /// the returned index is always in range; live (non-failed) replicas
+    /// are preferred, and any index is acceptable once every replica has
+    /// failed (the caller surfaces the error).
+    fn route_online(&mut self, snaps: &[ReplicaSnapshot]) -> usize;
+
+    /// Replica for the next shared-backlog offline request, or `None` to
+    /// defer placement to a later rebalance tick.
+    fn route_offline(&mut self, snaps: &[ReplicaSnapshot]) -> Option<usize>;
+}
+
+/// The named policies (config files, `--router`, `cluster-sim`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    JoinShortestQueue,
+    SloHeadroom,
+}
+
+impl RouterPolicy {
+    pub const ALL: [RouterPolicy; 3] =
+        [RouterPolicy::RoundRobin, RouterPolicy::JoinShortestQueue, RouterPolicy::SloHeadroom];
+
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "round-robin" | "rr" => Some(RouterPolicy::RoundRobin),
+            "jsq" | "join-shortest-queue" => Some(RouterPolicy::JoinShortestQueue),
+            "slo-headroom" | "slo" => Some(RouterPolicy::SloHeadroom),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::JoinShortestQueue => "jsq",
+            RouterPolicy::SloHeadroom => "slo-headroom",
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn build(self) -> Box<dyn Router> {
+        match self {
+            RouterPolicy::RoundRobin => Box::new(RoundRobin::default()),
+            RouterPolicy::JoinShortestQueue => Box::new(JoinShortestQueue),
+            RouterPolicy::SloHeadroom => Box::new(SloHeadroom::default()),
+        }
+    }
+}
+
+/// Index of the live replica minimizing `key` (ties -> lowest index);
+/// falls back over failed replicas only when no live one exists.
+fn argmin_live<K: PartialOrd, F: Fn(&ReplicaSnapshot) -> K>(
+    snaps: &[ReplicaSnapshot],
+    key: F,
+) -> usize {
+    let mut best: Option<(usize, K)> = None;
+    for (i, s) in snaps.iter().enumerate() {
+        if s.failed {
+            continue;
+        }
+        let k = key(s);
+        match &best {
+            Some((_, bk)) if *bk <= k => {}
+            _ => best = Some((i, k)),
+        }
+    }
+    best.map(|(i, _)| i).unwrap_or(0)
+}
+
+/// Load-oblivious baseline: replicas take turns (skipping failed ones).
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        RouterPolicy::RoundRobin.name()
+    }
+
+    fn route_online(&mut self, snaps: &[ReplicaSnapshot]) -> usize {
+        let n = snaps.len();
+        for probe in 0..n {
+            let i = (self.next + probe) % n;
+            if !snaps[i].failed {
+                self.next = (i + 1) % n;
+                return i;
+            }
+        }
+        let i = self.next % n;
+        self.next = (i + 1) % n;
+        i
+    }
+
+    fn route_offline(&mut self, snaps: &[ReplicaSnapshot]) -> Option<usize> {
+        Some(self.route_online(snaps))
+    }
+}
+
+/// Classic join-shortest-queue: route to the replica with the smallest
+/// total depth (waiting + running, both classes). Never picks a replica
+/// with a strictly longer queue than another live one.
+#[derive(Debug, Default)]
+pub struct JoinShortestQueue;
+
+impl Router for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        RouterPolicy::JoinShortestQueue.name()
+    }
+
+    fn route_online(&mut self, snaps: &[ReplicaSnapshot]) -> usize {
+        argmin_live(snaps, |s| s.total_depth())
+    }
+
+    fn route_offline(&mut self, snaps: &[ReplicaSnapshot]) -> Option<usize> {
+        Some(argmin_live(snaps, |s| s.total_depth()))
+    }
+}
+
+/// SLO-headroom routing (the cross-replica analogue of the paper's
+/// SLO-aware offline scheduling):
+///
+/// * **online** — route to the replica whose latency-predictor estimate
+///   leaves the most slack under its per-iteration budget (ties: smaller
+///   online depth, then lower index), so bursts land where they disturb
+///   running decodes least;
+/// * **offline** — place shared-backlog work only on replicas with
+///   *positive* headroom whose local offline buffer is below
+///   [`SloHeadroom::offline_buffer`], keeping the rest of the backlog
+///   central. Deferred work flows to whichever replica frees up first —
+///   the elastic placement/rebalance loop — instead of being pinned to a
+///   replica chosen at arrival time.
+#[derive(Debug)]
+pub struct SloHeadroom {
+    /// Max offline requests kept waiting on one replica before further
+    /// placement defers to the shared backlog.
+    pub offline_buffer: usize,
+}
+
+impl Default for SloHeadroom {
+    fn default() -> Self {
+        SloHeadroom { offline_buffer: 32 }
+    }
+}
+
+impl Router for SloHeadroom {
+    fn name(&self) -> &'static str {
+        RouterPolicy::SloHeadroom.name()
+    }
+
+    fn route_online(&mut self, snaps: &[ReplicaSnapshot]) -> usize {
+        // Max headroom == min (-headroom); encode the tie-breaks in the
+        // comparison key. NaN never occurs (budget and prediction are
+        // finite or +inf, and inf - inf cannot arise: an infinite budget
+        // gives infinite headroom regardless of the prediction).
+        argmin_live(snaps, |s| (-s.headroom_ms(), s.online_depth()))
+    }
+
+    fn route_offline(&mut self, snaps: &[ReplicaSnapshot]) -> Option<usize> {
+        let buffer = self.offline_buffer;
+        let mut best: Option<(usize, (f64, usize))> = None;
+        for (i, s) in snaps.iter().enumerate() {
+            if s.failed || s.headroom_ms() <= 0.0 || s.offline_waiting >= buffer {
+                continue;
+            }
+            let k = (-s.headroom_ms(), s.offline_waiting);
+            match &best {
+                Some((_, bk)) if *bk <= k => {}
+                _ => best = Some((i, k)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(depth: usize, headroom: f64) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            online_waiting: depth,
+            predicted_iter_ms: 40.0 - headroom,
+            latency_budget_ms: 40.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in RouterPolicy::ALL {
+            assert_eq!(RouterPolicy::parse(p.name()), Some(p));
+            assert_eq!(p.build().name(), p.name());
+        }
+        assert_eq!(RouterPolicy::parse("rr"), Some(RouterPolicy::RoundRobin));
+        assert_eq!(RouterPolicy::parse("slo"), Some(RouterPolicy::SloHeadroom));
+        assert_eq!(RouterPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_failed() {
+        let mut rr = RoundRobin::default();
+        let mut snaps = vec![snap(0, 10.0); 3];
+        assert_eq!(rr.route_online(&snaps), 0);
+        assert_eq!(rr.route_online(&snaps), 1);
+        assert_eq!(rr.route_online(&snaps), 2);
+        assert_eq!(rr.route_online(&snaps), 0);
+        snaps[1].failed = true;
+        assert_eq!(rr.route_online(&snaps), 2, "failed replica skipped");
+        assert_eq!(rr.route_online(&snaps), 0);
+    }
+
+    #[test]
+    fn jsq_picks_min_depth_with_low_index_ties() {
+        let mut jsq = JoinShortestQueue;
+        let snaps = vec![snap(3, 10.0), snap(1, 10.0), snap(1, 10.0)];
+        assert_eq!(jsq.route_online(&snaps), 1, "tie resolves to the lower index");
+        assert_eq!(jsq.route_offline(&snaps), Some(1));
+    }
+
+    #[test]
+    fn slo_headroom_routes_online_to_most_slack() {
+        let mut r = SloHeadroom::default();
+        let snaps = vec![snap(0, 5.0), snap(0, 25.0), snap(0, 15.0)];
+        assert_eq!(r.route_online(&snaps), 1);
+    }
+
+    #[test]
+    fn slo_headroom_defers_offline_without_slack() {
+        let mut r = SloHeadroom { offline_buffer: 2 };
+        // No replica has positive headroom: defer.
+        let tight = vec![snap(0, -1.0), snap(0, 0.0)];
+        assert_eq!(r.route_offline(&tight), None);
+        // Buffer full on the best replica: spill to the next.
+        let mut snaps = vec![snap(0, 30.0), snap(0, 20.0)];
+        snaps[0].offline_waiting = 2;
+        assert_eq!(r.route_offline(&snaps), Some(1));
+        snaps[1].offline_waiting = 2;
+        assert_eq!(r.route_offline(&snaps), None, "all buffers full: keep central");
+    }
+
+    #[test]
+    fn all_failed_still_returns_an_index() {
+        let mut snaps = vec![snap(0, 10.0); 2];
+        for s in &mut snaps {
+            s.failed = true;
+        }
+        for p in RouterPolicy::ALL {
+            let mut r = p.build();
+            assert!(r.route_online(&snaps) < snaps.len(), "{}", p.name());
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! Deterministic multi-replica trace replay: N engines on virtual clocks,
+//! one router, one shared offline backlog.
+//!
+//! The driver always steps the *lagging* replica (smallest virtual
+//! clock), so cluster time advances evenly and admission happens exactly
+//! when the cluster-wide clock passes an event's arrival. Online events
+//! are routed immediately ([`Router::route_online`]); offline events
+//! enter the shared backlog and are placed by [`Router::route_offline`]
+//! at periodic *rebalance ticks*, which also pull still-waiting offline
+//! work back from replicas whose predicted batch time exceeds their
+//! latency budget (negative SLO headroom) — the cross-replica analogue of
+//! the paper's elastic offline scheduling.
+//!
+//! Everything is seeded and single-threaded: the same trace, router, and
+//! seeds produce bit-identical results (the `cluster-sim` CSV is compared
+//! byte-for-byte in CI).
+//!
+//! Measurement note: a routed request is admitted on its target replica's
+//! clock, which can run ahead of the cluster-wide minimum by up to one
+//! batch latency; TTFT is measured from that admission instant. The skew
+//! is bounded by the lagging-replica stepping rule and identical across
+//! policies.
+
+use super::router::Router;
+use super::ReplicaSnapshot;
+use crate::coordinator::metrics::{Metrics, Report};
+use crate::coordinator::request::{Class, Request, RequestId};
+use crate::engine::{Engine, ExecutionBackend};
+use crate::workload::trace::{Trace, TraceEvent};
+use std::collections::VecDeque;
+
+/// One replica's share of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ReplicaRunStats {
+    pub report: Report,
+    /// The replica's virtual clock at the end of the run.
+    pub clock_s: f64,
+    /// Requests dispatched to this replica (including re-dispatch after a
+    /// reclaim).
+    pub routed: usize,
+    /// Output tokens the replica generated (both classes).
+    pub out_tokens: u64,
+}
+
+/// Outcome of [`ClusterSim::run`].
+#[derive(Debug, Clone)]
+pub struct ClusterRunResult {
+    pub per_replica: Vec<ReplicaRunStats>,
+    /// Cluster-wide report: latency summaries merged sample-by-sample
+    /// (exact percentiles, not an average of averages), counters summed.
+    pub aggregate: Report,
+    /// Max replica clock at stop — the denominator of every rate.
+    pub duration_s: f64,
+    /// Age of the oldest offline request still waiting (shared backlog or
+    /// a replica queue) when the run stopped; 0 when everything started.
+    pub offline_starvation_age_s: f64,
+    /// Max/mean ratio of per-replica generated tokens (1.0 = perfectly
+    /// even utilization).
+    pub util_imbalance: f64,
+    /// Total dispatches to replicas (>= admitted events when reclaims
+    /// re-dispatched work).
+    pub dispatched: usize,
+    /// Offline requests pulled back into the shared backlog from
+    /// overloaded replicas.
+    pub reclaimed: usize,
+    /// Offline events never placed on any replica.
+    pub backlog_left: usize,
+}
+
+/// The cluster driver. Build it with per-replica engines (seeded however
+/// the caller wants), run one trace, then inspect the engines freely —
+/// `run` leaves them in their final state for invariant checks.
+pub struct ClusterSim<B: ExecutionBackend> {
+    pub engines: Vec<Engine<B>>,
+    router: Box<dyn Router>,
+    rebalance_interval_s: f64,
+    next_rebalance_s: f64,
+    backlog: VecDeque<TraceEvent>,
+    /// Offline work placed on a replica but (possibly) still waiting
+    /// there: `(replica, id, arrival)`. Consulted for reclaim and
+    /// starvation accounting; entries whose request started are pruned at
+    /// each rebalance tick.
+    dispatched_offline: Vec<(usize, RequestId, f64)>,
+    /// Dispatch tally per replica.
+    pub routed: Vec<usize>,
+    dispatched: usize,
+    reclaimed: usize,
+    stalled: u64,
+}
+
+impl<B: ExecutionBackend> ClusterSim<B> {
+    pub fn new(
+        engines: Vec<Engine<B>>,
+        router: Box<dyn Router>,
+        rebalance_interval_s: f64,
+    ) -> ClusterSim<B> {
+        assert!(!engines.is_empty(), "cluster needs at least one replica");
+        assert!(rebalance_interval_s > 0.0, "rebalance interval must be positive");
+        let n = engines.len();
+        ClusterSim {
+            engines,
+            router,
+            rebalance_interval_s,
+            next_rebalance_s: 0.0,
+            backlog: VecDeque::new(),
+            dispatched_offline: Vec::new(),
+            routed: vec![0; n],
+            dispatched: 0,
+            reclaimed: 0,
+            stalled: 0,
+        }
+    }
+
+    /// Offline events currently held centrally (tests/observability).
+    pub fn backlog_len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    fn snaps(&self) -> Vec<ReplicaSnapshot> {
+        self.engines.iter().map(ReplicaSnapshot::of).collect()
+    }
+
+    /// Replica to step next: smallest clock; on ties, prefer one with
+    /// work (so an idle replica parked at the same instant never shadows
+    /// a busy one).
+    fn lagging_replica(&self) -> usize {
+        let mut best = 0usize;
+        for i in 1..self.engines.len() {
+            let (ci, cb) = (self.engines[i].clock_s, self.engines[best].clock_s);
+            if ci < cb
+                || (ci == cb && self.engines[i].has_work() && !self.engines[best].has_work())
+            {
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn min_clock(&self) -> f64 {
+        self.engines.iter().map(|e| e.clock_s).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Create the event's request on replica `i` (fresh replica-local id)
+    /// and admit it.
+    fn submit_event(&mut self, i: usize, e: &TraceEvent) {
+        let engine = &mut self.engines[i];
+        let id = engine.fresh_id();
+        let mut req = Request::new(id, e.class, e.arrival_s, e.prompt_len, e.output_len);
+        if !e.prompt.is_empty() {
+            req = req.with_prompt(e.prompt.clone());
+        }
+        engine.submit(req);
+        self.routed[i] += 1;
+        self.dispatched += 1;
+        if e.class == Class::Offline {
+            self.dispatched_offline.push((i, id, e.arrival_s));
+        }
+    }
+
+    /// One rebalance tick: reclaim waiting offline work from replicas
+    /// with negative SLO headroom, prune tracking entries whose requests
+    /// started, then place backlog work wherever the router finds room.
+    fn rebalance(&mut self) {
+        let mut snaps = self.snaps();
+        let hot: Vec<bool> = snaps.iter().map(|s| s.headroom_ms() < 0.0).collect();
+        let entries = std::mem::take(&mut self.dispatched_offline);
+        let mut keep = Vec::with_capacity(entries.len());
+        for (rep, id, arrival) in entries {
+            let waiting = self.engines[rep].state.offline_queue.contains(id);
+            if waiting && hot[rep] {
+                if let Some(req) = self.engines[rep].state.offline_queue.remove(id) {
+                    self.backlog.push_back(TraceEvent {
+                        arrival_s: arrival,
+                        class: Class::Offline,
+                        prompt_len: req.prompt_len,
+                        output_len: req.output_len,
+                        prompt: req.prompt,
+                    });
+                    self.reclaimed += 1;
+                    snaps[rep].offline_waiting = snaps[rep].offline_waiting.saturating_sub(1);
+                    continue;
+                }
+            }
+            if waiting {
+                keep.push((rep, id, arrival));
+            }
+        }
+        self.dispatched_offline = keep;
+        while !self.backlog.is_empty() {
+            match self.router.route_offline(&snaps) {
+                Some(i) if i < self.engines.len() => {
+                    let e = self.backlog.pop_front().expect("checked non-empty");
+                    self.submit_event(i, &e);
+                    snaps[i].offline_waiting += 1;
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Replay `trace` until its online portion is fully served (offline
+    /// is a backlog, the paper's throughput accounting) or `max_clock_s`
+    /// passes. One run per `ClusterSim` — metrics accumulate.
+    pub fn run(&mut self, trace: &Trace, max_clock_s: f64) -> anyhow::Result<ClusterRunResult> {
+        let events = &trace.events;
+        let mut next_event = 0usize;
+        let mut online_ahead = trace.num_online();
+        loop {
+            let now = self.min_clock();
+            while next_event < events.len() && events[next_event].arrival_s <= now {
+                let e = events[next_event].clone();
+                next_event += 1;
+                match e.class {
+                    Class::Online => {
+                        online_ahead -= 1;
+                        let snaps = self.snaps();
+                        let i = self.router.route_online(&snaps);
+                        anyhow::ensure!(i < self.engines.len(), "router index out of range");
+                        self.submit_event(i, &e);
+                    }
+                    Class::Offline => self.backlog.push_back(e),
+                }
+            }
+            if now >= self.next_rebalance_s {
+                self.rebalance();
+                while self.next_rebalance_s <= now {
+                    self.next_rebalance_s += self.rebalance_interval_s;
+                }
+            }
+            let online_left = online_ahead > 0
+                || self.engines.iter().any(|e| {
+                    !e.state.online_queue.is_empty() || !e.state.running_online.is_empty()
+                });
+            if !online_left || now >= max_clock_s {
+                break;
+            }
+            let i = self.lagging_replica();
+            if self.engines[i].has_work() {
+                if self.engines[i].step()? == 0 {
+                    // Stalled (memory or budget starvation): advance to
+                    // the next actionable instant.
+                    self.stalled += 1;
+                    anyhow::ensure!(
+                        self.stalled < 5_000_000,
+                        "cluster livelock: {} stalled iterations",
+                        self.stalled
+                    );
+                    let c = self.engines[i].clock_s;
+                    let mut t = c + 0.005;
+                    if let Some(e) = events.get(next_event) {
+                        if e.arrival_s > c {
+                            t = t.min(e.arrival_s);
+                        }
+                    }
+                    self.engines[i].clock_s = t;
+                }
+            } else {
+                // Idle replica: skip to the next instant that can hand it
+                // work (arrival or, with a pending backlog, the next
+                // rebalance tick), or park it at the slowest busy clock.
+                let c = self.engines[i].clock_s;
+                let mut t = f64::INFINITY;
+                if let Some(e) = events.get(next_event) {
+                    t = t.min(e.arrival_s);
+                }
+                if !self.backlog.is_empty() {
+                    t = t.min(self.next_rebalance_s);
+                }
+                if t.is_finite() && t > c {
+                    self.engines[i].clock_s = t;
+                } else {
+                    let busy = self
+                        .engines
+                        .iter()
+                        .filter(|e| e.has_work())
+                        .map(|e| e.clock_s)
+                        .fold(f64::INFINITY, f64::min);
+                    if busy.is_finite() && busy > c {
+                        self.engines[i].clock_s = busy;
+                    } else {
+                        // Nothing pending anywhere and no arrivals left.
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(self.collect())
+    }
+
+    fn collect(&mut self) -> ClusterRunResult {
+        let end = self.engines.iter().map(|e| e.clock_s).fold(0.0, f64::max).max(1e-9);
+        let mut agg = Metrics::new(1.0);
+        let routed = self.routed.clone();
+        let mut per_replica = Vec::with_capacity(self.engines.len());
+        for (i, e) in self.engines.iter_mut().enumerate() {
+            agg.absorb(&e.metrics);
+            let out_tokens = e.metrics.online_token_count() + e.metrics.offline_token_count();
+            per_replica.push(ReplicaRunStats {
+                report: e.metrics.report(Some(end)),
+                clock_s: e.clock_s,
+                routed: routed[i],
+                out_tokens,
+            });
+        }
+        let mean = per_replica.iter().map(|r| r.out_tokens as f64).sum::<f64>()
+            / per_replica.len() as f64;
+        let max = per_replica.iter().map(|r| r.out_tokens as f64).fold(0.0, f64::max);
+        let util_imbalance = if mean > 0.0 { max / mean } else { 1.0 };
+        let mut starvation = 0.0f64;
+        for e in &self.backlog {
+            starvation = starvation.max(end - e.arrival_s);
+        }
+        for &(rep, id, arrival) in &self.dispatched_offline {
+            if self.engines[rep].state.offline_queue.contains(id) {
+                starvation = starvation.max(end - arrival);
+            }
+        }
+        ClusterRunResult {
+            per_replica,
+            aggregate: agg.report(Some(end)),
+            duration_s: end,
+            offline_starvation_age_s: starvation,
+            util_imbalance,
+            dispatched: self.dispatched,
+            reclaimed: self.reclaimed,
+            backlog_left: self.backlog.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::router::RouterPolicy;
+    use crate::coordinator::predictor::LatencyPredictor;
+    use crate::coordinator::queues::OfflinePolicy;
+    use crate::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+    use crate::coordinator::state::EngineState;
+    use crate::sim::costmodel::CostModel;
+    use crate::sim::SimBackend;
+
+    fn engines(n: usize, budget: Option<f64>) -> Vec<Engine<SimBackend>> {
+        (0..n)
+            .map(|i| {
+                let state = EngineState::new(OfflinePolicy::Fcfs, 1024, 16, i as u64);
+                let sched = HybridScheduler::new(
+                    SchedulerConfig { latency_budget_ms: budget, ..Default::default() },
+                    LatencyPredictor::default_seed(),
+                );
+                let mut e = Engine::new(
+                    sched,
+                    state,
+                    SimBackend::new(CostModel::a100_llama7b(), i as u64),
+                );
+                e.state.keep_finished = false;
+                e
+            })
+            .collect()
+    }
+
+    fn ev(t: f64, class: Class, p: usize, o: usize) -> TraceEvent {
+        TraceEvent { arrival_s: t, class, prompt_len: p, output_len: o, prompt: Vec::new().into() }
+    }
+
+    fn mixed_trace(n_online: usize, n_offline: usize) -> Trace {
+        let mut events = Vec::new();
+        for i in 0..n_online {
+            events.push(ev(i as f64 * 0.05, Class::Online, 64, 8));
+        }
+        for _ in 0..n_offline {
+            events.push(ev(0.0, Class::Offline, 128, 16));
+        }
+        Trace::new(events)
+    }
+
+    #[test]
+    fn every_policy_serves_the_whole_online_trace() {
+        for policy in RouterPolicy::ALL {
+            let mut sim = ClusterSim::new(engines(3, Some(40.0)), policy.build(), 0.5);
+            let r = sim.run(&mixed_trace(30, 12), 600.0).unwrap();
+            assert_eq!(r.aggregate.online_finished, 30, "{}", policy.name());
+            assert!(r.duration_s > 0.0);
+            assert!(r.util_imbalance >= 1.0);
+            assert_eq!(
+                r.dispatched - r.reclaimed,
+                42 - r.backlog_left,
+                "{}: each admitted event lives on exactly one replica",
+                policy.name()
+            );
+            for e in &sim.engines {
+                e.state.check_invariants().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_online_evenly() {
+        let mut sim = ClusterSim::new(engines(4, None), RouterPolicy::RoundRobin.build(), 0.5);
+        let r = sim.run(&mixed_trace(40, 0), 600.0).unwrap();
+        assert_eq!(r.aggregate.online_finished, 40);
+        assert_eq!(sim.routed, vec![10, 10, 10, 10]);
+    }
+
+    #[test]
+    fn slo_headroom_keeps_backlog_central_until_there_is_room() {
+        let mut sim =
+            ClusterSim::new(engines(2, Some(40.0)), RouterPolicy::SloHeadroom.build(), 0.5);
+        // 100 offline requests against a 32-per-replica buffer: the first
+        // tick must leave work central instead of pinning everything.
+        let mut events = vec![ev(0.0, Class::Online, 64, 4)];
+        for _ in 0..100 {
+            events.push(ev(0.0, Class::Offline, 512, 64));
+        }
+        let r = sim.run(&Trace::new(events), 20.0).unwrap();
+        assert_eq!(r.aggregate.online_finished, 1);
+        assert!(
+            r.backlog_left > 0,
+            "elastic placement defers most of a large backlog ({} left)",
+            r.backlog_left
+        );
+        assert!(r.offline_starvation_age_s > 0.0, "waiting work has a measurable age");
+    }
+
+    #[test]
+    fn same_inputs_same_result() {
+        let run = || {
+            let mut sim =
+                ClusterSim::new(engines(2, Some(40.0)), RouterPolicy::SloHeadroom.build(), 0.5);
+            sim.run(&mixed_trace(20, 30), 600.0).unwrap().aggregate
+        };
+        assert_eq!(run(), run(), "cluster replay must be deterministic");
+    }
+}

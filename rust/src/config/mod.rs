@@ -2,12 +2,88 @@
 //! launcher. A config file holds everything needed to reproduce a serving
 //! deployment or a simulation run.
 
+use crate::cluster::router::RouterPolicy;
 use crate::coordinator::queues::OfflinePolicy;
 use crate::util::json::Json;
 
 /// The crate's top-level config type (alias kept so docs and tests can
 /// refer to `config::Config` generically).
 pub type Config = ServeConfig;
+
+/// Multi-replica deployment shape (`hygen serve --replicas N`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Engine replicas behind the router (1 = the classic single-engine
+    /// instance).
+    pub replicas: usize,
+    pub router: RouterPolicy,
+    /// Offline rebalance / census refresh cadence (seconds) — the tick at
+    /// which the cluster re-places shared offline work in simulation.
+    pub rebalance_interval_s: f64,
+    /// Graceful-drain deadline on shutdown (seconds): in-flight requests
+    /// keep executing this long before being failed.
+    pub drain_s: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            router: RouterPolicy::SloHeadroom,
+            rebalance_interval_s: 1.0,
+            drain_s: 5.0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<ClusterConfig> {
+        let d = ClusterConfig::default();
+        let router = match j.get("router").as_str() {
+            Some(name) => RouterPolicy::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown router '{name}'"))?,
+            None => d.router,
+        };
+        // Present-but-invalid values must error, not silently fall back
+        // to defaults (an operator expecting 8 replicas must not get 1).
+        let num_field = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match j.get(key) {
+                Json::Null => Ok(default),
+                v => v.as_f64().ok_or_else(|| anyhow::anyhow!("{key} must be a number")),
+            }
+        };
+        let replicas = match j.get("replicas") {
+            Json::Null => d.replicas,
+            v => v
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("replicas must be a positive integer"))?
+                as usize,
+        };
+        anyhow::ensure!(replicas >= 1, "cluster needs at least one replica");
+        let rebalance_interval_s = num_field("rebalance_interval_s", d.rebalance_interval_s)?;
+        anyhow::ensure!(
+            rebalance_interval_s.is_finite() && rebalance_interval_s > 0.0,
+            "rebalance_interval_s must be a positive number"
+        );
+        // Duration::from_secs_f64 panics on negative/NaN input — reject
+        // bad values here instead of at server startup.
+        let drain_s = num_field("drain_s", d.drain_s)?;
+        anyhow::ensure!(
+            drain_s.is_finite() && drain_s >= 0.0,
+            "drain_s must be a non-negative number"
+        );
+        Ok(ClusterConfig { replicas, router, rebalance_interval_s, drain_s })
+    }
+
+    pub fn to_json_pairs(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("replicas", Json::from(self.replicas)),
+            ("router", Json::from(self.router.name())),
+            ("rebalance_interval_s", Json::from(self.rebalance_interval_s)),
+            ("drain_s", Json::from(self.drain_s)),
+        ]
+    }
+}
 
 /// Configuration of a real serving instance (`hygen serve`).
 #[derive(Debug, Clone)]
@@ -19,6 +95,9 @@ pub struct ServeConfig {
     pub policy: OfflinePolicy,
     pub http_workers: usize,
     pub seed: u64,
+    /// Multi-replica deployment shape (replica count, router policy,
+    /// rebalance cadence, drain deadline).
+    pub cluster: ClusterConfig,
 }
 
 impl Default for ServeConfig {
@@ -30,6 +109,7 @@ impl Default for ServeConfig {
             policy: OfflinePolicy::Psm,
             http_workers: 4,
             seed: 0,
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -52,6 +132,7 @@ impl ServeConfig {
             policy,
             http_workers: j.get("http_workers").as_u64().unwrap_or(4) as usize,
             seed: j.get("seed").as_u64().unwrap_or(0),
+            cluster: ClusterConfig::from_json(j)?,
         })
     }
 
@@ -69,6 +150,7 @@ impl ServeConfig {
             ("http_workers", Json::from(self.http_workers)),
             ("seed", Json::from(self.seed)),
         ];
+        pairs.extend(self.cluster.to_json_pairs());
         if let Some(b) = self.latency_budget_ms {
             pairs.push(("latency_budget_ms", Json::from(b)));
         }
@@ -90,6 +172,7 @@ mod tests {
         assert_eq!(c2.bind, c.bind);
         assert_eq!(c2.policy, c.policy);
         assert_eq!(c2.latency_budget_ms, None);
+        assert_eq!(c2.cluster, c.cluster);
     }
 
     #[test]
@@ -104,6 +187,41 @@ mod tests {
     #[test]
     fn rejects_unknown_policy() {
         let j = Json::parse(r#"{"policy": "magic"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn parses_cluster_shape() {
+        let j = Json::parse(
+            r#"{"replicas": 4, "router": "jsq", "rebalance_interval_s": 0.5, "drain_s": 2}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.replicas, 4);
+        assert_eq!(c.cluster.router, RouterPolicy::JoinShortestQueue);
+        assert_eq!(c.cluster.rebalance_interval_s, 0.5);
+        assert_eq!(c.cluster.drain_s, 2.0);
+        let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.cluster, c.cluster);
+    }
+
+    #[test]
+    fn rejects_bad_cluster_shape() {
+        let j = Json::parse(r#"{"router": "magic"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"replicas": 0}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"drain_s": -1}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err(), "negative drain must not panic later");
+        let j = Json::parse(r#"{"rebalance_interval_s": 0}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        // Present-but-mistyped values error instead of silently falling
+        // back to the defaults.
+        let j = Json::parse(r#"{"replicas": "8"}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"replicas": -4}"#).unwrap();
+        assert!(ServeConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"drain_s": "soon"}"#).unwrap();
         assert!(ServeConfig::from_json(&j).is_err());
     }
 }

@@ -18,8 +18,10 @@ use crate::util::stats::{Summary, WindowSeries};
 #[derive(Debug, Clone, PartialEq)]
 pub struct Report {
     pub mean_ttft_ms: f64,
+    pub p50_ttft_ms: f64,
     pub p99_ttft_ms: f64,
     pub mean_tbt_ms: f64,
+    pub p50_tbt_ms: f64,
     pub p99_tbt_ms: f64,
     pub online_finished: usize,
     pub offline_finished: usize,
@@ -49,8 +51,10 @@ impl Report {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("mean_ttft_ms", self.mean_ttft_ms.into()),
+            ("p50_ttft_ms", self.p50_ttft_ms.into()),
             ("p99_ttft_ms", self.p99_ttft_ms.into()),
             ("mean_tbt_ms", self.mean_tbt_ms.into()),
+            ("p50_tbt_ms", self.p50_tbt_ms.into()),
             ("p99_tbt_ms", self.p99_tbt_ms.into()),
             ("online_finished", self.online_finished.into()),
             ("offline_finished", self.offline_finished.into()),
@@ -213,6 +217,22 @@ impl Metrics {
         }
     }
 
+    /// Merge another collector's latency samples and counters into this
+    /// one — cluster-wide aggregation over per-replica collectors. The
+    /// merged percentiles are exact (sample-by-sample via
+    /// [`Summary::merge`], no full sort), not an average of averages.
+    /// Temporal series and the per-request slab are *not* merged (they
+    /// are replica-local views).
+    pub fn absorb(&mut self, other: &Metrics) {
+        self.ttft.merge(&other.ttft);
+        self.tbt.merge(&other.tbt);
+        self.online_tokens += other.online_tokens;
+        self.offline_tokens += other.offline_tokens;
+        self.online_finished += other.online_finished;
+        self.offline_finished += other.offline_finished;
+        self.end_time = self.end_time.max(other.end_time);
+    }
+
     pub fn online_token_count(&self) -> u64 {
         self.online_tokens
     }
@@ -227,8 +247,10 @@ impl Metrics {
         let d = duration_s.unwrap_or(self.end_time).max(1e-9);
         Report {
             mean_ttft_ms: self.ttft.mean(),
+            p50_ttft_ms: self.ttft.p50(),
             p99_ttft_ms: self.ttft.p99(),
             mean_tbt_ms: self.tbt.mean(),
+            p50_tbt_ms: self.tbt.p50(),
             p99_tbt_ms: self.tbt.p99(),
             online_finished: self.online_finished,
             offline_finished: self.offline_finished,
@@ -350,6 +372,33 @@ mod tests {
         let r = m.report(Some(1.0));
         assert_eq!(r.online_finished, 2, "double-finish must not double-count");
         assert_eq!(m.online_token_count(), 2, "post-finish token dropped");
+    }
+
+    #[test]
+    fn absorb_merges_samples_and_counters() {
+        let mut a = Metrics::new(1.0);
+        a.on_arrival(1, Class::Online, 0.0);
+        a.on_tokens(1, 0.010, 1);
+        a.on_tokens(1, 0.030, 1);
+        a.on_finish(1, 0.030);
+        let mut b = Metrics::new(1.0);
+        b.on_arrival(1, Class::Online, 0.0);
+        b.on_tokens(1, 0.050, 1);
+        b.on_arrival(2, Class::Offline, 0.0);
+        b.on_tokens(2, 0.5, 3);
+        b.on_finish(2, 0.5);
+        let mut agg = Metrics::new(1.0);
+        agg.absorb(&a);
+        agg.absorb(&b);
+        let r = agg.report(Some(1.0));
+        assert_eq!(r.online_finished, 1);
+        assert_eq!(r.offline_finished, 1);
+        // TTFT samples 10 ms and 50 ms: exact merged mean/median, not an
+        // average of per-replica aggregates.
+        assert!((r.mean_ttft_ms - 30.0).abs() < 1e-9);
+        assert!((r.p50_ttft_ms - 30.0).abs() < 1e-9);
+        assert!((r.online_tps - 3.0).abs() < 1e-9);
+        assert!((r.offline_tps - 3.0).abs() < 1e-9);
     }
 
     #[test]

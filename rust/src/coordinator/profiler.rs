@@ -149,8 +149,10 @@ mod tests {
     fn fake_eval(budget: f64) -> Report {
         Report {
             mean_ttft_ms: 0.0,
+            p50_ttft_ms: 0.0,
             p99_ttft_ms: 0.0,
             mean_tbt_ms: 10.0 + 0.5 * budget,
+            p50_tbt_ms: 0.0,
             p99_tbt_ms: 0.0,
             online_finished: 1,
             offline_finished: 1,

@@ -1,0 +1,297 @@
+//! `hygen cluster-sim` — measure the cluster routing policies on the
+//! calibrated mixed trace (Azure-shaped online arrivals + an arXiv
+//! offline backlog, the `bench-replay` recipe) against 1/2/4/8
+//! sim-backend replicas, writing `artifacts/cluster_compare.csv`.
+//!
+//! Per (policy, replica-count) cell the CSV reports total/online/offline
+//! throughput, online p50/p99 TTFT and TBT (cluster-wide, merged
+//! sample-by-sample), offline starvation age, and per-replica utilization
+//! imbalance — so the policy comparison is measured, not asserted. Cells
+//! are independent seeded jobs on `jobs` worker threads with
+//! order-preserving collection: the CSV is byte-identical for any job
+//! count and bit-reproducible for a fixed seed (CI compares two runs).
+
+use super::{f1, f2, Table};
+use crate::baselines::SimSetup;
+use crate::cluster::router::RouterPolicy;
+use crate::cluster::sim::{ClusterRunResult, ClusterSim};
+use crate::coordinator::queues::OfflinePolicy;
+use crate::coordinator::scheduler::SchedulerConfig;
+use crate::engine::Engine;
+use crate::sim::costmodel::CostModel;
+use crate::sim::SimBackend;
+use crate::util::parallel::{job, run_jobs, Job};
+use crate::workload::azure::{self, AzureTraceConfig};
+use crate::workload::datasets::{self, Dataset};
+use crate::workload::trace::Trace;
+
+/// Grid + workload shape; see [`ClusterSimConfig::full`] and
+/// [`ClusterSimConfig::quick`].
+#[derive(Debug, Clone)]
+pub struct ClusterSimConfig {
+    pub replica_counts: Vec<usize>,
+    pub policies: Vec<RouterPolicy>,
+    /// Online arrival rate of the *cluster-wide* Azure-shaped stream
+    /// (per-replica load is `online_qps / replicas`).
+    pub online_qps: f64,
+    /// Online trace span (s); the offline backlog arrives at t = 0.
+    pub trace_s: f64,
+    pub offline_n: usize,
+    /// Per-iteration latency budget every replica schedules under.
+    pub latency_budget_ms: f64,
+    pub rebalance_interval_s: f64,
+    /// Hard stop for overloaded shapes (a 1-replica cell under the full
+    /// online stream may never catch up).
+    pub max_clock_s: f64,
+    pub seed: u64,
+    /// Worker threads for the cell grid (order-preserving collection —
+    /// any value yields byte-identical CSVs).
+    pub jobs: usize,
+}
+
+impl ClusterSimConfig {
+    /// The tracked-artifact shape (1/2/4/8 replicas, all policies).
+    pub fn full() -> ClusterSimConfig {
+        ClusterSimConfig {
+            replica_counts: vec![1, 2, 4, 8],
+            policies: RouterPolicy::ALL.to_vec(),
+            online_qps: 8.0,
+            trace_s: 300.0,
+            offline_n: 1600,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 1.0,
+            max_clock_s: 1200.0,
+            seed: 0,
+            jobs: super::default_jobs(),
+        }
+    }
+
+    /// CI smoke shape: same pipeline, seconds of wallclock.
+    pub fn quick() -> ClusterSimConfig {
+        ClusterSimConfig {
+            replica_counts: vec![1, 2, 4],
+            policies: RouterPolicy::ALL.to_vec(),
+            online_qps: 4.0,
+            trace_s: 40.0,
+            offline_n: 160,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 0.5,
+            max_clock_s: 240.0,
+            seed: 0,
+            jobs: super::default_jobs(),
+        }
+    }
+}
+
+/// One grid cell's measurement.
+pub struct CellOutcome {
+    pub policy: RouterPolicy,
+    pub replicas: usize,
+    pub result: ClusterRunResult,
+}
+
+/// The calibrated mixed trace (the `bench-replay` recipe at cluster
+/// scale): Azure online arrivals + a t=0 arXiv offline backlog.
+pub fn mixed_trace(cfg: &ClusterSimConfig) -> Trace {
+    let online = azure::generate(
+        &AzureTraceConfig {
+            duration_s: cfg.trace_s,
+            mean_qps: cfg.online_qps,
+            ..Default::default()
+        },
+        cfg.seed,
+    );
+    let offline = datasets::generate(Dataset::ArxivSummarization, cfg.offline_n, cfg.seed);
+    online.merged(offline)
+}
+
+fn build_engines(cfg: &ClusterSimConfig, n: usize) -> Vec<Engine<SimBackend>> {
+    (0..n)
+        .map(|i| {
+            // Seed predictor (the bench measures routing, not prediction
+            // quality, and must start instantly); per-replica backend
+            // jitter seeds are stable across cells so policy columns stay
+            // comparable.
+            let setup = SimSetup::with_seed_predictor(CostModel::a100_llama7b())
+                .with_policy(OfflinePolicy::Psm)
+                .with_seed(cfg.seed + i as u64);
+            let mut engine = setup.build_with_config(SchedulerConfig {
+                latency_budget_ms: Some(cfg.latency_budget_ms),
+                ..SchedulerConfig::default()
+            });
+            engine.state.keep_finished = false;
+            engine
+        })
+        .collect()
+}
+
+/// Run the whole (policy × replica-count) grid. Cells execute as
+/// independent seeded jobs; results come back in grid order.
+pub fn run_grid(cfg: &ClusterSimConfig) -> anyhow::Result<Vec<CellOutcome>> {
+    let cells: Vec<(RouterPolicy, usize)> = cfg
+        .policies
+        .iter()
+        .flat_map(|&p| cfg.replica_counts.iter().map(move |&n| (p, n)))
+        .collect();
+    // One trace, shared read-only by every cell — it depends on cfg only,
+    // not on (policy, replicas).
+    let trace = mixed_trace(cfg);
+    let trace_ref = &trace;
+    let jobs: Vec<Job<'_, anyhow::Result<ClusterRunResult>>> = cells
+        .iter()
+        .map(|&(policy, n)| {
+            job(move || {
+                let engines = build_engines(cfg, n);
+                let mut sim = ClusterSim::new(engines, policy.build(), cfg.rebalance_interval_s);
+                sim.run(trace_ref, cfg.max_clock_s)
+            })
+        })
+        .collect();
+    let results = run_jobs(cfg.jobs.max(1), jobs);
+    let mut outcomes = Vec::with_capacity(cells.len());
+    for (&(policy, replicas), result) in cells.iter().zip(results) {
+        outcomes.push(CellOutcome { policy, replicas, result: result? });
+    }
+    Ok(outcomes)
+}
+
+/// Render the grid as the `cluster_compare` table.
+pub fn table(outcomes: &[CellOutcome]) -> Table {
+    let mut t = Table::new(
+        "cluster_compare",
+        &[
+            "policy",
+            "replicas",
+            "total_tps",
+            "online_tps",
+            "offline_tps",
+            "p50_ttft_ms",
+            "p99_ttft_ms",
+            "p50_tbt_ms",
+            "p99_tbt_ms",
+            "online_finished",
+            "offline_finished",
+            "starvation_age_s",
+            "util_imbalance",
+            "duration_s",
+        ],
+    );
+    for o in outcomes {
+        let a = &o.result.aggregate;
+        t.row(vec![
+            o.policy.name().into(),
+            format!("{}", o.replicas),
+            f1(a.total_tps),
+            f1(a.online_tps),
+            f1(a.offline_tps),
+            f2(a.p50_ttft_ms),
+            f2(a.p99_ttft_ms),
+            f2(a.p50_tbt_ms),
+            f2(a.p99_tbt_ms),
+            format!("{}", a.online_finished),
+            format!("{}", a.offline_finished),
+            f2(o.result.offline_starvation_age_s),
+            f2(o.result.util_imbalance),
+            f1(o.result.duration_s),
+        ]);
+    }
+    t
+}
+
+/// The measured acceptance gate (`cluster-sim --check`): at `replicas_at`
+/// replicas, SLO-headroom routing must match or beat round-robin on total
+/// throughput while keeping online p99 TBT within `tbt_slo_ms`.
+pub fn check_slo_headroom_wins(
+    outcomes: &[CellOutcome],
+    replicas_at: usize,
+    tbt_slo_ms: f64,
+) -> anyhow::Result<()> {
+    let find = |p: RouterPolicy| {
+        outcomes.iter().find(|o| o.policy == p && o.replicas == replicas_at)
+    };
+    let (slo, rr) = match (find(RouterPolicy::SloHeadroom), find(RouterPolicy::RoundRobin)) {
+        (Some(s), Some(r)) => (s, r),
+        _ => anyhow::bail!(
+            "grid lacks the {replicas_at}-replica slo-headroom/round-robin cells"
+        ),
+    };
+    anyhow::ensure!(
+        slo.result.aggregate.total_tps >= rr.result.aggregate.total_tps,
+        "slo-headroom total throughput {:.1} tok/s < round-robin {:.1} at {} replicas",
+        slo.result.aggregate.total_tps,
+        rr.result.aggregate.total_tps,
+        replicas_at
+    );
+    anyhow::ensure!(
+        slo.result.aggregate.p99_tbt_ms <= tbt_slo_ms,
+        "slo-headroom online p99 TBT {:.2} ms exceeds the {tbt_slo_ms:.2} ms SLO",
+        slo.result.aggregate.p99_tbt_ms
+    );
+    Ok(())
+}
+
+/// Run the grid, print the table, and write `<out_dir>/cluster_compare.csv`.
+pub fn run_and_save(cfg: &ClusterSimConfig, out_dir: &str) -> anyhow::Result<Vec<CellOutcome>> {
+    let outcomes = run_grid(cfg)?;
+    let t = table(&outcomes);
+    t.print();
+    t.save_to(out_dir)?;
+    println!("-> {out_dir}/cluster_compare.csv");
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ClusterSimConfig {
+        ClusterSimConfig {
+            replica_counts: vec![1, 2],
+            policies: vec![RouterPolicy::RoundRobin, RouterPolicy::SloHeadroom],
+            online_qps: 2.0,
+            trace_s: 8.0,
+            offline_n: 20,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 0.5,
+            max_clock_s: 120.0,
+            seed: 3,
+            jobs: 1,
+        }
+    }
+
+    #[test]
+    fn grid_covers_every_cell_in_order() {
+        let cfg = tiny();
+        let outcomes = run_grid(&cfg).unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert_eq!(outcomes[0].policy, RouterPolicy::RoundRobin);
+        assert_eq!(outcomes[0].replicas, 1);
+        assert_eq!(outcomes[3].policy, RouterPolicy::SloHeadroom);
+        assert_eq!(outcomes[3].replicas, 2);
+        for o in &outcomes {
+            assert!(o.result.aggregate.online_finished > 0, "{}", o.policy.name());
+        }
+        let t = table(&outcomes);
+        assert_eq!(t.rows.len(), 4);
+    }
+
+    #[test]
+    fn csv_is_jobs_invariant_and_seed_deterministic() {
+        let cfg = tiny();
+        let serial = table(&run_grid(&cfg).unwrap()).to_csv();
+        let again = table(&run_grid(&cfg).unwrap()).to_csv();
+        assert_eq!(serial, again, "same seed, same CSV");
+        let parallel = table(&run_grid(&ClusterSimConfig { jobs: 2, ..cfg }).unwrap()).to_csv();
+        assert_eq!(serial, parallel, "CSV bytes must not depend on jobs");
+    }
+
+    #[test]
+    fn check_gate_reads_the_grid() {
+        let cfg = tiny();
+        let outcomes = run_grid(&cfg).unwrap();
+        // The gate must at least resolve both cells at 2 replicas; the
+        // full-shape throughput claim is checked by `cluster-sim --check`.
+        let err = check_slo_headroom_wins(&outcomes, 8, 80.0).unwrap_err();
+        assert!(err.to_string().contains("8-replica"));
+    }
+}

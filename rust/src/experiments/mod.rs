@@ -6,10 +6,13 @@
 //! [`bench_sched`] is the scheduling-overhead micro-bench behind
 //! `hygen bench-sched` (writes `BENCH_sched.json`); [`bench_replay`] is
 //! the end-to-end replay-throughput bench behind `hygen bench-replay`
-//! (writes `BENCH_e2e.json`).
+//! (writes `BENCH_e2e.json`); [`cluster_sim`] measures the multi-replica
+//! routing policies behind `hygen cluster-sim`
+//! (writes `artifacts/cluster_compare.csv`).
 
 pub mod bench_replay;
 pub mod bench_sched;
+pub mod cluster_sim;
 pub mod figures;
 
 use crate::baselines::{SimSetup, System};
@@ -130,8 +133,14 @@ impl Table {
     }
 
     pub fn save(&self, ctx: &Ctx) -> std::io::Result<()> {
-        std::fs::create_dir_all(&ctx.out_dir)?;
-        let path = format!("{}/{}.csv", ctx.out_dir, self.name);
+        self.save_to(&ctx.out_dir)
+    }
+
+    /// Write `<dir>/<name>.csv` (creating `dir`) — for harnesses whose
+    /// output directory is not a figure `Ctx` (e.g. `cluster-sim`).
+    pub fn save_to(&self, dir: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.csv", self.name);
         std::fs::write(path, self.to_csv())
     }
 }
@@ -229,8 +238,10 @@ pub fn hygen_star_profiled(
 fn empty_report() -> Report {
     Report {
         mean_ttft_ms: f64::INFINITY,
+        p50_ttft_ms: f64::INFINITY,
         p99_ttft_ms: f64::INFINITY,
         mean_tbt_ms: f64::INFINITY,
+        p50_tbt_ms: f64::INFINITY,
         p99_tbt_ms: f64::INFINITY,
         online_finished: 0,
         offline_finished: 0,

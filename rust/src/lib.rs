@@ -24,12 +24,20 @@
 //! evaluation at A100/A40/A5000 scale (see DESIGN.md for the substitution
 //! table).
 //!
+//! Above the single engine sits the [`cluster`] layer: N replicas behind
+//! a routing policy (round-robin / join-shortest-queue / SLO-headroom)
+//! with elastic placement of the shared offline backlog — `hygen serve
+//! --replicas N --router <policy>` for the threaded front end and
+//! `hygen cluster-sim` for the deterministic policy comparison.
+//!
 //! Entry points: the `hygen` binary (`serve`, `run-trace`, `figures`
 //! — with `-j` parallel experiment execution —, `profile`,
-//! `train-predictor`, `bench-sched`, `bench-replay` subcommands), the
-//! `examples/`, and the bench targets under `rust/benches/`.
+//! `train-predictor`, `bench-sched`, `bench-replay`, `cluster-sim`
+//! subcommands), the `examples/`, and the bench targets under
+//! `rust/benches/`.
 
 pub mod baselines;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

@@ -9,8 +9,11 @@
 //! * `gen-trace`        — emit a synthetic trace CSV (azure | mooncake | datasets)
 //! * `bench-sched`      — scheduling-overhead micro-bench; writes BENCH_sched.json
 //! * `bench-replay`     — end-to-end replay throughput bench; writes BENCH_e2e.json
+//! * `cluster-sim`      — multi-replica router comparison; writes
+//!   artifacts/cluster_compare.csv
 
 use hygen::baselines::{SimSetup, System};
+use hygen::cluster::router::RouterPolicy;
 use hygen::config::ServeConfig;
 use hygen::coordinator::predictor::LatencyPredictor;
 use hygen::coordinator::queues::OfflinePolicy;
@@ -33,6 +36,8 @@ hygen — elastic online/offline LLM request co-location (HyGen reproduction)
 USAGE:
   hygen serve        [--config serve.json] [--bind ADDR] [--budget-ms N]
                      [--policy fcfs|psm|psm-fair] [--artifacts DIR]
+                     [--replicas N] [--router round-robin|jsq|slo-headroom]
+                     [--drain-s N]
                      (requires a build with `--features pjrt` + `make artifacts`)
   hygen run-trace    [--system hygen|hygen-star|sarathi|sarathi++|sarathi-offline]
                      [--model NAME] [--online-qps N] [--offline-dataset arxiv|cnn|mmlu]
@@ -55,6 +60,13 @@ USAGE:
                      (end-to-end mixed-trace replay at several scales +
                      the zero-allocation steady-decode probe; writes
                      BENCH_e2e.json and fails on regression ratios)
+  hygen cluster-sim  [--out DIR] [--quick] [--seed N] [-j/--jobs N]
+                     [--replicas 1,2,4,8] [--check] [--tbt-slo-ms N]
+                     (replay the calibrated mixed trace against N
+                     sim-backend replicas per router policy; writes
+                     artifacts/cluster_compare.csv, byte-identical for a
+                     fixed seed; --check enforces the slo-headroom-vs-
+                     round-robin gate at 4 replicas)
 
 MODELS: a100-llama2-7b (default), a40-qwen-14b, a40x4-yi-34b-tp2pp2,
         a100-mistral-7b, a5000-sheared-2.7b
@@ -77,6 +89,7 @@ fn main() {
         Some("gen-trace") => cmd_gen_trace(&args),
         Some("bench-sched") => cmd_bench_sched(&args),
         Some("bench-replay") => cmd_bench_replay(&args),
+        Some("cluster-sim") => cmd_cluster_sim(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -124,30 +137,63 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if args.get("policy").is_some() {
         cfg.policy = parse_policy(args)?;
     }
+    // Topology flags error on bad input instead of silently keeping the
+    // default (same contract as the config-file path).
+    if let Some(v) = args.get("replicas") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--replicas expects a positive integer, got '{v}'"))?;
+        anyhow::ensure!(n >= 1, "cluster needs at least one replica");
+        cfg.cluster.replicas = n;
+    }
+    if let Some(name) = args.get("router") {
+        cfg.cluster.router = RouterPolicy::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown router '{name}'; see --help"))?;
+    }
+    if let Some(v) = args.get("drain-s") {
+        let s: f64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--drain-s expects a number of seconds, got '{v}'"))?;
+        anyhow::ensure!(s.is_finite() && s >= 0.0, "--drain-s must be non-negative");
+        cfg.cluster.drain_s = s;
+    }
     println!("loading artifacts from {} ...", cfg.artifacts_dir);
     let server = {
-        let cfg = cfg.clone();
-        Server::start(
-            &cfg.bind.clone(),
-            move || {
-                let engine = build_real_engine(
-                    &cfg.artifacts_dir,
-                    cfg.latency_budget_ms,
-                    cfg.policy,
-                    cfg.seed,
-                )?;
-                println!(
-                    "engine ready: {} slots, max chunk {}, max request len {}",
-                    engine.backend.nslots(),
-                    engine.backend.max_chunk(),
-                    engine.backend.max_request_len()
-                );
-                Ok(engine)
-            },
+        let factories: Vec<_> = (0..cfg.cluster.replicas)
+            .map(|i| {
+                let cfg = cfg.clone();
+                move || -> anyhow::Result<_> {
+                    let engine = build_real_engine(
+                        &cfg.artifacts_dir,
+                        cfg.latency_budget_ms,
+                        cfg.policy,
+                        cfg.seed + i as u64,
+                    )?;
+                    println!(
+                        "replica {i} ready: {} slots, max chunk {}, max request len {}",
+                        engine.backend.nslots(),
+                        engine.backend.max_chunk(),
+                        engine.backend.max_request_len()
+                    );
+                    Ok(engine)
+                }
+            })
+            .collect();
+        Server::start_cluster(
+            &cfg.bind,
+            factories,
+            cfg.cluster.router.build(),
             cfg.http_workers,
+            std::time::Duration::from_secs_f64(cfg.cluster.drain_s),
         )?
     };
-    println!("hygen serving on http://{}  (POST /v1/completions, GET /metrics)", server.addr);
+    println!(
+        "hygen serving on http://{} with {} replica(s), router {}  \
+         (POST /v1/completions, GET /metrics)",
+        server.addr,
+        server.replicas,
+        cfg.cluster.router.name()
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -292,6 +338,46 @@ fn cmd_bench_replay(args: &Args) -> anyhow::Result<()> {
     // Both regression gates (linear replay cost across scales; zero-alloc
     // steady decode — live here because this binary registers `ALLOC`).
     bench_replay::check_gates(&outcome)
+}
+
+fn cmd_cluster_sim(args: &Args) -> anyhow::Result<()> {
+    use hygen::experiments::cluster_sim::{self, ClusterSimConfig};
+    let mut cfg =
+        if args.get_bool("quick") { ClusterSimConfig::quick() } else { ClusterSimConfig::full() };
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.jobs = args.get_usize_alias("jobs", "j", cfg.jobs).max(1);
+    if let Some(list) = args.get("replicas") {
+        cfg.replica_counts = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|_| anyhow::anyhow!("--replicas expects a comma list like 1,2,4,8"))?;
+        anyhow::ensure!(
+            cfg.replica_counts.iter().all(|&n| n >= 1),
+            "replica counts must be >= 1"
+        );
+    }
+    let out_dir = args.get_or("out", "artifacts");
+    let outcomes = cluster_sim::run_and_save(&cfg, out_dir)?;
+    if args.get_bool("check") {
+        // The measured acceptance gate: SLO-headroom routing must match
+        // or beat round-robin on total throughput at 4 replicas (or the
+        // largest count actually in the grid) while keeping online p99
+        // TBT within the configured SLO scale (default: 2x the
+        // per-iteration latency budget).
+        let at = if cfg.replica_counts.contains(&4) {
+            4
+        } else {
+            cfg.replica_counts.iter().copied().max().unwrap_or(1)
+        };
+        let tbt_slo = args.get_f64("tbt-slo-ms", cfg.latency_budget_ms * 2.0);
+        cluster_sim::check_slo_headroom_wins(&outcomes, at, tbt_slo)?;
+        println!(
+            "check passed: slo-headroom >= round-robin at {at} replicas \
+             (p99 TBT within {tbt_slo:.0} ms)"
+        );
+    }
+    Ok(())
 }
 
 fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {

@@ -1,129 +1,152 @@
-//! HTTP serving front end: the leader process of a HyGen instance.
+//! HTTP serving front end: the leader process of a HyGen deployment.
 //!
-//! Architecture (the paper's Fig. 2, one instance): connection handling on
-//! a thread pool; a single *engine thread* owning the scheduler, queues,
-//! and backend; `std::sync::mpsc` message queues between them — the same
-//! message-passing structure as the paper's asynchronous two-queue
-//! workflow (Appendix A.1).
+//! Architecture (the paper's Fig. 2, generalized to N replicas):
+//! connection handling on a thread pool; one *engine thread per replica*
+//! owning that replica's scheduler, queues, and backend
+//! ([`crate::cluster::replica`]); `std::sync::mpsc` message queues
+//! between them — the same message-passing structure as the paper's
+//! asynchronous two-queue workflow (Appendix A.1). A
+//! [`Router`](crate::cluster::router::Router) picks the replica for every
+//! submission from the replicas' published census snapshots.
 //!
 //! API:
 //! * `POST /v1/completions` `{"prompt": str, "max_tokens": n,
 //!   "class": "online"|"offline"}` → `{"text", "tokens", "latency_ms", ...}`
-//! * `GET /metrics` → aggregate serving report (JSON)
+//! * `GET /metrics` → serving report (JSON). Single replica: the flat
+//!   per-engine report. Multi-replica: `{"replicas": [...], "aggregate"}`
+//!   where additive fields are summed and latency percentiles take the
+//!   worst replica (the cluster meets an SLO only if its slowest replica
+//!   does).
 //! * `GET /health` → `{"status":"ok"}`
+//!
+//! Shutdown drains: accepted requests keep executing until they finish or
+//! the drain deadline passes (then they fail with 503), instead of being
+//! dropped mid-flight.
 
 pub mod http;
 
-use crate::coordinator::request::{Class, Request, RequestId};
+use crate::cluster::replica::{Job, Replica, ReplicaShared};
+use crate::cluster::router::{Router, RouterPolicy};
+use crate::coordinator::request::Class;
 use crate::engine::{Engine, ExecutionBackend};
 use crate::runtime::tokenizer;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use http::{read_request, write_response};
-use std::collections::HashMap;
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// A submission travelling from a connection handler to the engine thread.
-struct Job {
-    prompt: Vec<u32>,
-    max_tokens: usize,
-    class: Class,
-    reply: Sender<Completion>,
+pub use crate::cluster::replica::Completion;
+
+/// Default graceful-drain deadline on shutdown.
+pub const DEFAULT_DRAIN: Duration = Duration::from_secs(5);
+
+/// Shared front-end state: the replica ports and the routing policy.
+struct ClusterState {
+    replicas: Vec<ReplicaPort>,
+    router: Mutex<Box<dyn Router>>,
 }
 
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub id: RequestId,
-    pub text: String,
-    pub tokens: Vec<u32>,
-    /// Negative = the request failed (backend error); see
-    /// [`Completion::failed`].
-    pub latency_ms: f64,
+struct ReplicaPort {
+    tx: Sender<Job>,
+    shared: Arc<ReplicaShared>,
 }
 
-impl Completion {
-    /// Error marker sent when the execution backend failed.
-    fn failed() -> Completion {
-        Completion { id: 0, text: String::new(), tokens: vec![], latency_ms: -1.0 }
+impl ClusterState {
+    fn all_failed(&self) -> bool {
+        self.replicas.iter().all(|r| r.shared.failed.load(Ordering::SeqCst))
     }
-
-    fn is_failed(&self) -> bool {
-        self.latency_ms < 0.0
-    }
-}
-
-/// Shared server state published by the engine thread.
-#[derive(Default)]
-struct Shared {
-    metrics_json: Mutex<String>,
-    /// Set by the engine thread after a persistent backend failure: the
-    /// engine aborted its work and new completions are refused with 503
-    /// (health/metrics stay up for observability).
-    engine_failed: AtomicBool,
 }
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
+    /// Engine replicas behind this server.
+    pub replicas: usize,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    engine_thread: Option<std::thread::JoinHandle<()>>,
+    replica_handles: Vec<Replica>,
 }
 
 impl Server {
-    /// Start serving on `bind`. The engine is *constructed on* a dedicated
-    /// engine thread by `factory` — PJRT handles are not `Send`, so they
-    /// must never cross threads; handlers talk to the engine thread via a
-    /// message queue only.
+    /// Start a classic single-engine server (round-robin over one
+    /// replica). The engine is *constructed on* a dedicated engine thread
+    /// by `factory` — PJRT handles are not `Send`, so they must never
+    /// cross threads; handlers talk to the engine thread via a message
+    /// queue only.
     pub fn start<B, F>(bind: &str, factory: F, workers: usize) -> anyhow::Result<Server>
     where
         B: ExecutionBackend + 'static,
         F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
     {
+        Self::start_cluster(
+            bind,
+            vec![factory],
+            RouterPolicy::RoundRobin.build(),
+            workers,
+            DEFAULT_DRAIN,
+        )
+    }
+
+    /// Start serving with one engine thread per factory and `router`
+    /// deciding which replica serves each submission.
+    pub fn start_cluster<B, F>(
+        bind: &str,
+        factories: Vec<F>,
+        router: Box<dyn Router>,
+        workers: usize,
+        drain: Duration,
+    ) -> anyhow::Result<Server>
+    where
+        B: ExecutionBackend + 'static,
+        F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+    {
+        anyhow::ensure!(!factories.is_empty(), "server needs at least one replica");
         let listener = TcpListener::bind(bind)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
-        let shared = Arc::new(Shared::default());
-        let (tx, rx) = channel::<Job>();
 
-        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
-        let engine_thread = {
-            let stop = Arc::clone(&stop);
-            let shared = Arc::clone(&shared);
-            std::thread::Builder::new().name("hygen-engine".into()).spawn(move || {
-                let engine = match factory() {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
+        let mut replica_handles = Vec::with_capacity(factories.len());
+        for (i, factory) in factories.into_iter().enumerate() {
+            let spawned = Replica::spawn(
+                format!("hygen-engine-{i}"),
+                factory,
+                Arc::clone(&stop),
+                drain,
+            );
+            match spawned {
+                Ok(r) => replica_handles.push(r),
+                Err(e) => {
+                    // Tear down the replicas that did start.
+                    stop.store(true, Ordering::SeqCst);
+                    for r in &mut replica_handles {
+                        r.join();
                     }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                engine_loop(engine, rx, stop, shared)
-            })?
-        };
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+                    return Err(e.context(format!("replica {i} failed to start")));
+                }
+            }
+        }
+        let state = Arc::new(ClusterState {
+            replicas: replica_handles
+                .iter()
+                .map(|r| ReplicaPort { tx: r.tx.clone(), shared: Arc::clone(&r.shared) })
+                .collect(),
+            router: Mutex::new(router),
+        });
 
         let accept_thread = {
             let stop = Arc::clone(&stop);
-            let shared = Arc::clone(&shared);
             let pool = ThreadPool::new(workers);
             std::thread::Builder::new().name("hygen-accept".into()).spawn(move || {
                 while !stop.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((mut stream, _)) => {
-                            let tx = tx.clone();
-                            let shared = Arc::clone(&shared);
+                            let state = Arc::clone(&state);
                             pool.execute(move || {
-                                let _ = handle_connection(&mut stream, &tx, &shared);
+                                let _ = handle_connection(&mut stream, &state);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -132,11 +155,18 @@ impl Server {
                         Err(_) => break,
                     }
                 }
-                // pool drops here, joining workers
+                // pool drops here, joining workers; the workers' pending
+                // replies are produced by the replica threads' drain.
             })?
         };
 
-        Ok(Server { addr, stop, accept_thread: Some(accept_thread), engine_thread: Some(engine_thread) })
+        Ok(Server {
+            addr,
+            replicas: replica_handles.len(),
+            stop,
+            accept_thread: Some(accept_thread),
+            replica_handles,
+        })
     }
 
     pub fn shutdown(mut self) {
@@ -148,8 +178,8 @@ impl Server {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.engine_thread.take() {
-            let _ = t.join();
+        for r in &mut self.replica_handles {
+            r.join();
         }
     }
 }
@@ -163,89 +193,55 @@ impl Drop for Server {
     }
 }
 
-fn engine_loop<B: ExecutionBackend>(
-    mut engine: Engine<B>,
-    rx: Receiver<Job>,
-    stop: Arc<AtomicBool>,
-    shared: Arc<Shared>,
-) {
-    let start = Instant::now();
-    let mut inflight: HashMap<RequestId, (Sender<Completion>, Instant)> = HashMap::new();
-    engine.state.keep_finished = true;
-    let mut last_publish = Instant::now();
-    while !stop.load(Ordering::SeqCst) {
-        // ingest
-        loop {
-            match rx.try_recv() {
-                Ok(job) => {
-                    if shared.engine_failed.load(Ordering::SeqCst) {
-                        // Backend already declared dead: refuse instead of
-                        // queueing work that can never execute (jobs racing
-                        // the handler's own engine_failed check land here).
-                        let _ = job.reply.send(Completion::failed());
-                        continue;
-                    }
-                    let id = engine.fresh_id();
-                    let now = start.elapsed().as_secs_f64();
-                    let req = Request::new(id, job.class, now, job.prompt.len(), job.max_tokens)
-                        .with_prompt(job.prompt);
-                    inflight.insert(id, (job.reply, Instant::now()));
-                    engine.submit(req);
-                }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return,
-            }
-        }
-        if engine.has_work() {
-            match engine.step() {
-                Err(_) => {
-                    // Execution error: fail all inflight requests AND tear
-                    // the engine's in-flight work down (release blocks,
-                    // empty the queues/running sets). Leaving it intact
-                    // re-schedules the same doomed batch every loop — a
-                    // 100% CPU livelock with no reply channels left to
-                    // observe it.
-                    for (_, (reply, _)) in inflight.drain() {
-                        let _ = reply.send(Completion::failed());
-                    }
-                    engine.abort_all();
-                    shared.engine_failed.store(true, Ordering::SeqCst);
-                }
-                Ok(0) => {
-                    // Work exists but nothing is schedulable right now
-                    // (e.g. a queued prompt waiting on KV memory): back
-                    // off instead of re-running the scheduler at 100% CPU
-                    // until something changes.
-                    std::thread::sleep(Duration::from_millis(1));
-                }
-                Ok(_) => {}
-            }
-            // deliver completions
-            for req in engine.state.finished.drain(..) {
-                if let Some((reply, t0)) = inflight.remove(&req.id) {
-                    let _ = reply.send(Completion {
-                        id: req.id,
-                        text: tokenizer::decode(&req.output_tokens),
-                        tokens: req.output_tokens,
-                        latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                    });
-                }
-            }
-        } else {
-            std::thread::sleep(Duration::from_millis(1));
-        }
-        if last_publish.elapsed() > Duration::from_millis(200) {
-            let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
-            *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
-            last_publish = Instant::now();
-        }
+/// Additive `/metrics` fields summed across replicas; the remaining
+/// latency fields take the per-replica worst (see the module docs).
+const SUM_FIELDS: [&str; 7] = [
+    "online_finished",
+    "offline_finished",
+    "online_tps",
+    "offline_tps",
+    "total_tps",
+    "online_qps",
+    "offline_qps",
+];
+
+/// `/metrics` fields where the aggregate is the worst replica: latency
+/// percentiles/means (an SLO holds cluster-wide only if it holds on the
+/// slowest replica) and the observation window.
+const WORST_FIELDS: [&str; 7] = [
+    "mean_ttft_ms",
+    "p50_ttft_ms",
+    "p99_ttft_ms",
+    "mean_tbt_ms",
+    "p50_tbt_ms",
+    "p99_tbt_ms",
+    "duration_s",
+];
+
+/// Aggregate per-replica report JSONs into the multi-replica `/metrics`
+/// payload.
+fn aggregate_metrics(reports: &[Json]) -> Json {
+    let mut agg: Vec<(&str, Json)> = Vec::new();
+    for field in SUM_FIELDS {
+        let total: f64 = reports.iter().filter_map(|r| r.get(field).as_f64()).sum();
+        agg.push((field, Json::from(total)));
     }
+    for field in WORST_FIELDS {
+        let worst = reports
+            .iter()
+            .filter_map(|r| r.get(field).as_f64())
+            .fold(0.0f64, f64::max);
+        agg.push((field, Json::from(worst)));
+    }
+    Json::obj(vec![
+        ("replicas", Json::Arr(reports.to_vec())),
+        ("aggregate", Json::obj(agg)),
+    ])
 }
 
 fn handle_connection(
     stream: &mut std::net::TcpStream,
-    tx: &Sender<Job>,
-    shared: &Shared,
+    state: &ClusterState,
 ) -> std::io::Result<()> {
     stream.set_nonblocking(false)?;
     stream.set_read_timeout(Some(Duration::from_secs(10)))?;
@@ -256,12 +252,28 @@ fn handle_connection(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => write_response(stream, 200, "application/json", b"{\"status\":\"ok\"}"),
         ("GET", "/metrics") => {
-            let body = shared.metrics_json.lock().unwrap().clone();
-            let body = if body.is_empty() { "{}".to_string() } else { body };
+            let body = if state.replicas.len() == 1 {
+                let body = state.replicas[0].shared.metrics_json.lock().unwrap().clone();
+                if body.is_empty() {
+                    "{}".to_string()
+                } else {
+                    body
+                }
+            } else {
+                let reports: Vec<Json> = state
+                    .replicas
+                    .iter()
+                    .map(|r| {
+                        let text = r.shared.metrics_json.lock().unwrap().clone();
+                        Json::parse(&text).unwrap_or(Json::Obj(Default::default()))
+                    })
+                    .collect();
+                aggregate_metrics(&reports).to_pretty()
+            };
             write_response(stream, 200, "application/json", body.as_bytes())
         }
         ("POST", "/v1/completions") => {
-            if shared.engine_failed.load(Ordering::SeqCst) {
+            if state.all_failed() {
                 return write_response(
                     stream,
                     503,
@@ -281,6 +293,34 @@ fn handle_connection(
                 "offline" => Class::Offline,
                 _ => Class::Online,
             };
+            // Route from the published census snapshots. Offline
+            // submissions need a reply channel too, so a deferring router
+            // falls back to its online placement. A single replica skips
+            // the snapshot copies and the router lock entirely — the
+            // classic one-engine server pays no routing overhead.
+            let target = if state.replicas.len() == 1 {
+                0
+            } else {
+                let snaps: Vec<_> =
+                    state.replicas.iter().map(|r| r.shared.routing_snapshot()).collect();
+                let mut router = state.router.lock().unwrap();
+                let i = match class {
+                    Class::Online => router.route_online(&snaps),
+                    Class::Offline => router
+                        .route_offline(&snaps)
+                        .unwrap_or_else(|| router.route_online(&snaps)),
+                };
+                i.min(state.replicas.len() - 1)
+            };
+            let port = &state.replicas[target];
+            if port.shared.failed.load(Ordering::SeqCst) {
+                return write_response(
+                    stream,
+                    503,
+                    "application/json",
+                    b"{\"error\":\"backend failed\"}",
+                );
+            }
             let (reply_tx, reply_rx) = channel();
             let job = Job {
                 prompt: tokenizer::encode(prompt),
@@ -288,21 +328,43 @@ fn handle_connection(
                 class,
                 reply: reply_tx,
             };
-            if tx.send(job).is_err() {
+            port.shared.note_submitted(class);
+            if port.tx.send(job).is_err() {
+                // The replica thread is gone (panic or exit) without
+                // flagging itself: mark it failed so routers stop
+                // selecting it instead of 503-ing every routed request
+                // while healthy replicas idle.
+                port.shared.failed.store(true, Ordering::SeqCst);
                 return write_response(stream, 503, "application/json", b"{\"error\":\"engine down\"}");
             }
             match reply_rx.recv_timeout(Duration::from_secs(120)) {
-                Ok(c) if !c.is_failed() => {
+                Ok(Ok(c)) => {
                     let body = Json::obj(vec![
                         ("id", c.id.into()),
+                        ("replica", target.into()),
                         ("text", c.text.into()),
                         ("num_tokens", c.tokens.len().into()),
                         ("latency_ms", c.latency_ms.into()),
                     ]);
                     write_response(stream, 200, "application/json", body.to_string().as_bytes())
                 }
-                Ok(_) => write_response(stream, 503, "application/json", b"{\"error\":\"backend failed\"}"),
-                Err(_) => write_response(stream, 500, "application/json", b"{\"error\":\"timeout\"}"),
+                Ok(Err(e)) => {
+                    let body = format!("{{\"error\":\"{}\"}}", e.message());
+                    write_response(stream, 503, "application/json", body.as_bytes())
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // The replica thread exited (shutdown race): that is
+                    // an explicit refusal, not a request timeout.
+                    write_response(
+                        stream,
+                        503,
+                        "application/json",
+                        b"{\"error\":\"server stopping\"}",
+                    )
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    write_response(stream, 500, "application/json", b"{\"error\":\"timeout\"}")
+                }
             }
         }
         ("POST", _) | ("GET", _) => write_response(stream, 404, "application/json", b"{\"error\":\"not found\"}"),
@@ -313,6 +375,7 @@ fn handle_connection(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::replica::JobError;
     use crate::coordinator::batch::Batch;
     use crate::coordinator::predictor::LatencyPredictor;
     use crate::coordinator::queues::OfflinePolicy;
@@ -342,6 +405,15 @@ mod tests {
         }
     }
 
+    fn echo_engine() -> anyhow::Result<Engine<EchoBackend>> {
+        let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+        let sched = HybridScheduler::new(
+            SchedulerConfig { latency_budget_ms: None, ..Default::default() },
+            LatencyPredictor::default_seed(),
+        );
+        Ok(Engine::new(sched, state, EchoBackend))
+    }
+
     fn http(addr: std::net::SocketAddr, raw: &str) -> String {
         let mut s = TcpStream::connect(addr).unwrap();
         s.write_all(raw.as_bytes()).unwrap();
@@ -351,19 +423,16 @@ mod tests {
     }
 
     fn start_echo_server() -> Server {
-        Server::start(
-            "127.0.0.1:0",
-            || {
-                let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
-                let sched = HybridScheduler::new(
-                    SchedulerConfig { latency_budget_ms: None, ..Default::default() },
-                    LatencyPredictor::default_seed(),
-                );
-                Ok(Engine::new(sched, state, EchoBackend))
-            },
-            2,
+        Server::start("127.0.0.1:0", echo_engine, 2).unwrap()
+    }
+
+    fn completions_request_class(prompt: &str, class: &str) -> String {
+        let body = format!(r#"{{"prompt": "{prompt}", "max_tokens": 3, "class": "{class}"}}"#);
+        format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
         )
-        .unwrap()
     }
 
     #[test]
@@ -415,6 +484,130 @@ mod tests {
             assert!(r.contains("200 OK"), "{r}");
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn multi_replica_serves_and_aggregates_metrics() {
+        let server = Server::start_cluster(
+            "127.0.0.1:0",
+            vec![echo_engine, echo_engine, echo_engine],
+            RouterPolicy::RoundRobin.build(),
+            4,
+            DEFAULT_DRAIN,
+        )
+        .unwrap();
+        assert_eq!(server.replicas, 3);
+        let addr = server.addr;
+        let handles: Vec<_> = (0..9)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    http(addr, &completions_request_class(&format!("req{i}"), "online"))
+                })
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap();
+            assert!(r.contains("200 OK"), "{r}");
+            assert!(r.contains("\"replica\":"), "{r}");
+        }
+        // Offline submissions work through the fallback placement too.
+        let r = http(addr, &completions_request_class("zzzz", "offline"));
+        assert!(r.contains("200 OK"), "{r}");
+        // Wait out a publish interval so every replica has a report up.
+        std::thread::sleep(Duration::from_millis(450));
+        let m = http(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(m.contains("200 OK"), "{m}");
+        assert!(m.contains("\"aggregate\""), "{m}");
+        assert!(m.contains("\"replicas\""), "{m}");
+        assert!(m.contains("\"p50_tbt_ms\""), "{m}");
+        server.shutdown();
+    }
+
+    /// Backend that takes real wallclock per step, so in-flight work
+    /// straddles `shutdown()`.
+    struct SlowBackend;
+    impl ExecutionBackend for SlowBackend {
+        fn execute(&mut self, batch: &Batch, state: &mut EngineState) -> anyhow::Result<f64> {
+            std::thread::sleep(Duration::from_millis(3));
+            for e in &batch.entries {
+                let req = state.req_mut(e.id);
+                let emit =
+                    if e.is_prefill { req.prefilled + e.n_tokens >= req.prompt_len } else { true };
+                if emit {
+                    req.output_tokens.push(b'z' as u32);
+                }
+            }
+            Ok(0.003)
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_inflight_requests() {
+        let server = Server::start_cluster(
+            "127.0.0.1:0",
+            vec![|| {
+                let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+                let sched = HybridScheduler::new(
+                    SchedulerConfig { latency_budget_ms: None, ..Default::default() },
+                    LatencyPredictor::default_seed(),
+                );
+                Ok(Engine::new(sched, state, SlowBackend))
+            }],
+            RouterPolicy::SloHeadroom.build(),
+            2,
+            DEFAULT_DRAIN,
+        )
+        .unwrap();
+        let addr = server.addr;
+        // ~30 decode steps x 3 ms: the request is still in flight when
+        // shutdown starts.
+        let body = r#"{"prompt": "abcd", "max_tokens": 30}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let client = std::thread::spawn(move || http(addr, &raw));
+        std::thread::sleep(Duration::from_millis(25));
+        server.shutdown();
+        let r = client.join().unwrap();
+        assert!(r.contains("200 OK"), "accepted request must complete across stop(): {r}");
+        assert!(r.contains("\"num_tokens\":30"), "{r}");
+    }
+
+    #[test]
+    fn drain_deadline_fails_stragglers_instead_of_hanging() {
+        let server = Server::start_cluster(
+            "127.0.0.1:0",
+            vec![|| {
+                let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+                let sched = HybridScheduler::new(
+                    SchedulerConfig { latency_budget_ms: None, ..Default::default() },
+                    LatencyPredictor::default_seed(),
+                );
+                Ok(Engine::new(sched, state, SlowBackend))
+            }],
+            RouterPolicy::RoundRobin.build(),
+            2,
+            Duration::from_millis(40),
+        )
+        .unwrap();
+        let addr = server.addr;
+        // 1024 decode steps x 3 ms >> the 40 ms drain deadline.
+        let body = r#"{"prompt": "abcd", "max_tokens": 1024}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let client = std::thread::spawn(move || http(addr, &raw));
+        std::thread::sleep(Duration::from_millis(25));
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(5), "drain deadline must bound shutdown");
+        let r = client.join().unwrap();
+        assert!(r.contains("503"), "straggler fails explicitly: {r}");
+        assert!(r.contains("server stopping"), "{r}");
     }
 
     /// Backend that fails every execution (persistent hardware fault).
@@ -492,5 +685,44 @@ mod tests {
         let r = http(server.addr, raw);
         assert!(r.contains("missing prompt"), "{r}");
         server.shutdown();
+    }
+
+    #[test]
+    fn aggregate_metrics_sums_and_takes_worst() {
+        let a = Json::parse(
+            r#"{"online_finished": 2, "total_tps": 10.5, "p99_tbt_ms": 12.0, "p50_ttft_ms": 3.0}"#,
+        )
+        .unwrap();
+        let b = Json::parse(
+            r#"{"online_finished": 3, "total_tps": 4.5, "p99_tbt_ms": 30.0, "p50_ttft_ms": 1.0}"#,
+        )
+        .unwrap();
+        let m = aggregate_metrics(&[a, b]);
+        let agg = m.get("aggregate");
+        assert_eq!(agg.get("online_finished").as_f64(), Some(5.0));
+        assert_eq!(agg.get("total_tps").as_f64(), Some(15.0));
+        assert_eq!(agg.get("p99_tbt_ms").as_f64(), Some(30.0));
+        assert_eq!(agg.get("p50_ttft_ms").as_f64(), Some(3.0));
+        assert_eq!(m.get("replicas").as_arr().map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn aggregate_covers_every_report_field() {
+        // Drift guard for the stringly-typed SUM_FIELDS/WORST_FIELDS
+        // lists: every field Report serializes must appear in the
+        // multi-replica aggregate (a new Report field that is added to
+        // neither list fails here, not silently in production).
+        let report = crate::coordinator::metrics::Metrics::new(1.0).report(Some(1.0)).to_json();
+        let m = aggregate_metrics(&[report.clone(), report.clone()]);
+        let agg = m.get("aggregate").as_obj().unwrap();
+        for key in report.as_obj().unwrap().keys() {
+            assert!(agg.contains_key(key), "aggregate missing report field '{key}'");
+        }
+    }
+
+    #[test]
+    fn job_error_messages() {
+        assert_eq!(JobError::BackendFailed.message(), "backend failed");
+        assert_eq!(JobError::DrainTimeout.message(), "server stopping");
     }
 }

@@ -1,0 +1,221 @@
+//! Cluster-layer contracts:
+//!
+//! * **exactly-one placement** — over random traces, policies, and
+//!   replica counts, every admitted request lives on exactly one live
+//!   replica (or, for deferred offline work, in the shared backlog), and
+//!   per-engine invariants hold after the run;
+//! * **JSQ minimality** — `JoinShortestQueue` never picks a replica with
+//!   a strictly longer queue than another live replica;
+//! * **router totality** — every policy returns an in-range index for
+//!   arbitrary snapshot vectors, preferring live replicas while any
+//!   exist.
+//!
+//! (`tests/determinism.rs` holds the byte-identity contract for the
+//! `cluster-sim` CSV.)
+
+use hygen::cluster::router::{JoinShortestQueue, Router, RouterPolicy};
+use hygen::cluster::sim::ClusterSim;
+use hygen::cluster::ReplicaSnapshot;
+use hygen::coordinator::predictor::LatencyPredictor;
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::coordinator::request::Class;
+use hygen::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+use hygen::coordinator::state::EngineState;
+use hygen::engine::Engine;
+use hygen::sim::costmodel::CostModel;
+use hygen::sim::SimBackend;
+use hygen::util::prop::{check, Gen};
+use hygen::workload::trace::{Trace, TraceEvent};
+
+fn engines(n: usize, budget: Option<f64>, seed: u64) -> Vec<Engine<SimBackend>> {
+    (0..n)
+        .map(|i| {
+            // Full A100-class KV pool: the properties probe routing, not
+            // memory pressure (tight pools have their own unit tests).
+            let blocks = CostModel::a100_llama7b().num_blocks(16);
+            let state = EngineState::new(OfflinePolicy::Fcfs, blocks, 16, seed + i as u64);
+            let sched = HybridScheduler::new(
+                SchedulerConfig { latency_budget_ms: budget, ..Default::default() },
+                LatencyPredictor::default_seed(),
+            );
+            let mut e = Engine::new(
+                sched,
+                state,
+                SimBackend::new(CostModel::a100_llama7b(), seed + i as u64),
+            );
+            e.state.keep_finished = false;
+            e
+        })
+        .collect()
+}
+
+fn random_trace(g: &mut Gen) -> Trace {
+    let n = g.usize(5, 60);
+    let mut events = Vec::with_capacity(n + 1);
+    for _ in 0..n {
+        let online = g.bool();
+        events.push(TraceEvent {
+            arrival_s: g.f64(0.0, 5.0),
+            class: if online { Class::Online } else { Class::Offline },
+            prompt_len: g.usize(8, 400),
+            output_len: g.usize(1, 24),
+            prompt: Vec::new().into(),
+        });
+    }
+    // A final online event after every other arrival keeps the cluster
+    // replaying until the whole trace is admitted (the run stops once the
+    // online portion completes, so an all-offline tail would otherwise
+    // never be admitted — by design, not a conservation bug).
+    events.push(TraceEvent {
+        arrival_s: 5.5,
+        class: Class::Online,
+        prompt_len: 32,
+        output_len: 4,
+        prompt: Vec::new().into(),
+    });
+    Trace::new(events)
+}
+
+fn random_snaps(g: &mut Gen) -> Vec<ReplicaSnapshot> {
+    let n = g.usize(1, 8);
+    let mut snaps: Vec<ReplicaSnapshot> = (0..n)
+        .map(|_| ReplicaSnapshot {
+            online_waiting: g.usize(0, 20),
+            offline_waiting: g.usize(0, 40),
+            running_online: g.usize(0, 20),
+            running_offline: g.usize(0, 20),
+            preempted_offline: g.usize(0, 5),
+            free_kv_tokens: g.usize(0, 10_000),
+            predicted_iter_ms: g.f64(0.0, 80.0),
+            latency_budget_ms: if g.bool() { 40.0 } else { f64::INFINITY },
+            failed: g.bool(),
+        })
+        .collect();
+    // Keep at least one live replica in most cases.
+    if g.bool() {
+        snaps[0].failed = false;
+    }
+    snaps
+}
+
+#[test]
+fn prop_every_admitted_request_lands_on_exactly_one_replica() {
+    check("cluster conservation", 40, |g: &mut Gen| {
+        let policy = *g.pick(&RouterPolicy::ALL);
+        let n = g.usize(1, 5);
+        let budget = if g.bool() { Some(40.0) } else { None };
+        let trace = random_trace(g);
+        let mut sim = ClusterSim::new(engines(n, budget, g.seed), policy.build(), 0.5);
+        let r = sim.run(&trace, 400.0).unwrap();
+        // Conservation: every admitted event is finished on a replica,
+        // still resident on a replica, or held in the shared backlog —
+        // never duplicated, never lost.
+        let mut on_replicas = 0usize;
+        for e in &sim.engines {
+            e.state.check_invariants().unwrap();
+            on_replicas += e.state.num_running()
+                + e.state.online_queue.len()
+                + e.state.offline_queue.len()
+                + e.state.preempted_offline.len();
+        }
+        let finished = r.aggregate.online_finished + r.aggregate.offline_finished;
+        assert_eq!(
+            finished + on_replicas + r.backlog_left,
+            trace.len(),
+            "policy {} with {} replicas",
+            policy.name(),
+            n
+        );
+        // Each placement went to exactly one replica: the dispatch tally
+        // matches the events that left the backlog (reclaims re-count).
+        assert_eq!(r.dispatched - r.reclaimed, trace.len() - r.backlog_left);
+        assert_eq!(sim.routed.iter().sum::<usize>(), r.dispatched);
+        // The full online trace must be served (replicas are live).
+        assert_eq!(r.aggregate.online_finished, trace.num_online());
+    });
+}
+
+#[test]
+fn prop_jsq_never_picks_a_strictly_longer_queue() {
+    check("jsq minimality", 300, |g: &mut Gen| {
+        let snaps = random_snaps(g);
+        let mut jsq = JoinShortestQueue;
+        let picked = jsq.route_online(&snaps);
+        assert!(picked < snaps.len());
+        if snaps.iter().any(|s| !s.failed) {
+            assert!(!snaps[picked].failed, "JSQ must prefer live replicas");
+            let min_depth =
+                snaps.iter().filter(|s| !s.failed).map(|s| s.total_depth()).min().unwrap();
+            assert_eq!(
+                snaps[picked].total_depth(),
+                min_depth,
+                "picked a strictly longer queue: {snaps:?}"
+            );
+        }
+        if let Some(off) = jsq.route_offline(&snaps) {
+            assert!(off < snaps.len());
+        }
+    });
+}
+
+#[test]
+fn prop_routers_return_valid_live_indices() {
+    check("router totality", 300, |g: &mut Gen| {
+        let snaps = random_snaps(g);
+        for policy in RouterPolicy::ALL {
+            let mut router = policy.build();
+            for _ in 0..3 {
+                let i = router.route_online(&snaps);
+                assert!(i < snaps.len(), "{}", policy.name());
+                if snaps.iter().any(|s| !s.failed) {
+                    assert!(!snaps[i].failed, "{} routed to a failed replica", policy.name());
+                }
+                if let Some(j) = router.route_offline(&snaps) {
+                    assert!(j < snaps.len(), "{}", policy.name());
+                    if snaps.iter().any(|s| !s.failed) {
+                        assert!(
+                            !snaps[j].failed,
+                            "{} placed offline on a failed replica",
+                            policy.name()
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn slo_headroom_beats_round_robin_on_a_skewed_burst() {
+    // A deterministic end-to-end sanity of the routing signal: a burst of
+    // heavy online prompts arrives back-to-back. Round-robin alternates
+    // blindly; SLO-headroom observes the census and spreads by predicted
+    // load, so the online trace finishes no later (and the worst replica
+    // queue stays shorter).
+    let burst: Vec<TraceEvent> = (0..24)
+        .map(|i| TraceEvent {
+            arrival_s: 0.01 * i as f64,
+            class: Class::Online,
+            // alternate huge/tiny prompts: count-even splits are
+            // token-skewed
+            prompt_len: if i % 2 == 0 { 1800 } else { 16 },
+            output_len: 8,
+            prompt: Vec::new().into(),
+        })
+        .collect();
+    let trace = Trace::new(burst);
+    let run = |policy: RouterPolicy| {
+        let mut sim = ClusterSim::new(engines(2, Some(40.0), 9), policy.build(), 0.5);
+        sim.run(&trace, 400.0).unwrap()
+    };
+    let rr = run(RouterPolicy::RoundRobin);
+    let slo = run(RouterPolicy::SloHeadroom);
+    assert_eq!(rr.aggregate.online_finished, 24);
+    assert_eq!(slo.aggregate.online_finished, 24);
+    assert!(
+        slo.duration_s <= rr.duration_s * 1.05,
+        "slo-headroom must not finish the burst later: {} vs {}",
+        slo.duration_s,
+        rr.duration_s
+    );
+}

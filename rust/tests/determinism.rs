@@ -7,10 +7,14 @@
 //!   wallclock, never content. Checked here on scaled-down shapes of
 //!   fig 6 (policy panel) and fig 10 (QPS × metric sweep), the two
 //!   figures whose internal grids run as parallel jobs; CI re-checks the
-//!   full `--quick` shapes through the CLI.
+//!   full `--quick` shapes through the CLI;
+//! * the `cluster-sim` grid must be byte-identical for a fixed seed and
+//!   for any `-j` (CI re-checks the `--quick` shape through the CLI by
+//!   comparing two full runs).
 
 use hygen::baselines::{SimSetup, System};
-use hygen::experiments::{figures, Ctx};
+use hygen::cluster::router::RouterPolicy;
+use hygen::experiments::{cluster_sim, figures, Ctx};
 use hygen::sim::costmodel::CostModel;
 use hygen::workload::azure::{self, AzureTraceConfig};
 use hygen::workload::datasets::{self, Dataset};
@@ -89,4 +93,32 @@ fn fig10_parallel_output_is_byte_identical() {
     let parallel = figure_csvs("10", 2);
     assert!(!serial.is_empty() && serial.iter().all(|c| c.lines().count() > 1));
     assert_eq!(serial, parallel, "fig10 CSV bytes must not depend on -j");
+}
+
+fn cluster_csv(seed: u64, jobs: usize) -> String {
+    let cfg = cluster_sim::ClusterSimConfig {
+        replica_counts: vec![1, 2],
+        policies: RouterPolicy::ALL.to_vec(),
+        online_qps: 2.0,
+        trace_s: 10.0,
+        offline_n: 30,
+        latency_budget_ms: 40.0,
+        rebalance_interval_s: 0.5,
+        max_clock_s: 200.0,
+        seed,
+        jobs,
+    };
+    cluster_sim::table(&cluster_sim::run_grid(&cfg).unwrap()).to_csv()
+}
+
+#[test]
+fn cluster_sim_output_is_byte_identical_for_a_seed() {
+    let a = cluster_csv(7, 1);
+    let b = cluster_csv(7, 1);
+    assert!(a.lines().count() > 6, "grid produced rows:\n{a}");
+    assert_eq!(a, b, "same seed must reproduce the cluster-sim CSV byte-for-byte");
+    let parallel = cluster_csv(7, 3);
+    assert_eq!(a, parallel, "cluster-sim CSV bytes must not depend on -j");
+    let other = cluster_csv(8, 1);
+    assert_ne!(a, other, "the seed must actually steer the grid");
 }
