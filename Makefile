@@ -3,7 +3,7 @@
 # `make artifacts` produces the AOT HLO artifacts the PJRT execution path
 # (`--features pjrt`) loads at startup.
 
-.PHONY: all artifacts test bench bench-sched bench-replay cluster microbench clean
+.PHONY: all artifacts test bench bench-sched bench-replay cluster multi-slo microbench clean
 
 all:
 	cargo build --release
@@ -36,6 +36,12 @@ bench-replay:
 # -> artifacts/cluster_compare.csv
 cluster:
 	cargo run --release -- cluster-sim --check
+
+# N-class SLO registry comparison: the calibrated 4-class trace (chat /
+# completion / summarize / batch) under the 2-class and 4-class
+# registries across 1/2/4 replicas -> artifacts/multi_slo.csv
+multi-slo:
+	cargo run --release -- multi-slo
 
 # In-tree Bencher micro-benchmarks (scheduler, PSM, predictor, figures,
 # sched_trace, replay bench targets).

@@ -28,7 +28,7 @@ fn online_trace(n: usize, qps: f64, seed: u64) -> Vec<TraceEvent> {
             let prompt = tokenizer::encode(&text);
             TraceEvent {
                 arrival_s: t,
-                class: Class::Online,
+                class: Class::ONLINE,
                 prompt_len: prompt.len(),
                 output_len: 6 + (i % 6),
                 prompt: prompt.into(),
@@ -45,7 +45,7 @@ fn offline_backlog(n: usize) -> Vec<TraceEvent> {
             let prompt = tokenizer::encode(&text);
             TraceEvent {
                 arrival_s: 0.0,
-                class: Class::Offline,
+                class: Class::OFFLINE,
                 prompt_len: prompt.len(),
                 output_len: 8,
                 prompt: prompt.into(),

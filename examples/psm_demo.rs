@@ -56,13 +56,13 @@ fn main() -> anyhow::Result<()> {
         let mut q = OfflineQueue::new(policy, 42);
         let loner_prompt: Vec<u32> = "zzz completely unique request".bytes().map(u32::from).collect();
         q.push(
-            Request::new(0, Class::Offline, 0.0, loner_prompt.len(), 4)
+            Request::new(0, Class::OFFLINE, 0.0, loner_prompt.len(), 4)
                 .with_prompt(loner_prompt),
         );
         for i in 1..400u64 {
             let p: Vec<u32> =
                 format!("aaa shared family question {i:04}").bytes().map(u32::from).collect();
-            q.push(Request::new(i, Class::Offline, i as f64 * 0.05, p.len(), 4).with_prompt(p));
+            q.push(Request::new(i, Class::OFFLINE, i as f64 * 0.05, p.len(), 4).with_prompt(p));
         }
         let mut pos = None;
         for step in 0.. {

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let prompt = tokenizer::encode(prompt_text);
     let id = engine.fresh_id();
     let t0 = std::time::Instant::now();
-    engine.submit(Request::new(id, Class::Online, 0.0, prompt.len(), 12).with_prompt(prompt));
+    engine.submit(Request::new(id, Class::ONLINE, 0.0, prompt.len(), 12).with_prompt(prompt));
     while engine.has_work() {
         engine.step()?;
     }

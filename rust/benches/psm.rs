@@ -65,7 +65,7 @@ fn main() {
             let mut q = OfflineQueue::new(policy, 1);
             for (i, p) in ps.iter().take(256).enumerate() {
                 q.push(
-                    Request::new(i as u64, Class::Offline, i as f64, p.len(), 4)
+                    Request::new(i as u64, Class::OFFLINE, i as f64, p.len(), 4)
                         .with_prompt(p.clone()),
                 );
             }

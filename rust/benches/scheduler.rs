@@ -15,7 +15,7 @@ fn steady_state(n_running: usize, n_queued: usize, policy: OfflinePolicy) -> Eng
     let mut rng = Rng::new(7);
     for i in 0..n_running {
         let id = i as u64;
-        let mut r = Request::new(id, if i % 2 == 0 { Class::Online } else { Class::Offline }, 0.0, 256, 64)
+        let mut r = Request::new(id, if i % 2 == 0 { Class::ONLINE } else { Class::OFFLINE }, 0.0, 256, 64)
             .with_prompt((0..256u32).map(|k| k + id as u32 * 977).collect::<Vec<u32>>());
         r.prefilled = 256;
         r.generated = 1 + (i % 8);
@@ -26,9 +26,9 @@ fn steady_state(n_running: usize, n_queued: usize, policy: OfflinePolicy) -> Eng
     for i in 0..n_queued {
         let id = (10_000 + i) as u64;
         let len = rng.range_usize(64, 2048);
-        let req = Request::new(id, Class::Offline, i as f64 * 0.01, len, 32)
+        let req = Request::new(id, Class::OFFLINE, i as f64 * 0.01, len, 32)
             .with_prompt((0..len as u32).map(|k| k + id as u32 * 131).collect::<Vec<u32>>());
-        st.offline_queue.push(req);
+        st.queue_mut(Class::OFFLINE).push(req);
     }
     st
 }

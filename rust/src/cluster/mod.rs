@@ -1,28 +1,30 @@
 //! Multi-replica cluster layer: SLO-aware request routing and elastic
-//! offline placement across engine instances.
+//! placement of harvest work across engine instances.
 //!
-//! One HyGen instance co-locates online and offline work inside a single
-//! engine (the paper's Fig. 2). A production deployment runs *N* such
-//! replicas behind a router — and multi-SLO dispatch decisions belong
-//! above the per-engine scheduler (SLOs-Serve), while idle capacity
-//! across serving instances can be harvested for offline work (ConServe).
-//! This module is that layer:
+//! One HyGen instance co-locates its SLO classes inside a single engine
+//! (the paper's Fig. 2). A production deployment runs *N* such replicas
+//! behind a router — and multi-SLO dispatch decisions belong above the
+//! per-engine scheduler (SLOs-Serve), while idle capacity across serving
+//! instances can be harvested for elastic work (ConServe). This module is
+//! that layer:
 //!
 //! * [`router::Router`] — the routing policy interface over per-replica
 //!   [`ReplicaSnapshot`]s, with three implementations:
 //!   [`router::RoundRobin`], [`router::JoinShortestQueue`], and
-//!   [`router::SloHeadroom`] (routes online requests to the replica with
-//!   the most SLO headroom and elastically places the shared offline
-//!   backlog onto replicas whose predicted batch time leaves slack — the
-//!   cross-replica analogue of the paper's SLO-aware offline scheduling).
+//!   [`router::SloHeadroom`] (routes interactive requests to the replica
+//!   with the most SLO headroom — measured against the **tightest class
+//!   present** on that replica — and elastically places the shared
+//!   backlog onto replicas whose predicted batch time leaves slack).
 //! * [`replica::Replica`] — one engine on its own thread behind an mpsc
 //!   job queue (the `server::engine_loop` message-passing shape),
 //!   publishing a census snapshot and a metrics report, and draining
 //!   in-flight work gracefully on shutdown.
 //! * [`sim::ClusterSim`] — a deterministic virtual-clock driver over N
-//!   sim-backend engines with a shared offline backlog and periodic
+//!   sim-backend engines with shared per-class backlogs and periodic
 //!   rebalance ticks; `hygen cluster-sim` measures the policies on the
-//!   calibrated mixed trace (`artifacts/cluster_compare.csv`).
+//!   calibrated mixed trace (`artifacts/cluster_compare.csv`) and
+//!   `hygen multi-slo` replays the 4-class trace
+//!   (`artifacts/multi_slo.csv`).
 //!
 //! The server front end ([`crate::server`]) builds on [`replica`] for
 //! `hygen serve --replicas N --router <policy>`.
@@ -31,22 +33,29 @@ pub mod replica;
 pub mod router;
 pub mod sim;
 
-use crate::coordinator::batch::Features;
+use crate::coordinator::classes::MAX_CLASSES;
 use crate::coordinator::request::Class;
 use crate::engine::{Engine, ExecutionBackend};
 
 /// A point-in-time census of one replica, published by its engine thread
 /// (server mode) or computed on demand (simulation). Routers make every
 /// decision from these snapshots only — they never touch engine state.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+///
+/// Per-class counts are dense fixed arrays (`Copy`, allocation-free —
+/// snapshots are taken every engine iteration); `n_classes` says how many
+/// slots are meaningful. By the registry convention, index 0 is the
+/// flagship interactive class and indices 1.. are the harvest/elastic
+/// spectrum — the `online_*`/`offline_*` views below encode that split.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ReplicaSnapshot {
-    /// Online requests waiting in the replica's FCFS queue.
-    pub online_waiting: usize,
-    /// Offline requests waiting in the replica's offline queue.
-    pub offline_waiting: usize,
-    pub running_online: usize,
-    pub running_offline: usize,
-    pub preempted_offline: usize,
+    /// Waiting requests per class.
+    pub waiting: [usize; MAX_CLASSES],
+    /// Running requests per class.
+    pub running: [usize; MAX_CLASSES],
+    /// Preempted (preserved-state) requests per class.
+    pub preempted: [usize; MAX_CLASSES],
+    /// Meaningful class slots (registry size).
+    pub n_classes: usize,
     /// Free KV-cache capacity in tokens.
     pub free_kv_tokens: usize,
     /// Latency-predictor estimate (ms) of the replica's next iteration
@@ -55,59 +64,113 @@ pub struct ReplicaSnapshot {
     /// Per-iteration latency budget the replica schedules under
     /// (`f64::INFINITY` when SLO-unaware).
     pub latency_budget_ms: f64,
+    /// Budget tolerance of the tightest class *present* on the replica
+    /// (min over classes with any waiting/running/preempted work of the
+    /// spec's `latency_budget` multiplier; bypass classes count as 1.0).
+    /// 1.0 with the default two-class registry; an idle replica reports
+    /// its registry's loosest tolerance (most headroom).
+    pub min_present_tolerance: f64,
     /// The replica's backend failed persistently; routers must prefer any
     /// live replica over a failed one.
     pub failed: bool,
 }
 
+impl Default for ReplicaSnapshot {
+    fn default() -> Self {
+        ReplicaSnapshot {
+            waiting: [0; MAX_CLASSES],
+            running: [0; MAX_CLASSES],
+            preempted: [0; MAX_CLASSES],
+            n_classes: 2,
+            free_kv_tokens: 0,
+            predicted_iter_ms: 0.0,
+            latency_budget_ms: 0.0,
+            min_present_tolerance: 1.0,
+            failed: false,
+        }
+    }
+}
+
 impl ReplicaSnapshot {
     /// Snapshot an engine's current census (any backend).
     pub fn of<B: ExecutionBackend>(engine: &Engine<B>) -> ReplicaSnapshot {
-        let counts = engine.state.counts;
+        let state = &engine.state;
+        let registry = &state.registry;
+        let counts = state.counts;
         // Estimate the next iteration from the running census: every
         // running decode contributes one token; running prefills are
         // assumed to fill the chunk budget between them (the scheduler
         // schedules at most `chunk_tokens` of prefill per iteration).
         // Snapshots are taken every engine-loop iteration, so this is
-        // O(1) in the running-set size.
-        let decodes = (counts.decode(Class::Online) + counts.decode(Class::Offline)) as f64;
-        let mut f = Features { sp: 0.0, sd: decodes, np: 0.0, nd: decodes };
-        let prefills = counts.prefill(Class::Online) + counts.prefill(Class::Offline);
-        if prefills > 0 {
+        // O(classes) in the running-set size.
+        let decodes = counts.total_decode() as f64;
+        let mut f =
+            crate::coordinator::batch::Features { sp: 0.0, sd: decodes, np: 0.0, nd: decodes };
+        if counts.total_prefill() > 0 {
             f.add_prefill(engine.scheduler.cfg.chunk_tokens);
         }
-        ReplicaSnapshot {
-            online_waiting: engine.state.online_queue.len(),
-            offline_waiting: engine.state.offline_queue.len(),
-            running_online: engine.state.running_online.len(),
-            running_offline: engine.state.running_offline.len(),
-            preempted_offline: engine.state.preempted_offline.len(),
-            free_kv_tokens: engine.state.blocks.free_tokens(),
+        let mut snap = ReplicaSnapshot {
+            n_classes: registry.len(),
+            free_kv_tokens: state.blocks.free_tokens(),
             predicted_iter_ms: engine.scheduler.predictor.predict(&f),
             latency_budget_ms: engine.scheduler.cfg.latency_budget_ms.unwrap_or(f64::INFINITY),
-            failed: false,
+            ..ReplicaSnapshot::default()
+        };
+        let mut min_present = f64::INFINITY;
+        let mut loosest = 1.0f64;
+        for c in registry.ids() {
+            let i = c.index();
+            snap.waiting[i] = state.queue(c).len();
+            snap.running[i] = state.running(c).len();
+            snap.preempted[i] = state.preempted(c).len();
+            let tol = registry.spec(c).budget_tolerance();
+            loosest = loosest.max(tol);
+            if snap.waiting[i] + snap.running[i] + snap.preempted[i] > 0 {
+                min_present = min_present.min(tol);
+            }
         }
+        // Idle replica: nothing present constrains it — report the
+        // loosest tolerance in the registry (max headroom).
+        snap.min_present_tolerance = if min_present.is_finite() { min_present } else { loosest };
+        snap
+    }
+
+    /// Waiting requests of the flagship interactive class.
+    pub fn online_waiting(&self) -> usize {
+        self.waiting[0]
+    }
+
+    /// Waiting requests across the harvest spectrum (classes 1..N).
+    pub fn offline_waiting(&self) -> usize {
+        self.waiting[1..self.n_classes.min(MAX_CLASSES)].iter().sum()
     }
 
     /// Everything queued or in flight on the replica (JSQ's load measure).
     pub fn total_depth(&self) -> usize {
-        self.online_waiting
-            + self.offline_waiting
-            + self.running_online
-            + self.running_offline
-            + self.preempted_offline
+        let n = self.n_classes.min(MAX_CLASSES);
+        self.waiting[..n].iter().sum::<usize>()
+            + self.running[..n].iter().sum::<usize>()
+            + self.preempted[..n].iter().sum::<usize>()
     }
 
-    /// Online-only load (waiting + running).
+    /// Flagship-class load (waiting + running).
     pub fn online_depth(&self) -> usize {
-        self.online_waiting + self.running_online
+        self.waiting[0] + self.running[0]
     }
 
-    /// Predicted slack (ms) between the replica's latency budget and its
-    /// next iteration — the `SloHeadroom` routing signal. Infinite when
-    /// the replica is SLO-unaware.
+    /// Per-class waiting count.
+    pub fn class_waiting(&self, class: Class) -> usize {
+        self.waiting[class.index()]
+    }
+
+    /// Predicted slack (ms) between the replica's effective latency
+    /// budget and its next iteration — the `SloHeadroom` routing signal.
+    /// The effective budget is the scheduling budget scaled by the
+    /// tolerance of the **tightest class present** on the replica: a
+    /// replica running only tolerant harvest classes advertises more
+    /// room. Infinite when the replica is SLO-unaware.
     pub fn headroom_ms(&self) -> f64 {
-        self.latency_budget_ms - self.predicted_iter_ms
+        self.latency_budget_ms * self.min_present_tolerance - self.predicted_iter_ms
     }
 }
 
@@ -134,17 +197,19 @@ mod tests {
     #[test]
     fn snapshot_reflects_census() {
         let mut e = engine(Some(40.0));
-        e.submit(Request::new(1, Class::Online, 0.0, 64, 8));
-        e.submit(Request::new(2, Class::Offline, 0.0, 64, 8));
+        e.submit(Request::new(1, Class::ONLINE, 0.0, 64, 8));
+        e.submit(Request::new(2, Class::OFFLINE, 0.0, 64, 8));
         let s = ReplicaSnapshot::of(&e);
-        assert_eq!(s.online_waiting, 1);
-        assert_eq!(s.offline_waiting, 1);
+        assert_eq!(s.online_waiting(), 1);
+        assert_eq!(s.offline_waiting(), 1);
         assert_eq!(s.total_depth(), 2);
+        assert_eq!(s.n_classes, 2);
         assert_eq!(s.latency_budget_ms, 40.0);
+        assert_eq!(s.min_present_tolerance, 1.0, "default registry tolerances are 1.0");
         assert!(s.headroom_ms() < 40.0, "empty-batch bias charged");
         e.step().unwrap();
         let s2 = ReplicaSnapshot::of(&e);
-        assert!(s2.running_online + s2.running_offline > 0);
+        assert!(s2.running[0] + s2.running[1] > 0);
         assert!(s2.predicted_iter_ms > s.predicted_iter_ms, "load raises the estimate");
     }
 
@@ -154,5 +219,54 @@ mod tests {
         let s = ReplicaSnapshot::of(&e);
         assert_eq!(s.latency_budget_ms, f64::INFINITY);
         assert_eq!(s.headroom_ms(), f64::INFINITY);
+    }
+
+    #[test]
+    fn tightest_present_class_scales_headroom() {
+        use crate::coordinator::classes::{AdmissionPolicy, ClassRegistry, ClassSpec};
+        use std::sync::Arc;
+        let reg = Arc::new(
+            ClassRegistry::new(vec![
+                ClassSpec {
+                    name: "chat".into(),
+                    tier: 1,
+                    ttft_slo_ms: Some(500.0),
+                    tbt_slo_ms: Some(50.0),
+                    latency_budget: None,
+                    preempt_priority: 100,
+                    admission: AdmissionPolicy::Fcfs,
+                    starvation_age_s: None,
+                },
+                ClassSpec {
+                    name: "batch".into(),
+                    tier: 0,
+                    ttft_slo_ms: None,
+                    tbt_slo_ms: None,
+                    latency_budget: Some(4.0),
+                    preempt_priority: 0,
+                    admission: AdmissionPolicy::Fcfs,
+                    starvation_age_s: None,
+                },
+            ])
+            .unwrap(),
+        );
+        let state = EngineState::with_registry(reg, OfflinePolicy::Fcfs, 1024, 16, 0);
+        let sched = HybridScheduler::new(
+            SchedulerConfig { latency_budget_ms: Some(40.0), ..Default::default() },
+            LatencyPredictor::default_seed(),
+        );
+        let mut e = Engine::new(sched, state, SimBackend::new(CostModel::a100_llama7b(), 0));
+        // Idle: the loosest tolerance (4.0) applies.
+        let idle = ReplicaSnapshot::of(&e);
+        assert_eq!(idle.min_present_tolerance, 4.0);
+        // Only batch present: still 4x headroom.
+        e.submit(Request::new(1, Class::OFFLINE, 0.0, 32, 4));
+        let batch_only = ReplicaSnapshot::of(&e);
+        assert_eq!(batch_only.min_present_tolerance, 4.0);
+        // Chat arrives: the tightest present class clamps to 1.0.
+        e.submit(Request::new(2, Class::ONLINE, 0.0, 32, 4));
+        let both = ReplicaSnapshot::of(&e);
+        assert_eq!(both.min_present_tolerance, 1.0);
+        assert!(both.headroom_ms() < batch_only.headroom_ms());
     }
 }

@@ -16,6 +16,7 @@
 //!   get [`JobError::DrainTimeout`] instead of a dropped channel.
 
 use super::ReplicaSnapshot;
+use crate::coordinator::classes::MAX_CLASSES;
 use crate::coordinator::request::{Class, Request, RequestId};
 use crate::engine::{Engine, ExecutionBackend};
 use crate::runtime::tokenizer;
@@ -76,46 +77,43 @@ pub struct ReplicaShared {
     /// Latest census snapshot (refreshed every loop iteration).
     pub snapshot: Mutex<ReplicaSnapshot>,
     /// Jobs sent toward this replica per class (incremented by submitters
-    /// *before* sending). Together with the `ingested_*` counters this
+    /// *before* sending). Together with the `ingested` counters this
     /// gives the router an estimate of work still in the channel, so a
     /// burst between two snapshot refreshes does not all land on the same
-    /// replica — and offline bursts count against the offline buffer, not
-    /// the online depth.
-    pub submitted_online: AtomicUsize,
-    pub submitted_offline: AtomicUsize,
+    /// replica — and each class's burst counts against its own census
+    /// slot (elastic bursts hit the harvest buffer, not the interactive
+    /// depth).
+    pub submitted: [AtomicUsize; MAX_CLASSES],
     /// Jobs the engine thread has taken off the channel, per class.
-    pub ingested_online: AtomicUsize,
-    pub ingested_offline: AtomicUsize,
+    pub ingested: [AtomicUsize; MAX_CLASSES],
     /// Set after a persistent backend failure: the engine aborted its
     /// work and new completions are refused (health/metrics stay up).
     pub failed: AtomicBool,
 }
 
 impl ReplicaShared {
-    /// The published snapshot plus the not-yet-ingested job count — the
+    /// The published snapshot plus the not-yet-ingested job counts — the
     /// router's view of this replica.
     pub fn routing_snapshot(&self) -> ReplicaSnapshot {
         let mut s = *self.snapshot.lock().unwrap();
         // Saturating: a submitter that skips the counters (tests driving
         // a replica directly) must not underflow the estimates.
-        s.online_waiting += self
-            .submitted_online
-            .load(Ordering::Relaxed)
-            .saturating_sub(self.ingested_online.load(Ordering::Relaxed));
-        s.offline_waiting += self
-            .submitted_offline
-            .load(Ordering::Relaxed)
-            .saturating_sub(self.ingested_offline.load(Ordering::Relaxed));
+        for i in 0..MAX_CLASSES {
+            s.waiting[i] += self.submitted[i]
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.ingested[i].load(Ordering::Relaxed));
+        }
         s.failed = self.failed.load(Ordering::SeqCst);
         s
     }
 
     /// Record a job heading toward this replica (call before sending).
     pub fn note_submitted(&self, class: Class) {
-        match class {
-            Class::Online => self.submitted_online.fetch_add(1, Ordering::Relaxed),
-            Class::Offline => self.submitted_offline.fetch_add(1, Ordering::Relaxed),
-        };
+        self.submitted[class.index().min(MAX_CLASSES - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_ingested(&self, class: Class) {
+        self.ingested[class.index().min(MAX_CLASSES - 1)].fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -202,10 +200,7 @@ pub fn engine_loop<B: ExecutionBackend>(
         loop {
             match rx.try_recv() {
                 Ok(job) => {
-                    match job.class {
-                        Class::Online => shared.ingested_online.fetch_add(1, Ordering::Relaxed),
-                        Class::Offline => shared.ingested_offline.fetch_add(1, Ordering::Relaxed),
-                    };
+                    shared.note_ingested(job.class);
                     if shared.failed.load(Ordering::SeqCst) {
                         // Backend already declared dead: refuse instead of
                         // queueing work that can never execute (jobs racing

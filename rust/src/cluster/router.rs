@@ -6,12 +6,15 @@
 //! replica index, which keeps every decision (and therefore the
 //! `cluster-sim` CSV) byte-reproducible for a fixed seed.
 //!
-//! Online requests need an immediate placement ([`Router::route_online`]
-//! always returns an index). Offline work is a *shared backlog*:
+//! Interactive (TTFT-SLO-bound) requests need an immediate placement
+//! ([`Router::route_online`] always returns an index). Elastic work —
+//! classes with no TTFT SLO — is a *shared backlog*:
 //! [`Router::route_offline`] may return `None` to keep a request in the
 //! backlog until a later rebalance tick — that deferral is how
 //! [`SloHeadroom`] implements elastic placement, while [`RoundRobin`] and
-//! [`JoinShortestQueue`] dispatch the backlog eagerly.
+//! [`JoinShortestQueue`] dispatch the backlog eagerly. `SloHeadroom`'s
+//! headroom signal is computed against the **tightest class present** on
+//! each replica (see [`ReplicaSnapshot::headroom_ms`]).
 
 use super::ReplicaSnapshot;
 
@@ -20,13 +23,13 @@ use super::ReplicaSnapshot;
 pub trait Router: Send {
     fn name(&self) -> &'static str;
 
-    /// Replica for an arriving online request. `snaps` is non-empty and
-    /// the returned index is always in range; live (non-failed) replicas
-    /// are preferred, and any index is acceptable once every replica has
-    /// failed (the caller surfaces the error).
+    /// Replica for an arriving interactive request. `snaps` is non-empty
+    /// and the returned index is always in range; live (non-failed)
+    /// replicas are preferred, and any index is acceptable once every
+    /// replica has failed (the caller surfaces the error).
     fn route_online(&mut self, snaps: &[ReplicaSnapshot]) -> usize;
 
-    /// Replica for the next shared-backlog offline request, or `None` to
+    /// Replica for the next shared-backlog elastic request, or `None` to
     /// defer placement to a later rebalance tick.
     fn route_offline(&mut self, snaps: &[ReplicaSnapshot]) -> Option<usize>;
 }
@@ -183,10 +186,10 @@ impl Router for SloHeadroom {
         let buffer = self.offline_buffer;
         let mut best: Option<(usize, (f64, usize))> = None;
         for (i, s) in snaps.iter().enumerate() {
-            if s.failed || s.headroom_ms() <= 0.0 || s.offline_waiting >= buffer {
+            if s.failed || s.headroom_ms() <= 0.0 || s.offline_waiting() >= buffer {
                 continue;
             }
-            let k = (-s.headroom_ms(), s.offline_waiting);
+            let k = (-s.headroom_ms(), s.offline_waiting());
             match &best {
                 Some((_, bk)) if *bk <= k => {}
                 _ => best = Some((i, k)),
@@ -201,12 +204,13 @@ mod tests {
     use super::*;
 
     fn snap(depth: usize, headroom: f64) -> ReplicaSnapshot {
-        ReplicaSnapshot {
-            online_waiting: depth,
+        let mut s = ReplicaSnapshot {
             predicted_iter_ms: 40.0 - headroom,
             latency_budget_ms: 40.0,
             ..Default::default()
-        }
+        };
+        s.waiting[0] = depth;
+        s
     }
 
     #[test]
@@ -256,9 +260,9 @@ mod tests {
         assert_eq!(r.route_offline(&tight), None);
         // Buffer full on the best replica: spill to the next.
         let mut snaps = vec![snap(0, 30.0), snap(0, 20.0)];
-        snaps[0].offline_waiting = 2;
+        snaps[0].waiting[1] = 2;
         assert_eq!(r.route_offline(&snaps), Some(1));
-        snaps[1].offline_waiting = 2;
+        snaps[1].waiting[1] = 2;
         assert_eq!(r.route_offline(&snaps), None, "all buffers full: keep central");
     }
 

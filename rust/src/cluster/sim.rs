@@ -1,19 +1,23 @@
 //! Deterministic multi-replica trace replay: N engines on virtual clocks,
-//! one router, one shared offline backlog.
+//! one router, shared per-class elastic backlogs.
 //!
 //! The driver always steps the *lagging* replica (smallest virtual
 //! clock), so cluster time advances evenly and admission happens exactly
-//! when the cluster-wide clock passes an event's arrival. Online events
-//! are routed immediately ([`Router::route_online`]); offline events
-//! enter the shared backlog and are placed by [`Router::route_offline`]
-//! at periodic *rebalance ticks*, which also pull still-waiting offline
-//! work back from replicas whose predicted batch time exceeds their
-//! latency budget (negative SLO headroom) — the cross-replica analogue of
-//! the paper's elastic offline scheduling.
+//! when the cluster-wide clock passes an event's arrival. Events of
+//! **interactive** classes (any class with a TTFT SLO) are routed
+//! immediately ([`Router::route_online`]); **elastic** classes enter a
+//! shared per-class backlog and are placed by [`Router::route_offline`]
+//! at periodic *rebalance ticks* — highest-tier backlog first — which
+//! also pull still-waiting elastic work back from replicas whose
+//! predicted batch time exceeds their effective latency budget (negative
+//! SLO headroom), lowest-tier work first. This is the cross-replica
+//! analogue of the paper's elastic offline scheduling; with the default
+//! two-class registry it is exactly the single-backlog online/offline
+//! behavior.
 //!
 //! Everything is seeded and single-threaded: the same trace, router, and
-//! seeds produce bit-identical results (the `cluster-sim` CSV is compared
-//! byte-for-byte in CI).
+//! seeds produce bit-identical results (the `cluster-sim` and
+//! `multi-slo` CSVs are compared byte-for-byte in CI).
 //!
 //! Measurement note: a routed request is admitted on its target replica's
 //! clock, which can run ahead of the cluster-wide minimum by up to one
@@ -23,11 +27,13 @@
 
 use super::router::Router;
 use super::ReplicaSnapshot;
+use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::metrics::{Metrics, Report};
 use crate::coordinator::request::{Class, Request, RequestId};
 use crate::engine::{Engine, ExecutionBackend};
 use crate::workload::trace::{Trace, TraceEvent};
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// One replica's share of a cluster run.
 #[derive(Debug, Clone)]
@@ -38,7 +44,7 @@ pub struct ReplicaRunStats {
     /// Requests dispatched to this replica (including re-dispatch after a
     /// reclaim).
     pub routed: usize,
-    /// Output tokens the replica generated (both classes).
+    /// Output tokens the replica generated (all classes).
     pub out_tokens: u64,
 }
 
@@ -47,11 +53,12 @@ pub struct ReplicaRunStats {
 pub struct ClusterRunResult {
     pub per_replica: Vec<ReplicaRunStats>,
     /// Cluster-wide report: latency summaries merged sample-by-sample
-    /// (exact percentiles, not an average of averages), counters summed.
+    /// per class (exact percentiles, not an average of averages),
+    /// counters summed.
     pub aggregate: Report,
     /// Max replica clock at stop — the denominator of every rate.
     pub duration_s: f64,
-    /// Age of the oldest offline request still waiting (shared backlog or
+    /// Age of the oldest elastic request still waiting (shared backlog or
     /// a replica queue) when the run stopped; 0 when everything started.
     pub offline_starvation_age_s: f64,
     /// Max/mean ratio of per-replica generated tokens (1.0 = perfectly
@@ -60,27 +67,32 @@ pub struct ClusterRunResult {
     /// Total dispatches to replicas (>= admitted events when reclaims
     /// re-dispatched work).
     pub dispatched: usize,
-    /// Offline requests pulled back into the shared backlog from
+    /// Elastic requests pulled back into the shared backlog from
     /// overloaded replicas.
     pub reclaimed: usize,
-    /// Offline events never placed on any replica.
+    /// Elastic events never placed on any replica.
     pub backlog_left: usize,
 }
 
 /// The cluster driver. Build it with per-replica engines (seeded however
-/// the caller wants), run one trace, then inspect the engines freely —
-/// `run` leaves them in their final state for invariant checks.
+/// the caller wants; all replicas must share one registry), run one
+/// trace, then inspect the engines freely — `run` leaves them in their
+/// final state for invariant checks.
 pub struct ClusterSim<B: ExecutionBackend> {
     pub engines: Vec<Engine<B>>,
+    registry: Arc<ClassRegistry>,
     router: Box<dyn Router>,
     rebalance_interval_s: f64,
     next_rebalance_s: f64,
-    backlog: VecDeque<TraceEvent>,
-    /// Offline work placed on a replica but (possibly) still waiting
-    /// there: `(replica, id, arrival)`. Consulted for reclaim and
+    /// Shared elastic backlogs, one deque per class (only elastic
+    /// classes' deques are ever used). Placement drains the
+    /// highest-tier non-empty deque first.
+    backlog: Vec<VecDeque<TraceEvent>>,
+    /// Elastic work placed on a replica but (possibly) still waiting
+    /// there: `(replica, id, arrival, class)`. Consulted for reclaim and
     /// starvation accounting; entries whose request started are pruned at
     /// each rebalance tick.
-    dispatched_offline: Vec<(usize, RequestId, f64)>,
+    dispatched_elastic: Vec<(usize, RequestId, f64, Class)>,
     /// Dispatch tally per replica.
     pub routed: Vec<usize>,
     dispatched: usize,
@@ -97,13 +109,15 @@ impl<B: ExecutionBackend> ClusterSim<B> {
         assert!(!engines.is_empty(), "cluster needs at least one replica");
         assert!(rebalance_interval_s > 0.0, "rebalance interval must be positive");
         let n = engines.len();
+        let registry = Arc::clone(&engines[0].state.registry);
         ClusterSim {
+            backlog: (0..registry.len()).map(|_| VecDeque::new()).collect(),
             engines,
+            registry,
             router,
             rebalance_interval_s,
             next_rebalance_s: 0.0,
-            backlog: VecDeque::new(),
-            dispatched_offline: Vec::new(),
+            dispatched_elastic: Vec::new(),
             routed: vec![0; n],
             dispatched: 0,
             reclaimed: 0,
@@ -111,13 +125,23 @@ impl<B: ExecutionBackend> ClusterSim<B> {
         }
     }
 
-    /// Offline events currently held centrally (tests/observability).
+    /// Elastic events currently held centrally (tests/observability).
     pub fn backlog_len(&self) -> usize {
-        self.backlog.len()
+        self.backlog.iter().map(|b| b.len()).sum()
     }
 
     fn snaps(&self) -> Vec<ReplicaSnapshot> {
         self.engines.iter().map(ReplicaSnapshot::of).collect()
+    }
+
+    /// Highest-tier class with pending backlog work (placement order: the
+    /// most latency-sensitive elastic work leaves the backlog first).
+    fn next_backlog_class(&self) -> Option<Class> {
+        self.registry
+            .tier_order_desc()
+            .iter()
+            .copied()
+            .find(|&c| !self.backlog[c.index()].is_empty())
     }
 
     /// Replica to step next: smallest clock; on ties, prefer one with
@@ -152,73 +176,82 @@ impl<B: ExecutionBackend> ClusterSim<B> {
         engine.submit(req);
         self.routed[i] += 1;
         self.dispatched += 1;
-        if e.class == Class::Offline {
-            self.dispatched_offline.push((i, id, e.arrival_s));
+        if self.registry.spec(e.class).elastic() {
+            self.dispatched_elastic.push((i, id, e.arrival_s, e.class));
         }
     }
 
-    /// One rebalance tick: reclaim waiting offline work from replicas
-    /// with negative SLO headroom, prune tracking entries whose requests
-    /// started, then place backlog work wherever the router finds room.
+    /// One rebalance tick: reclaim waiting elastic work from replicas
+    /// with negative SLO headroom (lowest-tier work first — the
+    /// dispatch-entry order is ascending-tier within each push batch, and
+    /// every waiting entry on a hot replica is reclaimed), prune tracking
+    /// entries whose requests started, then place backlog work —
+    /// highest-tier first — wherever the router finds room.
     fn rebalance(&mut self) {
         let mut snaps = self.snaps();
         let hot: Vec<bool> = snaps.iter().map(|s| s.headroom_ms() < 0.0).collect();
-        let entries = std::mem::take(&mut self.dispatched_offline);
+        let entries = std::mem::take(&mut self.dispatched_elastic);
         let mut keep = Vec::with_capacity(entries.len());
-        for (rep, id, arrival) in entries {
-            let waiting = self.engines[rep].state.offline_queue.contains(id);
+        for (rep, id, arrival, class) in entries {
+            let waiting = self.engines[rep].state.queue(class).contains(id);
             if waiting && hot[rep] {
-                if let Some(req) = self.engines[rep].state.offline_queue.remove(id) {
-                    self.backlog.push_back(TraceEvent {
+                if let Some(req) = self.engines[rep].state.queue_mut(class).remove(id) {
+                    self.backlog[class.index()].push_back(TraceEvent {
                         arrival_s: arrival,
-                        class: Class::Offline,
+                        class,
                         prompt_len: req.prompt_len,
                         output_len: req.output_len,
                         prompt: req.prompt,
                     });
                     self.reclaimed += 1;
-                    snaps[rep].offline_waiting = snaps[rep].offline_waiting.saturating_sub(1);
+                    snaps[rep].waiting[class.index()] =
+                        snaps[rep].waiting[class.index()].saturating_sub(1);
                     continue;
                 }
             }
             if waiting {
-                keep.push((rep, id, arrival));
+                keep.push((rep, id, arrival, class));
             }
         }
-        self.dispatched_offline = keep;
-        while !self.backlog.is_empty() {
+        self.dispatched_elastic = keep;
+        while let Some(class) = self.next_backlog_class() {
             match self.router.route_offline(&snaps) {
                 Some(i) if i < self.engines.len() => {
-                    let e = self.backlog.pop_front().expect("checked non-empty");
+                    let e = self.backlog[class.index()].pop_front().expect("checked non-empty");
                     self.submit_event(i, &e);
-                    snaps[i].offline_waiting += 1;
+                    snaps[i].waiting[class.index()] += 1;
                 }
                 _ => break,
             }
         }
     }
 
-    /// Replay `trace` until its online portion is fully served (offline
-    /// is a backlog, the paper's throughput accounting) or `max_clock_s`
-    /// passes. One run per `ClusterSim` — metrics accumulate.
+    /// Replay `trace` until its interactive portion is fully served
+    /// (elastic work is a backlog, the paper's throughput accounting) or
+    /// `max_clock_s` passes. One run per `ClusterSim` — metrics
+    /// accumulate.
     pub fn run(&mut self, trace: &Trace, max_clock_s: f64) -> anyhow::Result<ClusterRunResult> {
         let events = &trace.events;
         let mut next_event = 0usize;
-        let mut online_ahead = trace.num_online();
+        let registry = Arc::clone(&self.registry);
+        let mut interactive_ahead: usize = registry
+            .ids()
+            .filter(|&c| !registry.spec(c).elastic())
+            .map(|c| trace.num_of(c))
+            .sum();
         loop {
             let now = self.min_clock();
             while next_event < events.len() && events[next_event].arrival_s <= now {
                 let e = events[next_event].clone();
                 next_event += 1;
-                match e.class {
-                    Class::Online => {
-                        online_ahead -= 1;
-                        let snaps = self.snaps();
-                        let i = self.router.route_online(&snaps);
-                        anyhow::ensure!(i < self.engines.len(), "router index out of range");
-                        self.submit_event(i, &e);
-                    }
-                    Class::Offline => self.backlog.push_back(e),
+                if registry.spec(e.class).elastic() {
+                    self.backlog[e.class.index()].push_back(e);
+                } else {
+                    interactive_ahead -= 1;
+                    let snaps = self.snaps();
+                    let i = self.router.route_online(&snaps);
+                    anyhow::ensure!(i < self.engines.len(), "router index out of range");
+                    self.submit_event(i, &e);
                 }
             }
             if now >= self.next_rebalance_s {
@@ -227,10 +260,8 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                     self.next_rebalance_s += self.rebalance_interval_s;
                 }
             }
-            let online_left = online_ahead > 0
-                || self.engines.iter().any(|e| {
-                    !e.state.online_queue.is_empty() || !e.state.running_online.is_empty()
-                });
+            let online_left = interactive_ahead > 0
+                || self.engines.iter().any(|e| e.state.interactive_pending());
             if !online_left || now >= max_clock_s {
                 break;
             }
@@ -263,7 +294,7 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                 if let Some(e) = events.get(next_event) {
                     t = t.min(e.arrival_s);
                 }
-                if !self.backlog.is_empty() {
+                if self.backlog_len() > 0 {
                     t = t.min(self.next_rebalance_s);
                 }
                 if t.is_finite() && t > c {
@@ -307,11 +338,13 @@ impl<B: ExecutionBackend> ClusterSim<B> {
         let max = per_replica.iter().map(|r| r.out_tokens as f64).fold(0.0, f64::max);
         let util_imbalance = if mean > 0.0 { max / mean } else { 1.0 };
         let mut starvation = 0.0f64;
-        for e in &self.backlog {
-            starvation = starvation.max(end - e.arrival_s);
+        for deque in &self.backlog {
+            for e in deque {
+                starvation = starvation.max(end - e.arrival_s);
+            }
         }
-        for &(rep, id, arrival) in &self.dispatched_offline {
-            if self.engines[rep].state.offline_queue.contains(id) {
+        for &(rep, id, arrival, class) in &self.dispatched_elastic {
+            if self.engines[rep].state.queue(class).contains(id) {
                 starvation = starvation.max(end - arrival);
             }
         }
@@ -323,7 +356,7 @@ impl<B: ExecutionBackend> ClusterSim<B> {
             util_imbalance,
             dispatched: self.dispatched,
             reclaimed: self.reclaimed,
-            backlog_left: self.backlog.len(),
+            backlog_left: self.backlog_len(),
         }
     }
 }
@@ -365,10 +398,10 @@ mod tests {
     fn mixed_trace(n_online: usize, n_offline: usize) -> Trace {
         let mut events = Vec::new();
         for i in 0..n_online {
-            events.push(ev(i as f64 * 0.05, Class::Online, 64, 8));
+            events.push(ev(i as f64 * 0.05, Class::ONLINE, 64, 8));
         }
         for _ in 0..n_offline {
-            events.push(ev(0.0, Class::Offline, 128, 16));
+            events.push(ev(0.0, Class::OFFLINE, 128, 16));
         }
         Trace::new(events)
     }
@@ -407,9 +440,9 @@ mod tests {
             ClusterSim::new(engines(2, Some(40.0)), RouterPolicy::SloHeadroom.build(), 0.5);
         // 100 offline requests against a 32-per-replica buffer: the first
         // tick must leave work central instead of pinning everything.
-        let mut events = vec![ev(0.0, Class::Online, 64, 4)];
+        let mut events = vec![ev(0.0, Class::ONLINE, 64, 4)];
         for _ in 0..100 {
-            events.push(ev(0.0, Class::Offline, 512, 64));
+            events.push(ev(0.0, Class::OFFLINE, 512, 64));
         }
         let r = sim.run(&Trace::new(events), 20.0).unwrap();
         assert_eq!(r.aggregate.online_finished, 1);

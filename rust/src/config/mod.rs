@@ -3,6 +3,7 @@
 //! deployment or a simulation run.
 
 use crate::cluster::router::RouterPolicy;
+use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::queues::OfflinePolicy;
 use crate::util::json::Json;
 
@@ -98,6 +99,9 @@ pub struct ServeConfig {
     /// Multi-replica deployment shape (replica count, router policy,
     /// rebalance cadence, drain deadline).
     pub cluster: ClusterConfig,
+    /// The SLO-class registry (the `classes: [...]` key). Defaults to
+    /// the paper's two-class online/offline setup.
+    pub classes: ClassRegistry,
 }
 
 impl Default for ServeConfig {
@@ -110,6 +114,7 @@ impl Default for ServeConfig {
             http_workers: 4,
             seed: 0,
             cluster: ClusterConfig::default(),
+            classes: ClassRegistry::default_two(),
         }
     }
 }
@@ -121,6 +126,10 @@ impl ServeConfig {
         let utility = j.get("utility_ratio").as_f64().unwrap_or(0.9);
         let policy = OfflinePolicy::parse(policy_name, utility)
             .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_name}'"))?;
+        let classes = match j.get("classes") {
+            Json::Null => ClassRegistry::default_two(),
+            v => ClassRegistry::from_json(v)?,
+        };
         Ok(ServeConfig {
             artifacts_dir: j
                 .get("artifacts_dir")
@@ -133,6 +142,7 @@ impl ServeConfig {
             http_workers: j.get("http_workers").as_u64().unwrap_or(4) as usize,
             seed: j.get("seed").as_u64().unwrap_or(0),
             cluster: ClusterConfig::from_json(j)?,
+            classes,
         })
     }
 
@@ -149,6 +159,7 @@ impl ServeConfig {
             ("policy", Json::from(self.policy.name())),
             ("http_workers", Json::from(self.http_workers)),
             ("seed", Json::from(self.seed)),
+            ("classes", self.classes.to_json()),
         ];
         pairs.extend(self.cluster.to_json_pairs());
         if let Some(b) = self.latency_budget_ms {
@@ -173,6 +184,33 @@ mod tests {
         assert_eq!(c2.policy, c.policy);
         assert_eq!(c2.latency_budget_ms, None);
         assert_eq!(c2.cluster, c.cluster);
+        assert_eq!(c2.classes, c.classes);
+        assert_eq!(c2.classes, ClassRegistry::default_two());
+    }
+
+    #[test]
+    fn classes_key_roundtrips_and_rejects_garbage() {
+        let j = Json::parse(
+            r#"{"classes": [
+                {"name": "chat", "tier": 2, "ttft_slo_ms": 300, "tbt_slo_ms": 50,
+                 "preempt_priority": 200, "admission": "fcfs"},
+                {"name": "batch", "tier": 0, "latency_budget": 4.0,
+                 "admission": "rate-capped", "rate_qps": 2.0,
+                 "starvation_age_s": 60}
+            ]}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.classes.len(), 2);
+        assert_eq!(c.classes.spec(crate::coordinator::request::ClassId(0)).name, "chat");
+        assert!(c.classes.spec(crate::coordinator::request::ClassId(0)).bypasses_budget());
+        let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.classes, c.classes);
+        // A malformed classes list is an error, not a silent default.
+        let bad = Json::parse(r#"{"classes": [{"tier": 1}]}"#).unwrap();
+        assert!(ServeConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"classes": "two"}"#).unwrap();
+        assert!(ServeConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -142,10 +142,10 @@ mod tests {
     #[test]
     fn features_accumulate() {
         let mut b = Batch::new();
-        b.push(entry(1, Class::Online, 128, true));
-        b.push(entry(2, Class::Online, 1, false));
-        b.push(entry(3, Class::Offline, 1, false));
-        b.push(entry(4, Class::Offline, 64, true));
+        b.push(entry(1, Class::ONLINE, 128, true));
+        b.push(entry(2, Class::ONLINE, 1, false));
+        b.push(entry(3, Class::OFFLINE, 1, false));
+        b.push(entry(4, Class::OFFLINE, 64, true));
         let f = b.features();
         assert_eq!(f.sp, 192.0);
         assert_eq!(f.sd, 2.0);
@@ -174,7 +174,7 @@ mod tests {
     #[test]
     fn batch_contains() {
         let mut b = Batch::new();
-        b.push(entry(7, Class::Online, 1, false));
+        b.push(entry(7, Class::ONLINE, 1, false));
         assert!(b.contains(7));
         assert!(!b.contains(8));
     }

@@ -1,0 +1,477 @@
+//! The SLO-class registry: the N-class generalization of the paper's
+//! online/offline dichotomy.
+//!
+//! Real fleets serve a *spectrum* of SLOs — interactive chat with tight
+//! TTFT, code completion with tight TBT, tolerant summarization, and
+//! pure-throughput batch (SLOs-Serve; ConServe's priority tiers). Every
+//! layer of this system is indexed by [`ClassId`](crate::coordinator::request::ClassId)
+//! into a [`ClassRegistry`] instead of matching on a two-variant enum:
+//!
+//! * the scheduler loops over **descending tiers** — higher tiers charge
+//!   the iteration latency budget first, lower tiers drink the residual;
+//! * **preemption only flows down-tier** (and LIFO within a class);
+//! * each class declares its own admission policy (FCFS, longest-prefix
+//!   DFS, or rate-capped FCFS), optional TTFT/TBT SLOs, a latency-budget
+//!   stance (`None` = bypass the per-iteration check like the paper's
+//!   online class; `Some(m)` = charged, with `m` a multiplier on the
+//!   iteration budget the class tolerates — the cluster router's
+//!   "tightest present class" signal), and optional starvation
+//!   protection.
+//!
+//! The compiled-in default — [`ClassRegistry::default_two`] — is exactly
+//! the paper's two-class setup, and the scheduler is behavior-preserving
+//! under it (`hygen cluster-sim --check` and the fig6/fig10 CSVs are
+//! byte-identical to the pre-registry code).
+
+use crate::coordinator::request::ClassId;
+use crate::util::json::Json;
+
+/// Hard cap on registry size. Census structures ([`super::state::PhaseCounts`],
+/// [`crate::cluster::ReplicaSnapshot`]) use fixed arrays of this length so
+/// snapshots stay `Copy` and allocation-free on the hot path.
+pub const MAX_CLASSES: usize = 8;
+
+/// How a class's waiting queue is ordered and admitted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Arrival order (the classic online queue).
+    Fcfs,
+    /// Prefix-sharing DFS order (the classic offline/PSM queue). The
+    /// concrete ordering structure (fcfs / psm / psm-fair) remains
+    /// configurable per deployment via [`OfflinePolicy`](crate::coordinator::queues::OfflinePolicy).
+    LongestPrefix,
+    /// FCFS with a token-bucket admission cap (HyGen*-style pacing).
+    RateCapped {
+        /// Admissions per second.
+        qps: f64,
+    },
+}
+
+impl AdmissionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Fcfs => "fcfs",
+            AdmissionPolicy::LongestPrefix => "longest-prefix",
+            AdmissionPolicy::RateCapped { .. } => "rate-capped",
+        }
+    }
+}
+
+/// One service class's declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassSpec {
+    /// Human-readable name (config files, `/v1/completions` `class`
+    /// field, CSV columns).
+    pub name: String,
+    /// Scheduling tier: higher = more latency-sensitive. The scheduler
+    /// visits tiers in descending order; preemption only flows strictly
+    /// down-tier.
+    pub tier: u8,
+    /// Declared TTFT SLO (ms). Classes with a TTFT SLO are routed
+    /// immediately by the cluster layer; classes without one are
+    /// *elastic* — they enter the shared backlog and are placed at
+    /// rebalance ticks.
+    pub ttft_slo_ms: Option<f64>,
+    /// Declared TBT SLO (ms), reported as per-class attainment.
+    pub tbt_slo_ms: Option<f64>,
+    /// Latency-budget stance. `None` = bypass: running decodes of this
+    /// class are scheduled regardless of the residual per-iteration
+    /// budget (the paper's online class — the budget is profiled *for*
+    /// it). `Some(m)` = SLO-charged: the class only drinks residual
+    /// budget, and `m` scales the iteration budget the class tolerates
+    /// (`1.0` = the profiled budget; larger = more tolerant — the
+    /// cluster router's "tightest present class" headroom signal; values
+    /// below `1.0` additionally cap the class's own per-iteration
+    /// spend).
+    pub latency_budget: Option<f64>,
+    /// Preemption priority stamped on requests at admission (higher
+    /// wins; informational — scheduling order is governed by `tier`).
+    pub preempt_priority: u8,
+    pub admission: AdmissionPolicy,
+    /// Starvation protection: once the head of this class's queue has
+    /// waited longer than this many seconds, its admission bypasses the
+    /// class's rate cap (it still respects memory and the latency
+    /// budget).
+    pub starvation_age_s: Option<f64>,
+}
+
+impl ClassSpec {
+    /// True when this class bypasses the per-iteration latency check.
+    pub fn bypasses_budget(&self) -> bool {
+        self.latency_budget.is_none()
+    }
+
+    /// The class's tolerance multiplier on the iteration budget (bypass
+    /// classes define the budget, i.e. tolerance 1.0).
+    pub fn budget_tolerance(&self) -> f64 {
+        self.latency_budget.unwrap_or(1.0)
+    }
+
+    /// Elastic classes have no TTFT SLO: the cluster layer may hold them
+    /// in the shared backlog instead of placing them at arrival.
+    pub fn elastic(&self) -> bool {
+        self.ttft_slo_ms.is_none()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::from(self.name.as_str())),
+            ("tier", Json::from(self.tier as u64)),
+            ("preempt_priority", Json::from(self.preempt_priority as u64)),
+            ("admission", Json::from(self.admission.name())),
+        ];
+        if let AdmissionPolicy::RateCapped { qps } = self.admission {
+            pairs.push(("rate_qps", Json::from(qps)));
+        }
+        if let Some(v) = self.ttft_slo_ms {
+            pairs.push(("ttft_slo_ms", Json::from(v)));
+        }
+        if let Some(v) = self.tbt_slo_ms {
+            pairs.push(("tbt_slo_ms", Json::from(v)));
+        }
+        if let Some(v) = self.latency_budget {
+            pairs.push(("latency_budget", Json::from(v)));
+        }
+        if let Some(v) = self.starvation_age_s {
+            pairs.push(("starvation_age_s", Json::from(v)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<ClassSpec> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("class spec needs a string 'name'"))?
+            .to_string();
+        let tier = j
+            .get("tier")
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("class '{name}' needs an integer 'tier'"))?;
+        anyhow::ensure!(tier <= u8::MAX as u64, "class '{name}': tier out of range");
+        let opt = |key: &str| -> anyhow::Result<Option<f64>> {
+            match j.get(key) {
+                Json::Null => Ok(None),
+                v => v
+                    .as_f64()
+                    .filter(|x| x.is_finite() && *x >= 0.0)
+                    .map(Some)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("class '{name}': {key} must be a non-negative number")
+                    }),
+            }
+        };
+        let admission = match j.get("admission").as_str().unwrap_or("fcfs") {
+            "fcfs" => AdmissionPolicy::Fcfs,
+            "longest-prefix" => AdmissionPolicy::LongestPrefix,
+            "rate-capped" => {
+                let qps = opt("rate_qps")?
+                    .ok_or_else(|| anyhow::anyhow!("class '{name}': rate-capped needs rate_qps"))?;
+                anyhow::ensure!(qps > 0.0, "class '{name}': rate_qps must be positive");
+                AdmissionPolicy::RateCapped { qps }
+            }
+            other => anyhow::bail!("class '{name}': unknown admission '{other}'"),
+        };
+        let preempt_priority = match j.get("preempt_priority") {
+            Json::Null => 0,
+            v => v
+                .as_u64()
+                .filter(|x| *x <= u8::MAX as u64)
+                .ok_or_else(|| anyhow::anyhow!("class '{name}': preempt_priority must be 0-255"))?
+                as u8,
+        };
+        let ttft_slo_ms = opt("ttft_slo_ms")?;
+        let tbt_slo_ms = opt("tbt_slo_ms")?;
+        let latency_budget = opt("latency_budget")?;
+        // A zero tolerance would make the class silently unschedulable
+        // (its spend cap can never fit a token) and poison the cluster
+        // headroom signal with 0 * inf = NaN. Bypass is spelled by
+        // omitting the key, not by zeroing it.
+        anyhow::ensure!(
+            latency_budget != Some(0.0),
+            "class '{name}': latency_budget must be positive (omit the key to bypass)"
+        );
+        let starvation_age_s = opt("starvation_age_s")?;
+        Ok(ClassSpec {
+            name,
+            tier: tier as u8,
+            ttft_slo_ms,
+            tbt_slo_ms,
+            latency_budget,
+            preempt_priority,
+            admission,
+            starvation_age_s,
+        })
+    }
+}
+
+/// The session's class table, indexed by [`ClassId`]. Validated once at
+/// construction; the scheduler and cluster layer read the precomputed
+/// tier orders every iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassRegistry {
+    specs: Vec<ClassSpec>,
+    /// Class ids by descending tier (ties: ascending id) — the
+    /// scheduler's pass order.
+    order_desc: Vec<ClassId>,
+    /// Class ids by ascending tier (ties: ascending id) — the preemption
+    /// victim search order.
+    order_asc: Vec<ClassId>,
+}
+
+impl ClassRegistry {
+    pub fn new(specs: Vec<ClassSpec>) -> anyhow::Result<ClassRegistry> {
+        anyhow::ensure!(!specs.is_empty(), "registry needs at least one class");
+        anyhow::ensure!(
+            specs.len() <= MAX_CLASSES,
+            "registry supports at most {MAX_CLASSES} classes, got {}",
+            specs.len()
+        );
+        for (i, a) in specs.iter().enumerate() {
+            anyhow::ensure!(!a.name.is_empty(), "class {i} has an empty name");
+            if let Some(b) = a.latency_budget {
+                // Zero/negative/non-finite tolerances make the class
+                // unschedulable and poison the cluster headroom signal
+                // with 0 * inf = NaN; bypass is spelled `None`.
+                anyhow::ensure!(
+                    b.is_finite() && b > 0.0,
+                    "class '{}': latency_budget must be a positive finite number \
+                     (use None to bypass the budget)",
+                    a.name
+                );
+            }
+            for b in &specs[..i] {
+                anyhow::ensure!(a.name != b.name, "duplicate class name '{}'", a.name);
+            }
+        }
+        let top = specs.iter().map(|s| s.tier).max().unwrap();
+        anyhow::ensure!(
+            specs[0].tier == top,
+            "class 0 ('{}') must be a top-tier class: the metrics/report \
+             layer treats index 0 as the flagship interactive class",
+            specs[0].name
+        );
+        let mut order_desc: Vec<ClassId> = (0..specs.len() as u16).map(ClassId).collect();
+        order_desc.sort_by_key(|c| (std::cmp::Reverse(specs[c.index()].tier), c.0));
+        let mut order_asc: Vec<ClassId> = (0..specs.len() as u16).map(ClassId).collect();
+        order_asc.sort_by_key(|c| (specs[c.index()].tier, c.0));
+        Ok(ClassRegistry { specs, order_desc, order_asc })
+    }
+
+    /// The paper's two-class setup: a budget-bypassing FCFS online class
+    /// above a budget-charged longest-prefix offline class. The
+    /// compiled-in default everywhere a registry is not configured.
+    pub fn default_two() -> ClassRegistry {
+        ClassRegistry::new(vec![
+            ClassSpec {
+                name: "online".into(),
+                tier: 1,
+                ttft_slo_ms: Some(1000.0),
+                tbt_slo_ms: Some(100.0),
+                latency_budget: None,
+                preempt_priority: 100,
+                admission: AdmissionPolicy::Fcfs,
+                starvation_age_s: None,
+            },
+            ClassSpec {
+                name: "offline".into(),
+                tier: 0,
+                ttft_slo_ms: None,
+                tbt_slo_ms: None,
+                latency_budget: Some(1.0),
+                preempt_priority: 0,
+                admission: AdmissionPolicy::LongestPrefix,
+                starvation_age_s: None,
+            },
+        ])
+        .expect("compiled-in default registry is valid")
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn spec(&self, c: ClassId) -> &ClassSpec {
+        &self.specs[c.index()]
+    }
+
+    pub fn specs(&self) -> &[ClassSpec] {
+        &self.specs
+    }
+
+    /// All class ids in index order.
+    pub fn ids(&self) -> impl Iterator<Item = ClassId> + '_ {
+        (0..self.specs.len() as u16).map(ClassId)
+    }
+
+    /// Class ids by descending tier (scheduler pass order).
+    pub fn tier_order_desc(&self) -> &[ClassId] {
+        &self.order_desc
+    }
+
+    /// Class ids by ascending tier (preemption victim search order).
+    pub fn tier_order_asc(&self) -> &[ClassId] {
+        &self.order_asc
+    }
+
+    /// The highest tier present in the registry.
+    pub fn top_tier(&self) -> u8 {
+        self.specs[self.order_desc[0].index()].tier
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<ClassId> {
+        self.specs
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| ClassId(i as u16))
+    }
+
+    /// The registry as a JSON array (the `classes` config key).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.specs.iter().map(|s| s.to_json()).collect())
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ClassRegistry> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'classes' must be an array of class specs"))?;
+        let specs = arr.iter().map(ClassSpec::from_json).collect::<anyhow::Result<Vec<_>>>()?;
+        ClassRegistry::new(specs)
+    }
+}
+
+impl Default for ClassRegistry {
+    fn default() -> Self {
+        ClassRegistry::default_two()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, tier: u8) -> ClassSpec {
+        ClassSpec {
+            name: name.into(),
+            tier,
+            ttft_slo_ms: None,
+            tbt_slo_ms: None,
+            latency_budget: Some(1.0),
+            preempt_priority: 0,
+            admission: AdmissionPolicy::Fcfs,
+            starvation_age_s: None,
+        }
+    }
+
+    #[test]
+    fn default_two_matches_the_paper_shape() {
+        let r = ClassRegistry::default_two();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.by_name("online"), Some(ClassId::ONLINE));
+        assert_eq!(r.by_name("offline"), Some(ClassId::OFFLINE));
+        assert!(r.spec(ClassId::ONLINE).bypasses_budget());
+        assert!(!r.spec(ClassId::OFFLINE).bypasses_budget());
+        assert!(!r.spec(ClassId::ONLINE).elastic());
+        assert!(r.spec(ClassId::OFFLINE).elastic());
+        assert_eq!(r.tier_order_desc(), &[ClassId::ONLINE, ClassId::OFFLINE]);
+        assert_eq!(r.tier_order_asc(), &[ClassId::OFFLINE, ClassId::ONLINE]);
+        assert_eq!(r.top_tier(), 1);
+        assert_eq!(r.spec(ClassId::ONLINE).budget_tolerance(), 1.0);
+        assert_eq!(r.spec(ClassId::OFFLINE).budget_tolerance(), 1.0);
+    }
+
+    #[test]
+    fn tier_orders_break_ties_by_index() {
+        let r = ClassRegistry::new(vec![
+            spec("a", 2),
+            spec("b", 0),
+            spec("c", 2),
+            spec("d", 1),
+        ])
+        .unwrap();
+        let desc: Vec<u16> = r.tier_order_desc().iter().map(|c| c.0).collect();
+        assert_eq!(desc, vec![0, 2, 3, 1]);
+        let asc: Vec<u16> = r.tier_order_asc().iter().map(|c| c.0).collect();
+        assert_eq!(asc, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_registries() {
+        assert!(ClassRegistry::new(vec![]).is_err());
+        assert!(
+            ClassRegistry::new(vec![spec("x", 0), spec("x", 1)]).is_err(),
+            "duplicate names"
+        );
+        assert!(
+            ClassRegistry::new(vec![spec("low", 0), spec("high", 3)]).is_err(),
+            "class 0 must be top-tier"
+        );
+        let too_many: Vec<ClassSpec> =
+            (0..MAX_CLASSES + 1).map(|i| spec(&format!("c{i}"), 0)).collect();
+        assert!(ClassRegistry::new(too_many).is_err());
+        // The API path enforces positive finite tolerances too, not just
+        // the JSON parser.
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let s = ClassSpec { latency_budget: Some(bad), ..spec("z", 0) };
+            assert!(
+                ClassRegistry::new(vec![s]).is_err(),
+                "latency_budget {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let r = ClassRegistry::new(vec![
+            ClassSpec {
+                name: "chat".into(),
+                tier: 3,
+                ttft_slo_ms: Some(300.0),
+                tbt_slo_ms: Some(50.0),
+                latency_budget: None,
+                preempt_priority: 200,
+                admission: AdmissionPolicy::Fcfs,
+                starvation_age_s: None,
+            },
+            ClassSpec {
+                name: "batch".into(),
+                tier: 0,
+                ttft_slo_ms: None,
+                tbt_slo_ms: None,
+                latency_budget: Some(4.0),
+                preempt_priority: 0,
+                admission: AdmissionPolicy::RateCapped { qps: 2.5 },
+                starvation_age_s: Some(120.0),
+            },
+        ])
+        .unwrap();
+        let j = r.to_json();
+        let back = ClassRegistry::from_json(&j).unwrap();
+        assert_eq!(back, r);
+        let j2 = ClassRegistry::default_two().to_json();
+        assert_eq!(ClassRegistry::from_json(&j2).unwrap(), ClassRegistry::default_two());
+    }
+
+    #[test]
+    fn json_rejects_malformed_specs() {
+        let bad = Json::parse(r#"[{"tier": 1}]"#).unwrap();
+        assert!(ClassRegistry::from_json(&bad).is_err(), "missing name");
+        let bad = Json::parse(r#"[{"name": "x"}]"#).unwrap();
+        assert!(ClassRegistry::from_json(&bad).is_err(), "missing tier");
+        let bad = Json::parse(r#"[{"name": "x", "tier": 0, "admission": "magic"}]"#).unwrap();
+        assert!(ClassRegistry::from_json(&bad).is_err(), "unknown admission");
+        let bad =
+            Json::parse(r#"[{"name": "x", "tier": 0, "admission": "rate-capped"}]"#).unwrap();
+        assert!(ClassRegistry::from_json(&bad).is_err(), "rate-capped needs rate_qps");
+        assert!(ClassRegistry::from_json(&Json::parse("{}").unwrap()).is_err(), "not an array");
+        let bad = Json::parse(r#"[{"name": "x", "tier": 0, "latency_budget": 0}]"#).unwrap();
+        assert!(
+            ClassRegistry::from_json(&bad).is_err(),
+            "a zero tolerance is unschedulable, not a bypass spelling"
+        );
+    }
+}

@@ -8,6 +8,14 @@
 //! *utility ratio*) or from the stalest end of the freshness tree with
 //! probability `1-u`. A request scheduled from either structure is removed
 //! from both, keeping them synchronized.
+//!
+//! With the N-class SLO registry, fairness composes per class: each
+//! `longest-prefix` class runs its own `FairPsm` instance (independently
+//! seeded — see `EngineState::with_registry`), intra-class starvation is
+//! handled here, and *cross*-class starvation is the scheduler's job —
+//! per-class admission rate caps plus the spec's `starvation_age_s`
+//! override (the queue head bypasses its class rate cap once it has
+//! waited past the threshold).
 
 use super::psm::PrefixTree;
 use super::request::RequestId;

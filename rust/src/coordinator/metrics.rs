@@ -1,20 +1,65 @@
-//! Serving metrics: TTFT/TBT sample collection per class, throughput
-//! accounting (TPS/QPS), and windowed temporal series (Fig. 8's breakdown,
-//! the `/metrics` endpoint, and every figure harness).
+//! Serving metrics: per-class TTFT/TBT sample collection, per-class
+//! throughput accounting (TPS/QPS), and windowed temporal series (Fig.
+//! 8's breakdown, the `/metrics` endpoint, and every figure harness).
+//!
+//! Everything is **class-indexed**: one `ClassAgg` slot per SLO class
+//! holds that class's latency summaries, token/finish counters, and
+//! temporal series. Latency (TTFT/TBT) sampling is opt-in per class —
+//! the flagship class 0 is tracked by default (the paper's online
+//! metrics), harvest classes only when
+//! [`Metrics::set_track_latency`] enables them (e.g. the `multi-slo`
+//! experiment tracks every class with a declared SLO). Untracked classes
+//! skip the sample vectors entirely, which keeps the steady-state decode
+//! loop allocation-free (see `tests/alloc_free_loop.rs`).
 //!
 //! Per-request bookkeeping lives in one dense slab indexed by
-//! [`RequestId`] (ids are allocated monotonically from 1 by the engine),
-//! replacing the previous three `HashMap`s that each cost a probe *per
-//! generated token*. A slot is written at arrival, updated per token, and
-//! marked finished — never removed mid-run, so the steady-state token
-//! path is a single bounds-checked index with zero hashing and zero
-//! allocation (the slab only grows at admission time, amortized).
+//! [`RequestId`] (ids are allocated monotonically from 1 by the engine).
+//! A slot is written at arrival, updated per token, and marked finished —
+//! never removed mid-run, so the steady-state token path is a single
+//! bounds-checked index with zero hashing and zero allocation (the slab
+//! only grows at admission time, amortized).
 
 use super::request::{Class, RequestId, Slo, SloMetric};
 use crate::util::json::Json;
 use crate::util::stats::{Summary, WindowSeries};
 
+/// Per-class aggregate report block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassReport {
+    pub finished: usize,
+    pub tps: f64,
+    pub qps: f64,
+    pub mean_ttft_ms: f64,
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub mean_tbt_ms: f64,
+    pub p50_tbt_ms: f64,
+    pub p99_tbt_ms: f64,
+}
+
+impl ClassReport {
+    pub fn to_json(&self, class_index: usize) -> Json {
+        Json::obj(vec![
+            ("class", Json::from(class_index)),
+            ("finished", self.finished.into()),
+            ("tps", self.tps.into()),
+            ("qps", self.qps.into()),
+            ("mean_ttft_ms", self.mean_ttft_ms.into()),
+            ("p50_ttft_ms", self.p50_ttft_ms.into()),
+            ("p99_ttft_ms", self.p99_ttft_ms.into()),
+            ("mean_tbt_ms", self.mean_tbt_ms.into()),
+            ("p50_tbt_ms", self.p50_tbt_ms.into()),
+            ("p99_tbt_ms", self.p99_tbt_ms.into()),
+        ])
+    }
+}
+
 /// Aggregated latency/throughput report for one run.
+///
+/// The flat fields are the classic two-class view every experiment reads:
+/// top-level latency numbers are the **flagship class 0** (the paper's
+/// online metrics), `online_*` is class 0, `offline_*` sums classes
+/// 1..N. The dense per-class blocks live in `classes`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Report {
     pub mean_ttft_ms: f64,
@@ -31,16 +76,29 @@ pub struct Report {
     pub online_qps: f64,
     pub offline_qps: f64,
     pub duration_s: f64,
+    /// Dense per-class blocks, indexed by [`Class`].
+    pub classes: Vec<ClassReport>,
 }
 
 impl Report {
-    /// Value of one of the four statistical SLO metrics (online class).
+    /// Value of one of the four statistical SLO metrics (flagship class).
     pub fn metric(&self, m: SloMetric) -> f64 {
         match m {
             SloMetric::MeanTtft => self.mean_ttft_ms,
             SloMetric::P99Ttft => self.p99_ttft_ms,
             SloMetric::MeanTbt => self.mean_tbt_ms,
             SloMetric::P99Tbt => self.p99_tbt_ms,
+        }
+    }
+
+    /// One class's value of an SLO metric (per-tier attainment checks).
+    pub fn class_metric(&self, class: Class, m: SloMetric) -> f64 {
+        let c = &self.classes[class.index()];
+        match m {
+            SloMetric::MeanTtft => c.mean_ttft_ms,
+            SloMetric::P99Ttft => c.p99_ttft_ms,
+            SloMetric::MeanTbt => c.mean_tbt_ms,
+            SloMetric::P99Tbt => c.p99_tbt_ms,
         }
     }
 
@@ -64,6 +122,12 @@ impl Report {
             ("online_qps", self.online_qps.into()),
             ("offline_qps", self.offline_qps.into()),
             ("duration_s", self.duration_s.into()),
+            (
+                "classes",
+                Json::Arr(
+                    self.classes.iter().enumerate().map(|(i, c)| c.to_json(i)).collect(),
+                ),
+            ),
         ])
     }
 }
@@ -86,7 +150,7 @@ struct ReqSlot {
 impl Default for ReqSlot {
     fn default() -> Self {
         ReqSlot {
-            class: Class::Online,
+            class: Class::ONLINE,
             arrival: 0.0,
             last_token: 0.0,
             seen_first: false,
@@ -96,63 +160,126 @@ impl Default for ReqSlot {
     }
 }
 
-/// Streaming collector the engine feeds as tokens are produced.
-///
-/// TTFT and TBT are **online-class** metrics (the SLO-bound side);
-/// throughput is tracked per class. Times are in seconds.
+/// One class's aggregate state.
 #[derive(Debug)]
-pub struct Metrics {
+struct ClassAgg {
     ttft: Summary,
     tbt: Summary,
+    tokens: u64,
+    finished: usize,
+    /// Collect TTFT/TBT samples for this class (see the module docs).
+    track_latency: bool,
+    tps_series: WindowSeries,
+    qps_series: WindowSeries,
+}
+
+impl ClassAgg {
+    fn new(window_s: f64, track_latency: bool) -> ClassAgg {
+        ClassAgg {
+            ttft: Summary::new(),
+            tbt: Summary::new(),
+            tokens: 0,
+            finished: 0,
+            track_latency,
+            tps_series: WindowSeries::new(window_s),
+            qps_series: WindowSeries::new(window_s),
+        }
+    }
+
+    fn report(&mut self, d: f64) -> ClassReport {
+        ClassReport {
+            finished: self.finished,
+            tps: self.tokens as f64 / d,
+            qps: self.finished as f64 / d,
+            mean_ttft_ms: self.ttft.mean(),
+            p50_ttft_ms: self.ttft.p50(),
+            p99_ttft_ms: self.ttft.p99(),
+            mean_tbt_ms: self.tbt.mean(),
+            p50_tbt_ms: self.tbt.p50(),
+            p99_tbt_ms: self.tbt.p99(),
+        }
+    }
+}
+
+/// Streaming collector the engine feeds as tokens are produced.
+///
+/// Times are in seconds. Class slots are created on demand (the default
+/// two are pre-created), so the collector works with any registry size
+/// without carrying the registry itself.
+#[derive(Debug)]
+pub struct Metrics {
+    classes: Vec<ClassAgg>,
     /// Dense per-request slab, indexed by `RequestId`.
     slots: Vec<ReqSlot>,
-    online_tokens: u64,
-    offline_tokens: u64,
-    online_finished: usize,
-    offline_finished: usize,
-    /// Temporal series (window = 1s by default) for Fig. 8-style plots.
-    pub online_tps_series: WindowSeries,
-    pub offline_tps_series: WindowSeries,
-    pub online_qps_series: WindowSeries,
+    window_s: f64,
     end_time: f64,
 }
 
 impl Metrics {
     pub fn new(window_s: f64) -> Metrics {
         Metrics {
-            ttft: Summary::new(),
-            tbt: Summary::new(),
+            // Flagship class 0 tracks latency by default (the paper's
+            // online TTFT/TBT); the harvest slot does not.
+            classes: vec![ClassAgg::new(window_s, true), ClassAgg::new(window_s, false)],
             slots: Vec::new(),
-            online_tokens: 0,
-            offline_tokens: 0,
-            online_finished: 0,
-            offline_finished: 0,
-            online_tps_series: WindowSeries::new(window_s),
-            offline_tps_series: WindowSeries::new(window_s),
-            online_qps_series: WindowSeries::new(window_s),
+            window_s,
             end_time: 0.0,
         }
     }
 
+    fn ensure_class(&mut self, class: Class) {
+        while self.classes.len() <= class.index() {
+            self.classes.push(ClassAgg::new(self.window_s, false));
+        }
+    }
+
+    /// Opt a class in (or out) of TTFT/TBT sample collection. Enable this
+    /// for every class with a declared SLO *before* the run; flipping it
+    /// mid-run simply starts/stops sampling.
+    pub fn set_track_latency(&mut self, class: Class, track: bool) {
+        self.ensure_class(class);
+        self.classes[class.index()].track_latency = track;
+    }
+
+    /// Number of class slots currently materialized.
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Per-class output-TPS series (Fig. 8's temporal breakdown).
+    pub fn tps_series(&self, class: Class) -> &WindowSeries {
+        &self.classes[class.index()].tps_series
+    }
+
+    /// Per-class arrival-QPS series.
+    pub fn qps_series(&self, class: Class) -> &WindowSeries {
+        &self.classes[class.index()].qps_series
+    }
+
     /// Pre-size internal storage so a bounded measurement window is
     /// allocation-free: slab slots for ids below `max_id`, capacity for
-    /// `extra_samples` more TTFT/TBT samples, and series bucket capacity
-    /// out to `horizon_s`. Used by the steady-state allocation probe.
+    /// `extra_samples` more TTFT/TBT samples per latency-tracked class,
+    /// and series bucket capacity out to `horizon_s` for every class.
+    /// Used by the steady-state allocation probe.
     pub fn preallocate(&mut self, max_id: RequestId, extra_samples: usize, horizon_s: f64) {
         let want = max_id as usize + 1;
         if want > self.slots.len() {
             self.slots.resize(want, ReqSlot::default());
         }
-        self.ttft.reserve(extra_samples);
-        self.tbt.reserve(extra_samples);
-        self.online_tps_series.reserve_until(horizon_s);
-        self.offline_tps_series.reserve_until(horizon_s);
-        self.online_qps_series.reserve_until(horizon_s);
+        for agg in &mut self.classes {
+            if agg.track_latency {
+                agg.ttft.reserve(extra_samples);
+                agg.tbt.reserve(extra_samples);
+            }
+            agg.tps_series.reserve_until(horizon_s);
+            agg.qps_series.reserve_until(horizon_s);
+        }
     }
 
     /// Request entered the system (its queue) at time `t`. Re-arrival of
     /// an already-used id (id reuse across logical runs) resets its slot.
     pub fn on_arrival(&mut self, id: RequestId, class: Class, t: f64) {
+        self.ensure_class(class);
         let idx = id as usize;
         if idx >= self.slots.len() {
             self.slots.resize(idx + 1, ReqSlot::default());
@@ -165,9 +292,7 @@ impl Metrics {
             finished: false,
             occupied: true,
         };
-        if class.is_online() {
-            self.online_qps_series.record(t, 1.0);
-        }
+        self.classes[class.index()].qps_series.record(t, 1.0);
         self.end_time = self.end_time.max(t);
     }
 
@@ -180,25 +305,18 @@ impl Metrics {
             return;
         }
         self.end_time = self.end_time.max(t);
+        let agg = &mut self.classes[slot.class.index()];
         if !slot.seen_first {
             slot.seen_first = true;
-            if slot.class.is_online() {
-                self.ttft.add((t - slot.arrival) * 1e3);
+            if agg.track_latency {
+                agg.ttft.add((t - slot.arrival) * 1e3);
             }
-        } else if slot.class.is_online() {
-            self.tbt.add((t - slot.last_token) * 1e3);
+        } else if agg.track_latency {
+            agg.tbt.add((t - slot.last_token) * 1e3);
         }
         slot.last_token = t;
-        match slot.class {
-            Class::Online => {
-                self.online_tokens += n as u64;
-                self.online_tps_series.record(t, n as f64);
-            }
-            Class::Offline => {
-                self.offline_tokens += n as u64;
-                self.offline_tps_series.record(t, n as f64);
-            }
-        }
+        agg.tokens += n as u64;
+        agg.tps_series.record(t, n as f64);
     }
 
     /// Request completed at time `t`. Double-finish and unknown ids are
@@ -211,55 +329,68 @@ impl Metrics {
         }
         slot.finished = true;
         self.end_time = self.end_time.max(t);
-        match slot.class {
-            Class::Online => self.online_finished += 1,
-            Class::Offline => self.offline_finished += 1,
-        }
+        self.classes[slot.class.index()].finished += 1;
     }
 
     /// Merge another collector's latency samples and counters into this
-    /// one — cluster-wide aggregation over per-replica collectors. The
-    /// merged percentiles are exact (sample-by-sample via
+    /// one — cluster-wide aggregation over per-replica collectors, class
+    /// by class. The merged percentiles are exact (sample-by-sample via
     /// [`Summary::merge`], no full sort), not an average of averages.
     /// Temporal series and the per-request slab are *not* merged (they
     /// are replica-local views).
     pub fn absorb(&mut self, other: &Metrics) {
-        self.ttft.merge(&other.ttft);
-        self.tbt.merge(&other.tbt);
-        self.online_tokens += other.online_tokens;
-        self.offline_tokens += other.offline_tokens;
-        self.online_finished += other.online_finished;
-        self.offline_finished += other.offline_finished;
+        for (i, o) in other.classes.iter().enumerate() {
+            self.ensure_class(Class(i as u16));
+            let agg = &mut self.classes[i];
+            agg.ttft.merge(&o.ttft);
+            agg.tbt.merge(&o.tbt);
+            agg.tokens += o.tokens;
+            agg.finished += o.finished;
+        }
         self.end_time = self.end_time.max(other.end_time);
     }
 
+    /// Output tokens of the flagship class (class 0).
     pub fn online_token_count(&self) -> u64 {
-        self.online_tokens
+        self.classes[0].tokens
     }
 
+    /// Output tokens of every class beyond the flagship.
     pub fn offline_token_count(&self) -> u64 {
-        self.offline_tokens
+        self.classes[1..].iter().map(|c| c.tokens).sum()
+    }
+
+    /// Output tokens of one class.
+    pub fn class_token_count(&self, class: Class) -> u64 {
+        self.classes[class.index()].tokens
     }
 
     /// Build the aggregate report over `[0, duration_s]` (defaults to the
     /// last observed event time).
     pub fn report(&mut self, duration_s: Option<f64>) -> Report {
         let d = duration_s.unwrap_or(self.end_time).max(1e-9);
+        let classes: Vec<ClassReport> = self.classes.iter_mut().map(|c| c.report(d)).collect();
+        let flag = classes[0].clone();
+        let offline_finished: usize = classes[1..].iter().map(|c| c.finished).sum();
+        let offline_tps: f64 = classes[1..].iter().map(|c| c.tps).sum();
+        let offline_qps: f64 = classes[1..].iter().map(|c| c.qps).sum();
+        let total_tps: f64 = classes.iter().map(|c| c.tps).sum();
         Report {
-            mean_ttft_ms: self.ttft.mean(),
-            p50_ttft_ms: self.ttft.p50(),
-            p99_ttft_ms: self.ttft.p99(),
-            mean_tbt_ms: self.tbt.mean(),
-            p50_tbt_ms: self.tbt.p50(),
-            p99_tbt_ms: self.tbt.p99(),
-            online_finished: self.online_finished,
-            offline_finished: self.offline_finished,
-            online_tps: self.online_tokens as f64 / d,
-            offline_tps: self.offline_tokens as f64 / d,
-            total_tps: (self.online_tokens + self.offline_tokens) as f64 / d,
-            online_qps: self.online_finished as f64 / d,
-            offline_qps: self.offline_finished as f64 / d,
+            mean_ttft_ms: flag.mean_ttft_ms,
+            p50_ttft_ms: flag.p50_ttft_ms,
+            p99_ttft_ms: flag.p99_ttft_ms,
+            mean_tbt_ms: flag.mean_tbt_ms,
+            p50_tbt_ms: flag.p50_tbt_ms,
+            p99_tbt_ms: flag.p99_tbt_ms,
+            online_finished: flag.finished,
+            offline_finished,
+            online_tps: flag.tps,
+            offline_tps,
+            total_tps,
+            online_qps: flag.qps,
+            offline_qps,
             duration_s: d,
+            classes,
         }
     }
 }
@@ -271,12 +402,12 @@ mod tests {
     #[test]
     fn ttft_and_tbt_online_only() {
         let mut m = Metrics::new(1.0);
-        m.on_arrival(1, Class::Online, 0.0);
-        m.on_arrival(2, Class::Offline, 0.0);
+        m.on_arrival(1, Class::ONLINE, 0.0);
+        m.on_arrival(2, Class::OFFLINE, 0.0);
         m.on_tokens(1, 0.050, 1); // TTFT 50ms
         m.on_tokens(1, 0.080, 1); // TBT 30ms
         m.on_tokens(1, 0.120, 1); // TBT 40ms
-        m.on_tokens(2, 1.0, 1); // offline: no TTFT/TBT samples
+        m.on_tokens(2, 1.0, 1); // offline: no TTFT/TBT samples by default
         m.on_tokens(2, 2.0, 1);
         m.on_finish(1, 0.120);
         let r = m.report(Some(2.0));
@@ -286,12 +417,45 @@ mod tests {
         assert_eq!(r.offline_finished, 0);
         assert!((r.online_tps - 1.5).abs() < 1e-9);
         assert!((r.offline_tps - 1.0).abs() < 1e-9);
+        assert_eq!(r.classes.len(), 2);
+        assert_eq!(r.classes[0].mean_ttft_ms, r.mean_ttft_ms);
+        assert_eq!(r.classes[1].mean_ttft_ms, 0.0, "untracked class takes no samples");
+    }
+
+    #[test]
+    fn tracked_class_collects_latency_samples() {
+        let mut m = Metrics::new(1.0);
+        m.set_track_latency(Class::OFFLINE, true);
+        m.on_arrival(1, Class::OFFLINE, 0.0);
+        m.on_tokens(1, 0.040, 1);
+        m.on_tokens(1, 0.070, 1);
+        m.on_finish(1, 0.070);
+        let r = m.report(Some(1.0));
+        assert!((r.classes[1].mean_ttft_ms - 40.0).abs() < 1e-9);
+        assert!((r.classes[1].mean_tbt_ms - 30.0).abs() < 1e-9);
+        assert_eq!(r.mean_ttft_ms, 0.0, "flagship untouched");
+        assert_eq!(r.class_metric(Class::OFFLINE, SloMetric::MeanTtft), 40.0);
+    }
+
+    #[test]
+    fn third_class_slot_created_on_demand() {
+        let mut m = Metrics::new(1.0);
+        m.set_track_latency(Class(2), true);
+        m.on_arrival(7, Class(2), 0.0);
+        m.on_tokens(7, 0.025, 1);
+        m.on_finish(7, 0.025);
+        let r = m.report(Some(1.0));
+        assert_eq!(r.classes.len(), 3);
+        assert_eq!(r.classes[2].finished, 1);
+        assert!((r.classes[2].mean_ttft_ms - 25.0).abs() < 1e-9);
+        assert_eq!(r.offline_finished, 1, "classes 1..N sum into the offline view");
+        assert!((r.offline_tps - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn prefill_chunk_tokens_counted_in_tps() {
         let mut m = Metrics::new(1.0);
-        m.on_arrival(1, Class::Offline, 0.0);
+        m.on_arrival(1, Class::OFFLINE, 0.0);
         m.on_tokens(1, 0.5, 4); // e.g. speculative/multi-token event
         let r = m.report(Some(1.0));
         assert!((r.offline_tps - 4.0).abs() < 1e-9);
@@ -300,7 +464,7 @@ mod tests {
     #[test]
     fn report_metric_and_slo() {
         let mut m = Metrics::new(1.0);
-        m.on_arrival(1, Class::Online, 0.0);
+        m.on_arrival(1, Class::ONLINE, 0.0);
         m.on_tokens(1, 0.040, 1);
         let r = m.report(Some(1.0));
         assert_eq!(r.metric(SloMetric::MeanTtft), r.mean_ttft_ms);
@@ -322,9 +486,9 @@ mod tests {
     fn qps_series_counts_arrivals() {
         let mut m = Metrics::new(10.0);
         for i in 0..30 {
-            m.on_arrival(i, Class::Online, i as f64);
+            m.on_arrival(i, Class::ONLINE, i as f64);
         }
-        let rates = m.online_qps_series.rates();
+        let rates = m.qps_series(Class::ONLINE).rates();
         assert_eq!(rates.len(), 3);
         assert!((rates[0] - 1.0).abs() < 1e-9);
     }
@@ -332,22 +496,26 @@ mod tests {
     #[test]
     fn json_report_has_fields() {
         let mut m = Metrics::new(1.0);
-        m.on_arrival(1, Class::Online, 0.0);
+        m.on_arrival(1, Class::ONLINE, 0.0);
         m.on_tokens(1, 0.1, 1);
         let j = m.report(Some(1.0)).to_json();
         assert!(j.get("mean_ttft_ms").as_f64().is_some());
         assert!(j.get("total_tps").as_f64().is_some());
+        let classes = j.get("classes").as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        assert!(classes[0].get("p99_ttft_ms").as_f64().is_some());
+        assert_eq!(classes[1].get("class").as_u64(), Some(1));
     }
 
     #[test]
     fn slab_id_reuse_resets_slot() {
         let mut m = Metrics::new(1.0);
-        m.on_arrival(5, Class::Online, 0.0);
+        m.on_arrival(5, Class::ONLINE, 0.0);
         m.on_tokens(5, 0.010, 1);
         m.on_finish(5, 0.010);
         // Same id arrives again (logical id reuse): fresh TTFT baseline,
         // fresh finished state.
-        m.on_arrival(5, Class::Offline, 1.0);
+        m.on_arrival(5, Class::OFFLINE, 1.0);
         m.on_tokens(5, 1.5, 1);
         m.on_finish(5, 1.5);
         let r = m.report(Some(2.0));
@@ -359,8 +527,8 @@ mod tests {
     #[test]
     fn slab_out_of_order_and_double_finish() {
         let mut m = Metrics::new(1.0);
-        m.on_arrival(1, Class::Online, 0.0);
-        m.on_arrival(2, Class::Online, 0.0);
+        m.on_arrival(1, Class::ONLINE, 0.0);
+        m.on_arrival(2, Class::ONLINE, 0.0);
         m.on_tokens(2, 0.020, 1);
         m.on_tokens(1, 0.030, 1);
         // Out-of-order finish: 2 before 1; then double-finish 2.
@@ -377,14 +545,14 @@ mod tests {
     #[test]
     fn absorb_merges_samples_and_counters() {
         let mut a = Metrics::new(1.0);
-        a.on_arrival(1, Class::Online, 0.0);
+        a.on_arrival(1, Class::ONLINE, 0.0);
         a.on_tokens(1, 0.010, 1);
         a.on_tokens(1, 0.030, 1);
         a.on_finish(1, 0.030);
         let mut b = Metrics::new(1.0);
-        b.on_arrival(1, Class::Online, 0.0);
+        b.on_arrival(1, Class::ONLINE, 0.0);
         b.on_tokens(1, 0.050, 1);
-        b.on_arrival(2, Class::Offline, 0.0);
+        b.on_arrival(2, Class::OFFLINE, 0.0);
         b.on_tokens(2, 0.5, 3);
         b.on_finish(2, 0.5);
         let mut agg = Metrics::new(1.0);
@@ -407,7 +575,7 @@ mod tests {
         m.preallocate(128, 16, 60.0);
         let cap = m.slots.capacity();
         for id in 0..100u64 {
-            m.on_arrival(id, Class::Offline, 0.0);
+            m.on_arrival(id, Class::OFFLINE, 0.0);
             m.on_tokens(id, 0.5, 1);
         }
         assert_eq!(m.slots.capacity(), cap, "slab pre-sized, no growth");

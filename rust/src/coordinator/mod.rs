@@ -2,19 +2,24 @@
 //!
 //! * [`request`] / [`batch`] — the request/batch domain model and the
 //!   predictor feature vector (Eq. 1).
+//! * [`classes`] — the SLO-class registry (tiers, budgets, admission
+//!   policies); the paper's online/offline split is its two-class
+//!   default.
 //! * [`predictor`] — the linear-regression latency predictor (§4.2).
 //! * [`profiler`] — the SLO-aware latency-budget profiler (§4.2).
-//! * [`scheduler`] — the two-phase SLO-aware scheduler (§4.1, Alg. 1–2)
-//!   with priority preemption.
-//! * [`psm`] / [`fairness`] / [`queues`] — offline scheduling policies:
+//! * [`scheduler`] — the tier-loop SLO-aware scheduler (§4.1, Alg. 1–2
+//!   generalized to N classes) with down-tier preemption.
+//! * [`psm`] / [`fairness`] / [`queues`] — per-class queue policies:
 //!   FCFS, Prefix-Sharing Maximization (Alg. 3), fairness-extended PSM
-//!   (Alg. 4) behind the dual-queue architecture.
+//!   (Alg. 4) behind the class-indexed queue array.
 //! * [`block_manager`] — paged KV accounting with prefix caching.
 //! * [`runset`] — order-preserving indexed running sets (O(1) hot path).
 //! * [`state`] — the engine state the scheduler mutates.
-//! * [`metrics`] — TTFT/TBT/TPS accounting the SLO checks run on.
+//! * [`metrics`] — per-class TTFT/TBT/TPS accounting the SLO checks run
+//!   on.
 
 pub mod batch;
+pub mod classes;
 pub mod block_manager;
 pub mod fairness;
 pub mod metrics;

@@ -93,12 +93,16 @@ pub fn profile_latency_budget<F: FnMut(f64) -> Report>(
             b *= 2.0;
         }
         if !found {
-            // Infeasible at every probed budget: report the least-bad probe.
+            // Infeasible at every probed budget: report the least-bad
+            // probe. `total_cmp` orders NaN (a degenerate eval — e.g. a
+            // 0/0 latency ratio from an empty window — must not panic the
+            // profiler; NaN sorts above every real violation and is never
+            // picked while any finite probe exists).
             let best = trials
                 .iter()
                 .cloned()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .unwrap();
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .expect("the bracket scan recorded at least one trial");
             return ProfileResult {
                 budget_ms: best.0,
                 achieved_ms: best.1,
@@ -162,6 +166,7 @@ mod tests {
             online_qps: 0.0,
             offline_qps: 0.0,
             duration_s: 1.0,
+            classes: Vec::new(),
         }
     }
 
@@ -174,6 +179,34 @@ mod tests {
         assert!((r.budget_ms - 60.0).abs() < 1.0, "budget {}", r.budget_ms);
         assert!(r.achieved_ms <= 40.0);
         assert!(r.trials.len() >= 10);
+    }
+
+    #[test]
+    fn nan_producing_eval_does_not_panic() {
+        // Degenerate sample set: the minimum-budget probe violates
+        // finitely, and every larger probe reports NaN for the metric
+        // (e.g. a 0/0 latency ratio from an empty measurement window).
+        // NaN is never `<= limit`, so the bracket scan finds no compliant
+        // anchor and the infeasible least-bad-probe path runs — which
+        // used to panic in `partial_cmp(..).unwrap()`. With `total_cmp`,
+        // NaN sorts above every finite violation and the finite probe is
+        // reported.
+        let slo = Slo::new(SloMetric::MeanTbt, 5.0);
+        let cfg = ProfilerConfig { min_budget_ms: 1.0, max_budget_ms: 16.0, steps: 3, slack: 0.0 };
+        let r = profile_latency_budget(&slo, &cfg, |budget| Report {
+            mean_tbt_ms: if budget <= 1.0 { 50.0 } else { f64::NAN },
+            ..fake_eval(budget)
+        });
+        assert_eq!(r.budget_ms, 1.0, "the finite probe wins over NaN ones");
+        assert_eq!(r.achieved_ms, 50.0);
+        assert!(r.trials.len() >= 2, "the geometric scan probed NaN budgets");
+        // All-NaN evals must not panic either (NaN escapes the violation
+        // check, so the search degenerates to the minimum budget).
+        let r = profile_latency_budget(&slo, &cfg, |budget| Report {
+            mean_tbt_ms: f64::NAN,
+            ..fake_eval(budget)
+        });
+        assert!(r.achieved_ms.is_nan(), "honest report of a fully degenerate profile");
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //! cached DFS order that is rebuilt lazily — mirroring the paper's
 //! "pre-processed list derived from the prefix tree, synced up
 //! asynchronously" (Appendix A.4).
+//!
+//! With the N-class SLO registry, every `longest-prefix` class owns its
+//! *own* trie (one [`OfflineQueue`](super::queues::OfflineQueue) per
+//! class): per-class backlogs never interleave their DFS orders, and a
+//! tolerant summarization class cannot dilute the batch class's prefix
+//! families (or vice versa).
 
 use super::request::RequestId;
 use std::collections::BTreeMap;

@@ -1,5 +1,8 @@
-//! Dual-queue architecture (§4.1): a FCFS online queue and a pluggable
-//! offline queue policy (FCFS / PSM / fairness-extended PSM).
+//! Class-indexed queue architecture (§4.1, generalized): every SLO class
+//! owns one waiting queue — a plain FCFS deque ([`FcfsQueue`]) or a
+//! prefix-policy queue ([`OfflineQueue`]: FCFS / PSM / fairness-extended
+//! PSM) — behind the uniform [`ClassQueue`] interface. The paper's dual
+//! queues are the two-class default.
 //!
 //! Queues own waiting [`Request`]s; the scheduler peeks candidates in
 //! policy order, tries to fit them against its latency/chunk/memory
@@ -10,19 +13,18 @@ use super::psm::PrefixTree;
 use super::request::{Request, RequestId};
 use std::collections::{HashMap, VecDeque};
 
-/// FCFS online queue.
+/// Plain FCFS queue (the classic online queue).
 #[derive(Debug, Default)]
-pub struct OnlineQueue {
+pub struct FcfsQueue {
     q: VecDeque<Request>,
 }
 
-impl OnlineQueue {
+impl FcfsQueue {
     pub fn new() -> Self {
         Self::default()
     }
 
     pub fn push(&mut self, req: Request) {
-        debug_assert!(req.class.is_online());
         self.q.push_back(req);
     }
 
@@ -51,6 +53,17 @@ impl OnlineQueue {
     /// Ids of all waiting requests, front to back (invariant checks).
     pub fn ids(&self) -> impl Iterator<Item = RequestId> + '_ {
         self.q.iter().map(|r| r.id)
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.q.iter().any(|r| r.id == id)
+    }
+
+    /// Remove a specific request (cluster reclaim, client cancel). O(n) —
+    /// off the scheduling hot path.
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        let pos = self.q.iter().position(|r| r.id == id)?;
+        self.q.remove(pos)
     }
 
     /// Drop every waiting request (server abort path).
@@ -130,7 +143,6 @@ impl OfflineQueue {
     }
 
     pub fn push(&mut self, req: Request) {
-        debug_assert!(!req.class.is_online());
         match &mut self.order {
             Order::Fcfs(q) => q.push_back(req.id),
             Order::Psm(t) => t.insert(req.id, &req.prompt),
@@ -215,27 +227,167 @@ impl OfflineQueue {
     }
 }
 
+/// One SLO class's waiting queue: either a plain FCFS deque (classes with
+/// `fcfs` / `rate-capped` admission — the rate cap lives in the
+/// scheduler) or a prefix-policy queue (`longest-prefix` admission;
+/// boxed — the trie/fairness state is much larger than a deque). The
+/// uniform interface keeps the scheduler's admission pass class-agnostic;
+/// the two undo paths differ because only prefix queues carry the
+/// consecutive-LCP context.
+pub enum ClassQueue {
+    Fcfs(FcfsQueue),
+    Prefix(Box<OfflineQueue>),
+}
+
+impl ClassQueue {
+    /// Wrap a prefix-policy queue.
+    pub fn prefix(q: OfflineQueue) -> ClassQueue {
+        ClassQueue::Prefix(Box::new(q))
+    }
+}
+
+impl ClassQueue {
+    pub fn len(&self) -> usize {
+        match self {
+            ClassQueue::Fcfs(q) => q.len(),
+            ClassQueue::Prefix(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            ClassQueue::Fcfs(q) => q.is_empty(),
+            ClassQueue::Prefix(q) => q.is_empty(),
+        }
+    }
+
+    /// Admit an arriving request.
+    pub fn push(&mut self, req: Request) {
+        match self {
+            ClassQueue::Fcfs(q) => q.push(req),
+            ClassQueue::Prefix(q) => q.push(req),
+        }
+    }
+
+    /// Next candidate in policy order (stable across repeated peeks).
+    pub fn peek_next(&mut self) -> Option<&Request> {
+        match self {
+            ClassQueue::Fcfs(q) => q.peek(),
+            ClassQueue::Prefix(q) => q.peek_next(),
+        }
+    }
+
+    /// Pop the candidate the last `peek_next` returned.
+    pub fn pop_next(&mut self) -> Option<Request> {
+        match self {
+            ClassQueue::Fcfs(q) => q.pop(),
+            ClassQueue::Prefix(q) => q.pop_next(),
+        }
+    }
+
+    /// Return a popped request that could not be scheduled. FCFS queues
+    /// restore its head-of-line position; prefix queues re-insert it and
+    /// forget the LCP baseline (its KV is resident nowhere — see
+    /// [`OfflineQueue::reset_prefix_context`]).
+    pub fn requeue_unscheduled(&mut self, req: Request) {
+        match self {
+            ClassQueue::Fcfs(q) => q.push_front(req),
+            ClassQueue::Prefix(q) => {
+                q.push(req);
+                q.reset_prefix_context();
+            }
+        }
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        match self {
+            ClassQueue::Fcfs(q) => q.contains(id),
+            ClassQueue::Prefix(q) => q.contains(id),
+        }
+    }
+
+    /// Remove a specific request (cluster reclaim, client cancel).
+    pub fn remove(&mut self, id: RequestId) -> Option<Request> {
+        match self {
+            ClassQueue::Fcfs(q) => q.remove(id),
+            ClassQueue::Prefix(q) => q.remove(id),
+        }
+    }
+
+    /// Ids of all waiting requests (invariant checks; order is
+    /// queue-specific).
+    pub fn ids(&self) -> Box<dyn Iterator<Item = RequestId> + '_> {
+        match self {
+            ClassQueue::Fcfs(q) => Box::new(q.ids()),
+            ClassQueue::Prefix(q) => Box::new(q.ids()),
+        }
+    }
+
+    /// Arrival time of the current head candidate (starvation checks).
+    pub fn head_arrival(&mut self) -> Option<f64> {
+        self.peek_next().map(|r| r.arrival)
+    }
+
+    /// Drop every waiting request (server abort path).
+    pub fn clear(&mut self) {
+        match self {
+            ClassQueue::Fcfs(q) => q.clear(),
+            ClassQueue::Prefix(q) => q.clear(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::request::Class;
 
     fn offline(id: RequestId, prompt: &str, arrival: f64) -> Request {
-        Request::new(id, Class::Offline, arrival, prompt.len(), 8)
+        Request::new(id, Class::OFFLINE, arrival, prompt.len(), 8)
             .with_prompt(prompt.bytes().map(|b| b as u32).collect::<Vec<u32>>())
     }
 
     #[test]
-    fn online_queue_fcfs() {
-        let mut q = OnlineQueue::new();
-        q.push(Request::new(1, Class::Online, 0.0, 4, 4));
-        q.push(Request::new(2, Class::Online, 1.0, 4, 4));
+    fn fcfs_queue_basics() {
+        let mut q = FcfsQueue::new();
+        q.push(Request::new(1, Class::ONLINE, 0.0, 4, 4));
+        q.push(Request::new(2, Class::ONLINE, 1.0, 4, 4));
         assert_eq!(q.peek().unwrap().id, 1);
         let r = q.pop().unwrap();
         assert_eq!(r.id, 1);
         q.push_front(r);
         assert_eq!(q.pop().unwrap().id, 1, "push_front restores position");
         assert_eq!(q.len(), 1);
+        assert!(q.contains(2));
+        assert!(q.remove(2).is_some());
+        assert!(q.remove(2).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn class_queue_uniform_interface() {
+        for mut q in [
+            ClassQueue::Fcfs(FcfsQueue::new()),
+            ClassQueue::prefix(OfflineQueue::new(OfflinePolicy::Psm, 0)),
+        ] {
+            q.push(offline(1, "aaa", 0.0));
+            q.push(offline(2, "aab", 1.0));
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.head_arrival(), Some(0.0));
+            let head = q.peek_next().unwrap().id;
+            let popped = q.pop_next().unwrap();
+            assert_eq!(popped.id, head);
+            // An unscheduled pop goes back and is the next candidate again
+            // (FCFS restores head-of-line; prefix re-inserts + resets LCP).
+            q.requeue_unscheduled(popped);
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.peek_next().unwrap().id, head);
+            assert!(q.contains(1) && q.contains(2));
+            assert_eq!(q.ids().count(), 2);
+            assert!(q.remove(2).is_some());
+            q.clear();
+            assert!(q.is_empty());
+        }
     }
 
     #[test]

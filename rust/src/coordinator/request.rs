@@ -1,5 +1,5 @@
-//! Request model: online/offline classes, lifecycle phases, SLO metrics,
-//! and per-request progress the scheduler and engine share.
+//! Request model: SLO-class ids, lifecycle phases, SLO metrics, and
+//! per-request progress the scheduler and engine share.
 
 use std::sync::Arc;
 
@@ -14,18 +14,38 @@ pub fn empty_prompt() -> Arc<[u32]> {
     EMPTY.get_or_init(|| Vec::new().into()).clone()
 }
 
-/// Workload class — the paper's central dichotomy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Class {
-    /// Latency-sensitive (chat-style): TTFT/TBT SLO-bound.
-    Online,
-    /// Throughput-oriented (batch-API-style): opportunistically scheduled.
-    Offline,
-}
+/// Index into the session's SLO-class registry
+/// ([`ClassRegistry`](crate::coordinator::classes::ClassRegistry)).
+///
+/// The paper's central dichotomy — latency-sensitive online vs
+/// throughput-oriented offline — is the registry's compiled-in default:
+/// index 0 is the flagship interactive class ([`ClassId::ONLINE`]) and
+/// index 1 the harvest class ([`ClassId::OFFLINE`]). Every layer (queues,
+/// scheduler tiers, census, metrics, cluster router) is *indexed* by this
+/// id rather than matching on a two-variant enum, so new SLO classes are
+/// a config change, not a refactor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassId(pub u16);
 
-impl Class {
+/// Historical alias: most of the codebase spells the type `Class`.
+pub type Class = ClassId;
+
+impl ClassId {
+    /// The flagship interactive class (registry index 0).
+    pub const ONLINE: ClassId = ClassId(0);
+    /// The default harvest class (registry index 1).
+    pub const OFFLINE: ClassId = ClassId(1);
+
+    /// Registry slot this id names.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// True for the flagship interactive slot (registry index 0). With
+    /// the default two-class registry this is exactly the paper's
+    /// "online" class.
     pub fn is_online(self) -> bool {
-        matches!(self, Class::Online)
+        self == ClassId::ONLINE
     }
 }
 
@@ -124,8 +144,10 @@ pub struct Request {
     /// Number of output tokens to generate (sim: sampled from the trace;
     /// real engine: generation budget / until EOS).
     pub output_len: usize,
-    /// Preemption priority: higher wins. Online requests default to 100,
-    /// offline to 0 (paid/free tiers can sit in between).
+    /// Preemption priority: higher wins. Stamped from the class spec's
+    /// `preempt_priority` at admission (`EngineState::enqueue`);
+    /// `Request::new` seeds the classic 100/0 split for the default two
+    /// classes.
     pub priority: u8,
     /// Tokens of this prompt reusable from the prefix cache at schedule
     /// time (set by the PSM policy; "deduct shared prefix" simulation).
@@ -232,7 +254,7 @@ mod tests {
 
     #[test]
     fn lifecycle_prefill_then_decode_then_finish() {
-        let mut r = Request::new(1, Class::Online, 0.0, 10, 3);
+        let mut r = Request::new(1, Class::ONLINE, 0.0, 10, 3);
         assert_eq!(r.phase, Phase::Waiting);
         assert_eq!(r.prefill_remaining(), 10);
         r.advance_prefill(6);
@@ -251,7 +273,7 @@ mod tests {
 
     #[test]
     fn preempt_preserve_keeps_progress() {
-        let mut r = Request::new(1, Class::Offline, 0.0, 10, 5);
+        let mut r = Request::new(1, Class::OFFLINE, 0.0, 10, 5);
         r.advance_prefill(10);
         r.advance_decode();
         r.preempt_preserve();
@@ -263,7 +285,7 @@ mod tests {
 
     #[test]
     fn preempt_discard_resets_progress() {
-        let mut r = Request::new(1, Class::Offline, 0.0, 10, 5);
+        let mut r = Request::new(1, Class::OFFLINE, 0.0, 10, 5);
         r.advance_prefill(10);
         r.advance_decode();
         r.preempt_discard();
@@ -274,8 +296,8 @@ mod tests {
 
     #[test]
     fn default_priorities() {
-        assert_eq!(Request::new(1, Class::Online, 0.0, 1, 1).priority, 100);
-        assert_eq!(Request::new(2, Class::Offline, 0.0, 1, 1).priority, 0);
+        assert_eq!(Request::new(1, Class::ONLINE, 0.0, 1, 1).priority, 100);
+        assert_eq!(Request::new(2, Class::OFFLINE, 0.0, 1, 1).priority, 0);
     }
 
     #[test]
@@ -294,16 +316,16 @@ mod tests {
 
     #[test]
     fn output_len_at_least_one() {
-        assert_eq!(Request::new(1, Class::Online, 0.0, 5, 0).output_len, 1);
+        assert_eq!(Request::new(1, Class::ONLINE, 0.0, 5, 0).output_len, 1);
     }
 
     #[test]
     fn prompts_are_shared_not_copied() {
         let prompt: Arc<[u32]> = vec![1, 2, 3].into();
-        let r = Request::new(1, Class::Online, 0.0, 0, 4).with_prompt(prompt.clone());
+        let r = Request::new(1, Class::ONLINE, 0.0, 0, 4).with_prompt(prompt.clone());
         assert_eq!(r.prompt_len, 3);
         assert!(Arc::ptr_eq(&r.prompt, &prompt), "admission must not copy the prompt");
-        let fresh = Request::new(2, Class::Offline, 0.0, 8, 1);
+        let fresh = Request::new(2, Class::OFFLINE, 0.0, 8, 1);
         assert!(fresh.prompt.is_empty());
     }
 }

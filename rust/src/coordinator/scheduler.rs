@@ -1,4 +1,5 @@
-//! The HyGen two-phase SLO-aware scheduler (§4.1, Alg. 1–2).
+//! The HyGen SLO-aware scheduler (§4.1, Alg. 1–2), generalized from the
+//! paper's two phases to a **loop over descending SLO-class tiers**.
 //!
 //! Each engine iteration builds one hybrid batch under three budgets:
 //!
@@ -9,27 +10,48 @@
 //! * **memory** `m` — free KV blocks via the
 //!   [`BlockManager`](super::block_manager::BlockManager).
 //!
-//! Phase 1 (online) schedules online decodes unconditionally and online
-//! prefill chunks under `c`/`m`, preempting offline requests for memory.
-//! Phase 2 (offline) pours the *residual* budgets into offline work:
-//! resumed preempted requests first, then running offline, then new
-//! requests drawn from the queue policy (FCFS / PSM / fair-PSM).
+//! The scheduler visits the registry's classes from the highest tier
+//! down. Each class runs the same four passes — running decodes, running
+//! prefill chunks, preempted resumes, new admissions — parameterized by
+//! its [`ClassSpec`](super::classes::ClassSpec):
 //!
-//! The same struct, differently configured, implements every baseline in
-//! the paper's evaluation — see [`SchedulerConfig`] and `baselines/`.
+//! * classes whose `latency_budget` is `None` **bypass** the budget:
+//!   their decodes are scheduled unconditionally (Alg. 1 line 8) and a
+//!   memory stall skips one request instead of ending the pass;
+//! * charged classes only drink the **residual** budget left by higher
+//!   tiers, stop at the first decode that does not fit, and may carry an
+//!   additional per-iteration spend cap (`latency_budget < 1.0`);
+//! * **preemption flows down-tier only** (lowest tier first, LIFO within
+//!   the victim class); a charged class with nothing below may
+//!   self-preempt its own newest request (vLLM-style) so older decodes
+//!   keep making progress, while bypass classes stall instead — evicting
+//!   a peer would break that peer's SLO too;
+//! * admissions follow the class queue's policy order (FCFS or PSM DFS),
+//!   optionally paced by a per-class rate cap, with per-class
+//!   starvation protection lifting the cap once the queue head has
+//!   waited `starvation_age_s`.
+//!
+//! With the default two-class registry this reduces *exactly* to the
+//! paper's two-phase algorithm — phase 1 = the bypass online class,
+//! phase 2 = the charged offline class — and is behavior-preserving down
+//! to the emitted batch order. The same struct, differently configured,
+//! implements every baseline in the paper's evaluation — see
+//! [`SchedulerConfig`] and `baselines/`.
 
 use super::batch::{Batch, BatchEntry, Features};
+use super::classes::{AdmissionPolicy, ClassRegistry, MAX_CLASSES};
 use super::predictor::LatencyPredictor;
 use super::request::{Class, Phase, RequestId};
 use super::state::EngineState;
+use std::sync::Arc;
 
-/// How preempted offline requests are handled (InferCept's taxonomy).
+/// How preempted requests are handled (InferCept's taxonomy).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PreemptionMode {
     /// Keep prefill/decode progress; only KV blocks are released
     /// (swap-to-host semantics). The paper's default.
     Preserve,
-    /// Drop computed state; the request re-enters the offline queue and
+    /// Drop computed state; the request re-enters its class queue and
     /// recomputes its prefill.
     Discard,
 }
@@ -47,9 +69,12 @@ pub struct SchedulerConfig {
     /// Max concurrently running requests (the real engine has 8 slots).
     pub max_running: usize,
     pub preemption: PreemptionMode,
-    /// Schedule offline work at all (false = pure-online Sarathi).
+    /// Schedule below-top-tier work at all (false = pure-online Sarathi:
+    /// only the registry's highest tier is served).
     pub enable_offline: bool,
-    /// HyGen* baseline: cap offline admissions at this rate (req/s).
+    /// HyGen* baseline: cap the default harvest class's admissions at
+    /// this rate (req/s). Per-class caps live in the registry
+    /// (`AdmissionPolicy::RateCapped`).
     pub offline_qps_cap: Option<f64>,
     /// Blocks held back from admissions so running decodes can grow.
     pub watermark_blocks: usize,
@@ -70,7 +95,8 @@ impl Default for SchedulerConfig {
     }
 }
 
-/// Simple token-bucket rate limiter (HyGen*'s fixed offline QPS).
+/// Simple token-bucket rate limiter (HyGen*'s fixed offline QPS; the
+/// registry's `rate-capped` admission policy).
 #[derive(Debug, Clone)]
 pub struct RateLimiter {
     rate: f64,
@@ -108,15 +134,27 @@ impl RateLimiter {
 /// Per-iteration scheduling statistics (observability + tests).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ScheduleStats {
+    /// Down-tier preemptions performed this iteration (same-class
+    /// self-preemptions are not counted — they are a memory-rotation
+    /// mechanism, not an SLO action).
     pub preemptions: usize,
-    pub online_stalls: usize,
+    /// Pass steps where a budget-bypassing (SLO) class could not grow or
+    /// admit for lack of memory.
+    pub slo_stalls: usize,
     pub predicted_ms: f64,
 }
 
 pub struct HybridScheduler {
     pub cfg: SchedulerConfig,
     pub predictor: LatencyPredictor,
-    offline_limiter: Option<RateLimiter>,
+    /// Per-class admission limiters, built lazily from the registry (and
+    /// `cfg.offline_qps_cap` for the default harvest slot).
+    limiters: Vec<Option<RateLimiter>>,
+    /// Address of the registry the limiter table was built for (a plain
+    /// `usize` so the scheduler stays `Send`): a scheduler re-driven
+    /// against a *different* registry rebuilds instead of silently
+    /// keeping stale caps.
+    limiters_key: usize,
     pub last_stats: ScheduleStats,
     /// Reused id buffer for the per-phase passes (no per-iteration
     /// allocation once warm).
@@ -125,39 +163,66 @@ pub struct HybridScheduler {
 
 impl HybridScheduler {
     pub fn new(cfg: SchedulerConfig, predictor: LatencyPredictor) -> HybridScheduler {
-        let offline_limiter = cfg.offline_qps_cap.map(RateLimiter::new);
         HybridScheduler {
             cfg,
             predictor,
-            offline_limiter,
+            limiters: Vec::new(),
+            limiters_key: 0,
             last_stats: ScheduleStats::default(),
             scratch: Vec::new(),
         }
     }
 
-    /// Snapshot the ids of `set` members currently in `phase` into the
+    /// Build the per-class limiter table on first use (the registry lives
+    /// on the state, which `new` never sees). Rebuilt when the scheduler
+    /// is driven against a different registry; a steady engine pays one
+    /// pointer compare per iteration.
+    fn ensure_limiters(&mut self, registry: &ClassRegistry) {
+        let key = registry as *const ClassRegistry as usize;
+        if self.limiters_key == key && self.limiters.len() == registry.len() {
+            return;
+        }
+        self.limiters_key = key;
+        self.limiters.clear();
+        for c in registry.ids() {
+            let spec = registry.spec(c);
+            let lim = match spec.admission {
+                AdmissionPolicy::RateCapped { qps } => Some(RateLimiter::new(qps)),
+                // HyGen*'s legacy cap targets the harvest slot of the
+                // classic registry. Guard on elasticity so a custom
+                // registry whose index 1 is an *interactive* class never
+                // inherits the cap by position.
+                _ if c == Class::OFFLINE && spec.elastic() => {
+                    self.cfg.offline_qps_cap.map(RateLimiter::new)
+                }
+                _ => None,
+            };
+            self.limiters.push(lim);
+        }
+    }
+
+    /// Snapshot the ids of `class` members currently in `phase` into the
     /// reused scratch buffer (callers put it back when done). The
     /// [`PhaseCounts`](super::state::PhaseCounts) census lets hot
     /// iterations skip phases with no candidates without scanning.
     fn take_phase_ids(
         &mut self,
         state: &EngineState,
-        set: &super::runset::RunSet,
+        class: Class,
         phase: Phase,
     ) -> Vec<RequestId> {
         let mut ids = std::mem::take(&mut self.scratch);
         ids.clear();
-        ids.extend(set.iter().filter(|&id| state.requests[&id].phase == phase));
+        ids.extend(state.running(class).iter().filter(|&id| state.requests[&id].phase == phase));
         ids
     }
 
-    /// Build the next iteration batch at time `now` (Alg. 2's two
-    /// invocations of Alg. 1) into the caller-owned `out`, which is
-    /// cleared first and reused across iterations — the engine's hot loop
-    /// is allocation-free once `out` (and the internal scratch) is warm.
-    /// Mutates `state`: admissions move queue requests into the running
-    /// sets (with block allocation), and memory pressure may preempt
-    /// offline requests.
+    /// Build the next iteration batch at time `now` into the caller-owned
+    /// `out`, which is cleared first and reused across iterations — the
+    /// engine's hot loop is allocation-free once `out` (and the internal
+    /// scratch) is warm. Mutates `state`: admissions move queue requests
+    /// into the running sets (with block allocation), and memory pressure
+    /// may preempt lower-tier requests.
     pub fn schedule(&mut self, state: &mut EngineState, now: f64, out: &mut Batch) {
         out.clear();
         let mut stats = ScheduleStats::default();
@@ -168,12 +233,33 @@ impl HybridScheduler {
             // and `predicted_ms <= latency_budget_ms` holds exactly.
             t -= self.predictor.predict(&Features::default());
         }
+        let budget_total = t;
         let mut c = self.cfg.chunk_tokens;
         let mut feats = Features::default();
 
-        self.online_phase(state, out, &mut feats, &mut t, &mut c, &mut stats);
-        if self.cfg.enable_offline {
-            self.offline_phase(state, now, out, &mut feats, &mut t, &mut c);
+        let registry = Arc::clone(&state.registry);
+        self.ensure_limiters(&registry);
+        let top = registry.top_tier();
+        // Per-class latency spend, for sub-1.0 class budget caps. Fixed
+        // array: no allocation on the hot path.
+        let mut spent = [0.0f64; MAX_CLASSES];
+        for &class in registry.tier_order_desc() {
+            if !self.cfg.enable_offline && registry.spec(class).tier != top {
+                continue;
+            }
+            self.class_pass(
+                state,
+                &registry,
+                class,
+                now,
+                out,
+                &mut feats,
+                &mut t,
+                budget_total,
+                &mut spent,
+                &mut c,
+                &mut stats,
+            );
         }
         stats.predicted_ms = self.predictor.predict(&feats);
         self.last_stats = stats;
@@ -187,189 +273,102 @@ impl HybridScheduler {
         out
     }
 
-    // ---------------------------------------------------------------- online
-
-    fn online_phase(
+    /// One class's share of the iteration: decodes, prefill
+    /// continuations, resumes, admissions — Alg. 1 parameterized by the
+    /// class spec. See the module docs for the per-knob semantics.
+    #[allow(clippy::too_many_arguments)]
+    fn class_pass(
         &mut self,
         state: &mut EngineState,
-        batch: &mut Batch,
-        feats: &mut Features,
-        t: &mut f64,
-        c: &mut usize,
-        stats: &mut ScheduleStats,
-    ) {
-        let discard = self.cfg.preemption == PreemptionMode::Discard;
-
-        // 1. Online decodes: scheduled regardless of latency budget
-        //    (Alg. 1 line 8: "online" bypasses the `t_req <= t` check);
-        //    memory pressure preempts offline requests.
-        if state.counts.decode(Class::Online) > 0 {
-            let ids = self.take_phase_ids(state, &state.running_online, Phase::Decode);
-            for &id in &ids {
-                let need = state.requests[&id].context_len() + 1;
-                let mut ok = state.blocks.grow(id, need);
-                while !ok {
-                    if state.preempt_last_offline(discard).is_none() {
-                        break;
-                    }
-                    stats.preemptions += 1;
-                    ok = state.blocks.grow(id, need);
-                }
-                if !ok {
-                    // No offline left to preempt and no memory: the decode
-                    // stalls one iteration. (With online-only load this means
-                    // the instance is over-committed.)
-                    stats.online_stalls += 1;
-                    continue;
-                }
-                let t_req = self.predictor.decode_cost(feats);
-                *t -= t_req;
-                feats.add_decode();
-                batch.push(BatchEntry {
-                    id,
-                    class: Class::Online,
-                    n_tokens: 1,
-                    is_prefill: false,
-                    predicted_ms: t_req,
-                });
-            }
-            self.scratch = ids;
-        }
-
-        // 2. Online prefill continuations (already admitted, mid-prompt).
-        if state.counts.prefill(Class::Online) > 0 {
-            let ids = self.take_phase_ids(state, &state.running_online, Phase::Prefill);
-            for &id in &ids {
-                if *c == 0 {
-                    break;
-                }
-                let want = state.requests[&id].prefill_remaining();
-                let cap = want.min(self.cfg.max_chunk_per_request);
-                // Memory already allocated at admission: pass unlimited mem.
-                let (l, t_req) =
-                    self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, cap);
-                if l == 0 {
-                    break;
-                }
-                *t -= t_req;
-                *c -= l;
-                feats.add_prefill(l);
-                batch.push(BatchEntry {
-                    id,
-                    class: Class::Online,
-                    n_tokens: l,
-                    is_prefill: true,
-                    predicted_ms: t_req,
-                });
-            }
-            self.scratch = ids;
-        }
-
-        // 3. Online admissions from the FCFS queue.
-        while *c > 0 && state.num_running() < self.cfg.max_running {
-            let Some(next) = state.online_queue.peek() else { break };
-            let prompt_len = next.prompt_len;
-            // Memory: the full prompt KV must fit (chunked prefill still
-            // writes every prompt token's KV), modulo prefix-cache hits.
-            let mut free =
-                state.blocks.free_tokens().saturating_sub(self.cfg.watermark_blocks * state.blocks.block_size());
-            while free < prompt_len {
-                if state.preempt_last_offline(discard).is_none() {
-                    break;
-                }
-                stats.preemptions += 1;
-                free = state
-                    .blocks
-                    .free_tokens()
-                    .saturating_sub(self.cfg.watermark_blocks * state.blocks.block_size());
-            }
-            if free < prompt_len {
-                stats.online_stalls += 1;
-                break; // FCFS head-of-line: wait for memory
-            }
-            let mut req = state.online_queue.pop().expect("peeked");
-            let chain = state.prompt_chain(&req);
-            let cached = match state.blocks.allocate(req.id, prompt_len.max(1), &chain) {
-                Some(cached) => cached,
-                None => {
-                    // racing watermark arithmetic; requeue and stop
-                    state.online_queue.push_front(req);
-                    break;
-                }
-            };
-            // Prefix-cache hits skip prefill work, but at least one token
-            // must be processed to produce the first logits.
-            req.prefilled = cached.min(prompt_len.saturating_sub(1));
-            let want = req.prefill_remaining().min(self.cfg.max_chunk_per_request);
-            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
-            if l == 0 {
-                // Latency/chunk budget exhausted: undo the admission.
-                state.blocks.release(req.id);
-                req.prefilled = 0;
-                state.online_queue.push_front(req);
-                break;
-            }
-            *t -= t_req;
-            *c -= l;
-            feats.add_prefill(l);
-            req.phase = Phase::Prefill;
-            batch.push(BatchEntry {
-                id: req.id,
-                class: Class::Online,
-                n_tokens: l,
-                is_prefill: true,
-                predicted_ms: t_req,
-            });
-            state.insert_running(req);
-        }
-    }
-
-    // --------------------------------------------------------------- offline
-
-    fn offline_phase(
-        &mut self,
-        state: &mut EngineState,
+        registry: &ClassRegistry,
+        class: Class,
         now: f64,
         batch: &mut Batch,
         feats: &mut Features,
         t: &mut f64,
+        budget_total: f64,
+        spent: &mut [f64; MAX_CLASSES],
         c: &mut usize,
+        stats: &mut ScheduleStats,
     ) {
+        let spec = registry.spec(class);
+        let bypass = spec.bypasses_budget();
+        let tier = spec.tier;
         let discard = self.cfg.preemption == PreemptionMode::Discard;
-        // 1. Offline decodes — only within the residual latency budget
-        //    (Alg. 3 lines 7-11; stop at the first that does not fit).
-        if state.counts.decode(Class::Offline) > 0 {
-            let ids = self.take_phase_ids(state, &state.running_offline, Phase::Decode);
+        // Sub-1.0 tolerances additionally cap this class's own spend
+        // (tolerances >= 1.0 can never bind before the shared residual
+        // does, so they are skipped — this keeps the default registry
+        // float-for-float identical to the two-phase code).
+        let class_cap = match spec.latency_budget {
+            Some(frac) if frac < 1.0 => Some(frac * budget_total),
+            _ => None,
+        };
+        let ci = class.index();
+        let fits_cap = |spent: &[f64; MAX_CLASSES], t_req: f64| match class_cap {
+            Some(cap) => spent[ci] + t_req <= cap,
+            None => true,
+        };
+        // Latency budget visible to this class's *prefill* sizing: the
+        // shared residual, additionally clamped to the class's remaining
+        // spend cap (uncapped classes see the residual untouched, so the
+        // default registry is float-for-float the two-phase code).
+        let class_t = |spent: &[f64; MAX_CLASSES], t: f64| match class_cap {
+            Some(cap) => t.min(cap - spent[ci]),
+            None => t,
+        };
+        let starvation_age = spec.starvation_age_s;
+
+        // 1. Running decodes. Bypass classes schedule them regardless of
+        //    the latency budget (Alg. 1 line 8); charged classes stop at
+        //    the first that does not fit the residual.
+        if state.counts.decode(class) > 0 {
+            let ids = self.take_phase_ids(state, class, Phase::Decode);
             for &id in &ids {
-                if !state.running_offline.contains(id) {
-                    continue; // preempted below by an earlier decode's growth
+                if !state.running(class).contains(id) {
+                    continue; // removed below by an earlier decode's growth
                 }
                 let t_req = self.predictor.decode_cost(feats);
-                if t_req > *t {
+                if !bypass && (t_req > *t || !fits_cap(spent, t_req)) {
                     break;
                 }
                 let need = state.requests[&id].context_len() + 1;
                 let mut ok = state.blocks.grow(id, need);
                 while !ok {
-                    // Self-preemption (vLLM-style): free the *newest* running
-                    // offline request so older decodes keep making progress —
-                    // without this, a full KV pool deadlocks pure-offline work.
-                    match state.running_offline.last() {
-                        Some(last) if last != id => {
-                            state.preempt_last_offline(discard);
-                            ok = state.blocks.grow(id, need);
+                    if state.preempt_lowest_below(tier, discard).is_some() {
+                        stats.preemptions += 1;
+                        ok = state.blocks.grow(id, need);
+                    } else if !bypass {
+                        // Self-preemption (vLLM-style): free the *newest*
+                        // running request of this class so older decodes
+                        // keep making progress — without this, a full KV
+                        // pool deadlocks pure-harvest work.
+                        match state.running(class).last() {
+                            Some(last) if last != id => {
+                                state.preempt_last_of(class, discard);
+                                ok = state.blocks.grow(id, need);
+                            }
+                            _ => break,
                         }
-                        _ => break,
+                    } else {
+                        break;
                     }
                 }
                 if !ok {
+                    if bypass {
+                        // No lower tier left to preempt and no memory: the
+                        // decode stalls one iteration. (With top-tier-only
+                        // load this means the instance is over-committed.)
+                        stats.slo_stalls += 1;
+                        continue;
+                    }
                     break;
                 }
                 *t -= t_req;
+                spent[ci] += t_req;
                 feats.add_decode();
                 batch.push(BatchEntry {
                     id,
-                    class: Class::Offline,
+                    class,
                     n_tokens: 1,
                     is_prefill: false,
                     predicted_ms: t_req,
@@ -378,26 +377,34 @@ impl HybridScheduler {
             self.scratch = ids;
         }
 
-        // 2. Offline prefill continuations, in preserved (DFS) order.
-        if state.counts.prefill(Class::Offline) > 0 {
-            let ids = self.take_phase_ids(state, &state.running_offline, Phase::Prefill);
+        // 2. Prefill continuations (already admitted, mid-prompt), in the
+        //    running set's preserved order.
+        if state.counts.prefill(class) > 0 {
+            let ids = self.take_phase_ids(state, class, Phase::Prefill);
             for &id in &ids {
-                if *c == 0 || *t <= 0.0 {
+                if *c == 0 || (!bypass && *t <= 0.0) {
                     break;
                 }
                 let want =
                     state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
-                let (l, t_req) =
-                    self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+                // Memory already allocated at admission: pass unlimited mem.
+                let (l, t_req) = self.predictor.max_prefill_tokens(
+                    feats,
+                    class_t(spent, *t),
+                    *c,
+                    usize::MAX,
+                    want,
+                );
                 if l == 0 {
                     break;
                 }
                 *t -= t_req;
+                spent[ci] += t_req;
                 *c -= l;
                 feats.add_prefill(l);
                 batch.push(BatchEntry {
                     id,
-                    class: Class::Offline,
+                    class,
                     n_tokens: l,
                     is_prefill: true,
                     predicted_ms: t_req,
@@ -406,11 +413,15 @@ impl HybridScheduler {
             self.scratch = ids;
         }
 
-        // 3. Resume preempted offline requests (FIFO — oldest progress
-        //    first), re-allocating their context. Preserve semantics: no
-        //    recompute; the request continues where it stopped.
-        while let Some(&id) = state.preempted_offline.front() {
-            if state.num_running() >= self.cfg.max_running || *t <= 0.0 {
+        // 3. Resume preempted requests (FIFO — oldest progress first),
+        //    re-allocating their context. Preserve semantics: no
+        //    recompute; the request continues where it stopped. Like the
+        //    other passes, only charged classes gate on the residual
+        //    budget — a preempted bypass class must not be starved behind
+        //    its own fresh admissions (pass 4 has the same `!bypass`
+        //    guard).
+        while let Some(&id) = state.preempted(class).front() {
+            if state.num_running() >= self.cfg.max_running || (!bypass && *t <= 0.0) {
                 break;
             }
             let req = &state.requests[&id];
@@ -419,17 +430,21 @@ impl HybridScheduler {
             if state.blocks.allocate(id, ctx, &chain).is_none() {
                 break; // not enough memory yet
             }
-            let resumed_phase = state.resume_front_preempted();
-            // It also gets work this iteration if budget allows.
+            let resumed_phase = state.resume_front_of(class);
+            // It also gets work this iteration if budget allows — bypass
+            // classes schedule the resumed decode unconditionally, same
+            // as pass 1.
             if resumed_phase == Phase::Decode {
                 let t_req = self.predictor.decode_cost(feats);
                 let need = state.requests[&id].context_len() + 1;
-                if t_req <= *t && state.blocks.grow(id, need) {
+                let fits = bypass || (t_req <= *t && fits_cap(spent, t_req));
+                if fits && state.blocks.grow(id, need) {
                     *t -= t_req;
+                    spent[ci] += t_req;
                     feats.add_decode();
                     batch.push(BatchEntry {
                         id,
-                        class: Class::Offline,
+                        class,
                         n_tokens: 1,
                         is_prefill: false,
                         predicted_ms: t_req,
@@ -438,15 +453,21 @@ impl HybridScheduler {
             } else {
                 let want =
                     state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
-                let (l, t_req) =
-                    self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+                let (l, t_req) = self.predictor.max_prefill_tokens(
+                    feats,
+                    class_t(spent, *t),
+                    *c,
+                    usize::MAX,
+                    want,
+                );
                 if l > 0 {
                     *t -= t_req;
+                    spent[ci] += t_req;
                     *c -= l;
                     feats.add_prefill(l);
                     batch.push(BatchEntry {
                         id,
-                        class: Class::Offline,
+                        class,
                         n_tokens: l,
                         is_prefill: true,
                         predicted_ms: t_req,
@@ -455,35 +476,66 @@ impl HybridScheduler {
             }
         }
 
-        // 4. New offline admissions in queue-policy order (PSM's DFS).
-        while *c > 0 && *t > 0.0 && state.num_running() < self.cfg.max_running {
-            let Some(next) = state.offline_queue.peek_next() else { break };
-            let prompt_len = next.prompt_len;
-            let free = state
-                .blocks
-                .free_tokens()
-                .saturating_sub(self.cfg.watermark_blocks * state.blocks.block_size());
-            if free < prompt_len {
-                break; // offline waits; never preempts
+        // 4. New admissions in queue-policy order (FCFS or PSM's DFS).
+        loop {
+            if *c == 0
+                || state.num_running() >= self.cfg.max_running
+                || (!bypass && *t <= 0.0)
+            {
+                break;
             }
-            // HyGen*'s admission rate cap.
-            if let Some(lim) = &mut self.offline_limiter {
-                if !lim.admit(now) {
+            let Some(next) = state.queue_mut(class).peek_next() else { break };
+            let prompt_len = next.prompt_len;
+            // Starvation protection: once the head has waited past the
+            // class threshold, its admission bypasses the rate cap below
+            // (memory and the latency budget still apply).
+            let starving = match starvation_age {
+                Some(age) => now - next.arrival > age,
+                None => false,
+            };
+            // Memory: the full prompt KV must fit (chunked prefill still
+            // writes every prompt token's KV), modulo prefix-cache hits.
+            // Higher tiers preempt down-tier work for memory; the bottom
+            // tier waits.
+            let watermark = self.cfg.watermark_blocks * state.blocks.block_size();
+            let mut free = state.blocks.free_tokens().saturating_sub(watermark);
+            while free < prompt_len {
+                if state.preempt_lowest_below(tier, discard).is_none() {
                     break;
                 }
+                stats.preemptions += 1;
+                free = state.blocks.free_tokens().saturating_sub(watermark);
             }
-            let mut req = state.offline_queue.pop_next().expect("peeked");
+            if free < prompt_len {
+                if bypass {
+                    stats.slo_stalls += 1;
+                }
+                break; // head-of-line: wait for memory
+            }
+            // Per-class admission pacing (HyGen*'s cap / rate-capped
+            // admission), lifted for a starving head.
+            if !starving {
+                if let Some(lim) = &mut self.limiters[ci] {
+                    if !lim.admit(now) {
+                        break;
+                    }
+                }
+            }
+            let mut req = state.queue_mut(class).pop_next().expect("peeked");
             let chain = state.prompt_chain(&req);
             let cached = match state.blocks.allocate(req.id, prompt_len.max(1), &chain) {
                 Some(cached) => cached,
                 None => {
-                    state.offline_queue.push(req);
-                    state.offline_queue.reset_prefix_context();
+                    // racing watermark arithmetic; requeue and stop
+                    state.queue_mut(class).requeue_unscheduled(req);
                     break;
                 }
             };
             // Prefix reuse: cache hits (real prompts) or the queue's
-            // consecutive-LCP estimate (simulated prompts) skip work.
+            // consecutive-LCP estimate (simulated prompts) skip work, but
+            // at least one token must be processed to produce the first
+            // logits. FCFS queues never set `shared_prefix_len`, so for
+            // them this is exactly the cache-hit count.
             let reuse = if state.prefix_caching {
                 cached.max(req.shared_prefix_len.min(prompt_len))
             } else {
@@ -491,21 +543,28 @@ impl HybridScheduler {
             };
             req.prefilled = reuse.min(prompt_len.saturating_sub(1));
             let want = req.prefill_remaining().min(self.cfg.max_chunk_per_request);
-            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+            let (l, t_req) = self.predictor.max_prefill_tokens(
+                feats,
+                class_t(spent, *t),
+                *c,
+                usize::MAX,
+                want,
+            );
             if l == 0 {
+                // Latency/chunk budget exhausted: undo the admission.
                 state.blocks.release(req.id);
                 req.prefilled = 0;
-                state.offline_queue.push(req);
-                state.offline_queue.reset_prefix_context();
+                state.queue_mut(class).requeue_unscheduled(req);
                 break;
             }
             *t -= t_req;
+            spent[ci] += t_req;
             *c -= l;
             feats.add_prefill(l);
             req.phase = Phase::Prefill;
             batch.push(BatchEntry {
                 id: req.id,
-                class: Class::Offline,
+                class,
                 n_tokens: l,
                 is_prefill: true,
                 predicted_ms: t_req,
@@ -518,6 +577,7 @@ impl HybridScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::classes::{ClassRegistry, ClassSpec};
     use crate::coordinator::queues::OfflinePolicy;
     use crate::coordinator::request::Request;
 
@@ -530,12 +590,12 @@ mod tests {
     }
 
     fn online(id: RequestId, prompt: usize, out: usize) -> Request {
-        Request::new(id, Class::Online, 0.0, prompt, out)
+        Request::new(id, Class::ONLINE, 0.0, prompt, out)
             .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect::<Vec<u32>>())
     }
 
     fn offline(id: RequestId, prompt: usize, out: usize) -> Request {
-        Request::new(id, Class::Offline, 0.0, prompt, out)
+        Request::new(id, Class::OFFLINE, 0.0, prompt, out)
             .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect::<Vec<u32>>())
     }
 
@@ -649,7 +709,7 @@ mod tests {
         st.enqueue(offline(10, 50, 2));
         let b = s.schedule_owned(&mut st, 0.0);
         assert!(b.entries.iter().all(|e| e.class.is_online()));
-        assert_eq!(st.offline_queue.len(), 1);
+        assert_eq!(st.queue(Class::OFFLINE).len(), 1);
     }
 
     #[test]
@@ -665,13 +725,13 @@ mod tests {
         st.enqueue(offline(10, 200, 64));
         let b = s.schedule_owned(&mut st, 0.0);
         apply(&mut st, &b);
-        assert_eq!(st.running_offline, vec![10]);
+        assert_eq!(*st.running(Class::OFFLINE), vec![10]);
         // Online request needs 200 tokens; only ~56 free -> preemption.
         st.enqueue(online(1, 200, 2));
         let b2 = s.schedule_owned(&mut st, 0.1);
         assert!(b2.entries.iter().any(|e| e.id == 1 && e.is_prefill));
         assert_eq!(s.last_stats.preemptions, 1);
-        assert_eq!(st.preempted_offline, vec![10]);
+        assert_eq!(st.preempted(Class::OFFLINE), &vec![10]);
         assert_eq!(st.requests[&10].prefilled, 200, "preserve keeps progress");
         st.check_invariants().unwrap();
     }
@@ -696,8 +756,8 @@ mod tests {
         assert!(st.finished.iter().any(|r| r.id == 1));
         // Next iteration: 10 resumes with preserved progress.
         let b = s.schedule_owned(&mut st, 0.3);
-        assert!(st.running_offline.contains(10));
-        assert!(st.preempted_offline.is_empty());
+        assert!(st.running(Class::OFFLINE).contains(10));
+        assert!(st.preempted(Class::OFFLINE).is_empty());
         assert!(b.entries.iter().any(|e| e.id == 10));
         assert_eq!(st.requests[&10].prefilled, 200);
         st.check_invariants().unwrap();
@@ -719,8 +779,8 @@ mod tests {
         st.enqueue(online(1, 200, 2));
         let b = s.schedule_owned(&mut st, 0.1);
         apply(&mut st, &b);
-        assert!(st.preempted_offline.is_empty());
-        assert_eq!(st.offline_queue.len(), 1, "discarded -> requeued");
+        assert!(st.preempted(Class::OFFLINE).is_empty());
+        assert_eq!(st.queue(Class::OFFLINE).len(), 1, "discarded -> requeued");
     }
 
     #[test]
@@ -805,5 +865,165 @@ mod tests {
         assert!(rl.admit(4.5), "refill resumed after the backwards step");
         assert!(!rl.admit(4.5));
         assert!(rl.admit(5.0));
+    }
+
+    // ------------------------------------------------- registry-driven tests
+
+    fn spec(name: &str, tier: u8) -> ClassSpec {
+        ClassSpec {
+            name: name.into(),
+            tier,
+            ttft_slo_ms: Some(1000.0),
+            tbt_slo_ms: Some(100.0),
+            latency_budget: Some(1.0),
+            preempt_priority: tier,
+            admission: AdmissionPolicy::Fcfs,
+            starvation_age_s: None,
+        }
+    }
+
+    fn four_class_registry() -> ClassRegistry {
+        ClassRegistry::new(vec![
+            ClassSpec { latency_budget: None, ..spec("chat", 3) },
+            spec("completion", 2),
+            ClassSpec {
+                admission: AdmissionPolicy::LongestPrefix,
+                ttft_slo_ms: None,
+                latency_budget: Some(2.0),
+                ..spec("summarize", 1)
+            },
+            ClassSpec {
+                ttft_slo_ms: None,
+                tbt_slo_ms: None,
+                latency_budget: Some(4.0),
+                ..spec("batch", 0)
+            },
+        ])
+        .unwrap()
+    }
+
+    fn four_class_state(blocks: usize) -> EngineState {
+        EngineState::with_registry(
+            Arc::new(four_class_registry()),
+            OfflinePolicy::Psm,
+            blocks,
+            16,
+            0,
+        )
+    }
+
+    fn req_of(class: Class, id: RequestId, prompt: usize, out: usize) -> Request {
+        Request::new(id, class, 0.0, prompt, out)
+            .with_prompt((0..prompt as u32).map(|i| i + id as u32 * 1000).collect::<Vec<u32>>())
+    }
+
+    #[test]
+    fn four_class_batch_is_tier_ordered() {
+        let mut st = four_class_state(4096);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: Some(200.0),
+            chunk_tokens: 4096,
+            ..SchedulerConfig::default()
+        });
+        for i in 0..4u16 {
+            st.enqueue(req_of(Class(i), 100 + i as u64, 64, 4));
+        }
+        let b = s.schedule_owned(&mut st, 0.0);
+        assert!(b.len() >= 2, "at least the top tiers fit");
+        let tiers: Vec<u8> = b.entries.iter().map(|e| st.registry.spec(e.class).tier).collect();
+        assert!(
+            tiers.windows(2).all(|w| w[0] >= w[1]),
+            "batch entries must be tier-descending: {tiers:?}"
+        );
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sub_one_latency_budget_caps_class_spend() {
+        // The mid class may only use 30% of the iteration budget.
+        let reg = ClassRegistry::new(vec![
+            ClassSpec { latency_budget: None, ..spec("chat", 3) },
+            ClassSpec { latency_budget: Some(0.3), ..spec("completion", 2) },
+        ])
+        .unwrap();
+        let mut st =
+            EngineState::with_registry(Arc::new(reg), OfflinePolicy::Fcfs, 1 << 14, 16, 0);
+        let budget = 40.0;
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: Some(budget),
+            chunk_tokens: 1 << 20,
+            ..SchedulerConfig::default()
+        });
+        for i in 0..40 {
+            st.enqueue(req_of(Class(1), 200 + i, 256, 8));
+        }
+        let b = s.schedule_owned(&mut st, 0.0);
+        assert!(!b.is_empty());
+        let class1_ms: f64 =
+            b.entries.iter().filter(|e| e.class == Class(1)).map(|e| e.predicted_ms).sum();
+        // The cap is a fraction of the post-baseline budget, so compare
+        // against the full budget loosely.
+        assert!(
+            class1_ms <= 0.3 * budget + 1e-6,
+            "capped class spent {class1_ms} ms of a {budget} ms budget"
+        );
+    }
+
+    #[test]
+    fn rate_capped_class_with_starvation_override() {
+        let reg = ClassRegistry::new(vec![
+            ClassSpec { latency_budget: None, ..spec("chat", 1) },
+            ClassSpec {
+                admission: AdmissionPolicy::RateCapped { qps: 0.1 },
+                ttft_slo_ms: None,
+                starvation_age_s: Some(30.0),
+                ..spec("batch", 0)
+            },
+        ])
+        .unwrap();
+        let mut st = EngineState::with_registry(Arc::new(reg), OfflinePolicy::Fcfs, 4096, 16, 0);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: None,
+            chunk_tokens: 1 << 20,
+            ..SchedulerConfig::default()
+        });
+        for i in 0..5 {
+            st.enqueue(req_of(Class(1), 10 + i, 32, 4));
+        }
+        // t=0: the bucket starts with one permit.
+        let b = s.schedule_owned(&mut st, 0.0);
+        assert_eq!(b.len(), 1, "rate cap admits one");
+        apply(&mut st, &b);
+        // t=1: bucket empty (0.1 qps), not yet starving -> nothing admits.
+        let b = s.schedule_owned(&mut st, 1.0);
+        assert!(b.entries.iter().all(|e| !e.is_prefill), "cap holds before the threshold");
+        // t=31: head has waited past starvation_age_s -> cap bypassed.
+        let b = s.schedule_owned(&mut st, 31.0);
+        assert!(
+            b.entries.iter().any(|e| e.is_prefill),
+            "starving head must be admitted despite the rate cap"
+        );
+        st.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mid_tier_preempts_down_but_never_up() {
+        // Small pool: completion's admission must evict batch, not chat.
+        let mut st = four_class_state(16);
+        let mut s = sched(SchedulerConfig {
+            latency_budget_ms: None,
+            chunk_tokens: 512,
+            watermark_blocks: 0,
+            ..SchedulerConfig::default()
+        });
+        st.enqueue(req_of(Class(3), 30, 200, 64));
+        let b = s.schedule_owned(&mut st, 0.0);
+        apply(&mut st, &b);
+        assert_eq!(*st.running(Class(3)), vec![30]);
+        st.enqueue(req_of(Class(1), 11, 200, 2));
+        let b = s.schedule_owned(&mut st, 0.1);
+        assert!(b.entries.iter().any(|e| e.id == 11 && e.is_prefill));
+        assert_eq!(st.preempted(Class(3)), &vec![30], "batch preempted by completion");
+        st.check_invariants().unwrap();
     }
 }

@@ -1,52 +1,68 @@
-//! Shared engine state the scheduler operates on: queues, running sets,
-//! preempted set, the block manager, and the request table.
+//! Shared engine state the scheduler operates on: the class registry,
+//! per-class queues, running sets and preempted sets, the block manager,
+//! and the request table.
+//!
+//! Everything is **class-indexed** (one slot per registry class) instead
+//! of class-matched: `queues[c]`, `runs[c]`, `preempted[c]`, and the
+//! [`PhaseCounts`] census are dense arrays over
+//! [`Class`](super::request::ClassId). The paper's online/offline pair
+//! is the registry's two-class default.
 //!
 //! Hot-path complexity contract (see DESIGN.md "Scheduler data
-//! structures"): one `schedule()` + apply iteration is O(batch). The
-//! running sets are [`RunSet`]s (O(1) insert/remove/contains, ordered
-//! iteration), the preempted set is a `VecDeque` (O(1) resume pop), and
-//! [`PhaseCounts`] tracks how many running requests sit in each
-//! (class, phase) bucket so scheduler passes with no candidates are
-//! skipped without touching the sets at all.
+//! structures"): one `schedule()` + apply iteration is O(batch +
+//! classes). The running sets are [`RunSet`]s (O(1)
+//! insert/remove/contains, ordered iteration), each preempted set is a
+//! `VecDeque` (O(1) resume pop), and [`PhaseCounts`] tracks how many
+//! running requests sit in each (class, phase) bucket so scheduler passes
+//! with no candidates are skipped without touching the sets at all.
 
 use super::block_manager::{chain_hashes, BlockManager};
-use super::queues::{OfflinePolicy, OfflineQueue, OnlineQueue};
+use super::classes::{AdmissionPolicy, ClassRegistry, MAX_CLASSES};
+use super::queues::{ClassQueue, FcfsQueue, OfflinePolicy, OfflineQueue};
 use super::request::{Class, Phase, Request, RequestId};
 use super::runset::RunSet;
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
 
-/// Counts of *running* requests by (class, phase). Maintained by every
-/// [`EngineState`] transition so the scheduler can size (or skip) its
-/// per-phase passes without re-scanning the running sets.
+/// Counts of *running* requests by (class, phase), as dense fixed arrays
+/// indexed by [`Class`] (`Copy` and allocation-free — snapshots copy it
+/// every engine iteration). Maintained by every [`EngineState`]
+/// transition so the scheduler can size (or skip) its per-phase passes
+/// without re-scanning the running sets.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PhaseCounts {
-    pub online_prefill: usize,
-    pub online_decode: usize,
-    pub offline_prefill: usize,
-    pub offline_decode: usize,
+    prefill: [usize; MAX_CLASSES],
+    decode: [usize; MAX_CLASSES],
 }
 
 impl PhaseCounts {
     pub fn prefill(&self, class: Class) -> usize {
-        match class {
-            Class::Online => self.online_prefill,
-            Class::Offline => self.offline_prefill,
-        }
+        self.prefill[class.index()]
     }
 
     pub fn decode(&self, class: Class) -> usize {
-        match class {
-            Class::Online => self.online_decode,
-            Class::Offline => self.offline_decode,
-        }
+        self.decode[class.index()]
+    }
+
+    /// Running requests (prefill + decode) of one class.
+    pub fn running(&self, class: Class) -> usize {
+        self.prefill(class) + self.decode(class)
+    }
+
+    /// Total running prefills across every class.
+    pub fn total_prefill(&self) -> usize {
+        self.prefill.iter().sum()
+    }
+
+    /// Total running decodes across every class.
+    pub fn total_decode(&self) -> usize {
+        self.decode.iter().sum()
     }
 
     fn slot(&mut self, class: Class, phase: Phase) -> Option<&mut usize> {
-        match (class, phase) {
-            (Class::Online, Phase::Prefill) => Some(&mut self.online_prefill),
-            (Class::Online, Phase::Decode) => Some(&mut self.online_decode),
-            (Class::Offline, Phase::Prefill) => Some(&mut self.offline_prefill),
-            (Class::Offline, Phase::Decode) => Some(&mut self.offline_decode),
+        match phase {
+            Phase::Prefill => Some(&mut self.prefill[class.index()]),
+            Phase::Decode => Some(&mut self.decode[class.index()]),
             // Waiting/Preempted/Finished requests are not "running work".
             _ => None,
         }
@@ -68,21 +84,24 @@ impl PhaseCounts {
 
 /// All mutable serving state of one engine instance.
 pub struct EngineState {
+    /// The class table every layer indexes by [`Class`]. Immutable for
+    /// the lifetime of the instance.
+    pub registry: Arc<ClassRegistry>,
     /// Every request known to the instance (running or preempted).
-    /// Waiting requests live in their queue; finished ones in `finished`.
+    /// Waiting requests live in their class queue; finished ones in
+    /// `finished`.
     pub requests: HashMap<RequestId, Request>,
-    pub online_queue: OnlineQueue,
-    pub offline_queue: OfflineQueue,
-    /// Running online requests in admission order.
-    pub running_online: RunSet,
-    /// Running offline requests — kept in their scheduling (DFS) order, per
-    /// Alg. 3 ("running requests keep their original DFS order").
-    pub running_offline: RunSet,
-    /// Offline requests preempted with preserved state, newest last.
+    /// One waiting queue per class (registry order).
+    pub queues: Vec<ClassQueue>,
+    /// Per-class running sets. FCFS classes keep admission order;
+    /// prefix classes keep their scheduling (DFS) order, per Alg. 3
+    /// ("running requests keep their original DFS order").
+    pub runs: Vec<RunSet>,
+    /// Per-class preempted-with-preserved-state deques, newest last.
     /// Resumed FIFO (oldest progress first) from the front.
-    pub preempted_offline: VecDeque<RequestId>,
-    /// Running-request census by (class, phase); kept in lockstep with the
-    /// sets above by the transition methods. Mutate phases through
+    pub preempted_by_class: Vec<VecDeque<RequestId>>,
+    /// Running-request census by (class, phase); kept in lockstep with
+    /// the sets above by the transition methods. Mutate phases through
     /// [`EngineState`] methods or the census drifts (`check_invariants`
     /// verifies it).
     pub counts: PhaseCounts,
@@ -97,31 +116,133 @@ pub struct EngineState {
     /// it runs with this off (block sharing then degrades to plain
     /// accounting with empty hash chains).
     pub prefix_caching: bool,
+    /// Consistency anomalies observed at runtime (e.g. a finish/abort
+    /// race detected during preemption). Diagnosable instead of a panic;
+    /// `check_invariants` reports them.
+    pub anomalies: Vec<String>,
 }
 
 impl EngineState {
+    /// The classic two-class instance: a FCFS online queue above an
+    /// offline queue ordered by `policy`.
     pub fn new(policy: OfflinePolicy, num_blocks: usize, block_size: usize, seed: u64) -> Self {
+        Self::with_registry(
+            Arc::new(ClassRegistry::default_two()),
+            policy,
+            num_blocks,
+            block_size,
+            seed,
+        )
+    }
+
+    /// Build an instance over an arbitrary registry. Classes with
+    /// `longest-prefix` admission get an [`OfflineQueue`] ordered by
+    /// `prefix_policy` (seeded per class so fair-PSM streams stay
+    /// independent); `fcfs` / `rate-capped` classes get a plain FCFS
+    /// deque. With [`ClassRegistry::default_two`] this is exactly the
+    /// classic dual-queue instance.
+    pub fn with_registry(
+        registry: Arc<ClassRegistry>,
+        prefix_policy: OfflinePolicy,
+        num_blocks: usize,
+        block_size: usize,
+        seed: u64,
+    ) -> Self {
+        let mut queues = Vec::with_capacity(registry.len());
+        let mut prefix_slot = 0u64;
+        for spec in registry.specs() {
+            queues.push(match spec.admission {
+                AdmissionPolicy::LongestPrefix => {
+                    // The first prefix class keeps the instance seed
+                    // exactly (the classic offline queue); later ones get
+                    // distinct streams.
+                    let q = OfflineQueue::new(prefix_policy, seed + prefix_slot);
+                    prefix_slot += 1;
+                    ClassQueue::prefix(q)
+                }
+                AdmissionPolicy::Fcfs | AdmissionPolicy::RateCapped { .. } => {
+                    ClassQueue::Fcfs(FcfsQueue::new())
+                }
+            });
+        }
+        let n = registry.len();
         EngineState {
+            registry,
             requests: HashMap::new(),
-            online_queue: OnlineQueue::new(),
-            offline_queue: OfflineQueue::new(policy, seed),
-            running_online: RunSet::new(),
-            running_offline: RunSet::new(),
-            preempted_offline: VecDeque::new(),
+            queues,
+            runs: (0..n).map(|_| RunSet::new()).collect(),
+            preempted_by_class: (0..n).map(|_| VecDeque::new()).collect(),
             counts: PhaseCounts::default(),
             blocks: BlockManager::new(num_blocks, block_size),
             finished: Vec::new(),
             keep_finished: true,
             prefix_caching: true,
+            anomalies: Vec::new(),
         }
     }
 
-    /// Admit an arriving request into its class queue.
-    pub fn enqueue(&mut self, req: Request) {
-        match req.class {
-            Class::Online => self.online_queue.push(req),
-            Class::Offline => self.offline_queue.push(req),
-        }
+    // ------------------------------------------------------ class accessors
+
+    pub fn queue(&self, class: Class) -> &ClassQueue {
+        &self.queues[class.index()]
+    }
+
+    pub fn queue_mut(&mut self, class: Class) -> &mut ClassQueue {
+        &mut self.queues[class.index()]
+    }
+
+    pub fn running(&self, class: Class) -> &RunSet {
+        &self.runs[class.index()]
+    }
+
+    pub fn preempted(&self, class: Class) -> &VecDeque<RequestId> {
+        &self.preempted_by_class[class.index()]
+    }
+
+    /// Waiting requests across every class queue.
+    pub fn total_waiting(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Preempted requests across every class.
+    pub fn total_preempted(&self) -> usize {
+        self.preempted_by_class.iter().map(|p| p.len()).sum()
+    }
+
+    /// Any admitted-but-unfinished work (running, waiting, or preempted)?
+    pub fn has_pending(&self) -> bool {
+        self.num_running() > 0
+            || self.queues.iter().any(|q| !q.is_empty())
+            || self.preempted_by_class.iter().any(|p| !p.is_empty())
+    }
+
+    /// Any *interactive* (non-elastic, i.e. TTFT-SLO-bound) class with
+    /// waiting, running, or preempted work? The replay loops use this as
+    /// their completion criterion — elastic work is a backlog that never
+    /// "completes". Preempted work counts: a mid-tier interactive class
+    /// evicted by a higher tier is still in flight, and ending a run
+    /// while it sits in the deque would silently drop it.
+    pub fn interactive_pending(&self) -> bool {
+        self.registry.ids().any(|c| {
+            !self.registry.spec(c).elastic()
+                && (!self.queues[c.index()].is_empty()
+                    || !self.runs[c.index()].is_empty()
+                    || !self.preempted_by_class[c.index()].is_empty())
+        })
+    }
+
+    /// Admit an arriving request into its class queue, stamping the class
+    /// spec's preemption priority.
+    pub fn enqueue(&mut self, mut req: Request) {
+        let idx = req.class.index();
+        assert!(
+            idx < self.queues.len(),
+            "request {} names class {idx} outside the {}-class registry",
+            req.id,
+            self.queues.len()
+        );
+        req.priority = self.registry.spec(req.class).preempt_priority;
+        self.queues[idx].push(req);
     }
 
     pub fn req(&self, id: RequestId) -> &Request {
@@ -132,9 +253,9 @@ impl EngineState {
         self.requests.get_mut(&id).expect("request exists")
     }
 
-    /// Total requests currently running (both classes).
+    /// Total requests currently running (all classes).
     pub fn num_running(&self) -> usize {
-        self.running_online.len() + self.running_offline.len()
+        self.runs.iter().map(|r| r.len()).sum()
     }
 
     /// KV hash chain for a request's prompt (prefix-cache key). Empty
@@ -156,10 +277,7 @@ impl EngineState {
             req.phase
         );
         self.counts.add(req.class, req.phase);
-        match req.class {
-            Class::Online => self.running_online.push(req.id),
-            Class::Offline => self.running_offline.push(req.id),
-        }
+        self.runs[req.class.index()].push(req.id);
         self.requests.insert(req.id, req);
     }
 
@@ -194,8 +312,10 @@ impl EngineState {
     /// Move a running request to `finished`, releasing its blocks.
     pub fn finish(&mut self, id: RequestId) {
         self.blocks.release(id);
-        if !self.running_online.remove(id) {
-            self.running_offline.remove(id);
+        for set in &mut self.runs {
+            if set.remove(id) {
+                break;
+            }
         }
         if let Some(mut r) = self.requests.remove(&id) {
             self.counts.sub(r.class, r.phase);
@@ -206,41 +326,90 @@ impl EngineState {
         }
     }
 
-    /// Preempt one running offline request (the most recently admitted,
-    /// vLLM-style LIFO so earlier requests keep progress), releasing its
-    /// blocks. Returns the id, or None if nothing can be preempted.
-    pub fn preempt_last_offline(&mut self, discard: bool) -> Option<RequestId> {
-        let id = self.running_offline.pop()?;
+    /// Preempt one running request of `class` (the most recently
+    /// admitted, vLLM-style LIFO so earlier requests keep progress),
+    /// releasing its blocks. Returns the id, or None if the class has
+    /// nothing running.
+    ///
+    /// A finish/abort race (the running set names an id the table no
+    /// longer holds) is recorded in [`EngineState::anomalies`] and
+    /// skipped instead of panicking — the scheduler retries with the next
+    /// victim.
+    pub fn preempt_last_of(&mut self, class: Class, discard: bool) -> Option<RequestId> {
+        let id = self.runs[class.index()].pop()?;
         self.blocks.release(id);
-        let req = self.requests.get_mut(&id).expect("running request exists");
+        let Some(mut req) = self.requests.remove(&id) else {
+            self.anomalies.push(format!(
+                "preempt of class {} popped request {id} that is missing from the \
+                 table (finish/abort race)",
+                class.index()
+            ));
+            return None;
+        };
         self.counts.sub(req.class, req.phase);
         if discard {
             req.preempt_discard();
-            // discarded state returns to the offline queue for rescheduling
-            let req = self.requests.remove(&id).unwrap();
-            self.offline_queue.push(req);
+            // Discarded state returns to its class queue for rescheduling.
             // Its KV (and the whole LCP baseline's residency assumption)
-            // is gone; without this its next pop would claim a self-LCP.
-            self.offline_queue.reset_prefix_context();
+            // is gone; without the reset its next pop would claim a
+            // self-LCP.
+            self.queues[class.index()].push(req);
+            if let ClassQueue::Prefix(q) = &mut self.queues[class.index()] {
+                q.reset_prefix_context();
+            }
         } else {
             req.preempt_preserve();
-            self.preempted_offline.push_back(id);
+            self.requests.insert(id, req);
+            self.preempted_by_class[class.index()].push_back(id);
         }
         Some(id)
     }
 
-    /// Re-admit the *front* (oldest-progress) preempted offline request —
-    /// the caller already re-allocated its context. Returns the phase it
-    /// resumes in.
-    pub fn resume_front_preempted(&mut self) -> Phase {
-        let id = self.preempted_offline.pop_front().expect("preempted request to resume");
+    /// Classic spelling: preempt the newest running request of the
+    /// default harvest class.
+    pub fn preempt_last_offline(&mut self, discard: bool) -> Option<RequestId> {
+        self.preempt_last_of(Class::OFFLINE, discard)
+    }
+
+    /// Preempt one running request from the lowest tier *strictly below*
+    /// `tier` (ascending tier order; LIFO within the victim class).
+    /// Preemption only flows down-tier — equal tiers never preempt each
+    /// other through this path.
+    pub fn preempt_lowest_below(&mut self, tier: u8, discard: bool) -> Option<RequestId> {
+        let registry = Arc::clone(&self.registry);
+        for &victim in registry.tier_order_asc() {
+            if registry.spec(victim).tier >= tier {
+                return None; // ascending order: nothing below remains
+            }
+            if !self.runs[victim.index()].is_empty() {
+                if let Some(id) = self.preempt_last_of(victim, discard) {
+                    return Some(id);
+                }
+            }
+        }
+        None
+    }
+
+    /// Re-admit the *front* (oldest-progress) preempted request of
+    /// `class` — the caller already re-allocated its context. Returns the
+    /// phase it resumes in.
+    pub fn resume_front_of(&mut self, class: Class) -> Phase {
+        let id = self.preempted_by_class[class.index()]
+            .pop_front()
+            .expect("preempted request to resume");
         let req = self.requests.get_mut(&id).expect("preempted request in table");
         debug_assert_eq!(req.phase, Phase::Preempted);
         req.phase = if req.prefill_done() { Phase::Decode } else { Phase::Prefill };
         let phase = req.phase;
         self.counts.add(req.class, phase);
-        self.running_offline.push(id);
+        self.runs[class.index()].push(id);
         phase
+    }
+
+    /// Classic spelling: resume the default harvest class's front
+    /// preempted request.
+    pub fn resume_front_preempted(&mut self) -> Phase {
+        self.resume_front_of(Class::OFFLINE)
     }
 
     /// Abort every queued, running, and preempted request, releasing all
@@ -252,33 +421,41 @@ impl EngineState {
     /// a doomed batch.
     pub fn abort_all(&mut self) -> Vec<RequestId> {
         let torn_down: Vec<RequestId> = self
-            .running_online
+            .runs
             .iter()
-            .chain(self.running_offline.iter())
-            .chain(self.preempted_offline.iter().copied())
+            .flat_map(|set| set.iter())
+            .chain(self.preempted_by_class.iter().flat_map(|p| p.iter().copied()))
             .collect();
         // Only running requests hold blocks (preemption already released
         // theirs); release() is a no-op for unallocated ids.
         for &id in &torn_down {
             self.blocks.release(id);
         }
-        self.running_online.clear();
-        self.running_offline.clear();
-        self.preempted_offline.clear();
+        for set in &mut self.runs {
+            set.clear();
+        }
+        for p in &mut self.preempted_by_class {
+            p.clear();
+        }
         self.requests.clear();
-        self.online_queue.clear();
-        self.offline_queue.clear();
+        for q in &mut self.queues {
+            q.clear();
+        }
         self.counts = PhaseCounts::default();
         torn_down
     }
 
     /// Sanity invariants used by tests: every running id has a request and
     /// an allocation; no id is in two places at once; queued requests are
-    /// not also tracked in the table; the phase census matches the sets.
+    /// not also tracked in the table; the phase census matches the sets;
+    /// no runtime anomalies were recorded.
     pub fn check_invariants(&self) -> Result<(), String> {
+        if let Some(a) = self.anomalies.first() {
+            return Err(format!("{} runtime anomalies, first: {a}", self.anomalies.len()));
+        }
         let mut seen: HashSet<RequestId> = HashSet::new();
         let mut recount = PhaseCounts::default();
-        for id in self.running_online.iter().chain(self.running_offline.iter()) {
+        for id in self.runs.iter().flat_map(|set| set.iter()) {
             if !seen.insert(id) {
                 return Err(format!("{id} in two running sets"));
             }
@@ -294,15 +471,21 @@ impl EngineState {
             }
             recount.add(r.class, r.phase);
         }
-        for &id in &self.preempted_offline {
-            if !seen.insert(id) {
-                return Err(format!("{id} both running and preempted"));
-            }
-            if self.blocks.is_allocated(id) {
-                return Err(format!("preempted {id} still holds blocks"));
-            }
-            if !self.requests.contains_key(&id) {
-                return Err(format!("preempted {id} missing from table"));
+        for (ci, pre) in self.preempted_by_class.iter().enumerate() {
+            for &id in pre {
+                if !seen.insert(id) {
+                    return Err(format!("{id} both running and preempted"));
+                }
+                if self.blocks.is_allocated(id) {
+                    return Err(format!("preempted {id} still holds blocks"));
+                }
+                let r = self
+                    .requests
+                    .get(&id)
+                    .ok_or_else(|| format!("preempted {id} missing from table"))?;
+                if r.class.index() != ci {
+                    return Err(format!("preempted {id} in the wrong class deque"));
+                }
             }
         }
         if recount != self.counts {
@@ -311,12 +494,14 @@ impl EngineState {
                 self.counts
             ));
         }
-        for id in self.online_queue.ids().chain(self.offline_queue.ids()) {
-            if self.requests.contains_key(&id) {
-                return Err(format!("queued {id} also in the request table"));
-            }
-            if !seen.insert(id) {
-                return Err(format!("queued {id} also running/preempted"));
+        for q in &self.queues {
+            for id in q.ids() {
+                if self.requests.contains_key(&id) {
+                    return Err(format!("queued {id} also in the request table"));
+                }
+                if !seen.insert(id) {
+                    return Err(format!("queued {id} also running/preempted"));
+                }
             }
         }
         Ok(())
@@ -343,18 +528,35 @@ mod tests {
     #[test]
     fn enqueue_routes_by_class() {
         let mut s = state();
-        s.enqueue(Request::new(1, Class::Online, 0.0, 4, 4));
-        s.enqueue(Request::new(2, Class::Offline, 0.0, 4, 4));
-        assert_eq!(s.online_queue.len(), 1);
-        assert_eq!(s.offline_queue.len(), 1);
+        s.enqueue(Request::new(1, Class::ONLINE, 0.0, 4, 4));
+        s.enqueue(Request::new(2, Class::OFFLINE, 0.0, 4, 4));
+        assert_eq!(s.queue(Class::ONLINE).len(), 1);
+        assert_eq!(s.queue(Class::OFFLINE).len(), 1);
+        assert_eq!(s.total_waiting(), 2);
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn enqueue_stamps_registry_priority() {
+        let mut s = state();
+        s.enqueue(Request::new(1, Class::ONLINE, 0.0, 4, 4));
+        s.enqueue(Request::new(2, Class::OFFLINE, 0.0, 4, 4));
+        assert_eq!(s.queue_mut(Class::ONLINE).peek_next().unwrap().priority, 100);
+        assert_eq!(s.queue_mut(Class::OFFLINE).peek_next().unwrap().priority, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn enqueue_rejects_unregistered_class() {
+        let mut s = state();
+        s.enqueue(Request::new(1, Class(7), 0.0, 4, 4));
     }
 
     #[test]
     fn finish_releases_everything() {
         let mut s = state();
-        running(&mut s, 1, Class::Online, 16, 2);
-        assert_eq!(s.counts.decode(Class::Online), 1);
+        running(&mut s, 1, Class::ONLINE, 16, 2);
+        assert_eq!(s.counts.decode(Class::ONLINE), 1);
         s.check_invariants().unwrap();
         s.finish(1);
         assert_eq!(s.num_running(), 0);
@@ -368,7 +570,7 @@ mod tests {
     #[test]
     fn preempt_preserve_moves_to_preempted() {
         let mut s = state();
-        let mut r = Request::new(5, Class::Offline, 0.0, 16, 4);
+        let mut r = Request::new(5, Class::OFFLINE, 0.0, 16, 4);
         r.phase = Phase::Decode;
         r.prefilled = 16;
         r.generated = 2;
@@ -376,7 +578,7 @@ mod tests {
         s.insert_running(r);
         let got = s.preempt_last_offline(false);
         assert_eq!(got, Some(5));
-        assert_eq!(s.preempted_offline, vec![5]);
+        assert_eq!(s.preempted(Class::OFFLINE), &vec![5]);
         assert_eq!(s.requests[&5].generated, 2, "state preserved");
         assert_eq!(s.blocks.used_blocks(), 0);
         assert_eq!(s.counts, PhaseCounts::default());
@@ -386,15 +588,15 @@ mod tests {
     #[test]
     fn preempt_discard_requeues() {
         let mut s = state();
-        let mut r = Request::new(5, Class::Offline, 0.0, 16, 4);
+        let mut r = Request::new(5, Class::OFFLINE, 0.0, 16, 4);
         r.phase = Phase::Decode;
         r.prefilled = 16;
         r.generated = 2;
         s.blocks.allocate(5, 18, &[]).unwrap();
         s.insert_running(r);
         s.preempt_last_offline(true);
-        assert!(s.preempted_offline.is_empty());
-        assert_eq!(s.offline_queue.len(), 1, "discarded request requeued");
+        assert!(s.preempted(Class::OFFLINE).is_empty());
+        assert_eq!(s.queue(Class::OFFLINE).len(), 1, "discarded request requeued");
         assert!(!s.requests.contains_key(&5));
         s.check_invariants().unwrap();
     }
@@ -406,10 +608,38 @@ mod tests {
     }
 
     #[test]
+    fn preempt_race_records_anomaly_instead_of_panicking() {
+        let mut s = state();
+        running(&mut s, 9, Class::OFFLINE, 16, 4);
+        // Simulate a finish/abort race: the table entry vanishes while the
+        // running set still names the id.
+        s.requests.remove(&9);
+        s.counts = PhaseCounts::default();
+        assert_eq!(s.preempt_last_of(Class::OFFLINE, false), None, "no panic");
+        assert_eq!(s.anomalies.len(), 1);
+        assert!(s.anomalies[0].contains('9'), "anomaly names the id: {}", s.anomalies[0]);
+        assert!(s.check_invariants().is_err(), "anomalies surface in invariant checks");
+    }
+
+    #[test]
+    fn preempt_lowest_below_respects_tiers() {
+        let mut s = state();
+        running(&mut s, 1, Class::ONLINE, 16, 4);
+        running(&mut s, 2, Class::OFFLINE, 16, 4);
+        running(&mut s, 3, Class::OFFLINE, 16, 4);
+        // Online sits at tier 1: the victim is the newest offline request.
+        assert_eq!(s.preempt_lowest_below(1, false), Some(3));
+        // Offline is the bottom tier: nothing below it.
+        assert_eq!(s.preempt_lowest_below(0, false), None);
+        assert!(s.running(Class::ONLINE).contains(1), "same tier never preempted");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
     fn resume_front_restores_counts_and_order() {
         let mut s = state();
         for id in [5, 6] {
-            let mut r = Request::new(id, Class::Offline, 0.0, 16, 4);
+            let mut r = Request::new(id, Class::OFFLINE, 0.0, 16, 4);
             r.phase = Phase::Decode;
             r.prefilled = 16;
             s.blocks.allocate(id, 17, &[]).unwrap();
@@ -417,28 +647,28 @@ mod tests {
         }
         s.preempt_last_offline(false); // 6
         s.preempt_last_offline(false); // 5
-        assert_eq!(s.preempted_offline, vec![6, 5]);
+        assert_eq!(s.preempted(Class::OFFLINE), &vec![6, 5]);
         s.blocks.allocate(6, 17, &[]).unwrap();
         let phase = s.resume_front_preempted();
         assert_eq!(phase, Phase::Decode);
-        assert_eq!(s.running_offline, vec![6]);
-        assert_eq!(s.preempted_offline, vec![5]);
-        assert_eq!(s.counts.decode(Class::Offline), 1);
+        assert_eq!(*s.running(Class::OFFLINE), vec![6]);
+        assert_eq!(s.preempted(Class::OFFLINE), &vec![5]);
+        assert_eq!(s.counts.decode(Class::OFFLINE), 1);
         s.check_invariants().unwrap();
     }
 
     #[test]
     fn advance_transitions_update_census() {
         let mut s = state();
-        let mut r = Request::new(9, Class::Online, 0.0, 8, 2);
+        let mut r = Request::new(9, Class::ONLINE, 0.0, 8, 2);
         r.phase = Phase::Prefill;
         s.blocks.allocate(9, 8, &[]).unwrap();
         s.insert_running(r);
-        assert_eq!(s.counts.prefill(Class::Online), 1);
+        assert_eq!(s.counts.prefill(Class::ONLINE), 1);
         assert!(!s.advance_prefill(9, 4), "prompt not done yet");
         assert!(s.advance_prefill(9, 4), "prompt completed");
-        assert_eq!(s.counts.prefill(Class::Online), 0);
-        assert_eq!(s.counts.decode(Class::Online), 1);
+        assert_eq!(s.counts.prefill(Class::ONLINE), 0);
+        assert_eq!(s.counts.decode(Class::ONLINE), 1);
         assert!(!s.advance_decode(9));
         assert!(s.advance_decode(9), "output budget reached");
         s.finish(9);
@@ -449,16 +679,16 @@ mod tests {
     #[test]
     fn abort_all_clears_every_set() {
         let mut s = state();
-        running(&mut s, 1, Class::Online, 16, 4);
-        running(&mut s, 2, Class::Offline, 16, 4);
+        running(&mut s, 1, Class::ONLINE, 16, 4);
+        running(&mut s, 2, Class::OFFLINE, 16, 4);
         s.preempt_last_offline(false);
-        s.enqueue(Request::new(3, Class::Online, 0.0, 4, 4));
-        s.enqueue(Request::new(4, Class::Offline, 0.0, 4, 4));
+        s.enqueue(Request::new(3, Class::ONLINE, 0.0, 4, 4));
+        s.enqueue(Request::new(4, Class::OFFLINE, 0.0, 4, 4));
         let aborted = s.abort_all();
         assert_eq!(aborted, vec![1, 2], "running and preempted ids both reported");
         assert_eq!(s.num_running(), 0);
-        assert!(s.preempted_offline.is_empty());
-        assert!(s.online_queue.is_empty() && s.offline_queue.is_empty());
+        assert_eq!(s.total_preempted(), 0);
+        assert_eq!(s.total_waiting(), 0);
         assert_eq!(s.blocks.used_blocks(), 0);
         assert_eq!(s.counts, PhaseCounts::default());
         s.check_invariants().unwrap();
@@ -467,18 +697,87 @@ mod tests {
     #[test]
     fn invariants_reject_queue_table_overlap() {
         let mut s = state();
-        running(&mut s, 7, Class::Online, 8, 2);
+        running(&mut s, 7, Class::ONLINE, 8, 2);
         // Simulate a duplication bug: the running request also re-enters
         // the queue.
-        s.enqueue(Request::new(7, Class::Online, 0.0, 8, 2));
+        s.enqueue(Request::new(7, Class::ONLINE, 0.0, 8, 2));
         assert!(s.check_invariants().is_err());
     }
 
     #[test]
     fn invariants_reject_census_drift() {
         let mut s = state();
-        running(&mut s, 7, Class::Online, 8, 2);
-        s.counts.online_decode = 0; // simulate drift
+        running(&mut s, 7, Class::ONLINE, 8, 2);
+        s.counts = PhaseCounts::default(); // simulate drift
         assert!(s.check_invariants().is_err());
+    }
+
+    #[test]
+    fn interactive_pending_counts_preempted_work() {
+        use crate::coordinator::classes::{AdmissionPolicy, ClassRegistry, ClassSpec};
+        // chat (interactive, top) above completion (interactive, mid):
+        // a preempted completion request is still in-flight interactive
+        // work — the replay loops must not end the run around it.
+        let mk = |name: &str, tier: u8| ClassSpec {
+            name: name.into(),
+            tier,
+            ttft_slo_ms: Some(500.0),
+            tbt_slo_ms: None,
+            latency_budget: Some(1.0),
+            preempt_priority: tier,
+            admission: AdmissionPolicy::Fcfs,
+            starvation_age_s: None,
+        };
+        let reg = Arc::new(ClassRegistry::new(vec![mk("chat", 2), mk("completion", 1)]).unwrap());
+        let mut s = EngineState::with_registry(reg, OfflinePolicy::Fcfs, 64, 16, 0);
+        assert!(!s.interactive_pending());
+        running(&mut s, 1, Class(1), 16, 4);
+        assert!(s.interactive_pending());
+        s.preempt_lowest_below(2, false).unwrap();
+        assert!(s.running(Class(1)).is_empty());
+        assert!(
+            s.interactive_pending(),
+            "preempted interactive work must keep the run alive"
+        );
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn four_class_registry_isolates_queues_and_tiers() {
+        use crate::coordinator::classes::{AdmissionPolicy, ClassRegistry, ClassSpec};
+        let spec = |name: &str, tier: u8, admission: AdmissionPolicy| ClassSpec {
+            name: name.into(),
+            tier,
+            ttft_slo_ms: Some(500.0),
+            tbt_slo_ms: None,
+            latency_budget: Some(1.0),
+            preempt_priority: tier * 10,
+            admission,
+            starvation_age_s: None,
+        };
+        let reg = Arc::new(
+            ClassRegistry::new(vec![
+                spec("chat", 3, AdmissionPolicy::Fcfs),
+                spec("completion", 2, AdmissionPolicy::Fcfs),
+                spec("summarize", 1, AdmissionPolicy::LongestPrefix),
+                spec("batch", 0, AdmissionPolicy::RateCapped { qps: 1.0 }),
+            ])
+            .unwrap(),
+        );
+        let mut s = EngineState::with_registry(reg, OfflinePolicy::Psm, 256, 16, 0);
+        for i in 0..4u16 {
+            s.enqueue(Request::new(i as u64, Class(i), 0.0, 8, 2));
+        }
+        for i in 0..4u16 {
+            assert_eq!(s.queue(Class(i)).len(), 1, "class {i}");
+        }
+        assert_eq!(s.queue_mut(Class(0)).peek_next().unwrap().priority, 30);
+        // Tier-2 work can only claim victims from tiers 0/1.
+        running(&mut s, 10, Class(2), 16, 2);
+        running(&mut s, 11, Class(3), 16, 2);
+        assert_eq!(s.preempt_lowest_below(2, false), Some(11), "lowest tier first");
+        assert_eq!(s.preempt_lowest_below(2, false), Some(10));
+        assert_eq!(s.preempt_lowest_below(2, false), None);
+        s.check_invariants().unwrap();
     }
 }

@@ -64,6 +64,7 @@ pub mod pjrt_backend {
         _artifacts_dir: &str,
         _latency_budget_ms: Option<f64>,
         _policy: OfflinePolicy,
+        _registry: std::sync::Arc<crate::coordinator::classes::ClassRegistry>,
         _seed: u64,
     ) -> anyhow::Result<Engine<PjrtBackend>> {
         anyhow::bail!(
@@ -77,7 +78,7 @@ pub mod pjrt_backend {
 
 use crate::coordinator::batch::Batch;
 use crate::coordinator::metrics::{Metrics, Report};
-use crate::coordinator::request::{Class, Request, RequestId};
+use crate::coordinator::request::{Request, RequestId};
 use crate::coordinator::scheduler::HybridScheduler;
 use crate::coordinator::state::EngineState;
 use crate::workload::trace::Trace;
@@ -199,12 +200,9 @@ impl<B: ExecutionBackend> Engine<B> {
         self.state.enqueue(req);
     }
 
-    /// Is there any admitted-but-unfinished work?
+    /// Is there any admitted-but-unfinished work (any class)?
     pub fn has_work(&self) -> bool {
-        self.state.num_running() > 0
-            || !self.state.online_queue.is_empty()
-            || !self.state.offline_queue.is_empty()
-            || !self.state.preempted_offline.is_empty()
+        self.state.has_pending()
     }
 
     /// Run one scheduling + execution iteration. Returns the executed
@@ -277,12 +275,13 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// Replay a trace to completion (closed loop): admits events as the
-    /// virtual clock passes their arrival, runs until both queues drain or
-    /// `max_clock_s` is exceeded.
+    /// virtual clock passes their arrival, runs until every queue drains
+    /// or `max_clock_s` is exceeded.
     ///
-    /// `drain_offline=false` stops once the online trace is fully served
-    /// (the paper's throughput accounting: offline work is a backlog that
-    /// never "completes").
+    /// `drain_offline=false` stops once the *interactive* portion —
+    /// every class with a TTFT SLO; just "online" in the default
+    /// registry — is fully served (the paper's throughput accounting:
+    /// elastic work is a backlog that never "completes").
     pub fn run_trace(
         &mut self,
         trace: &Trace,
@@ -291,15 +290,21 @@ impl<B: ExecutionBackend> Engine<B> {
     ) -> anyhow::Result<RunResult> {
         let mut next_event = 0usize;
         let events = &trace.events;
-        // Online events not yet admitted (precomputed by `Trace::new`;
-        // replays no longer rescan the event list per run).
-        let mut online_ahead = trace.num_online();
+        // Interactive events not yet admitted (per-class counts are
+        // precomputed by `Trace::new`; replays no longer rescan the event
+        // list per run).
+        let registry = std::sync::Arc::clone(&self.state.registry);
+        let mut interactive_ahead: usize = registry
+            .ids()
+            .filter(|&c| !registry.spec(c).elastic())
+            .map(|c| trace.num_of(c))
+            .sum();
         loop {
             // Admit everything that has arrived.
             while next_event < events.len() && events[next_event].arrival_s <= self.clock_s {
                 let e = &events[next_event];
-                if e.class == Class::Online {
-                    online_ahead -= 1;
+                if !registry.spec(e.class).elastic() {
+                    interactive_ahead -= 1;
                 }
                 let id = self.next_id;
                 self.next_id += 1;
@@ -314,9 +319,7 @@ impl<B: ExecutionBackend> Engine<B> {
             if self.clock_s >= max_clock_s {
                 break;
             }
-            let online_left = !self.state.online_queue.is_empty()
-                || !self.state.running_online.is_empty()
-                || online_ahead > 0;
+            let online_left = interactive_ahead > 0 || self.state.interactive_pending();
             if !drain_offline && !online_left {
                 break;
             }
@@ -371,6 +374,7 @@ mod tests {
     use crate::coordinator::batch::Features;
     use crate::coordinator::predictor::LatencyPredictor;
     use crate::coordinator::queues::OfflinePolicy;
+    use crate::coordinator::request::Class;
     use crate::coordinator::scheduler::SchedulerConfig;
     use crate::workload::trace::TraceEvent;
 
@@ -395,7 +399,7 @@ mod tests {
     #[test]
     fn single_online_request_completes() {
         let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
-        let tr = Trace::new(vec![ev(0.0, Class::Online, 64, 8)]);
+        let tr = Trace::new(vec![ev(0.0, Class::ONLINE, 64, 8)]);
         let r = e.run_trace(&tr, 100.0, true).unwrap();
         assert_eq!(r.finished_online, 1);
         // 1 prefill iter + 7 decode iters
@@ -412,8 +416,8 @@ mod tests {
             ..Default::default()
         });
         let tr = Trace::new(vec![
-            ev(0.0, Class::Online, 64, 32),
-            ev(0.0, Class::Online, 64, 2),
+            ev(0.0, Class::ONLINE, 64, 32),
+            ev(0.0, Class::ONLINE, 64, 2),
         ]);
         let r = e.run_trace(&tr, 100.0, true).unwrap();
         assert_eq!(r.finished_online, 2);
@@ -424,8 +428,8 @@ mod tests {
     #[test]
     fn offline_backlog_served_between_online() {
         let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
-        let mut events = vec![ev(0.0, Class::Offline, 256, 16); 4];
-        events.push(ev(0.0, Class::Online, 64, 8));
+        let mut events = vec![ev(0.0, Class::OFFLINE, 256, 16); 4];
+        events.push(ev(0.0, Class::ONLINE, 64, 8));
         let tr = Trace::new(events);
         let r = e.run_trace(&tr, 100.0, true).unwrap();
         assert_eq!(r.finished_online, 1);
@@ -437,8 +441,8 @@ mod tests {
     fn idle_gap_skips_clock() {
         let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
         let tr = Trace::new(vec![
-            ev(0.0, Class::Online, 16, 2),
-            ev(50.0, Class::Online, 16, 2),
+            ev(0.0, Class::ONLINE, 16, 2),
+            ev(50.0, Class::ONLINE, 16, 2),
         ]);
         let r = e.run_trace(&tr, 100.0, true).unwrap();
         assert_eq!(r.finished_online, 2);
@@ -451,8 +455,8 @@ mod tests {
     fn stop_without_draining_offline() {
         let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
         let tr = Trace::new(vec![
-            ev(0.0, Class::Online, 16, 2),
-            ev(0.0, Class::Offline, 8192, 4096),
+            ev(0.0, Class::ONLINE, 16, 2),
+            ev(0.0, Class::OFFLINE, 8192, 4096),
         ]);
         let r = e.run_trace(&tr, 1000.0, false).unwrap();
         assert_eq!(r.finished_online, 1);
@@ -463,7 +467,7 @@ mod tests {
     #[test]
     fn max_clock_bounds_run() {
         let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
-        let tr = Trace::new(vec![ev(0.0, Class::Offline, 512, 100_000)]);
+        let tr = Trace::new(vec![ev(0.0, Class::OFFLINE, 512, 100_000)]);
         let r = e.run_trace(&tr, 2.0, true).unwrap();
         assert!(e.clock_s >= 2.0 && e.clock_s < 3.0);
         assert_eq!(r.finished_offline, 0);
@@ -473,7 +477,7 @@ mod tests {
     fn submit_and_step_manual_loop() {
         let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
         let id = e.fresh_id();
-        e.submit(Request::new(id, Class::Online, 0.0, 32, 4));
+        e.submit(Request::new(id, Class::ONLINE, 0.0, 32, 4));
         let mut produced = 0;
         while e.has_work() {
             produced += e.step().unwrap();
@@ -484,7 +488,7 @@ mod tests {
 
     #[test]
     fn sched_samples_gated_by_flag() {
-        let tr = Trace::new(vec![ev(0.0, Class::Online, 64, 8)]);
+        let tr = Trace::new(vec![ev(0.0, Class::ONLINE, 64, 8)]);
         let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
         let r = e.run_trace(&tr, 100.0, true).unwrap();
         assert!(r.sched_ns_samples.is_empty(), "sampling must be opt-in");

@@ -95,9 +95,7 @@ impl PjrtBackend {
             .slot_of
             .keys()
             .copied()
-            .filter(|&id| {
-                !state.running_online.contains(id) && !state.running_offline.contains(id)
-            })
+            .filter(|&id| !state.runs.iter().any(|set| set.contains(id)))
             .collect();
         for id in stale {
             self.free_slot(id);
@@ -296,6 +294,7 @@ pub fn build_real_engine(
     artifacts_dir: &str,
     latency_budget_ms: Option<f64>,
     policy: crate::coordinator::queues::OfflinePolicy,
+    registry: std::sync::Arc<crate::coordinator::classes::ClassRegistry>,
     seed: u64,
 ) -> Result<crate::engine::Engine<PjrtBackend>> {
     use crate::coordinator::predictor::LatencyPredictor;
@@ -313,8 +312,9 @@ pub fn build_real_engine(
     // KV pool mirrors the artifacts' physical capacity: nslots sequences
     // of up to max_seq tokens.
     let num_blocks = backend.nslots() * backend.rt.dims.max_seq / block_size;
-    let mut state =
-        crate::coordinator::state::EngineState::new(policy, num_blocks, block_size, seed);
+    let mut state = crate::coordinator::state::EngineState::with_registry(
+        registry, policy, num_blocks, block_size, seed,
+    );
     state.prefix_caching = false; // per-slot layout: no physical row sharing
     let cfg = SchedulerConfig {
         latency_budget_ms,

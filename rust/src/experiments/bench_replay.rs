@@ -256,7 +256,7 @@ pub fn steady_probe(n: usize, iters: usize) -> anyhow::Result<SteadyProbe> {
     let blocks = n * (total_ctx / block_size + 2) + 64;
     let mut state = EngineState::new(OfflinePolicy::Fcfs, blocks, block_size, 0);
     for id in 0..n as u64 {
-        let mut r = Request::new(id, Class::Offline, 0.0, ctx_tokens, 1 << 20);
+        let mut r = Request::new(id, Class::OFFLINE, 0.0, ctx_tokens, 1 << 20);
         r.prefilled = ctx_tokens;
         r.generated = 1;
         r.phase = Phase::Decode;
@@ -278,7 +278,7 @@ pub fn steady_probe(n: usize, iters: usize) -> anyhow::Result<SteadyProbe> {
     // Pre-size the metrics slab/series so the window allocates nothing.
     engine.metrics.preallocate(n as u64 + 1, 64, 3600.0);
     for id in 0..n as u64 {
-        engine.metrics.on_arrival(id, Class::Offline, 0.0);
+        engine.metrics.on_arrival(id, Class::OFFLINE, 0.0);
     }
     for _ in 0..warmup {
         anyhow::ensure!(engine.step()? == n, "probe must schedule all {n} decodes");

@@ -260,7 +260,7 @@ fn scaling_state(n: usize) -> EngineState {
     // preempts mid-probe.
     let mut st = EngineState::new(OfflinePolicy::Fcfs, n * 40 + 64, 16, 0);
     for id in 0..(2 * n) as u64 {
-        let mut r = Request::new(id, Class::Offline, 0.0, 256, 1 << 20);
+        let mut r = Request::new(id, Class::OFFLINE, 0.0, 256, 1 << 20);
         r.prefilled = 256;
         r.generated = 1;
         r.phase = Phase::Decode;
@@ -270,8 +270,8 @@ fn scaling_state(n: usize) -> EngineState {
     for _ in 0..n {
         st.preempt_last_offline(false);
     }
-    debug_assert_eq!(st.running_offline.len(), n);
-    debug_assert_eq!(st.preempted_offline.len(), n);
+    debug_assert_eq!(st.running(Class::OFFLINE).len(), n);
+    debug_assert_eq!(st.preempted(Class::OFFLINE).len(), n);
     st
 }
 
@@ -318,7 +318,7 @@ fn scaling_probe(cfg: &BenchConfig) -> Vec<ScalePoint> {
         let t0 = Instant::now();
         for _ in 0..churn_rounds {
             for _ in 0..k {
-                let id = *st.preempted_offline.front().expect("probe keeps n preempted");
+                let id = *st.preempted(Class::OFFLINE).front().expect("probe keeps n preempted");
                 let ctx = st.req(id).context_len().max(1);
                 st.blocks.allocate(id, ctx, &[]).expect("probe pool has churn headroom");
                 black_box(st.resume_front_preempted());
@@ -428,9 +428,9 @@ mod tests {
     #[test]
     fn scaling_state_is_well_formed() {
         let st = scaling_state(8);
-        assert_eq!(st.running_offline.len(), 8);
-        assert_eq!(st.preempted_offline.len(), 8);
-        assert_eq!(st.counts.decode(Class::Offline), 8);
+        assert_eq!(st.running(Class::OFFLINE).len(), 8);
+        assert_eq!(st.preempted(Class::OFFLINE).len(), 8);
+        assert_eq!(st.counts.decode(Class::OFFLINE), 8);
         st.check_invariants().unwrap();
     }
 

@@ -315,9 +315,10 @@ pub fn fig8(ctx: &Ctx) -> anyhow::Result<Table> {
     engine.state.keep_finished = false;
     engine.metrics = crate::coordinator::metrics::Metrics::new(30.0);
     let run = engine.run_trace(&workload, ctx.trace_s, false)?;
-    let online_qps = run.metrics.online_qps_series.rates();
-    let online_tps = run.metrics.online_tps_series.rates();
-    let offline_tps = run.metrics.offline_tps_series.rates();
+    let online_qps = run.metrics.qps_series(crate::coordinator::request::Class::ONLINE).rates();
+    let online_tps = run.metrics.tps_series(crate::coordinator::request::Class::ONLINE).rates();
+    let offline_tps =
+        run.metrics.tps_series(crate::coordinator::request::Class::OFFLINE).rates();
     let mut t = Table::new("fig8", &["t_s", "online_qps", "online_tps", "offline_tps"]);
     let n = online_qps.len().max(offline_tps.len()).max(online_tps.len());
     for i in 0..n {

@@ -8,12 +8,15 @@
 //! the end-to-end replay-throughput bench behind `hygen bench-replay`
 //! (writes `BENCH_e2e.json`); [`cluster_sim`] measures the multi-replica
 //! routing policies behind `hygen cluster-sim`
-//! (writes `artifacts/cluster_compare.csv`).
+//! (writes `artifacts/cluster_compare.csv`); [`multi_slo`] measures
+//! N-class SLO scheduling on the calibrated 4-class trace behind
+//! `hygen multi-slo` (writes `artifacts/multi_slo.csv`).
 
 pub mod bench_replay;
 pub mod bench_sched;
 pub mod cluster_sim;
 pub mod figures;
+pub mod multi_slo;
 
 use crate::baselines::{SimSetup, System};
 use crate::coordinator::metrics::Report;
@@ -251,6 +254,7 @@ fn empty_report() -> Report {
         online_qps: 0.0,
         offline_qps: 0.0,
         duration_s: 0.0,
+        classes: Vec::new(),
     }
 }
 

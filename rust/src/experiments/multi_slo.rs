@@ -1,0 +1,426 @@
+//! `hygen multi-slo` — N-class SLO scheduling measured end to end.
+//!
+//! Replays one calibrated **4-class trace** — chat (tight TTFT, bypass),
+//! code completion (tight TBT, charged), summarization (tolerant,
+//! prefix-heavy, starvation-protected), batch (pure throughput) —
+//! through the cluster simulator under two registry configurations:
+//!
+//! * **4-class** — the full registry: four tiers, per-class budgets and
+//!   admission policies;
+//! * **2-class** — the same workload collapsed onto the classic binary
+//!   registry (chat/completion/summarize → online, batch → offline),
+//!   i.e. what the pre-registry system could express.
+//!
+//! Each (config, replicas) cell reports per-class throughput, latency
+//! percentiles, and SLO attainment (p99 TTFT/TBT vs the class's declared
+//! SLO) plus total throughput, into `artifacts/multi_slo.csv`. Cells are
+//! independent seeded jobs with order-preserving collection: the CSV is
+//! byte-identical for any `-j` and bit-reproducible for a fixed seed
+//! (compared in CI, same gate shape as `cluster-sim`).
+
+use super::{f1, f2, Table};
+use crate::cluster::router::RouterPolicy;
+use crate::cluster::sim::{ClusterRunResult, ClusterSim};
+use crate::coordinator::classes::{AdmissionPolicy, ClassRegistry, ClassSpec};
+use crate::coordinator::predictor::LatencyPredictor;
+use crate::coordinator::queues::OfflinePolicy;
+use crate::coordinator::request::Class;
+use crate::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+use crate::coordinator::state::EngineState;
+use crate::engine::Engine;
+use crate::sim::costmodel::CostModel;
+use crate::sim::SimBackend;
+use crate::util::parallel::{job, run_jobs, Job};
+use crate::workload::azure::{self, AzureTraceConfig};
+use crate::workload::datasets::{self, Dataset};
+use crate::workload::trace::{Trace, TraceEvent};
+use std::sync::Arc;
+
+/// Grid + workload shape; see [`MultiSloConfig::full`] and
+/// [`MultiSloConfig::quick`].
+#[derive(Debug, Clone)]
+pub struct MultiSloConfig {
+    pub replica_counts: Vec<usize>,
+    /// Cluster-wide chat arrival rate (req/s); completion arrives at 1.5x
+    /// this rate, summarization at 0.4x.
+    pub chat_qps: f64,
+    /// Interactive trace span (s); the batch backlog arrives at t = 0.
+    pub trace_s: f64,
+    /// Batch-class backlog size (requests).
+    pub batch_n: usize,
+    /// Summarization backlog size (requests, prefix-heavy MMLU shapes).
+    pub summarize_n: usize,
+    /// Per-iteration latency budget every replica schedules under.
+    pub latency_budget_ms: f64,
+    pub rebalance_interval_s: f64,
+    pub max_clock_s: f64,
+    pub seed: u64,
+    /// Worker threads for the cell grid (order-preserving collection —
+    /// any value yields byte-identical CSVs).
+    pub jobs: usize,
+}
+
+impl MultiSloConfig {
+    /// The tracked-artifact shape.
+    pub fn full() -> MultiSloConfig {
+        MultiSloConfig {
+            replica_counts: vec![1, 2, 4],
+            chat_qps: 4.0,
+            trace_s: 240.0,
+            batch_n: 1200,
+            summarize_n: 600,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 1.0,
+            max_clock_s: 1200.0,
+            seed: 0,
+            jobs: super::default_jobs(),
+        }
+    }
+
+    /// CI smoke shape: same pipeline, seconds of wallclock.
+    pub fn quick() -> MultiSloConfig {
+        MultiSloConfig {
+            replica_counts: vec![1, 2],
+            chat_qps: 2.0,
+            trace_s: 30.0,
+            batch_n: 120,
+            summarize_n: 60,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 0.5,
+            max_clock_s: 240.0,
+            seed: 0,
+            jobs: super::default_jobs(),
+        }
+    }
+}
+
+/// The full 4-class registry the experiment measures.
+pub fn four_class_registry() -> ClassRegistry {
+    ClassRegistry::new(vec![
+        ClassSpec {
+            name: "chat".into(),
+            tier: 3,
+            ttft_slo_ms: Some(600.0),
+            tbt_slo_ms: Some(80.0),
+            latency_budget: None, // bypass: the budget is profiled for chat
+            preempt_priority: 200,
+            admission: AdmissionPolicy::Fcfs,
+            starvation_age_s: None,
+        },
+        ClassSpec {
+            name: "completion".into(),
+            tier: 2,
+            ttft_slo_ms: Some(1000.0),
+            tbt_slo_ms: Some(60.0),
+            latency_budget: Some(1.0),
+            preempt_priority: 150,
+            admission: AdmissionPolicy::Fcfs,
+            starvation_age_s: None,
+        },
+        ClassSpec {
+            name: "summarize".into(),
+            tier: 1,
+            ttft_slo_ms: None, // elastic: placed at rebalance ticks
+            tbt_slo_ms: Some(400.0),
+            latency_budget: Some(2.0),
+            preempt_priority: 50,
+            admission: AdmissionPolicy::LongestPrefix,
+            starvation_age_s: Some(120.0),
+        },
+        ClassSpec {
+            name: "batch".into(),
+            tier: 0,
+            ttft_slo_ms: None,
+            tbt_slo_ms: None,
+            latency_budget: Some(4.0),
+            preempt_priority: 0,
+            admission: AdmissionPolicy::LongestPrefix,
+            starvation_age_s: None,
+        },
+    ])
+    .expect("4-class registry is valid")
+}
+
+/// Remap every event of `trace` to `class`.
+fn reclassed(trace: Trace, class: Class) -> Vec<TraceEvent> {
+    trace.events.into_iter().map(|mut e| {
+        e.class = class;
+        e
+    }).collect()
+}
+
+/// The calibrated 4-class trace: chat + completion as Azure-shaped
+/// interactive streams (completion: shorter prompts, longer tails of
+/// small outputs), summarization as a prefix-heavy MMLU-style backlog,
+/// batch as an arXiv-summarization throughput backlog.
+pub fn four_class_trace(cfg: &MultiSloConfig) -> Trace {
+    let chat = azure::generate(
+        &AzureTraceConfig {
+            duration_s: cfg.trace_s,
+            mean_qps: cfg.chat_qps,
+            ..Default::default()
+        },
+        cfg.seed,
+    );
+    let completion = azure::generate(
+        &AzureTraceConfig {
+            duration_s: cfg.trace_s,
+            mean_qps: cfg.chat_qps * 1.5,
+            prompt_mu: 5.0,
+            prompt_sigma: 0.6,
+            output_mu: 3.0,
+            output_sigma: 0.5,
+            max_prompt: 2000,
+            max_output: 64,
+            ..Default::default()
+        },
+        cfg.seed + 1,
+    );
+    let summarize = datasets::generate(Dataset::Mmlu, cfg.summarize_n, cfg.seed + 2);
+    let batch = datasets::generate(Dataset::ArxivSummarization, cfg.batch_n, cfg.seed + 3);
+    let mut events = reclassed(chat, Class(0));
+    events.extend(reclassed(completion, Class(1)));
+    events.extend(reclassed(summarize, Class(2)));
+    events.extend(reclassed(batch, Class(3)));
+    Trace::new(events)
+}
+
+/// Collapse the 4-class trace onto the binary registry: every interactive
+/// or summarization event becomes `online`, batch becomes `offline` —
+/// the pre-registry system's only available encoding.
+pub fn collapse_to_two(trace: &Trace) -> Trace {
+    let events = trace
+        .events
+        .iter()
+        .cloned()
+        .map(|mut e| {
+            e.class = if e.class == Class(3) { Class::OFFLINE } else { Class::ONLINE };
+            e
+        })
+        .collect();
+    Trace::new(events)
+}
+
+fn build_engines(
+    cfg: &MultiSloConfig,
+    registry: &Arc<ClassRegistry>,
+    n: usize,
+) -> Vec<Engine<SimBackend>> {
+    (0..n)
+        .map(|i| {
+            let model = CostModel::a100_llama7b();
+            let state = EngineState::with_registry(
+                Arc::clone(registry),
+                OfflinePolicy::Psm,
+                model.num_blocks(16),
+                16,
+                cfg.seed + i as u64,
+            );
+            let sched = HybridScheduler::new(
+                SchedulerConfig {
+                    latency_budget_ms: Some(cfg.latency_budget_ms),
+                    ..SchedulerConfig::default()
+                },
+                LatencyPredictor::default_seed(),
+            );
+            let mut engine =
+                Engine::new(sched, state, SimBackend::new(model, cfg.seed + i as u64));
+            engine.state.keep_finished = false;
+            // Track latency for every class with a declared SLO so the
+            // attainment columns are measured, not zero.
+            for c in registry.ids() {
+                let spec = registry.spec(c);
+                if spec.ttft_slo_ms.is_some() || spec.tbt_slo_ms.is_some() {
+                    engine.metrics.set_track_latency(c, true);
+                }
+            }
+            engine
+        })
+        .collect()
+}
+
+/// One grid cell's measurement.
+pub struct CellOutcome {
+    pub config_name: &'static str,
+    pub registry: Arc<ClassRegistry>,
+    pub replicas: usize,
+    pub result: ClusterRunResult,
+}
+
+/// Run the {2,4}-class × replica-count grid. Cells execute as independent
+/// seeded jobs; results come back in grid order.
+pub fn run_grid(cfg: &MultiSloConfig) -> anyhow::Result<Vec<CellOutcome>> {
+    let four = Arc::new(four_class_registry());
+    let two = Arc::new(ClassRegistry::default_two());
+    let trace4 = four_class_trace(cfg);
+    let trace2 = collapse_to_two(&trace4);
+    let configs: [(&'static str, Arc<ClassRegistry>, &Trace); 2] =
+        [("2-class", two, &trace2), ("4-class", four, &trace4)];
+    let mut cells: Vec<(&'static str, Arc<ClassRegistry>, &Trace, usize)> = Vec::new();
+    for (name, reg, trace) in &configs {
+        for &n in &cfg.replica_counts {
+            cells.push((*name, Arc::clone(reg), *trace, n));
+        }
+    }
+    let jobs: Vec<Job<'_, anyhow::Result<ClusterRunResult>>> = cells
+        .iter()
+        .map(|(_, reg, trace, n)| {
+            let reg = Arc::clone(reg);
+            let n = *n;
+            job(move || {
+                let engines = build_engines(cfg, &reg, n);
+                let mut sim = ClusterSim::new(
+                    engines,
+                    RouterPolicy::SloHeadroom.build(),
+                    cfg.rebalance_interval_s,
+                );
+                sim.run(trace, cfg.max_clock_s)
+            })
+        })
+        .collect();
+    let results = run_jobs(cfg.jobs.max(1), jobs);
+    let mut outcomes = Vec::with_capacity(cells.len());
+    for ((name, reg, _, n), result) in cells.into_iter().zip(results) {
+        outcomes.push(CellOutcome {
+            config_name: name,
+            registry: reg,
+            replicas: n,
+            result: result?,
+        });
+    }
+    Ok(outcomes)
+}
+
+/// Render the grid as the `multi_slo` table: one row per
+/// (config, replicas, class) plus the cell's total throughput.
+pub fn table(outcomes: &[CellOutcome]) -> Table {
+    let mut t = Table::new(
+        "multi_slo",
+        &[
+            "config",
+            "replicas",
+            "class",
+            "tier",
+            "finished",
+            "tps",
+            "p50_ttft_ms",
+            "p99_ttft_ms",
+            "p50_tbt_ms",
+            "p99_tbt_ms",
+            "ttft_slo_ms",
+            "ttft_ok",
+            "tbt_slo_ms",
+            "tbt_ok",
+            "total_tps",
+            "starvation_age_s",
+        ],
+    );
+    for o in outcomes {
+        let agg = &o.result.aggregate;
+        for c in o.registry.ids() {
+            let spec = o.registry.spec(c);
+            let Some(block) = agg.classes.get(c.index()) else { continue };
+            let slo_cell = |slo: Option<f64>, achieved: f64| match slo {
+                Some(limit) => (f2(limit), format!("{}", achieved <= limit)),
+                None => ("-".into(), "-".into()),
+            };
+            let (ttft_slo, ttft_ok) = slo_cell(spec.ttft_slo_ms, block.p99_ttft_ms);
+            let (tbt_slo, tbt_ok) = slo_cell(spec.tbt_slo_ms, block.p99_tbt_ms);
+            t.row(vec![
+                o.config_name.into(),
+                format!("{}", o.replicas),
+                spec.name.clone(),
+                format!("{}", spec.tier),
+                format!("{}", block.finished),
+                f1(block.tps),
+                f2(block.p50_ttft_ms),
+                f2(block.p99_ttft_ms),
+                f2(block.p50_tbt_ms),
+                f2(block.p99_tbt_ms),
+                ttft_slo,
+                ttft_ok,
+                tbt_slo,
+                tbt_ok,
+                f1(agg.total_tps),
+                f2(o.result.offline_starvation_age_s),
+            ]);
+        }
+    }
+    t
+}
+
+/// Run the grid, print the table, and write `<out_dir>/multi_slo.csv`.
+pub fn run_and_save(cfg: &MultiSloConfig, out_dir: &str) -> anyhow::Result<Vec<CellOutcome>> {
+    let outcomes = run_grid(cfg)?;
+    let t = table(&outcomes);
+    t.print();
+    t.save_to(out_dir)?;
+    println!("-> {out_dir}/multi_slo.csv");
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MultiSloConfig {
+        MultiSloConfig {
+            replica_counts: vec![1, 2],
+            chat_qps: 2.0,
+            trace_s: 8.0,
+            batch_n: 16,
+            summarize_n: 10,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 0.5,
+            max_clock_s: 120.0,
+            seed: 5,
+            jobs: 1,
+        }
+    }
+
+    #[test]
+    fn four_class_trace_covers_every_class() {
+        let cfg = tiny();
+        let tr = four_class_trace(&cfg);
+        for i in 0..4u16 {
+            assert!(tr.num_of(Class(i)) > 0, "class {i} missing from the trace");
+        }
+        let two = collapse_to_two(&tr);
+        assert_eq!(two.len(), tr.len());
+        assert_eq!(two.num_of(Class::OFFLINE), tr.num_of(Class(3)));
+        assert_eq!(
+            two.num_of(Class::ONLINE),
+            tr.num_of(Class(0)) + tr.num_of(Class(1)) + tr.num_of(Class(2))
+        );
+    }
+
+    #[test]
+    fn grid_rows_cover_config_replica_class() {
+        let cfg = tiny();
+        let outcomes = run_grid(&cfg).unwrap();
+        assert_eq!(outcomes.len(), 4, "2 configs x 2 replica counts");
+        let t = table(&outcomes);
+        // 2-class cells emit 2 rows, 4-class cells 4 rows.
+        assert_eq!(t.rows.len(), 2 * 2 + 2 * 4);
+        for o in &outcomes {
+            assert!(o.result.aggregate.online_finished > 0, "{}", o.config_name);
+            for e in &o.result.per_replica {
+                assert!(e.report.duration_s > 0.0);
+            }
+        }
+        // The 4-class cells actually finish interactive work in every
+        // interactive class.
+        let four = outcomes.iter().find(|o| o.config_name == "4-class").unwrap();
+        assert!(four.result.aggregate.classes[1].finished > 0, "completion served");
+    }
+
+    #[test]
+    fn csv_is_jobs_invariant_and_seed_deterministic() {
+        let cfg = tiny();
+        let a = table(&run_grid(&cfg).unwrap()).to_csv();
+        let b = table(&run_grid(&cfg).unwrap()).to_csv();
+        assert_eq!(a, b, "same seed, same CSV");
+        let parallel = table(&run_grid(&MultiSloConfig { jobs: 3, ..cfg }).unwrap()).to_csv();
+        assert_eq!(a, parallel, "CSV bytes must not depend on jobs");
+    }
+}

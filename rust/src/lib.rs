@@ -4,11 +4,14 @@
 //! Request Co-location* (Sun, Wang, Lai; cs.DC 2025) as a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the serving coordinator: dual-queue
-//!   request management, the SLO-aware two-phase scheduler, the linear-
-//!   regression latency predictor, the SLO-aware profiler, prefix-sharing-
-//!   maximizing offline scheduling with a fairness extension, priority
-//!   preemption, and a paged KV block manager.
+//! * **Layer 3 (this crate)** — the serving coordinator: an N-class
+//!   **SLO-class registry** (the paper's online/offline dichotomy is its
+//!   two-class default) with per-class queues, the SLO-aware tier-loop
+//!   scheduler (higher tiers charge the latency budget first, lower
+//!   tiers drink the residual, preemption flows down-tier only), the
+//!   linear-regression latency predictor, the SLO-aware profiler,
+//!   prefix-sharing-maximizing offline scheduling with a fairness
+//!   extension, and a paged KV block manager.
 //! * **Layer 2** — a JAX step function (mixed chunked-prefill/decode batch
 //!   over a slotted KV cache) AOT-lowered to HLO text at build time
 //!   (`python/compile/`); loaded and executed here via the PJRT C API
@@ -32,9 +35,9 @@
 //!
 //! Entry points: the `hygen` binary (`serve`, `run-trace`, `figures`
 //! — with `-j` parallel experiment execution —, `profile`,
-//! `train-predictor`, `bench-sched`, `bench-replay`, `cluster-sim`
-//! subcommands), the `examples/`, and the bench targets under
-//! `rust/benches/`.
+//! `train-predictor`, `bench-sched`, `bench-replay`, `cluster-sim`,
+//! `multi-slo` subcommands), the `examples/`, and the bench targets
+//! under `rust/benches/`.
 
 pub mod baselines;
 pub mod cluster;

@@ -11,6 +11,8 @@
 //! * `bench-replay`     — end-to-end replay throughput bench; writes BENCH_e2e.json
 //! * `cluster-sim`      — multi-replica router comparison; writes
 //!   artifacts/cluster_compare.csv
+//! * `multi-slo`        — N-class SLO registry comparison on the 4-class
+//!   trace; writes artifacts/multi_slo.csv
 
 use hygen::baselines::{SimSetup, System};
 use hygen::cluster::router::RouterPolicy;
@@ -67,6 +69,14 @@ USAGE:
                      artifacts/cluster_compare.csv, byte-identical for a
                      fixed seed; --check enforces the slo-headroom-vs-
                      round-robin gate at 4 replicas)
+  hygen multi-slo    [--out DIR] [--quick] [--seed N] [-j/--jobs N]
+                     [--replicas 1,2,4]
+                     (replay the calibrated 4-class trace — chat /
+                     completion / summarize / batch — under the 2-class
+                     and 4-class registries across replica counts; writes
+                     artifacts/multi_slo.csv with per-tier SLO attainment
+                     plus total throughput, byte-identical for a fixed
+                     seed and any -j)
 
 MODELS: a100-llama2-7b (default), a40-qwen-14b, a40x4-yi-34b-tp2pp2,
         a100-mistral-7b, a5000-sheared-2.7b
@@ -90,6 +100,7 @@ fn main() {
         Some("bench-sched") => cmd_bench_sched(&args),
         Some("bench-replay") => cmd_bench_replay(&args),
         Some("cluster-sim") => cmd_cluster_sim(&args),
+        Some("multi-slo") => cmd_multi_slo(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -158,15 +169,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cfg.cluster.drain_s = s;
     }
     println!("loading artifacts from {} ...", cfg.artifacts_dir);
+    let registry = std::sync::Arc::new(cfg.classes.clone());
     let server = {
         let factories: Vec<_> = (0..cfg.cluster.replicas)
             .map(|i| {
                 let cfg = cfg.clone();
+                let registry = std::sync::Arc::clone(&registry);
                 move || -> anyhow::Result<_> {
                     let engine = build_real_engine(
                         &cfg.artifacts_dir,
                         cfg.latency_budget_ms,
                         cfg.policy,
+                        registry,
                         cfg.seed + i as u64,
                     )?;
                     println!(
@@ -179,12 +193,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 }
             })
             .collect();
-        Server::start_cluster(
+        Server::start_cluster_with_registry(
             &cfg.bind,
             factories,
             cfg.cluster.router.build(),
             cfg.http_workers,
             std::time::Duration::from_secs_f64(cfg.cluster.drain_s),
+            std::sync::Arc::clone(&registry),
         )?
     };
     println!(
@@ -376,6 +391,47 @@ fn cmd_cluster_sim(args: &Args) -> anyhow::Result<()> {
             "check passed: slo-headroom >= round-robin at {at} replicas \
              (p99 TBT within {tbt_slo:.0} ms)"
         );
+    }
+    Ok(())
+}
+
+fn cmd_multi_slo(args: &Args) -> anyhow::Result<()> {
+    use hygen::experiments::multi_slo::{self, MultiSloConfig};
+    let mut cfg =
+        if args.get_bool("quick") { MultiSloConfig::quick() } else { MultiSloConfig::full() };
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.jobs = args.get_usize_alias("jobs", "j", cfg.jobs).max(1);
+    if let Some(list) = args.get("replicas") {
+        cfg.replica_counts = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|_| anyhow::anyhow!("--replicas expects a comma list like 1,2,4"))?;
+        anyhow::ensure!(
+            cfg.replica_counts.iter().all(|&n| n >= 1),
+            "replica counts must be >= 1"
+        );
+    }
+    let out_dir = args.get_or("out", "artifacts");
+    let outcomes = multi_slo::run_and_save(&cfg, out_dir)?;
+    // Sanity headline: the 4-class registry must actually serve every
+    // interactive class at the largest replica count.
+    if let Some(best) = outcomes
+        .iter()
+        .filter(|o| o.config_name == "4-class")
+        .max_by_key(|o| o.replicas)
+    {
+        for c in best.registry.ids() {
+            let spec = best.registry.spec(c);
+            if !spec.elastic() {
+                anyhow::ensure!(
+                    best.result.aggregate.classes[c.index()].finished > 0,
+                    "interactive class '{}' finished nothing at {} replicas",
+                    spec.name,
+                    best.replicas
+                );
+            }
+        }
     }
     Ok(())
 }

@@ -27,6 +27,7 @@ pub mod http;
 
 use crate::cluster::replica::{Job, Replica, ReplicaShared};
 use crate::cluster::router::{Router, RouterPolicy};
+use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::request::Class;
 use crate::engine::{Engine, ExecutionBackend};
 use crate::runtime::tokenizer;
@@ -44,10 +45,13 @@ pub use crate::cluster::replica::Completion;
 /// Default graceful-drain deadline on shutdown.
 pub const DEFAULT_DRAIN: Duration = Duration::from_secs(5);
 
-/// Shared front-end state: the replica ports and the routing policy.
+/// Shared front-end state: the replica ports, the routing policy, and
+/// the SLO-class registry (resolves request `class` names and decides
+/// interactive-vs-elastic routing).
 struct ClusterState {
     replicas: Vec<ReplicaPort>,
     router: Mutex<Box<dyn Router>>,
+    registry: Arc<ClassRegistry>,
 }
 
 struct ReplicaPort {
@@ -91,13 +95,41 @@ impl Server {
     }
 
     /// Start serving with one engine thread per factory and `router`
-    /// deciding which replica serves each submission.
+    /// deciding which replica serves each submission, under the default
+    /// two-class registry.
     pub fn start_cluster<B, F>(
         bind: &str,
         factories: Vec<F>,
         router: Box<dyn Router>,
         workers: usize,
         drain: Duration,
+    ) -> anyhow::Result<Server>
+    where
+        B: ExecutionBackend + 'static,
+        F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+    {
+        Self::start_cluster_with_registry(
+            bind,
+            factories,
+            router,
+            workers,
+            drain,
+            Arc::new(ClassRegistry::default_two()),
+        )
+    }
+
+    /// Start serving under an explicit SLO-class registry. Submissions
+    /// carry a `class` name resolved against it; each engine factory must
+    /// build its [`EngineState`](crate::coordinator::state::EngineState)
+    /// over the *same* registry or class-indexed enqueues will be
+    /// rejected.
+    pub fn start_cluster_with_registry<B, F>(
+        bind: &str,
+        factories: Vec<F>,
+        router: Box<dyn Router>,
+        workers: usize,
+        drain: Duration,
+        registry: Arc<ClassRegistry>,
     ) -> anyhow::Result<Server>
     where
         B: ExecutionBackend + 'static,
@@ -135,6 +167,7 @@ impl Server {
                 .map(|r| ReplicaPort { tx: r.tx.clone(), shared: Arc::clone(&r.shared) })
                 .collect(),
             router: Mutex::new(router),
+            registry,
         });
 
         let accept_thread = {
@@ -218,6 +251,45 @@ const WORST_FIELDS: [&str; 7] = [
     "duration_s",
 ];
 
+/// Per-class block fields that sum across replicas; the rest of the
+/// block (latency means/percentiles) takes the per-replica worst.
+const CLASS_SUM_FIELDS: [&str; 3] = ["finished", "tps", "qps"];
+const CLASS_WORST_FIELDS: [&str; 6] = [
+    "mean_ttft_ms",
+    "p50_ttft_ms",
+    "p99_ttft_ms",
+    "mean_tbt_ms",
+    "p50_tbt_ms",
+    "p99_tbt_ms",
+];
+
+/// Aggregate the replicas' `classes` arrays element-wise (class `i` with
+/// class `i`): additive fields summed, latency fields worst-replica.
+fn aggregate_class_blocks(reports: &[Json]) -> Json {
+    let n = reports
+        .iter()
+        .filter_map(|r| r.get("classes").as_arr().map(|a| a.len()))
+        .max()
+        .unwrap_or(0);
+    let block = |r: &Json, i: usize| r.get("classes").as_arr().and_then(|a| a.get(i).cloned());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let blocks: Vec<Json> = reports.iter().filter_map(|r| block(r, i)).collect();
+        let mut pairs: Vec<(&str, Json)> = vec![("class", Json::from(i))];
+        for field in CLASS_SUM_FIELDS {
+            let total: f64 = blocks.iter().filter_map(|b| b.get(field).as_f64()).sum();
+            pairs.push((field, Json::from(total)));
+        }
+        for field in CLASS_WORST_FIELDS {
+            let worst =
+                blocks.iter().filter_map(|b| b.get(field).as_f64()).fold(0.0f64, f64::max);
+            pairs.push((field, Json::from(worst)));
+        }
+        out.push(Json::obj(pairs));
+    }
+    Json::Arr(out)
+}
+
 /// Aggregate per-replica report JSONs into the multi-replica `/metrics`
 /// payload.
 fn aggregate_metrics(reports: &[Json]) -> Json {
@@ -233,6 +305,7 @@ fn aggregate_metrics(reports: &[Json]) -> Json {
             .fold(0.0f64, f64::max);
         agg.push((field, Json::from(worst)));
     }
+    agg.push(("classes", aggregate_class_blocks(reports)));
     Json::obj(vec![
         ("replicas", Json::Arr(reports.to_vec())),
         ("aggregate", Json::obj(agg)),
@@ -289,26 +362,40 @@ fn handle_connection(
                 return write_response(stream, 400, "application/json", b"{\"error\":\"missing prompt\"}");
             };
             let max_tokens = j.get("max_tokens").as_u64().unwrap_or(16) as usize;
-            let class = match j.get("class").as_str().unwrap_or("online") {
-                "offline" => Class::Offline,
-                _ => Class::Online,
+            // Resolve the class name against the registry (default:
+            // the flagship class). Unknown names are an explicit client
+            // error, not a silent interactive upgrade.
+            let class = match j.get("class").as_str() {
+                None => Class::ONLINE,
+                Some(name) => match state.registry.by_name(name) {
+                    Some(c) => c,
+                    None => {
+                        return write_response(
+                            stream,
+                            400,
+                            "application/json",
+                            b"{\"error\":\"unknown class\"}",
+                        )
+                    }
+                },
             };
-            // Route from the published census snapshots. Offline
+            // Route from the published census snapshots. Elastic
             // submissions need a reply channel too, so a deferring router
-            // falls back to its online placement. A single replica skips
-            // the snapshot copies and the router lock entirely — the
-            // classic one-engine server pays no routing overhead.
+            // falls back to its interactive placement. A single replica
+            // skips the snapshot copies and the router lock entirely —
+            // the classic one-engine server pays no routing overhead.
             let target = if state.replicas.len() == 1 {
                 0
             } else {
                 let snaps: Vec<_> =
                     state.replicas.iter().map(|r| r.shared.routing_snapshot()).collect();
                 let mut router = state.router.lock().unwrap();
-                let i = match class {
-                    Class::Online => router.route_online(&snaps),
-                    Class::Offline => router
+                let i = if state.registry.spec(class).elastic() {
+                    router
                         .route_offline(&snaps)
-                        .unwrap_or_else(|| router.route_online(&snaps)),
+                        .unwrap_or_else(|| router.route_online(&snaps))
+                } else {
+                    router.route_online(&snaps)
                 };
                 i.min(state.replicas.len() - 1)
             };
@@ -685,6 +772,42 @@ mod tests {
         let r = http(server.addr, raw);
         assert!(r.contains("missing prompt"), "{r}");
         server.shutdown();
+    }
+
+    #[test]
+    fn unknown_class_name_is_a_client_error() {
+        let server = start_echo_server();
+        let r = http(server.addr, &completions_request_class("abcd", "mystery"));
+        assert!(r.contains("400"), "{r}");
+        assert!(r.contains("unknown class"), "{r}");
+        // Registry names keep working.
+        let r = http(server.addr, &completions_request_class("abcd", "offline"));
+        assert!(r.contains("200 OK"), "{r}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn aggregate_merges_per_class_blocks_element_wise() {
+        let a = Json::parse(
+            r#"{"total_tps": 1.0, "classes": [
+                {"class": 0, "finished": 2, "tps": 5.0, "p99_ttft_ms": 10.0},
+                {"class": 1, "finished": 1, "tps": 3.0, "p99_ttft_ms": 0.0}
+            ]}"#,
+        )
+        .unwrap();
+        let b = Json::parse(
+            r#"{"total_tps": 2.0, "classes": [
+                {"class": 0, "finished": 4, "tps": 7.0, "p99_ttft_ms": 25.0}
+            ]}"#,
+        )
+        .unwrap();
+        let m = aggregate_metrics(&[a, b]);
+        let classes = m.get("aggregate").get("classes").as_arr().unwrap();
+        assert_eq!(classes.len(), 2, "max class count across replicas");
+        assert_eq!(classes[0].get("finished").as_f64(), Some(6.0), "additive summed");
+        assert_eq!(classes[0].get("tps").as_f64(), Some(12.0));
+        assert_eq!(classes[0].get("p99_ttft_ms").as_f64(), Some(25.0), "latency = worst");
+        assert_eq!(classes[1].get("finished").as_f64(), Some(1.0), "missing block = absent");
     }
 
     #[test]

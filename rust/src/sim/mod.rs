@@ -113,7 +113,7 @@ mod tests {
         let mut e = Engine::new(sched, state, SimBackend::new(model, 1));
         let mut events = Vec::new();
         for i in 0..20 {
-            events.push(ev(i as f64 * 0.5, Class::Online, 128, 32));
+            events.push(ev(i as f64 * 0.5, Class::ONLINE, 128, 32));
         }
         let r = e.run_trace(&Trace::new(events), 120.0, true).unwrap();
         assert_eq!(r.finished_online, 20);
@@ -141,7 +141,7 @@ mod tests {
         );
         let mut e = Engine::new(sched, state, SimBackend::new(model, 1).recording());
         let r = e
-            .run_trace(&Trace::new(vec![ev(0.0, Class::Online, 64, 8)]), 10.0, true)
+            .run_trace(&Trace::new(vec![ev(0.0, Class::ONLINE, 64, 8)]), 10.0, true)
             .unwrap();
         assert_eq!(e.backend.observed.len() as u64, r.iterations);
     }
@@ -156,7 +156,7 @@ mod tests {
                 LatencyPredictor::default_seed(),
             );
             let mut e = Engine::new(sched, state, SimBackend::new(model, seed));
-            let tr = Trace::new(vec![ev(0.0, Class::Online, 256, 16)]);
+            let tr = Trace::new(vec![ev(0.0, Class::ONLINE, 256, 16)]);
             e.run_trace(&tr, 30.0, true).unwrap().report.mean_tbt_ms
         };
         assert_eq!(run(5), run(5));

@@ -109,7 +109,7 @@ pub fn generate(cfg: &AzureTraceConfig, seed: u64) -> Trace {
         uniq = uniq.wrapping_add(prompt_len as u32 + 17);
         events.push(TraceEvent {
             arrival_s: t,
-            class: Class::Online,
+            class: Class::ONLINE,
             prompt_len,
             output_len,
             prompt: prompt.into(),

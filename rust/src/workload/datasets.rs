@@ -127,7 +127,7 @@ pub fn generate_arrivals(dataset: Dataset, n: usize, span_s: f64, seed: u64) -> 
         let arrival_s = if span_s > 0.0 { span_s * (i as f64 / n as f64) } else { 0.0 };
         events.push(TraceEvent {
             arrival_s,
-            class: Class::Offline,
+            class: Class::OFFLINE,
             prompt_len,
             output_len,
             prompt: prompt.into(),

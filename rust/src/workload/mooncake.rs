@@ -76,7 +76,7 @@ pub fn generate(cfg: &MooncakeTraceConfig, seed: u64) -> Trace {
         uniq = uniq.wrapping_add(prompt_len as u32 + 29);
         events.push(TraceEvent {
             arrival_s: t,
-            class: Class::Online,
+            class: Class::ONLINE,
             prompt_len,
             output_len,
             prompt: prompt.into(),

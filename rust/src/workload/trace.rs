@@ -24,14 +24,22 @@ pub struct Trace {
     /// Events sorted by arrival. Treat as read-only after construction:
     /// the per-class counts below are computed once in [`Trace::new`].
     pub events: Vec<TraceEvent>,
-    n_online: usize,
+    /// Events per class id (dense; index = class).
+    n_by_class: Vec<usize>,
 }
 
 impl Trace {
     pub fn new(mut events: Vec<TraceEvent>) -> Trace {
         events.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
-        let n_online = events.iter().filter(|e| e.class == Class::Online).count();
-        Trace { events, n_online }
+        let mut n_by_class = Vec::new();
+        for e in &events {
+            let i = e.class.index();
+            if i >= n_by_class.len() {
+                n_by_class.resize(i + 1, 0);
+            }
+            n_by_class[i] += 1;
+        }
+        Trace { events, n_by_class }
     }
 
     pub fn len(&self) -> usize {
@@ -42,16 +50,21 @@ impl Trace {
         self.events.is_empty()
     }
 
-    /// Online events in the trace (precomputed — `run_trace`'s admission
-    /// lookahead and the bench trace stats read this every replay instead
-    /// of rescanning the event list).
-    pub fn num_online(&self) -> usize {
-        self.n_online
+    /// Events of one class (precomputed — the replay loops' admission
+    /// lookahead and the bench trace stats read these counts every replay
+    /// instead of rescanning the event list).
+    pub fn num_of(&self, class: Class) -> usize {
+        self.n_by_class.get(class.index()).copied().unwrap_or(0)
     }
 
-    /// Offline events in the trace (precomputed, see [`Trace::num_online`]).
+    /// Flagship-class (class 0) events in the trace.
+    pub fn num_online(&self) -> usize {
+        self.num_of(Class::ONLINE)
+    }
+
+    /// Events of every class beyond the flagship.
     pub fn num_offline(&self) -> usize {
-        self.events.len() - self.n_online
+        self.events.len() - self.num_online()
     }
 
     pub fn duration_s(&self) -> f64 {
@@ -88,12 +101,17 @@ impl Trace {
     pub fn to_csv(&self) -> String {
         let mut out = String::from("arrival_s,class,prompt_len,output_len\n");
         for e in &self.events {
+            // Classic names for the default two classes; higher class ids
+            // serialize positionally ("class2", ...) so N-class traces
+            // survive the round trip without a registry in scope.
+            let class: std::borrow::Cow<'_, str> = match e.class {
+                Class::ONLINE => "online".into(),
+                Class::OFFLINE => "offline".into(),
+                c => format!("class{}", c.index()).into(),
+            };
             out.push_str(&format!(
                 "{:.6},{},{},{}\n",
-                e.arrival_s,
-                if e.class.is_online() { "online" } else { "offline" },
-                e.prompt_len,
-                e.output_len
+                e.arrival_s, class, e.prompt_len, e.output_len
             ));
         }
         out
@@ -110,9 +128,12 @@ impl Trace {
                 anyhow::bail!("line {}: expected 4 fields, got {}", i + 1, parts.len());
             }
             let class = match parts[1] {
-                "online" => Class::Online,
-                "offline" => Class::Offline,
-                other => anyhow::bail!("line {}: bad class '{other}'", i + 1),
+                "online" => Class::ONLINE,
+                "offline" => Class::OFFLINE,
+                other => match other.strip_prefix("class").and_then(|n| n.parse::<u16>().ok()) {
+                    Some(n) => Class(n),
+                    None => anyhow::bail!("line {}: bad class '{other}'", i + 1),
+                },
             };
             events.push(TraceEvent {
                 arrival_s: parts[0].parse()?,
@@ -146,8 +167,8 @@ mod tests {
     #[test]
     fn new_sorts_by_arrival() {
         let tr = Trace::new(vec![
-            ev(2.0, Class::Online, 10, 5),
-            ev(1.0, Class::Offline, 20, 5),
+            ev(2.0, Class::ONLINE, 10, 5),
+            ev(1.0, Class::OFFLINE, 20, 5),
         ]);
         assert_eq!(tr.events[0].arrival_s, 1.0);
         assert_eq!(tr.duration_s(), 2.0);
@@ -156,22 +177,43 @@ mod tests {
     #[test]
     fn per_class_counts_precomputed() {
         let tr = Trace::new(vec![
-            ev(0.0, Class::Online, 1, 1),
-            ev(1.0, Class::Offline, 1, 1),
-            ev(2.0, Class::Online, 1, 1),
+            ev(0.0, Class::ONLINE, 1, 1),
+            ev(1.0, Class::OFFLINE, 1, 1),
+            ev(2.0, Class::ONLINE, 1, 1),
         ]);
         assert_eq!(tr.num_online(), 2);
         assert_eq!(tr.num_offline(), 1);
-        let merged = tr.merged(Trace::new(vec![ev(0.5, Class::Offline, 1, 1)]));
+        let merged = tr.merged(Trace::new(vec![ev(0.5, Class::OFFLINE, 1, 1)]));
         assert_eq!(merged.num_online(), 2);
         assert_eq!(merged.num_offline(), 2);
         assert_eq!(Trace::default().num_online(), 0);
+        assert_eq!(Trace::default().num_of(Class(3)), 0);
+        // N-class counts are dense by class id.
+        let multi = Trace::new(vec![
+            ev(0.0, Class(0), 1, 1),
+            ev(0.1, Class(2), 1, 1),
+            ev(0.2, Class(3), 1, 1),
+            ev(0.3, Class(3), 1, 1),
+        ]);
+        assert_eq!(multi.num_of(Class(2)), 1);
+        assert_eq!(multi.num_of(Class(3)), 2);
+        assert_eq!(multi.num_of(Class(1)), 0);
+        assert_eq!(multi.num_offline(), 3);
+    }
+
+    #[test]
+    fn csv_roundtrips_higher_class_ids() {
+        let tr = Trace::new(vec![ev(0.5, Class(2), 16, 4), ev(1.0, Class(3), 8, 2)]);
+        let parsed = Trace::from_csv(&tr.to_csv()).unwrap();
+        assert_eq!(parsed.events[0].class, Class(2));
+        assert_eq!(parsed.events[1].class, Class(3));
+        assert!(tr.to_csv().contains("class2"));
     }
 
     #[test]
     fn merged_interleaves() {
-        let a = Trace::new(vec![ev(1.0, Class::Online, 1, 1), ev(3.0, Class::Online, 1, 1)]);
-        let b = Trace::new(vec![ev(2.0, Class::Offline, 1, 1)]);
+        let a = Trace::new(vec![ev(1.0, Class::ONLINE, 1, 1), ev(3.0, Class::ONLINE, 1, 1)]);
+        let b = Trace::new(vec![ev(2.0, Class::OFFLINE, 1, 1)]);
         let m = a.merged(b);
         assert_eq!(m.len(), 3);
         assert!(m.events.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
@@ -180,13 +222,13 @@ mod tests {
     #[test]
     fn csv_roundtrip() {
         let tr = Trace::new(vec![
-            ev(0.5, Class::Online, 128, 64),
-            ev(1.25, Class::Offline, 4096, 512),
+            ev(0.5, Class::ONLINE, 128, 64),
+            ev(1.25, Class::OFFLINE, 4096, 512),
         ]);
         let parsed = Trace::from_csv(&tr.to_csv()).unwrap();
         assert_eq!(parsed.len(), 2);
         assert_eq!(parsed.events[1].prompt_len, 4096);
-        assert_eq!(parsed.events[0].class, Class::Online);
+        assert_eq!(parsed.events[0].class, Class::ONLINE);
     }
 
     #[test]
@@ -198,7 +240,7 @@ mod tests {
     #[test]
     fn sample_to_qps_reduces_rate() {
         let events: Vec<TraceEvent> =
-            (0..1000).map(|i| ev(i as f64 * 0.1, Class::Online, 10, 10)).collect();
+            (0..1000).map(|i| ev(i as f64 * 0.1, Class::ONLINE, 10, 10)).collect();
         let tr = Trace::new(events);
         assert!((tr.mean_qps() - 10.0).abs() < 0.2);
         let mut rng = Rng::new(0);

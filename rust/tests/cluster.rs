@@ -56,7 +56,7 @@ fn random_trace(g: &mut Gen) -> Trace {
         let online = g.bool();
         events.push(TraceEvent {
             arrival_s: g.f64(0.0, 5.0),
-            class: if online { Class::Online } else { Class::Offline },
+            class: if online { Class::ONLINE } else { Class::OFFLINE },
             prompt_len: g.usize(8, 400),
             output_len: g.usize(1, 24),
             prompt: Vec::new().into(),
@@ -68,7 +68,7 @@ fn random_trace(g: &mut Gen) -> Trace {
     // never be admitted — by design, not a conservation bug).
     events.push(TraceEvent {
         arrival_s: 5.5,
-        class: Class::Online,
+        class: Class::ONLINE,
         prompt_len: 32,
         output_len: 4,
         prompt: Vec::new().into(),
@@ -79,16 +79,20 @@ fn random_trace(g: &mut Gen) -> Trace {
 fn random_snaps(g: &mut Gen) -> Vec<ReplicaSnapshot> {
     let n = g.usize(1, 8);
     let mut snaps: Vec<ReplicaSnapshot> = (0..n)
-        .map(|_| ReplicaSnapshot {
-            online_waiting: g.usize(0, 20),
-            offline_waiting: g.usize(0, 40),
-            running_online: g.usize(0, 20),
-            running_offline: g.usize(0, 20),
-            preempted_offline: g.usize(0, 5),
-            free_kv_tokens: g.usize(0, 10_000),
-            predicted_iter_ms: g.f64(0.0, 80.0),
-            latency_budget_ms: if g.bool() { 40.0 } else { f64::INFINITY },
-            failed: g.bool(),
+        .map(|_| {
+            let mut s = ReplicaSnapshot {
+                free_kv_tokens: g.usize(0, 10_000),
+                predicted_iter_ms: g.f64(0.0, 80.0),
+                latency_budget_ms: if g.bool() { 40.0 } else { f64::INFINITY },
+                failed: g.bool(),
+                ..ReplicaSnapshot::default()
+            };
+            s.waiting[0] = g.usize(0, 20);
+            s.waiting[1] = g.usize(0, 40);
+            s.running[0] = g.usize(0, 20);
+            s.running[1] = g.usize(0, 20);
+            s.preempted[1] = g.usize(0, 5);
+            s
         })
         .collect();
     // Keep at least one live replica in most cases.
@@ -113,10 +117,8 @@ fn prop_every_admitted_request_lands_on_exactly_one_replica() {
         let mut on_replicas = 0usize;
         for e in &sim.engines {
             e.state.check_invariants().unwrap();
-            on_replicas += e.state.num_running()
-                + e.state.online_queue.len()
-                + e.state.offline_queue.len()
-                + e.state.preempted_offline.len();
+            on_replicas +=
+                e.state.num_running() + e.state.total_waiting() + e.state.total_preempted();
         }
         let finished = r.aggregate.online_finished + r.aggregate.offline_finished;
         assert_eq!(
@@ -195,7 +197,7 @@ fn slo_headroom_beats_round_robin_on_a_skewed_burst() {
     let burst: Vec<TraceEvent> = (0..24)
         .map(|i| TraceEvent {
             arrival_s: 0.01 * i as f64,
-            class: Class::Online,
+            class: Class::ONLINE,
             // alternate huge/tiny prompts: count-even splits are
             // token-skewed
             prompt_len: if i % 2 == 0 { 1800 } else { 16 },

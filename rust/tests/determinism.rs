@@ -14,7 +14,7 @@
 
 use hygen::baselines::{SimSetup, System};
 use hygen::cluster::router::RouterPolicy;
-use hygen::experiments::{cluster_sim, figures, Ctx};
+use hygen::experiments::{cluster_sim, figures, multi_slo, Ctx};
 use hygen::sim::costmodel::CostModel;
 use hygen::workload::azure::{self, AzureTraceConfig};
 use hygen::workload::datasets::{self, Dataset};
@@ -120,5 +120,33 @@ fn cluster_sim_output_is_byte_identical_for_a_seed() {
     let parallel = cluster_csv(7, 3);
     assert_eq!(a, parallel, "cluster-sim CSV bytes must not depend on -j");
     let other = cluster_csv(8, 1);
+    assert_ne!(a, other, "the seed must actually steer the grid");
+}
+
+fn multi_slo_csv(seed: u64, jobs: usize) -> String {
+    let cfg = multi_slo::MultiSloConfig {
+        replica_counts: vec![1, 2],
+        chat_qps: 1.0,
+        trace_s: 6.0,
+        batch_n: 16,
+        summarize_n: 10,
+        latency_budget_ms: 40.0,
+        rebalance_interval_s: 0.5,
+        max_clock_s: 120.0,
+        seed,
+        jobs,
+    };
+    multi_slo::table(&multi_slo::run_grid(&cfg).unwrap()).to_csv()
+}
+
+#[test]
+fn multi_slo_output_is_byte_identical_for_a_seed() {
+    let a = multi_slo_csv(11, 1);
+    let b = multi_slo_csv(11, 1);
+    assert!(a.lines().count() > 6, "grid produced rows:\n{a}");
+    assert_eq!(a, b, "same seed must reproduce the multi-slo CSV byte-for-byte");
+    let parallel = multi_slo_csv(11, 3);
+    assert_eq!(a, parallel, "multi-slo CSV bytes must not depend on -j");
+    let other = multi_slo_csv(12, 1);
     assert_ne!(a, other, "the seed must actually steer the grid");
 }

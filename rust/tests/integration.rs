@@ -16,6 +16,10 @@ use hygen::workload::trace::{Trace, TraceEvent};
 
 const ARTIFACTS: &str = "artifacts";
 
+fn default_registry() -> std::sync::Arc<hygen::coordinator::classes::ClassRegistry> {
+    std::sync::Arc::new(hygen::coordinator::classes::ClassRegistry::default_two())
+}
+
 fn have_artifacts() -> bool {
     std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
 }
@@ -87,9 +91,9 @@ fn greedy_generation_matches_jax_reference() {
         .collect();
 
     let mut engine =
-        build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, 0).unwrap();
+        build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, default_registry(), 0).unwrap();
     let id = engine.fresh_id();
-    let req = Request::new(id, Class::Online, 0.0, prompt.len(), expected.len())
+    let req = Request::new(id, Class::ONLINE, 0.0, prompt.len(), expected.len())
         .with_prompt(prompt);
     engine.submit(req);
     while engine.has_work() {
@@ -106,7 +110,7 @@ fn chunked_prefill_equals_monolithic_through_pjrt() {
     // Generate with a prompt long enough to be chunked (> max_chunk).
     let run = |max_chunk: usize| -> Vec<u32> {
         let mut engine =
-            build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, 0).unwrap();
+            build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, default_registry(), 0).unwrap();
         engine.scheduler.cfg.max_chunk_per_request =
             max_chunk.min(engine.scheduler.cfg.max_chunk_per_request);
         let prompt = tokenizer::encode(
@@ -115,7 +119,7 @@ fn chunked_prefill_equals_monolithic_through_pjrt() {
         );
         let id = engine.fresh_id();
         engine.submit(
-            Request::new(id, Class::Online, 0.0, prompt.len(), 6).with_prompt(prompt),
+            Request::new(id, Class::ONLINE, 0.0, prompt.len(), 6).with_prompt(prompt),
         );
         while engine.has_work() {
             engine.step().unwrap();
@@ -131,12 +135,12 @@ fn chunked_prefill_equals_monolithic_through_pjrt() {
 fn colocated_batch_serves_online_and_offline() {
     require_artifacts!();
     let mut engine =
-        build_real_engine(ARTIFACTS, None, OfflinePolicy::Psm, 0).unwrap();
+        build_real_engine(ARTIFACTS, None, OfflinePolicy::Psm, default_registry(), 0).unwrap();
     let mut events = Vec::new();
     for i in 0..3 {
         events.push(TraceEvent {
             arrival_s: i as f64 * 0.001,
-            class: Class::Online,
+            class: Class::ONLINE,
             prompt_len: 24,
             output_len: 4,
             prompt: tokenizer::encode(&format!("online request number {i} body")).into(),
@@ -146,7 +150,7 @@ fn colocated_batch_serves_online_and_offline() {
         let p = tokenizer::encode(&format!("Summarize the following: doc {i}"));
         events.push(TraceEvent {
             arrival_s: 0.0,
-            class: Class::Offline,
+            class: Class::OFFLINE,
             prompt_len: p.len(),
             output_len: 3,
             prompt: p.into(),
@@ -165,11 +169,11 @@ fn deterministic_generation_across_runs() {
     require_artifacts!();
     let run = || {
         let mut engine =
-            build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, 0).unwrap();
+            build_real_engine(ARTIFACTS, None, OfflinePolicy::Fcfs, default_registry(), 0).unwrap();
         let prompt = tokenizer::encode("determinism check");
         let id = engine.fresh_id();
         engine.submit(
-            Request::new(id, Class::Online, 0.0, prompt.len(), 8).with_prompt(prompt),
+            Request::new(id, Class::ONLINE, 0.0, prompt.len(), 8).with_prompt(prompt),
         );
         while engine.has_work() {
             engine.step().unwrap();

@@ -1,0 +1,575 @@
+//! SLO-class registry contracts:
+//!
+//! * **two-phase equivalence** — under the default two-class registry the
+//!   tier-loop scheduler reproduces the pre-registry two-phase schedule
+//!   *batch-for-batch*: a literal translation of the old
+//!   online-phase/offline-phase code (kept here as the reference
+//!   implementation) and the production scheduler are driven over random
+//!   workloads and must emit identical batches at every round;
+//! * **tier ordering** — on multi-class registries, emitted batches are
+//!   tier-descending, the top tier is never preempted, and a class's
+//!   preempted set only grows when strictly-higher-tier work exists (or
+//!   the class self-preempted during its own pass);
+//! * **no budget starvation up-tier** — with two charged classes sharing
+//!   a tight budget, the higher tier's backlog finishes no slower than
+//!   the lower tier's at every round.
+
+use hygen::coordinator::batch::{Batch, BatchEntry, Features};
+use hygen::coordinator::classes::{AdmissionPolicy, ClassRegistry, ClassSpec};
+use hygen::coordinator::predictor::LatencyPredictor;
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::coordinator::request::{Class, Phase, Request, RequestId};
+use hygen::coordinator::scheduler::{
+    HybridScheduler, PreemptionMode, RateLimiter, SchedulerConfig,
+};
+use hygen::coordinator::state::EngineState;
+use hygen::util::prop::{check, Gen};
+use std::sync::Arc;
+
+// ------------------------------------------------------------------ shared
+
+fn apply(st: &mut EngineState, batch: &Batch) {
+    let mut done: Vec<RequestId> = Vec::new();
+    for e in &batch.entries {
+        let finished = if e.is_prefill {
+            st.advance_prefill(e.id, e.n_tokens) && st.advance_decode(e.id)
+        } else {
+            st.advance_decode(e.id)
+        };
+        if finished {
+            done.push(e.id);
+        }
+    }
+    for id in done {
+        st.finish(id);
+    }
+}
+
+fn prompt_for(id: u64, len: usize, family: Option<u32>) -> Vec<u32> {
+    (0..len as u32)
+        .map(|k| match family {
+            Some(fam) if k < 32 => fam * 1000 + k,
+            _ => id as u32 * 7919 + k,
+        })
+        .collect()
+}
+
+// ---------------------------------------------- reference two-phase (frozen)
+
+/// Literal translation of the pre-registry two-phase scheduler (§4.1,
+/// Alg. 1–2 hard-coded to online/offline), expressed against the
+/// class-indexed state API. This is the frozen behavioral baseline the
+/// tier-loop scheduler must match exactly under the default registry.
+struct TwoPhaseReference {
+    cfg: SchedulerConfig,
+    predictor: LatencyPredictor,
+    offline_limiter: Option<RateLimiter>,
+}
+
+impl TwoPhaseReference {
+    fn new(cfg: SchedulerConfig, predictor: LatencyPredictor) -> TwoPhaseReference {
+        let offline_limiter = cfg.offline_qps_cap.map(RateLimiter::new);
+        TwoPhaseReference { cfg, predictor, offline_limiter }
+    }
+
+    fn phase_ids(state: &EngineState, class: Class, phase: Phase) -> Vec<RequestId> {
+        state
+            .running(class)
+            .iter()
+            .filter(|&id| state.requests[&id].phase == phase)
+            .collect()
+    }
+
+    fn schedule(&mut self, state: &mut EngineState, now: f64) -> Batch {
+        let mut batch = Batch::new();
+        let mut t = self.cfg.latency_budget_ms.unwrap_or(f64::INFINITY);
+        if t.is_finite() {
+            t -= self.predictor.predict(&Features::default());
+        }
+        let mut c = self.cfg.chunk_tokens;
+        let mut feats = Features::default();
+        self.online_phase(state, &mut batch, &mut feats, &mut t, &mut c);
+        if self.cfg.enable_offline {
+            self.offline_phase(state, now, &mut batch, &mut feats, &mut t, &mut c);
+        }
+        batch
+    }
+
+    fn online_phase(
+        &mut self,
+        state: &mut EngineState,
+        batch: &mut Batch,
+        feats: &mut Features,
+        t: &mut f64,
+        c: &mut usize,
+    ) {
+        let discard = self.cfg.preemption == PreemptionMode::Discard;
+        // 1. Online decodes: unconditional; preempt offline for memory.
+        for id in Self::phase_ids(state, Class::ONLINE, Phase::Decode) {
+            let need = state.requests[&id].context_len() + 1;
+            let mut ok = state.blocks.grow(id, need);
+            while !ok {
+                if state.preempt_last_offline(discard).is_none() {
+                    break;
+                }
+                ok = state.blocks.grow(id, need);
+            }
+            if !ok {
+                continue;
+            }
+            let t_req = self.predictor.decode_cost(feats);
+            *t -= t_req;
+            feats.add_decode();
+            batch.push(BatchEntry {
+                id,
+                class: Class::ONLINE,
+                n_tokens: 1,
+                is_prefill: false,
+                predicted_ms: t_req,
+            });
+        }
+        // 2. Online prefill continuations.
+        for id in Self::phase_ids(state, Class::ONLINE, Phase::Prefill) {
+            if *c == 0 {
+                break;
+            }
+            let want = state.requests[&id].prefill_remaining();
+            let cap = want.min(self.cfg.max_chunk_per_request);
+            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, cap);
+            if l == 0 {
+                break;
+            }
+            *t -= t_req;
+            *c -= l;
+            feats.add_prefill(l);
+            batch.push(BatchEntry {
+                id,
+                class: Class::ONLINE,
+                n_tokens: l,
+                is_prefill: true,
+                predicted_ms: t_req,
+            });
+        }
+        // 3. Online admissions from the FCFS queue.
+        while *c > 0 && state.num_running() < self.cfg.max_running {
+            let Some(next) = state.queue_mut(Class::ONLINE).peek_next() else { break };
+            let prompt_len = next.prompt_len;
+            let watermark = self.cfg.watermark_blocks * state.blocks.block_size();
+            let mut free = state.blocks.free_tokens().saturating_sub(watermark);
+            while free < prompt_len {
+                if state.preempt_last_offline(discard).is_none() {
+                    break;
+                }
+                free = state.blocks.free_tokens().saturating_sub(watermark);
+            }
+            if free < prompt_len {
+                break;
+            }
+            let mut req = state.queue_mut(Class::ONLINE).pop_next().expect("peeked");
+            let chain = state.prompt_chain(&req);
+            let cached = match state.blocks.allocate(req.id, prompt_len.max(1), &chain) {
+                Some(cached) => cached,
+                None => {
+                    state.queue_mut(Class::ONLINE).requeue_unscheduled(req);
+                    break;
+                }
+            };
+            req.prefilled = cached.min(prompt_len.saturating_sub(1));
+            let want = req.prefill_remaining().min(self.cfg.max_chunk_per_request);
+            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+            if l == 0 {
+                state.blocks.release(req.id);
+                req.prefilled = 0;
+                state.queue_mut(Class::ONLINE).requeue_unscheduled(req);
+                break;
+            }
+            *t -= t_req;
+            *c -= l;
+            feats.add_prefill(l);
+            req.phase = Phase::Prefill;
+            batch.push(BatchEntry {
+                id: req.id,
+                class: Class::ONLINE,
+                n_tokens: l,
+                is_prefill: true,
+                predicted_ms: t_req,
+            });
+            state.insert_running(req);
+        }
+    }
+
+    fn offline_phase(
+        &mut self,
+        state: &mut EngineState,
+        now: f64,
+        batch: &mut Batch,
+        feats: &mut Features,
+        t: &mut f64,
+        c: &mut usize,
+    ) {
+        let discard = self.cfg.preemption == PreemptionMode::Discard;
+        // 1. Offline decodes within the residual budget.
+        for id in Self::phase_ids(state, Class::OFFLINE, Phase::Decode) {
+            if !state.running(Class::OFFLINE).contains(id) {
+                continue;
+            }
+            let t_req = self.predictor.decode_cost(feats);
+            if t_req > *t {
+                break;
+            }
+            let need = state.requests[&id].context_len() + 1;
+            let mut ok = state.blocks.grow(id, need);
+            while !ok {
+                match state.running(Class::OFFLINE).last() {
+                    Some(last) if last != id => {
+                        state.preempt_last_offline(discard);
+                        ok = state.blocks.grow(id, need);
+                    }
+                    _ => break,
+                }
+            }
+            if !ok {
+                break;
+            }
+            *t -= t_req;
+            feats.add_decode();
+            batch.push(BatchEntry {
+                id,
+                class: Class::OFFLINE,
+                n_tokens: 1,
+                is_prefill: false,
+                predicted_ms: t_req,
+            });
+        }
+        // 2. Offline prefill continuations.
+        for id in Self::phase_ids(state, Class::OFFLINE, Phase::Prefill) {
+            if *c == 0 || *t <= 0.0 {
+                break;
+            }
+            let want =
+                state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
+            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+            if l == 0 {
+                break;
+            }
+            *t -= t_req;
+            *c -= l;
+            feats.add_prefill(l);
+            batch.push(BatchEntry {
+                id,
+                class: Class::OFFLINE,
+                n_tokens: l,
+                is_prefill: true,
+                predicted_ms: t_req,
+            });
+        }
+        // 3. Resume preempted offline requests, FIFO.
+        while let Some(&id) = state.preempted(Class::OFFLINE).front() {
+            if state.num_running() >= self.cfg.max_running || *t <= 0.0 {
+                break;
+            }
+            let req = &state.requests[&id];
+            let ctx = req.context_len().max(1);
+            let chain = state.prompt_chain(req);
+            if state.blocks.allocate(id, ctx, &chain).is_none() {
+                break;
+            }
+            let resumed_phase = state.resume_front_preempted();
+            if resumed_phase == Phase::Decode {
+                let t_req = self.predictor.decode_cost(feats);
+                let need = state.requests[&id].context_len() + 1;
+                if t_req <= *t && state.blocks.grow(id, need) {
+                    *t -= t_req;
+                    feats.add_decode();
+                    batch.push(BatchEntry {
+                        id,
+                        class: Class::OFFLINE,
+                        n_tokens: 1,
+                        is_prefill: false,
+                        predicted_ms: t_req,
+                    });
+                }
+            } else {
+                let want =
+                    state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
+                let (l, t_req) =
+                    self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+                if l > 0 {
+                    *t -= t_req;
+                    *c -= l;
+                    feats.add_prefill(l);
+                    batch.push(BatchEntry {
+                        id,
+                        class: Class::OFFLINE,
+                        n_tokens: l,
+                        is_prefill: true,
+                        predicted_ms: t_req,
+                    });
+                }
+            }
+        }
+        // 4. New offline admissions in queue-policy order.
+        while *c > 0 && *t > 0.0 && state.num_running() < self.cfg.max_running {
+            let Some(next) = state.queue_mut(Class::OFFLINE).peek_next() else { break };
+            let prompt_len = next.prompt_len;
+            let watermark = self.cfg.watermark_blocks * state.blocks.block_size();
+            let free = state.blocks.free_tokens().saturating_sub(watermark);
+            if free < prompt_len {
+                break;
+            }
+            if let Some(lim) = &mut self.offline_limiter {
+                if !lim.admit(now) {
+                    break;
+                }
+            }
+            let mut req = state.queue_mut(Class::OFFLINE).pop_next().expect("peeked");
+            let chain = state.prompt_chain(&req);
+            let cached = match state.blocks.allocate(req.id, prompt_len.max(1), &chain) {
+                Some(cached) => cached,
+                None => {
+                    state.queue_mut(Class::OFFLINE).requeue_unscheduled(req);
+                    break;
+                }
+            };
+            let reuse = if state.prefix_caching {
+                cached.max(req.shared_prefix_len.min(prompt_len))
+            } else {
+                0
+            };
+            req.prefilled = reuse.min(prompt_len.saturating_sub(1));
+            let want = req.prefill_remaining().min(self.cfg.max_chunk_per_request);
+            let (l, t_req) = self.predictor.max_prefill_tokens(feats, *t, *c, usize::MAX, want);
+            if l == 0 {
+                state.blocks.release(req.id);
+                req.prefilled = 0;
+                state.queue_mut(Class::OFFLINE).requeue_unscheduled(req);
+                break;
+            }
+            *t -= t_req;
+            *c -= l;
+            feats.add_prefill(l);
+            req.phase = Phase::Prefill;
+            batch.push(BatchEntry {
+                id: req.id,
+                class: Class::OFFLINE,
+                n_tokens: l,
+                is_prefill: true,
+                predicted_ms: t_req,
+            });
+            state.insert_running(req);
+        }
+    }
+}
+
+// -------------------------------------------------------------- equivalence
+
+fn random_config(g: &mut Gen) -> SchedulerConfig {
+    SchedulerConfig {
+        latency_budget_ms: if g.bool() { Some(g.f64(5.0, 200.0)) } else { None },
+        chunk_tokens: g.usize(16, 2048),
+        max_chunk_per_request: *g.pick(&[8usize, 32, 512, usize::MAX]),
+        max_running: g.usize(1, 64),
+        preemption: if g.bool() { PreemptionMode::Preserve } else { PreemptionMode::Discard },
+        enable_offline: g.bool(),
+        offline_qps_cap: if g.bool() { Some(g.f64(0.1, 10.0)) } else { None },
+        watermark_blocks: g.usize(0, 4),
+    }
+}
+
+/// Build one two-class workload twice (identical construction) so the
+/// production scheduler and the reference evolve separate but initially
+/// identical states.
+fn twin_states(g: &mut Gen) -> (EngineState, EngineState) {
+    let blocks = g.usize(32, 1024);
+    let policy = *g.pick(&[
+        OfflinePolicy::Fcfs,
+        OfflinePolicy::Psm,
+        OfflinePolicy::PsmFair { utility_ratio: 0.5 },
+    ]);
+    let seed = g.u64(0, 1 << 32);
+    let mut a = EngineState::new(policy, blocks, 16, seed);
+    let mut b = EngineState::new(policy, blocks, 16, seed);
+    for i in 0..g.usize(0, 30) {
+        let class = if g.bool() { Class::ONLINE } else { Class::OFFLINE };
+        let plen = g.usize(1, 600);
+        let family = if g.bool() { Some(g.u64(0, 5) as u32) } else { None };
+        let prompt = prompt_for(i as u64, plen, family);
+        let arrival = g.f64(0.0, 10.0);
+        let out = g.usize(1, 64);
+        a.enqueue(Request::new(i as u64, class, arrival, plen, out).with_prompt(prompt.clone()));
+        b.enqueue(Request::new(i as u64, class, arrival, plen, out).with_prompt(prompt));
+    }
+    (a, b)
+}
+
+#[test]
+fn prop_default_registry_reproduces_two_phase_schedule() {
+    check("two-phase equivalence", 120, |g| {
+        let cfg = random_config(g);
+        let (mut st_new, mut st_ref) = twin_states(g);
+        let mut tiered = HybridScheduler::new(cfg.clone(), LatencyPredictor::default_seed());
+        let mut reference = TwoPhaseReference::new(cfg, LatencyPredictor::default_seed());
+        for round in 0..40 {
+            let now = round as f64 * 0.02;
+            let b_new = tiered.schedule_owned(&mut st_new, now);
+            let b_ref = reference.schedule(&mut st_ref, now);
+            assert_eq!(
+                b_new.entries, b_ref.entries,
+                "tier-loop batch diverged from the two-phase reference at round {round}"
+            );
+            apply(&mut st_new, &b_new);
+            apply(&mut st_ref, &b_ref);
+            st_new.check_invariants().unwrap_or_else(|e| panic!("round {round}: {e}"));
+        }
+    });
+}
+
+// ------------------------------------------------------------ tier ordering
+
+fn spec(name: &str, tier: u8, admission: AdmissionPolicy, bypass: bool) -> ClassSpec {
+    ClassSpec {
+        name: name.into(),
+        tier,
+        ttft_slo_ms: if bypass { Some(800.0) } else { None },
+        tbt_slo_ms: None,
+        latency_budget: if bypass { None } else { Some(1.0) },
+        preempt_priority: tier * 10,
+        admission,
+        starvation_age_s: None,
+    }
+}
+
+fn three_class_state(g: &mut Gen) -> EngineState {
+    let reg = Arc::new(
+        ClassRegistry::new(vec![
+            spec("chat", 2, AdmissionPolicy::Fcfs, true),
+            spec("mid", 1, AdmissionPolicy::Fcfs, false),
+            spec("bulk", 0, AdmissionPolicy::LongestPrefix, false),
+        ])
+        .unwrap(),
+    );
+    let blocks = g.usize(32, 1024);
+    let mut st =
+        EngineState::with_registry(reg, OfflinePolicy::Psm, blocks, 16, g.u64(0, 1 << 32));
+    for i in 0..g.usize(0, 36) {
+        let class = Class(g.u64(0, 3) as u16);
+        let plen = g.usize(1, 500);
+        let family = if g.bool() { Some(g.u64(0, 4) as u32) } else { None };
+        st.enqueue(
+            Request::new(i as u64, class, g.f64(0.0, 10.0), plen, g.usize(1, 48))
+                .with_prompt(prompt_for(i as u64, plen, family)),
+        );
+    }
+    st
+}
+
+#[test]
+fn prop_batches_are_tier_descending_and_top_tier_never_preempted() {
+    check("tier ordering", 120, |g| {
+        let mut st = three_class_state(g);
+        let cfg = SchedulerConfig {
+            latency_budget_ms: if g.bool() { Some(g.f64(8.0, 120.0)) } else { None },
+            chunk_tokens: g.usize(32, 2048),
+            max_running: g.usize(1, 48),
+            watermark_blocks: g.usize(0, 4),
+            preemption: if g.bool() { PreemptionMode::Preserve } else { PreemptionMode::Discard },
+            ..SchedulerConfig::default()
+        };
+        let mut sched = HybridScheduler::new(cfg, LatencyPredictor::default_seed());
+        for round in 0..30 {
+            // Work present per class *before* the round (for the
+            // preemption-direction check below).
+            let registry = Arc::clone(&st.registry);
+            let had_work: Vec<bool> = registry
+                .ids()
+                .map(|c| !st.queue(c).is_empty() || !st.running(c).is_empty())
+                .collect();
+            let preempted_before: Vec<usize> =
+                registry.ids().map(|c| st.preempted(c).len()).collect();
+
+            let b = sched.schedule_owned(&mut st, round as f64 * 0.02);
+
+            // (1) Batches are tier-descending.
+            let tiers: Vec<u8> =
+                b.entries.iter().map(|e| registry.spec(e.class).tier).collect();
+            assert!(
+                tiers.windows(2).all(|w| w[0] >= w[1]),
+                "batch not tier-descending at round {round}: {tiers:?}"
+            );
+            // (2) The top tier is never preempted.
+            assert!(st.preempted(Class(0)).is_empty(), "top tier preempted");
+            // (3) A class's preempted set only grows when strictly
+            //     higher-tier work existed, or the class scheduled its own
+            //     work this round (self-preemption inside its pass).
+            for c in registry.ids() {
+                let grew = st.preempted(c).len() > preempted_before[c.index()];
+                if grew {
+                    let my_tier = registry.spec(c).tier;
+                    let higher = registry
+                        .ids()
+                        .any(|o| registry.spec(o).tier > my_tier && had_work[o.index()]);
+                    let own_pass = b.entries.iter().any(|e| e.class == c);
+                    assert!(
+                        higher || own_pass,
+                        "class {} preempted with no higher-tier work at round {round}",
+                        c.index()
+                    );
+                }
+            }
+            apply(&mut st, &b);
+            st.check_invariants().unwrap_or_else(|e| panic!("round {round}: {e}"));
+        }
+    });
+}
+
+#[test]
+fn higher_tier_backlog_never_finishes_slower_under_a_shared_budget() {
+    // Two charged classes under one tight budget: the tier loop feeds the
+    // higher tier first, so its backlog completion count dominates the
+    // lower tier's at every round — the "no budget starvation up-tier"
+    // contract.
+    let reg = Arc::new(
+        ClassRegistry::new(vec![
+            spec("hi", 1, AdmissionPolicy::Fcfs, false),
+            spec("lo", 0, AdmissionPolicy::Fcfs, false),
+        ])
+        .unwrap(),
+    );
+    let mut st = EngineState::with_registry(reg, OfflinePolicy::Fcfs, 1 << 14, 16, 0);
+    for i in 0..20u64 {
+        st.enqueue(
+            Request::new(i, Class(0), 0.0, 128, 8)
+                .with_prompt(prompt_for(i, 128, None)),
+        );
+        st.enqueue(
+            Request::new(100 + i, Class(1), 0.0, 128, 8)
+                .with_prompt(prompt_for(100 + i, 128, None)),
+        );
+    }
+    let mut sched = HybridScheduler::new(
+        SchedulerConfig {
+            latency_budget_ms: Some(18.0),
+            chunk_tokens: 1 << 16,
+            ..SchedulerConfig::default()
+        },
+        LatencyPredictor::default_seed(),
+    );
+    for round in 0..400 {
+        let b = sched.schedule_owned(&mut st, round as f64 * 0.02);
+        if b.is_empty() && !st.has_pending() {
+            break;
+        }
+        apply(&mut st, &b);
+        let hi_done = st.finished.iter().filter(|r| r.class == Class(0)).count();
+        let lo_done = st.finished.iter().filter(|r| r.class == Class(1)).count();
+        assert!(
+            hi_done >= lo_done,
+            "lower tier outran the higher tier at round {round}: {lo_done} > {hi_done}"
+        );
+        st.check_invariants().unwrap();
+    }
+    assert!(
+        st.finished.iter().any(|r| r.class == Class(0)),
+        "the higher tier made progress"
+    );
+}

@@ -211,7 +211,7 @@ fn prop_prefix_sharing_never_exceeds_actual_lcp() {
         let prompts: Vec<Vec<u32>> = (0..n).map(|_| random_prompt(g)).collect();
         for (i, p) in prompts.iter().enumerate() {
             q.push(
-                Request::new(i as u64, Class::Offline, i as f64, p.len(), 4)
+                Request::new(i as u64, Class::OFFLINE, i as f64, p.len(), 4)
                     .with_prompt(p.clone()),
             );
         }

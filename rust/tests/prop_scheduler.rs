@@ -19,7 +19,7 @@ fn random_state(g: &mut Gen) -> EngineState {
     let mut st = EngineState::new(policy, blocks, 16, g.u64(0, 1 << 32));
     let n = g.usize(0, 30);
     for i in 0..n {
-        let class = if g.bool() { Class::Online } else { Class::Offline };
+        let class = if g.bool() { Class::ONLINE } else { Class::OFFLINE };
         let plen = g.usize(1, 600);
         let prompt: Vec<u32> = if g.bool() {
             // family-structured prompts exercise the trie
@@ -139,7 +139,7 @@ fn prop_latency_budget_respected_on_offline_only_workloads() {
         for i in 0..g.usize(1, 40) {
             let plen = g.usize(16, 1500);
             st.enqueue(
-                Request::new(i as u64, Class::Offline, 0.0, plen, g.usize(1, 32))
+                Request::new(i as u64, Class::OFFLINE, 0.0, plen, g.usize(1, 32))
                     .with_prompt((0..plen as u32).collect::<Vec<u32>>()),
             );
         }
@@ -168,26 +168,23 @@ fn prop_latency_budget_respected_on_offline_only_workloads() {
 fn prop_no_request_lost_or_duplicated() {
     check("request conservation", 150, |g| {
         let mut st = random_state(g);
-        let total = st.online_queue.len() + st.offline_queue.len();
+        let total = st.total_waiting();
         let cfg = random_config(g);
         let mut sched = HybridScheduler::new(cfg, LatencyPredictor::default_seed());
         for round in 0..60 {
             let b = sched.schedule_owned(&mut st, round as f64 * 0.02);
             apply(&mut st, &b);
             // conservation: queued + running + preempted + finished == total
-            let now = st.online_queue.len()
-                + st.offline_queue.len()
-                + st.num_running()
-                + st.preempted_offline.len()
-                + st.finished.len();
+            let now =
+                st.total_waiting() + st.num_running() + st.total_preempted() + st.finished.len();
             assert_eq!(now, total, "requests lost/duplicated at round {round}");
             // no id in two running/preempted sets at once
             let mut seen = std::collections::HashSet::new();
             for id in st
-                .running_online
+                .runs
                 .iter()
-                .chain(st.running_offline.iter())
-                .chain(st.preempted_offline.iter().copied())
+                .flat_map(|set| set.iter())
+                .chain(st.preempted_by_class.iter().flat_map(|p| p.iter().copied()))
             {
                 assert!(seen.insert(id), "id {id} in two sets");
             }
@@ -200,8 +197,10 @@ fn prop_no_request_lost_or_duplicated() {
 fn prop_only_offline_requests_are_preempted() {
     check("preemption direction", 100, |g| {
         drive(g, 40, |_s, st, _b| {
-            for id in &st.preempted_offline {
-                assert_eq!(st.requests[id].class, Class::Offline);
+            // The default registry's top tier (online) is never preempted.
+            assert!(st.preempted(Class::ONLINE).is_empty());
+            for id in st.preempted(Class::OFFLINE) {
+                assert_eq!(st.requests[id].class, Class::OFFLINE);
             }
         });
     });
