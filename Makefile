@@ -3,7 +3,7 @@
 # `make artifacts` produces the AOT HLO artifacts the PJRT execution path
 # (`--features pjrt`) loads at startup.
 
-.PHONY: all artifacts test bench bench-sched bench-replay cluster multi-slo microbench clean
+.PHONY: all artifacts test bench bench-sched bench-replay cluster multi-slo chaos microbench clean
 
 all:
 	cargo build --release
@@ -42,6 +42,12 @@ cluster:
 # registries across 1/2/4 replicas -> artifacts/multi_slo.csv
 multi-slo:
 	cargo run --release -- multi-slo
+
+# Chaos-test the cluster fault tolerance: seeded kill/restart schedules
+# per router policy next to a fault-free baseline, with the zero-loss
+# conservation gate -> artifacts/chaos_compare.csv
+chaos:
+	cargo run --release -- chaos
 
 # In-tree Bencher micro-benchmarks (scheduler, PSM, predictor, figures,
 # sched_trace, replay bench targets).

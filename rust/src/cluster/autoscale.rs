@@ -1,0 +1,208 @@
+//! SLO-headroom-driven autoscaling with hysteresis.
+//!
+//! The autoscaler consumes the same per-replica census the routers route
+//! on ([`ReplicaSnapshot`]) and turns the *aggregate* headroom signal
+//! into scale decisions: persistently negative-ish headroom means the
+//! live set cannot absorb the interactive load inside its latency
+//! budgets (add a replica); persistently generous headroom means
+//! capacity is idle (drain one). Both directions require the signal to
+//! hold for [`AutoscaleConfig::hysteresis_ticks`] consecutive
+//! observations so a single bursty tick never flaps the fleet
+//! (DESIGN.md §7c).
+//!
+//! The autoscaler only *decides*; the owner (the cluster simulation, or
+//! an operator loop around the server) activates a parked replica or
+//! marks one draining. Draining is graceful by construction: a draining
+//! replica keeps its resident work and is simply skipped by the routers
+//! until it runs dry.
+
+use super::ReplicaSnapshot;
+
+/// Scaling knobs (config keys `autoscale_*`, see `config::ClusterConfig`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Never drain below this many live replicas.
+    pub min_replicas: usize,
+    /// Never grow above this many live replicas.
+    pub max_replicas: usize,
+    /// Scale **up** when mean live headroom stays below this (ms).
+    pub up_headroom_ms: f64,
+    /// Scale **down** when mean live headroom stays above this (ms).
+    pub down_headroom_ms: f64,
+    /// Consecutive observations a signal must hold before a decision
+    /// fires (>= 1; 1 disables hysteresis).
+    pub hysteresis_ticks: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 8,
+            up_headroom_ms: 5.0,
+            down_headroom_ms: 30.0,
+            hysteresis_ticks: 3,
+        }
+    }
+}
+
+/// What the autoscaler wants done after one observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Activate one more replica (the owner picks which parked one).
+    Up,
+    /// Drain one live replica (the owner picks which and lets it run dry).
+    Down,
+}
+
+/// Hysteresis state machine over the aggregate headroom signal. One
+/// instance per cluster; feed it a snapshot vector per rebalance tick.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    up_streak: usize,
+    down_streak: usize,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        assert!(cfg.min_replicas >= 1, "autoscaler floor must keep one replica");
+        assert!(cfg.max_replicas >= cfg.min_replicas, "autoscale_max below autoscale_min");
+        assert!(
+            cfg.up_headroom_ms < cfg.down_headroom_ms,
+            "up threshold must sit below the down threshold"
+        );
+        assert!(cfg.hysteresis_ticks >= 1, "hysteresis needs at least one tick");
+        Autoscaler { cfg, up_streak: 0, down_streak: 0 }
+    }
+
+    /// Observe one census and decide. Live = not failed and not draining
+    /// (a draining replica is already on its way out; a failed one
+    /// contributes no capacity). With *no* live replica the signal is
+    /// treated as maximally overloaded — an immediate up-streak tick.
+    pub fn observe(&mut self, snaps: &[ReplicaSnapshot]) -> ScaleDecision {
+        let live: Vec<&ReplicaSnapshot> =
+            snaps.iter().filter(|s| !s.failed && !s.draining).collect();
+        let mean_headroom = if live.is_empty() {
+            f64::NEG_INFINITY
+        } else {
+            live.iter().map(|s| s.headroom_ms()).sum::<f64>() / live.len() as f64
+        };
+        if mean_headroom < self.cfg.up_headroom_ms {
+            self.down_streak = 0;
+            self.up_streak += 1;
+            if self.up_streak >= self.cfg.hysteresis_ticks && live.len() < self.cfg.max_replicas {
+                self.up_streak = 0;
+                return ScaleDecision::Up;
+            }
+        } else if mean_headroom > self.cfg.down_headroom_ms {
+            self.up_streak = 0;
+            self.down_streak += 1;
+            if self.down_streak >= self.cfg.hysteresis_ticks && live.len() > self.cfg.min_replicas
+            {
+                self.down_streak = 0;
+                return ScaleDecision::Down;
+            }
+        } else {
+            // In-band headroom: a healthy fleet. Any accumulated streak
+            // was interrupted — reset so only *consecutive* signals fire.
+            self.up_streak = 0;
+            self.down_streak = 0;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(headroom: f64) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            predicted_iter_ms: 40.0 - headroom,
+            latency_budget_ms: 40.0,
+            ..Default::default()
+        }
+    }
+
+    fn scaler(hysteresis: usize) -> Autoscaler {
+        Autoscaler::new(AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            up_headroom_ms: 5.0,
+            down_headroom_ms: 30.0,
+            hysteresis_ticks: hysteresis,
+        })
+    }
+
+    #[test]
+    fn fires_up_only_after_consecutive_ticks() {
+        let mut a = scaler(3);
+        let hot = vec![snap(1.0), snap(2.0)];
+        assert_eq!(a.observe(&hot), ScaleDecision::Hold);
+        assert_eq!(a.observe(&hot), ScaleDecision::Hold);
+        assert_eq!(a.observe(&hot), ScaleDecision::Up, "third consecutive hot tick fires");
+        // The streak reset on fire: it takes another 3 ticks to fire again.
+        assert_eq!(a.observe(&hot), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn interrupted_streak_resets() {
+        let mut a = scaler(3);
+        let hot = vec![snap(1.0)];
+        let ok = vec![snap(15.0)];
+        assert_eq!(a.observe(&hot), ScaleDecision::Hold);
+        assert_eq!(a.observe(&hot), ScaleDecision::Hold);
+        assert_eq!(a.observe(&ok), ScaleDecision::Hold, "in-band tick interrupts");
+        assert_eq!(a.observe(&hot), ScaleDecision::Hold, "streak restarted from zero");
+        assert_eq!(a.observe(&hot), ScaleDecision::Hold);
+        assert_eq!(a.observe(&hot), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn fires_down_with_idle_headroom_and_respects_floor() {
+        let mut a = scaler(2);
+        let idle = vec![snap(38.0), snap(39.0)];
+        assert_eq!(a.observe(&idle), ScaleDecision::Hold);
+        assert_eq!(a.observe(&idle), ScaleDecision::Down);
+        // At the floor the streak saturates without firing.
+        let one = vec![snap(39.0)];
+        assert_eq!(a.observe(&one), ScaleDecision::Hold);
+        assert_eq!(a.observe(&one), ScaleDecision::Hold);
+        assert_eq!(a.observe(&one), ScaleDecision::Hold, "never drains below min_replicas");
+    }
+
+    #[test]
+    fn up_respects_ceiling() {
+        let mut a = scaler(1);
+        let hot: Vec<ReplicaSnapshot> = (0..4).map(|_| snap(0.0)).collect();
+        assert_eq!(a.observe(&hot), ScaleDecision::Hold, "already at max_replicas");
+    }
+
+    #[test]
+    fn failed_and_draining_replicas_do_not_count_as_capacity() {
+        let mut a = scaler(1);
+        // Plenty of headroom on paper, but every replica is failed or
+        // draining: that is an overloaded cluster, not an idle one.
+        let mut snaps = vec![snap(39.0), snap(39.0)];
+        snaps[0].failed = true;
+        snaps[1].draining = true;
+        assert_eq!(a.observe(&snaps), ScaleDecision::Up, "no live capacity is an up-signal");
+        // One live idle replica among the dead ones: down is gated by the
+        // floor (1 live replica == min_replicas).
+        let mut snaps = vec![snap(39.0), snap(39.0)];
+        snaps[0].failed = true;
+        assert_eq!(a.observe(&snaps), ScaleDecision::Hold);
+    }
+
+    #[test]
+    #[should_panic(expected = "up threshold")]
+    fn rejects_inverted_thresholds() {
+        Autoscaler::new(AutoscaleConfig {
+            up_headroom_ms: 30.0,
+            down_headroom_ms: 5.0,
+            ..Default::default()
+        });
+    }
+}

@@ -28,7 +28,17 @@
 //!
 //! The server front end ([`crate::server`]) builds on [`replica`] for
 //! `hygen serve --replicas N --router <policy>`.
+//!
+//! Fault tolerance lives in the same layer (DESIGN.md §7c):
+//! [`sim::FaultSchedule`] injects kill/restart events into the
+//! simulation (in-flight work migrates or fails fast),
+//! [`replica::Supervisor`] restarts dead engine threads with capped
+//! exponential backoff, and [`autoscale::Autoscaler`] grows/drains the
+//! replica set from the aggregate SLO-headroom signal with hysteresis.
+//! `hygen chaos` measures the whole stack under seeded kill schedules
+//! (`artifacts/chaos_compare.csv`).
 
+pub mod autoscale;
 pub mod replica;
 pub mod router;
 pub mod sim;
@@ -73,6 +83,15 @@ pub struct ReplicaSnapshot {
     /// The replica's backend failed persistently; routers must prefer any
     /// live replica over a failed one.
     pub failed: bool,
+    /// The replica is being drained for scale-down (or teardown): it
+    /// finishes its resident work but must receive no new placements.
+    pub draining: bool,
+    /// Engine incarnation: bumped every time a supervisor (or the fault
+    /// schedule) restarts the replica's engine. Routers treat a snapshot
+    /// from a dying generation like any other stale census — the failed /
+    /// draining flags gate placement; the generation lets observers tell
+    /// "recovered" apart from "never died".
+    pub generation: u64,
 }
 
 impl Default for ReplicaSnapshot {
@@ -87,6 +106,8 @@ impl Default for ReplicaSnapshot {
             latency_budget_ms: 0.0,
             min_present_tolerance: 1.0,
             failed: false,
+            draining: false,
+            generation: 0,
         }
     }
 }
@@ -207,6 +228,8 @@ mod tests {
         assert_eq!(s.latency_budget_ms, 40.0);
         assert_eq!(s.min_present_tolerance, 1.0, "default registry tolerances are 1.0");
         assert!(s.headroom_ms() < 40.0, "empty-batch bias charged");
+        assert_eq!(s.generation, 0, "a never-restarted engine is generation 0");
+        assert!(!s.draining && !s.failed);
         e.step().unwrap();
         let s2 = ReplicaSnapshot::of(&e);
         assert!(s2.running[0] + s2.running[1] > 0);

@@ -21,7 +21,7 @@ use crate::coordinator::request::{Class, Request, RequestId};
 use crate::engine::{Engine, ExecutionBackend};
 use crate::runtime::tokenizer;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -89,6 +89,13 @@ pub struct ReplicaShared {
     /// Set after a persistent backend failure: the engine aborted its
     /// work and new completions are refused (health/metrics stay up).
     pub failed: AtomicBool,
+    /// Restart attempts a [`Supervisor`] has made for this replica
+    /// (0 for an unsupervised replica, and counting failed attempts).
+    pub restarts: AtomicUsize,
+    /// Engine incarnation: bumped on every successful supervisor
+    /// restart, so routers and `/metrics` can tell "recovered" apart
+    /// from "never died".
+    pub generation: AtomicU64,
 }
 
 impl ReplicaShared {
@@ -104,6 +111,7 @@ impl ReplicaShared {
                 .saturating_sub(self.ingested[i].load(Ordering::Relaxed));
         }
         s.failed = self.failed.load(Ordering::SeqCst);
+        s.generation = self.generation.load(Ordering::Relaxed);
         s
     }
 
@@ -177,12 +185,43 @@ impl Replica {
 /// The replica iteration loop: ingest -> step -> deliver -> publish, with
 /// graceful drain on stop. See the module docs for the contract.
 pub fn engine_loop<B: ExecutionBackend>(
-    mut engine: Engine<B>,
+    engine: Engine<B>,
     rx: Receiver<Job>,
     stop: Arc<AtomicBool>,
     shared: Arc<ReplicaShared>,
     drain: Duration,
 ) {
+    // Unsupervised: a persistent backend failure parks the loop in a
+    // refuse-jobs state (failed flag set) instead of exiting, exactly the
+    // pre-supervisor behavior.
+    let _ = engine_loop_impl(engine, &rx, &stop, &shared, drain, false);
+}
+
+/// Why one engine incarnation's loop ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LoopExit {
+    /// The stop flag flipped and the drain finished (or timed out).
+    Stopped,
+    /// Every submitter hung up with nothing in flight.
+    Disconnected,
+    /// The backend failed persistently (only with `exit_on_failure`; the
+    /// caller — a [`Supervisor`] — owns the restart decision).
+    Failed,
+}
+
+/// One engine incarnation of the replica loop. With `exit_on_failure` a
+/// persistent backend failure returns [`LoopExit::Failed`] after tearing
+/// the engine's work down, handing the channel back to the caller;
+/// without it the loop keeps serving refusals itself (the standalone
+/// [`engine_loop`] contract).
+fn engine_loop_impl<B: ExecutionBackend>(
+    mut engine: Engine<B>,
+    rx: &Receiver<Job>,
+    stop: &AtomicBool,
+    shared: &ReplicaShared,
+    drain: Duration,
+    exit_on_failure: bool,
+) -> LoopExit {
     let start = Instant::now();
     type Reply = Sender<Result<Completion, JobError>>;
     let mut inflight: HashMap<RequestId, (Reply, Instant)> = HashMap::new();
@@ -239,7 +278,7 @@ pub fn engine_loop<B: ExecutionBackend>(
                 break;
             }
         } else if disconnected && inflight.is_empty() {
-            return; // every submitter hung up with nothing in flight
+            return LoopExit::Disconnected; // every submitter hung up
         }
         if engine.has_work() {
             match engine.step() {
@@ -255,6 +294,14 @@ pub fn engine_loop<B: ExecutionBackend>(
                     }
                     engine.abort_all();
                     shared.failed.store(true, Ordering::SeqCst);
+                    if exit_on_failure {
+                        // Publish the post-abort state, then hand the
+                        // channel back to the supervisor.
+                        *shared.snapshot.lock().unwrap() = ReplicaSnapshot::of(&engine);
+                        let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
+                        *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
+                        return LoopExit::Failed;
+                    }
                 }
                 Ok(0) => {
                     // Work exists but nothing is schedulable right now
@@ -295,4 +342,350 @@ pub fn engine_loop<B: ExecutionBackend>(
     // observes the drained state.
     let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
     *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
+    LoopExit::Stopped
+}
+
+/// Restart policy for a supervised replica (config keys `max_restarts` /
+/// `backoff_*_ms`, see `config::ClusterConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SupervisorConfig {
+    /// Give up (permanently failed, refusing jobs) after this many
+    /// restart attempts. Failed factory calls count as attempts too.
+    pub max_restarts: usize,
+    /// Backoff before the first restart attempt.
+    pub backoff_initial: Duration,
+    /// Backoff ceiling; the wait doubles per attempt up to here and
+    /// never resets (a replica that keeps dying keeps waiting long).
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            max_restarts: 3,
+            backoff_initial: Duration::from_millis(200),
+            backoff_cap: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A [`Replica`] that restarts its engine after persistent backend
+/// failures: capped exponential backoff, a bounded number of attempts,
+/// and job refusal (never a dropped reply channel) while recovering.
+/// During recovery the `failed` flag stays set so routers skip the
+/// replica; a successful restart clears it and bumps the published
+/// generation. Same handle shape as [`Replica`] — job sender, shared
+/// state, joinable thread.
+pub struct Supervisor {
+    pub tx: Sender<Job>,
+    pub shared: Arc<ReplicaShared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Spawn a supervised replica thread. The factory must be callable
+    /// repeatedly — once per incarnation. Like [`Replica::spawn`], this
+    /// blocks until the *first* factory call has run and returns its
+    /// error rather than leaving it to surface on the first request.
+    pub fn spawn<B, F>(
+        name: String,
+        factory: F,
+        stop: Arc<AtomicBool>,
+        drain: Duration,
+        cfg: SupervisorConfig,
+    ) -> anyhow::Result<Supervisor>
+    where
+        B: ExecutionBackend + 'static,
+        F: Fn() -> anyhow::Result<Engine<B>> + Send + 'static,
+    {
+        let shared = Arc::new(ReplicaShared::default());
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let thread = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new().name(name).spawn(move || {
+                let mut engine = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut restarts = 0usize;
+                let mut backoff = cfg.backoff_initial;
+                loop {
+                    match engine_loop_impl(engine, &rx, &stop, &shared, drain, true) {
+                        LoopExit::Stopped | LoopExit::Disconnected => return,
+                        LoopExit::Failed => {}
+                    }
+                    // The incarnation died (its inflight work was already
+                    // failed and torn down). Recover — or give up.
+                    engine = loop {
+                        if stop.load(Ordering::SeqCst) {
+                            // Dying *during* shutdown is not worth a
+                            // restart: refuse whatever is left and exit.
+                            drain_refusing(&rx, &shared, JobError::DrainTimeout);
+                            return;
+                        }
+                        restarts += 1;
+                        shared.restarts.fetch_add(1, Ordering::Relaxed);
+                        if restarts > cfg.max_restarts {
+                            // Permanently failed: keep the failed flag up
+                            // (routers skip us) and refuse jobs until the
+                            // server stops. Health/metrics stay served
+                            // from the last published state.
+                            refuse_jobs(&rx, &stop, &shared, None);
+                            drain_refusing(&rx, &shared, JobError::DrainTimeout);
+                            return;
+                        }
+                        if refuse_jobs(&rx, &stop, &shared, Some(Instant::now() + backoff)) {
+                            drain_refusing(&rx, &shared, JobError::DrainTimeout);
+                            return;
+                        }
+                        backoff = backoff.saturating_mul(2).min(cfg.backoff_cap);
+                        if let Ok(e) = factory() {
+                            break e;
+                        }
+                        // A failed factory call burns an attempt and waits
+                        // the (longer) backoff again.
+                    };
+                    shared.generation.fetch_add(1, Ordering::Relaxed);
+                    shared.failed.store(false, Ordering::SeqCst);
+                }
+            })?
+        };
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("replica thread died during startup"))??;
+        Ok(Supervisor { tx, shared, thread: Some(thread) })
+    }
+
+    /// Join the supervisor thread (idempotent). Set the stop flag first.
+    pub fn join(&mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Refuse jobs with [`JobError::BackendFailed`] until the stop flag flips
+/// (`deadline: None`) or the deadline passes. Returns `true` when it
+/// exited because of stop/disconnect (the caller should shut down).
+fn refuse_jobs(
+    rx: &Receiver<Job>,
+    stop: &AtomicBool,
+    shared: &ReplicaShared,
+    deadline: Option<Instant>,
+) -> bool {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return true;
+        }
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return false;
+            }
+        }
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(job) => {
+                shared.note_ingested(job.class);
+                let _ = job.reply.send(Err(JobError::BackendFailed));
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            // Every submitter hung up: nothing left to refuse.
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return true,
+        }
+    }
+}
+
+/// Empty the channel, replying `err` to each queued job (shutdown path:
+/// an explicit error beats a dropped reply channel).
+fn drain_refusing(rx: &Receiver<Job>, shared: &ReplicaShared, err: JobError) {
+    while let Ok(job) = rx.try_recv() {
+        shared.note_ingested(job.class);
+        let _ = job.reply.send(Err(err));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batch::Batch;
+    use crate::coordinator::predictor::LatencyPredictor;
+    use crate::coordinator::queues::OfflinePolicy;
+    use crate::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+    use crate::coordinator::state::EngineState;
+    use crate::sim::costmodel::CostModel;
+    use crate::sim::SimBackend;
+
+    /// Delegates to a real sim backend, failing every execution while the
+    /// shared flag is up.
+    struct FlakyBackend {
+        fail: Arc<AtomicBool>,
+        inner: SimBackend,
+    }
+
+    impl ExecutionBackend for FlakyBackend {
+        fn execute(&mut self, batch: &Batch, state: &mut EngineState) -> anyhow::Result<f64> {
+            anyhow::ensure!(!self.fail.load(Ordering::SeqCst), "injected backend failure");
+            self.inner.execute(batch, state)
+        }
+
+        fn on_removed(&mut self, id: RequestId) {
+            self.inner.on_removed(id);
+        }
+    }
+
+    fn flaky_factory(
+        fail: Arc<AtomicBool>,
+    ) -> impl Fn() -> anyhow::Result<Engine<FlakyBackend>> + Send + 'static {
+        move || {
+            let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+            let sched =
+                HybridScheduler::new(SchedulerConfig::default(), LatencyPredictor::default_seed());
+            let backend = FlakyBackend {
+                fail: Arc::clone(&fail),
+                inner: SimBackend::new(CostModel::a100_llama7b(), 0),
+            };
+            Ok(Engine::new(sched, state, backend))
+        }
+    }
+
+    fn send_job(tx: &Sender<Job>, shared: &ReplicaShared) -> Receiver<Result<Completion, JobError>> {
+        let (reply, reply_rx) = channel();
+        shared.note_submitted(Class::ONLINE);
+        tx.send(Job { prompt: vec![1, 2, 3], max_tokens: 4, class: Class::ONLINE, reply })
+            .unwrap();
+        reply_rx
+    }
+
+    const RECV: Duration = Duration::from_secs(10);
+
+    #[test]
+    fn supervisor_restarts_a_failed_engine_and_recovers() {
+        let fail = Arc::new(AtomicBool::new(true));
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SupervisorConfig {
+            max_restarts: 50,
+            backoff_initial: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(4),
+        };
+        let mut sup = Supervisor::spawn(
+            "sup-recover".into(),
+            flaky_factory(Arc::clone(&fail)),
+            Arc::clone(&stop),
+            Duration::from_secs(5),
+            cfg,
+        )
+        .unwrap();
+        // First job hits the failing backend: an explicit error, never a
+        // dropped reply channel.
+        let reply = send_job(&sup.tx, &sup.shared);
+        assert_eq!(reply.recv_timeout(RECV).unwrap().unwrap_err(), JobError::BackendFailed);
+        // Heal the backend and keep submitting: the supervisor's backoff
+        // restart must bring the replica back to serving.
+        fail.store(false, Ordering::SeqCst);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut served = false;
+        while Instant::now() < deadline {
+            let reply = send_job(&sup.tx, &sup.shared);
+            match reply.recv_timeout(RECV).unwrap() {
+                Ok(c) => {
+                    assert!(!c.tokens.is_empty());
+                    served = true;
+                    break;
+                }
+                Err(JobError::BackendFailed) => std::thread::sleep(Duration::from_millis(2)),
+                Err(e) => panic!("unexpected reply: {e:?}"),
+            }
+        }
+        assert!(served, "replica never recovered after the backend healed");
+        assert!(sup.shared.restarts.load(Ordering::Relaxed) >= 1);
+        let snap = sup.shared.routing_snapshot();
+        assert!(snap.generation >= 1, "a successful restart bumps the generation");
+        assert!(!snap.failed, "recovery clears the failed flag");
+        stop.store(true, Ordering::SeqCst);
+        sup.join();
+    }
+
+    #[test]
+    fn supervisor_gives_up_after_the_restart_cap() {
+        let fail = Arc::new(AtomicBool::new(true)); // never heals
+        let stop = Arc::new(AtomicBool::new(false));
+        let cfg = SupervisorConfig {
+            max_restarts: 1,
+            backoff_initial: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(2),
+        };
+        let mut sup = Supervisor::spawn(
+            "sup-cap".into(),
+            flaky_factory(Arc::clone(&fail)),
+            Arc::clone(&stop),
+            Duration::from_secs(5),
+            cfg,
+        )
+        .unwrap();
+        // Each job that reaches a live incarnation kills it; past the cap
+        // the replica parks as permanently failed.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while sup.shared.restarts.load(Ordering::Relaxed) <= cfg.max_restarts {
+            assert!(Instant::now() < deadline, "restart cap never reached");
+            let reply = send_job(&sup.tx, &sup.shared);
+            assert_eq!(reply.recv_timeout(RECV).unwrap().unwrap_err(), JobError::BackendFailed);
+        }
+        // Pinned: a permanently failed replica still refuses explicitly
+        // and publishes `failed` so routers skip it (see the router tests
+        // for the skip itself).
+        let reply = send_job(&sup.tx, &sup.shared);
+        assert_eq!(reply.recv_timeout(RECV).unwrap().unwrap_err(), JobError::BackendFailed);
+        assert!(sup.shared.routing_snapshot().failed);
+        assert_eq!(
+            sup.shared.generation.load(Ordering::Relaxed),
+            1,
+            "exactly one restart succeeded before the cap"
+        );
+        stop.store(true, Ordering::SeqCst);
+        sup.join();
+    }
+
+    #[test]
+    fn failure_during_drain_is_not_restarted() {
+        let fail = Arc::new(AtomicBool::new(true));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut sup = Supervisor::spawn(
+            "sup-drain".into(),
+            flaky_factory(Arc::clone(&fail)),
+            Arc::clone(&stop),
+            Duration::from_secs(5),
+            SupervisorConfig::default(),
+        )
+        .unwrap();
+        stop.store(true, Ordering::SeqCst);
+        // Whether the job dies with the backend or is caught by the
+        // shutdown drain, it gets an explicit error...
+        let reply = send_job(&sup.tx, &sup.shared);
+        assert!(reply.recv_timeout(RECV).unwrap().is_err());
+        // ...and the thread exits instead of burning backoff restarts.
+        sup.join();
+        assert_eq!(sup.shared.restarts.load(Ordering::Relaxed), 0, "no restart during shutdown");
+        assert_eq!(sup.shared.generation.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn factory_error_surfaces_at_spawn() {
+        // A replica that dies before its first snapshot publish reports
+        // the error at spawn, like `Replica::spawn`.
+        let stop = Arc::new(AtomicBool::new(false));
+        let err = Supervisor::spawn(
+            "sup-bad".into(),
+            || -> anyhow::Result<Engine<SimBackend>> { anyhow::bail!("no device") },
+            stop,
+            Duration::from_secs(1),
+            SupervisorConfig::default(),
+        );
+        assert!(err.is_err());
+    }
 }

@@ -24,9 +24,10 @@ pub trait Router: Send {
     fn name(&self) -> &'static str;
 
     /// Replica for an arriving interactive request. `snaps` is non-empty
-    /// and the returned index is always in range; live (non-failed)
-    /// replicas are preferred, and any index is acceptable once every
-    /// replica has failed (the caller surfaces the error).
+    /// and the returned index is always in range; routable (non-failed,
+    /// non-draining) replicas are preferred, and any index is acceptable
+    /// once every replica is failed or draining (the caller surfaces the
+    /// error or holds the work).
     fn route_online(&mut self, snaps: &[ReplicaSnapshot]) -> usize;
 
     /// Replica for the next shared-backlog elastic request, or `None` to
@@ -73,15 +74,22 @@ impl RouterPolicy {
     }
 }
 
-/// Index of the live replica minimizing `key` (ties -> lowest index);
-/// falls back over failed replicas only when no live one exists.
+/// A replica eligible for new placements: not failed (supervisor gave up
+/// or backend dead) and not draining (scale-down / dying generation).
+fn routable(s: &ReplicaSnapshot) -> bool {
+    !s.failed && !s.draining
+}
+
+/// Index of the routable replica minimizing `key` (ties -> lowest index);
+/// falls back over failed/draining replicas only when no routable one
+/// exists.
 fn argmin_live<K: PartialOrd, F: Fn(&ReplicaSnapshot) -> K>(
     snaps: &[ReplicaSnapshot],
     key: F,
 ) -> usize {
     let mut best: Option<(usize, K)> = None;
     for (i, s) in snaps.iter().enumerate() {
-        if s.failed {
+        if !routable(s) {
             continue;
         }
         let k = key(s);
@@ -108,7 +116,7 @@ impl Router for RoundRobin {
         let n = snaps.len();
         for probe in 0..n {
             let i = (self.next + probe) % n;
-            if !snaps[i].failed {
+            if routable(&snaps[i]) {
                 self.next = (i + 1) % n;
                 return i;
             }
@@ -186,7 +194,7 @@ impl Router for SloHeadroom {
         let buffer = self.offline_buffer;
         let mut best: Option<(usize, (f64, usize))> = None;
         for (i, s) in snaps.iter().enumerate() {
-            if s.failed || s.headroom_ms() <= 0.0 || s.offline_waiting() >= buffer {
+            if !routable(s) || s.headroom_ms() <= 0.0 || s.offline_waiting() >= buffer {
                 continue;
             }
             let k = (-s.headroom_ms(), s.offline_waiting());
@@ -264,6 +272,44 @@ mod tests {
         assert_eq!(r.route_offline(&snaps), Some(1));
         snaps[1].waiting[1] = 2;
         assert_eq!(r.route_offline(&snaps), None, "all buffers full: keep central");
+    }
+
+    #[test]
+    fn every_policy_skips_failed_replicas() {
+        // Pins the failed-replica-skip contract explicitly (a supervisor
+        // that exhausted its restart budget marks the replica failed and
+        // it must never see new work while any live replica exists).
+        let mut snaps = vec![snap(0, 25.0), snap(0, 30.0), snap(5, 5.0)];
+        snaps[1].failed = true;
+        for p in RouterPolicy::ALL {
+            let mut r = p.build();
+            for _ in 0..4 {
+                let i = r.route_online(&snaps);
+                assert_ne!(i, 1, "{} routed online to a failed replica", p.name());
+                if let Some(j) = r.route_offline(&snaps) {
+                    assert_ne!(j, 1, "{} placed offline on a failed replica", p.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_policy_skips_draining_replicas() {
+        // A draining replica (scale-down or dying generation) still
+        // reports the best headroom/depth — routers must not place new
+        // work on it anyway.
+        let mut snaps = vec![snap(4, 10.0), snap(0, 35.0), snap(2, 20.0)];
+        snaps[1].draining = true;
+        for p in RouterPolicy::ALL {
+            let mut r = p.build();
+            for _ in 0..4 {
+                let i = r.route_online(&snaps);
+                assert_ne!(i, 1, "{} routed online to a draining replica", p.name());
+                if let Some(j) = r.route_offline(&snaps) {
+                    assert_ne!(j, 1, "{} placed offline on a draining replica", p.name());
+                }
+            }
+        }
     }
 
     #[test]

@@ -24,7 +24,20 @@
 //! batch latency; TTFT is measured from that admission instant. The skew
 //! is bounded by the lagging-replica stepping rule and identical across
 //! policies.
+//!
+//! **Fault injection** (DESIGN.md §7c): a [`FaultSchedule`] kills and
+//! restarts replicas at trace time. A kill tears the replica's resident
+//! work down — elastic requests migrate back to the shared backlog
+//! (their progress resets with the lost KV), interactive requests are
+//! rerouted to a live replica if their TTFT deadline still stands and
+//! fail fast (503) otherwise — and a restart revives the replica empty,
+//! one generation up. An optional [`Autoscaler`] activates parked
+//! replicas or drains live ones at rebalance ticks. Every admitted
+//! request is accounted for in [`ClusterRunResult::lost`]: finished,
+//! resident, backlogged, or failed-with-a-report — never silently
+//! dropped, never finished twice.
 
+use super::autoscale::{Autoscaler, ScaleDecision};
 use super::router::Router;
 use super::ReplicaSnapshot;
 use crate::coordinator::classes::ClassRegistry;
@@ -34,6 +47,57 @@ use crate::engine::{Engine, ExecutionBackend};
 use crate::workload::trace::{Trace, TraceEvent};
 use std::collections::VecDeque;
 use std::sync::Arc;
+
+/// What a scheduled fault does to its target replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Tear the replica down (migrate/reroute its resident work).
+    Kill,
+    /// Revive a dead replica, empty, one generation up.
+    Restart,
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Trace time (seconds) at which the fault fires.
+    pub t_s: f64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// A trace-time kill/restart schedule, built fluently:
+/// `FaultSchedule::new().kill(0, 2.0).restart(0, 5.0)`. Attach it with
+/// [`ClusterSim::with_faults`]; events fire as the cluster frontier
+/// passes their timestamps (ties fire in insertion order).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    pub fn new() -> FaultSchedule {
+        FaultSchedule::default()
+    }
+
+    pub fn kill(mut self, replica: usize, t_s: f64) -> FaultSchedule {
+        self.events.push(FaultEvent { t_s, replica, kind: FaultKind::Kill });
+        self
+    }
+
+    pub fn restart(mut self, replica: usize, t_s: f64) -> FaultSchedule {
+        self.events.push(FaultEvent { t_s, replica, kind: FaultKind::Restart });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
 
 /// One replica's share of a cluster run.
 #[derive(Debug, Clone)]
@@ -72,6 +136,33 @@ pub struct ClusterRunResult {
     pub reclaimed: usize,
     /// Elastic events never placed on any replica.
     pub backlog_left: usize,
+    /// Trace events the run admitted (== the trace length whenever the
+    /// run reached the end of the trace).
+    pub admitted: usize,
+    /// Elastic requests moved from a killed replica back to the shared
+    /// backlog (their decode progress reset with the lost KV).
+    pub migrated: usize,
+    /// Interactive requests re-placed on a live replica after theirs was
+    /// killed, inside their TTFT deadline.
+    pub rerouted: usize,
+    /// Interactive requests failed fast with a reported error (killed
+    /// past their TTFT deadline, or no live replica to take them).
+    pub failed_503: usize,
+    /// Replicas revived by the fault schedule.
+    pub fault_restarts: usize,
+    /// Autoscaler activations.
+    pub scale_ups: usize,
+    /// Autoscaler drains started.
+    pub scale_downs: usize,
+    /// Mean delay (ms) between a rerouted request's original arrival and
+    /// its re-placement — the reroute TTFT penalty. (The engine-measured
+    /// TTFT restarts at re-submission; this column carries the part the
+    /// kill added.) 0 when nothing was rerouted.
+    pub rerouted_delay_ms: f64,
+    /// Conservation ledger: `admitted − (finished + resident + backlog +
+    /// failed_503)`. Exactly 0 when no request was silently lost; a
+    /// negative value would mean a double-completion.
+    pub lost: i64,
 }
 
 /// The cluster driver. Build it with per-replica engines (seeded however
@@ -98,6 +189,30 @@ pub struct ClusterSim<B: ExecutionBackend> {
     dispatched: usize,
     reclaimed: usize,
     stalled: u64,
+    /// Liveness per replica: false = killed, drained away, or parked by
+    /// the autoscaler. Dead replicas hold no work and never step.
+    alive: Vec<bool>,
+    /// Replicas finishing resident work before parking (scale-down).
+    /// Routers see the flag and place nothing new on them.
+    draining: Vec<bool>,
+    /// Engine incarnation per replica; bumped on every revival so
+    /// observers can tell "recovered" apart from "never died".
+    generation: Vec<u64>,
+    /// Sorted fault schedule + fire cursor.
+    faults: Vec<FaultEvent>,
+    next_fault: usize,
+    autoscaler: Option<Autoscaler>,
+    /// Run `check_invariants` on every engine after every sim step
+    /// (chaos property tests; too slow to default on).
+    pub check_invariants_each_step: bool,
+    admitted: usize,
+    migrated: usize,
+    rerouted: usize,
+    failed_503: usize,
+    fault_restarts: usize,
+    scale_ups: usize,
+    scale_downs: usize,
+    rerouted_delay_s: f64,
 }
 
 impl<B: ExecutionBackend> ClusterSim<B> {
@@ -122,7 +237,68 @@ impl<B: ExecutionBackend> ClusterSim<B> {
             dispatched: 0,
             reclaimed: 0,
             stalled: 0,
+            alive: vec![true; n],
+            draining: vec![false; n],
+            generation: vec![0; n],
+            faults: Vec::new(),
+            next_fault: 0,
+            autoscaler: None,
+            check_invariants_each_step: false,
+            admitted: 0,
+            migrated: 0,
+            rerouted: 0,
+            failed_503: 0,
+            fault_restarts: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+            rerouted_delay_s: 0.0,
         }
+    }
+
+    /// Attach a kill/restart schedule (builder style).
+    pub fn with_faults(mut self, schedule: FaultSchedule) -> ClusterSim<B> {
+        let mut events = schedule.events;
+        for f in &events {
+            assert!(
+                f.replica < self.engines.len(),
+                "fault targets replica {} of {}",
+                f.replica,
+                self.engines.len()
+            );
+            assert!(f.t_s.is_finite() && f.t_s >= 0.0, "fault time must be finite, non-negative");
+        }
+        // Stable sort: same-instant faults fire in insertion order.
+        events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
+        self.faults = events;
+        self.next_fault = 0;
+        self
+    }
+
+    /// Attach an autoscaler (builder style). Replicas `initial_active..`
+    /// start parked (dead, no work) and are activated by scale-up
+    /// decisions; scale-down picks the highest-index routable replica and
+    /// drains it gracefully.
+    pub fn with_autoscaler(mut self, autoscaler: Autoscaler, initial_active: usize) -> Self {
+        assert!(
+            initial_active >= 1 && initial_active <= self.engines.len(),
+            "initial_active must be in 1..={}",
+            self.engines.len()
+        );
+        for i in initial_active..self.engines.len() {
+            self.alive[i] = false;
+        }
+        self.autoscaler = Some(autoscaler);
+        self
+    }
+
+    /// Replicas currently live (routable or draining).
+    pub fn live_replicas(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Engine incarnation of replica `i` (0 = never revived).
+    pub fn generation_of(&self, i: usize) -> u64 {
+        self.generation[i]
     }
 
     /// Elastic events currently held centrally (tests/observability).
@@ -131,7 +307,17 @@ impl<B: ExecutionBackend> ClusterSim<B> {
     }
 
     fn snaps(&self) -> Vec<ReplicaSnapshot> {
-        self.engines.iter().map(ReplicaSnapshot::of).collect()
+        self.engines
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let mut s = ReplicaSnapshot::of(e);
+                s.failed |= !self.alive[i];
+                s.draining = self.draining[i];
+                s.generation = self.generation[i];
+                s
+            })
+            .collect()
     }
 
     /// Highest-tier class with pending backlog work (placement order: the
@@ -144,24 +330,126 @@ impl<B: ExecutionBackend> ClusterSim<B> {
             .find(|&c| !self.backlog[c.index()].is_empty())
     }
 
-    /// Replica to step next: smallest clock; on ties, prefer one with
-    /// work (so an idle replica parked at the same instant never shadows
-    /// a busy one).
-    fn lagging_replica(&self) -> usize {
-        let mut best = 0usize;
-        for i in 1..self.engines.len() {
-            let (ci, cb) = (self.engines[i].clock_s, self.engines[best].clock_s);
-            if ci < cb
-                || (ci == cb && self.engines[i].has_work() && !self.engines[best].has_work())
-            {
-                best = i;
+    /// Live replica to step next: smallest clock; on ties, prefer one
+    /// with work (so an idle replica parked at the same instant never
+    /// shadows a busy one). `None` when every replica is down.
+    fn lagging_replica(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.engines.len() {
+            if !self.alive[i] {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    let (ci, cb) = (self.engines[i].clock_s, self.engines[b].clock_s);
+                    if ci < cb
+                        || (ci == cb
+                            && self.engines[i].has_work()
+                            && !self.engines[b].has_work())
+                    {
+                        best = Some(i);
+                    }
+                }
             }
         }
         best
     }
 
-    fn min_clock(&self) -> f64 {
-        self.engines.iter().map(|e| e.clock_s).fold(f64::INFINITY, f64::min)
+    /// Cluster frontier: the smallest live-replica clock (infinite when
+    /// every replica is down — only a scheduled restart can advance time
+    /// from there).
+    fn min_live_clock(&self) -> f64 {
+        self.engines
+            .iter()
+            .zip(&self.alive)
+            .filter(|&(_, &a)| a)
+            .map(|(e, _)| e.clock_s)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn apply_fault(&mut self, f: FaultEvent, now: f64) {
+        match f.kind {
+            FaultKind::Kill => self.kill_replica(f.replica, now),
+            FaultKind::Restart => self.restart_replica(f.replica, now),
+        }
+    }
+
+    /// Tear replica `i` down at trace time `now`. Elastic resident work
+    /// migrates to the shared backlog (its decode progress resets — the
+    /// KV died with the replica); interactive work is rerouted to a live
+    /// replica while its TTFT deadline stands, else failed fast. Either
+    /// way every resident request is accounted for — none silently lost.
+    fn kill_replica(&mut self, i: usize, now: f64) {
+        if !self.alive[i] {
+            return;
+        }
+        self.alive[i] = false;
+        self.draining[i] = false;
+        // The backlog re-tracks migrated elastic work from scratch.
+        self.dispatched_elastic.retain(|&(rep, ..)| rep != i);
+        let mut doomed: Vec<Request> = Vec::new();
+        let classes: Vec<Class> = self.registry.ids().collect();
+        {
+            let state = &mut self.engines[i].state;
+            for &c in &classes {
+                while let Some(req) = state.queue_mut(c).pop_next() {
+                    doomed.push(req);
+                }
+            }
+            // Running + preempted bodies. The map iterates in hash order —
+            // sort so teardown (and thus the whole run) is deterministic.
+            let mut resident: Vec<Request> = state.requests.values().cloned().collect();
+            resident.sort_by_key(|r| r.id);
+            doomed.extend(resident);
+        }
+        // Release KV blocks, empty running/preempted sets, reset queue
+        // LCP baselines (the abort clears every queue).
+        self.engines[i].abort_all();
+        for req in doomed {
+            let e = TraceEvent {
+                arrival_s: req.arrival,
+                class: req.class,
+                prompt_len: req.prompt_len,
+                output_len: req.output_len,
+                prompt: req.prompt.clone(),
+            };
+            if self.registry.spec(req.class).elastic() {
+                self.backlog[req.class.index()].push_back(e);
+                self.migrated += 1;
+            } else {
+                // Reroute inside the remaining TTFT budget; a request the
+                // kill already pushed past its deadline fails fast
+                // instead of burning a live replica's budget on it.
+                let within_ttft = match self.registry.spec(req.class).ttft_slo_ms {
+                    Some(ms) => req.arrival + ms / 1e3 >= now,
+                    None => true,
+                };
+                let snaps = self.snaps();
+                let j = self.router.route_online(&snaps);
+                if within_ttft && j < self.engines.len() && self.alive[j] && !self.draining[j] {
+                    self.rerouted += 1;
+                    self.rerouted_delay_s += (now - req.arrival).max(0.0);
+                    self.submit_event(j, &e);
+                } else {
+                    self.failed_503 += 1;
+                }
+            }
+        }
+    }
+
+    /// Revive a dead replica: it returns empty, one generation up, with
+    /// its clock advanced to the revival instant. No-op on a live one.
+    fn restart_replica(&mut self, i: usize, now: f64) {
+        if self.alive[i] {
+            return;
+        }
+        self.alive[i] = true;
+        self.draining[i] = false;
+        self.generation[i] += 1;
+        self.fault_restarts += 1;
+        let e = &mut self.engines[i];
+        e.clock_s = e.clock_s.max(now);
     }
 
     /// Create the event's request on replica `i` (fresh replica-local id)
@@ -188,14 +476,64 @@ impl<B: ExecutionBackend> ClusterSim<B> {
     /// entries whose requests started, then place backlog work —
     /// highest-tier first — wherever the router finds room.
     fn rebalance(&mut self) {
+        // Scale-down drains that ran dry park their replica.
+        for i in 0..self.engines.len() {
+            if self.draining[i] && self.alive[i] && !self.engines[i].has_work() {
+                self.alive[i] = false;
+                self.draining[i] = false;
+            }
+        }
+        // Autoscale on the same census the routers see. (Take/put-back
+        // dance: `observe` borrows the snapshots while we own the scaler.)
+        if let Some(mut scaler) = self.autoscaler.take() {
+            match scaler.observe(&self.snaps()) {
+                ScaleDecision::Up => {
+                    if let Some(i) = (0..self.engines.len()).find(|&i| !self.alive[i]) {
+                        let now = self.min_live_clock();
+                        self.alive[i] = true;
+                        self.draining[i] = false;
+                        self.generation[i] += 1;
+                        self.scale_ups += 1;
+                        if now.is_finite() {
+                            let e = &mut self.engines[i];
+                            e.clock_s = e.clock_s.max(now);
+                        }
+                    }
+                }
+                ScaleDecision::Down => {
+                    // Highest-index routable replica drains; the
+                    // autoscaler's floor guarantees another one remains.
+                    if let Some(i) =
+                        (0..self.engines.len()).rev().find(|&i| self.alive[i] && !self.draining[i])
+                    {
+                        self.draining[i] = true;
+                        self.scale_downs += 1;
+                    }
+                }
+                ScaleDecision::Hold => {}
+            }
+            self.autoscaler = Some(scaler);
+        }
         let mut snaps = self.snaps();
-        let hot: Vec<bool> = snaps.iter().map(|s| s.headroom_ms() < 0.0).collect();
+        // Draining replicas count as hot: pulling their waiting elastic
+        // work back to the backlog lets the drain finish sooner.
+        let hot: Vec<bool> = snaps
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.headroom_ms() < 0.0 || self.draining[i])
+            .collect();
         let entries = std::mem::take(&mut self.dispatched_elastic);
         let mut keep = Vec::with_capacity(entries.len());
         for (rep, id, arrival, class) in entries {
             let waiting = self.engines[rep].state.queue(class).contains(id);
             if waiting && hot[rep] {
                 if let Some(req) = self.engines[rep].state.queue_mut(class).remove(id) {
+                    // The request leaves through the backlog detour, so
+                    // the source queue's consecutive-pop LCP baseline no
+                    // longer describes what the scheduler will pop next —
+                    // drop it (same over-credit class as the self-LCP
+                    // requeue fix).
+                    self.engines[rep].state.queue_mut(class).reset_prefix_context();
                     self.backlog[class.index()].push_back(TraceEvent {
                         arrival_s: arrival,
                         class,
@@ -216,7 +554,9 @@ impl<B: ExecutionBackend> ClusterSim<B> {
         self.dispatched_elastic = keep;
         while let Some(class) = self.next_backlog_class() {
             match self.router.route_offline(&snaps) {
-                Some(i) if i < self.engines.len() => {
+                // The liveness guard covers eager routers whose
+                // all-failed fallback still returns an index.
+                Some(i) if i < self.engines.len() && self.alive[i] && !self.draining[i] => {
                     let e = self.backlog[class.index()].pop_front().expect("checked non-empty");
                     self.submit_event(i, &e);
                     snaps[i].waiting[class.index()] += 1;
@@ -228,8 +568,9 @@ impl<B: ExecutionBackend> ClusterSim<B> {
 
     /// Replay `trace` until its interactive portion is fully served
     /// (elastic work is a backlog, the paper's throughput accounting) or
-    /// `max_clock_s` passes. One run per `ClusterSim` — metrics
-    /// accumulate.
+    /// `max_clock_s` passes, firing scheduled faults as the cluster
+    /// frontier passes their timestamps. One run per `ClusterSim` —
+    /// metrics accumulate.
     pub fn run(&mut self, trace: &Trace, max_clock_s: f64) -> anyhow::Result<ClusterRunResult> {
         let events = &trace.events;
         let mut next_event = 0usize;
@@ -240,10 +581,29 @@ impl<B: ExecutionBackend> ClusterSim<B> {
             .map(|c| trace.num_of(c))
             .sum();
         loop {
-            let now = self.min_clock();
+            // Fire every fault due at the cluster frontier. With no live
+            // replica the frontier jumps to the next scheduled fault (a
+            // restart can revive the cluster).
+            loop {
+                let live = self.min_live_clock();
+                let due = match self.faults.get(self.next_fault).copied() {
+                    Some(f) if live.is_finite() => (f.t_s <= live).then_some((f, live)),
+                    Some(f) => Some((f, f.t_s)),
+                    None => None,
+                };
+                match due {
+                    Some((f, at)) => {
+                        self.next_fault += 1;
+                        self.apply_fault(f, at.max(f.t_s));
+                    }
+                    None => break,
+                }
+            }
+            let now = self.min_live_clock();
             while next_event < events.len() && events[next_event].arrival_s <= now {
                 let e = events[next_event].clone();
                 next_event += 1;
+                self.admitted += 1;
                 if registry.spec(e.class).elastic() {
                     self.backlog[e.class.index()].push_back(e);
                 } else {
@@ -251,10 +611,17 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                     let snaps = self.snaps();
                     let i = self.router.route_online(&snaps);
                     anyhow::ensure!(i < self.engines.len(), "router index out of range");
-                    self.submit_event(i, &e);
+                    if self.alive[i] && !self.draining[i] {
+                        self.submit_event(i, &e);
+                    } else {
+                        // The router only falls back to a dead/draining
+                        // index when no routable replica exists: fail
+                        // fast with a reported error.
+                        self.failed_503 += 1;
+                    }
                 }
             }
-            if now >= self.next_rebalance_s {
+            if now.is_finite() && now >= self.next_rebalance_s {
                 self.rebalance();
                 while self.next_rebalance_s <= now {
                     self.next_rebalance_s += self.rebalance_interval_s;
@@ -265,7 +632,12 @@ impl<B: ExecutionBackend> ClusterSim<B> {
             if !online_left || now >= max_clock_s {
                 break;
             }
-            let i = self.lagging_replica();
+            let Some(i) = self.lagging_replica() else {
+                // Every replica is down but interactive work remains:
+                // only a scheduled fault can advance the run (handled at
+                // the top of the loop, which fires one fault per pass).
+                continue;
+            };
             if self.engines[i].has_work() {
                 if self.engines[i].step()? == 0 {
                     // Stalled (memory or budget starvation): advance to
@@ -284,6 +656,13 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                         }
                     }
                     self.engines[i].clock_s = t;
+                }
+                if self.check_invariants_each_step {
+                    for e in &self.engines {
+                        e.state
+                            .check_invariants()
+                            .map_err(|m| anyhow::anyhow!("post-step invariants: {m}"))?;
+                    }
                 }
             } else {
                 // Idle replica: skip to the next instant that can hand it
@@ -348,15 +727,42 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                 starvation = starvation.max(end - arrival);
             }
         }
+        let aggregate = agg.report(Some(end));
+        // Conservation ledger: every admitted request must be finished,
+        // resident on a replica, in the shared backlog, or failed with a
+        // reported error. Anything else was lost (or, negative, finished
+        // twice).
+        let resident: usize = self
+            .engines
+            .iter()
+            .map(|e| e.state.num_running() + e.state.total_waiting() + e.state.total_preempted())
+            .sum();
+        let finished = aggregate.online_finished + aggregate.offline_finished;
+        let lost = self.admitted as i64
+            - (finished + resident + self.backlog_len() + self.failed_503) as i64;
+        let rerouted_delay_ms = if self.rerouted > 0 {
+            self.rerouted_delay_s * 1e3 / self.rerouted as f64
+        } else {
+            0.0
+        };
         ClusterRunResult {
             per_replica,
-            aggregate: agg.report(Some(end)),
+            aggregate,
             duration_s: end,
             offline_starvation_age_s: starvation,
             util_imbalance,
             dispatched: self.dispatched,
             reclaimed: self.reclaimed,
             backlog_left: self.backlog_len(),
+            admitted: self.admitted,
+            migrated: self.migrated,
+            rerouted: self.rerouted,
+            failed_503: self.failed_503,
+            fault_restarts: self.fault_restarts,
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            rerouted_delay_ms,
+            lost,
         }
     }
 }
@@ -462,5 +868,162 @@ mod tests {
             sim.run(&mixed_trace(20, 30), 600.0).unwrap().aggregate
         };
         assert_eq!(run(), run(), "cluster replay must be deterministic");
+    }
+
+    #[test]
+    fn fault_free_runs_keep_the_chaos_ledger_clean() {
+        let mut sim =
+            ClusterSim::new(engines(2, Some(40.0)), RouterPolicy::SloHeadroom.build(), 0.5);
+        let r = sim.run(&mixed_trace(20, 10), 600.0).unwrap();
+        assert_eq!(r.lost, 0);
+        assert_eq!(r.admitted, 30);
+        assert_eq!(
+            (r.migrated, r.rerouted, r.failed_503, r.fault_restarts, r.scale_ups, r.scale_downs),
+            (0, 0, 0, 0, 0, 0)
+        );
+        assert_eq!(r.rerouted_delay_ms, 0.0);
+    }
+
+    #[test]
+    fn kill_migrates_elastic_and_accounts_for_every_online() {
+        let trace = mixed_trace(20, 30);
+        let mut sim =
+            ClusterSim::new(engines(2, Some(40.0)), RouterPolicy::RoundRobin.build(), 0.5)
+                .with_faults(FaultSchedule::new().kill(0, 0.25));
+        let r = sim.run(&trace, 600.0).unwrap();
+        assert_eq!(sim.live_replicas(), 1);
+        assert_eq!(r.lost, 0, "no request silently lost across the kill");
+        assert_eq!(
+            r.aggregate.online_finished + r.failed_503,
+            20,
+            "every online request finished or failed with a reported error"
+        );
+        assert!(r.migrated > 0, "replica 0 held elastic work when it died");
+        for e in &sim.engines {
+            e.state.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn restart_revives_a_generation_up_and_serves_again() {
+        let trace = mixed_trace(40, 0); // online every 50 ms for 2 s
+        let mut sim =
+            ClusterSim::new(engines(2, Some(40.0)), RouterPolicy::RoundRobin.build(), 0.5)
+                .with_faults(FaultSchedule::new().kill(1, 0.4).restart(1, 0.8));
+        let r = sim.run(&trace, 600.0).unwrap();
+        assert_eq!(sim.live_replicas(), 2, "replica 1 came back");
+        assert_eq!(sim.generation_of(1), 1);
+        assert_eq!(r.fault_restarts, 1);
+        assert_eq!(r.lost, 0);
+        // Replica 0 stayed live throughout, so everything rerouted inside
+        // the 1 s TTFT window and nothing had to 503.
+        assert_eq!(r.aggregate.online_finished, 40);
+        assert_eq!(r.failed_503, 0);
+        assert!(
+            sim.routed[1] > 5,
+            "the revived replica took arrivals again (routed {})",
+            sim.routed[1]
+        );
+    }
+
+    #[test]
+    fn losing_every_replica_fails_fast_and_terminates() {
+        let trace = mixed_trace(10, 4);
+        let mut sim =
+            ClusterSim::new(engines(1, Some(40.0)), RouterPolicy::JoinShortestQueue.build(), 0.5)
+                .with_faults(FaultSchedule::new().kill(0, 0.1));
+        let r = sim.run(&trace, 600.0).unwrap();
+        assert_eq!(sim.live_replicas(), 0);
+        assert!(r.failed_503 > 0, "arrivals with no live replica fail fast");
+        assert_eq!(r.lost, 0, "failed requests are reported, not lost");
+        assert_eq!(r.aggregate.online_finished + r.failed_503, 10);
+    }
+
+    #[test]
+    fn reclaim_detour_drops_the_lcp_baseline() {
+        // Prefix-admission queue on a permanently hot replica
+        // (microscopic budget): pop one request to set the
+        // consecutive-pop LCP baseline, then let a rebalance reclaim the
+        // sibling through the backlog and re-place it. Its pop must claim
+        // no shared prefix — the detour broke the consecutive-scheduling
+        // assumption behind the credit. (Without the reset in
+        // `rebalance` this pops with shared_prefix_len == 3.)
+        let state = EngineState::new(OfflinePolicy::Psm, 1024, 16, 0);
+        let sched = HybridScheduler::new(
+            SchedulerConfig { latency_budget_ms: Some(1e-6), ..Default::default() },
+            LatencyPredictor::default_seed(),
+        );
+        let mut e = Engine::new(sched, state, SimBackend::new(CostModel::a100_llama7b(), 0));
+        e.state.keep_finished = false;
+        let mut sim = ClusterSim::new(vec![e], RouterPolicy::RoundRobin.build(), 0.5);
+        let event = |prompt: Vec<u32>| TraceEvent {
+            arrival_s: 0.0,
+            class: Class::OFFLINE,
+            prompt_len: prompt.len(),
+            output_len: 4,
+            prompt: prompt.into(),
+        };
+        sim.submit_event(0, &event(vec![1, 1, 1, 1]));
+        sim.submit_event(0, &event(vec![1, 1, 1, 2]));
+        let popped = sim.engines[0].state.queue_mut(Class::OFFLINE).pop_next().unwrap();
+        assert_eq!(popped.shared_prefix_len, 0, "first pop has no baseline");
+        sim.rebalance();
+        assert_eq!(sim.reclaimed, 1, "the microscopic budget marks the replica hot");
+        assert_eq!(sim.backlog_len(), 0, "round-robin re-placed the reclaim immediately");
+        let replaced = sim.engines[0].state.queue_mut(Class::OFFLINE).pop_next().unwrap();
+        assert_eq!(
+            replaced.shared_prefix_len, 0,
+            "a request re-entering via the backlog detour gets no LCP credit"
+        );
+    }
+
+    #[test]
+    fn autoscaler_activates_parked_replicas_under_pressure() {
+        use crate::cluster::autoscale::{AutoscaleConfig, Autoscaler};
+        let scaler = Autoscaler::new(AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            // Any finite headroom reads as pressure: the wiring (parked
+            // replicas activate, get clocks, take work) is what this
+            // pins — threshold realism lives in the autoscale unit tests.
+            up_headroom_ms: 1000.0,
+            down_headroom_ms: 2000.0,
+            hysteresis_ticks: 1,
+        });
+        let mut sim =
+            ClusterSim::new(engines(4, Some(40.0)), RouterPolicy::SloHeadroom.build(), 0.25)
+                .with_autoscaler(scaler, 1);
+        assert_eq!(sim.live_replicas(), 1, "replicas beyond initial_active start parked");
+        let r = sim.run(&mixed_trace(40, 8), 600.0).unwrap();
+        assert_eq!(r.scale_ups, 3, "pressure activated every parked replica");
+        assert_eq!(sim.live_replicas(), 4);
+        assert_eq!(r.lost, 0);
+        assert_eq!(r.aggregate.online_finished, 40);
+    }
+
+    #[test]
+    fn autoscaler_drains_idle_replicas_to_the_floor() {
+        use crate::cluster::autoscale::{AutoscaleConfig, Autoscaler};
+        let scaler = Autoscaler::new(AutoscaleConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            up_headroom_ms: -2000.0, // never fires
+            down_headroom_ms: -1000.0, // any finite headroom reads as idle
+            hysteresis_ticks: 1,
+        });
+        let mut sim =
+            ClusterSim::new(engines(4, Some(40.0)), RouterPolicy::RoundRobin.build(), 0.25)
+                .with_autoscaler(scaler, 4);
+        let r = sim.run(&mixed_trace(40, 0), 600.0).unwrap();
+        assert_eq!(r.scale_downs, 3, "idle capacity drained down to the floor");
+        assert_eq!(r.lost, 0);
+        assert_eq!(
+            r.aggregate.online_finished,
+            40,
+            "draining is graceful: resident work still finishes"
+        );
+        for e in &sim.engines {
+            e.state.check_invariants().unwrap();
+        }
     }
 }

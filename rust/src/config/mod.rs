@@ -2,6 +2,8 @@
 //! launcher. A config file holds everything needed to reproduce a serving
 //! deployment or a simulation run.
 
+use crate::cluster::autoscale::AutoscaleConfig;
+use crate::cluster::replica::SupervisorConfig;
 use crate::cluster::router::RouterPolicy;
 use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::queues::OfflinePolicy;
@@ -24,15 +26,41 @@ pub struct ClusterConfig {
     /// Graceful-drain deadline on shutdown (seconds): in-flight requests
     /// keep executing this long before being failed.
     pub drain_s: f64,
+    /// Supervisor gives up on a replica after this many restart attempts.
+    pub max_restarts: usize,
+    /// First restart backoff (ms); doubles per attempt.
+    pub backoff_initial_ms: f64,
+    /// Restart backoff ceiling (ms).
+    pub backoff_cap_ms: f64,
+    /// Autoscaler floor (live replicas).
+    pub autoscale_min: usize,
+    /// Autoscaler ceiling (live replicas).
+    pub autoscale_max: usize,
+    /// Scale up when mean live SLO headroom stays below this (ms).
+    pub autoscale_up_headroom_ms: f64,
+    /// Scale down when mean live SLO headroom stays above this (ms).
+    pub autoscale_down_headroom_ms: f64,
+    /// Consecutive rebalance ticks a scale signal must hold.
+    pub autoscale_hysteresis: usize,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
+        let sup = SupervisorConfig::default();
+        let auto = AutoscaleConfig::default();
         ClusterConfig {
             replicas: 1,
             router: RouterPolicy::SloHeadroom,
             rebalance_interval_s: 1.0,
             drain_s: 5.0,
+            max_restarts: sup.max_restarts,
+            backoff_initial_ms: sup.backoff_initial.as_secs_f64() * 1e3,
+            backoff_cap_ms: sup.backoff_cap.as_secs_f64() * 1e3,
+            autoscale_min: auto.min_replicas,
+            autoscale_max: auto.max_replicas,
+            autoscale_up_headroom_ms: auto.up_headroom_ms,
+            autoscale_down_headroom_ms: auto.down_headroom_ms,
+            autoscale_hysteresis: auto.hysteresis_ticks,
         }
     }
 }
@@ -51,6 +79,15 @@ impl ClusterConfig {
             match j.get(key) {
                 Json::Null => Ok(default),
                 v => v.as_f64().ok_or_else(|| anyhow::anyhow!("{key} must be a number")),
+            }
+        };
+        let int_field = |key: &str, default: usize| -> anyhow::Result<usize> {
+            match j.get(key) {
+                Json::Null => Ok(default),
+                v => Ok(v
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be a non-negative integer"))?
+                    as usize),
             }
         };
         let replicas = match j.get("replicas") {
@@ -73,7 +110,48 @@ impl ClusterConfig {
             drain_s.is_finite() && drain_s >= 0.0,
             "drain_s must be a non-negative number"
         );
-        Ok(ClusterConfig { replicas, router, rebalance_interval_s, drain_s })
+        let max_restarts = int_field("max_restarts", d.max_restarts)?;
+        let backoff_initial_ms = num_field("backoff_initial_ms", d.backoff_initial_ms)?;
+        anyhow::ensure!(
+            backoff_initial_ms.is_finite() && backoff_initial_ms > 0.0,
+            "backoff_initial_ms must be a positive number"
+        );
+        let backoff_cap_ms = num_field("backoff_cap_ms", d.backoff_cap_ms)?;
+        anyhow::ensure!(
+            backoff_cap_ms.is_finite() && backoff_cap_ms >= backoff_initial_ms,
+            "backoff_cap_ms must be at least backoff_initial_ms"
+        );
+        let autoscale_min = int_field("autoscale_min", d.autoscale_min)?;
+        anyhow::ensure!(autoscale_min >= 1, "autoscale_min must keep at least one replica");
+        let autoscale_max = int_field("autoscale_max", d.autoscale_max)?;
+        anyhow::ensure!(autoscale_max >= autoscale_min, "autoscale_max below autoscale_min");
+        let autoscale_up_headroom_ms =
+            num_field("autoscale_up_headroom_ms", d.autoscale_up_headroom_ms)?;
+        let autoscale_down_headroom_ms =
+            num_field("autoscale_down_headroom_ms", d.autoscale_down_headroom_ms)?;
+        anyhow::ensure!(
+            autoscale_up_headroom_ms < autoscale_down_headroom_ms,
+            "autoscale_up_headroom_ms must sit below autoscale_down_headroom_ms"
+        );
+        let autoscale_hysteresis = int_field("autoscale_hysteresis", d.autoscale_hysteresis)?;
+        anyhow::ensure!(
+            autoscale_hysteresis >= 1,
+            "autoscale_hysteresis needs at least one tick"
+        );
+        Ok(ClusterConfig {
+            replicas,
+            router,
+            rebalance_interval_s,
+            drain_s,
+            max_restarts,
+            backoff_initial_ms,
+            backoff_cap_ms,
+            autoscale_min,
+            autoscale_max,
+            autoscale_up_headroom_ms,
+            autoscale_down_headroom_ms,
+            autoscale_hysteresis,
+        })
     }
 
     pub fn to_json_pairs(&self) -> Vec<(&'static str, Json)> {
@@ -82,7 +160,35 @@ impl ClusterConfig {
             ("router", Json::from(self.router.name())),
             ("rebalance_interval_s", Json::from(self.rebalance_interval_s)),
             ("drain_s", Json::from(self.drain_s)),
+            ("max_restarts", Json::from(self.max_restarts)),
+            ("backoff_initial_ms", Json::from(self.backoff_initial_ms)),
+            ("backoff_cap_ms", Json::from(self.backoff_cap_ms)),
+            ("autoscale_min", Json::from(self.autoscale_min)),
+            ("autoscale_max", Json::from(self.autoscale_max)),
+            ("autoscale_up_headroom_ms", Json::from(self.autoscale_up_headroom_ms)),
+            ("autoscale_down_headroom_ms", Json::from(self.autoscale_down_headroom_ms)),
+            ("autoscale_hysteresis", Json::from(self.autoscale_hysteresis)),
         ]
+    }
+
+    /// The supervisor restart policy this config describes.
+    pub fn supervisor_config(&self) -> SupervisorConfig {
+        SupervisorConfig {
+            max_restarts: self.max_restarts,
+            backoff_initial: std::time::Duration::from_secs_f64(self.backoff_initial_ms / 1e3),
+            backoff_cap: std::time::Duration::from_secs_f64(self.backoff_cap_ms / 1e3),
+        }
+    }
+
+    /// The autoscaler thresholds this config describes.
+    pub fn autoscale_config(&self) -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_replicas: self.autoscale_min,
+            max_replicas: self.autoscale_max,
+            up_headroom_ms: self.autoscale_up_headroom_ms,
+            down_headroom_ms: self.autoscale_down_headroom_ms,
+            hysteresis_ticks: self.autoscale_hysteresis,
+        }
     }
 }
 
@@ -241,6 +347,54 @@ mod tests {
         assert_eq!(c.cluster.drain_s, 2.0);
         let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c2.cluster, c.cluster);
+    }
+
+    #[test]
+    fn parses_fault_tolerance_knobs() {
+        let j = Json::parse(
+            r#"{"max_restarts": 5, "backoff_initial_ms": 50, "backoff_cap_ms": 800,
+                "autoscale_min": 2, "autoscale_max": 6,
+                "autoscale_up_headroom_ms": 2, "autoscale_down_headroom_ms": 20,
+                "autoscale_hysteresis": 4}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.max_restarts, 5);
+        assert_eq!(c.cluster.backoff_initial_ms, 50.0);
+        assert_eq!(c.cluster.backoff_cap_ms, 800.0);
+        assert_eq!(c.cluster.autoscale_min, 2);
+        assert_eq!(c.cluster.autoscale_max, 6);
+        assert_eq!(c.cluster.autoscale_hysteresis, 4);
+        // The derived sub-configs carry the same values.
+        let sup = c.cluster.supervisor_config();
+        assert_eq!(sup.max_restarts, 5);
+        assert_eq!(sup.backoff_initial, std::time::Duration::from_millis(50));
+        assert_eq!(sup.backoff_cap, std::time::Duration::from_millis(800));
+        let auto = c.cluster.autoscale_config();
+        assert_eq!(auto.min_replicas, 2);
+        assert_eq!(auto.max_replicas, 6);
+        assert_eq!(auto.up_headroom_ms, 2.0);
+        assert_eq!(auto.down_headroom_ms, 20.0);
+        assert_eq!(auto.hysteresis_ticks, 4);
+        // Flat-JSON round trip, like the rest of the cluster shape.
+        let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.cluster, c.cluster);
+    }
+
+    #[test]
+    fn rejects_bad_fault_tolerance_knobs() {
+        for bad in [
+            r#"{"backoff_initial_ms": 0}"#,
+            r#"{"backoff_initial_ms": 100, "backoff_cap_ms": 50}"#,
+            r#"{"autoscale_min": 0}"#,
+            r#"{"autoscale_min": 4, "autoscale_max": 2}"#,
+            r#"{"autoscale_up_headroom_ms": 30, "autoscale_down_headroom_ms": 5}"#,
+            r#"{"autoscale_hysteresis": 0}"#,
+            r#"{"max_restarts": "lots"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ServeConfig::from_json(&j).is_err(), "should reject {bad}");
+        }
     }
 
     #[test]

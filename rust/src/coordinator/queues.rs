@@ -307,10 +307,29 @@ impl ClassQueue {
     }
 
     /// Remove a specific request (cluster reclaim, client cancel).
+    ///
+    /// Removal alone does not touch the LCP baseline: the popped-prompt
+    /// context is still valid for requests that stay and pop
+    /// consecutively. Callers that *re-route* removed prefix work (the
+    /// cluster reclaim/migration paths) must call
+    /// [`ClassQueue::reset_prefix_context`] afterwards — the detour
+    /// breaks the consecutive-scheduling assumption behind the credit.
     pub fn remove(&mut self, id: RequestId) -> Option<Request> {
         match self {
             ClassQueue::Fcfs(q) => q.remove(id),
             ClassQueue::Prefix(q) => q.remove(id),
+        }
+    }
+
+    /// Forget the prefix queue's LCP baseline (no-op for FCFS queues).
+    /// Same bug class as the self-LCP over-credit fix: whenever queue
+    /// contents are mutated out-of-band (cluster reclaim pulling work
+    /// back to the shared backlog, fault migration), the next pop must
+    /// not claim a shared prefix against a prompt that may never be
+    /// scheduled adjacently.
+    pub fn reset_prefix_context(&mut self) {
+        if let ClassQueue::Prefix(q) = self {
+            q.reset_prefix_context();
         }
     }
 
@@ -444,6 +463,35 @@ mod tests {
             assert_eq!(q.pop_next().unwrap().id, peeked);
         }
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn reclaim_style_remove_plus_reset_drops_the_lcp_baseline() {
+        // The cluster reclaim path: pop one request (setting the LCP
+        // baseline to its prompt), remove a sibling out-of-band, reset
+        // the context, and push the sibling back (the backlog detour
+        // re-placed it here). Without the reset the re-pushed request
+        // would claim an "aaa*"-sized shared prefix against KV that was
+        // never scheduled adjacently.
+        let mut q = ClassQueue::prefix(OfflineQueue::new(OfflinePolicy::Psm, 0));
+        q.push(offline(1, "aaaa", 0.0));
+        q.push(offline(2, "aaab", 1.0));
+        let first = q.pop_next().unwrap(); // baseline := first.prompt
+        assert_eq!(first.shared_prefix_len, 0);
+        let reclaimed = q.remove(if first.id == 1 { 2 } else { 1 }).unwrap();
+        q.reset_prefix_context();
+        q.push(reclaimed);
+        assert_eq!(
+            q.pop_next().unwrap().shared_prefix_len,
+            0,
+            "a request re-entering after an out-of-band detour gets no LCP credit"
+        );
+        // Control: the credit *does* apply on the uninterrupted path.
+        let mut q = ClassQueue::prefix(OfflineQueue::new(OfflinePolicy::Psm, 0));
+        q.push(offline(1, "aaaa", 0.0));
+        q.push(offline(2, "aaab", 1.0));
+        q.pop_next().unwrap();
+        assert_eq!(q.pop_next().unwrap().shared_prefix_len, 3, "consecutive pops share 'aaa'");
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! `hygen chaos` — chaos-test the cluster layer's fault tolerance on the
+//! calibrated mixed trace, writing `artifacts/chaos_compare.csv`.
+//!
+//! The grid is (router policy × fault schedule). Schedule 0 is always the
+//! fault-free baseline; each later schedule is a seeded random sequence
+//! of replica kills (with restarts a few seconds later), so the CSV puts
+//! the goodput, rerouted-TTFT penalty, and migration counts of a faulted
+//! run next to the clean run under the same router. Every cell must
+//! conserve requests exactly — `check_no_losses` fails the command if any
+//! cell reports `lost != 0` (a silently dropped or double-completed
+//! request). Cells are independent seeded jobs with order-preserving
+//! collection: the CSV is byte-identical for any `-j` and a fixed seed.
+
+use super::{f1, f2, Table};
+use crate::baselines::SimSetup;
+use crate::cluster::router::RouterPolicy;
+use crate::cluster::sim::{ClusterRunResult, ClusterSim, FaultSchedule};
+use crate::coordinator::queues::OfflinePolicy;
+use crate::coordinator::scheduler::SchedulerConfig;
+use crate::engine::Engine;
+use crate::sim::costmodel::CostModel;
+use crate::sim::SimBackend;
+use crate::util::parallel::{job, run_jobs, Job};
+use crate::util::rng::Rng;
+use crate::workload::azure::{self, AzureTraceConfig};
+use crate::workload::datasets::{self, Dataset};
+use crate::workload::trace::Trace;
+
+/// Grid + workload shape; see [`ChaosConfig::full`] and
+/// [`ChaosConfig::quick`].
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Replicas per cell (every schedule runs against the same fleet).
+    pub replicas: usize,
+    pub policies: Vec<RouterPolicy>,
+    /// Fault schedules per policy, *including* the index-0 fault-free
+    /// baseline (so `schedules: 4` means 1 clean + 3 faulted runs).
+    pub schedules: usize,
+    /// Kills per non-baseline schedule; each kill is followed by a
+    /// restart of the same replica 1–5 s later.
+    pub kills_per_schedule: usize,
+    /// Online arrival rate of the cluster-wide Azure-shaped stream.
+    pub online_qps: f64,
+    /// Online trace span (s); the offline backlog arrives at t = 0.
+    pub trace_s: f64,
+    pub offline_n: usize,
+    pub latency_budget_ms: f64,
+    pub rebalance_interval_s: f64,
+    /// Hard stop for shapes that never catch up.
+    pub max_clock_s: f64,
+    pub seed: u64,
+    /// Worker threads for the cell grid (order-preserving collection —
+    /// any value yields byte-identical CSVs).
+    pub jobs: usize,
+}
+
+impl ChaosConfig {
+    /// The tracked-artifact shape (4 replicas, all policies, 3 faulted
+    /// schedules of 2 kills each next to the clean baseline).
+    pub fn full() -> ChaosConfig {
+        ChaosConfig {
+            replicas: 4,
+            policies: RouterPolicy::ALL.to_vec(),
+            schedules: 4,
+            kills_per_schedule: 2,
+            online_qps: 8.0,
+            trace_s: 120.0,
+            offline_n: 400,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 1.0,
+            max_clock_s: 600.0,
+            seed: 0,
+            jobs: super::default_jobs(),
+        }
+    }
+
+    /// CI smoke shape: same pipeline, seconds of wallclock.
+    pub fn quick() -> ChaosConfig {
+        ChaosConfig {
+            replicas: 3,
+            policies: RouterPolicy::ALL.to_vec(),
+            schedules: 2,
+            kills_per_schedule: 2,
+            online_qps: 4.0,
+            trace_s: 30.0,
+            offline_n: 80,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 0.5,
+            max_clock_s: 240.0,
+            seed: 0,
+            jobs: super::default_jobs(),
+        }
+    }
+}
+
+/// One grid cell's measurement.
+pub struct CellOutcome {
+    pub policy: RouterPolicy,
+    /// Schedule index (0 = fault-free baseline).
+    pub schedule: usize,
+    /// Kills in this cell's schedule.
+    pub kills: usize,
+    pub result: ClusterRunResult,
+}
+
+/// The calibrated mixed trace (the `cluster-sim` recipe): Azure online
+/// arrivals + a t = 0 arXiv offline backlog.
+pub fn mixed_trace(cfg: &ChaosConfig) -> Trace {
+    let online = azure::generate(
+        &AzureTraceConfig {
+            duration_s: cfg.trace_s,
+            mean_qps: cfg.online_qps,
+            ..Default::default()
+        },
+        cfg.seed,
+    );
+    let offline = datasets::generate(Dataset::ArxivSummarization, cfg.offline_n, cfg.seed);
+    online.merged(offline)
+}
+
+/// Build the seeded kill/restart schedule for one grid column. Index 0 is
+/// always the empty (fault-free) schedule; later indices draw kill times
+/// from the middle 70% of the trace span and revive the same replica
+/// 1–5 s later. Deterministic in (cfg.seed, index) only, so the same cell
+/// is byte-identical across runs and job counts.
+pub fn fault_schedule(cfg: &ChaosConfig, index: usize) -> FaultSchedule {
+    let mut schedule = FaultSchedule::new();
+    if index == 0 {
+        return schedule;
+    }
+    let mut rng = Rng::new(cfg.seed ^ 0xC4A0_5).fork(index as u64);
+    for _ in 0..cfg.kills_per_schedule {
+        let replica = rng.range_usize(0, cfg.replicas);
+        let t_kill = cfg.trace_s * (0.1 + 0.7 * rng.f64());
+        let t_back = t_kill + 1.0 + 4.0 * rng.f64();
+        schedule = schedule.kill(replica, t_kill).restart(replica, t_back);
+    }
+    schedule
+}
+
+fn build_engines(cfg: &ChaosConfig) -> Vec<Engine<SimBackend>> {
+    (0..cfg.replicas)
+        .map(|i| {
+            // Seed predictor + stable per-replica jitter seeds, same as
+            // `cluster-sim`, so columns stay comparable across policies.
+            let setup = SimSetup::with_seed_predictor(CostModel::a100_llama7b())
+                .with_policy(OfflinePolicy::Psm)
+                .with_seed(cfg.seed + i as u64);
+            let mut engine = setup.build_with_config(SchedulerConfig {
+                latency_budget_ms: Some(cfg.latency_budget_ms),
+                ..SchedulerConfig::default()
+            });
+            engine.state.keep_finished = false;
+            engine
+        })
+        .collect()
+}
+
+/// Run the whole (policy × schedule) grid. Cells execute as independent
+/// seeded jobs; results come back in grid order.
+pub fn run_grid(cfg: &ChaosConfig) -> anyhow::Result<Vec<CellOutcome>> {
+    anyhow::ensure!(cfg.replicas >= 1, "chaos grid needs at least one replica");
+    anyhow::ensure!(cfg.schedules >= 1, "chaos grid needs at least the baseline schedule");
+    let cells: Vec<(RouterPolicy, usize)> = cfg
+        .policies
+        .iter()
+        .flat_map(|&p| (0..cfg.schedules).map(move |s| (p, s)))
+        .collect();
+    // One trace, shared read-only by every cell.
+    let trace = mixed_trace(cfg);
+    let trace_ref = &trace;
+    let jobs: Vec<Job<'_, anyhow::Result<ClusterRunResult>>> = cells
+        .iter()
+        .map(|&(policy, schedule)| {
+            job(move || {
+                let engines = build_engines(cfg);
+                let mut sim =
+                    ClusterSim::new(engines, policy.build(), cfg.rebalance_interval_s)
+                        .with_faults(fault_schedule(cfg, schedule));
+                sim.check_invariants_each_step = true;
+                sim.run(trace_ref, cfg.max_clock_s)
+            })
+        })
+        .collect();
+    let results = run_jobs(cfg.jobs.max(1), jobs);
+    let mut outcomes = Vec::with_capacity(cells.len());
+    for (&(policy, schedule), result) in cells.iter().zip(results) {
+        let kills = fault_schedule(cfg, schedule).len() / 2;
+        outcomes.push(CellOutcome { policy, schedule, kills, result: result? });
+    }
+    Ok(outcomes)
+}
+
+/// Render the grid as the `chaos_compare` table.
+pub fn table(outcomes: &[CellOutcome]) -> Table {
+    let mut t = Table::new(
+        "chaos_compare",
+        &[
+            "policy",
+            "schedule",
+            "kills",
+            "restarts",
+            "total_tps",
+            "online_finished",
+            "offline_finished",
+            "rerouted",
+            "rerouted_delay_ms",
+            "migrated",
+            "failed_503",
+            "backlog_left",
+            "lost",
+            "duration_s",
+        ],
+    );
+    for o in outcomes {
+        let a = &o.result.aggregate;
+        t.row(vec![
+            o.policy.name().into(),
+            format!("{}", o.schedule),
+            format!("{}", o.kills),
+            format!("{}", o.result.fault_restarts),
+            f1(a.total_tps),
+            format!("{}", a.online_finished),
+            format!("{}", a.offline_finished),
+            format!("{}", o.result.rerouted),
+            f2(o.result.rerouted_delay_ms),
+            format!("{}", o.result.migrated),
+            format!("{}", o.result.failed_503),
+            format!("{}", o.result.backlog_left),
+            format!("{}", o.result.lost),
+            f1(o.result.duration_s),
+        ]);
+    }
+    t
+}
+
+/// The chaos acceptance gate: every cell's conservation ledger must be
+/// exactly zero — no request silently lost (`lost > 0`) and none finished
+/// twice (`lost < 0`) — under every policy and every fault schedule.
+pub fn check_no_losses(outcomes: &[CellOutcome]) -> anyhow::Result<()> {
+    for o in outcomes {
+        anyhow::ensure!(
+            o.result.lost == 0,
+            "policy {} schedule {} {} {} request(s): admitted {} vs finished {} \
+             + failed {} + backlog {}",
+            o.policy.name(),
+            o.schedule,
+            if o.result.lost > 0 { "lost" } else { "double-completed" },
+            o.result.lost.abs(),
+            o.result.admitted,
+            o.result.aggregate.online_finished + o.result.aggregate.offline_finished,
+            o.result.failed_503,
+            o.result.backlog_left,
+        );
+    }
+    Ok(())
+}
+
+/// Run the grid, print the table, enforce the zero-loss gate, and write
+/// `<out_dir>/chaos_compare.csv`.
+pub fn run_and_save(cfg: &ChaosConfig, out_dir: &str) -> anyhow::Result<Vec<CellOutcome>> {
+    let outcomes = run_grid(cfg)?;
+    let t = table(&outcomes);
+    t.print();
+    t.save_to(out_dir)?;
+    println!("-> {out_dir}/chaos_compare.csv");
+    check_no_losses(&outcomes)?;
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ChaosConfig {
+        ChaosConfig {
+            replicas: 2,
+            policies: vec![RouterPolicy::RoundRobin, RouterPolicy::SloHeadroom],
+            schedules: 2,
+            kills_per_schedule: 1,
+            online_qps: 2.0,
+            trace_s: 8.0,
+            offline_n: 20,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 0.5,
+            max_clock_s: 120.0,
+            seed: 3,
+            jobs: 1,
+        }
+    }
+
+    #[test]
+    fn schedule_zero_is_fault_free_and_later_ones_are_not() {
+        let cfg = tiny();
+        assert!(fault_schedule(&cfg, 0).is_empty());
+        let s1 = fault_schedule(&cfg, 1);
+        assert_eq!(s1.len(), 2 * cfg.kills_per_schedule, "kill + restart per kill");
+        assert_eq!(s1, fault_schedule(&cfg, 1), "same (seed, index), same schedule");
+        assert_ne!(s1, fault_schedule(&ChaosConfig { seed: 4, ..cfg }, 1));
+    }
+
+    #[test]
+    fn grid_covers_every_cell_in_order_and_conserves_requests() {
+        let cfg = tiny();
+        let outcomes = run_grid(&cfg).unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert_eq!(outcomes[0].policy, RouterPolicy::RoundRobin);
+        assert_eq!(outcomes[0].schedule, 0);
+        assert_eq!(outcomes[0].kills, 0);
+        assert_eq!(outcomes[3].policy, RouterPolicy::SloHeadroom);
+        assert_eq!(outcomes[3].schedule, 1);
+        assert_eq!(outcomes[3].kills, 1);
+        for o in &outcomes {
+            assert!(o.result.aggregate.online_finished > 0, "{}", o.policy.name());
+        }
+        check_no_losses(&outcomes).unwrap();
+        assert_eq!(table(&outcomes).rows.len(), 4);
+    }
+
+    #[test]
+    fn csv_is_jobs_invariant_and_seed_deterministic() {
+        let cfg = tiny();
+        let serial = table(&run_grid(&cfg).unwrap()).to_csv();
+        let again = table(&run_grid(&cfg).unwrap()).to_csv();
+        assert_eq!(serial, again, "same seed, same CSV");
+        let parallel = table(&run_grid(&ChaosConfig { jobs: 2, ..cfg }).unwrap()).to_csv();
+        assert_eq!(serial, parallel, "CSV bytes must not depend on jobs");
+    }
+
+    #[test]
+    fn loss_gate_reports_the_offending_cell() {
+        let cfg = tiny();
+        let mut outcomes = run_grid(&cfg).unwrap();
+        outcomes[1].result.lost = 1;
+        let err = check_no_losses(&outcomes).unwrap_err();
+        assert!(err.to_string().contains("schedule 1"), "{err}");
+    }
+}

@@ -10,10 +10,14 @@
 //! routing policies behind `hygen cluster-sim`
 //! (writes `artifacts/cluster_compare.csv`); [`multi_slo`] measures
 //! N-class SLO scheduling on the calibrated 4-class trace behind
-//! `hygen multi-slo` (writes `artifacts/multi_slo.csv`).
+//! `hygen multi-slo` (writes `artifacts/multi_slo.csv`); [`chaos`]
+//! chaos-tests the cluster fault tolerance — seeded kill/restart
+//! schedules per router policy — behind `hygen chaos`
+//! (writes `artifacts/chaos_compare.csv`).
 
 pub mod bench_replay;
 pub mod bench_sched;
+pub mod chaos;
 pub mod cluster_sim;
 pub mod figures;
 pub mod multi_slo;

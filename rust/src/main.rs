@@ -13,6 +13,9 @@
 //!   artifacts/cluster_compare.csv
 //! * `multi-slo`        — N-class SLO registry comparison on the 4-class
 //!   trace; writes artifacts/multi_slo.csv
+//! * `chaos`            — fault-injection comparison (kill/restart
+//!   schedules per router policy); writes artifacts/chaos_compare.csv
+//!   and fails if any cell loses a request
 
 use hygen::baselines::{SimSetup, System};
 use hygen::cluster::router::RouterPolicy;
@@ -77,6 +80,14 @@ USAGE:
                      artifacts/multi_slo.csv with per-tier SLO attainment
                      plus total throughput, byte-identical for a fixed
                      seed and any -j)
+  hygen chaos        [--out DIR] [--quick] [--seed N] [-j/--jobs N]
+                     (replay the calibrated mixed trace against every
+                     router policy under seeded random kill/restart
+                     schedules next to a fault-free baseline; writes
+                     artifacts/chaos_compare.csv — goodput, rerouted
+                     TTFT penalty, migrations, 503s — byte-identical
+                     for a fixed seed and any -j, and fails if any cell
+                     loses or double-completes a request)
 
 MODELS: a100-llama2-7b (default), a40-qwen-14b, a40x4-yi-34b-tp2pp2,
         a100-mistral-7b, a5000-sheared-2.7b
@@ -101,6 +112,7 @@ fn main() {
         Some("bench-replay") => cmd_bench_replay(&args),
         Some("cluster-sim") => cmd_cluster_sim(&args),
         Some("multi-slo") => cmd_multi_slo(&args),
+        Some("chaos") => cmd_chaos(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -200,6 +212,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             cfg.http_workers,
             std::time::Duration::from_secs_f64(cfg.cluster.drain_s),
             std::sync::Arc::clone(&registry),
+            cfg.cluster.supervisor_config(),
         )?
     };
     println!(
@@ -433,6 +446,25 @@ fn cmd_multi_slo(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    use hygen::experiments::chaos::{self, ChaosConfig};
+    let mut cfg = if args.get_bool("quick") { ChaosConfig::quick() } else { ChaosConfig::full() };
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.jobs = args.get_usize_alias("jobs", "j", cfg.jobs).max(1);
+    let out_dir = args.get_or("out", "artifacts");
+    // `run_and_save` already enforces the zero-loss conservation gate —
+    // a lost (or double-completed) request in any cell is a hard error,
+    // not an opt-in check.
+    let outcomes = chaos::run_and_save(&cfg, out_dir)?;
+    let faulted = outcomes.iter().filter(|o| o.schedule > 0).count();
+    println!(
+        "chaos gate passed: 0 lost across {} cells ({} faulted)",
+        outcomes.len(),
+        faulted
+    );
     Ok(())
 }
 

@@ -25,7 +25,7 @@
 
 pub mod http;
 
-use crate::cluster::replica::{Job, Replica, ReplicaShared};
+use crate::cluster::replica::{Job, ReplicaShared, Supervisor, SupervisorConfig};
 use crate::cluster::router::{Router, RouterPolicy};
 use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::request::Class;
@@ -71,7 +71,7 @@ pub struct Server {
     pub replicas: usize,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    replica_handles: Vec<Replica>,
+    replica_handles: Vec<Supervisor>,
 }
 
 impl Server {
@@ -79,11 +79,12 @@ impl Server {
     /// replica). The engine is *constructed on* a dedicated engine thread
     /// by `factory` — PJRT handles are not `Send`, so they must never
     /// cross threads; handlers talk to the engine thread via a message
-    /// queue only.
+    /// queue only. The factory must be callable repeatedly: the replica's
+    /// supervisor re-runs it to restart a failed engine.
     pub fn start<B, F>(bind: &str, factory: F, workers: usize) -> anyhow::Result<Server>
     where
         B: ExecutionBackend + 'static,
-        F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+        F: Fn() -> anyhow::Result<Engine<B>> + Send + 'static,
     {
         Self::start_cluster(
             bind,
@@ -96,7 +97,7 @@ impl Server {
 
     /// Start serving with one engine thread per factory and `router`
     /// deciding which replica serves each submission, under the default
-    /// two-class registry.
+    /// two-class registry and restart policy.
     pub fn start_cluster<B, F>(
         bind: &str,
         factories: Vec<F>,
@@ -106,7 +107,7 @@ impl Server {
     ) -> anyhow::Result<Server>
     where
         B: ExecutionBackend + 'static,
-        F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+        F: Fn() -> anyhow::Result<Engine<B>> + Send + 'static,
     {
         Self::start_cluster_with_registry(
             bind,
@@ -115,6 +116,7 @@ impl Server {
             workers,
             drain,
             Arc::new(ClassRegistry::default_two()),
+            SupervisorConfig::default(),
         )
     }
 
@@ -122,7 +124,11 @@ impl Server {
     /// carry a `class` name resolved against it; each engine factory must
     /// build its [`EngineState`](crate::coordinator::state::EngineState)
     /// over the *same* registry or class-indexed enqueues will be
-    /// rejected.
+    /// rejected. Each replica runs under a [`Supervisor`] with the given
+    /// restart policy: a persistently failing engine is rebuilt by its
+    /// factory with capped exponential backoff, and the replica publishes
+    /// itself `failed` (routers skip it) until the restart lands.
+    #[allow(clippy::too_many_arguments)]
     pub fn start_cluster_with_registry<B, F>(
         bind: &str,
         factories: Vec<F>,
@@ -130,10 +136,11 @@ impl Server {
         workers: usize,
         drain: Duration,
         registry: Arc<ClassRegistry>,
+        supervisor: SupervisorConfig,
     ) -> anyhow::Result<Server>
     where
         B: ExecutionBackend + 'static,
-        F: FnOnce() -> anyhow::Result<Engine<B>> + Send + 'static,
+        F: Fn() -> anyhow::Result<Engine<B>> + Send + 'static,
     {
         anyhow::ensure!(!factories.is_empty(), "server needs at least one replica");
         let listener = TcpListener::bind(bind)?;
@@ -143,11 +150,12 @@ impl Server {
 
         let mut replica_handles = Vec::with_capacity(factories.len());
         for (i, factory) in factories.into_iter().enumerate() {
-            let spawned = Replica::spawn(
+            let spawned = Supervisor::spawn(
                 format!("hygen-engine-{i}"),
                 factory,
                 Arc::clone(&stop),
                 drain,
+                supervisor,
             );
             match spawned {
                 Ok(r) => replica_handles.push(r),
@@ -291,8 +299,9 @@ fn aggregate_class_blocks(reports: &[Json]) -> Json {
 }
 
 /// Aggregate per-replica report JSONs into the multi-replica `/metrics`
-/// payload.
-fn aggregate_metrics(reports: &[Json]) -> Json {
+/// payload. `fleet` carries supervision counters (restarts, generations)
+/// that live beside the engine reports rather than inside them.
+fn aggregate_metrics(reports: &[Json], fleet: Vec<(&'static str, Json)>) -> Json {
     let mut agg: Vec<(&str, Json)> = Vec::new();
     for field in SUM_FIELDS {
         let total: f64 = reports.iter().filter_map(|r| r.get(field).as_f64()).sum();
@@ -306,10 +315,34 @@ fn aggregate_metrics(reports: &[Json]) -> Json {
         agg.push((field, Json::from(worst)));
     }
     agg.push(("classes", aggregate_class_blocks(reports)));
-    Json::obj(vec![
+    let mut top = vec![
         ("replicas", Json::Arr(reports.to_vec())),
         ("aggregate", Json::obj(agg)),
-    ])
+    ];
+    top.extend(fleet);
+    Json::obj(top)
+}
+
+/// Supervision counters for the multi-replica `/metrics` payload:
+/// per-replica restart attempts and engine generations, plus the fleet
+/// total (these are front-end state, not engine report fields — the
+/// aggregate drift guard stays exact).
+fn fleet_fields(state: &ClusterState) -> Vec<(&'static str, Json)> {
+    let restarts: Vec<usize> = state
+        .replicas
+        .iter()
+        .map(|r| r.shared.restarts.load(Ordering::Relaxed))
+        .collect();
+    let generations: Vec<Json> = state
+        .replicas
+        .iter()
+        .map(|r| Json::from(r.shared.generation.load(Ordering::Relaxed)))
+        .collect();
+    vec![
+        ("total_restarts", Json::from(restarts.iter().sum::<usize>())),
+        ("restarts", Json::Arr(restarts.into_iter().map(Json::from).collect())),
+        ("generations", Json::Arr(generations)),
+    ]
 }
 
 fn handle_connection(
@@ -341,7 +374,7 @@ fn handle_connection(
                         Json::parse(&text).unwrap_or(Json::Obj(Default::default()))
                     })
                     .collect();
-                aggregate_metrics(&reports).to_pretty()
+                aggregate_metrics(&reports, fleet_fields(state)).to_pretty()
             };
             write_response(stream, 200, "application/json", body.as_bytes())
         }
@@ -607,6 +640,11 @@ mod tests {
         assert!(m.contains("\"aggregate\""), "{m}");
         assert!(m.contains("\"replicas\""), "{m}");
         assert!(m.contains("\"p50_tbt_ms\""), "{m}");
+        // Fleet supervision counters ride beside the engine reports: a
+        // healthy cluster shows zero restarts and generation-0 replicas.
+        assert!(m.contains("\"total_restarts\""), "{m}");
+        assert!(m.contains("\"restarts\""), "{m}");
+        assert!(m.contains("\"generations\""), "{m}");
         server.shutdown();
     }
 
@@ -801,7 +839,7 @@ mod tests {
             ]}"#,
         )
         .unwrap();
-        let m = aggregate_metrics(&[a, b]);
+        let m = aggregate_metrics(&[a, b], Vec::new());
         let classes = m.get("aggregate").get("classes").as_arr().unwrap();
         assert_eq!(classes.len(), 2, "max class count across replicas");
         assert_eq!(classes[0].get("finished").as_f64(), Some(6.0), "additive summed");
@@ -820,7 +858,7 @@ mod tests {
             r#"{"online_finished": 3, "total_tps": 4.5, "p99_tbt_ms": 30.0, "p50_ttft_ms": 1.0}"#,
         )
         .unwrap();
-        let m = aggregate_metrics(&[a, b]);
+        let m = aggregate_metrics(&[a, b], Vec::new());
         let agg = m.get("aggregate");
         assert_eq!(agg.get("online_finished").as_f64(), Some(5.0));
         assert_eq!(agg.get("total_tps").as_f64(), Some(15.0));
@@ -836,7 +874,7 @@ mod tests {
         // multi-replica aggregate (a new Report field that is added to
         // neither list fails here, not silently in production).
         let report = crate::coordinator::metrics::Metrics::new(1.0).report(Some(1.0)).to_json();
-        let m = aggregate_metrics(&[report.clone(), report.clone()]);
+        let m = aggregate_metrics(&[report.clone(), report.clone()], Vec::new());
         let agg = m.get("aggregate").as_obj().unwrap();
         for key in report.as_obj().unwrap().keys() {
             assert!(agg.contains_key(key), "aggregate missing report field '{key}'");

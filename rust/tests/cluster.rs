@@ -8,13 +8,17 @@
 //!   a strictly longer queue than another live replica;
 //! * **router totality** — every policy returns an in-range index for
 //!   arbitrary snapshot vectors, preferring live replicas while any
-//!   exist.
+//!   exist;
+//! * **chaos conservation** — under seeded random kill/restart schedules,
+//!   every admitted request is finished, resident, backlogged, or failed
+//!   exactly once (`lost == 0`), with per-engine invariants checked after
+//!   every step; a failing case logs its replay seed.
 //!
 //! (`tests/determinism.rs` holds the byte-identity contract for the
-//! `cluster-sim` CSV.)
+//! `cluster-sim` and `chaos` CSVs.)
 
 use hygen::cluster::router::{JoinShortestQueue, Router, RouterPolicy};
-use hygen::cluster::sim::ClusterSim;
+use hygen::cluster::sim::{ClusterSim, FaultSchedule};
 use hygen::cluster::ReplicaSnapshot;
 use hygen::coordinator::predictor::LatencyPredictor;
 use hygen::coordinator::queues::OfflinePolicy;
@@ -134,6 +138,54 @@ fn prop_every_admitted_request_lands_on_exactly_one_replica() {
         assert_eq!(sim.routed.iter().sum::<usize>(), r.dispatched);
         // The full online trace must be served (replicas are live).
         assert_eq!(r.aggregate.online_finished, trace.num_online());
+    });
+}
+
+#[test]
+fn prop_chaos_conserves_every_request() {
+    check("chaos conservation", 25, |g: &mut Gen| {
+        let policy = *g.pick(&RouterPolicy::ALL);
+        let n = g.usize(2, 5);
+        let budget = if g.bool() { Some(40.0) } else { None };
+        let trace = random_trace(g);
+        // Seeded random kill/restart schedule over the trace span; some
+        // kills stay permanent, some replicas revive a moment later.
+        let mut schedule = FaultSchedule::new();
+        for _ in 0..g.usize(1, 4) {
+            let replica = g.usize(0, n);
+            let t_kill = g.f64(0.2, 5.0);
+            schedule = schedule.kill(replica, t_kill);
+            if g.bool() {
+                schedule = schedule.restart(replica, t_kill + g.f64(0.1, 2.0));
+            }
+        }
+        let mut sim = ClusterSim::new(engines(n, budget, g.seed), policy.build(), 0.5)
+            .with_faults(schedule);
+        sim.check_invariants_each_step = true;
+        let r = sim.run(&trace, 400.0).unwrap();
+        // Conservation under faults: every admitted event is finished,
+        // still resident on a replica, held in the shared backlog, or
+        // failed fast with a reported error — exactly one of the four,
+        // never duplicated, never silently dropped.
+        let mut on_replicas = 0usize;
+        for e in &sim.engines {
+            e.state.check_invariants().unwrap();
+            on_replicas +=
+                e.state.num_running() + e.state.total_waiting() + e.state.total_preempted();
+        }
+        let finished = r.aggregate.online_finished + r.aggregate.offline_finished;
+        assert_eq!(
+            finished + on_replicas + r.backlog_left + r.failed_503,
+            r.admitted,
+            "policy {} with {} replicas",
+            policy.name(),
+            n
+        );
+        assert_eq!(r.lost, 0, "policy {} with {} replicas", policy.name(), n);
+        // 503s are an online-only outcome, so the online tally can never
+        // exceed the trace's online population.
+        assert!(r.aggregate.online_finished + r.failed_503 <= trace.num_online());
+        assert!(r.admitted <= trace.len());
     });
 }
 

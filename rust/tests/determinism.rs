@@ -10,11 +10,18 @@
 //!   full `--quick` shapes through the CLI;
 //! * the `cluster-sim` grid must be byte-identical for a fixed seed and
 //!   for any `-j` (CI re-checks the `--quick` shape through the CLI by
-//!   comparing two full runs).
+//!   comparing two full runs);
+//! * the `chaos` grid must stay byte-identical under fault injection —
+//!   kills, migrations, and reroutes are part of the deterministic replay,
+//!   not a source of nondeterminism — and a kill + restart must be
+//!   *restart-equivalent*: the faulted run accounts for exactly the same
+//!   online population as the clean run (finished + failed-fast), with
+//!   nothing lost.
 
 use hygen::baselines::{SimSetup, System};
 use hygen::cluster::router::RouterPolicy;
-use hygen::experiments::{cluster_sim, figures, multi_slo, Ctx};
+use hygen::cluster::sim::{ClusterSim, FaultSchedule};
+use hygen::experiments::{chaos, cluster_sim, figures, multi_slo, Ctx};
 use hygen::sim::costmodel::CostModel;
 use hygen::workload::azure::{self, AzureTraceConfig};
 use hygen::workload::datasets::{self, Dataset};
@@ -149,4 +156,88 @@ fn multi_slo_output_is_byte_identical_for_a_seed() {
     assert_eq!(a, parallel, "multi-slo CSV bytes must not depend on -j");
     let other = multi_slo_csv(12, 1);
     assert_ne!(a, other, "the seed must actually steer the grid");
+}
+
+fn chaos_csv(seed: u64, jobs: usize) -> String {
+    let cfg = chaos::ChaosConfig {
+        replicas: 2,
+        policies: RouterPolicy::ALL.to_vec(),
+        schedules: 2,
+        kills_per_schedule: 1,
+        online_qps: 2.0,
+        trace_s: 10.0,
+        offline_n: 30,
+        latency_budget_ms: 40.0,
+        rebalance_interval_s: 0.5,
+        max_clock_s: 200.0,
+        seed,
+        jobs,
+    };
+    chaos::table(&chaos::run_grid(&cfg).unwrap()).to_csv()
+}
+
+#[test]
+fn chaos_output_is_byte_identical_for_a_seed() {
+    let a = chaos_csv(7, 1);
+    let b = chaos_csv(7, 1);
+    assert!(a.lines().count() > 6, "grid produced rows:\n{a}");
+    assert_eq!(a, b, "same seed must reproduce the chaos CSV byte-for-byte");
+    let parallel = chaos_csv(7, 3);
+    assert_eq!(a, parallel, "chaos CSV bytes must not depend on -j");
+    let other = chaos_csv(8, 1);
+    assert_ne!(a, other, "the seed must actually steer the grid");
+}
+
+#[test]
+fn kill_plus_restart_is_restart_equivalent_to_a_clean_run() {
+    // A kill + restart must not change *what* the cluster owes the trace:
+    // the faulted run accounts for exactly the online population the
+    // clean run serves — every online request finished or failed fast,
+    // none lost, none finished twice.
+    use hygen::coordinator::queues::OfflinePolicy;
+    use hygen::coordinator::scheduler::SchedulerConfig;
+
+    let seed = 5;
+    let online = azure::generate(
+        &AzureTraceConfig { duration_s: 20.0, mean_qps: 2.0, ..Default::default() },
+        seed,
+    );
+    let offline = datasets::generate(Dataset::ArxivSummarization, 40, seed);
+    let trace = online.merged(offline);
+    let run = |faults: FaultSchedule| {
+        let engines: Vec<_> = (0..2)
+            .map(|i| {
+                let setup = SimSetup::with_seed_predictor(CostModel::a100_llama7b())
+                    .with_policy(OfflinePolicy::Psm)
+                    .with_seed(seed + i as u64);
+                let mut e = setup.build_with_config(SchedulerConfig {
+                    latency_budget_ms: Some(40.0),
+                    ..SchedulerConfig::default()
+                });
+                e.state.keep_finished = false;
+                e
+            })
+            .collect();
+        let mut sim = ClusterSim::new(engines, RouterPolicy::RoundRobin.build(), 0.5)
+            .with_faults(faults);
+        sim.check_invariants_each_step = true;
+        sim.run(&trace, 400.0).unwrap()
+    };
+    let clean = run(FaultSchedule::new());
+    let faulted = run(FaultSchedule::new().kill(1, 4.0).restart(1, 6.0));
+    assert_eq!(clean.lost, 0);
+    assert_eq!(faulted.lost, 0, "kill+restart lost a request");
+    assert_eq!(clean.aggregate.online_finished, trace.num_online());
+    assert_eq!(clean.failed_503, 0);
+    assert_eq!(faulted.fault_restarts, 1);
+    assert_eq!(
+        faulted.aggregate.online_finished + faulted.failed_503,
+        trace.num_online(),
+        "the faulted run must account for the same online population"
+    );
+    // The same faulted schedule replays bit-identically.
+    let again = run(FaultSchedule::new().kill(1, 4.0).restart(1, 6.0));
+    assert_eq!(faulted.aggregate, again.aggregate);
+    assert_eq!(faulted.rerouted, again.rerouted);
+    assert_eq!(faulted.migrated, again.migrated);
 }
