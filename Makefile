@@ -3,7 +3,7 @@
 # `make artifacts` produces the AOT HLO artifacts the PJRT execution path
 # (`--features pjrt`) loads at startup.
 
-.PHONY: all artifacts test bench bench-sched bench-replay cluster multi-slo chaos microbench clean
+.PHONY: all artifacts test lint bench bench-sched bench-replay cluster multi-slo chaos microbench clean
 
 all:
 	cargo build --release
@@ -15,6 +15,11 @@ artifacts:
 
 test:
 	cargo build --release && cargo test -q
+
+# In-repo static analysis (DESIGN.md §9): determinism, alloc-free,
+# panic-free, and config-doc invariants over rust/src/. Blocking in CI.
+lint:
+	cargo run --release -- lint
 
 # Regenerate both tracked perf-trajectory files
 # (BENCH_sched.json + BENCH_e2e.json).

@@ -1,0 +1,258 @@
+//! The `alloc` rule: functions annotated `// lint: alloc-free` must not
+//! reach an allocating construct, transitively within the crate — the
+//! static complement of the `CountingAlloc` runtime probe (which proves
+//! the steady-state decode loop allocates nothing, but only for the
+//! inputs a bench happens to replay).
+//!
+//! Call edges are resolved *by name, only when unambiguous*: a call
+//! `foo(..)` or `.foo(..)` follows into `fn foo` when exactly one
+//! non-test function with that name exists in the crate. Ambiguous or
+//! external names are skipped — this rule is deliberately best-effort
+//! on reachability and exact on the constructs themselves. The banned
+//! list targets constructs that allocate fresh storage per call
+//! (`Vec::new` + push warm-up is the runtime probe's amortized domain):
+//! container constructors, `vec!`/`format!`, `.clone()`/`.collect()`/
+//! `.to_vec()`/`.to_string()`/`.to_owned()`, and `Box::new`. The
+//! refcount-bump path forms `Arc::clone(&x)`/`Rc::clone(&x)` stay legal
+//! (that idiom exists precisely to signal "not a deep clone").
+//!
+//! A function annotated `// lint: allow(alloc, reason=...)` is treated
+//! as audited and not descended into; a line-level allow suppresses one
+//! construct (e.g. the cold anomaly-ledger `format!` in an otherwise
+//! hot transition).
+
+use std::collections::BTreeMap;
+
+use super::lexer::Tok;
+use super::{Diagnostic, SourceFile};
+
+const CONTAINERS: &[&str] = &[
+    "Vec", "String", "Box", "HashMap", "HashSet", "BTreeMap", "BTreeSet", "VecDeque", "Arc",
+    "Rc",
+];
+const CTORS: &[&str] = &["new", "with_capacity", "from"];
+const ALLOC_METHODS: &[&str] = &["clone", "to_vec", "to_string", "to_owned", "collect"];
+const CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "move", "fn", "in", "let", "else",
+    "Some", "Ok", "Err", "None",
+];
+
+pub fn check(sources: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    // Crate-wide fn-name index over non-test fns: name -> (file, fn).
+    let mut index: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+    for (fi, sf) in sources.iter().enumerate() {
+        for (gi, f) in sf.items.fns.iter().enumerate() {
+            if !f.in_test {
+                index.entry(f.name.as_str()).or_default().push((fi, gi));
+            }
+        }
+    }
+
+    let mut visited: Vec<(usize, usize)> = Vec::new();
+    for (fi, sf) in sources.iter().enumerate() {
+        for (gi, f) in sf.items.fns.iter().enumerate() {
+            if f.alloc_free && !f.in_test {
+                let mut path = vec![qualified(sources, fi, gi)];
+                scan_fn(sources, &index, fi, gi, &mut visited, &mut path, out);
+            }
+        }
+    }
+}
+
+fn qualified(sources: &[SourceFile], fi: usize, gi: usize) -> String {
+    let f = &sources[fi].items.fns[gi];
+    match &f.owner {
+        Some(o) => format!("{o}::{}", f.name),
+        None => f.name.clone(),
+    }
+}
+
+fn scan_fn(
+    sources: &[SourceFile],
+    index: &BTreeMap<&str, Vec<(usize, usize)>>,
+    fi: usize,
+    gi: usize,
+    visited: &mut Vec<(usize, usize)>,
+    path: &mut Vec<String>,
+    out: &mut Vec<Diagnostic>,
+) {
+    if visited.contains(&(fi, gi)) {
+        return;
+    }
+    visited.push((fi, gi));
+    let sf = &sources[fi];
+    let f = &sf.items.fns[gi];
+    // An audited function stops the descent.
+    if f.allows.iter().any(|r| r == "alloc") {
+        return;
+    }
+    let toks = &sf.lexed.tokens;
+    let (lo, hi) = f.body;
+    let root = path.first().cloned().unwrap_or_default();
+    let via = if path.len() > 1 {
+        format!(" (reached from alloc-free `{root}` via {})", path[1..].join(" -> "))
+    } else {
+        String::new()
+    };
+
+    let mut i = lo;
+    while i <= hi && i < toks.len() {
+        let line = toks[i].line;
+        match &toks[i].tok {
+            // `Vec::new`, `Box::new`, `String::from`, ...
+            Tok::Ident(c) if CONTAINERS.contains(&c.as_str()) => {
+                if punct(sf, i + 1, ':') && punct(sf, i + 2, ':') {
+                    if let Some(m) = ident(sf, i + 3) {
+                        if CTORS.contains(&m) && !sf.allowed("alloc", line, i) {
+                            out.push(diag(sf, line, format!("`{c}::{m}` allocates{via}")));
+                        }
+                    }
+                }
+            }
+            // `vec![..]`, `format!(..)`
+            Tok::Ident(m) if (m == "vec" || m == "format") && punct(sf, i + 1, '!') => {
+                if !sf.allowed("alloc", line, i) {
+                    out.push(diag(sf, line, format!("`{m}!` allocates{via}")));
+                }
+            }
+            // `.clone()`, `.collect::<..>()`, `.to_vec()`, ...
+            Tok::Punct('.') => {
+                if let Some(m) = ident(sf, i + 1) {
+                    if ALLOC_METHODS.contains(&m)
+                        && (punct(sf, i + 2, '(') || punct(sf, i + 2, ':'))
+                        && !sf.allowed("alloc", toks[i + 1].line, i + 1)
+                    {
+                        out.push(diag(sf, toks[i + 1].line, format!("`.{m}()` allocates{via}")));
+                    }
+                }
+            }
+            _ => {}
+        }
+        // Call edges: `name(..)` with exactly one crate-wide definition.
+        if let Some(name) = ident(sf, i) {
+            if punct(sf, i + 1, '(') && !CALL_KEYWORDS.contains(&name) {
+                if let Some(defs) = index.get(name) {
+                    if let [(tfi, tgi)] = defs[..] {
+                        if (tfi, tgi) != (fi, gi) {
+                            path.push(qualified(sources, tfi, tgi));
+                            scan_fn(sources, index, tfi, tgi, visited, path, out);
+                            path.pop();
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+fn ident(sf: &SourceFile, i: usize) -> Option<&str> {
+    match sf.lexed.tokens.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct(sf: &SourceFile, i: usize, c: char) -> bool {
+    sf.lexed.tokens.get(i).map(|t| &t.tok) == Some(&Tok::Punct(c))
+}
+
+fn diag(sf: &SourceFile, line: u32, msg: String) -> Diagnostic {
+    Diagnostic { file: sf.display.clone(), line, rule: "alloc", msg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{items, lexer, SourceFile};
+    use super::*;
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let lexed = lexer::lex(src);
+        let items = items::build(&lexed);
+        SourceFile { rel: rel.to_string(), display: rel.to_string(), lexed, items }
+    }
+
+    fn run(srcs: &[(&str, &str)]) -> Vec<Diagnostic> {
+        let sources: Vec<SourceFile> = srcs.iter().map(|(r, s)| file(r, s)).collect();
+        let mut out = Vec::new();
+        check(&sources, &mut out);
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn direct_and_transitive_allocation_flagged() {
+        let d = run(&[(
+            "a.rs",
+            "
+// lint: alloc-free
+fn hot() { helper(); }
+fn helper() { let v = Vec::new(); let _ = v.clone(); }
+fn cold() { let _s = format!(\"untouched\"); }
+",
+        )]);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d[0].msg.contains(".clone()"));
+        assert!(d[1].msg.contains("Vec::new"));
+        assert!(d[1].msg.contains("via helper"), "{}", d[1].msg);
+    }
+
+    #[test]
+    fn arc_clone_path_form_is_legal() {
+        let d = run(&[(
+            "a.rs",
+            "
+// lint: alloc-free
+fn hot(x: &Arc<u32>) { let _y = Arc::clone(x); }
+",
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn ambiguous_callee_not_followed() {
+        let d = run(&[(
+            "a.rs",
+            "
+// lint: alloc-free
+fn hot() { twice(); }
+struct A; struct B;
+impl A { fn twice(&self) { let _ = vec![1]; } }
+impl B { fn twice(&self) { let _ = vec![2]; } }
+",
+        )]);
+        assert!(d.is_empty(), "two defs of `twice` -> skipped: {d:?}");
+    }
+
+    #[test]
+    fn line_allow_and_audited_fn() {
+        let d = run(&[(
+            "a.rs",
+            "
+// lint: alloc-free
+fn hot() {
+    // lint: allow(alloc, reason=cold anomaly path)
+    let _ = format!(\"anomaly\");
+    audited();
+}
+// lint: allow(alloc, reason=audited by hand)
+fn audited() { let _ = Vec::new(); }
+",
+        )]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn cycles_terminate() {
+        let d = run(&[(
+            "a.rs",
+            "
+// lint: alloc-free
+fn ping() { pong(); }
+fn pong() { ping(); let _ = Box::new(1); }
+",
+        )]);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].msg.contains("Box::new"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Rule scopes and allowlists for `hygen lint`.
+//!
+//! Paths are relative to `rust/src/` with forward slashes; an entry
+//! ending in `/` matches a whole module directory. Changing a scope is
+//! a reviewed code change, not a config file — the allowlists are part
+//! of the crate on purpose.
+
+/// Modules where wallclock reads (`Instant::now` / `SystemTime`) are the
+/// point: real-time serving front ends, the bench harness, and the
+/// launcher. Everything else must run on the virtual clock (or carry a
+/// justified `// lint: allow(wallclock, reason=...)` at a measured `t0`
+/// site).
+pub const WALLCLOCK_ALLOWED: &[&str] = &[
+    "util/bench.rs",
+    "server/",
+    "cluster/replica.rs",
+    "engine/pjrt_backend.rs",
+    "experiments/bench_sched.rs",
+    "experiments/bench_replay.rs",
+    "main.rs",
+];
+
+/// Modules whose output feeds batches, snapshots, or CSVs: `HashMap` /
+/// `HashSet` *iteration* here is a determinism hazard (arbitrary,
+/// seed-dependent order). Storage and point lookups stay fine.
+pub const MAP_ITER_SCOPE: &[&str] = &["coordinator/", "cluster/", "experiments/", "workload/"];
+
+/// Hot-path files where `unwrap()` / `expect()` / `panic!` / indexing
+/// must be absent or individually justified: a panic here kills a
+/// serving loop, not a CLI run.
+pub const PANIC_SCOPE: &[&str] = &[
+    "coordinator/scheduler.rs",
+    "coordinator/state.rs",
+    "engine/mod.rs",
+    "cluster/replica.rs",
+];
+
+/// Identifiers that mean "unseeded randomness" — the crate's only RNG
+/// is the seeded xoshiro in `util/rng.rs`, so these must never appear.
+pub const UNSEEDED_RNG_IDENTS: &[&str] = &["thread_rng", "from_entropy", "OsRng", "getrandom"];
+
+/// `HashMap`/`HashSet` methods that observe iteration order.
+pub const MAP_ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "keys", "values", "values_mut", "drain", "into_iter", "retain"];
+
+/// Does `rel` (a `rust/src/`-relative path) fall under any prefix in
+/// `list`?
+pub fn path_in(rel: &str, list: &[&str]) -> bool {
+    list.iter().any(|p| {
+        if let Some(dir) = p.strip_suffix('/') {
+            rel == dir || rel.starts_with(p)
+        } else {
+            rel == *p
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_matching() {
+        assert!(path_in("server/mod.rs", WALLCLOCK_ALLOWED));
+        assert!(path_in("util/bench.rs", WALLCLOCK_ALLOWED));
+        assert!(!path_in("util/bench_extra.rs", WALLCLOCK_ALLOWED));
+        assert!(!path_in("coordinator/scheduler.rs", WALLCLOCK_ALLOWED));
+        assert!(path_in("coordinator/scheduler.rs", PANIC_SCOPE));
+        assert!(path_in("workload/azure.rs", MAP_ITER_SCOPE));
+        assert!(!path_in("util/json.rs", MAP_ITER_SCOPE));
+    }
+}

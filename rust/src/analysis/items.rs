@@ -1,0 +1,482 @@
+//! Item-level structure over the token stream: `fn` items with body
+//! spans and attached `// lint:` annotations, `impl`-block owners, and
+//! `#[cfg(test)]` / `#[test]` regions (excluded from every rule).
+
+use super::lexer::{AnnKind, Lexed, Tok};
+
+/// One `fn` item with a body.
+#[derive(Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// Owning type for methods in an `impl` block (`Engine` for
+    /// `Engine::apply`); `None` for free functions.
+    pub owner: Option<String>,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Token-index range of the body, inclusive of both braces.
+    pub body: (usize, usize),
+    /// Marked `// lint: alloc-free` — a root of the alloc rule.
+    pub alloc_free: bool,
+    /// Function-scoped `allow(<rule>, reason=...)` rule names (only
+    /// allows that carried a reason).
+    pub allows: Vec<String>,
+    /// Inside a `#[cfg(test)]` region or under a `#[test]` attribute.
+    pub in_test: bool,
+}
+
+/// Structure extracted from one lexed file.
+#[derive(Debug, Default)]
+pub struct FileItems {
+    pub fns: Vec<FnItem>,
+    /// Line ranges (inclusive) covered by `#[cfg(test)]` items and
+    /// `#[test]` functions.
+    pub test_regions: Vec<(u32, u32)>,
+}
+
+impl FileItems {
+    pub fn is_test_line(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// The innermost function whose body token range contains `tok_idx`.
+    pub fn enclosing_fn(&self, tok_idx: usize) -> Option<&FnItem> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.0 <= tok_idx && tok_idx <= f.body.1)
+            .max_by_key(|f| f.body.0)
+    }
+}
+
+/// Words that can precede `fn` in an item header (walked over when
+/// attaching annotations above the item).
+const FN_QUALIFIERS: &[&str] = &["pub", "crate", "super", "in", "unsafe", "const", "async", "extern", "default"];
+
+pub fn build(lx: &Lexed) -> FileItems {
+    let toks = &lx.tokens;
+    let mut out = FileItems::default();
+
+    // ---- test regions: #[cfg(test)] items and #[test] fns ----
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_test_attr_at(toks, i) {
+            // Find what the attribute covers: skip any further
+            // attributes, then scan to the item's opening `{` (or `;`
+            // for an item with no body).
+            let mut j = skip_attrs(toks, i);
+            let start_line = tok_line(toks, i);
+            let mut paren = 0i32;
+            while j < toks.len() {
+                match &toks[j].tok {
+                    Tok::Punct('(') | Tok::Punct('[') => paren += 1,
+                    Tok::Punct(')') | Tok::Punct(']') => paren -= 1,
+                    Tok::Punct('{') if paren == 0 => break,
+                    Tok::Punct(';') if paren == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j < toks.len() && toks[j].tok == Tok::Punct('{') {
+                let close = match_brace(toks, j);
+                out.test_regions.push((start_line, tok_line(toks, close)));
+                // Keep scanning *inside* the region: nested `#[test]`
+                // fns get their own (overlapping) regions.
+                i = j + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+
+    // ---- impl owners + fn items ----
+    // Stack of (brace_depth_at_open, owner_name) for impl blocks.
+    let mut impl_stack: Vec<(i32, String)> = Vec::new();
+    let mut depth: i32 = 0;
+    let mut i = 0usize;
+    while i < toks.len() {
+        match &toks[i].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if let Some(&(d, _)) = impl_stack.last() {
+                    if depth < d {
+                        impl_stack.pop();
+                    }
+                }
+            }
+            Tok::Ident(w) if w == "impl" || w == "trait" => {
+                if let Some((owner, body_open)) = parse_impl_header(toks, i) {
+                    impl_stack.push((depth + 1, owner));
+                    depth += 1;
+                    i = body_open + 1;
+                    continue;
+                }
+            }
+            Tok::Ident(w) if w == "fn" => {
+                if let Some(item) = parse_fn(lx, toks, i, &impl_stack, &out) {
+                    let skip_to = item.body.1;
+                    out.fns.push(item);
+                    // Do NOT skip the body: nested fns/closures stay
+                    // visible, and brace depth must keep counting.
+                    let _ = skip_to;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+fn tok_line(toks: &[super::lexer::Token], i: usize) -> u32 {
+    toks.get(i).map_or(u32::MAX, |t| t.line)
+}
+
+fn ident_at<'a>(toks: &'a [super::lexer::Token], i: usize) -> Option<&'a str> {
+    match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// `#[cfg(test)]` or `#[test]` or `#[cfg_attr(..test..)]`? Only the
+/// first two — `cfg_attr` gating is per-runner, not a test region.
+fn is_test_attr_at(toks: &[super::lexer::Token], i: usize) -> bool {
+    if toks.get(i).map(|t| &t.tok) != Some(&Tok::Punct('#'))
+        || toks.get(i + 1).map(|t| &t.tok) != Some(&Tok::Punct('['))
+    {
+        return false;
+    }
+    match ident_at(toks, i + 2) {
+        Some("test") => toks.get(i + 3).map(|t| &t.tok) == Some(&Tok::Punct(']')),
+        Some("cfg") => {
+            toks.get(i + 3).map(|t| &t.tok) == Some(&Tok::Punct('('))
+                && ident_at(toks, i + 4) == Some("test")
+                && toks.get(i + 5).map(|t| &t.tok) == Some(&Tok::Punct(')'))
+        }
+        _ => false,
+    }
+}
+
+/// Starting at a `#` token, skip consecutive `#[...]` groups; returns
+/// the index just past them.
+fn skip_attrs(toks: &[super::lexer::Token], mut i: usize) -> usize {
+    while toks.get(i).map(|t| &t.tok) == Some(&Tok::Punct('#'))
+        && toks.get(i + 1).map(|t| &t.tok) == Some(&Tok::Punct('['))
+    {
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        while j < toks.len() {
+            match toks[j].tok {
+                Tok::Punct('[') => depth += 1,
+                Tok::Punct(']') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    i
+}
+
+/// Index of the `}` matching the `{` at `open`.
+fn match_brace(toks: &[super::lexer::Token], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < toks.len() {
+        match toks[j].tok {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len() - 1
+}
+
+/// Parse `impl<...> Type {` / `impl Trait for Type {`; returns the
+/// implemented type's name and the index of the body `{`.
+fn parse_impl_header(
+    toks: &[super::lexer::Token],
+    impl_idx: usize,
+) -> Option<(String, usize)> {
+    let mut angle = 0i32;
+    let mut j = impl_idx + 1;
+    let mut first_ident: Option<String> = None;
+    let mut after_for: Option<String> = None;
+    let mut saw_for = false;
+    let mut saw_where = false;
+    let mut prev_dash = false;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('{') if angle == 0 => {
+                let owner = after_for.or(first_ident)?;
+                return Some((owner, j));
+            }
+            Tok::Punct(';') if angle == 0 => return None,
+            Tok::Punct('<') => angle += 1,
+            Tok::Punct('>') => {
+                if prev_dash {
+                    // `->` in a where-clause `Fn() -> T` bound.
+                } else {
+                    angle -= 1;
+                }
+            }
+            Tok::Ident(w) if w == "for" && angle == 0 => saw_for = true,
+            Tok::Ident(w) if w == "where" && angle == 0 => saw_where = true,
+            Tok::Ident(w) => {
+                if angle == 0 && !saw_where {
+                    // Keep the LAST path segment (`state::EngineState`
+                    // -> `EngineState`); a single `:` is a trait bound
+                    // (`trait T: Send`), not a path.
+                    let prev_colon = j > 1
+                        && toks[j - 1].tok == Tok::Punct(':')
+                        && toks[j - 2].tok == Tok::Punct(':');
+                    if saw_for {
+                        if after_for.is_none() || prev_colon {
+                            after_for = Some(w.clone());
+                        }
+                    } else if first_ident.is_none() || prev_colon {
+                        first_ident = Some(w.clone());
+                    }
+                }
+            }
+            _ => {}
+        }
+        prev_dash = toks[j].tok == Tok::Punct('-');
+        j += 1;
+    }
+    None
+}
+
+fn parse_fn(
+    lx: &Lexed,
+    toks: &[super::lexer::Token],
+    fn_idx: usize,
+    impl_stack: &[(i32, String)],
+    so_far: &FileItems,
+) -> Option<FnItem> {
+    let name = ident_at(toks, fn_idx + 1)?.to_string();
+    // Find the body `{` (or bail at `;` — trait method declaration).
+    let mut j = fn_idx + 2;
+    let mut paren = 0i32;
+    let mut angle = 0i32;
+    let mut prev_dash = false;
+    let body_open = loop {
+        match toks.get(j).map(|t| &t.tok)? {
+            Tok::Punct('(') | Tok::Punct('[') => paren += 1,
+            Tok::Punct(')') | Tok::Punct(']') => paren -= 1,
+            Tok::Punct('<') if paren == 0 => angle += 1,
+            Tok::Punct('>') if paren == 0 && !prev_dash => angle -= 1,
+            Tok::Punct('{') if paren == 0 => break j,
+            Tok::Punct(';') if paren == 0 && angle <= 0 => return None,
+            _ => {}
+        }
+        prev_dash = toks[j].tok == Tok::Punct('-');
+        j += 1;
+    };
+    let body_close = match_brace(toks, body_open);
+
+    // Walk back over qualifiers and attributes to the start of the item
+    // header, so annotations directly above it (and above its
+    // attributes / doc comments) attach to this fn.
+    let mut head = fn_idx;
+    loop {
+        if head == 0 {
+            break;
+        }
+        let prev = &toks[head - 1].tok;
+        match prev {
+            Tok::Ident(w) if FN_QUALIFIERS.contains(&w.as_str()) => head -= 1,
+            Tok::Punct(')') => {
+                // `pub(crate)` — walk to the matching `(`.
+                let mut k = head - 1;
+                let mut depth = 0i32;
+                loop {
+                    match toks[k].tok {
+                        Tok::Punct(')') => depth += 1,
+                        Tok::Punct('(') => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    if k == 0 {
+                        break;
+                    }
+                    k -= 1;
+                }
+                // Only part of the header if preceded by `pub`.
+                if k >= 1 && ident_at(toks, k - 1) == Some("pub") {
+                    head = k;
+                } else {
+                    break;
+                }
+            }
+            Tok::Punct(']') => {
+                // An attribute `#[...]` — walk to its `#`.
+                let mut k = head - 1;
+                let mut depth = 0i32;
+                loop {
+                    match toks[k].tok {
+                        Tok::Punct(']') => depth += 1,
+                        Tok::Punct('[') => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    if k == 0 {
+                        break;
+                    }
+                    k -= 1;
+                }
+                if k >= 1 && toks[k - 1].tok == Tok::Punct('#') {
+                    head = k - 1;
+                } else {
+                    break;
+                }
+            }
+            _ => break,
+        }
+    }
+    // Annotations in the line gap between the previous token and the fn
+    // keyword belong to this item.
+    let gap_start = if head == 0 { 0 } else { tok_line(toks, head - 1) };
+    let fn_line = tok_line(toks, fn_idx);
+    let mut alloc_free = false;
+    let mut allows = Vec::new();
+    for ann in &lx.annotations {
+        if ann.line > gap_start && ann.line <= fn_line {
+            match &ann.kind {
+                AnnKind::AllocFree => alloc_free = true,
+                AnnKind::Allow { rule, has_reason: true } => allows.push(rule.clone()),
+                _ => {}
+            }
+        }
+    }
+
+    let owner = impl_stack.last().map(|(_, o)| o.clone());
+    Some(FnItem {
+        name,
+        owner,
+        line: fn_line,
+        body: (body_open, body_close),
+        alloc_free,
+        allows,
+        in_test: so_far.is_test_line(fn_line),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    #[test]
+    fn fns_and_owners() {
+        let src = "
+struct S;
+impl S {
+    pub fn a(&self) -> usize { 1 }
+    fn b() {}
+}
+impl Default for S {
+    fn default() -> S { S }
+}
+fn free() {}
+";
+        let lx = lex(src);
+        let items = build(&lx);
+        let names: Vec<(String, Option<String>)> =
+            items.fns.iter().map(|f| (f.name.clone(), f.owner.clone())).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("a".into(), Some("S".into())),
+                ("b".into(), Some("S".into())),
+                ("default".into(), Some("S".into())),
+                ("free".into(), None),
+            ]
+        );
+    }
+
+    #[test]
+    fn cfg_test_region_detected() {
+        let src = "
+fn live() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { live(); }
+}
+";
+        let lx = lex(src);
+        let items = build(&lx);
+        assert_eq!(items.test_regions.len(), 2, "mod region + inner #[test] fn");
+        let t = items.fns.iter().find(|f| f.name == "t").unwrap();
+        assert!(t.in_test);
+        let live = items.fns.iter().find(|f| f.name == "live").unwrap();
+        assert!(!live.in_test);
+    }
+
+    #[test]
+    fn annotations_attach_through_attrs_and_docs() {
+        let src = "
+// lint: alloc-free
+/// Doc line.
+#[inline]
+pub fn hot() {}
+
+// lint: allow(panic, reason=index bounded)
+fn risky() {}
+
+// lint: allow(panic)
+fn reasonless() {}
+";
+        let lx = lex(src);
+        let items = build(&lx);
+        let hot = items.fns.iter().find(|f| f.name == "hot").unwrap();
+        assert!(hot.alloc_free);
+        let risky = items.fns.iter().find(|f| f.name == "risky").unwrap();
+        assert_eq!(risky.allows, vec!["panic".to_string()]);
+        let r = items.fns.iter().find(|f| f.name == "reasonless").unwrap();
+        assert!(r.allows.is_empty(), "allow without reason must not suppress");
+    }
+
+    #[test]
+    fn trait_decl_without_body_skipped() {
+        let src = "trait T { fn sig(&self) -> usize; fn with_default(&self) -> usize { 0 } }";
+        let lx = lex(src);
+        let items = build(&lx);
+        assert_eq!(items.fns.len(), 1);
+        assert_eq!(items.fns[0].name, "with_default");
+        assert_eq!(items.fns[0].owner, Some("T".into()));
+    }
+
+    #[test]
+    fn enclosing_fn_is_innermost() {
+        let src = "fn outer() { fn inner() { x(); } }";
+        let lx = lex(src);
+        let items = build(&lx);
+        let x_idx = lx
+            .tokens
+            .iter()
+            .position(|t| t.tok == Tok::Ident("x".into()))
+            .unwrap();
+        assert_eq!(items.enclosing_fn(x_idx).unwrap().name, "inner");
+    }
+}

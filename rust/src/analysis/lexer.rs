@@ -1,0 +1,367 @@
+//! Minimal Rust lexer for the in-repo lint (`hygen lint`).
+//!
+//! Produces a line-numbered token stream with comments stripped and
+//! literal *contents* dropped (a string literal becomes one opaque
+//! token), plus every `// lint:` marker comment found in the file. This
+//! is deliberately not a full Rust lexer — it only needs to be exact
+//! about the constructs that could hide or fake a rule match in a plain
+//! text scan: nested block comments, raw/byte strings, escapes, and the
+//! char-literal-vs-lifetime ambiguity of `'`.
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Ordinary string literal, contents preserved (the config-doc rule
+    /// reads knob names out of `j.get("...")` calls).
+    Str(String),
+    /// Any other literal (raw string, char, byte, number); contents
+    /// dropped.
+    Lit,
+    /// A lifetime such as `'a` (kept distinct so `'` handling is exact).
+    Lifetime,
+    /// Single punctuation character.
+    Punct(char),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// 1-based source line.
+    pub line: u32,
+    pub tok: Tok,
+}
+
+/// One `// lint: ...` marker comment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Annotation {
+    pub line: u32,
+    pub kind: AnnKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnnKind {
+    /// `// lint: alloc-free` — marks the next `fn` as a root of the
+    /// alloc-free rule's transitive check.
+    AllocFree,
+    /// `// lint: allow(<rule>, reason=...)`. `has_reason` records
+    /// whether a non-empty reason was given; an allow without one does
+    /// not suppress anything and is itself reported.
+    Allow { rule: String, has_reason: bool },
+    /// Unparseable `// lint:` comment — reported as a violation so a
+    /// typo cannot silently disable a rule.
+    Malformed(String),
+}
+
+/// Lexer output for one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    /// `// lint:` annotations in line order.
+    pub annotations: Vec<Annotation>,
+}
+
+/// Lex one file. Never fails: unterminated constructs simply consume
+/// the rest of the input (rustc will reject such a file anyway).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut out = Lexed::default();
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ if c.is_ascii_whitespace() => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                // `// lint: ...` (doc comments `///` never match: the
+                // char after `//` must not be `/` or `!`).
+                let body = &text[2..];
+                if !body.starts_with('/') && !body.starts_with('!') {
+                    if let Some(rest) = body.trim_start().strip_prefix("lint:") {
+                        out.annotations
+                            .push(Annotation { line, kind: parse_annotation(rest.trim()) });
+                    }
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                i += 2;
+                let mut depth = 1u32;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let text = skip_string(b, &mut i, &mut line);
+                out.tokens.push(Token { line, tok: Tok::Str(text) });
+            }
+            b'\'' => {
+                let next = b.get(i + 1).copied().unwrap_or(0);
+                let lifetime = (next.is_ascii_alphabetic() || next == b'_')
+                    && b.get(i + 2) != Some(&b'\'');
+                if lifetime {
+                    i += 1;
+                    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                        i += 1;
+                    }
+                    out.tokens.push(Token { line, tok: Tok::Lifetime });
+                } else {
+                    // Char literal: 'a', '\n', '\u{1F600}', or a
+                    // multi-byte UTF-8 scalar.
+                    i += 1;
+                    if b.get(i) == Some(&b'\\') {
+                        i += 2; // skip the escape lead + escaped char
+                    }
+                    while i < b.len() && b[i] != b'\'' {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                    i += 1; // closing quote
+                    out.tokens.push(Token { line, tok: Tok::Lit });
+                }
+            }
+            _ if c.is_ascii_digit() => {
+                i += 1;
+                loop {
+                    if i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                        i += 1;
+                    } else if b.get(i) == Some(&b'.')
+                        && b.get(i + 1).is_some_and(u8::is_ascii_digit)
+                    {
+                        i += 2;
+                    } else {
+                        break;
+                    }
+                }
+                out.tokens.push(Token { line, tok: Tok::Lit });
+            }
+            _ if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                let word = &src[start..i];
+                // Raw / byte string prefixes lex as an ident glued to
+                // the opening quote: r"..", r#".."#, b"..", br#".."#,
+                // b'x'.
+                match word {
+                    "r" | "br" if matches!(b.get(i), Some(&b'"') | Some(&b'#')) => {
+                        let mut hashes = 0usize;
+                        let mut j = i;
+                        while b.get(j) == Some(&b'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if b.get(j) == Some(&b'"') {
+                            i = j + 1;
+                            skip_raw_string(b, &mut i, &mut line, hashes);
+                            out.tokens.push(Token { line, tok: Tok::Lit });
+                        } else {
+                            // `r#ident` raw identifier or stray `#`.
+                            out.tokens.push(Token { line, tok: Tok::Ident(word.to_string()) });
+                        }
+                    }
+                    "b" if b.get(i) == Some(&b'"') => {
+                        skip_string(b, &mut i, &mut line);
+                        out.tokens.push(Token { line, tok: Tok::Lit });
+                    }
+                    _ => out.tokens.push(Token { line, tok: Tok::Ident(word.to_string()) }),
+                }
+            }
+            _ => {
+                // Multi-byte UTF-8 in code position only appears inside
+                // literals/comments, all handled above; treat any other
+                // byte as punctuation.
+                out.tokens.push(Token { line, tok: Tok::Punct(c as char) });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Skip a `"`-delimited string starting at `b[*i]` (the opening quote or
+/// just before the contents when called for `b"`), returning its
+/// contents with escape sequences left raw.
+fn skip_string(b: &[u8], i: &mut usize, line: &mut u32) -> String {
+    debug_assert_eq!(b[*i], b'"');
+    *i += 1;
+    let start = *i;
+    let mut end = *i;
+    while *i < b.len() {
+        match b[*i] {
+            b'\\' => {
+                if b.get(*i + 1) == Some(&b'\n') {
+                    *line += 1;
+                }
+                *i += 2;
+            }
+            b'"' => {
+                end = *i;
+                *i += 1;
+                break;
+            }
+            b'\n' => {
+                *line += 1;
+                *i += 1;
+            }
+            _ => *i += 1,
+        }
+        end = *i;
+    }
+    String::from_utf8_lossy(&b[start..end.min(b.len())]).into_owned()
+}
+
+/// Skip a raw string body; `*i` points just past the opening `"`.
+fn skip_raw_string(b: &[u8], i: &mut usize, line: &mut u32, hashes: usize) {
+    while *i < b.len() {
+        if b[*i] == b'\n' {
+            *line += 1;
+            *i += 1;
+            continue;
+        }
+        if b[*i] == b'"' {
+            let mut k = 0usize;
+            while k < hashes && b.get(*i + 1 + k) == Some(&b'#') {
+                k += 1;
+            }
+            if k == hashes {
+                *i += 1 + hashes;
+                return;
+            }
+        }
+        *i += 1;
+    }
+}
+
+fn parse_annotation(text: &str) -> AnnKind {
+    if text == "alloc-free" {
+        return AnnKind::AllocFree;
+    }
+    if let Some(open) = text.strip_prefix("allow(") {
+        if let Some(close) = open.rfind(')') {
+            let inner = &open[..close];
+            let (rule, rest) = match inner.split_once(',') {
+                Some((r, rest)) => (r.trim(), rest.trim()),
+                None => (inner.trim(), ""),
+            };
+            let has_reason =
+                rest.strip_prefix("reason=").is_some_and(|r| !r.trim().is_empty());
+            if !rule.is_empty() && rule.chars().all(|c| c.is_ascii_alphanumeric() || c == '-') {
+                return AnnKind::Allow { rule: rule.to_string(), has_reason };
+            }
+        }
+    }
+    AnnKind::Malformed(text.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_tokens() {
+        let src = r##"
+            // Instant::now in a comment
+            /* HashMap /* nested */ still comment */
+            let s = "Instant::now inside a string";
+            let r = r#"unwrap() in a raw string"#;
+            let c = '"'; // a quote char must not open a string
+            let real = foo();
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|s| s == "Instant" || s == "HashMap" || s == "unwrap"));
+        assert!(ids.iter().any(|s| s == "real"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { let c = 'x'; x }";
+        let lx = lex(src);
+        let lifetimes = lx.tokens.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let lits = lx.tokens.iter().filter(|t| t.tok == Tok::Lit).count();
+        assert_eq!(lifetimes, 3);
+        assert_eq!(lits, 1);
+    }
+
+    #[test]
+    fn string_contents_kept_for_config_rule() {
+        let lx = lex(r#"j.get("latency_budget_ms")"#);
+        assert!(lx
+            .tokens
+            .iter()
+            .any(|t| t.tok == Tok::Str("latency_budget_ms".to_string())));
+    }
+
+    #[test]
+    fn annotations_parse() {
+        let src = "\n// lint: alloc-free\nfn f() {}\n\
+                   x(); // lint: allow(panic, reason=bounded by registry)\n\
+                   // lint: allow(panic)\n\
+                   // lint: allwo(panic, reason=typo)\n";
+        let lx = lex(src);
+        assert_eq!(lx.annotations.len(), 4);
+        assert_eq!(lx.annotations[0].kind, AnnKind::AllocFree);
+        assert_eq!(lx.annotations[0].line, 2);
+        assert_eq!(
+            lx.annotations[1].kind,
+            AnnKind::Allow { rule: "panic".into(), has_reason: true }
+        );
+        assert_eq!(
+            lx.annotations[2].kind,
+            AnnKind::Allow { rule: "panic".into(), has_reason: false }
+        );
+        assert!(matches!(lx.annotations[3].kind, AnnKind::Malformed(_)));
+    }
+
+    #[test]
+    fn doc_comments_are_not_annotations() {
+        let lx = lex("/// lint: alloc-free\n//! lint: alloc-free\nfn f() {}\n");
+        assert!(lx.annotations.is_empty());
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "let a = \"two\nlines\";\n/* one\ntwo */\nlet b = 1;";
+        let lx = lex(src);
+        let b_line = lx
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("b".into()))
+            .map(|t| t.line)
+            .unwrap();
+        assert_eq!(b_line, 5);
+    }
+}

@@ -1,0 +1,169 @@
+//! `hygen lint` — an in-repo, dependency-free static-analysis pass over
+//! the crate's own sources, enforcing at the source level the invariants
+//! the runtime gates (byte-identical CSVs at any `-j`, the
+//! `CountingAlloc` zero-steady-alloc probe, the conservation ledgers)
+//! can only observe after the fact:
+//!
+//! * **determinism** — no `HashMap`/`HashSet` iteration in modules that
+//!   feed batches, snapshots, or CSVs; no `Instant::now`/`SystemTime`
+//!   outside allowlisted timing modules; no unseeded RNG anywhere
+//!   (rules `map-iter`, `wallclock`, `rng`);
+//! * **alloc-free** — functions annotated `// lint: alloc-free` must not
+//!   reach an allocating construct transitively within the crate
+//!   (rule `alloc`);
+//! * **panic-free** — no `unwrap()`/`expect()`/`panic!`/indexing in the
+//!   scheduler/engine/cluster hot paths except via a justified
+//!   annotation (rule `panic`);
+//! * **config-doc coverage** — every flat-JSON knob parsed in
+//!   `config/mod.rs` is documented, and every knob the docs list is
+//!   actually parsed (rule `config-doc`).
+//!
+//! Violations are suppressed only by `// lint: allow(<rule>,
+//! reason=...)` on the same or preceding line, or directly above the
+//! enclosing `fn`. An allow without a reason suppresses nothing and is
+//! itself reported, as is any malformed `// lint:` comment (rule
+//! `annotation`). `#[cfg(test)]` regions are exempt from every rule.
+//!
+//! See DESIGN.md §"Enforced invariants" for the rule catalog and how to
+//! add a rule.
+
+pub mod config;
+pub mod items;
+pub mod lexer;
+
+mod alloc;
+mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint violation, rendered as `file:line: rule(<name>): message`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    /// Repo-relative path (`rust/src/...`, `README.md`).
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: rule({}): {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One lexed + item-parsed source file.
+pub struct SourceFile {
+    /// Path relative to the scanned source root, forward slashes
+    /// (`coordinator/scheduler.rs`).
+    pub rel: String,
+    /// `rel` with the on-disk prefix, as shown in diagnostics
+    /// (`rust/src/coordinator/scheduler.rs`).
+    pub display: String,
+    pub lexed: lexer::Lexed,
+    pub items: items::FileItems,
+}
+
+impl SourceFile {
+    /// Is the violation of `rule` at token `tok_idx` (line `line`)
+    /// suppressed by an annotation?
+    pub fn allowed(&self, rule: &str, line: u32, tok_idx: usize) -> bool {
+        let line_ok = self.lexed.annotations.iter().any(|a| {
+            matches!(&a.kind, lexer::AnnKind::Allow { rule: r, has_reason: true }
+                if r == rule && (a.line == line || a.line + 1 == line))
+        });
+        line_ok
+            || self
+                .items
+                .enclosing_fn(tok_idx)
+                .is_some_and(|f| f.allows.iter().any(|r| r == rule))
+    }
+}
+
+/// Result of one lint run.
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Lint the repository at `repo_root` (the directory holding
+/// `rust/src/`, README.md, and DESIGN.md).
+pub fn lint_repo(repo_root: &Path) -> anyhow::Result<LintReport> {
+    lint_tree(&repo_root.join("rust").join("src"), Some(repo_root), "rust/src/")
+}
+
+/// Lint an arbitrary source tree (used by the fixture tests).
+/// `docs_root` enables the config-doc rule; `display_prefix` is
+/// prepended to relative paths in diagnostics.
+pub fn lint_tree(
+    src_root: &Path,
+    docs_root: Option<&Path>,
+    display_prefix: &str,
+) -> anyhow::Result<LintReport> {
+    let mut paths: Vec<(String, PathBuf)> = Vec::new();
+    walk(src_root, src_root, &mut paths)?;
+    paths.sort();
+    let sources: Vec<SourceFile> = paths
+        .into_iter()
+        .map(|(rel, path)| -> anyhow::Result<SourceFile> {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+            let lexed = lexer::lex(&text);
+            let items = items::build(&lexed);
+            let display = format!("{display_prefix}{rel}");
+            Ok(SourceFile { rel, display, lexed, items })
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut diags = Vec::new();
+    for sf in &sources {
+        rules::check_file(sf, &mut diags);
+    }
+    alloc::check(&sources, &mut diags);
+    if let Some(root) = docs_root {
+        rules::check_config_doc(&sources, root, &mut diags);
+    }
+    diags.sort();
+    diags.dedup();
+    Ok(LintReport { diagnostics: diags, files_scanned: sources.len() })
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, PathBuf)>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+/// Locate the repo root from an arbitrary working directory: the first
+/// of `.`, `..`, `../..` containing `rust/src`.
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    for _ in 0..3 {
+        if dir.join("rust").join("src").is_dir() {
+            return Some(dir);
+        }
+        dir = dir.join("..");
+    }
+    None
+}

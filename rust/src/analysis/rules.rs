@@ -1,0 +1,449 @@
+//! Per-file rule engines: annotation hygiene, wallclock, unseeded RNG,
+//! map iteration, panic-freedom, and config-doc coverage.
+
+use std::path::Path;
+
+use super::config::{
+    path_in, MAP_ITER_METHODS, MAP_ITER_SCOPE, PANIC_SCOPE, UNSEEDED_RNG_IDENTS,
+    WALLCLOCK_ALLOWED,
+};
+use super::lexer::{AnnKind, Tok, Token};
+use super::{Diagnostic, SourceFile};
+
+/// Words that may legally precede `[` without it being an index
+/// expression (slice patterns, array types after casts, ...).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "let", "in", "return", "if", "else", "match", "mut", "ref", "move", "as", "break",
+    "continue", "use", "where", "for", "while", "loop", "impl", "fn", "struct", "enum",
+    "type", "trait", "mod", "unsafe", "dyn", "static", "const", "pub", "crate", "super",
+    "yield", "await", "box",
+];
+
+fn ident<'a>(toks: &'a [Token], i: usize) -> Option<&'a str> {
+    match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn punct(toks: &[Token], i: usize, c: char) -> bool {
+    toks.get(i).map(|t| &t.tok) == Some(&Tok::Punct(c))
+}
+
+pub fn check_file(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    check_annotations(sf, out);
+    if !path_in(&sf.rel, WALLCLOCK_ALLOWED) {
+        check_wallclock(sf, out);
+    }
+    check_rng(sf, out);
+    if path_in(&sf.rel, MAP_ITER_SCOPE) {
+        check_map_iter(sf, out);
+    }
+    if path_in(&sf.rel, PANIC_SCOPE) {
+        check_panic(sf, out);
+    }
+}
+
+/// Malformed `// lint:` comments and reason-less allows are violations:
+/// a typo must not silently disable a rule.
+fn check_annotations(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    for a in &sf.lexed.annotations {
+        match &a.kind {
+            AnnKind::Malformed(text) => out.push(Diagnostic {
+                file: sf.display.clone(),
+                line: a.line,
+                rule: "annotation",
+                msg: format!(
+                    "malformed lint annotation `lint: {text}`; expected `alloc-free` or \
+                     `allow(<rule>, reason=...)`"
+                ),
+            }),
+            AnnKind::Allow { rule, has_reason: false } => out.push(Diagnostic {
+                file: sf.display.clone(),
+                line: a.line,
+                rule: "annotation",
+                msg: format!(
+                    "`allow({rule})` without a reason suppresses nothing; write \
+                     `allow({rule}, reason=...)`"
+                ),
+            }),
+            _ => {}
+        }
+    }
+}
+
+fn check_wallclock(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    let toks = &sf.lexed.tokens;
+    for i in 0..toks.len() {
+        let hit = match ident(toks, i) {
+            Some("Instant") => {
+                punct(toks, i + 1, ':')
+                    && punct(toks, i + 2, ':')
+                    && ident(toks, i + 3) == Some("now")
+            }
+            Some("SystemTime") => true,
+            _ => false,
+        };
+        if !hit {
+            continue;
+        }
+        let line = toks[i].line;
+        if sf.items.is_test_line(line) || sf.allowed("wallclock", line, i) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: sf.display.clone(),
+            line,
+            rule: "wallclock",
+            msg: "wallclock read outside an allowlisted timing module breaks seeded \
+                  reproducibility; use the virtual clock or annotate the measured t0 site"
+                .to_string(),
+        });
+    }
+}
+
+fn check_rng(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    let toks = &sf.lexed.tokens;
+    for i in 0..toks.len() {
+        let Some(w) = ident(toks, i) else { continue };
+        if !UNSEEDED_RNG_IDENTS.contains(&w) {
+            continue;
+        }
+        let line = toks[i].line;
+        if sf.items.is_test_line(line) || sf.allowed("rng", line, i) {
+            continue;
+        }
+        out.push(Diagnostic {
+            file: sf.display.clone(),
+            line,
+            rule: "rng",
+            msg: format!("unseeded randomness (`{w}`); use the seeded xoshiro in util/rng.rs"),
+        });
+    }
+}
+
+/// Names in this file declared with a `HashMap`/`HashSet` type
+/// (`name: HashMap<..>` in fields, params, or let bindings).
+fn map_typed_names(toks: &[Token]) -> Vec<String> {
+    let mut names = Vec::new();
+    for i in 0..toks.len() {
+        let Some(name) = ident(toks, i) else { continue };
+        // `name :` but not `name ::`
+        if !punct(toks, i + 1, ':') || punct(toks, i + 2, ':') {
+            continue;
+        }
+        let mut j = i + 2;
+        let mut steps = 0;
+        while steps < 8 {
+            match toks.get(j).map(|t| &t.tok) {
+                Some(Tok::Ident(w)) if w == "HashMap" || w == "HashSet" => {
+                    names.push(name.to_string());
+                    break;
+                }
+                Some(Tok::Ident(_)) | Some(Tok::Punct(':')) | Some(Tok::Punct('&')) => {
+                    j += 1;
+                    steps += 1;
+                }
+                _ => break,
+            }
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
+fn check_map_iter(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    let toks = &sf.lexed.tokens;
+    let maps = map_typed_names(toks);
+    if maps.is_empty() {
+        return;
+    }
+    let is_map = |w: &str| maps.iter().any(|m| m == w);
+    let mut flag = |i: usize, name: &str, how: &str, out: &mut Vec<Diagnostic>| {
+        let line = toks[i].line;
+        if sf.items.is_test_line(line) || sf.allowed("map-iter", line, i) {
+            return;
+        }
+        out.push(Diagnostic {
+            file: sf.display.clone(),
+            line,
+            rule: "map-iter",
+            msg: format!(
+                "iteration over hash-ordered `{name}` ({how}) feeds batches/snapshots/CSVs \
+                 in nondeterministic order; use a BTreeMap/slab or sort first"
+            ),
+        });
+    };
+    for i in 0..toks.len() {
+        // `name.iter()` / `.keys()` / ...
+        if let Some(name) = ident(toks, i) {
+            if is_map(name) && punct(toks, i + 1, '.') {
+                if let Some(m) = ident(toks, i + 2) {
+                    if MAP_ITER_METHODS.contains(&m) && punct(toks, i + 3, '(') {
+                        flag(i + 2, name, &format!(".{m}()"), out);
+                    }
+                }
+            }
+        }
+        // `for x in &name {` / `for x in name {`
+        if ident(toks, i) == Some("in") {
+            let mut last: Option<(usize, &str)> = None;
+            let mut j = i + 1;
+            let mut steps = 0;
+            while steps < 8 {
+                match toks.get(j).map(|t| &t.tok) {
+                    Some(Tok::Punct('{')) => {
+                        if let Some((k, name)) = last {
+                            if is_map(name) {
+                                flag(k, name, "for-in", out);
+                            }
+                        }
+                        break;
+                    }
+                    Some(Tok::Ident(w)) if w != "mut" => last = Some((j, w.as_str())),
+                    Some(Tok::Punct('&')) | Some(Tok::Punct('.')) | Some(Tok::Ident(_)) => {}
+                    _ => break,
+                }
+                j += 1;
+                steps += 1;
+            }
+        }
+    }
+}
+
+fn check_panic(sf: &SourceFile, out: &mut Vec<Diagnostic>) {
+    let toks = &sf.lexed.tokens;
+    let mut flag = |i: usize, msg: String, out: &mut Vec<Diagnostic>| {
+        let line = toks[i].line;
+        if sf.items.is_test_line(line) || sf.allowed("panic", line, i) {
+            return;
+        }
+        out.push(Diagnostic { file: sf.display.clone(), line, rule: "panic", msg });
+    };
+    for i in 0..toks.len() {
+        match &toks[i].tok {
+            Tok::Punct('.') => {
+                if let Some(m) = ident(toks, i + 1) {
+                    if (m == "unwrap" || m == "expect") && punct(toks, i + 2, '(') {
+                        flag(
+                            i + 1,
+                            format!(
+                                "`.{m}()` in a hot path can kill a serving loop; return a \
+                                 typed error, log to the anomalies ledger, or annotate"
+                            ),
+                            out,
+                        );
+                    }
+                }
+            }
+            Tok::Ident(w)
+                if (w == "panic"
+                    || w == "unreachable"
+                    || w == "todo"
+                    || w == "unimplemented")
+                    && punct(toks, i + 1, '!') =>
+            {
+                flag(i, format!("`{w}!` in a hot path"), out);
+            }
+            Tok::Punct('[') if i > 0 => {
+                let indexy = match &toks[i - 1].tok {
+                    Tok::Ident(w) => !NON_INDEX_KEYWORDS.contains(&w.as_str()),
+                    Tok::Punct(')') | Tok::Punct(']') => true,
+                    _ => false,
+                };
+                if indexy {
+                    flag(
+                        i,
+                        "indexing can panic on out-of-range input; use `.get()` or \
+                         annotate the invariant that bounds it"
+                            .to_string(),
+                        out,
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Config-doc coverage: every flat-JSON knob parsed in `config/mod.rs`
+/// must be documented (as `` `key` ``) in README.md or DESIGN.md, and
+/// every knob listed in a doc's `<!-- lint: config-keys -->` region
+/// must be parsed.
+pub fn check_config_doc(sources: &[SourceFile], repo_root: &Path, out: &mut Vec<Diagnostic>) {
+    let Some(cfg) = sources.iter().find(|s| s.rel == "config/mod.rs") else { return };
+    let toks = &cfg.lexed.tokens;
+    let mut parsed: Vec<(String, u32)> = Vec::new();
+    for i in 0..toks.len() {
+        let Some(w) = ident(toks, i) else { continue };
+        if (w == "get" || w == "num_field" || w == "int_field") && punct(toks, i + 1, '(') {
+            if let Some(Tok::Str(key)) = toks.get(i + 2).map(|t| &t.tok) {
+                if !key.is_empty()
+                    && !cfg.items.is_test_line(toks[i].line)
+                    && !parsed.iter().any(|(k, _)| k == key)
+                {
+                    parsed.push((key.clone(), toks[i].line));
+                }
+            }
+        }
+    }
+
+    let readme = std::fs::read_to_string(repo_root.join("README.md")).unwrap_or_default();
+    let design = std::fs::read_to_string(repo_root.join("DESIGN.md")).unwrap_or_default();
+    for (key, line) in &parsed {
+        let tick = format!("`{key}`");
+        if !readme.contains(&tick) && !design.contains(&tick) {
+            out.push(Diagnostic {
+                file: cfg.display.clone(),
+                line: *line,
+                rule: "config-doc",
+                msg: format!(
+                    "config knob \"{key}\" is parsed here but documented in neither \
+                     README.md nor DESIGN.md"
+                ),
+            });
+        }
+    }
+
+    for (name, text) in [("README.md", readme.as_str()), ("DESIGN.md", design.as_str())] {
+        let mut in_region = false;
+        for (idx, line) in text.lines().enumerate() {
+            if line.contains("<!-- lint: config-keys -->") {
+                in_region = true;
+                continue;
+            }
+            if line.contains("<!-- lint: end-config-keys -->") {
+                in_region = false;
+                continue;
+            }
+            if !in_region {
+                continue;
+            }
+            let mut parts = line.split('`');
+            let (Some(_), Some(key)) = (parts.next(), parts.next()) else { continue };
+            let valid_key = !key.is_empty()
+                && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_');
+            if valid_key && !parsed.iter().any(|(k, _)| k == key) {
+                out.push(Diagnostic {
+                    file: name.to_string(),
+                    line: idx as u32 + 1,
+                    rule: "config-doc",
+                    msg: format!(
+                        "doc lists config knob \"{key}\" but rust/src/config/mod.rs does \
+                         not parse it"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::items;
+    use super::super::lexer;
+    use super::*;
+
+    fn file(rel: &str, src: &str) -> SourceFile {
+        let lexed = lexer::lex(src);
+        let items = items::build(&lexed);
+        SourceFile { rel: rel.to_string(), display: rel.to_string(), lexed, items }
+    }
+
+    fn run(rel: &str, src: &str) -> Vec<Diagnostic> {
+        let sf = file(rel, src);
+        let mut out = Vec::new();
+        check_file(&sf, &mut out);
+        out
+    }
+
+    #[test]
+    fn wallclock_flagged_outside_allowlist() {
+        let src = "fn f() { let t0 = std::time::Instant::now(); }";
+        let d = run("coordinator/foo.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "wallclock");
+        assert!(run("server/mod.rs", src).is_empty(), "allowlisted module");
+        let annotated = "fn f() {\n\
+             let t0 = std::time::Instant::now(); // lint: allow(wallclock, reason=bench t0)\n}";
+        assert!(run("coordinator/foo.rs", annotated).is_empty());
+    }
+
+    #[test]
+    fn map_iteration_flagged_in_scope() {
+        let src = "
+struct S { reqs: HashMap<u64, u32> }
+impl S {
+    fn ids(&self) -> Vec<u64> { self.reqs.keys().copied().collect() }
+    fn ok(&self) -> Option<&u32> { self.reqs.get(&1) }
+}
+fn g(m: &HashMap<u64, u32>) { for (_k, _v) in m { } }
+";
+        let d = run("coordinator/foo.rs", src);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == "map-iter"));
+        assert!(run("util/foo.rs", src).is_empty(), "outside the scope");
+    }
+
+    #[test]
+    fn panic_constructs_flagged_in_hot_files() {
+        let src = "
+fn f(v: &[u32], i: usize) -> u32 {
+    let a = v.get(i).unwrap();
+    let b = v[i];
+    if i > 100 { panic!(\"too big\") }
+    *a + b
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { super::f(&[1], 0); assert_eq!((&[1u32])[0], 1); }
+}
+";
+        let d = run("coordinator/state.rs", src);
+        assert_eq!(d.len(), 3, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == "panic"));
+        assert!(run("coordinator/queues.rs", src).is_empty(), "not a panic-scope file");
+    }
+
+    #[test]
+    fn fn_level_allow_suppresses() {
+        let src = "
+// lint: allow(panic, reason=index bounded by registry validation)
+fn f(v: &[u32]) -> u32 { v[0] }
+";
+        assert!(run("coordinator/state.rs", src).is_empty());
+    }
+
+    #[test]
+    fn reasonless_allow_reported_and_ignored() {
+        let src = "
+// lint: allow(panic)
+fn f(v: &[u32]) -> u32 { v[0] }
+";
+        let d = run("coordinator/state.rs", src);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().any(|x| x.rule == "annotation"));
+        assert!(d.iter().any(|x| x.rule == "panic"));
+    }
+
+    #[test]
+    fn slice_patterns_and_types_not_flagged() {
+        let src = "
+fn f(v: &[u32; 4]) -> [u32; 2] {
+    let [a, b, ..] = v;
+    let arr = [*a, *b];
+    arr
+}
+";
+        assert!(run("coordinator/state.rs", src).is_empty());
+    }
+
+    #[test]
+    fn rng_flagged_everywhere() {
+        let d = run("util/foo.rs", "fn f() { let r = thread_rng(); }");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "rng");
+    }
+}

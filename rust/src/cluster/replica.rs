@@ -20,14 +20,23 @@ use crate::coordinator::classes::MAX_CLASSES;
 use crate::coordinator::request::{Class, Request, RequestId};
 use crate::engine::{Engine, ExecutionBackend};
 use crate::runtime::tokenizer;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 /// How often the replica thread refreshes its published metrics report.
 pub const PUBLISH_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Lock a published-state mutex, recovering from poison. Both values
+/// behind these mutexes (a JSON string, a plain-old-data snapshot) are
+/// written atomically by single assignments, so a panic mid-write cannot
+/// leave them torn — the last fully published value is always safe to
+/// read, and a poisoned replica must not take the front end down with it.
+fn lock_published<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// A submission travelling from a connection handler to a replica thread.
 pub struct Job {
@@ -101,8 +110,9 @@ pub struct ReplicaShared {
 impl ReplicaShared {
     /// The published snapshot plus the not-yet-ingested job counts — the
     /// router's view of this replica.
+    // lint: allow(panic, reason=loop index ranges over the fixed-size census arrays)
     pub fn routing_snapshot(&self) -> ReplicaSnapshot {
-        let mut s = *self.snapshot.lock().unwrap();
+        let mut s = *lock_published(&self.snapshot);
         // Saturating: a submitter that skips the counters (tests driving
         // a replica directly) must not underflow the estimates.
         for i in 0..MAX_CLASSES {
@@ -116,10 +126,12 @@ impl ReplicaShared {
     }
 
     /// Record a job heading toward this replica (call before sending).
+    // lint: allow(panic, reason=index clamped to MAX_CLASSES - 1)
     pub fn note_submitted(&self, class: Class) {
         self.submitted[class.index().min(MAX_CLASSES - 1)].fetch_add(1, Ordering::Relaxed);
     }
 
+    // lint: allow(panic, reason=index clamped to MAX_CLASSES - 1)
     fn note_ingested(&self, class: Class) {
         self.ingested[class.index().min(MAX_CLASSES - 1)].fetch_add(1, Ordering::Relaxed);
     }
@@ -224,7 +236,9 @@ fn engine_loop_impl<B: ExecutionBackend>(
 ) -> LoopExit {
     let start = Instant::now();
     type Reply = Sender<Result<Completion, JobError>>;
-    let mut inflight: HashMap<RequestId, (Reply, Instant)> = HashMap::new();
+    // BTreeMap so drain-failure replies go out in request-id order —
+    // replica-visible behavior stays independent of hash seeding.
+    let mut inflight: BTreeMap<RequestId, (Reply, Instant)> = BTreeMap::new();
     engine.state.keep_finished = true;
     let mut last_publish = Instant::now();
     let mut drain_deadline: Option<Instant> = None;
@@ -266,13 +280,13 @@ fn engine_loop_impl<B: ExecutionBackend>(
         // ingested, or the submitted/ingested in-channel delta drops to
         // zero while the published depth still shows the pre-burst state
         // — exactly the misrouting window the counters exist to close.
-        *shared.snapshot.lock().unwrap() = ReplicaSnapshot::of(&engine);
+        *lock_published(&shared.snapshot) = ReplicaSnapshot::of(&engine);
         if let Some(deadline) = drain_deadline {
             if inflight.is_empty() {
                 break; // drained: every accepted request was answered
             }
             if Instant::now() >= deadline {
-                for (_, (reply, _)) in inflight.drain() {
+                for (_, (reply, _)) in std::mem::take(&mut inflight) {
                     let _ = reply.send(Err(JobError::DrainTimeout));
                 }
                 break;
@@ -289,7 +303,7 @@ fn engine_loop_impl<B: ExecutionBackend>(
                     // re-schedules the same doomed batch every loop — a
                     // 100% CPU livelock with no reply channels left to
                     // observe it.
-                    for (_, (reply, _)) in inflight.drain() {
+                    for (_, (reply, _)) in std::mem::take(&mut inflight) {
                         let _ = reply.send(Err(JobError::BackendFailed));
                     }
                     engine.abort_all();
@@ -297,9 +311,9 @@ fn engine_loop_impl<B: ExecutionBackend>(
                     if exit_on_failure {
                         // Publish the post-abort state, then hand the
                         // channel back to the supervisor.
-                        *shared.snapshot.lock().unwrap() = ReplicaSnapshot::of(&engine);
+                        *lock_published(&shared.snapshot) = ReplicaSnapshot::of(&engine);
                         let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
-                        *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
+                        *lock_published(&shared.metrics_json) = report.to_json().to_pretty();
                         return LoopExit::Failed;
                     }
                 }
@@ -328,7 +342,7 @@ fn engine_loop_impl<B: ExecutionBackend>(
         }
         if last_publish.elapsed() > PUBLISH_INTERVAL {
             let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
-            *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
+            *lock_published(&shared.metrics_json) = report.to_json().to_pretty();
             last_publish = Instant::now();
         }
     }
@@ -341,7 +355,7 @@ fn engine_loop_impl<B: ExecutionBackend>(
     // Final publish so a post-shutdown `/metrics` scrape (or a test)
     // observes the drained state.
     let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
-    *shared.metrics_json.lock().unwrap() = report.to_json().to_pretty();
+    *lock_published(&shared.metrics_json) = report.to_json().to_pretty();
     LoopExit::Stopped
 }
 

@@ -132,6 +132,7 @@ impl BlockManager {
     /// block, in order). Returns the number of tokens satisfied from cache
     /// (the prefill work saved), or `None` if memory is insufficient —
     /// in which case nothing is allocated.
+    // lint: allow(alloc, reason=admission/resume path only; steady decode grows in place)
     pub fn allocate(
         &mut self,
         id: RequestId,

@@ -299,6 +299,7 @@ impl Metrics {
     /// `n` output tokens became visible at time `t` (a decode step yields
     /// 1; the final prefill chunk yields the first token). Tokens for
     /// unknown or already-finished ids are ignored.
+    // lint: alloc-free
     pub fn on_tokens(&mut self, id: RequestId, t: f64, n: usize) {
         let Some(slot) = self.slots.get_mut(id as usize) else { return };
         if !slot.occupied || slot.finished {
@@ -322,6 +323,7 @@ impl Metrics {
     /// Request completed at time `t`. Double-finish and unknown ids are
     /// ignored (the slot stays in the slab, marked finished, so late
     /// token events for the id are dropped rather than miscounted).
+    // lint: alloc-free
     pub fn on_finish(&mut self, id: RequestId, t: f64) {
         let Some(slot) = self.slots.get_mut(id as usize) else { return };
         if !slot.occupied || slot.finished {

@@ -362,6 +362,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wallclock timing is meaningless under the interpreter
     fn training_is_fast_enough() {
         // Paper: ~15 ms for 80k samples on CPU. Sanity-check the same order.
         let train = synth_samples(80_000, 9, 0.01);

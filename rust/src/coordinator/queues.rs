@@ -192,9 +192,15 @@ impl OfflineQueue {
         self.reqs.contains_key(&id)
     }
 
-    /// Ids of all waiting requests, in storage (not policy) order.
+    /// Ids of all waiting requests, in ascending id order. Sorting makes
+    /// the output independent of `HashMap` iteration order — callers are
+    /// invariant checks and debug dumps, so the allocation is off the
+    /// hot path and determinism is what matters.
     pub fn ids(&self) -> impl Iterator<Item = RequestId> + '_ {
-        self.reqs.keys().copied()
+        // lint: allow(map-iter, reason=hash order is erased by the sort below)
+        let mut ids: Vec<RequestId> = self.reqs.keys().copied().collect();
+        ids.sort_unstable();
+        ids.into_iter()
     }
 
     /// Drop every waiting request (server abort path).

@@ -39,7 +39,7 @@
 //! [`SchedulerConfig`] and `baselines/`.
 
 use super::batch::{Batch, BatchEntry, Features};
-use super::classes::{AdmissionPolicy, ClassRegistry, MAX_CLASSES};
+use super::classes::{AdmissionPolicy, ClassRegistry};
 use super::predictor::LatencyPredictor;
 use super::request::{Class, Phase, RequestId};
 use super::state::EngineState;
@@ -213,7 +213,7 @@ impl HybridScheduler {
     ) -> Vec<RequestId> {
         let mut ids = std::mem::take(&mut self.scratch);
         ids.clear();
-        ids.extend(state.running(class).iter().filter(|&id| state.requests[&id].phase == phase));
+        ids.extend(state.running(class).iter().filter(|&id| state.req(id).phase == phase));
         ids
     }
 
@@ -223,6 +223,7 @@ impl HybridScheduler {
     /// scratch) is warm. Mutates `state`: admissions move queue requests
     /// into the running sets (with block allocation), and memory pressure
     /// may preempt lower-tier requests.
+    // lint: alloc-free
     pub fn schedule(&mut self, state: &mut EngineState, now: f64, out: &mut Batch) {
         out.clear();
         let mut stats = ScheduleStats::default();
@@ -240,13 +241,15 @@ impl HybridScheduler {
         let registry = Arc::clone(&state.registry);
         self.ensure_limiters(&registry);
         let top = registry.top_tier();
-        // Per-class latency spend, for sub-1.0 class budget caps. Fixed
-        // array: no allocation on the hot path.
-        let mut spent = [0.0f64; MAX_CLASSES];
         for &class in registry.tier_order_desc() {
             if !self.cfg.enable_offline && registry.spec(class).tier != top {
                 continue;
             }
+            // Per-class latency spend, for sub-1.0 class budget caps. Each
+            // class is visited exactly once per iteration, so a fresh
+            // scalar per pass is equivalent to a class-indexed table —
+            // and keeps the hot path free of slice indexing.
+            let mut class_spent = 0.0f64;
             self.class_pass(
                 state,
                 &registry,
@@ -256,7 +259,7 @@ impl HybridScheduler {
                 &mut feats,
                 &mut t,
                 budget_total,
-                &mut spent,
+                &mut class_spent,
                 &mut c,
                 &mut stats,
             );
@@ -287,7 +290,7 @@ impl HybridScheduler {
         feats: &mut Features,
         t: &mut f64,
         budget_total: f64,
-        spent: &mut [f64; MAX_CLASSES],
+        class_spent: &mut f64,
         c: &mut usize,
         stats: &mut ScheduleStats,
     ) {
@@ -304,16 +307,16 @@ impl HybridScheduler {
             _ => None,
         };
         let ci = class.index();
-        let fits_cap = |spent: &[f64; MAX_CLASSES], t_req: f64| match class_cap {
-            Some(cap) => spent[ci] + t_req <= cap,
+        let fits_cap = |spent: f64, t_req: f64| match class_cap {
+            Some(cap) => spent + t_req <= cap,
             None => true,
         };
         // Latency budget visible to this class's *prefill* sizing: the
         // shared residual, additionally clamped to the class's remaining
         // spend cap (uncapped classes see the residual untouched, so the
         // default registry is float-for-float the two-phase code).
-        let class_t = |spent: &[f64; MAX_CLASSES], t: f64| match class_cap {
-            Some(cap) => t.min(cap - spent[ci]),
+        let class_t = |spent: f64, t: f64| match class_cap {
+            Some(cap) => t.min(cap - spent),
             None => t,
         };
         let starvation_age = spec.starvation_age_s;
@@ -328,10 +331,10 @@ impl HybridScheduler {
                     continue; // removed below by an earlier decode's growth
                 }
                 let t_req = self.predictor.decode_cost(feats);
-                if !bypass && (t_req > *t || !fits_cap(spent, t_req)) {
+                if !bypass && (t_req > *t || !fits_cap(*class_spent, t_req)) {
                     break;
                 }
-                let need = state.requests[&id].context_len() + 1;
+                let need = state.req(id).context_len() + 1;
                 let mut ok = state.blocks.grow(id, need);
                 while !ok {
                     if state.preempt_lowest_below(tier, discard).is_some() {
@@ -364,7 +367,7 @@ impl HybridScheduler {
                     break;
                 }
                 *t -= t_req;
-                spent[ci] += t_req;
+                *class_spent += t_req;
                 feats.add_decode();
                 batch.push(BatchEntry {
                     id,
@@ -386,11 +389,11 @@ impl HybridScheduler {
                     break;
                 }
                 let want =
-                    state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
+                    state.req(id).prefill_remaining().min(self.cfg.max_chunk_per_request);
                 // Memory already allocated at admission: pass unlimited mem.
                 let (l, t_req) = self.predictor.max_prefill_tokens(
                     feats,
-                    class_t(spent, *t),
+                    class_t(*class_spent, *t),
                     *c,
                     usize::MAX,
                     want,
@@ -399,7 +402,7 @@ impl HybridScheduler {
                     break;
                 }
                 *t -= t_req;
-                spent[ci] += t_req;
+                *class_spent += t_req;
                 *c -= l;
                 feats.add_prefill(l);
                 batch.push(BatchEntry {
@@ -424,23 +427,29 @@ impl HybridScheduler {
             if state.num_running() >= self.cfg.max_running || (!bypass && *t <= 0.0) {
                 break;
             }
-            let req = &state.requests[&id];
+            let req = state.req(id);
             let ctx = req.context_len().max(1);
             let chain = state.prompt_chain(req);
             if state.blocks.allocate(id, ctx, &chain).is_none() {
                 break; // not enough memory yet
             }
-            let resumed_phase = state.resume_front_of(class);
+            let Some(resumed_phase) = state.resume_front_of(class) else {
+                // The deque's head vanished between front() and the resume
+                // (anomaly already recorded by the transition); drop the
+                // speculative allocation so its blocks are not leaked.
+                state.blocks.release(id);
+                break;
+            };
             // It also gets work this iteration if budget allows — bypass
             // classes schedule the resumed decode unconditionally, same
             // as pass 1.
             if resumed_phase == Phase::Decode {
                 let t_req = self.predictor.decode_cost(feats);
-                let need = state.requests[&id].context_len() + 1;
-                let fits = bypass || (t_req <= *t && fits_cap(spent, t_req));
+                let need = state.req(id).context_len() + 1;
+                let fits = bypass || (t_req <= *t && fits_cap(*class_spent, t_req));
                 if fits && state.blocks.grow(id, need) {
                     *t -= t_req;
-                    spent[ci] += t_req;
+                    *class_spent += t_req;
                     feats.add_decode();
                     batch.push(BatchEntry {
                         id,
@@ -452,17 +461,17 @@ impl HybridScheduler {
                 }
             } else {
                 let want =
-                    state.requests[&id].prefill_remaining().min(self.cfg.max_chunk_per_request);
+                    state.req(id).prefill_remaining().min(self.cfg.max_chunk_per_request);
                 let (l, t_req) = self.predictor.max_prefill_tokens(
                     feats,
-                    class_t(spent, *t),
+                    class_t(*class_spent, *t),
                     *c,
                     usize::MAX,
                     want,
                 );
                 if l > 0 {
                     *t -= t_req;
-                    spent[ci] += t_req;
+                    *class_spent += t_req;
                     *c -= l;
                     feats.add_prefill(l);
                     batch.push(BatchEntry {
@@ -515,13 +524,22 @@ impl HybridScheduler {
             // Per-class admission pacing (HyGen*'s cap / rate-capped
             // admission), lifted for a starving head.
             if !starving {
-                if let Some(lim) = &mut self.limiters[ci] {
+                if let Some(lim) = self.limiters.get_mut(ci).and_then(Option::as_mut) {
                     if !lim.admit(now) {
                         break;
                     }
                 }
             }
-            let mut req = state.queue_mut(class).pop_next().expect("peeked");
+            let Some(mut req) = state.queue_mut(class).pop_next() else {
+                // peek_next just returned a head; a pop that disagrees is
+                // a queue-implementation bug. Record it and stop admitting
+                // rather than taking the serving loop down.
+                // lint: allow(alloc, reason=cold anomaly ledger)
+                state.anomalies.push(format!(
+                    "class {ci} queue head vanished between peek and pop"
+                ));
+                break;
+            };
             let chain = state.prompt_chain(&req);
             let cached = match state.blocks.allocate(req.id, prompt_len.max(1), &chain) {
                 Some(cached) => cached,
@@ -545,7 +563,7 @@ impl HybridScheduler {
             let want = req.prefill_remaining().min(self.cfg.max_chunk_per_request);
             let (l, t_req) = self.predictor.max_prefill_tokens(
                 feats,
-                class_t(spent, *t),
+                class_t(*class_spent, *t),
                 *c,
                 usize::MAX,
                 want,
@@ -558,7 +576,7 @@ impl HybridScheduler {
                 break;
             }
             *t -= t_req;
-            spent[ci] += t_req;
+            *class_spent += t_req;
             *c -= l;
             feats.add_prefill(l);
             req.phase = Phase::Prefill;

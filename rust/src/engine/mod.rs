@@ -211,6 +211,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// iteration performs no heap allocation (see `tests/alloc_free_loop`
     /// and the `bench-replay` steady probe).
     pub fn step(&mut self) -> anyhow::Result<usize> {
+        // lint: allow(wallclock, reason=scheduler-overhead measurement only; never feeds simulated time)
         let t0 = std::time::Instant::now();
         self.scheduler.schedule(&mut self.state, self.clock_s, &mut self.batch);
         let sched_ns = t0.elapsed();
@@ -238,6 +239,7 @@ impl<B: ExecutionBackend> Engine<B> {
     /// Apply progress + metrics for an executed batch at the (already
     /// advanced) clock. Takes the engine fields it needs explicitly so the
     /// engine-owned `batch` can be borrowed alongside them.
+    // lint: alloc-free
     fn apply(
         state: &mut EngineState,
         metrics: &mut Metrics,
@@ -301,8 +303,10 @@ impl<B: ExecutionBackend> Engine<B> {
             .sum();
         loop {
             // Admit everything that has arrived.
-            while next_event < events.len() && events[next_event].arrival_s <= self.clock_s {
-                let e = &events[next_event];
+            while let Some(e) = events.get(next_event) {
+                if e.arrival_s > self.clock_s {
+                    break;
+                }
                 if !registry.spec(e.class).elastic() {
                     interactive_ahead -= 1;
                 }

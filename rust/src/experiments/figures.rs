@@ -618,9 +618,11 @@ pub fn fig16(ctx: &Ctx) -> anyhow::Result<Table> {
     // Train the accurate predictor and time it (80k samples, like the paper).
     let model = CostModel::a100_llama7b();
     let (accurate, samples, base_mape) = profile_and_fit(&model, ctx.seed + 16, 80_000);
+    // lint: allow(wallclock, reason=fig16 reports real train/predict wall time; never feeds the sim clock)
     let t0 = std::time::Instant::now();
     let _refit = LatencyPredictor::fit(&samples);
     let train_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // lint: allow(wallclock, reason=fig16 reports real train/predict wall time; never feeds the sim clock)
     let t0 = std::time::Instant::now();
     let mut acc = 0.0;
     for s in samples.iter().take(10_000) {

@@ -39,6 +39,7 @@
 //! `multi-slo` subcommands), the `examples/`, and the bench targets
 //! under `rust/benches/`.
 
+pub mod analysis;
 pub mod baselines;
 pub mod cluster;
 pub mod config;

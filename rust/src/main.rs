@@ -16,6 +16,9 @@
 //! * `chaos`            — fault-injection comparison (kill/restart
 //!   schedules per router policy); writes artifacts/chaos_compare.csv
 //!   and fails if any cell loses a request
+//! * `lint`             — in-repo static analysis over `rust/src`
+//!   (determinism / alloc-free / panic-free / config-doc invariants);
+//!   exits non-zero on any violation
 
 use hygen::baselines::{SimSetup, System};
 use hygen::cluster::router::RouterPolicy;
@@ -80,6 +83,11 @@ USAGE:
                      artifacts/multi_slo.csv with per-tier SLO attainment
                      plus total throughput, byte-identical for a fixed
                      seed and any -j)
+  hygen lint         [--root DIR]
+                     (in-repo static analysis: determinism, alloc-free,
+                     panic-free, and config-doc invariants over rust/src;
+                     prints file:line diagnostics and exits non-zero on
+                     any violation — see DESIGN.md \"Enforced invariants\")
   hygen chaos        [--out DIR] [--quick] [--seed N] [-j/--jobs N]
                      (replay the calibrated mixed trace against every
                      router policy under seeded random kill/restart
@@ -113,6 +121,7 @@ fn main() {
         Some("cluster-sim") => cmd_cluster_sim(&args),
         Some("multi-slo") => cmd_multi_slo(&args),
         Some("chaos") => cmd_chaos(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -466,6 +475,29 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
         faulted
     );
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    use hygen::analysis;
+    let root = match args.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => analysis::find_repo_root(std::path::Path::new("."))
+            .ok_or_else(|| anyhow::anyhow!("could not locate repo root (rust/src); use --root"))?,
+    };
+    let report = analysis::lint_repo(&root)?;
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    if report.is_clean() {
+        println!("lint: clean ({} files scanned)", report.files_scanned);
+        Ok(())
+    } else {
+        anyhow::bail!(
+            "lint: {} violation(s) across {} scanned file(s)",
+            report.diagnostics.len(),
+            report.files_scanned
+        )
+    }
 }
 
 fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {

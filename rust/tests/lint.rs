@@ -1,0 +1,91 @@
+//! Golden tests for `hygen lint` (the in-repo static-analysis pass,
+//! DESIGN.md §9): `tests/lint_fixtures/` seeds one violation per rule
+//! class and the diagnostics are pinned exactly — file, line, and rule —
+//! so a rule that silently stops firing fails here, not in review. The
+//! committed tree itself must lint clean (same gate CI runs via
+//! `cargo run --release -- lint`).
+
+use std::path::PathBuf;
+
+use hygen::analysis::{lint_repo, lint_tree};
+
+fn fixture_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("lint_fixtures")
+}
+
+#[test]
+fn fixtures_trip_every_rule_class() {
+    let root = fixture_root();
+    let report =
+        lint_tree(&root.join("src"), Some(&root), "fixtures/").expect("fixture lint runs");
+    assert_eq!(report.files_scanned, 4);
+
+    let got: Vec<(&str, u32, &str)> =
+        report.diagnostics.iter().map(|d| (d.file.as_str(), d.line, d.rule)).collect();
+    let expected: Vec<(&str, u32, &str)> = vec![
+        ("README.md", 4, "config-doc"),
+        ("fixtures/clockwork.rs", 4, "wallclock"),
+        ("fixtures/clockwork.rs", 8, "annotation"),
+        ("fixtures/clockwork.rs", 10, "rng"),
+        ("fixtures/clockwork.rs", 14, "annotation"),
+        ("fixtures/config/mod.rs", 4, "config-doc"),
+        ("fixtures/coordinator/scheduler.rs", 7, "map-iter"),
+        ("fixtures/coordinator/scheduler.rs", 10, "map-iter"),
+        ("fixtures/coordinator/scheduler.rs", 17, "panic"),
+        ("fixtures/coordinator/scheduler.rs", 17, "panic"),
+        ("fixtures/hotpath.rs", 6, "alloc"),
+        ("fixtures/hotpath.rs", 11, "alloc"),
+    ];
+    assert_eq!(got, expected, "full diagnostics: {:#?}", report.diagnostics);
+}
+
+#[test]
+fn fixture_diagnostics_name_the_construct() {
+    let root = fixture_root();
+    let report =
+        lint_tree(&root.join("src"), Some(&root), "fixtures/").expect("fixture lint runs");
+    let msgs_for = |rule: &str| -> String {
+        report
+            .diagnostics
+            .iter()
+            .filter(|d| d.rule == rule)
+            .map(|d| d.msg.as_str())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let alloc = msgs_for("alloc");
+    assert!(alloc.contains("Vec::new"), "{alloc}");
+    assert!(alloc.contains("via helper"), "transitive chain must be named: {alloc}");
+    assert!(msgs_for("rng").contains("thread_rng"));
+    assert!(msgs_for("config-doc").contains("mystery_knob"), "undocumented knob named");
+    assert!(msgs_for("config-doc").contains("phantom_knob"), "unparsed doc key named");
+
+    // `file:line: rule(name): message` — the format CI logs and editors
+    // jump on.
+    let rendered = report.diagnostics[0].to_string();
+    assert!(rendered.starts_with("README.md:4: rule(config-doc):"), "{rendered}");
+}
+
+/// The gate itself: the committed tree carries zero violations, so any
+/// change that introduces one fails tier-1 even before the dedicated
+/// `hygen lint` CI step runs.
+#[test]
+fn committed_tree_is_clean() {
+    let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level under the repo root")
+        .to_path_buf();
+    assert!(repo_root.join("rust").join("src").is_dir(), "unexpected repo layout");
+    let report = lint_repo(&repo_root).expect("lint runs on the committed tree");
+    assert!(
+        report.is_clean(),
+        "committed tree must lint clean:\n{}",
+        report
+            .diagnostics
+            .iter()
+            .map(ToString::to_string)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files_scanned >= 50, "scanned only {} files", report.files_scanned);
+}

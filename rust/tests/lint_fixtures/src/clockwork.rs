@@ -1,0 +1,15 @@
+//! Fixture: seeded `wallclock`, `rng`, and `annotation` violations.
+
+pub fn stamp() -> u64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+// lint: allow(rng)
+pub fn roll() -> u32 {
+    let mut rng = thread_rng();
+    rng.next()
+}
+
+// lint: allwo(wallclock, reason=typo)
+pub fn later() {}

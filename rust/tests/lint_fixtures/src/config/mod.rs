@@ -1,0 +1,5 @@
+//! Fixture: parses a knob the fixture docs do not mention.
+
+pub fn parse(j: &Json) -> Option<f64> {
+    j.get("mystery_knob").and_then(Json::as_f64)
+}

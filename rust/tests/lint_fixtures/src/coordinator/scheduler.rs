@@ -1,0 +1,18 @@
+//! Fixture: seeded `map-iter` and `panic` violations. Never compiled —
+//! only lexed by `tests/lint.rs`.
+
+use std::collections::HashMap;
+pub fn snapshot(batch: &HashMap<u64, u64>) -> u64 {
+    let mut sum = 0;
+    for (_, v) in batch.iter() {
+        sum += *v;
+    }
+    for k in &batch {
+        sum += *k.1;
+    }
+    sum
+}
+
+pub fn pick(xs: &[u64], opt: Option<u64>) -> u64 {
+    xs[0] + opt.unwrap()
+}

@@ -1,0 +1,13 @@
+//! Fixture: seeded `alloc` violations inside an `alloc-free` root, one
+//! direct and one transitive.
+
+// lint: alloc-free
+pub fn hot() -> usize {
+    let ids = vec![1u32, 2, 3];
+    helper() + ids.len()
+}
+
+fn helper() -> usize {
+    let s: Vec<u8> = Vec::new();
+    s.len()
+}

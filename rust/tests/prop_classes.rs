@@ -274,7 +274,8 @@ impl TwoPhaseReference {
             if state.blocks.allocate(id, ctx, &chain).is_none() {
                 break;
             }
-            let resumed_phase = state.resume_front_preempted();
+            let resumed_phase =
+                state.resume_front_preempted().expect("front() guard guarantees a head");
             if resumed_phase == Phase::Decode {
                 let t_req = self.predictor.decode_cost(feats);
                 let need = state.requests[&id].context_len() + 1;
