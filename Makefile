@@ -3,7 +3,7 @@
 # `make artifacts` produces the AOT HLO artifacts the PJRT execution path
 # (`--features pjrt`) loads at startup.
 
-.PHONY: all artifacts test lint bench bench-sched bench-replay cluster multi-slo chaos microbench clean
+.PHONY: all artifacts test lint bench bench-sched bench-replay cluster multi-slo chaos overload microbench clean
 
 all:
 	cargo build --release
@@ -53,6 +53,12 @@ multi-slo:
 # conservation gate -> artifacts/chaos_compare.csv
 chaos:
 	cargo run --release -- chaos
+
+# Ramp open-loop QPS past single-replica capacity through the serving
+# admission ladder (brown-out 429s, bounded queues, deadline 504s), with
+# the exact conservation gate -> artifacts/overload.csv
+overload:
+	cargo run --release -- overload
 
 # In-tree Bencher micro-benchmarks (scheduler, PSM, predictor, figures,
 # sched_trace, replay bench targets).

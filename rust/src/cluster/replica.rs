@@ -43,6 +43,12 @@ pub struct Job {
     pub prompt: Vec<u32>,
     pub max_tokens: usize,
     pub class: Class,
+    /// Absolute deadline (derived from the class SLO envelope and the
+    /// `request_timeout_s` knob). Work that has not completed by then is
+    /// shed *in-engine* — KV blocks and batch slot freed — and the reply
+    /// is [`JobError::DeadlineExceeded`]. `None` = no deadline (drain
+    /// rules still apply).
+    pub deadline: Option<Instant>,
     pub reply: Sender<Result<Completion, JobError>>,
 }
 
@@ -66,6 +72,10 @@ pub enum JobError {
     /// The server stopped and the drain deadline passed before this
     /// request completed.
     DrainTimeout,
+    /// The request's own deadline passed before it completed; the engine
+    /// shed it (blocks and batch slot freed). The front end maps this to
+    /// HTTP 504.
+    DeadlineExceeded,
 }
 
 impl JobError {
@@ -73,6 +83,7 @@ impl JobError {
         match self {
             JobError::BackendFailed => "backend failed",
             JobError::DrainTimeout => "server stopping",
+            JobError::DeadlineExceeded => "request timed out",
         }
     }
 }
@@ -238,7 +249,8 @@ fn engine_loop_impl<B: ExecutionBackend>(
     type Reply = Sender<Result<Completion, JobError>>;
     // BTreeMap so drain-failure replies go out in request-id order —
     // replica-visible behavior stays independent of hash seeding.
-    let mut inflight: BTreeMap<RequestId, (Reply, Instant)> = BTreeMap::new();
+    // Value: (reply channel, submit instant, optional absolute deadline).
+    let mut inflight: BTreeMap<RequestId, (Reply, Instant, Option<Instant>)> = BTreeMap::new();
     engine.state.keep_finished = true;
     let mut last_publish = Instant::now();
     let mut drain_deadline: Option<Instant> = None;
@@ -265,7 +277,7 @@ fn engine_loop_impl<B: ExecutionBackend>(
                     let now = start.elapsed().as_secs_f64();
                     let req = Request::new(id, job.class, now, job.prompt.len(), job.max_tokens)
                         .with_prompt(job.prompt);
-                    inflight.insert(id, (job.reply, Instant::now()));
+                    inflight.insert(id, (job.reply, Instant::now(), job.deadline));
                     engine.submit(req);
                 }
                 Err(TryRecvError::Empty) => break,
@@ -273,6 +285,23 @@ fn engine_loop_impl<B: ExecutionBackend>(
                     disconnected = true;
                     break;
                 }
+            }
+        }
+        // Deadline shed: cancel expired work in-engine *before* the
+        // scheduler builds the next batch, so a timed-out request frees
+        // its KV blocks and batch slot instead of decoding for a client
+        // that has already given up. Waiting, running, and preempted work
+        // all shed through the same per-request abort.
+        let now = Instant::now();
+        let expired: Vec<RequestId> = inflight
+            .iter()
+            .filter(|(_, (_, _, deadline))| deadline.is_some_and(|d| now >= d))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            if let Some((reply, _, _)) = inflight.remove(&id) {
+                engine.abort_request(id);
+                let _ = reply.send(Err(JobError::DeadlineExceeded));
             }
         }
         // Publish *after* ingest, before the (possibly tens-of-ms) step:
@@ -286,7 +315,7 @@ fn engine_loop_impl<B: ExecutionBackend>(
                 break; // drained: every accepted request was answered
             }
             if Instant::now() >= deadline {
-                for (_, (reply, _)) in std::mem::take(&mut inflight) {
+                for (_, (reply, _, _)) in std::mem::take(&mut inflight) {
                     let _ = reply.send(Err(JobError::DrainTimeout));
                 }
                 break;
@@ -303,7 +332,7 @@ fn engine_loop_impl<B: ExecutionBackend>(
                     // re-schedules the same doomed batch every loop — a
                     // 100% CPU livelock with no reply channels left to
                     // observe it.
-                    for (_, (reply, _)) in std::mem::take(&mut inflight) {
+                    for (_, (reply, _, _)) in std::mem::take(&mut inflight) {
                         let _ = reply.send(Err(JobError::BackendFailed));
                     }
                     engine.abort_all();
@@ -328,7 +357,7 @@ fn engine_loop_impl<B: ExecutionBackend>(
             }
             // deliver completions
             for req in engine.state.finished.drain(..) {
-                if let Some((reply, t0)) = inflight.remove(&req.id) {
+                if let Some((reply, t0, _)) = inflight.remove(&req.id) {
                     let _ = reply.send(Ok(Completion {
                         id: req.id,
                         text: tokenizer::decode(&req.output_tokens),
@@ -569,9 +598,17 @@ mod tests {
     }
 
     fn send_job(tx: &Sender<Job>, shared: &ReplicaShared) -> Receiver<Result<Completion, JobError>> {
+        send_job_deadline(tx, shared, None)
+    }
+
+    fn send_job_deadline(
+        tx: &Sender<Job>,
+        shared: &ReplicaShared,
+        deadline: Option<Instant>,
+    ) -> Receiver<Result<Completion, JobError>> {
         let (reply, reply_rx) = channel();
         shared.note_submitted(Class::ONLINE);
-        tx.send(Job { prompt: vec![1, 2, 3], max_tokens: 4, class: Class::ONLINE, reply })
+        tx.send(Job { prompt: vec![1, 2, 3], max_tokens: 4, class: Class::ONLINE, deadline, reply })
             .unwrap();
         reply_rx
     }
@@ -686,6 +723,38 @@ mod tests {
         sup.join();
         assert_eq!(sup.shared.restarts.load(Ordering::Relaxed), 0, "no restart during shutdown");
         assert_eq!(sup.shared.generation.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn expired_job_is_shed_in_engine_and_replica_keeps_serving() {
+        let stop = Arc::new(AtomicBool::new(false));
+        let fail = Arc::new(AtomicBool::new(false));
+        let mut rep = Replica::spawn(
+            "shed".into(),
+            flaky_factory(fail),
+            Arc::clone(&stop),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        // A job whose deadline has already passed is shed in-engine, never
+        // served — the reply is the deadline error, not a completion.
+        let reply = send_job_deadline(&rep.tx, &rep.shared, Some(Instant::now()));
+        assert_eq!(reply.recv_timeout(RECV).unwrap().unwrap_err(), JobError::DeadlineExceeded);
+        // The shed freed the engine's state: nothing waiting or running
+        // remains once the shed reply has been observed, and the replica
+        // keeps serving deadline-free work.
+        let deadline = Instant::now() + RECV;
+        loop {
+            if rep.shared.routing_snapshot().total_depth() == 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "shed work still occupies the engine");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let reply = send_job(&rep.tx, &rep.shared);
+        assert!(reply.recv_timeout(RECV).unwrap().is_ok(), "replica serves after a shed");
+        stop.store(true, Ordering::SeqCst);
+        rep.join();
     }
 
     #[test]

@@ -7,6 +7,7 @@ use crate::cluster::replica::SupervisorConfig;
 use crate::cluster::router::RouterPolicy;
 use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::queues::OfflinePolicy;
+use crate::server::OverloadConfig;
 use crate::util::json::Json;
 
 /// The crate's top-level config type (alias kept so docs and tests can
@@ -42,12 +43,37 @@ pub struct ClusterConfig {
     pub autoscale_down_headroom_ms: f64,
     /// Consecutive rebalance ticks a scale signal must hold.
     pub autoscale_hysteresis: usize,
+    /// Bounded admission: per-class waiting-queue depth (per replica)
+    /// beyond which new work is rejected with 429 + `Retry-After`.
+    pub queue_cap: usize,
+    /// Absolute per-request deadline backstop (seconds). The effective
+    /// deadline is the tighter of this and the class SLO envelope; expired
+    /// work is cancelled in-engine and answered with 504.
+    pub request_timeout_s: f64,
+    /// Re-route attempts for an online request that failed before its
+    /// first token (0 = never retry).
+    pub retry_budget: usize,
+    /// Consecutive job failures that open a replica's circuit breaker.
+    pub breaker_threshold: usize,
+    /// How long an open breaker skips its replica before the half-open
+    /// probe (seconds).
+    pub breaker_cooldown_s: f64,
+    /// Brown-out rung 1: aggregate headroom (ms) below which elastic
+    /// (offline) placement pauses.
+    pub brownout_offline_headroom_ms: f64,
+    /// Brown-out rung 2: aggregate headroom (ms) below which tolerant
+    /// (below-top-tier) classes are shed.
+    pub brownout_shed_headroom_ms: f64,
+    /// Brown-out rung 3: aggregate headroom (ms) below which even online
+    /// work is rejected with 429.
+    pub brownout_online_headroom_ms: f64,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
         let sup = SupervisorConfig::default();
         let auto = AutoscaleConfig::default();
+        let over = OverloadConfig::default();
         ClusterConfig {
             replicas: 1,
             router: RouterPolicy::SloHeadroom,
@@ -61,6 +87,14 @@ impl Default for ClusterConfig {
             autoscale_up_headroom_ms: auto.up_headroom_ms,
             autoscale_down_headroom_ms: auto.down_headroom_ms,
             autoscale_hysteresis: auto.hysteresis_ticks,
+            queue_cap: over.queue_cap,
+            request_timeout_s: over.request_timeout.as_secs_f64(),
+            retry_budget: over.retry_budget,
+            breaker_threshold: over.breaker_threshold,
+            breaker_cooldown_s: over.breaker_cooldown.as_secs_f64(),
+            brownout_offline_headroom_ms: over.brownout_offline_headroom_ms,
+            brownout_shed_headroom_ms: over.brownout_shed_headroom_ms,
+            brownout_online_headroom_ms: over.brownout_online_headroom_ms,
         }
     }
 }
@@ -138,6 +172,46 @@ impl ClusterConfig {
             autoscale_hysteresis >= 1,
             "autoscale_hysteresis needs at least one tick"
         );
+        let queue_cap = int_field("queue_cap", d.queue_cap)?;
+        anyhow::ensure!(queue_cap >= 1, "queue_cap must admit at least one request");
+        // Duration::from_secs_f64 panics on negative/NaN input, and a zero
+        // timeout would 504 every request at admission.
+        let request_timeout_s = num_field("request_timeout_s", d.request_timeout_s)?;
+        anyhow::ensure!(
+            request_timeout_s.is_finite() && request_timeout_s > 0.0,
+            "request_timeout_s must be a positive number"
+        );
+        let retry_budget = int_field("retry_budget", d.retry_budget)?;
+        let breaker_threshold = int_field("breaker_threshold", d.breaker_threshold)?;
+        anyhow::ensure!(
+            breaker_threshold >= 1,
+            "breaker_threshold needs at least one consecutive error"
+        );
+        let breaker_cooldown_s = num_field("breaker_cooldown_s", d.breaker_cooldown_s)?;
+        anyhow::ensure!(
+            breaker_cooldown_s.is_finite() && breaker_cooldown_s >= 0.0,
+            "breaker_cooldown_s must be a non-negative number"
+        );
+        let brownout_offline_headroom_ms =
+            num_field("brownout_offline_headroom_ms", d.brownout_offline_headroom_ms)?;
+        let brownout_shed_headroom_ms =
+            num_field("brownout_shed_headroom_ms", d.brownout_shed_headroom_ms)?;
+        let brownout_online_headroom_ms =
+            num_field("brownout_online_headroom_ms", d.brownout_online_headroom_ms)?;
+        for (key, v) in [
+            ("brownout_offline_headroom_ms", brownout_offline_headroom_ms),
+            ("brownout_shed_headroom_ms", brownout_shed_headroom_ms),
+            ("brownout_online_headroom_ms", brownout_online_headroom_ms),
+        ] {
+            anyhow::ensure!(v.is_finite(), "{key} must be a finite number");
+        }
+        // The ladder degrades monotonically as headroom shrinks: pause
+        // offline first, shed tolerant classes next, 429 online last.
+        anyhow::ensure!(
+            brownout_online_headroom_ms <= brownout_shed_headroom_ms
+                && brownout_shed_headroom_ms <= brownout_offline_headroom_ms,
+            "brown-out thresholds must be ordered online <= shed <= offline"
+        );
         Ok(ClusterConfig {
             replicas,
             router,
@@ -151,6 +225,14 @@ impl ClusterConfig {
             autoscale_up_headroom_ms,
             autoscale_down_headroom_ms,
             autoscale_hysteresis,
+            queue_cap,
+            request_timeout_s,
+            retry_budget,
+            breaker_threshold,
+            breaker_cooldown_s,
+            brownout_offline_headroom_ms,
+            brownout_shed_headroom_ms,
+            brownout_online_headroom_ms,
         })
     }
 
@@ -168,6 +250,14 @@ impl ClusterConfig {
             ("autoscale_up_headroom_ms", Json::from(self.autoscale_up_headroom_ms)),
             ("autoscale_down_headroom_ms", Json::from(self.autoscale_down_headroom_ms)),
             ("autoscale_hysteresis", Json::from(self.autoscale_hysteresis)),
+            ("queue_cap", Json::from(self.queue_cap)),
+            ("request_timeout_s", Json::from(self.request_timeout_s)),
+            ("retry_budget", Json::from(self.retry_budget)),
+            ("breaker_threshold", Json::from(self.breaker_threshold)),
+            ("breaker_cooldown_s", Json::from(self.breaker_cooldown_s)),
+            ("brownout_offline_headroom_ms", Json::from(self.brownout_offline_headroom_ms)),
+            ("brownout_shed_headroom_ms", Json::from(self.brownout_shed_headroom_ms)),
+            ("brownout_online_headroom_ms", Json::from(self.brownout_online_headroom_ms)),
         ]
     }
 
@@ -177,6 +267,21 @@ impl ClusterConfig {
             max_restarts: self.max_restarts,
             backoff_initial: std::time::Duration::from_secs_f64(self.backoff_initial_ms / 1e3),
             backoff_cap: std::time::Duration::from_secs_f64(self.backoff_cap_ms / 1e3),
+        }
+    }
+
+    /// The overload policy (bounded admission, deadlines, retry/breaker,
+    /// brown-out ladder) this config describes.
+    pub fn overload_config(&self) -> OverloadConfig {
+        OverloadConfig {
+            queue_cap: self.queue_cap,
+            request_timeout: std::time::Duration::from_secs_f64(self.request_timeout_s),
+            retry_budget: self.retry_budget,
+            breaker_threshold: self.breaker_threshold,
+            breaker_cooldown: std::time::Duration::from_secs_f64(self.breaker_cooldown_s),
+            brownout_offline_headroom_ms: self.brownout_offline_headroom_ms,
+            brownout_shed_headroom_ms: self.brownout_shed_headroom_ms,
+            brownout_online_headroom_ms: self.brownout_online_headroom_ms,
         }
     }
 
@@ -391,6 +496,56 @@ mod tests {
             r#"{"autoscale_up_headroom_ms": 30, "autoscale_down_headroom_ms": 5}"#,
             r#"{"autoscale_hysteresis": 0}"#,
             r#"{"max_restarts": "lots"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ServeConfig::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn parses_overload_knobs() {
+        let j = Json::parse(
+            r#"{"queue_cap": 8, "request_timeout_s": 3.5, "retry_budget": 1,
+                "breaker_threshold": 2, "breaker_cooldown_s": 0.25,
+                "brownout_offline_headroom_ms": 6,
+                "brownout_shed_headroom_ms": 3,
+                "brownout_online_headroom_ms": 1}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.queue_cap, 8);
+        assert_eq!(c.cluster.request_timeout_s, 3.5);
+        assert_eq!(c.cluster.retry_budget, 1);
+        assert_eq!(c.cluster.breaker_threshold, 2);
+        assert_eq!(c.cluster.breaker_cooldown_s, 0.25);
+        // The derived sub-config carries the same values.
+        let over = c.cluster.overload_config();
+        assert_eq!(over.queue_cap, 8);
+        assert_eq!(over.request_timeout, std::time::Duration::from_millis(3500));
+        assert_eq!(over.retry_budget, 1);
+        assert_eq!(over.breaker_threshold, 2);
+        assert_eq!(over.breaker_cooldown, std::time::Duration::from_millis(250));
+        assert_eq!(over.brownout_offline_headroom_ms, 6.0);
+        assert_eq!(over.brownout_shed_headroom_ms, 3.0);
+        assert_eq!(over.brownout_online_headroom_ms, 1.0);
+        // Flat-JSON round trip, like the rest of the cluster shape.
+        let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.cluster, c.cluster);
+    }
+
+    #[test]
+    fn rejects_bad_overload_knobs() {
+        for bad in [
+            r#"{"queue_cap": 0}"#,
+            r#"{"queue_cap": "big"}"#,
+            r#"{"request_timeout_s": 0}"#,
+            r#"{"request_timeout_s": -5}"#,
+            r#"{"breaker_threshold": 0}"#,
+            r#"{"breaker_cooldown_s": -1}"#,
+            r#"{"retry_budget": -1}"#,
+            r#"{"brownout_shed_headroom_ms": 50}"#,
+            r#"{"brownout_offline_headroom_ms": 1, "brownout_shed_headroom_ms": 1,
+                "brownout_online_headroom_ms": 3}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(ServeConfig::from_json(&j).is_err(), "should reject {bad}");

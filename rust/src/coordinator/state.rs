@@ -498,6 +498,48 @@ impl EngineState {
         torn_down
     }
 
+    /// Abort a single request wherever it lives — class queue, running
+    /// set, or preempted deque — releasing any KV blocks it holds. The
+    /// per-request spelling of [`abort_all`](Self::abort_all): the serving
+    /// layer uses it to shed deadline-expired or client-abandoned work so
+    /// a timed-out request frees its blocks and batch slot instead of
+    /// decoding for a client that is gone.
+    ///
+    /// Returns `Some(true)` when the request was live (running or
+    /// preempted — the backend holds per-request resources for both and
+    /// must be told via `on_removed`), `Some(false)` when it was still
+    /// waiting in a class queue (the backend never saw it), and `None`
+    /// when the id is unknown (already finished, or a cancel/finish race —
+    /// a runtime condition, not an error).
+    pub fn abort_one(&mut self, id: RequestId) -> Option<bool> {
+        if let Some(req) = self.requests.get(&id) {
+            let (class, phase) = (req.class, req.phase);
+            if phase == Phase::Preempted {
+                // Preempted requests hold no blocks; drop the deque slot.
+                let deque = self.preempted_mut(class);
+                if let Some(pos) = deque.iter().position(|&x| x == id) {
+                    deque.remove(pos);
+                }
+            } else {
+                self.blocks.release(id);
+                self.running_mut(class).remove(id);
+                self.counts.sub(class, phase);
+            }
+            self.requests.remove(&id);
+            return Some(true);
+        }
+        // Not live — it may still be waiting. Queued requests hold no
+        // blocks and have no table entry; dropping the queue slot is the
+        // whole teardown. Removal does not disturb the prefix queue's LCP
+        // baseline (see `ClassQueue::remove`).
+        for q in &mut self.queues {
+            if q.remove(id).is_some() {
+                return Some(false);
+            }
+        }
+        None
+    }
+
     /// Sanity invariants used by tests: every running id has a request and
     /// an allocation; no id is in two places at once; queued requests are
     /// not also tracked in the table; the phase census matches the sets;
@@ -744,6 +786,49 @@ mod tests {
         assert_eq!(s.total_waiting(), 0);
         assert_eq!(s.blocks.used_blocks(), 0);
         assert_eq!(s.counts, PhaseCounts::default());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn abort_one_tears_down_each_lifecycle_stage() {
+        let mut s = state();
+        running(&mut s, 1, Class::ONLINE, 16, 4);
+        running(&mut s, 2, Class::OFFLINE, 16, 4);
+        s.preempt_last_offline(false);
+        s.enqueue(Request::new(3, Class::ONLINE, 0.0, 4, 4));
+
+        // Running: blocks released, census decremented, table cleared.
+        assert_eq!(s.abort_one(1), Some(true));
+        assert_eq!(s.num_running(), 0);
+        assert_eq!(s.blocks.used_blocks(), 0);
+        assert!(!s.requests.contains_key(&1));
+        s.check_invariants().unwrap();
+
+        // Preempted: deque slot and table entry dropped (no blocks held).
+        assert_eq!(s.abort_one(2), Some(true));
+        assert_eq!(s.total_preempted(), 0);
+        assert!(!s.requests.contains_key(&2));
+        s.check_invariants().unwrap();
+
+        // Waiting: queue slot dropped; the backend never saw it.
+        assert_eq!(s.abort_one(3), Some(false));
+        assert_eq!(s.total_waiting(), 0);
+        s.check_invariants().unwrap();
+
+        // Unknown id: a cancel/finish race, not an error.
+        assert_eq!(s.abort_one(99), None);
+        assert_eq!(s.counts, PhaseCounts::default());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn abort_one_removes_from_prefix_queue() {
+        let mut s = EngineState::new(OfflinePolicy::Psm, 64, 16, 0);
+        s.enqueue(Request::new(1, Class::OFFLINE, 0.0, 4, 4).with_prompt(vec![1, 2, 3, 4]));
+        s.enqueue(Request::new(2, Class::OFFLINE, 0.0, 4, 4).with_prompt(vec![1, 2, 3, 5]));
+        assert_eq!(s.abort_one(1), Some(false));
+        assert_eq!(s.queue(Class::OFFLINE).len(), 1);
+        assert_eq!(s.abort_one(1), None, "second abort is a no-op");
         s.check_invariants().unwrap();
     }
 

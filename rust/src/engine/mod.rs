@@ -186,6 +186,25 @@ impl<B: ExecutionBackend> Engine<B> {
         torn_down.len()
     }
 
+    /// Abort a single request (deadline shed, client cancel), releasing
+    /// its KV blocks and batch slot. The per-request spelling of
+    /// [`abort_all`](Self::abort_all): the backend is notified for
+    /// requests it has seen (running or preempted — slot-holding backends
+    /// reconcile lazily on the next execute, which never comes for an
+    /// aborted id). Returns false when the id is unknown — a cancel/finish
+    /// race the serving loop survives.
+    pub fn abort_request(&mut self, id: RequestId) -> bool {
+        match self.state.abort_one(id) {
+            Some(live) => {
+                if live {
+                    self.backend.on_removed(id);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Allocate a request id (server-mode ingestion).
     pub fn fresh_id(&mut self) -> RequestId {
         let id = self.next_id;

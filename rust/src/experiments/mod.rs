@@ -13,7 +13,9 @@
 //! `hygen multi-slo` (writes `artifacts/multi_slo.csv`); [`chaos`]
 //! chaos-tests the cluster fault tolerance — seeded kill/restart
 //! schedules per router policy — behind `hygen chaos`
-//! (writes `artifacts/chaos_compare.csv`).
+//! (writes `artifacts/chaos_compare.csv`); [`overload`] ramps open-loop
+//! QPS past single-replica capacity through the serving admission ladder
+//! behind `hygen overload` (writes `artifacts/overload.csv`).
 
 pub mod bench_replay;
 pub mod bench_sched;
@@ -21,6 +23,7 @@ pub mod chaos;
 pub mod cluster_sim;
 pub mod figures;
 pub mod multi_slo;
+pub mod overload;
 
 use crate::baselines::{SimSetup, System};
 use crate::coordinator::metrics::Report;

@@ -1,0 +1,424 @@
+//! `hygen overload` — ramp open-loop QPS past a single replica's capacity
+//! and measure what the admission ladder does, writing
+//! `artifacts/overload.csv`.
+//!
+//! Each grid cell replays an Azure-shaped online stream at one offered
+//! rate (plus a t = 0 offline backlog) against a sim engine fronted by
+//! the *serving* admission policy ([`crate::server::OverloadConfig`]):
+//! the brown-out ladder and the bounded per-class queue decide 429s, and
+//! every admitted request carries the same SLO-derived deadline the HTTP
+//! front end would attach — expired work is cancelled in-engine via
+//! `abort_request` and counted as a 504. The CSV shows goodput
+//! plateauing past the capacity knee while rejections absorb the excess,
+//! with an exact conservation ledger per row:
+//! `offered = admitted + rejected_429` and
+//! `admitted = finished + timed_out_504 + resident` (any imbalance fails
+//! the command via [`check_conservation`]). Cells are independent seeded
+//! jobs with order-preserving collection: the CSV is byte-identical for
+//! any `-j` and a fixed seed.
+
+use super::{f1, f2, Table};
+use crate::baselines::SimSetup;
+use crate::cluster::ReplicaSnapshot;
+use crate::coordinator::queues::OfflinePolicy;
+use crate::coordinator::request::{Request, RequestId};
+use crate::coordinator::scheduler::SchedulerConfig;
+use crate::engine::Engine;
+use crate::server::{effective_deadline, OverloadConfig};
+use crate::sim::costmodel::CostModel;
+use crate::sim::SimBackend;
+use crate::util::parallel::{job, run_jobs, Job};
+use crate::workload::azure::{self, AzureTraceConfig};
+use crate::workload::datasets::{self, Dataset};
+use crate::workload::trace::Trace;
+
+/// Grid + workload shape; see [`OverloadExpConfig::full`] and
+/// [`OverloadExpConfig::quick`].
+#[derive(Debug, Clone)]
+pub struct OverloadExpConfig {
+    /// Offered online QPS levels, ramping past the single-replica knee.
+    pub qps_levels: Vec<f64>,
+    /// Online trace span (s); the offline backlog arrives at t = 0.
+    pub trace_s: f64,
+    pub offline_n: usize,
+    pub latency_budget_ms: f64,
+    /// The serving admission policy under test (queue cap, deadlines,
+    /// brown-out thresholds) — the same struct the HTTP front end runs.
+    pub policy: OverloadConfig,
+    /// Hard stop for shapes that never catch up.
+    pub max_clock_s: f64,
+    pub seed: u64,
+    /// Worker threads for the cell grid (order-preserving collection —
+    /// any value yields byte-identical CSVs).
+    pub jobs: usize,
+}
+
+impl OverloadExpConfig {
+    /// The tracked-artifact shape: six offered rates spanning well under
+    /// to well past a single a100/llama-7b replica's capacity.
+    pub fn full() -> OverloadExpConfig {
+        OverloadExpConfig {
+            qps_levels: vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+            trace_s: 60.0,
+            offline_n: 200,
+            latency_budget_ms: 40.0,
+            policy: OverloadConfig {
+                queue_cap: 64,
+                request_timeout: std::time::Duration::from_secs(20),
+                ..OverloadConfig::default()
+            },
+            max_clock_s: 300.0,
+            seed: 0,
+            jobs: super::default_jobs(),
+        }
+    }
+
+    /// CI smoke shape: same pipeline, seconds of wallclock.
+    pub fn quick() -> OverloadExpConfig {
+        OverloadExpConfig {
+            qps_levels: vec![2.0, 8.0, 24.0],
+            trace_s: 10.0,
+            offline_n: 40,
+            latency_budget_ms: 40.0,
+            policy: OverloadConfig {
+                queue_cap: 16,
+                request_timeout: std::time::Duration::from_secs(8),
+                ..OverloadConfig::default()
+            },
+            max_clock_s: 90.0,
+            seed: 0,
+            jobs: super::default_jobs(),
+        }
+    }
+}
+
+/// One offered-rate cell's measurement.
+#[derive(Debug, Clone)]
+pub struct CellOutcome {
+    pub offered_qps: f64,
+    /// Trace arrivals presented to the front end (online + offline).
+    pub offered: usize,
+    pub admitted: usize,
+    pub finished: usize,
+    pub rejected_429: usize,
+    pub timed_out_504: usize,
+    /// 429s per class (index 0 = flagship online).
+    pub shed_online: usize,
+    pub shed_offline: usize,
+    /// Admitted work still in flight when the run hit `max_clock_s`.
+    pub resident: usize,
+    /// `admitted - finished - timed_out_504 - resident`; must be 0.
+    pub lost: i64,
+    /// Finished requests per simulated second — the goodput axis.
+    pub goodput_rps: f64,
+    /// p99 TTFT of admitted work that produced a first token.
+    pub p99_ttft_ms: f64,
+    pub duration_s: f64,
+}
+
+/// The cell workload: Azure online arrivals at `qps` + a t = 0 arXiv
+/// offline backlog. Deterministic in (cfg.seed, qps).
+pub fn cell_trace(cfg: &OverloadExpConfig, qps: f64) -> Trace {
+    let online = azure::generate(
+        &AzureTraceConfig { duration_s: cfg.trace_s, mean_qps: qps, ..Default::default() },
+        cfg.seed,
+    );
+    let offline = datasets::generate(Dataset::ArxivSummarization, cfg.offline_n, cfg.seed);
+    online.merged(offline)
+}
+
+fn build_engine(cfg: &OverloadExpConfig) -> Engine<SimBackend> {
+    let setup = SimSetup::with_seed_predictor(CostModel::a100_llama7b())
+        .with_policy(OfflinePolicy::Psm)
+        .with_seed(cfg.seed);
+    let mut engine = setup.build_with_config(SchedulerConfig {
+        latency_budget_ms: Some(cfg.latency_budget_ms),
+        ..SchedulerConfig::default()
+    });
+    // Finished bodies are drained every step by the drive loop (to retire
+    // deadlines), so keeping them never accumulates.
+    engine.state.keep_finished = true;
+    engine
+}
+
+/// Replay one offered rate through the serving admission policy: every
+/// arrival is admitted, 429-shed (brown-out ladder, then queue cap), or —
+/// once admitted — cancelled in-engine when its SLO-derived deadline
+/// passes before completion (the 504 path).
+pub fn run_cell(cfg: &OverloadExpConfig, qps: f64) -> anyhow::Result<CellOutcome> {
+    let trace = cell_trace(cfg, qps);
+    let mut engine = build_engine(cfg);
+    let registry = std::sync::Arc::clone(&engine.state.registry);
+    let policy = cfg.policy;
+
+    let mut offered = 0usize;
+    let mut admitted = 0usize;
+    let mut rejected_429 = 0usize;
+    let mut timed_out_504 = 0usize;
+    let mut finished = 0usize;
+    let mut shed_online = 0usize;
+    let mut shed_offline = 0usize;
+    // (id, absolute virtual deadline) of every admitted, unfinished
+    // request — a Vec, not a map, so retirement order is deterministic.
+    let mut deadlines: Vec<(RequestId, f64)> = Vec::new();
+    let mut stalled = 0u64;
+
+    let events = &trace.events;
+    let mut next_event = 0usize;
+    loop {
+        // Admit everything that has arrived, through the front-end policy.
+        while let Some(e) = events.get(next_event) {
+            if e.arrival_s > engine.clock_s {
+                break;
+            }
+            next_event += 1;
+            offered += 1;
+            let spec = registry.spec(e.class);
+            let snap = ReplicaSnapshot::of(&engine);
+            let shed = policy.brownout_sheds(
+                snap.headroom_ms(),
+                spec.elastic(),
+                spec.tier == registry.top_tier(),
+            ) || snap.class_waiting(e.class) >= policy.queue_cap;
+            if shed {
+                rejected_429 += 1;
+                if e.class.index() == 0 {
+                    shed_online += 1;
+                } else {
+                    shed_offline += 1;
+                }
+                continue;
+            }
+            admitted += 1;
+            let id = engine.fresh_id();
+            let deadline_s =
+                e.arrival_s + effective_deadline(&policy, spec, e.output_len).as_secs_f64();
+            deadlines.push((id, deadline_s));
+            engine.submit(Request::new(id, e.class, e.arrival_s, e.prompt_len, e.output_len));
+        }
+        // Deadline shed: cancel expired admitted work in-engine before the
+        // next batch, exactly like the replica loop's shed pass.
+        let now = engine.clock_s;
+        let mut i = 0;
+        while i < deadlines.len() {
+            if now >= deadlines[i].1 {
+                let (id, _) = deadlines.swap_remove(i);
+                if engine.abort_request(id) {
+                    timed_out_504 += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        if engine.clock_s >= cfg.max_clock_s {
+            break;
+        }
+        if !engine.has_work() {
+            match events.get(next_event) {
+                Some(e) => {
+                    engine.clock_s = e.arrival_s; // idle-skip to next arrival
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let n = engine.step()?;
+        for req in engine.state.finished.drain(..) {
+            finished += 1;
+            deadlines.retain(|&(id, _)| id != req.id);
+        }
+        if n == 0 {
+            // Work exists but nothing schedulable; advance like run_trace.
+            stalled += 1;
+            match events.get(next_event) {
+                Some(e) if e.arrival_s > engine.clock_s => engine.clock_s = e.arrival_s,
+                _ => engine.clock_s += 0.005,
+            }
+            anyhow::ensure!(stalled <= 5_000_000, "engine livelock: {stalled} stalled iterations");
+        }
+    }
+
+    let duration_s = engine.clock_s.max(1e-9);
+    let resident = deadlines.len();
+    let lost = admitted as i64 - finished as i64 - timed_out_504 as i64 - resident as i64;
+    let report = engine.metrics.report(Some(duration_s));
+    Ok(CellOutcome {
+        offered_qps: qps,
+        offered,
+        admitted,
+        finished,
+        rejected_429,
+        timed_out_504,
+        shed_online,
+        shed_offline,
+        resident,
+        lost,
+        goodput_rps: finished as f64 / duration_s,
+        p99_ttft_ms: report.p99_ttft_ms,
+        duration_s,
+    })
+}
+
+/// Run the offered-rate ramp. Cells execute as independent seeded jobs;
+/// results come back in grid order.
+pub fn run_grid(cfg: &OverloadExpConfig) -> anyhow::Result<Vec<CellOutcome>> {
+    anyhow::ensure!(!cfg.qps_levels.is_empty(), "overload grid needs at least one QPS level");
+    anyhow::ensure!(cfg.policy.queue_cap >= 1, "overload grid needs queue_cap >= 1");
+    let jobs: Vec<Job<'_, anyhow::Result<CellOutcome>>> =
+        cfg.qps_levels.iter().map(|&qps| job(move || run_cell(cfg, qps))).collect();
+    run_jobs(cfg.jobs.max(1), jobs).into_iter().collect()
+}
+
+/// Render the ramp as the `overload` table.
+pub fn table(outcomes: &[CellOutcome]) -> Table {
+    let mut t = Table::new(
+        "overload",
+        &[
+            "offered_qps",
+            "offered",
+            "admitted",
+            "finished",
+            "rejected_429",
+            "timed_out_504",
+            "shed_online",
+            "shed_offline",
+            "resident",
+            "lost",
+            "goodput_rps",
+            "p99_ttft_ms",
+            "duration_s",
+        ],
+    );
+    for o in outcomes {
+        t.row(vec![
+            f1(o.offered_qps),
+            format!("{}", o.offered),
+            format!("{}", o.admitted),
+            format!("{}", o.finished),
+            format!("{}", o.rejected_429),
+            format!("{}", o.timed_out_504),
+            format!("{}", o.shed_online),
+            format!("{}", o.shed_offline),
+            format!("{}", o.resident),
+            format!("{}", o.lost),
+            f2(o.goodput_rps),
+            f1(o.p99_ttft_ms),
+            f1(o.duration_s),
+        ]);
+    }
+    t
+}
+
+/// The overload acceptance gate: every row's ledger must balance exactly —
+/// every arrival accounted for at admission
+/// (`offered = admitted + rejected_429`) and every admitted request
+/// accounted for at exit (`lost = 0`; positive = silently dropped,
+/// negative = double-completed).
+pub fn check_conservation(outcomes: &[CellOutcome]) -> anyhow::Result<()> {
+    for o in outcomes {
+        anyhow::ensure!(
+            o.offered == o.admitted + o.rejected_429,
+            "qps {} admission ledger broken: offered {} vs admitted {} + rejected {}",
+            f1(o.offered_qps),
+            o.offered,
+            o.admitted,
+            o.rejected_429,
+        );
+        anyhow::ensure!(
+            o.lost == 0,
+            "qps {} {} {} request(s): admitted {} vs finished {} + timed_out {} + resident {}",
+            f1(o.offered_qps),
+            if o.lost > 0 { "lost" } else { "double-completed" },
+            o.lost.abs(),
+            o.admitted,
+            o.finished,
+            o.timed_out_504,
+            o.resident,
+        );
+    }
+    Ok(())
+}
+
+/// Run the ramp, print the table, enforce the conservation gate, and
+/// write `<out_dir>/overload.csv`.
+pub fn run_and_save(cfg: &OverloadExpConfig, out_dir: &str) -> anyhow::Result<Vec<CellOutcome>> {
+    let outcomes = run_grid(cfg)?;
+    let t = table(&outcomes);
+    t.print();
+    t.save_to(out_dir)?;
+    println!("-> {out_dir}/overload.csv");
+    check_conservation(&outcomes)?;
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> OverloadExpConfig {
+        OverloadExpConfig {
+            qps_levels: vec![2.0, 20.0],
+            trace_s: 6.0,
+            offline_n: 12,
+            latency_budget_ms: 40.0,
+            policy: OverloadConfig {
+                queue_cap: 8,
+                request_timeout: std::time::Duration::from_secs(4),
+                ..OverloadConfig::default()
+            },
+            max_clock_s: 60.0,
+            seed: 3,
+            jobs: 1,
+        }
+    }
+
+    #[test]
+    fn grid_covers_every_level_in_order_and_conserves_requests() {
+        let cfg = tiny();
+        let outcomes = run_grid(&cfg).unwrap();
+        assert_eq!(outcomes.len(), 2);
+        assert_eq!(outcomes[0].offered_qps, 2.0);
+        assert_eq!(outcomes[1].offered_qps, 20.0);
+        assert!(outcomes[1].offered > outcomes[0].offered, "ramp offers more load");
+        for o in &outcomes {
+            assert!(o.offered > 0);
+            assert!(o.finished > 0, "qps {} served nothing", o.offered_qps);
+        }
+        check_conservation(&outcomes).unwrap();
+        assert_eq!(table(&outcomes).rows.len(), 2);
+    }
+
+    #[test]
+    fn past_the_knee_the_ladder_sheds_or_times_out_work() {
+        let o = run_grid(&tiny()).unwrap().pop().unwrap();
+        // 20 QPS against one sim replica with an 8-deep queue and a 4 s
+        // deadline must trip at least one protection (429 or 504).
+        assert!(
+            o.rejected_429 + o.timed_out_504 > 0,
+            "overloaded cell shed nothing: {o:?}"
+        );
+    }
+
+    #[test]
+    fn csv_is_jobs_invariant_and_seed_deterministic() {
+        let cfg = tiny();
+        let serial = table(&run_grid(&cfg).unwrap()).to_csv();
+        let again = table(&run_grid(&cfg).unwrap()).to_csv();
+        assert_eq!(serial, again, "same seed, same CSV");
+        let parallel =
+            table(&run_grid(&OverloadExpConfig { jobs: 2, ..cfg }).unwrap()).to_csv();
+        assert_eq!(serial, parallel, "CSV bytes must not depend on jobs");
+    }
+
+    #[test]
+    fn conservation_gate_reports_the_offending_row() {
+        let mut outcomes = run_grid(&tiny()).unwrap();
+        outcomes[1].lost = 1;
+        let err = check_conservation(&outcomes).unwrap_err();
+        assert!(err.to_string().contains("qps 20.0"), "{err}");
+        outcomes[1].lost = 0;
+        outcomes[0].offered += 1;
+        let err = check_conservation(&outcomes).unwrap_err();
+        assert!(err.to_string().contains("admission ledger"), "{err}");
+    }
+}

@@ -16,6 +16,9 @@
 //! * `chaos`            — fault-injection comparison (kill/restart
 //!   schedules per router policy); writes artifacts/chaos_compare.csv
 //!   and fails if any cell loses a request
+//! * `overload`         — open-loop QPS ramp through the serving admission
+//!   ladder (429s, deadline 504s); writes artifacts/overload.csv and
+//!   fails if any row's conservation ledger is off
 //! * `lint`             — in-repo static analysis over `rust/src`
 //!   (determinism / alloc-free / panic-free / config-doc invariants);
 //!   exits non-zero on any violation
@@ -96,6 +99,14 @@ USAGE:
                      TTFT penalty, migrations, 503s — byte-identical
                      for a fixed seed and any -j, and fails if any cell
                      loses or double-completes a request)
+  hygen overload     [--out DIR] [--quick] [--seed N] [-j/--jobs N]
+                     (ramp open-loop QPS past single-replica capacity
+                     through the serving admission ladder — brown-out
+                     429s, bounded queues, SLO-derived deadline 504s
+                     cancelled in-engine; writes artifacts/overload.csv —
+                     goodput vs offered load, per-class sheds, p99 TTFT —
+                     byte-identical for a fixed seed and any -j, and
+                     fails on any conservation-ledger imbalance)
 
 MODELS: a100-llama2-7b (default), a40-qwen-14b, a40x4-yi-34b-tp2pp2,
         a100-mistral-7b, a5000-sheared-2.7b
@@ -121,6 +132,7 @@ fn main() {
         Some("cluster-sim") => cmd_cluster_sim(&args),
         Some("multi-slo") => cmd_multi_slo(&args),
         Some("chaos") => cmd_chaos(&args),
+        Some("overload") => cmd_overload(&args),
         Some("lint") => cmd_lint(&args),
         _ => {
             print!("{USAGE}");
@@ -222,6 +234,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             std::time::Duration::from_secs_f64(cfg.cluster.drain_s),
             std::sync::Arc::clone(&registry),
             cfg.cluster.supervisor_config(),
+            cfg.cluster.overload_config(),
         )?
     };
     println!(
@@ -473,6 +486,25 @@ fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
         "chaos gate passed: 0 lost across {} cells ({} faulted)",
         outcomes.len(),
         faulted
+    );
+    Ok(())
+}
+
+fn cmd_overload(args: &Args) -> anyhow::Result<()> {
+    use hygen::experiments::overload::{self, OverloadExpConfig};
+    let mut cfg =
+        if args.get_bool("quick") { OverloadExpConfig::quick() } else { OverloadExpConfig::full() };
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.jobs = args.get_usize_alias("jobs", "j", cfg.jobs).max(1);
+    let out_dir = args.get_or("out", "artifacts");
+    // `run_and_save` already enforces the conservation gate — an
+    // unbalanced admission or exit ledger in any row is a hard error.
+    let outcomes = overload::run_and_save(&cfg, out_dir)?;
+    let shed: usize = outcomes.iter().map(|o| o.rejected_429 + o.timed_out_504).sum();
+    println!(
+        "overload gate passed: ledger balanced across {} offered rates ({} shed/timed out)",
+        outcomes.len(),
+        shed
     );
     Ok(())
 }

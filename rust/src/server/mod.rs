@@ -25,43 +25,205 @@
 
 pub mod http;
 
-use crate::cluster::replica::{Job, ReplicaShared, Supervisor, SupervisorConfig};
+use crate::cluster::replica::{Job, JobError, ReplicaShared, Supervisor, SupervisorConfig};
 use crate::cluster::router::{Router, RouterPolicy};
-use crate::coordinator::classes::ClassRegistry;
+use crate::cluster::ReplicaSnapshot;
+use crate::coordinator::classes::{ClassRegistry, ClassSpec, MAX_CLASSES};
 use crate::coordinator::request::Class;
 use crate::engine::{Engine, ExecutionBackend};
 use crate::runtime::tokenizer;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
-use http::{read_request, write_response};
+use http::{read_request, write_response, write_response_with_headers};
 use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub use crate::cluster::replica::Completion;
 
 /// Default graceful-drain deadline on shutdown.
 pub const DEFAULT_DRAIN: Duration = Duration::from_secs(5);
 
-/// Shared front-end state: the replica ports, the routing policy, and
-/// the SLO-class registry (resolves request `class` names and decides
-/// interactive-vs-elastic routing).
+/// Overload policy: bounded admission, deadline shedding, retry
+/// re-routing, and the brown-out ladder. Built from flat config keys by
+/// [`ClusterConfig::overload_config`](crate::config::ClusterConfig::overload_config);
+/// the defaults here are the documented config defaults.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadConfig {
+    /// Per-class waiting-queue bound on the routed replica. A request
+    /// whose class already has this many waiting requests there is
+    /// rejected with 429 + `Retry-After` instead of deepening the queue.
+    pub queue_cap: usize,
+    /// Hard per-request wallclock backstop. The effective deadline is
+    /// the tighter of this and the class SLO envelope
+    /// ([`effective_deadline`]).
+    pub request_timeout: Duration,
+    /// How many times an interactive request that failed *before any
+    /// token was delivered* may be re-routed to another live replica
+    /// (0 = never retry).
+    pub retry_budget: usize,
+    /// Consecutive per-replica errors that open its circuit breaker.
+    pub breaker_threshold: usize,
+    /// How long an open breaker hides the replica from routing before a
+    /// half-open probe is allowed through.
+    pub breaker_cooldown: Duration,
+    /// Brown-out rung 1: aggregate headroom (ms) below which elastic
+    /// (no-TTFT-SLO) classes are shed with 429.
+    pub brownout_offline_headroom_ms: f64,
+    /// Brown-out rung 2: headroom below which every class except the
+    /// top tier is shed.
+    pub brownout_shed_headroom_ms: f64,
+    /// Brown-out rung 3: headroom below which even top-tier interactive
+    /// work is shed — total admission stop.
+    pub brownout_online_headroom_ms: f64,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            queue_cap: 256,
+            request_timeout: Duration::from_secs(120),
+            retry_budget: 2,
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_secs(1),
+            brownout_offline_headroom_ms: 5.0,
+            brownout_shed_headroom_ms: 2.0,
+            brownout_online_headroom_ms: 0.5,
+        }
+    }
+}
+
+impl OverloadConfig {
+    /// The brown-out ladder decision: should a request of this class be
+    /// shed at the given aggregate headroom? Pure so the overload
+    /// experiment and unit tests exercise exactly the serving policy.
+    /// Infinite headroom (SLO-unaware deployment: no latency budget
+    /// configured) never browns out — the ladder is an SLO-protection
+    /// mechanism, not a load limit.
+    pub fn brownout_sheds(&self, headroom_ms: f64, elastic: bool, top_tier: bool) -> bool {
+        if !headroom_ms.is_finite() {
+            return false;
+        }
+        if headroom_ms < self.brownout_online_headroom_ms {
+            return true;
+        }
+        if headroom_ms < self.brownout_shed_headroom_ms && !top_tier {
+            return true;
+        }
+        headroom_ms < self.brownout_offline_headroom_ms && elastic
+    }
+}
+
+/// The `Retry-After` seconds advertised with a 429: proportional to how
+/// deep past the SLO knee the cluster is (each 250 ms of negative
+/// headroom adds a second), clamped to [1, 30] so clients neither
+/// stampede back instantly nor give up.
+pub fn retry_after_secs(headroom_ms: f64) -> u64 {
+    if !headroom_ms.is_finite() || headroom_ms >= 0.0 {
+        1
+    } else {
+        ((-headroom_ms / 250.0).ceil() as u64 + 1).min(30)
+    }
+}
+
+/// The effective deadline for one request: the tighter of the global
+/// `request_timeout` backstop and the class SLO envelope — TTFT SLO plus
+/// TBT SLO per generated token, scaled by the class tolerance and a 4x
+/// service slack so deadline shedding fires on pathological waits, not
+/// on ordinary queueing jitter. Classes with no SLO at all (elastic
+/// batch work) get the backstop only.
+pub fn effective_deadline(cfg: &OverloadConfig, spec: &ClassSpec, max_tokens: usize) -> Duration {
+    const SLACK: f64 = 4.0;
+    if spec.ttft_slo_ms.is_none() && spec.tbt_slo_ms.is_none() {
+        return cfg.request_timeout;
+    }
+    let envelope_ms = (spec.ttft_slo_ms.unwrap_or(0.0)
+        + spec.tbt_slo_ms.unwrap_or(0.0) * max_tokens as f64)
+        * SLACK
+        * spec.budget_tolerance().max(1.0);
+    let envelope = Duration::from_secs_f64((envelope_ms / 1e3).max(0.001));
+    envelope.min(cfg.request_timeout)
+}
+
+/// Per-replica consecutive-error circuit breaker. Closed (routable) →
+/// open after `breaker_threshold` consecutive errors (hidden from
+/// routing for `breaker_cooldown`) → half-open (cooldown elapsed: one
+/// probe request may route here; success closes, failure re-opens).
+#[derive(Debug, Default)]
+struct Breaker {
+    consecutive: usize,
+    open_until: Option<Instant>,
+}
+
+impl Breaker {
+    fn is_open(&self, now: Instant) -> bool {
+        self.open_until.is_some_and(|t| now < t)
+    }
+}
+
+/// Front-end request-lifecycle ledger. Every admitted request increments
+/// `admitted` exactly once and exactly one terminal counter, so at any
+/// quiescent instant `admitted = finished_200 + rejected_429 +
+/// timed_out_504 + failed_503` and the in-flight remainder is
+/// `resident` — `/metrics` exposes all of them and the overload
+/// experiment asserts the conservation exactly.
+#[derive(Debug, Default)]
+struct FrontendStats {
+    admitted: AtomicUsize,
+    finished: AtomicUsize,
+    rejected_429: AtomicUsize,
+    timed_out_504: AtomicUsize,
+    failed_503: AtomicUsize,
+    retries: AtomicUsize,
+    breaker_open_total: AtomicUsize,
+    /// Per-class 429 breakdown (brown-out + queue-cap sheds).
+    shed_by_class: [AtomicUsize; MAX_CLASSES],
+}
+
+/// Shared front-end state: the replica ports, the routing policy, the
+/// SLO-class registry (resolves request `class` names and decides
+/// interactive-vs-elastic routing), the overload policy, and the
+/// lifecycle ledger.
 struct ClusterState {
     replicas: Vec<ReplicaPort>,
     router: Mutex<Box<dyn Router>>,
     registry: Arc<ClassRegistry>,
+    overload: OverloadConfig,
+    stats: FrontendStats,
 }
 
 struct ReplicaPort {
     tx: Sender<Job>,
     shared: Arc<ReplicaShared>,
+    breaker: Mutex<Breaker>,
 }
 
 impl ClusterState {
     fn all_failed(&self) -> bool {
         self.replicas.iter().all(|r| r.shared.failed.load(Ordering::SeqCst))
+    }
+
+    fn breaker_on_success(&self, target: usize) {
+        let mut b = self.replicas[target].breaker.lock().unwrap();
+        b.consecutive = 0;
+        b.open_until = None;
+    }
+
+    fn breaker_on_error(&self, target: usize) {
+        let mut b = self.replicas[target].breaker.lock().unwrap();
+        b.consecutive += 1;
+        if b.consecutive >= self.overload.breaker_threshold {
+            let now = Instant::now();
+            // Count closed/half-open -> open transitions only: a failed
+            // half-open probe re-opens (and re-counts), but piling more
+            // errors onto an already-open breaker does not.
+            if !b.is_open(now) {
+                self.stats.breaker_open_total.fetch_add(1, Ordering::Relaxed);
+            }
+            b.open_until = Some(now + self.overload.breaker_cooldown);
+        }
     }
 }
 
@@ -117,6 +279,7 @@ impl Server {
             drain,
             Arc::new(ClassRegistry::default_two()),
             SupervisorConfig::default(),
+            OverloadConfig::default(),
         )
     }
 
@@ -128,6 +291,8 @@ impl Server {
     /// restart policy: a persistently failing engine is rebuilt by its
     /// factory with capped exponential backoff, and the replica publishes
     /// itself `failed` (routers skip it) until the restart lands.
+    /// `overload` sets the admission/deadline/retry/brown-out policy
+    /// (see [`OverloadConfig`]).
     #[allow(clippy::too_many_arguments)]
     pub fn start_cluster_with_registry<B, F>(
         bind: &str,
@@ -137,6 +302,7 @@ impl Server {
         drain: Duration,
         registry: Arc<ClassRegistry>,
         supervisor: SupervisorConfig,
+        overload: OverloadConfig,
     ) -> anyhow::Result<Server>
     where
         B: ExecutionBackend + 'static,
@@ -172,10 +338,16 @@ impl Server {
         let state = Arc::new(ClusterState {
             replicas: replica_handles
                 .iter()
-                .map(|r| ReplicaPort { tx: r.tx.clone(), shared: Arc::clone(&r.shared) })
+                .map(|r| ReplicaPort {
+                    tx: r.tx.clone(),
+                    shared: Arc::clone(&r.shared),
+                    breaker: Mutex::new(Breaker::default()),
+                })
                 .collect(),
             router: Mutex::new(router),
             registry,
+            overload,
+            stats: FrontendStats::default(),
         });
 
         let accept_thread = {
@@ -345,6 +517,64 @@ fn fleet_fields(state: &ClusterState) -> Vec<(&'static str, Json)> {
     ]
 }
 
+/// Request-lifecycle counters for `/metrics`. Like [`fleet_fields`],
+/// these are front-end state riding beside the engine reports (both in
+/// the single-replica flat payload and the multi-replica aggregate), so
+/// the report-field drift guard stays exact. `resident` is derived from
+/// the conservation identity, never counted independently.
+fn overload_fields(state: &ClusterState) -> Vec<(&'static str, Json)> {
+    let s = &state.stats;
+    let admitted = s.admitted.load(Ordering::Relaxed);
+    let finished = s.finished.load(Ordering::Relaxed);
+    let rejected = s.rejected_429.load(Ordering::Relaxed);
+    let timed_out = s.timed_out_504.load(Ordering::Relaxed);
+    let failed = s.failed_503.load(Ordering::Relaxed);
+    let resident = admitted.saturating_sub(finished + rejected + timed_out + failed);
+    let shed: Vec<Json> = (0..state.registry.len())
+        .map(|i| Json::from(s.shed_by_class[i].load(Ordering::Relaxed)))
+        .collect();
+    vec![
+        ("admitted", Json::from(admitted)),
+        ("finished_200", Json::from(finished)),
+        ("rejected_429", Json::from(rejected)),
+        ("timed_out_504", Json::from(timed_out)),
+        ("failed_503", Json::from(failed)),
+        ("resident", Json::from(resident)),
+        ("retries", Json::from(s.retries.load(Ordering::Relaxed))),
+        ("breaker_open_total", Json::from(s.breaker_open_total.load(Ordering::Relaxed))),
+        ("shed_by_class", Json::Arr(shed)),
+    ]
+}
+
+/// JSON error body with proper escaping. A raw `format!` would let a
+/// quote or backslash in the message break the payload (see the
+/// `error_body_escapes_message` pin test); routing through [`Json`]
+/// makes injection structurally impossible.
+fn error_body(message: &str) -> String {
+    Json::obj(vec![("error", Json::from(message))]).to_string()
+}
+
+/// Write a 429 admission rejection with its `Retry-After` hint and
+/// count it in the ledger (total + per-class shed breakdown).
+fn reject_429(
+    stream: &mut std::net::TcpStream,
+    state: &ClusterState,
+    class: Class,
+    headroom_ms: f64,
+) -> std::io::Result<()> {
+    state.stats.rejected_429.fetch_add(1, Ordering::Relaxed);
+    if let Some(c) = state.stats.shed_by_class.get(class.index()) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+    write_response_with_headers(
+        stream,
+        429,
+        "application/json",
+        error_body("over capacity").as_bytes(),
+        &[("Retry-After", retry_after_secs(headroom_ms).to_string())],
+    )
+}
+
 fn handle_connection(
     stream: &mut std::net::TcpStream,
     state: &ClusterState,
@@ -359,12 +589,16 @@ fn handle_connection(
         ("GET", "/health") => write_response(stream, 200, "application/json", b"{\"status\":\"ok\"}"),
         ("GET", "/metrics") => {
             let body = if state.replicas.len() == 1 {
-                let body = state.replicas[0].shared.metrics_json.lock().unwrap().clone();
-                if body.is_empty() {
-                    "{}".to_string()
-                } else {
-                    body
+                // Flat per-engine report with the front-end lifecycle
+                // counters merged in as top-level fields.
+                let text = state.replicas[0].shared.metrics_json.lock().unwrap().clone();
+                let mut j = Json::parse(&text).unwrap_or(Json::Obj(Default::default()));
+                if let Json::Obj(map) = &mut j {
+                    for (k, v) in overload_fields(state) {
+                        map.insert(k.to_string(), v);
+                    }
                 }
+                j.to_pretty()
             } else {
                 let reports: Vec<Json> = state
                     .replicas
@@ -374,91 +608,173 @@ fn handle_connection(
                         Json::parse(&text).unwrap_or(Json::Obj(Default::default()))
                     })
                     .collect();
-                aggregate_metrics(&reports, fleet_fields(state)).to_pretty()
+                let mut fleet = fleet_fields(state);
+                fleet.extend(overload_fields(state));
+                aggregate_metrics(&reports, fleet).to_pretty()
             };
             write_response(stream, 200, "application/json", body.as_bytes())
         }
-        ("POST", "/v1/completions") => {
-            if state.all_failed() {
+        ("POST", "/v1/completions") => handle_completion(stream, state, &req.body),
+        ("POST", _) | ("GET", _) => write_response(stream, 404, "application/json", b"{\"error\":\"not found\"}"),
+        _ => write_response(stream, 405, "application/json", b"{\"error\":\"method\"}"),
+    }
+}
+
+/// One attempt's terminal-vs-retryable classification (see the retry
+/// loop in [`handle_completion`]).
+enum Attempt {
+    /// A terminal HTTP response was written; its ledger counter is
+    /// already incremented.
+    Done(std::io::Result<()>),
+    /// The attempt failed before any token was delivered; the request
+    /// may be re-routed if the retry gate allows.
+    Failed(&'static str),
+}
+
+/// The `POST /v1/completions` lifecycle: parse → admit (ledger entry) →
+/// brown-out ladder → route (breaker-aware) → bounded admission →
+/// execute with an absolute deadline → classify, with failed attempts
+/// re-routed to another live replica under a bounded retry budget.
+fn handle_completion(
+    stream: &mut std::net::TcpStream,
+    state: &ClusterState,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let parsed = Json::parse(&String::from_utf8_lossy(body));
+    let Ok(j) = parsed else {
+        return write_response(stream, 400, "application/json", b"{\"error\":\"bad json\"}");
+    };
+    let Some(prompt) = j.get("prompt").as_str() else {
+        return write_response(stream, 400, "application/json", b"{\"error\":\"missing prompt\"}");
+    };
+    let max_tokens = (j.get("max_tokens").as_u64().unwrap_or(16) as usize).clamp(1, 1024);
+    // Resolve the class name against the registry (default: the
+    // flagship class). Unknown names are an explicit client error, not
+    // a silent interactive upgrade.
+    let class = match j.get("class").as_str() {
+        None => Class::ONLINE,
+        Some(name) => match state.registry.by_name(name) {
+            Some(c) => c,
+            None => {
+                return write_response(
+                    stream,
+                    400,
+                    "application/json",
+                    b"{\"error\":\"unknown class\"}",
+                )
+            }
+        },
+    };
+    // ---- Lifecycle entry. Everything past this point is in the
+    // conservation ledger: `admitted` is incremented exactly once per
+    // request, and every exit below increments exactly one terminal
+    // counter (200 / 429 / 503 / 504). Malformed requests above never
+    // enter the ledger — they carry no work.
+    state.stats.admitted.fetch_add(1, Ordering::Relaxed);
+    if state.all_failed() {
+        state.stats.failed_503.fetch_add(1, Ordering::Relaxed);
+        return write_response(
+            stream,
+            503,
+            "application/json",
+            error_body("backend failed").as_bytes(),
+        );
+    }
+    let spec = state.registry.spec(class);
+    let elastic = spec.elastic();
+    let top_tier = spec.tier == state.registry.top_tier();
+    // The absolute deadline travels with the job: the engine sheds
+    // expired work before building each batch (KV + batch slot freed
+    // in-engine), and the handler's recv below waits only as long as
+    // the deadline plus a grace period for the shed reply to arrive.
+    let deadline_at = Instant::now() + effective_deadline(&state.overload, spec, max_tokens);
+    let prompt_tokens = tokenizer::encode(prompt);
+    let mut budget = state.overload.retry_budget;
+    let mut tried: Vec<usize> = Vec::new();
+    loop {
+        // Fresh census every attempt: queue depths and failure flags
+        // move while a reply is awaited.
+        let snaps: Vec<ReplicaSnapshot> =
+            state.replicas.iter().map(|r| r.shared.routing_snapshot()).collect();
+        let agg_headroom = snaps
+            .iter()
+            .filter(|s| !s.failed)
+            .map(|s| s.headroom_ms())
+            .fold(f64::INFINITY, f64::min);
+        // Brown-out ladder: headroom-driven admission stop, applied
+        // before any queueing so shed work costs nothing downstream.
+        if state.overload.brownout_sheds(agg_headroom, elastic, top_tier) {
+            return reject_429(stream, state, class, agg_headroom);
+        }
+        // Route from the published census. Elastic submissions need a
+        // reply channel too, so a deferring router falls back to its
+        // interactive placement. Breaker-open and already-tried
+        // replicas are masked failed for this attempt. A single replica
+        // routes trivially and skips the breaker mask — with nowhere to
+        // re-route, an open breaker would only turn fast errors into
+        // blanket 503s.
+        let target = if state.replicas.len() == 1 {
+            0
+        } else {
+            let now = Instant::now();
+            let mut masked = snaps.clone();
+            for (i, s) in masked.iter_mut().enumerate() {
+                if tried.contains(&i) || state.replicas[i].breaker.lock().unwrap().is_open(now) {
+                    s.failed = true;
+                }
+            }
+            if masked.iter().all(|s| s.failed) {
+                // Everything is masked or down: fall back to the raw
+                // census so a half-open probe can still land.
+                masked = snaps.clone();
+            }
+            if masked.iter().all(|s| s.failed) {
+                state.stats.failed_503.fetch_add(1, Ordering::Relaxed);
                 return write_response(
                     stream,
                     503,
                     "application/json",
-                    b"{\"error\":\"backend failed\"}",
+                    error_body("backend failed").as_bytes(),
                 );
             }
-            let parsed = Json::parse(&String::from_utf8_lossy(&req.body));
-            let Ok(j) = parsed else {
-                return write_response(stream, 400, "application/json", b"{\"error\":\"bad json\"}");
-            };
-            let Some(prompt) = j.get("prompt").as_str() else {
-                return write_response(stream, 400, "application/json", b"{\"error\":\"missing prompt\"}");
-            };
-            let max_tokens = j.get("max_tokens").as_u64().unwrap_or(16) as usize;
-            // Resolve the class name against the registry (default:
-            // the flagship class). Unknown names are an explicit client
-            // error, not a silent interactive upgrade.
-            let class = match j.get("class").as_str() {
-                None => Class::ONLINE,
-                Some(name) => match state.registry.by_name(name) {
-                    Some(c) => c,
-                    None => {
-                        return write_response(
-                            stream,
-                            400,
-                            "application/json",
-                            b"{\"error\":\"unknown class\"}",
-                        )
-                    }
-                },
-            };
-            // Route from the published census snapshots. Elastic
-            // submissions need a reply channel too, so a deferring router
-            // falls back to its interactive placement. A single replica
-            // skips the snapshot copies and the router lock entirely —
-            // the classic one-engine server pays no routing overhead.
-            let target = if state.replicas.len() == 1 {
-                0
+            let mut router = state.router.lock().unwrap();
+            let i = if elastic {
+                router.route_offline(&masked).unwrap_or_else(|| router.route_online(&masked))
             } else {
-                let snaps: Vec<_> =
-                    state.replicas.iter().map(|r| r.shared.routing_snapshot()).collect();
-                let mut router = state.router.lock().unwrap();
-                let i = if state.registry.spec(class).elastic() {
-                    router
-                        .route_offline(&snaps)
-                        .unwrap_or_else(|| router.route_online(&snaps))
-                } else {
-                    router.route_online(&snaps)
-                };
-                i.min(state.replicas.len() - 1)
+                router.route_online(&masked)
             };
-            let port = &state.replicas[target];
-            if port.shared.failed.load(Ordering::SeqCst) {
-                return write_response(
-                    stream,
-                    503,
-                    "application/json",
-                    b"{\"error\":\"backend failed\"}",
-                );
-            }
-            let (reply_tx, reply_rx) = channel();
-            let job = Job {
-                prompt: tokenizer::encode(prompt),
-                max_tokens: max_tokens.clamp(1, 1024),
-                class,
-                reply: reply_tx,
-            };
-            port.shared.note_submitted(class);
-            if port.tx.send(job).is_err() {
-                // The replica thread is gone (panic or exit) without
-                // flagging itself: mark it failed so routers stop
-                // selecting it instead of 503-ing every routed request
-                // while healthy replicas idle.
-                port.shared.failed.store(true, Ordering::SeqCst);
-                return write_response(stream, 503, "application/json", b"{\"error\":\"engine down\"}");
-            }
-            match reply_rx.recv_timeout(Duration::from_secs(120)) {
+            i.min(state.replicas.len() - 1)
+        };
+        // Bounded admission: the routed replica's waiting queue for
+        // this class is full → 429 with a headroom-derived Retry-After
+        // instead of unbounded queue growth.
+        if snaps[target].class_waiting(class) >= state.overload.queue_cap {
+            return reject_429(stream, state, class, snaps[target].headroom_ms());
+        }
+        let port = &state.replicas[target];
+        let (reply_tx, reply_rx) = channel();
+        let job = Job {
+            prompt: prompt_tokens.clone(),
+            max_tokens,
+            class,
+            reply: reply_tx,
+            deadline: Some(deadline_at),
+        };
+        port.shared.note_submitted(class);
+        let outcome = if port.tx.send(job).is_err() {
+            // The replica thread is gone (panic or exit) without
+            // flagging itself: mark it failed so routers stop selecting
+            // it instead of 503-ing every routed request while healthy
+            // replicas idle.
+            port.shared.failed.store(true, Ordering::SeqCst);
+            Attempt::Failed("engine down")
+        } else {
+            let wait =
+                deadline_at.saturating_duration_since(Instant::now()) + Duration::from_secs(1);
+            match reply_rx.recv_timeout(wait) {
                 Ok(Ok(c)) => {
+                    state.breaker_on_success(target);
+                    state.stats.finished.fetch_add(1, Ordering::Relaxed);
                     let body = Json::obj(vec![
                         ("id", c.id.into()),
                         ("replica", target.into()),
@@ -466,29 +782,98 @@ fn handle_connection(
                         ("num_tokens", c.tokens.len().into()),
                         ("latency_ms", c.latency_ms.into()),
                     ]);
-                    write_response(stream, 200, "application/json", body.to_string().as_bytes())
+                    Attempt::Done(write_response(
+                        stream,
+                        200,
+                        "application/json",
+                        body.to_string().as_bytes(),
+                    ))
                 }
-                Ok(Err(e)) => {
-                    let body = format!("{{\"error\":\"{}\"}}", e.message());
-                    write_response(stream, 503, "application/json", body.as_bytes())
+                Ok(Err(JobError::DeadlineExceeded)) => {
+                    // The engine shed it at the deadline: KV blocks and
+                    // batch slot already reclaimed. Never retried — the
+                    // deadline is spent.
+                    state.stats.timed_out_504.fetch_add(1, Ordering::Relaxed);
+                    Attempt::Done(write_response(
+                        stream,
+                        504,
+                        "application/json",
+                        error_body(JobError::DeadlineExceeded.message()).as_bytes(),
+                    ))
+                }
+                Ok(Err(JobError::DrainTimeout)) => {
+                    // Shutdown refusal: not a replica fault, no retry.
+                    state.stats.failed_503.fetch_add(1, Ordering::Relaxed);
+                    Attempt::Done(write_response(
+                        stream,
+                        503,
+                        "application/json",
+                        error_body(JobError::DrainTimeout.message()).as_bytes(),
+                    ))
+                }
+                Ok(Err(JobError::BackendFailed)) => {
+                    Attempt::Failed(JobError::BackendFailed.message())
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     // The replica thread exited (shutdown race): that is
                     // an explicit refusal, not a request timeout.
-                    write_response(
+                    state.stats.failed_503.fetch_add(1, Ordering::Relaxed);
+                    Attempt::Done(write_response(
                         stream,
                         503,
                         "application/json",
-                        b"{\"error\":\"server stopping\"}",
-                    )
+                        error_body("server stopping").as_bytes(),
+                    ))
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    write_response(stream, 500, "application/json", b"{\"error\":\"timeout\"}")
+                    // The engine missed even its in-engine shed pass
+                    // (wedged thread). The request may still be live, so
+                    // it must NEVER be re-routed — a retry could
+                    // double-complete; the deadline shed reclaims its
+                    // memory whenever the engine resumes.
+                    state.stats.timed_out_504.fetch_add(1, Ordering::Relaxed);
+                    Attempt::Done(write_response(
+                        stream,
+                        504,
+                        "application/json",
+                        error_body("request timed out").as_bytes(),
+                    ))
                 }
             }
+        };
+        match outcome {
+            Attempt::Done(r) => return r,
+            Attempt::Failed(msg) => {
+                state.breaker_on_error(target);
+                tried.push(target);
+                // Retry gate: interactive work only (elastic work has no
+                // latency promise to salvage), pre-first-token only — a
+                // failure reply means the engine tore the request down
+                // before delivering anything, so a re-route cannot
+                // double-complete — within budget and deadline, and only
+                // when a different live replica exists to route to.
+                let another_alive = state.replicas.iter().enumerate().any(|(i, r)| {
+                    !tried.contains(&i) && !r.shared.failed.load(Ordering::SeqCst)
+                });
+                if !elastic
+                    && budget > 0
+                    && state.replicas.len() > 1
+                    && another_alive
+                    && Instant::now() < deadline_at
+                {
+                    budget -= 1;
+                    state.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                state.stats.failed_503.fetch_add(1, Ordering::Relaxed);
+                return write_response(
+                    stream,
+                    503,
+                    "application/json",
+                    error_body(msg).as_bytes(),
+                );
+            }
         }
-        ("POST", _) | ("GET", _) => write_response(stream, 404, "application/json", b"{\"error\":\"not found\"}"),
-        _ => write_response(stream, 405, "application/json", b"{\"error\":\"method\"}"),
     }
 }
 
@@ -544,6 +929,12 @@ mod tests {
 
     fn start_echo_server() -> Server {
         Server::start("127.0.0.1:0", echo_engine, 2).unwrap()
+    }
+
+    /// Parse the JSON body out of a raw HTTP response.
+    fn body_json(resp: &str) -> Json {
+        let body = resp.split("\r\n\r\n").nth(1).unwrap_or("");
+        Json::parse(body).unwrap()
     }
 
     fn completions_request_class(prompt: &str, class: &str) -> String {
@@ -885,5 +1276,238 @@ mod tests {
     fn job_error_messages() {
         assert_eq!(JobError::BackendFailed.message(), "backend failed");
         assert_eq!(JobError::DrainTimeout.message(), "server stopping");
+        assert_eq!(JobError::DeadlineExceeded.message(), "request timed out");
+    }
+
+    #[test]
+    fn error_body_escapes_message() {
+        // Pin test for the JSON-injection fix: a message containing a
+        // quote must yield a parseable body with the message intact, not
+        // a truncated/injected payload.
+        let body = error_body(r#"engine said "no" \ twice"#);
+        let j = Json::parse(&body).expect("error body must stay valid JSON");
+        assert_eq!(j.get("error").as_str(), Some(r#"engine said "no" \ twice"#));
+    }
+
+    #[test]
+    fn brownout_ladder_degrades_by_class() {
+        let cfg = OverloadConfig::default(); // rungs at 5.0 / 2.0 / 0.5 ms
+        // Plenty of headroom: nobody sheds.
+        assert!(!cfg.brownout_sheds(100.0, true, false));
+        // Rung 1: elastic classes shed, interactive tiers keep going.
+        assert!(cfg.brownout_sheds(4.0, true, false));
+        assert!(!cfg.brownout_sheds(4.0, false, false));
+        assert!(!cfg.brownout_sheds(4.0, false, true));
+        // Rung 2: everything below the top tier sheds.
+        assert!(cfg.brownout_sheds(1.0, false, false));
+        assert!(!cfg.brownout_sheds(1.0, false, true));
+        // Rung 3: total admission stop.
+        assert!(cfg.brownout_sheds(0.1, false, true));
+        // SLO-unaware deployments (infinite headroom) never brown out.
+        assert!(!cfg.brownout_sheds(f64::INFINITY, true, false));
+    }
+
+    #[test]
+    fn retry_after_scales_with_negative_headroom() {
+        assert_eq!(retry_after_secs(f64::INFINITY), 1);
+        assert_eq!(retry_after_secs(3.0), 1);
+        assert_eq!(retry_after_secs(-100.0), 2);
+        assert_eq!(retry_after_secs(-1000.0), 5);
+        assert_eq!(retry_after_secs(-1e9), 30, "clamped");
+    }
+
+    #[test]
+    fn effective_deadline_takes_tighter_of_slo_and_backstop() {
+        let cfg = OverloadConfig::default();
+        let reg = ClassRegistry::default_two();
+        let online = reg.spec(Class::ONLINE);
+        // (1000 + 100 * 10) * 4 = 8 s envelope, under the 120 s backstop.
+        assert_eq!(effective_deadline(&cfg, online, 10), Duration::from_secs(8));
+        // Elastic class: no SLO envelope, backstop applies.
+        assert_eq!(effective_deadline(&cfg, reg.spec(Class::OFFLINE), 10), cfg.request_timeout);
+        // A tight backstop wins over a roomy envelope.
+        let tight = OverloadConfig { request_timeout: Duration::from_millis(200), ..cfg };
+        assert_eq!(effective_deadline(&tight, online, 10), Duration::from_millis(200));
+    }
+
+    #[test]
+    fn timed_out_request_returns_504_and_frees_engine_capacity() {
+        // A request that overruns `request_timeout_s` must come back as
+        // 504 (not 500), be shed *in-engine* (KV blocks and batch slot
+        // reclaimed), and leave the replica serving.
+        let server = Server::start_cluster_with_registry(
+            "127.0.0.1:0",
+            vec![|| {
+                let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+                let sched = HybridScheduler::new(
+                    SchedulerConfig { latency_budget_ms: None, ..Default::default() },
+                    LatencyPredictor::default_seed(),
+                );
+                Ok(Engine::new(sched, state, SlowBackend))
+            }],
+            RouterPolicy::RoundRobin.build(),
+            2,
+            DEFAULT_DRAIN,
+            Arc::new(ClassRegistry::default_two()),
+            SupervisorConfig::default(),
+            OverloadConfig {
+                request_timeout: Duration::from_millis(200),
+                ..OverloadConfig::default()
+            },
+        )
+        .unwrap();
+        // 1024 decode steps x 3 ms >> the 200 ms timeout.
+        let body = r#"{"prompt": "abcd", "max_tokens": 1024}"#;
+        let raw = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let r = http(server.addr, &raw);
+        assert!(r.contains("504"), "timeout must be 504, got: {r}");
+        assert!(r.contains("request timed out"), "{r}");
+        // The engine shed the work: census drains to empty (blocks and
+        // batch slot released), instead of the dead request squatting
+        // until its 1024 tokens would have finished (~3 s).
+        let shared = Arc::clone(&server.replica_handles[0].shared);
+        let t0 = std::time::Instant::now();
+        while shared.routing_snapshot().total_depth() > 0 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(2),
+                "timed-out request still resident in the engine census"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // And the replica keeps serving within the same timeout budget.
+        let r = http(server.addr, &completions_request("wxyz"));
+        assert!(r.contains("200 OK"), "replica must serve after a shed: {r}");
+        // Ledger: one admitted request timed out, one finished.
+        let m = body_json(&http(server.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert_eq!(m.get("timed_out_504").as_u64(), Some(1), "{m}");
+        assert_eq!(m.get("finished_200").as_u64(), Some(1), "{m}");
+        assert_eq!(m.get("resident").as_u64(), Some(0), "{m}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn full_queue_rejects_429_with_retry_after() {
+        // queue_cap = 0 makes every admission find a "full" queue: the
+        // request is rejected up front with 429 + Retry-After and counted
+        // in the ledger, and nothing reaches the engine.
+        let server = Server::start_cluster_with_registry(
+            "127.0.0.1:0",
+            vec![echo_engine],
+            RouterPolicy::RoundRobin.build(),
+            2,
+            DEFAULT_DRAIN,
+            Arc::new(ClassRegistry::default_two()),
+            SupervisorConfig::default(),
+            OverloadConfig { queue_cap: 0, ..OverloadConfig::default() },
+        )
+        .unwrap();
+        let r = http(server.addr, &completions_request("abcd"));
+        assert!(r.contains("429"), "{r}");
+        assert!(r.contains("Retry-After: 1"), "{r}");
+        assert!(r.contains("over capacity"), "{r}");
+        let m = body_json(&http(server.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert_eq!(m.get("admitted").as_u64(), Some(1), "{m}");
+        assert_eq!(m.get("rejected_429").as_u64(), Some(1), "{m}");
+        assert_eq!(m.get("resident").as_u64(), Some(0), "{m}");
+        // Class 0 took the shed; class 1 is untouched.
+        let shed = m.get("shed_by_class").as_arr().unwrap();
+        assert_eq!(shed[0].as_u64(), Some(1), "{m}");
+        assert_eq!(shed[1].as_u64(), Some(0), "{m}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_expose_lifecycle_counters_in_both_modes() {
+        const KEYS: [&str; 9] = [
+            "admitted",
+            "finished_200",
+            "rejected_429",
+            "timed_out_504",
+            "failed_503",
+            "resident",
+            "retries",
+            "breaker_open_total",
+            "shed_by_class",
+        ];
+        let single = start_echo_server();
+        let m = http(single.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        for k in KEYS {
+            assert!(m.contains(&format!("\"{k}\"")), "single-replica /metrics missing {k}: {m}");
+        }
+        single.shutdown();
+        let multi = Server::start_cluster(
+            "127.0.0.1:0",
+            vec![echo_engine, echo_engine],
+            RouterPolicy::RoundRobin.build(),
+            2,
+            DEFAULT_DRAIN,
+        )
+        .unwrap();
+        let m = http(multi.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        for k in KEYS {
+            assert!(m.contains(&format!("\"{k}\"")), "multi-replica /metrics missing {k}: {m}");
+        }
+        multi.shutdown();
+    }
+
+    /// Backend whose first-built instance fails every execution and later
+    /// instances echo — replica 0 starts broken, replica 1 (and any
+    /// supervisor-restarted engine) is healthy.
+    struct FirstBrokenBackend {
+        fail: bool,
+    }
+    impl ExecutionBackend for FirstBrokenBackend {
+        fn execute(&mut self, batch: &Batch, state: &mut EngineState) -> anyhow::Result<f64> {
+            if self.fail {
+                anyhow::bail!("injected backend failure");
+            }
+            for e in &batch.entries {
+                let req = state.req_mut(e.id);
+                let emit =
+                    if e.is_prefill { req.prefilled + e.n_tokens >= req.prompt_len } else { true };
+                if emit {
+                    let n = req.output_tokens.len();
+                    let tok = req.prompt.get(n).copied().unwrap_or(b'!' as u32);
+                    req.output_tokens.push(tok);
+                }
+            }
+            Ok(0.0005)
+        }
+    }
+
+    #[test]
+    fn failed_attempt_reroutes_to_live_replica() {
+        static BUILDS: AtomicUsize = AtomicUsize::new(0);
+        fn first_broken_engine() -> anyhow::Result<Engine<FirstBrokenBackend>> {
+            let fail = BUILDS.fetch_add(1, Ordering::SeqCst) == 0;
+            let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+            let sched = HybridScheduler::new(
+                SchedulerConfig { latency_budget_ms: None, ..Default::default() },
+                LatencyPredictor::default_seed(),
+            );
+            Ok(Engine::new(sched, state, FirstBrokenBackend { fail }))
+        }
+        let server = Server::start_cluster(
+            "127.0.0.1:0",
+            vec![first_broken_engine, first_broken_engine],
+            RouterPolicy::RoundRobin.build(),
+            2,
+            DEFAULT_DRAIN,
+        )
+        .unwrap();
+        // Round-robin sends the first request to replica 0, whose backend
+        // fails before any token is delivered; the front end re-routes it
+        // to replica 1 under the retry budget and the client sees 200.
+        let r = http(server.addr, &completions_request_class("abcd", "online"));
+        assert!(r.contains("200 OK"), "failed attempt must be rerouted: {r}");
+        let m = body_json(&http(server.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert_eq!(m.get("retries").as_u64(), Some(1), "{m}");
+        assert_eq!(m.get("finished_200").as_u64(), Some(1), "{m}");
+        assert_eq!(m.get("failed_503").as_u64(), Some(0), "{m}");
+        server.shutdown();
     }
 }

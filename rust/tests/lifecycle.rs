@@ -1,0 +1,271 @@
+//! Request-lifecycle conservation under hostile clients and a flaky
+//! replica, asserted against a **live** `Server`:
+//!
+//! Seeded random cases mix normal clients, clients that time out and
+//! hang up early, clients that disconnect mid-request, an over-capacity
+//! burst against a tiny admission queue, and a mid-run injected replica
+//! kill (the backend errors for a window; the supervisor restarts it).
+//! After the dust settles, the front-end ledger must balance **exactly**:
+//!
+//! ```text
+//! admitted = finished_200 + rejected_429 + timed_out_504 + failed_503
+//! ```
+//!
+//! with `resident = 0` — every admitted request resolved exactly once
+//! (no silent drop, no double completion), no matter how its client
+//! behaved. Clients additionally verify they never receive two HTTP
+//! responses on one connection, and that the 200s they observed are a
+//! subset of the server's `finished_200` count (a disconnected client's
+//! finish still counts server-side; the reverse would be a double
+//! completion).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hygen::cluster::replica::SupervisorConfig;
+use hygen::cluster::router::RouterPolicy;
+use hygen::coordinator::batch::Batch;
+use hygen::coordinator::predictor::LatencyPredictor;
+use hygen::coordinator::queues::OfflinePolicy;
+use hygen::coordinator::scheduler::{HybridScheduler, SchedulerConfig};
+use hygen::coordinator::state::EngineState;
+use hygen::engine::{Engine, ExecutionBackend};
+use hygen::server::{OverloadConfig, Server, DEFAULT_DRAIN};
+use hygen::util::json::Json;
+use hygen::util::prop::{check, Gen};
+
+/// Echo-style token generator with a real per-iteration delay (so queues
+/// form) and a test-controlled kill switch: while the switch is set,
+/// every `execute` errors, the engine thread dies, and the supervisor
+/// restarts it — the injected "replica kill".
+struct FlakyBackend {
+    kill: Arc<AtomicBool>,
+    delay: Duration,
+}
+
+impl ExecutionBackend for FlakyBackend {
+    fn execute(&mut self, batch: &Batch, state: &mut EngineState) -> anyhow::Result<f64> {
+        anyhow::ensure!(!self.kill.load(Ordering::SeqCst), "injected replica kill");
+        std::thread::sleep(self.delay);
+        for e in &batch.entries {
+            let req = state.req_mut(e.id);
+            let emit =
+                if e.is_prefill { req.prefilled + e.n_tokens >= req.prompt_len } else { true };
+            if emit {
+                let n = req.output_tokens.len();
+                let tok = req.prompt.get(n).copied().unwrap_or(b'!' as u32);
+                req.output_tokens.push(tok);
+            }
+        }
+        Ok(0.0005)
+    }
+}
+
+fn start_server(kills: &[Arc<AtomicBool>], overload: OverloadConfig) -> Server {
+    let factories: Vec<_> = kills
+        .iter()
+        .map(|k| {
+            let k = Arc::clone(k);
+            move || -> anyhow::Result<Engine<FlakyBackend>> {
+                let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+                let sched = HybridScheduler::new(
+                    SchedulerConfig { latency_budget_ms: None, ..Default::default() },
+                    LatencyPredictor::default_seed(),
+                );
+                Ok(Engine::new(
+                    sched,
+                    state,
+                    FlakyBackend { kill: Arc::clone(&k), delay: Duration::from_millis(3) },
+                ))
+            }
+        })
+        .collect();
+    Server::start_cluster_with_registry(
+        "127.0.0.1:0",
+        factories,
+        RouterPolicy::RoundRobin.build(),
+        8,
+        DEFAULT_DRAIN,
+        Arc::new(hygen::coordinator::classes::ClassRegistry::default_two()),
+        // Fast recovery so the injected kill window never exhausts the
+        // restart budget.
+        SupervisorConfig {
+            max_restarts: 20,
+            backoff_initial: Duration::from_millis(50),
+            backoff_cap: Duration::from_millis(500),
+        },
+        overload,
+    )
+    .unwrap()
+}
+
+fn completions_raw(prompt: &str, class: &str, max_tokens: usize) -> String {
+    let body =
+        format!(r#"{{"prompt": "{prompt}", "max_tokens": {max_tokens}, "class": "{class}"}}"#);
+    format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+}
+
+/// Full request/response exchange; returns the raw response text.
+fn http(addr: std::net::SocketAddr, raw: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut out = String::new();
+    let _ = s.read_to_string(&mut out);
+    out
+}
+
+fn scrape_ledger(addr: std::net::SocketAddr) -> Json {
+    let resp = http(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap_or("");
+    Json::parse(body).unwrap()
+}
+
+fn counter(m: &Json, key: &str) -> u64 {
+    m.get(key).as_u64().unwrap_or_else(|| panic!("metrics missing {key}: {m}"))
+}
+
+/// What one client thread did and saw.
+enum ClientOutcome {
+    /// Full exchange: HTTP status observed, plus how many `HTTP/1.1`
+    /// response heads arrived on the one connection (must be 1).
+    Status(u16, usize),
+    /// Hung up before any (full) response.
+    Abandoned,
+}
+
+fn run_client(addr: std::net::SocketAddr, behavior: usize, raw: &str) -> ClientOutcome {
+    match behavior {
+        // Client-side timeout: give up long before the server's deadline
+        // and hang up; the server must still resolve the request.
+        0 => {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(raw.as_bytes()).unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(30))).unwrap();
+            let mut buf = [0u8; 256];
+            let _ = s.read(&mut buf);
+            ClientOutcome::Abandoned
+        }
+        // Mid-request disconnect: send half the bytes and vanish. The
+        // server never sees a full request, so nothing is admitted.
+        1 => {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let _ = s.write_all(&raw.as_bytes()[..raw.len() / 2]);
+            ClientOutcome::Abandoned
+        }
+        // Well-behaved client: full exchange.
+        _ => {
+            let resp = http(addr, raw);
+            let status: u16 = resp
+                .strip_prefix("HTTP/1.1 ")
+                .and_then(|r| r.get(..3))
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            let heads = resp.matches("HTTP/1.1 ").count();
+            ClientOutcome::Status(status, heads)
+        }
+    }
+}
+
+#[test]
+fn lifecycle_ledger_balances_under_chaos() {
+    check("lifecycle conservation", 3, |g: &mut Gen| {
+        let kills: Vec<Arc<AtomicBool>> =
+            (0..2).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        let overload = OverloadConfig {
+            queue_cap: 3,
+            request_timeout: Duration::from_millis(400),
+            retry_budget: 1,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(150),
+            ..OverloadConfig::default()
+        };
+        let server = start_server(&kills, overload);
+        let addr = server.addr;
+
+        let n_clients = g.usize(24, 40);
+        let mut handles = Vec::with_capacity(n_clients);
+        for i in 0..n_clients {
+            // First third arrives as an unstaggered over-capacity burst;
+            // the rest trickle in.
+            let delay_ms = if i < n_clients / 3 { 0 } else { g.usize(0, 80) as u64 };
+            let behavior = g.usize(0, 6); // 0: timeout, 1: disconnect, 2+: normal
+            let class = if g.usize(0, 4) == 0 { "offline" } else { "online" };
+            let raw = completions_raw(&g.word(3..9), class, g.usize(1, 40));
+            handles.push(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                run_client(addr, behavior, &raw)
+            }));
+        }
+        // Mid-run, kill replica 0 for a window: its backend errors, the
+        // engine thread dies, the supervisor restarts it.
+        std::thread::sleep(Duration::from_millis(30));
+        kills[0].store(true, Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(120));
+        kills[0].store(false, Ordering::SeqCst);
+
+        let mut observed_200 = 0u64;
+        let mut abandoned = 0u64;
+        for h in handles {
+            match h.join().unwrap() {
+                ClientOutcome::Status(status, heads) => {
+                    assert_eq!(heads, 1, "client saw {heads} responses on one connection");
+                    assert!(
+                        matches!(status, 200 | 429 | 503 | 504),
+                        "unexpected status {status}"
+                    );
+                    if status == 200 {
+                        observed_200 += 1;
+                    }
+                }
+                ClientOutcome::Abandoned => abandoned += 1,
+            }
+        }
+
+        // Settle: every admitted request resolves within its deadline (+
+        // the server's grace); poll until the ledger shows none resident.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let m = loop {
+            let m = scrape_ledger(addr);
+            if counter(&m, "resident") == 0 {
+                break m;
+            }
+            assert!(Instant::now() < deadline, "requests stuck resident: {m}");
+            std::thread::sleep(Duration::from_millis(50));
+        };
+
+        let admitted = counter(&m, "admitted");
+        let finished = counter(&m, "finished_200");
+        let rejected = counter(&m, "rejected_429");
+        let timed_out = counter(&m, "timed_out_504");
+        let failed = counter(&m, "failed_503");
+        assert_eq!(
+            admitted,
+            finished + rejected + timed_out + failed,
+            "conservation ledger broken (abandoned clients: {abandoned}): {m}"
+        );
+        assert!(admitted <= n_clients as u64, "admitted more than offered: {m}");
+        assert!(
+            observed_200 <= finished,
+            "clients saw {observed_200} successes but the server finished {finished} \
+             — a finish was double-counted or lost: {m}"
+        );
+        assert!(finished > 0, "nothing finished — the case exercised nothing: {m}");
+        // Lifecycle counters must all be published, even when zero.
+        for key in ["retries", "breaker_open_total"] {
+            let _ = counter(&m, key);
+        }
+        assert_eq!(
+            m.get("shed_by_class").as_arr().map(|a| a.len()),
+            Some(2),
+            "per-class shed counters must match the registry: {m}"
+        );
+        server.shutdown();
+    });
+}
