@@ -19,6 +19,7 @@ use super::ReplicaSnapshot;
 use crate::coordinator::classes::MAX_CLASSES;
 use crate::coordinator::request::{Class, Request, RequestId};
 use crate::engine::{Engine, ExecutionBackend};
+use crate::obs::recorder::EventKind;
 use crate::runtime::tokenizer;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -28,6 +29,11 @@ use std::time::{Duration, Instant};
 
 /// How often the replica thread refreshes its published metrics report.
 pub const PUBLISH_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Flight-recorder events included in each published trace dump. A tail
+/// window, not the full ring: `/trace` is a diagnostic peephole; full
+/// dumps go through `hygen trace-dump`.
+pub const TRACE_PUBLISH_EVENTS: usize = 256;
 
 /// Lock a published-state mutex, recovering from poison. Both values
 /// behind these mutexes (a JSON string, a plain-old-data snapshot) are
@@ -116,6 +122,10 @@ pub struct ReplicaShared {
     /// restart, so routers and `/metrics` can tell "recovered" apart
     /// from "never died".
     pub generation: AtomicU64,
+    /// Latest flight-recorder dump (pretty JSON), refreshed alongside
+    /// `metrics_json` so `/trace` serves without touching the engine
+    /// thread. Empty until the first publish.
+    pub trace_json: Mutex<String>,
 }
 
 impl ReplicaShared {
@@ -252,6 +262,9 @@ fn engine_loop_impl<B: ExecutionBackend>(
     // Value: (reply channel, submit instant, optional absolute deadline).
     let mut inflight: BTreeMap<RequestId, (Reply, Instant, Option<Instant>)> = BTreeMap::new();
     engine.state.keep_finished = true;
+    // Stamp the recorder with this incarnation so post-restart events are
+    // attributable to the new engine in merged traces.
+    engine.state.recorder.generation = shared.generation.load(Ordering::Relaxed) as u32;
     let mut last_publish = Instant::now();
     let mut drain_deadline: Option<Instant> = None;
     let mut disconnected = false;
@@ -300,6 +313,14 @@ fn engine_loop_impl<B: ExecutionBackend>(
             .collect();
         for id in expired {
             if let Some((reply, _, _)) = inflight.remove(&id) {
+                // Audit the shed before the abort erases the request:
+                // reason 0 = deadline, context = the engine's virtual
+                // clock at decision time.
+                let class = match engine.state.requests.get(&id) {
+                    Some(r) => r.class.index() as u16,
+                    None => 0,
+                };
+                engine.state.recorder.record(EventKind::Shed, id, class, 0.0, engine.clock_s, 0.0);
                 engine.abort_request(id);
                 let _ = reply.send(Err(JobError::DeadlineExceeded));
             }
@@ -343,6 +364,8 @@ fn engine_loop_impl<B: ExecutionBackend>(
                         *lock_published(&shared.snapshot) = ReplicaSnapshot::of(&engine);
                         let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
                         *lock_published(&shared.metrics_json) = report.to_json().to_pretty();
+                        *lock_published(&shared.trace_json) =
+                            engine.state.recorder.to_json(TRACE_PUBLISH_EVENTS).to_pretty();
                         return LoopExit::Failed;
                     }
                 }
@@ -372,6 +395,8 @@ fn engine_loop_impl<B: ExecutionBackend>(
         if last_publish.elapsed() > PUBLISH_INTERVAL {
             let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
             *lock_published(&shared.metrics_json) = report.to_json().to_pretty();
+            *lock_published(&shared.trace_json) =
+                engine.state.recorder.to_json(TRACE_PUBLISH_EVENTS).to_pretty();
             last_publish = Instant::now();
         }
     }
@@ -385,6 +410,8 @@ fn engine_loop_impl<B: ExecutionBackend>(
     // observes the drained state.
     let report = engine.metrics.report(Some(start.elapsed().as_secs_f64()));
     *lock_published(&shared.metrics_json) = report.to_json().to_pretty();
+    *lock_published(&shared.trace_json) =
+        engine.state.recorder.to_json(TRACE_PUBLISH_EVENTS).to_pretty();
     LoopExit::Stopped
 }
 
@@ -755,6 +782,11 @@ mod tests {
         assert!(reply.recv_timeout(RECV).unwrap().is_ok(), "replica serves after a shed");
         stop.store(true, Ordering::SeqCst);
         rep.join();
+        // The final publish dumps the flight recorder: the shed decision
+        // and the served request's lifecycle are both in the trace.
+        let trace = lock_published(&rep.shared.trace_json).clone();
+        assert!(trace.contains("\"shed\""), "shed event in trace: {trace}");
+        assert!(trace.contains("\"finish\""), "finish event in trace: {trace}");
     }
 
     #[test]

@@ -44,6 +44,7 @@ use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::metrics::{Metrics, Report};
 use crate::coordinator::request::{Class, Request, RequestId};
 use crate::engine::{Engine, ExecutionBackend};
+use crate::obs::recorder::EventKind;
 use crate::workload::trace::{Trace, TraceEvent};
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -306,6 +307,15 @@ impl<B: ExecutionBackend> ClusterSim<B> {
         self.backlog.iter().map(|b| b.len()).sum()
     }
 
+    /// Merge every replica's flight recorder into one Chrome-trace JSON
+    /// document (`hygen trace-dump` output; load in Perfetto /
+    /// `chrome://tracing`). Deterministic: replica order then ring order.
+    pub fn chrome_trace(&self) -> crate::util::json::Json {
+        let recs: Vec<(usize, &crate::obs::Recorder)> =
+            self.engines.iter().enumerate().map(|(i, e)| (i, &e.state.recorder)).collect();
+        crate::obs::chrome_trace(&recs)
+    }
+
     fn snaps(&self) -> Vec<ReplicaSnapshot> {
         self.engines
             .iter()
@@ -406,6 +416,10 @@ impl<B: ExecutionBackend> ClusterSim<B> {
         // Release KV blocks, empty running/preempted sets, reset queue
         // LCP baselines (the abort clears every queue).
         self.engines[i].abort_all();
+        // Audit the teardown on the dying replica's recorder: every
+        // resident request leaves a migrate/reroute/shed record stamped
+        // with the kill instant.
+        self.engines[i].state.recorder.now_ms = now * 1e3;
         for req in doomed {
             let e = TraceEvent {
                 arrival_s: req.arrival,
@@ -415,6 +429,14 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                 prompt: req.prompt.clone(),
             };
             if self.registry.spec(req.class).elastic() {
+                self.engines[i].state.recorder.record(
+                    EventKind::Migrate,
+                    req.id,
+                    req.class.index() as u16,
+                    i as f64,
+                    -1.0, // destination: the shared backlog
+                    0.0,
+                );
                 self.backlog[req.class.index()].push_back(e);
                 self.migrated += 1;
             } else {
@@ -428,10 +450,28 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                 let snaps = self.snaps();
                 let j = self.router.route_online(&snaps);
                 if within_ttft && j < self.engines.len() && self.alive[j] && !self.draining[j] {
+                    self.engines[i].state.recorder.record(
+                        EventKind::Reroute,
+                        req.id,
+                        req.class.index() as u16,
+                        i as f64,
+                        j as f64,
+                        0.0,
+                    );
                     self.rerouted += 1;
                     self.rerouted_delay_s += (now - req.arrival).max(0.0);
                     self.submit_event(j, &e);
                 } else {
+                    // Reason 1 = no capacity / past deadline after a kill
+                    // (reason 0 = deadline shed, see `cluster::replica`).
+                    self.engines[i].state.recorder.record(
+                        EventKind::Shed,
+                        req.id,
+                        req.class.index() as u16,
+                        1.0,
+                        self.alive.iter().filter(|&&a| a).count() as f64,
+                        0.0,
+                    );
                     self.failed_503 += 1;
                 }
             }
@@ -450,6 +490,7 @@ impl<B: ExecutionBackend> ClusterSim<B> {
         self.fault_restarts += 1;
         let e = &mut self.engines[i];
         e.clock_s = e.clock_s.max(now);
+        e.state.recorder.generation = self.generation[i] as u32;
     }
 
     /// Create the event's request on replica `i` (fresh replica-local id)
@@ -494,6 +535,7 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                         self.draining[i] = false;
                         self.generation[i] += 1;
                         self.scale_ups += 1;
+                        self.engines[i].state.recorder.generation = self.generation[i] as u32;
                         if now.is_finite() {
                             let e = &mut self.engines[i];
                             e.clock_s = e.clock_s.max(now);
@@ -899,6 +941,22 @@ mod tests {
             "every online request finished or failed with a reported error"
         );
         assert!(r.migrated > 0, "replica 0 held elastic work when it died");
+        // The kill left an audit trail on the dead replica's recorder:
+        // one migrate per elastic resident, one reroute or shed per
+        // interactive resident.
+        let (mut migrates, mut reroutes, mut sheds) = (0usize, 0usize, 0usize);
+        sim.engines[0].state.recorder.for_each(|e| match e.kind {
+            EventKind::Migrate => {
+                migrates += 1;
+                assert_eq!(e.a, 0.0, "source replica");
+                assert_eq!(e.b, -1.0, "destination: shared backlog");
+            }
+            EventKind::Reroute => reroutes += 1,
+            EventKind::Shed => sheds += 1,
+            _ => {}
+        });
+        assert_eq!(migrates, r.migrated, "each migration audited exactly once");
+        assert_eq!(reroutes + sheds, r.rerouted + r.failed_503);
         for e in &sim.engines {
             e.state.check_invariants().unwrap();
         }
@@ -913,6 +971,11 @@ mod tests {
         let r = sim.run(&trace, 600.0).unwrap();
         assert_eq!(sim.live_replicas(), 2, "replica 1 came back");
         assert_eq!(sim.generation_of(1), 1);
+        assert_eq!(
+            sim.engines[1].state.recorder.generation,
+            1,
+            "post-restart events are stamped with the new incarnation"
+        );
         assert_eq!(r.fault_restarts, 1);
         assert_eq!(r.lost, 0);
         // Replica 0 stayed live throughout, so everything rerouted inside

@@ -67,6 +67,14 @@ pub struct ClusterConfig {
     /// Brown-out rung 3: aggregate headroom (ms) below which even online
     /// work is rejected with 429.
     pub brownout_online_headroom_ms: f64,
+    /// Flight-recorder ring capacity per replica (events; 0 disables
+    /// recording entirely). The ring is preallocated — steady-state
+    /// tracing allocates nothing.
+    pub trace_capacity: usize,
+    /// Master switch for lifecycle tracing (`/trace`, `hygen
+    /// trace-dump`). Disabling keeps the ring allocated but records
+    /// nothing.
+    pub trace_enabled: bool,
 }
 
 impl Default for ClusterConfig {
@@ -95,6 +103,8 @@ impl Default for ClusterConfig {
             brownout_offline_headroom_ms: over.brownout_offline_headroom_ms,
             brownout_shed_headroom_ms: over.brownout_shed_headroom_ms,
             brownout_online_headroom_ms: over.brownout_online_headroom_ms,
+            trace_capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
+            trace_enabled: true,
         }
     }
 }
@@ -212,6 +222,13 @@ impl ClusterConfig {
                 && brownout_shed_headroom_ms <= brownout_offline_headroom_ms,
             "brown-out thresholds must be ordered online <= shed <= offline"
         );
+        let trace_capacity = int_field("trace_capacity", d.trace_capacity)?;
+        let trace_enabled = match j.get("trace_enabled") {
+            Json::Null => d.trace_enabled,
+            v => v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("trace_enabled must be a boolean"))?,
+        };
         Ok(ClusterConfig {
             replicas,
             router,
@@ -233,6 +250,8 @@ impl ClusterConfig {
             brownout_offline_headroom_ms,
             brownout_shed_headroom_ms,
             brownout_online_headroom_ms,
+            trace_capacity,
+            trace_enabled,
         })
     }
 
@@ -258,6 +277,8 @@ impl ClusterConfig {
             ("brownout_offline_headroom_ms", Json::from(self.brownout_offline_headroom_ms)),
             ("brownout_shed_headroom_ms", Json::from(self.brownout_shed_headroom_ms)),
             ("brownout_online_headroom_ms", Json::from(self.brownout_online_headroom_ms)),
+            ("trace_capacity", Json::from(self.trace_capacity)),
+            ("trace_enabled", Json::from(self.trace_enabled)),
         ]
     }
 
@@ -547,6 +568,30 @@ mod tests {
             r#"{"brownout_offline_headroom_ms": 1, "brownout_shed_headroom_ms": 1,
                 "brownout_online_headroom_ms": 3}"#,
         ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ServeConfig::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn parses_trace_knobs() {
+        let j = Json::parse(r#"{"trace_capacity": 128, "trace_enabled": false}"#).unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.trace_capacity, 128);
+        assert!(!c.cluster.trace_enabled);
+        // Defaults: tracing on, preallocated ring.
+        let d = ServeConfig::default();
+        assert_eq!(d.cluster.trace_capacity, crate::obs::DEFAULT_TRACE_CAPACITY);
+        assert!(d.cluster.trace_enabled);
+        // Zero capacity is legal (recording disabled, ring empty).
+        let j = Json::parse(r#"{"trace_capacity": 0}"#).unwrap();
+        assert_eq!(ServeConfig::from_json(&j).unwrap().cluster.trace_capacity, 0);
+        // Flat-JSON round trip, like the rest of the cluster shape.
+        let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.cluster, c.cluster);
+        // Present-but-mistyped values error instead of silently
+        // defaulting.
+        for bad in [r#"{"trace_capacity": "big"}"#, r#"{"trace_enabled": "yes"}"#] {
             let j = Json::parse(bad).unwrap();
             assert!(ServeConfig::from_json(&j).is_err(), "should reject {bad}");
         }

@@ -20,10 +20,18 @@
 //! only grows at admission time, amortized).
 
 use super::request::{Class, RequestId, Slo, SloMetric};
+use crate::obs::histogram::{shape_bucket, Histogram, SignedHistogram, PRED_SHAPES};
 use crate::util::json::Json;
 use crate::util::stats::{Summary, WindowSeries};
 
 /// Per-class aggregate report block.
+///
+/// Latency carries a **dual representation**: the `mean/p50/p99` fields
+/// come from exact per-sample [`Summary`]s (tracked classes only — they
+/// pin the paper figures bit-for-bit), while `ttft_hist`/`tbt_hist` are
+/// bounded 64-bucket histograms observed for *every* class. The
+/// histograms are what merges correctly across replicas (bucket-wise
+/// add), so `/metrics` aggregation and trace tooling read those.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClassReport {
     pub finished: usize,
@@ -35,6 +43,8 @@ pub struct ClassReport {
     pub mean_tbt_ms: f64,
     pub p50_tbt_ms: f64,
     pub p99_tbt_ms: f64,
+    pub ttft_hist: Histogram,
+    pub tbt_hist: Histogram,
 }
 
 impl ClassReport {
@@ -50,6 +60,8 @@ impl ClassReport {
             ("mean_tbt_ms", self.mean_tbt_ms.into()),
             ("p50_tbt_ms", self.p50_tbt_ms.into()),
             ("p99_tbt_ms", self.p99_tbt_ms.into()),
+            ("ttft_hist", self.ttft_hist.to_json()),
+            ("tbt_hist", self.tbt_hist.to_json()),
         ])
     }
 }
@@ -76,6 +88,11 @@ pub struct Report {
     pub online_qps: f64,
     pub offline_qps: f64,
     pub duration_s: f64,
+    /// Per-iteration batch-latency histogram (all classes pooled).
+    pub batch_latency_hist: Histogram,
+    /// Signed (predicted − actual) batch-latency error per batch-shape
+    /// bucket (octave of batch size). Empty vec in stub reports.
+    pub predictor_error: Vec<SignedHistogram>,
     /// Dense per-class blocks, indexed by [`Class`].
     pub classes: Vec<ClassReport>,
 }
@@ -122,6 +139,23 @@ impl Report {
             ("online_qps", self.online_qps.into()),
             ("offline_qps", self.offline_qps.into()),
             ("duration_s", self.duration_s.into()),
+            ("batch_latency_hist", self.batch_latency_hist.to_json()),
+            (
+                "predictor_error",
+                Json::Arr(
+                    self.predictor_error
+                        .iter()
+                        .enumerate()
+                        .map(|(i, h)| {
+                            let mut j = h.to_json();
+                            if let Json::Obj(m) = &mut j {
+                                m.insert("shape".to_string(), Json::from(i));
+                            }
+                            j
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "classes",
                 Json::Arr(
@@ -167,8 +201,12 @@ struct ClassAgg {
     tbt: Summary,
     tokens: u64,
     finished: usize,
-    /// Collect TTFT/TBT samples for this class (see the module docs).
+    /// Collect exact TTFT/TBT samples for this class (see the module
+    /// docs). The bounded histograms below are always fed — they are
+    /// fixed-size, so they never allocate on the token path.
     track_latency: bool,
+    ttft_hist: Histogram,
+    tbt_hist: Histogram,
     tps_series: WindowSeries,
     qps_series: WindowSeries,
 }
@@ -181,6 +219,8 @@ impl ClassAgg {
             tokens: 0,
             finished: 0,
             track_latency,
+            ttft_hist: Histogram::new(),
+            tbt_hist: Histogram::new(),
             tps_series: WindowSeries::new(window_s),
             qps_series: WindowSeries::new(window_s),
         }
@@ -197,6 +237,8 @@ impl ClassAgg {
             mean_tbt_ms: self.tbt.mean(),
             p50_tbt_ms: self.tbt.p50(),
             p99_tbt_ms: self.tbt.p99(),
+            ttft_hist: self.ttft_hist,
+            tbt_hist: self.tbt_hist,
         }
     }
 }
@@ -213,6 +255,11 @@ pub struct Metrics {
     slots: Vec<ReqSlot>,
     window_s: f64,
     end_time: f64,
+    /// Per-iteration batch-latency histogram (fed by `on_batch`).
+    batch_latency: Histogram,
+    /// Signed predictor error (predicted − actual, ms) per batch-shape
+    /// bucket — fixed-size, allocation-free on the step path.
+    pred_err: [SignedHistogram; PRED_SHAPES],
 }
 
 impl Metrics {
@@ -224,6 +271,8 @@ impl Metrics {
             slots: Vec::new(),
             window_s,
             end_time: 0.0,
+            batch_latency: Histogram::new(),
+            pred_err: [SignedHistogram::new(); PRED_SHAPES],
         }
     }
 
@@ -312,12 +361,26 @@ impl Metrics {
             if agg.track_latency {
                 agg.ttft.add((t - slot.arrival) * 1e3);
             }
-        } else if agg.track_latency {
-            agg.tbt.add((t - slot.last_token) * 1e3);
+            agg.ttft_hist.observe((t - slot.arrival) * 1e3);
+        } else {
+            if agg.track_latency {
+                agg.tbt.add((t - slot.last_token) * 1e3);
+            }
+            agg.tbt_hist.observe((t - slot.last_token) * 1e3);
         }
         slot.last_token = t;
         agg.tokens += n as u64;
         agg.tps_series.record(t, n as f64);
+    }
+
+    /// One engine iteration executed: record the actual batch latency and
+    /// the signed predictor error in the shape bucket of `batch_size`.
+    // lint: alloc-free
+    pub fn on_batch(&mut self, batch_size: usize, predicted_ms: f64, actual_ms: f64) {
+        self.batch_latency.observe(actual_ms);
+        if let Some(h) = self.pred_err.get_mut(shape_bucket(batch_size)) {
+            h.observe(predicted_ms - actual_ms);
+        }
     }
 
     /// Request completed at time `t`. Double-finish and unknown ids are
@@ -346,8 +409,14 @@ impl Metrics {
             let agg = &mut self.classes[i];
             agg.ttft.merge(&o.ttft);
             agg.tbt.merge(&o.tbt);
+            agg.ttft_hist.merge(&o.ttft_hist);
+            agg.tbt_hist.merge(&o.tbt_hist);
             agg.tokens += o.tokens;
             agg.finished += o.finished;
+        }
+        self.batch_latency.merge(&other.batch_latency);
+        for (h, oh) in self.pred_err.iter_mut().zip(other.pred_err.iter()) {
+            h.merge(oh);
         }
         self.end_time = self.end_time.max(other.end_time);
     }
@@ -392,6 +461,8 @@ impl Metrics {
             online_qps: flag.qps,
             offline_qps,
             duration_s: d,
+            batch_latency_hist: self.batch_latency,
+            predictor_error: self.pred_err.to_vec(),
             classes,
         }
     }
@@ -569,6 +640,89 @@ mod tests {
         assert!((r.p50_ttft_ms - 30.0).abs() < 1e-9);
         assert!((r.online_tps - 3.0).abs() < 1e-9);
         assert!((r.offline_tps - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histograms_fed_for_untracked_classes_too() {
+        let mut m = Metrics::new(1.0);
+        m.on_arrival(1, Class::OFFLINE, 0.0);
+        m.on_tokens(1, 0.040, 1); // TTFT 40ms
+        m.on_tokens(1, 0.070, 1); // TBT 30ms
+        let r = m.report(Some(1.0));
+        // Exact summaries stay empty (untracked)...
+        assert_eq!(r.classes[1].mean_ttft_ms, 0.0);
+        // ...but the bounded histograms observed both samples.
+        assert_eq!(r.classes[1].ttft_hist.count(), 1);
+        assert_eq!(r.classes[1].tbt_hist.count(), 1);
+        let width = crate::obs::Histogram::bucket_width_ms(40.0);
+        assert!((r.classes[1].ttft_hist.p50() - 40.0).abs() <= width);
+    }
+
+    #[test]
+    fn hist_quantiles_agree_with_exact_summaries() {
+        let mut m = Metrics::new(1.0);
+        for i in 0..200u64 {
+            m.on_arrival(i, Class::ONLINE, 0.0);
+            // TTFTs spread 1..200 ms.
+            m.on_tokens(i, (i + 1) as f64 * 1e-3, 1);
+        }
+        let r = m.report(Some(1.0));
+        for (hist, exact) in
+            [(r.classes[0].ttft_hist.p50(), r.p50_ttft_ms), (r.classes[0].ttft_hist.p99(), r.p99_ttft_ms)]
+        {
+            let width = crate::obs::Histogram::bucket_width_ms(exact);
+            assert!((hist - exact).abs() <= width, "hist {hist} vs exact {exact} (±{width})");
+        }
+    }
+
+    #[test]
+    fn on_batch_tracks_latency_and_signed_error() {
+        let mut m = Metrics::new(1.0);
+        m.on_batch(4, 10.0, 12.0); // under-prediction: error −2
+        m.on_batch(4, 10.0, 12.0);
+        m.on_batch(64, 50.0, 45.0); // over-prediction: +5, different shape
+        let r = m.report(Some(1.0));
+        assert_eq!(r.batch_latency_hist.count(), 3);
+        let shape4 = &r.predictor_error[crate::obs::shape_bucket(4)];
+        assert_eq!(shape4.count(), 2);
+        assert!(shape4.p50() < 0.0, "shape-4 bias negative: {}", shape4.p50());
+        let shape64 = &r.predictor_error[crate::obs::shape_bucket(64)];
+        assert_eq!(shape64.count(), 1);
+        assert!(shape64.p50() > 0.0);
+        // JSON export carries both.
+        let j = r.to_json();
+        assert!(j.get("batch_latency_hist").get("count").as_u64().is_some());
+        let pe = j.get("predictor_error").as_arr().unwrap();
+        assert_eq!(pe.len(), crate::obs::PRED_SHAPES);
+        assert!(pe[0].get("shape").as_u64().is_some());
+        assert!(j.get("classes").as_arr().unwrap()[0].get("ttft_hist").get("p99_ms").as_f64().is_some());
+    }
+
+    #[test]
+    fn absorb_merges_histograms_bucket_wise() {
+        let mut a = Metrics::new(1.0);
+        let mut b = Metrics::new(1.0);
+        // Disjoint populations: replica A fast (10ms), replica B slow (100ms).
+        for i in 0..10u64 {
+            a.on_arrival(i, Class::ONLINE, 0.0);
+            a.on_tokens(i, 0.010, 1);
+            b.on_arrival(i, Class::ONLINE, 0.0);
+            b.on_tokens(i, 0.100, 1);
+        }
+        a.on_batch(8, 5.0, 6.0);
+        b.on_batch(8, 5.0, 4.0);
+        let mut agg = Metrics::new(1.0);
+        agg.absorb(&a);
+        agg.absorb(&b);
+        let r = agg.report(Some(1.0));
+        let h = &r.classes[0].ttft_hist;
+        assert_eq!(h.count(), 20);
+        // Pooled p50 sits at the fast population's edge, far below the
+        // worst-replica value (100ms) the old aggregation would report.
+        assert!(h.p50() < 50.0, "pooled p50 {} must not be worst-replica", h.p50());
+        assert!(h.p99() > 50.0);
+        assert_eq!(r.batch_latency_hist.count(), 2);
+        assert_eq!(r.predictor_error[3].count(), 2, "shape bucket for size 8");
     }
 
     #[test]

@@ -166,6 +166,8 @@ mod tests {
             online_qps: 0.0,
             offline_qps: 0.0,
             duration_s: 1.0,
+            batch_latency_hist: crate::obs::Histogram::new(),
+            predictor_error: Vec::new(),
             classes: Vec::new(),
         }
     }

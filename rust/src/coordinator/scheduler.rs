@@ -43,6 +43,7 @@ use super::classes::{AdmissionPolicy, ClassRegistry};
 use super::predictor::LatencyPredictor;
 use super::request::{Class, Phase, RequestId};
 use super::state::EngineState;
+use crate::obs::recorder::EventKind;
 use std::sync::Arc;
 
 /// How preempted requests are handled (InferCept's taxonomy).
@@ -320,6 +321,11 @@ impl HybridScheduler {
             None => t,
         };
         let starvation_age = spec.starvation_age_s;
+        // Decision audit staging: any preemption recorded during this
+        // pass carries the preemptor's tier and the residual budget at
+        // the moment of the decision (see `Recorder`).
+        state.recorder.audit_a = tier as f64;
+        state.recorder.audit_b = *t;
 
         // 1. Running decodes. Bypass classes schedule them regardless of
         //    the latency budget (Alg. 1 line 8); charged classes stop at
@@ -335,6 +341,7 @@ impl HybridScheduler {
                     break;
                 }
                 let need = state.req(id).context_len() + 1;
+                state.recorder.audit_b = *t;
                 let mut ok = state.blocks.grow(id, need);
                 while !ok {
                     if state.preempt_lowest_below(tier, discard).is_some() {
@@ -507,6 +514,7 @@ impl HybridScheduler {
             // Higher tiers preempt down-tier work for memory; the bottom
             // tier waits.
             let watermark = self.cfg.watermark_blocks * state.blocks.block_size();
+            state.recorder.audit_b = *t;
             let mut free = state.blocks.free_tokens().saturating_sub(watermark);
             while free < prompt_len {
                 if state.preempt_lowest_below(tier, discard).is_none() {
@@ -580,6 +588,11 @@ impl HybridScheduler {
             *c -= l;
             feats.add_prefill(l);
             req.phase = Phase::Prefill;
+            // Admission audit: tier, residual budget after charging this
+            // chunk, and the chunk's predicted cost — plus the queue
+            // delay this request just paid.
+            state.recorder.record(EventKind::QueuePop, req.id, ci as u16, tier as f64, *t, t_req);
+            state.recorder.observe_queue_delay(ci, (now - req.arrival).max(0.0) * 1e3);
             batch.push(BatchEntry {
                 id: req.id,
                 class,

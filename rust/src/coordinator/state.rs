@@ -21,6 +21,7 @@ use super::classes::{AdmissionPolicy, ClassRegistry, MAX_CLASSES};
 use super::queues::{ClassQueue, FcfsQueue, OfflinePolicy, OfflineQueue};
 use super::request::{Class, Phase, Request, RequestId};
 use super::runset::RunSet;
+use crate::obs::recorder::{EventKind, Recorder};
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
@@ -123,6 +124,11 @@ pub struct EngineState {
     /// race detected during preemption). Diagnosable instead of a panic;
     /// `check_invariants` reports them.
     pub anomalies: Vec<String>,
+    /// Flight recorder fed by every transition method. The engine/sim
+    /// layer keeps `recorder.now_ms` in lockstep with the virtual clock
+    /// and the scheduler stages its decision audit in
+    /// `recorder.audit_a/b` before invoking preemptions.
+    pub recorder: Recorder,
 }
 
 impl EngineState {
@@ -181,6 +187,7 @@ impl EngineState {
             keep_finished: true,
             prefix_caching: true,
             anomalies: Vec::new(),
+            recorder: Recorder::new(),
         }
     }
 
@@ -265,6 +272,14 @@ impl EngineState {
             self.queues.len()
         );
         req.priority = self.registry.spec(req.class).preempt_priority;
+        self.recorder.record(
+            EventKind::Admit,
+            req.id,
+            idx as u16,
+            req.prompt_len as f64,
+            req.output_len as f64,
+            0.0,
+        );
         // lint: allow(panic, reason=bounds asserted above)
         self.queues[idx].push(req);
     }
@@ -306,6 +321,16 @@ impl EngineState {
             req.id,
             req.phase
         );
+        if req.phase == Phase::Prefill {
+            self.recorder.record(
+                EventKind::PrefillStart,
+                req.id,
+                req.class.index() as u16,
+                req.prompt_len as f64,
+                req.prefilled as f64,
+                0.0,
+            );
+        }
         self.counts.add(req.class, req.phase);
         self.running_mut(req.class).push(req.id);
         self.requests.insert(req.id, req);
@@ -359,6 +384,14 @@ impl EngineState {
         }
         if let Some(mut r) = self.requests.remove(&id) {
             self.counts.sub(r.class, r.phase);
+            self.recorder.record(
+                EventKind::Finish,
+                id,
+                r.class.index() as u16,
+                r.generated as f64,
+                0.0,
+                0.0,
+            );
             r.phase = Phase::Finished;
             if self.keep_finished {
                 self.finished.push(r);
@@ -388,6 +421,17 @@ impl EngineState {
             return None;
         };
         self.counts.sub(req.class, req.phase);
+        // Decision audit: the scheduler staged the preemptor's tier and
+        // its residual budget before asking for a victim.
+        let (aa, ab) = (self.recorder.audit_a, self.recorder.audit_b);
+        self.recorder.record(
+            EventKind::Preempt,
+            id,
+            req.class.index() as u16,
+            aa,
+            ab,
+            if discard { 1.0 } else { 0.0 },
+        );
         if discard {
             req.preempt_discard();
             // Discarded state returns to its class queue for rescheduling.
@@ -454,7 +498,16 @@ impl EngineState {
         debug_assert_eq!(req.phase, Phase::Preempted);
         req.phase = if req.prefill_done() { Phase::Decode } else { Phase::Prefill };
         let phase = req.phase;
-        self.counts.add(req.class, phase);
+        let req_class = req.class;
+        self.recorder.record(
+            EventKind::Resume,
+            id,
+            req_class.index() as u16,
+            if phase == Phase::Decode { 1.0 } else { 0.0 },
+            0.0,
+            0.0,
+        );
+        self.counts.add(req_class, phase);
         self.running_mut(class).push(id);
         Some(phase)
     }
@@ -483,6 +536,11 @@ impl EngineState {
         // theirs); release() is a no-op for unallocated ids.
         for &id in &torn_down {
             self.blocks.release(id);
+            let class = match self.requests.get(&id) {
+                Some(r) => r.class.index() as u16,
+                None => 0,
+            };
+            self.recorder.record(EventKind::Abort, id, class, 1.0, 0.0, 0.0);
         }
         for set in &mut self.runs {
             set.clear();
@@ -526,6 +584,7 @@ impl EngineState {
                 self.counts.sub(class, phase);
             }
             self.requests.remove(&id);
+            self.recorder.record(EventKind::Abort, id, class.index() as u16, 1.0, 0.0, 0.0);
             return Some(true);
         }
         // Not live — it may still be waiting. Queued requests hold no
@@ -533,7 +592,8 @@ impl EngineState {
         // whole teardown. Removal does not disturb the prefix queue's LCP
         // baseline (see `ClassQueue::remove`).
         for q in &mut self.queues {
-            if q.remove(id).is_some() {
+            if let Some(r) = q.remove(id) {
+                self.recorder.record(EventKind::Abort, id, r.class.index() as u16, 0.0, 0.0, 0.0);
                 return Some(false);
             }
         }
@@ -829,6 +889,47 @@ mod tests {
         assert_eq!(s.abort_one(1), Some(false));
         assert_eq!(s.queue(Class::OFFLINE).len(), 1);
         assert_eq!(s.abort_one(1), None, "second abort is a no-op");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn recorder_captures_lifecycle_events_with_audit() {
+        let mut s = state();
+        s.recorder.now_ms = 5.0;
+        s.enqueue(Request::new(1, Class::OFFLINE, 0.0, 16, 4));
+        running(&mut s, 2, Class::OFFLINE, 16, 4);
+        // The scheduler stages its decision inputs before preempting.
+        s.recorder.audit_a = 1.0;
+        s.recorder.audit_b = 42.0;
+        s.preempt_last_offline(false);
+        s.blocks.allocate(2, 17, &[]).unwrap();
+        s.resume_front_preempted();
+        s.advance_decode(2);
+        s.advance_decode(2);
+        s.finish(2);
+        s.abort_one(1);
+        let mut events = Vec::new();
+        s.recorder.for_each(|e| events.push(*e));
+        let kinds: Vec<EventKind> = events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::Admit,
+                EventKind::Preempt,
+                EventKind::Resume,
+                EventKind::Finish,
+                EventKind::Abort,
+            ]
+        );
+        let p = events[1];
+        assert_eq!(p.id, 2);
+        assert_eq!(p.class, 1);
+        assert_eq!(p.a, 1.0, "audit: preemptor tier");
+        assert_eq!(p.b, 42.0, "audit: residual budget");
+        assert_eq!(p.c, 0.0, "preserve, not discard");
+        assert_eq!(p.t_ms, 5.0, "virtual-clock stamp");
+        assert_eq!(events[3].a, 2.0, "finish carries generated tokens");
+        assert_eq!(events[4].a, 0.0, "queued abort: backend never saw it");
         s.check_invariants().unwrap();
     }
 

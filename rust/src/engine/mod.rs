@@ -215,7 +215,9 @@ impl<B: ExecutionBackend> Engine<B> {
     /// Admit a request now (updates metrics + queues).
     pub fn submit(&mut self, req: Request) {
         self.next_id = self.next_id.max(req.id + 1);
-        self.metrics.on_arrival(req.id, req.class, req.arrival.max(self.clock_s));
+        let t = req.arrival.max(self.clock_s);
+        self.state.recorder.now_ms = t * 1e3;
+        self.metrics.on_arrival(req.id, req.class, t);
         self.state.enqueue(req);
     }
 
@@ -232,6 +234,8 @@ impl<B: ExecutionBackend> Engine<B> {
     pub fn step(&mut self) -> anyhow::Result<usize> {
         // lint: allow(wallclock, reason=scheduler-overhead measurement only; never feeds simulated time)
         let t0 = std::time::Instant::now();
+        // Stamp the virtual clock on everything the scheduler records.
+        self.state.recorder.now_ms = self.clock_s * 1e3;
         self.scheduler.schedule(&mut self.state, self.clock_s, &mut self.batch);
         let sched_ns = t0.elapsed();
         self.sched_overhead += sched_ns;
@@ -244,6 +248,19 @@ impl<B: ExecutionBackend> Engine<B> {
         self.iterations += 1;
         let latency_s = self.backend.execute(&self.batch, &mut self.state)?;
         self.clock_s += latency_s;
+        // Iteration-level trace record + predictor-error accounting:
+        // batch size, predicted batch latency, actual batch latency.
+        let predicted_ms = self.scheduler.last_stats.predicted_ms;
+        self.state.recorder.now_ms = self.clock_s * 1e3;
+        self.state.recorder.record(
+            crate::obs::EventKind::DecodeStep,
+            0,
+            0,
+            self.batch.len() as f64,
+            predicted_ms,
+            latency_s * 1e3,
+        );
+        self.metrics.on_batch(self.batch.len(), predicted_ms, latency_s * 1e3);
         Self::apply(
             &mut self.state,
             &mut self.metrics,
@@ -336,6 +353,7 @@ impl<B: ExecutionBackend> Engine<B> {
                     req = req.with_prompt(e.prompt.clone());
                 }
                 self.metrics.on_arrival(id, e.class, e.arrival_s);
+                self.state.recorder.now_ms = e.arrival_s * 1e3;
                 self.state.enqueue(req);
                 next_event += 1;
             }
@@ -519,6 +537,34 @@ mod tests {
         e2.record_sched_samples = true;
         let r2 = e2.run_trace(&tr, 100.0, true).unwrap();
         assert_eq!(r2.sched_ns_samples.len() as u64, r2.iterations);
+    }
+
+    #[test]
+    fn step_records_decode_steps_and_predictor_error() {
+        let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
+        let tr = Trace::new(vec![ev(0.0, Class::ONLINE, 64, 8)]);
+        let r = e.run_trace(&tr, 100.0, true).unwrap();
+        let mut decode_steps = 0u64;
+        let mut admits = 0u64;
+        let mut pops = 0u64;
+        e.state.recorder.for_each(|ev| match ev.kind {
+            crate::obs::EventKind::DecodeStep => {
+                decode_steps += 1;
+                assert!(ev.c > 0.0, "actual batch latency recorded");
+            }
+            crate::obs::EventKind::Admit => admits += 1,
+            crate::obs::EventKind::QueuePop => pops += 1,
+            _ => {}
+        });
+        assert_eq!(decode_steps, r.iterations, "one DecodeStep per executed iteration");
+        assert_eq!(admits, 1);
+        assert_eq!(pops, 1, "admission recorded with its audit payload");
+        // Every iteration fed the batch-latency + predictor-error hists.
+        assert_eq!(r.report.batch_latency_hist.count(), r.iterations);
+        let err_obs: u64 = r.report.predictor_error.iter().map(|h| h.count()).sum();
+        assert_eq!(err_obs, r.iterations);
+        // Queue delay observed for the admitted class.
+        assert_eq!(e.state.recorder.queue_delay(0).map(|h| h.count()), Some(1));
     }
 
     #[test]

@@ -112,6 +112,10 @@ pub struct SteadyProbe {
     pub allocs_total: u64,
     pub allocs_per_iter: f64,
     pub ns_per_iter: f64,
+    /// Flight-recorder events recorded *inside* the measured window —
+    /// proves the zero-allocation contract holds with tracing ON, not
+    /// because tracing was off.
+    pub trace_events: u64,
 }
 
 /// Everything the bench measured (also serialized to `BENCH_e2e.json`).
@@ -163,6 +167,7 @@ impl ReplayOutcome {
                     ("allocs_total", self.steady.allocs_total.into()),
                     ("allocs_per_iter", round3(self.steady.allocs_per_iter).into()),
                     ("ns_per_iter", round2(self.steady.ns_per_iter).into()),
+                    ("trace_events", self.steady.trace_events.into()),
                 ]),
             ),
             ("wall_per_token_ratio_largest_vs_smallest", round2(self.wall_per_token_ratio).into()),
@@ -283,6 +288,11 @@ pub fn steady_probe(n: usize, iters: usize) -> anyhow::Result<SteadyProbe> {
     for _ in 0..warmup {
         anyhow::ensure!(engine.step()? == n, "probe must schedule all {n} decodes");
     }
+    // The probe measures the tracing-ON contract: the flight recorder's
+    // ring is preallocated, so recording inside the window must not
+    // allocate either.
+    anyhow::ensure!(engine.state.recorder.enabled, "probe runs with tracing enabled");
+    let e0 = engine.state.recorder.recorded();
     let a0 = alloc_count();
     let t0 = Instant::now();
     for _ in 0..iters {
@@ -290,12 +300,14 @@ pub fn steady_probe(n: usize, iters: usize) -> anyhow::Result<SteadyProbe> {
     }
     let elapsed = t0.elapsed();
     let allocs_total = alloc_count() - a0;
+    let trace_events = engine.state.recorder.recorded() - e0;
     Ok(SteadyProbe {
         n_running: n,
         iterations: iters as u64,
         allocs_total,
         allocs_per_iter: allocs_total as f64 / iters.max(1) as f64,
         ns_per_iter: elapsed.as_nanos() as f64 / iters.max(1) as f64,
+        trace_events,
     })
 }
 
@@ -363,10 +375,11 @@ pub fn run_and_save(cfg: &ReplayConfig, out: &str) -> anyhow::Result<ReplayOutco
         );
     }
     println!(
-        "steady decode (n={}): {:.1} µs/iter, {} allocs over {} iters ({})",
+        "steady decode (n={}): {:.1} µs/iter, {} allocs, {} trace events over {} iters ({})",
         outcome.steady.n_running,
         outcome.steady.ns_per_iter / 1e3,
         outcome.steady.allocs_total,
+        outcome.steady.trace_events,
         outcome.steady.iterations,
         if outcome.counting_allocator { "counting allocator active" } else { "no counting allocator: alloc columns are 0" }
     );
@@ -404,6 +417,14 @@ mod tests {
         // alloc columns must read 0 and the flag false.
         assert!(!o.counting_allocator);
         assert_eq!(o.steady.allocs_total, 0);
+        assert!(
+            o.steady.trace_events >= o.steady.iterations,
+            "tracing was live in the window: at least one decode_step per iteration"
+        );
+        assert_eq!(
+            o.to_json().get("steady_decode").get("trace_events").as_u64(),
+            Some(o.steady.trace_events)
+        );
         let j = o.to_json();
         assert_eq!(j.get("bench").as_str(), Some("e2e-replay"));
         assert!(matches!(j.get("scales"), Json::Arr(a) if a.len() == 2));

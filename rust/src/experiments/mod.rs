@@ -15,7 +15,11 @@
 //! schedules per router policy — behind `hygen chaos`
 //! (writes `artifacts/chaos_compare.csv`); [`overload`] ramps open-loop
 //! QPS past single-replica capacity through the serving admission ladder
-//! behind `hygen overload` (writes `artifacts/overload.csv`).
+//! behind `hygen overload` (writes `artifacts/overload.csv`); [`trace_dump`]
+//! replays one seeded faulted cluster run and dumps the per-replica flight
+//! recorders as Perfetto-loadable Chrome trace JSON behind
+//! `hygen trace-dump` (writes `artifacts/trace.json`, byte-identical for a
+//! fixed seed).
 
 pub mod bench_replay;
 pub mod bench_sched;
@@ -24,6 +28,7 @@ pub mod cluster_sim;
 pub mod figures;
 pub mod multi_slo;
 pub mod overload;
+pub mod trace_dump;
 
 use crate::baselines::{SimSetup, System};
 use crate::coordinator::metrics::Report;
@@ -261,6 +266,8 @@ fn empty_report() -> Report {
         online_qps: 0.0,
         offline_qps: 0.0,
         duration_s: 0.0,
+        batch_latency_hist: crate::obs::Histogram::new(),
+        predictor_error: Vec::new(),
         classes: Vec::new(),
     }
 }

@@ -1,0 +1,151 @@
+//! `hygen trace-dump` — replay one seeded faulted cluster run (the chaos
+//! recipe's mixed trace + kill/restart schedule) and dump every replica's
+//! flight recorder as Chrome trace-event JSON that Perfetto /
+//! `chrome://tracing` load directly.
+//!
+//! The whole pipeline is deterministic in the seed: the trace generator,
+//! the fault schedule, the cluster simulation, and the JSON encoder
+//! (BTreeMap objects, deterministic float formatting) are all seeded or
+//! order-stable, so two runs with the same config produce byte-identical
+//! output at any `-j`. CI runs the `--quick` shape twice and `cmp`s the
+//! files to enforce this.
+
+use super::chaos::{self, ChaosConfig};
+use crate::baselines::SimSetup;
+use crate::cluster::router::RouterPolicy;
+use crate::cluster::sim::{ClusterRunResult, ClusterSim};
+use crate::coordinator::queues::OfflinePolicy;
+use crate::coordinator::scheduler::SchedulerConfig;
+use crate::engine::Engine;
+use crate::sim::costmodel::CostModel;
+use crate::sim::SimBackend;
+
+/// Replay shape: the chaos workload/fleet knobs plus which fault schedule
+/// to replay (index 0 is the fault-free baseline; ≥ 1 are seeded
+/// kill/restart sequences, so the default shows migrate/shed/reroute
+/// events next to the ordinary lifecycle).
+#[derive(Debug, Clone)]
+pub struct TraceDumpConfig {
+    pub chaos: ChaosConfig,
+    /// Fault-schedule index replayed (same generator as `hygen chaos`).
+    pub schedule: usize,
+}
+
+impl TraceDumpConfig {
+    pub fn full() -> TraceDumpConfig {
+        TraceDumpConfig { chaos: ChaosConfig::full(), schedule: 1 }
+    }
+
+    /// CI smoke shape: same pipeline, seconds of wallclock.
+    pub fn quick() -> TraceDumpConfig {
+        TraceDumpConfig { chaos: ChaosConfig::quick(), schedule: 1 }
+    }
+}
+
+fn build_engines(cfg: &ChaosConfig) -> Vec<Engine<SimBackend>> {
+    (0..cfg.replicas)
+        .map(|i| {
+            // Same per-replica seeding as the chaos grid so the dump
+            // replays the exact run `hygen chaos` measures.
+            let setup = SimSetup::with_seed_predictor(CostModel::a100_llama7b())
+                .with_policy(OfflinePolicy::Psm)
+                .with_seed(cfg.seed + i as u64);
+            let mut engine = setup.build_with_config(SchedulerConfig {
+                latency_budget_ms: Some(cfg.latency_budget_ms),
+                ..SchedulerConfig::default()
+            });
+            engine.state.keep_finished = false;
+            engine
+        })
+        .collect()
+}
+
+/// Run the replay and render the Chrome trace document. Returns the
+/// pretty-printed JSON plus the run result (for the caller's summary
+/// line); the JSON alone is what CI byte-compares.
+pub fn render(cfg: &TraceDumpConfig) -> anyhow::Result<(String, ClusterRunResult)> {
+    let c = &cfg.chaos;
+    anyhow::ensure!(c.replicas >= 1, "trace-dump needs at least one replica");
+    let trace = chaos::mixed_trace(c);
+    let mut sim =
+        ClusterSim::new(build_engines(c), RouterPolicy::SloHeadroom.build(), c.rebalance_interval_s)
+            .with_faults(chaos::fault_schedule(c, cfg.schedule));
+    let result = sim.run(&trace, c.max_clock_s)?;
+    Ok((sim.chrome_trace().to_pretty(), result))
+}
+
+/// Run the replay and write the Perfetto-loadable dump to `out_path`.
+pub fn run_and_save(cfg: &TraceDumpConfig, out_path: &str) -> anyhow::Result<()> {
+    let (json, result) = render(cfg)?;
+    if let Some(dir) = std::path::Path::new(out_path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(out_path, &json)?;
+    println!(
+        "trace-dump: schedule {} ({} restarts), {} online + {} offline finished",
+        cfg.schedule,
+        result.fault_restarts,
+        result.aggregate.online_finished,
+        result.aggregate.offline_finished,
+    );
+    println!("-> {out_path} ({} bytes)", json.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TraceDumpConfig {
+        TraceDumpConfig {
+            chaos: ChaosConfig {
+                replicas: 2,
+                policies: vec![RouterPolicy::SloHeadroom],
+                schedules: 2,
+                kills_per_schedule: 1,
+                online_qps: 2.0,
+                trace_s: 8.0,
+                offline_n: 20,
+                latency_budget_ms: 40.0,
+                rebalance_interval_s: 0.5,
+                max_clock_s: 120.0,
+                seed: 3,
+                jobs: 1,
+            },
+            schedule: 1,
+        }
+    }
+
+    #[test]
+    fn same_seed_renders_byte_identical_json() {
+        let cfg = tiny();
+        let (a, ra) = render(&cfg).unwrap();
+        let (b, _) = render(&cfg).unwrap();
+        assert_eq!(a, b, "same config must render byte-identically");
+        assert!(ra.fault_restarts >= 1, "schedule 1 revives its kill");
+        let other = TraceDumpConfig {
+            chaos: ChaosConfig { seed: 4, ..cfg.chaos.clone() },
+            ..cfg
+        };
+        assert_ne!(a, render(&other).unwrap().0, "different seed, different run");
+    }
+
+    #[test]
+    fn dump_is_a_chrome_trace_with_lifecycle_events() {
+        let (json, _) = render(&tiny()).unwrap();
+        let doc = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(doc.get("displayTimeUnit").as_str(), Some("ms"));
+        let evs = doc.get("traceEvents").as_arr().expect("traceEvents array");
+        assert!(!evs.is_empty(), "replay must record events");
+        let has = |kind: &str| evs.iter().any(|e| e.get("name").as_str() == Some(kind));
+        assert!(has("admit"), "lifecycle start present");
+        assert!(has("decode_step"), "iteration events present");
+        assert!(has("finish"), "lifecycle end present");
+        for e in evs {
+            assert_eq!(e.get("ph").as_str(), Some("i"), "instant events only");
+            assert!(e.get("ts").as_f64().is_some(), "every event stamped");
+        }
+    }
+}

@@ -46,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod experiments;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sim;

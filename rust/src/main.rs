@@ -19,6 +19,9 @@
 //! * `overload`         — open-loop QPS ramp through the serving admission
 //!   ladder (429s, deadline 504s); writes artifacts/overload.csv and
 //!   fails if any row's conservation ledger is off
+//! * `trace-dump`       — replay one seeded faulted cluster run and dump
+//!   the per-replica flight recorders as Perfetto-loadable Chrome trace
+//!   JSON (artifacts/trace.json), byte-identical for a fixed seed
 //! * `lint`             — in-repo static analysis over `rust/src`
 //!   (determinism / alloc-free / panic-free / config-doc invariants);
 //!   exits non-zero on any violation
@@ -107,6 +110,13 @@ USAGE:
                      goodput vs offered load, per-class sheds, p99 TTFT —
                      byte-identical for a fixed seed and any -j, and
                      fails on any conservation-ledger imbalance)
+  hygen trace-dump   [--out FILE] [--quick] [--seed N] [--schedule K]
+                     (replay one seeded kill/restart cluster run — the
+                     chaos recipe, slo-headroom router — and write every
+                     replica's flight recorder as Perfetto-loadable
+                     Chrome trace JSON; --schedule 0 replays the
+                     fault-free baseline; output is byte-identical for a
+                     fixed seed — load the file at https://ui.perfetto.dev)
 
 MODELS: a100-llama2-7b (default), a40-qwen-14b, a40x4-yi-34b-tp2pp2,
         a100-mistral-7b, a5000-sheared-2.7b
@@ -133,6 +143,7 @@ fn main() {
         Some("multi-slo") => cmd_multi_slo(&args),
         Some("chaos") => cmd_chaos(&args),
         Some("overload") => cmd_overload(&args),
+        Some("trace-dump") => cmd_trace_dump(&args),
         Some("lint") => cmd_lint(&args),
         _ => {
             print!("{USAGE}");
@@ -209,13 +220,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 let cfg = cfg.clone();
                 let registry = std::sync::Arc::clone(&registry);
                 move || -> anyhow::Result<_> {
-                    let engine = build_real_engine(
+                    let mut engine = build_real_engine(
                         &cfg.artifacts_dir,
                         cfg.latency_budget_ms,
                         cfg.policy,
                         registry,
                         cfg.seed + i as u64,
                     )?;
+                    engine
+                        .state
+                        .recorder
+                        .configure(cfg.cluster.trace_capacity, cfg.cluster.trace_enabled);
                     println!(
                         "replica {i} ready: {} slots, max chunk {}, max request len {}",
                         engine.backend.nslots(),
@@ -507,6 +522,16 @@ fn cmd_overload(args: &Args) -> anyhow::Result<()> {
         shed
     );
     Ok(())
+}
+
+fn cmd_trace_dump(args: &Args) -> anyhow::Result<()> {
+    use hygen::experiments::trace_dump::{self, TraceDumpConfig};
+    let mut cfg =
+        if args.get_bool("quick") { TraceDumpConfig::quick() } else { TraceDumpConfig::full() };
+    cfg.chaos.seed = args.get_u64("seed", cfg.chaos.seed);
+    cfg.schedule = args.get_usize("schedule", cfg.schedule);
+    let out = args.get_or("out", "artifacts/trace.json");
+    trace_dump::run_and_save(&cfg, out)
 }
 
 fn cmd_lint(args: &Args) -> anyhow::Result<()> {

@@ -1,0 +1,479 @@
+//! Bounded log-linear (HDR-style) histograms for latency tracking.
+//!
+//! A [`Histogram`] is a fixed 64-bucket array over microsecond values:
+//! two sub-buckets per octave (the top two significand bits select the
+//! bucket), so relative resolution is ~50% worst-case at any scale from
+//! 1 µs to ~35 minutes, and quantiles read within one bucket width of
+//! the exact-sample value. The struct is `Copy`, never allocates after
+//! construction, and merges across replicas by bucket-wise addition —
+//! merged quantiles are *exact* with respect to the pooled buckets,
+//! unlike the "worst replica wins" aggregation it replaces.
+//!
+//! [`SignedHistogram`] tracks signed errors (predicted − actual) as a
+//! positive/negative histogram pair so `/metrics` can expose predictor
+//! bias direction, not just magnitude.
+
+use crate::util::json::Json;
+
+/// Number of buckets in every histogram (2 sub-buckets × 32 octaves).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Number of batch-shape buckets for predictor-error accounting: the
+/// octave of the batch size (1, 2-3, 4-7, ... 128+), clamped to 8.
+pub const PRED_SHAPES: usize = 8;
+
+/// Batch-shape bucket for predictor-error histograms: floor(log2(size)),
+/// clamped to `PRED_SHAPES - 1`. Size 0 maps to bucket 0.
+pub fn shape_bucket(batch_size: usize) -> usize {
+    if batch_size <= 1 {
+        0
+    } else {
+        let msb = usize::BITS as usize - 1 - batch_size.leading_zeros() as usize;
+        msb.min(PRED_SHAPES - 1)
+    }
+}
+
+/// Fixed-capacity log-linear histogram over non-negative millisecond
+/// values (stored internally at microsecond resolution).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Histogram {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_ms: f64,
+    /// 0.0 while empty (not +inf: the JSON layer encodes non-finite
+    /// floats as `null`, which would break round-trips).
+    min_ms: f64,
+    max_ms: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index for a microsecond value: values < 2 map to buckets 0/1,
+/// otherwise bucket = 2·octave + second-significand-bit, clamped to 63.
+fn bucket_index(us: u64) -> usize {
+    if us < 2 {
+        us as usize
+    } else {
+        let msb = 63 - us.leading_zeros() as usize;
+        let sub = ((us >> (msb - 1)) & 1) as usize;
+        (msb * 2 + sub).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive-lo / exclusive-hi microsecond bounds of a bucket.
+fn bucket_bounds_us(idx: usize) -> (u64, u64) {
+    if idx < 2 {
+        (idx as u64, idx as u64 + 1)
+    } else {
+        let msb = idx / 2;
+        let sub = (idx & 1) as u64;
+        let lo = (2 + sub) << (msb - 1);
+        let hi = lo + (1u64 << (msb - 1));
+        (lo, hi)
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum_ms: 0.0,
+            min_ms: 0.0,
+            max_ms: 0.0,
+        }
+    }
+
+    /// Record one millisecond value. Negative/NaN inputs clamp to 0.
+    // lint: alloc-free
+    pub fn observe(&mut self, ms: f64) {
+        let ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        let us = (ms * 1000.0) as u64;
+        let idx = bucket_index(us);
+        if let Some(b) = self.buckets.get_mut(idx) {
+            *b += 1;
+        }
+        self.count += 1;
+        self.sum_ms += ms;
+        if self.count == 1 {
+            self.min_ms = ms;
+            self.max_ms = ms;
+        } else {
+            if ms < self.min_ms {
+                self.min_ms = ms;
+            }
+            if ms > self.max_ms {
+                self.max_ms = ms;
+            }
+        }
+    }
+
+    /// Bucket-wise add: after `a.merge(&b)`, every quantile of `a` equals
+    /// the quantile of the pooled observation multiset (within bucket
+    /// resolution) — the correct cross-replica aggregation.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        for (b, ob) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += *ob;
+        }
+        if self.count == 0 {
+            self.min_ms = other.min_ms;
+            self.max_ms = other.max_ms;
+        } else {
+            if other.min_ms < self.min_ms {
+                self.min_ms = other.min_ms;
+            }
+            if other.max_ms > self.max_ms {
+                self.max_ms = other.max_ms;
+            }
+        }
+        self.count += other.count;
+        self.sum_ms += other.sum_ms;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.min_ms
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// Value (ms) at 1-based rank `r` in the recorded multiset: walks the
+    /// cumulative bucket counts and interpolates linearly inside the
+    /// containing bucket, then clamps to the observed [min, max] so
+    /// single-bucket populations report exact-ish endpoints.
+    pub fn value_at_rank(&self, rank: u64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = rank.clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let (lo, hi) = bucket_bounds_us(idx);
+                let frac = (rank - seen) as f64 / c as f64;
+                let us = lo as f64 + frac * (hi - lo) as f64;
+                return (us / 1000.0).clamp(self.min_ms, self.max_ms);
+            }
+            seen += c;
+        }
+        self.max_ms
+    }
+
+    /// Quantile `q` in [0, 100] (nearest-rank with interpolation inside
+    /// the containing bucket). Empty histogram reports 0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * self.count as f64).ceil() as u64;
+        self.value_at_rank(rank.clamp(1, self.count))
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(99.0)
+    }
+
+    /// Upper bound (ms) of the bucket a value falls in minus its lower
+    /// bound — the resolution guarantee at that scale.
+    pub fn bucket_width_ms(ms: f64) -> f64 {
+        let us = (ms.max(0.0) * 1000.0) as u64;
+        let (lo, hi) = bucket_bounds_us(bucket_index(us));
+        (hi - lo) as f64 / 1000.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("buckets", Json::Arr(self.buckets.iter().map(|&b| Json::from(b)).collect())),
+            ("count", Json::from(self.count)),
+            ("max_ms", Json::from(self.max_ms)),
+            ("mean_ms", Json::from(self.mean())),
+            ("min_ms", Json::from(self.min_ms)),
+            ("p50_ms", Json::from(self.p50())),
+            ("p99_ms", Json::from(self.p99())),
+            ("sum_ms", Json::from(self.sum_ms)),
+        ])
+    }
+
+    /// Parse a histogram previously emitted by [`Histogram::to_json`].
+    /// Returns `None` when the value lacks the bucket array (e.g. a
+    /// hand-written report in tests) so callers can fall back.
+    pub fn from_json(j: &Json) -> Option<Histogram> {
+        let arr = j.get("buckets").as_arr()?;
+        let mut h = Histogram::new();
+        for (slot, v) in h.buckets.iter_mut().zip(arr.iter()) {
+            *slot = v.as_u64()?;
+        }
+        h.count = j.get("count").as_u64()?;
+        h.sum_ms = j.get("sum_ms").as_f64()?;
+        h.min_ms = j.get("min_ms").as_f64().unwrap_or(0.0);
+        h.max_ms = j.get("max_ms").as_f64().unwrap_or(0.0);
+        Some(h)
+    }
+}
+
+/// Signed-error histogram: positive and negative magnitudes tracked in
+/// separate [`Histogram`]s so quantiles of (predicted − actual) keep
+/// their sign. Used for per-batch-shape predictor error in `/metrics`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SignedHistogram {
+    pub pos: Histogram,
+    pub neg: Histogram,
+}
+
+impl Default for SignedHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SignedHistogram {
+    pub fn new() -> SignedHistogram {
+        SignedHistogram { pos: Histogram::new(), neg: Histogram::new() }
+    }
+
+    /// Record a signed error (ms). Zero counts as positive.
+    // lint: alloc-free
+    pub fn observe(&mut self, err_ms: f64) {
+        if err_ms < 0.0 {
+            self.neg.observe(-err_ms);
+        } else {
+            self.pos.observe(err_ms);
+        }
+    }
+
+    pub fn merge(&mut self, other: &SignedHistogram) {
+        self.pos.merge(&other.pos);
+        self.neg.merge(&other.neg);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.pos.count() + self.neg.count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Signed mean error.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            (self.pos.mean() * self.pos.count() as f64
+                - self.neg.mean() * self.neg.count() as f64)
+                / n as f64
+        }
+    }
+
+    /// Signed quantile over the full ordered error population: the `n`
+    /// negative samples (most negative first) precede the positive ones.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (((q / 100.0) * n as f64).ceil() as u64).clamp(1, n);
+        let neg_n = self.neg.count();
+        if rank <= neg_n {
+            // rank 1 = most negative = highest-magnitude negative sample.
+            -self.neg.value_at_rank(neg_n - rank + 1)
+        } else {
+            self.pos.value_at_rank(rank - neg_n)
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(99.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::from(self.count())),
+            ("mean_err_ms", Json::from(self.mean())),
+            ("neg", self.neg.to_json()),
+            ("p50_err_ms", Json::from(self.p50())),
+            ("p99_err_ms", Json::from(self.p99())),
+            ("pos", self.pos.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<SignedHistogram> {
+        Some(SignedHistogram {
+            pos: Histogram::from_json(j.get("pos"))?,
+            neg: Histogram::from_json(j.get("neg"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn bucket_index_layout() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 3);
+        assert_eq!(bucket_index(4), 4);
+        assert_eq!(bucket_index(5), 4);
+        assert_eq!(bucket_index(6), 5);
+        assert_eq!(bucket_index(7), 5);
+        assert_eq!(bucket_index(8), 6);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // Bounds are consistent with the index map.
+        for idx in 0..HIST_BUCKETS - 1 {
+            let (lo, hi) = bucket_bounds_us(idx);
+            assert_eq!(bucket_index(lo), idx, "lo of bucket {idx}");
+            assert_eq!(bucket_index(hi - 1), idx, "hi-1 of bucket {idx}");
+            assert_eq!(bucket_bounds_us(idx + 1).0, hi, "contiguous at {idx}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_sample() {
+        let mut h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min_ms(), 0.0);
+        h.observe(12.5);
+        assert_eq!(h.count(), 1);
+        // Single sample: clamped to [min, max] = exact.
+        assert_eq!(h.p50(), 12.5);
+        assert_eq!(h.p99(), 12.5);
+        assert_eq!(h.mean(), 12.5);
+    }
+
+    #[test]
+    fn quantiles_within_one_bucket_of_exact_on_seeded_workload() {
+        // Deterministic xorshift workload spanning several decades.
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut h = Histogram::new();
+        let mut exact = Summary::new();
+        for _ in 0..5000 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let ms = (state % 1_000_000) as f64 / 997.0; // ~0..1003 ms
+            h.observe(ms);
+            exact.add(ms);
+        }
+        for q in [50.0, 90.0, 99.0] {
+            let hv = h.quantile(q);
+            let ev = exact.percentile(q);
+            let width = Histogram::bucket_width_ms(ev);
+            assert!(
+                (hv - ev).abs() <= width,
+                "q{q}: hist {hv} vs exact {ev}, bucket width {width}"
+            );
+        }
+        assert!((h.mean() - exact.mean()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_equals_pooled() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut pooled = Histogram::new();
+        for i in 0..500u64 {
+            let ms = (i * 7 % 400) as f64 + 0.25;
+            if i % 2 == 0 {
+                a.observe(ms);
+            } else {
+                b.observe(ms);
+            }
+            pooled.observe(ms);
+        }
+        let mut merged = a;
+        merged.merge(&b);
+        assert_eq!(merged, pooled);
+        // Merging an empty histogram is the identity.
+        let before = merged;
+        merged.merge(&Histogram::new());
+        assert_eq!(merged, before);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut h = Histogram::new();
+        for i in 0..100 {
+            h.observe(i as f64 * 3.5);
+        }
+        let j = h.to_json();
+        let back = Histogram::from_json(&j).expect("parse");
+        assert_eq!(back, h);
+        // Serialized quantiles match live quantiles.
+        assert_eq!(j.get("p50_ms").as_f64().unwrap(), h.p50());
+        // Reports without buckets (legacy minimal JSON) parse as None.
+        assert!(Histogram::from_json(&Json::obj(vec![("count", Json::from(3u64))])).is_none());
+    }
+
+    #[test]
+    fn signed_histogram_keeps_sign() {
+        let mut s = SignedHistogram::new();
+        for _ in 0..90 {
+            s.observe(2.0); // over-prediction
+        }
+        for _ in 0..10 {
+            s.observe(-8.0); // under-prediction tail
+        }
+        assert_eq!(s.count(), 100);
+        assert!(s.p50() > 0.0, "median is positive: {}", s.p50());
+        assert!(s.quantile(5.0) < 0.0, "low tail is negative: {}", s.quantile(5.0));
+        assert!((s.mean() - (90.0 * 2.0 - 10.0 * 8.0) / 100.0).abs() < 1e-9);
+        let j = s.to_json();
+        let back = SignedHistogram::from_json(&j).expect("parse");
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn shape_buckets_are_octaves() {
+        assert_eq!(shape_bucket(0), 0);
+        assert_eq!(shape_bucket(1), 0);
+        assert_eq!(shape_bucket(2), 1);
+        assert_eq!(shape_bucket(3), 1);
+        assert_eq!(shape_bucket(4), 2);
+        assert_eq!(shape_bucket(127), 6);
+        assert_eq!(shape_bucket(128), 7);
+        assert_eq!(shape_bucket(100_000), PRED_SHAPES - 1);
+    }
+}

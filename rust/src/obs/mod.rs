@@ -1,0 +1,22 @@
+//! Deterministic, allocation-free observability: the flight recorder
+//! ([`recorder`]), bounded log-linear histograms ([`histogram`]), and
+//! Chrome trace-event export ([`trace`]). See DESIGN.md §10 for the
+//! event schema, ring-overwrite semantics, bucket layout, and the
+//! scheduler decision-audit field catalog.
+//!
+//! Invariants this module upholds (and `hygen lint` + the CountingAlloc
+//! gate enforce):
+//! - `Recorder::record` and `Histogram::observe` are `// lint: alloc-free`
+//!   hot paths — the steady-state decode loop stays at zero heap
+//!   allocations with tracing enabled.
+//! - No wallclock: timestamps come from the caller's virtual clock.
+//! - JSON export is byte-deterministic (sorted object keys, stable
+//!   float formatting), so same-seed trace dumps are byte-identical.
+
+pub mod histogram;
+pub mod recorder;
+pub mod trace;
+
+pub use histogram::{shape_bucket, Histogram, SignedHistogram, HIST_BUCKETS, PRED_SHAPES};
+pub use recorder::{Event, EventKind, Recorder, DEFAULT_TRACE_CAPACITY};
+pub use trace::chrome_trace;

@@ -1,0 +1,342 @@
+//! Flight recorder: a fixed-capacity ring buffer of compact lifecycle
+//! events, preallocated at construction and written with zero heap
+//! allocations on the steady-state decode path (the CountingAlloc gate
+//! in `tests/alloc_free_loop.rs` runs with tracing enabled).
+//!
+//! Every event is stamped with virtual-clock time (`now_ms`, maintained
+//! by the engine from its simulated clock — the recorder never reads
+//! wallclock), the request id, class index, and the replica generation
+//! (bumped by the supervisor on restart), plus three `f64` payload
+//! slots whose meaning depends on the event kind — see the catalog on
+//! [`EventKind`] and DESIGN.md §10. When the ring is full the oldest
+//! event is overwritten; `dropped` in the JSON export counts how many.
+//!
+//! The scheduler stages its deciding inputs (tier being scheduled,
+//! residual iteration budget) into `audit_a`/`audit_b` before calling
+//! into `EngineState` transition methods, so preemption events carry
+//! the decision context without threading extra parameters through the
+//! panic-free scheduler core.
+
+use crate::coordinator::classes::MAX_CLASSES;
+use crate::obs::histogram::Histogram;
+use crate::util::json::Json;
+
+/// Default ring capacity (events per replica); `trace_capacity` in the
+/// serve config overrides it.
+pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
+
+/// Lifecycle event kinds. The `a`/`b`/`c` payload slots per kind:
+///
+/// | kind           | a                    | b                     | c              |
+/// |----------------|----------------------|-----------------------|----------------|
+/// | `Admit`        | prompt_len           | output_len            | —              |
+/// | `QueuePop`     | tier                 | residual budget ms    | predicted ms   |
+/// | `PrefillStart` | prompt_len           | already prefilled     | —              |
+/// | `DecodeStep`   | batch size           | predicted batch ms    | actual ms      |
+/// | `Preempt`      | preemptor tier       | residual budget ms    | 1 = discard    |
+/// | `Resume`       | 1 = decode phase     | —                     | —              |
+/// | `Migrate`      | source replica       | dest (−1 = backlog)   | —              |
+/// | `Shed`         | reason (0 deadline,  | context (deadline s / | —              |
+/// |                | 1 no-capacity)       | live replicas)        |                |
+/// | `Reroute`      | source replica       | dest replica          | —              |
+/// | `Finish`       | generated tokens     | —                     | —              |
+/// | `Abort`        | 1 = was running      | —                     | —              |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Admit,
+    QueuePop,
+    PrefillStart,
+    DecodeStep,
+    Preempt,
+    Resume,
+    Migrate,
+    Shed,
+    Reroute,
+    Finish,
+    Abort,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::QueuePop => "queue_pop",
+            EventKind::PrefillStart => "prefill_start",
+            EventKind::DecodeStep => "decode_step",
+            EventKind::Preempt => "preempt",
+            EventKind::Resume => "resume",
+            EventKind::Migrate => "migrate",
+            EventKind::Shed => "shed",
+            EventKind::Reroute => "reroute",
+            EventKind::Finish => "finish",
+            EventKind::Abort => "abort",
+        }
+    }
+}
+
+/// One compact trace record (72 bytes, `Copy`, no heap).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Virtual-clock timestamp (ms since sim start).
+    pub t_ms: f64,
+    /// Monotonic sequence number (never wraps; ring position is seq mod cap).
+    pub seq: u64,
+    pub kind: EventKind,
+    /// Request id, or 0 for iteration-level events (`DecodeStep`).
+    pub id: u64,
+    /// Class index (`Class::index()`).
+    pub class: u16,
+    /// Replica incarnation at record time (supervisor restart counter).
+    pub generation: u32,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("a", Json::from(self.a)),
+            ("b", Json::from(self.b)),
+            ("c", Json::from(self.c)),
+            ("class", Json::from(self.class as u64)),
+            ("gen", Json::from(self.generation as u64)),
+            ("id", Json::from(self.id)),
+            ("kind", Json::from(self.kind.name())),
+            ("seq", Json::from(self.seq)),
+            ("t_ms", Json::from(self.t_ms)),
+        ])
+    }
+}
+
+/// Per-replica flight recorder. Owned by `EngineState` so every state
+/// transition can record without extra plumbing; the engine maintains
+/// `now_ms` from its virtual clock before invoking transitions.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    ring: Vec<Event>,
+    cap: usize,
+    seq: u64,
+    /// Master switch (`trace_enabled`); disabled recording is a branch
+    /// and a return, nothing else.
+    pub enabled: bool,
+    /// Virtual-clock timestamp (ms) stamped on the next events; set by
+    /// the engine/sim layer, never from wallclock.
+    pub now_ms: f64,
+    /// Replica incarnation stamped on events (supervisor restarts bump it).
+    pub generation: u32,
+    /// Scheduler decision audit staging: tier currently being scheduled.
+    pub audit_a: f64,
+    /// Scheduler decision audit staging: residual iteration budget (ms).
+    pub audit_b: f64,
+    queue_delay: [Histogram; MAX_CLASSES],
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// Preallocates the full ring up front; `record` never grows it.
+    pub fn with_capacity(cap: usize) -> Recorder {
+        Recorder {
+            ring: Vec::with_capacity(cap),
+            cap,
+            seq: 0,
+            enabled: true,
+            now_ms: 0.0,
+            generation: 0,
+            audit_a: 0.0,
+            audit_b: 0.0,
+            queue_delay: [Histogram::new(); MAX_CLASSES],
+        }
+    }
+
+    /// Reconfigure capacity/enablement (serve startup, before traffic).
+    pub fn configure(&mut self, cap: usize, enabled: bool) {
+        self.ring = Vec::with_capacity(cap);
+        self.cap = cap;
+        self.seq = 0;
+        self.enabled = enabled;
+    }
+
+    /// Append one event, overwriting the oldest once the ring is full.
+    // lint: alloc-free
+    pub fn record(&mut self, kind: EventKind, id: u64, class: u16, a: f64, b: f64, c: f64) {
+        if !self.enabled || self.cap == 0 {
+            return;
+        }
+        let ev = Event {
+            t_ms: self.now_ms,
+            seq: self.seq,
+            kind,
+            id,
+            class,
+            generation: self.generation,
+            a,
+            b,
+            c,
+        };
+        let pos = (self.seq % self.cap as u64) as usize;
+        match self.ring.get_mut(pos) {
+            Some(slot) => *slot = ev,
+            // Fill phase: len == pos < cap, so this push stays within the
+            // preallocated capacity and never reallocates.
+            None => self.ring.push(ev),
+        }
+        self.seq += 1;
+    }
+
+    /// Record a queue-delay observation (ms) for a class at admission.
+    /// Index-free so panic-scoped callers (the scheduler) can use it.
+    // lint: alloc-free
+    pub fn observe_queue_delay(&mut self, class_idx: usize, ms: f64) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(h) = self.queue_delay.get_mut(class_idx) {
+            h.observe(ms);
+        }
+    }
+
+    pub fn queue_delay(&self, class_idx: usize) -> Option<&Histogram> {
+        self.queue_delay.get(class_idx)
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Visit retained events oldest → newest.
+    pub fn for_each<F: FnMut(&Event)>(&self, mut f: F) {
+        let len = self.ring.len() as u64;
+        if len == 0 {
+            return;
+        }
+        for k in 0..len {
+            let idx = ((self.seq - len + k) % self.cap as u64) as usize;
+            if let Some(e) = self.ring.get(idx) {
+                f(e);
+            }
+        }
+    }
+
+    /// JSON export of the newest `last_n` retained events plus the ring
+    /// accounting and per-class queue-delay histograms. Serves
+    /// `GET /trace?n=K`.
+    pub fn to_json(&self, last_n: usize) -> Json {
+        let len = self.ring.len() as u64;
+        let take = (last_n as u64).min(len);
+        let mut events = Vec::with_capacity(take as usize);
+        for k in (len - take)..len {
+            let idx = ((self.seq - len + k) % self.cap.max(1) as u64) as usize;
+            if let Some(e) = self.ring.get(idx) {
+                events.push(e.to_json());
+            }
+        }
+        Json::obj(vec![
+            ("capacity", Json::from(self.cap)),
+            ("dropped", Json::from(self.seq - len)),
+            ("events", Json::Arr(events)),
+            ("generation", Json::from(self.generation as u64)),
+            (
+                "queue_delay_ms",
+                Json::Arr(self.queue_delay.iter().map(|h| h.to_json()).collect()),
+            ),
+            ("recorded", Json::from(self.seq)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec_n(r: &mut Recorder, n: u64) {
+        for i in 0..n {
+            r.now_ms = i as f64;
+            r.record(EventKind::Admit, i, 0, 1.0, 2.0, 0.0);
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut r = Recorder::with_capacity(4);
+        rec_n(&mut r, 6);
+        assert_eq!(r.recorded(), 6);
+        assert_eq!(r.len(), 4);
+        let mut seqs = Vec::new();
+        r.for_each(|e| seqs.push(e.seq));
+        assert_eq!(seqs, vec![2, 3, 4, 5], "oldest two overwritten, order kept");
+        let j = r.to_json(2);
+        assert_eq!(j.get("dropped").as_u64(), Some(2));
+        let evs = j.get("events").as_arr().expect("events");
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("seq").as_u64(), Some(4), "last_n keeps newest");
+    }
+
+    #[test]
+    fn ring_never_grows_past_capacity() {
+        let mut r = Recorder::with_capacity(8);
+        let cap0 = r.ring.capacity();
+        rec_n(&mut r, 100);
+        assert_eq!(r.ring.capacity(), cap0, "ring must not reallocate");
+        assert_eq!(r.len(), 8);
+    }
+
+    #[test]
+    fn disabled_and_zero_capacity_record_nothing() {
+        let mut r = Recorder::with_capacity(4);
+        r.enabled = false;
+        rec_n(&mut r, 3);
+        assert_eq!(r.recorded(), 0);
+        let mut z = Recorder::with_capacity(0);
+        rec_n(&mut z, 3);
+        assert_eq!(z.recorded(), 0);
+        assert_eq!(z.to_json(10).get("events").as_arr().map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn events_carry_clock_class_generation() {
+        let mut r = Recorder::with_capacity(16);
+        r.generation = 3;
+        r.now_ms = 42.5;
+        r.record(EventKind::Preempt, 7, 2, 1.0, 55.0, 1.0);
+        let j = r.to_json(10);
+        let e = &j.get("events").as_arr().expect("events")[0];
+        assert_eq!(e.get("kind").as_str(), Some("preempt"));
+        assert_eq!(e.get("id").as_u64(), Some(7));
+        assert_eq!(e.get("class").as_u64(), Some(2));
+        assert_eq!(e.get("gen").as_u64(), Some(3));
+        assert_eq!(e.get("t_ms").as_f64(), Some(42.5));
+        assert_eq!(e.get("b").as_f64(), Some(55.0));
+    }
+
+    #[test]
+    fn queue_delay_histograms_per_class() {
+        let mut r = Recorder::new();
+        r.observe_queue_delay(0, 5.0);
+        r.observe_queue_delay(0, 15.0);
+        r.observe_queue_delay(1, 100.0);
+        r.observe_queue_delay(999, 1.0); // out of range: ignored
+        assert_eq!(r.queue_delay(0).map(|h| h.count()), Some(2));
+        assert_eq!(r.queue_delay(1).map(|h| h.count()), Some(1));
+        assert!(r.queue_delay(999).is_none());
+    }
+}

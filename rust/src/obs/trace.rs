@@ -1,0 +1,77 @@
+//! Chrome trace-event conversion: turns recorded rings into the JSON
+//! Trace Event Format that Perfetto / `chrome://tracing` load directly.
+//! Events become instant events (`ph: "i"`) with `pid` = replica index
+//! and `tid` = class index, so the Perfetto timeline groups lanes by
+//! replica and class. Serialization goes through [`Json`] (BTreeMap
+//! objects, deterministic float formatting), so same-seed runs produce
+//! byte-identical dumps at any `-j` — CI diffs two runs to enforce it.
+
+use crate::obs::recorder::Recorder;
+use crate::util::json::Json;
+
+/// One Perfetto instant event for a recorded [`crate::obs::Event`].
+fn trace_event(replica: usize, e: &crate::obs::recorder::Event) -> Json {
+    Json::obj(vec![
+        (
+            "args",
+            Json::obj(vec![
+                ("a", Json::from(e.a)),
+                ("b", Json::from(e.b)),
+                ("c", Json::from(e.c)),
+                ("gen", Json::from(e.generation as u64)),
+                ("id", Json::from(e.id)),
+                ("seq", Json::from(e.seq)),
+            ]),
+        ),
+        ("name", Json::from(e.kind.name())),
+        ("ph", Json::from("i")),
+        ("pid", Json::from(replica)),
+        ("s", Json::from("t")),
+        // Trace Event Format timestamps are microseconds.
+        ("tid", Json::from(e.class as u64)),
+        ("ts", Json::from(e.t_ms * 1000.0)),
+    ])
+}
+
+/// Build a full Chrome trace document from per-replica recorders.
+pub fn chrome_trace(recorders: &[(usize, &Recorder)]) -> Json {
+    let mut events = Vec::new();
+    for (replica, rec) in recorders {
+        rec.for_each(|e| events.push(trace_event(*replica, e)));
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::from("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::EventKind;
+
+    #[test]
+    fn chrome_trace_shape_and_determinism() {
+        let build = || {
+            let mut r = Recorder::with_capacity(8);
+            r.now_ms = 1.5;
+            r.record(EventKind::Admit, 1, 0, 10.0, 20.0, 0.0);
+            r.now_ms = 3.0;
+            r.record(EventKind::Finish, 1, 0, 20.0, 0.0, 0.0);
+            r
+        };
+        let (a, b) = (build(), build());
+        let ja = chrome_trace(&[(0, &a)]).to_pretty();
+        let jb = chrome_trace(&[(0, &b)]).to_pretty();
+        assert_eq!(ja, jb, "same inputs must serialize byte-identically");
+        let doc = chrome_trace(&[(2, &a)]);
+        assert_eq!(doc.get("displayTimeUnit").as_str(), Some("ms"));
+        let evs = doc.get("traceEvents").as_arr().expect("events");
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("name").as_str(), Some("admit"));
+        assert_eq!(evs[0].get("ph").as_str(), Some("i"));
+        assert_eq!(evs[0].get("pid").as_u64(), Some(2));
+        assert_eq!(evs[0].get("ts").as_f64(), Some(1500.0));
+        assert_eq!(evs[1].get("args").get("a").as_f64(), Some(20.0));
+    }
+}

@@ -18,6 +18,17 @@
 //!   worst replica (the cluster meets an SLO only if its slowest replica
 //!   does).
 //! * `GET /health` → `{"status":"ok"}`
+//! * `GET /trace?n=K` → the latest published flight-recorder dump
+//!   (lifecycle + scheduler-decision events, see `crate::obs`),
+//!   optionally truncated to the last K events. Single replica: the flat
+//!   recorder dump; multi-replica: `{"replicas": [...]}`.
+//!
+//! Latency aggregation note: when every replica's report carries the
+//! bounded latency histograms (`ttft_hist`/`tbt_hist`, PR 9+), per-class
+//! aggregate percentiles come from the bucket-wise *merged* distribution
+//! — pooled quantiles, not the worst replica's. Flat legacy payloads
+//! (and the top-level summary fields, which have no histogram) keep the
+//! conservative worst-replica rule.
 //!
 //! Shutdown drains: accepted requests keep executing until they finish or
 //! the drain deadline passes (then they fail with 503), instead of being
@@ -31,6 +42,7 @@ use crate::cluster::ReplicaSnapshot;
 use crate::coordinator::classes::{ClassRegistry, ClassSpec, MAX_CLASSES};
 use crate::coordinator::request::Class;
 use crate::engine::{Engine, ExecutionBackend};
+use crate::obs::histogram::{Histogram, SignedHistogram};
 use crate::runtime::tokenizer;
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
@@ -443,8 +455,48 @@ const CLASS_WORST_FIELDS: [&str; 6] = [
     "p99_tbt_ms",
 ];
 
+/// Bucket-wise merge of one histogram field across report blocks —
+/// `None` unless every block carries it, so legacy/flat payloads fall
+/// back to worst-replica aggregation.
+fn merge_hists(blocks: &[Json], key: &str) -> Option<Histogram> {
+    let mut merged = Histogram::new();
+    for b in blocks {
+        merged.merge(&Histogram::from_json(b.get(key))?);
+    }
+    Some(merged)
+}
+
+/// Merge the replicas' signed predictor-error histogram arrays
+/// shape-bucket by shape-bucket. `None` unless every report carries the
+/// array.
+fn merge_predictor_error(reports: &[Json]) -> Option<Json> {
+    let mut merged: Vec<(u64, SignedHistogram)> = Vec::new();
+    for r in reports {
+        for (i, e) in r.get("predictor_error").as_arr()?.iter().enumerate() {
+            let h = SignedHistogram::from_json(e)?;
+            if merged.len() <= i {
+                merged.push((e.get("shape").as_u64().unwrap_or(i as u64), SignedHistogram::new()));
+            }
+            merged[i].1.merge(&h);
+        }
+    }
+    let arr = merged
+        .into_iter()
+        .map(|(shape, h)| {
+            let mut j = h.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("shape".to_string(), Json::from(shape));
+            }
+            j
+        })
+        .collect();
+    Some(Json::Arr(arr))
+}
+
 /// Aggregate the replicas' `classes` arrays element-wise (class `i` with
-/// class `i`): additive fields summed, latency fields worst-replica.
+/// class `i`): additive fields summed; latency fields come from the
+/// merged histograms (pooled quantiles) when every replica reports them,
+/// else the per-replica worst.
 fn aggregate_class_blocks(reports: &[Json]) -> Json {
     let n = reports
         .iter()
@@ -460,10 +512,28 @@ fn aggregate_class_blocks(reports: &[Json]) -> Json {
             let total: f64 = blocks.iter().filter_map(|b| b.get(field).as_f64()).sum();
             pairs.push((field, Json::from(total)));
         }
+        let ttft = merge_hists(&blocks, "ttft_hist");
+        let tbt = merge_hists(&blocks, "tbt_hist");
         for field in CLASS_WORST_FIELDS {
-            let worst =
-                blocks.iter().filter_map(|b| b.get(field).as_f64()).fold(0.0f64, f64::max);
-            pairs.push((field, Json::from(worst)));
+            let pooled = match field {
+                "mean_ttft_ms" => ttft.as_ref().map(Histogram::mean),
+                "p50_ttft_ms" => ttft.as_ref().map(Histogram::p50),
+                "p99_ttft_ms" => ttft.as_ref().map(Histogram::p99),
+                "mean_tbt_ms" => tbt.as_ref().map(Histogram::mean),
+                "p50_tbt_ms" => tbt.as_ref().map(Histogram::p50),
+                "p99_tbt_ms" => tbt.as_ref().map(Histogram::p99),
+                _ => None,
+            };
+            let v = pooled.unwrap_or_else(|| {
+                blocks.iter().filter_map(|b| b.get(field).as_f64()).fold(0.0f64, f64::max)
+            });
+            pairs.push((field, Json::from(v)));
+        }
+        if let Some(h) = &ttft {
+            pairs.push(("ttft_hist", h.to_json()));
+        }
+        if let Some(h) = &tbt {
+            pairs.push(("tbt_hist", h.to_json()));
         }
         out.push(Json::obj(pairs));
     }
@@ -485,6 +555,14 @@ fn aggregate_metrics(reports: &[Json], fleet: Vec<(&'static str, Json)>) -> Json
             .filter_map(|r| r.get(field).as_f64())
             .fold(0.0f64, f64::max);
         agg.push((field, Json::from(worst)));
+    }
+    // Mergeable distributions ride along whenever every replica reports
+    // them: bucket-wise sums give pooled (not worst-replica) quantiles.
+    if let Some(h) = merge_hists(reports, "batch_latency_hist") {
+        agg.push(("batch_latency_hist", h.to_json()));
+    }
+    if let Some(pe) = merge_predictor_error(reports) {
+        agg.push(("predictor_error", pe));
     }
     agg.push(("classes", aggregate_class_blocks(reports)));
     let mut top = vec![
@@ -575,6 +653,30 @@ fn reject_429(
     )
 }
 
+/// The `/trace` payload: each replica's latest published flight-recorder
+/// dump, optionally truncated to the last `n` events. The dump is
+/// re-published alongside `/metrics` (see
+/// [`crate::cluster::replica::TRACE_PUBLISH_EVENTS`]), so this never
+/// touches the engine thread.
+fn trace_payload(state: &ClusterState, n: Option<usize>) -> Json {
+    let one = |port: &ReplicaPort| {
+        let text = port.shared.trace_json.lock().unwrap().clone();
+        let mut j = Json::parse(&text).unwrap_or(Json::Obj(Default::default()));
+        if let (Some(k), Json::Obj(map)) = (n, &mut j) {
+            if let Some(Json::Arr(events)) = map.get_mut("events") {
+                let drop = events.len().saturating_sub(k);
+                events.drain(..drop);
+            }
+        }
+        j
+    };
+    if state.replicas.len() == 1 {
+        one(&state.replicas[0])
+    } else {
+        Json::obj(vec![("replicas", Json::Arr(state.replicas.iter().map(one).collect()))])
+    }
+}
+
 fn handle_connection(
     stream: &mut std::net::TcpStream,
     state: &ClusterState,
@@ -612,6 +714,14 @@ fn handle_connection(
                 fleet.extend(overload_fields(state));
                 aggregate_metrics(&reports, fleet).to_pretty()
             };
+            write_response(stream, 200, "application/json", body.as_bytes())
+        }
+        ("GET", path) if path == "/trace" || path.starts_with("/trace?") => {
+            let n = path
+                .split_once('?')
+                .and_then(|(_, q)| q.split('&').find_map(|kv| kv.strip_prefix("n=")))
+                .and_then(|v| v.parse::<usize>().ok());
+            let body = trace_payload(state, n).to_pretty();
             write_response(stream, 200, "application/json", body.as_bytes())
         }
         ("POST", "/v1/completions") => handle_completion(stream, state, &req.body),
@@ -1508,6 +1618,141 @@ mod tests {
         assert_eq!(m.get("retries").as_u64(), Some(1), "{m}");
         assert_eq!(m.get("finished_200").as_u64(), Some(1), "{m}");
         assert_eq!(m.get("failed_503").as_u64(), Some(0), "{m}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn aggregate_pools_latency_histograms_across_replicas() {
+        // Regression for the "worst replica" latency merge: two replicas
+        // with disjoint latency populations (one fast at ~10 ms, one slow
+        // at ~100 ms). The worst-replica rule would report the cluster
+        // p50 as the slow replica's ~100 ms; the pooled distribution's
+        // median sits in the fast population. p99 must still see the
+        // slow tail.
+        let mk = |ms: f64| {
+            let mut h = Histogram::new();
+            for _ in 0..100 {
+                h.observe(ms);
+            }
+            h
+        };
+        let block = |h: &Histogram| {
+            Json::obj(vec![
+                ("class", Json::from(0u64)),
+                ("finished", Json::from(100u64)),
+                ("tps", Json::from(1.0)),
+                ("qps", Json::from(1.0)),
+                ("mean_ttft_ms", Json::from(h.mean())),
+                ("p50_ttft_ms", Json::from(h.p50())),
+                ("p99_ttft_ms", Json::from(h.p99())),
+                ("mean_tbt_ms", Json::from(0.0)),
+                ("p50_tbt_ms", Json::from(0.0)),
+                ("p99_tbt_ms", Json::from(0.0)),
+                ("ttft_hist", h.to_json()),
+                ("tbt_hist", Histogram::new().to_json()),
+            ])
+        };
+        let fast = mk(10.0);
+        let slow = mk(100.0);
+        let a = Json::obj(vec![("classes", Json::Arr(vec![block(&fast)]))]);
+        let b = Json::obj(vec![("classes", Json::Arr(vec![block(&slow)]))]);
+        let m = aggregate_metrics(&[a, b], Vec::new());
+        let classes = m.get("aggregate").get("classes").as_arr().unwrap();
+        let p50 = classes[0].get("p50_ttft_ms").as_f64().unwrap();
+        let p99 = classes[0].get("p99_ttft_ms").as_f64().unwrap();
+        assert!(p50 < 50.0, "pooled p50 sits in the fast population, got {p50}");
+        assert!(p50 >= 9.0, "p50 stays within a bucket of the fast mode, got {p50}");
+        assert!(p99 > 50.0, "pooled p99 still sees the slow tail, got {p99}");
+        assert!(
+            classes[0].get("ttft_hist").get("count").as_u64() == Some(200),
+            "merged histogram exported for downstream aggregation: {m}"
+        );
+        // Flat legacy payloads (no histograms) keep the worst-replica rule
+        // — pinned separately in aggregate_metrics_sums_and_takes_worst.
+    }
+
+    fn echo_engine_with_budget() -> anyhow::Result<Engine<EchoBackend>> {
+        let state = EngineState::new(OfflinePolicy::Fcfs, 256, 16, 0);
+        let sched = HybridScheduler::new(
+            SchedulerConfig { latency_budget_ms: Some(40.0), ..Default::default() },
+            LatencyPredictor::default_seed(),
+        );
+        Ok(Engine::new(sched, state, EchoBackend))
+    }
+
+    #[test]
+    fn brownout_429_paths_carry_retry_after() {
+        // Rung 1: an impossible offline-headroom bar sheds every elastic
+        // request while interactive work keeps flowing. The budgeted
+        // engine makes headroom finite so the ladder engages at all.
+        let server = Server::start_cluster_with_registry(
+            "127.0.0.1:0",
+            vec![echo_engine_with_budget],
+            RouterPolicy::RoundRobin.build(),
+            2,
+            DEFAULT_DRAIN,
+            Arc::new(ClassRegistry::default_two()),
+            SupervisorConfig::default(),
+            OverloadConfig {
+                brownout_offline_headroom_ms: f64::INFINITY,
+                ..OverloadConfig::default()
+            },
+        )
+        .unwrap();
+        let r = http(server.addr, &completions_request_class("abcd", "offline"));
+        assert!(r.contains("429"), "rung-1 brown-out sheds elastic work: {r}");
+        assert!(r.contains("Retry-After:"), "rung-1 429 must carry Retry-After: {r}");
+        let r = http(server.addr, &completions_request_class("abcd", "online"));
+        assert!(r.contains("200 OK"), "rung 1 leaves interactive admission open: {r}");
+        server.shutdown();
+        // Rung 3: total admission stop — even top-tier interactive work
+        // sheds, and that 429 carries Retry-After too.
+        let server = Server::start_cluster_with_registry(
+            "127.0.0.1:0",
+            vec![echo_engine_with_budget],
+            RouterPolicy::RoundRobin.build(),
+            2,
+            DEFAULT_DRAIN,
+            Arc::new(ClassRegistry::default_two()),
+            SupervisorConfig::default(),
+            OverloadConfig {
+                brownout_online_headroom_ms: f64::INFINITY,
+                ..OverloadConfig::default()
+            },
+        )
+        .unwrap();
+        let r = http(server.addr, &completions_request_class("abcd", "online"));
+        assert!(r.contains("429"), "rung-3 brown-out stops all admission: {r}");
+        assert!(r.contains("Retry-After:"), "rung-3 429 must carry Retry-After: {r}");
+        let m = body_json(&http(server.addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert_eq!(m.get("rejected_429").as_u64(), Some(1), "{m}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn trace_endpoint_serves_flight_recorder() {
+        let server = start_echo_server();
+        let r = http(server.addr, &completions_request("abcd"));
+        assert!(r.contains("200 OK"), "{r}");
+        // Wait out a publish interval so the recorder dump is up.
+        std::thread::sleep(Duration::from_millis(450));
+        let t = http(server.addr, "GET /trace HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(t.contains("200 OK"), "{t}");
+        let j = body_json(&t);
+        let events = j.get("events").as_arr().expect("trace carries an event list").to_vec();
+        assert!(!events.is_empty(), "{t}");
+        assert!(
+            events.iter().any(|e| e.get("kind").as_str() == Some("admit")),
+            "lifecycle starts with an admit: {t}"
+        );
+        assert!(
+            events.iter().any(|e| e.get("kind").as_str() == Some("finish")),
+            "completed request leaves a finish record: {t}"
+        );
+        // ?n=K truncates to the most recent K events.
+        let t = http(server.addr, "GET /trace?n=1 HTTP/1.1\r\nHost: x\r\n\r\n");
+        let j = body_json(&t);
+        assert_eq!(j.get("events").as_arr().map(|a| a.len()), Some(1), "{t}");
         server.shutdown();
     }
 }

@@ -239,6 +239,37 @@ mod tests {
     }
 
     #[test]
+    fn summary_all_equal_samples() {
+        // Degenerate population: every percentile is the common value and
+        // interpolation between equal ranks must not drift.
+        let mut s = Summary::new();
+        for _ in 0..7 {
+            s.add(4.25);
+        }
+        assert_eq!(s.min(), 4.25);
+        assert_eq!(s.max(), 4.25);
+        assert!((s.mean() - 4.25).abs() < 1e-12);
+        for q in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(q), 4.25, "q={q}");
+        }
+    }
+
+    #[test]
+    fn summary_two_samples_interpolate() {
+        // n = 2 exercises the closest-ranks interpolation directly:
+        // rank = q/100, so p50 is the midpoint and p99 sits 99% of the
+        // way to the larger sample (numpy's linear default).
+        let mut s = Summary::new();
+        s.add(100.0);
+        s.add(0.0); // insertion order must not matter
+        assert_eq!(s.p50(), 50.0);
+        assert!((s.p99() - 99.0).abs() < 1e-9);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(25.0) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn summary_interleaved_add_and_query() {
         let mut s = Summary::new();
         s.add(10.0);

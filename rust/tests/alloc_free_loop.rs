@@ -4,6 +4,11 @@
 //! after warmup, a window of engine iterations (schedule → execute →
 //! apply → metrics) must perform **zero** heap allocations.
 //!
+//! The probe runs with the flight recorder enabled (its default), so the
+//! gate also proves tracing is allocation-free: the recorder's ring and
+//! histograms are preallocated, and the probe reports how many trace
+//! events landed inside the measured window.
+//!
 //! This file holds exactly one test so no concurrent test thread can
 //! allocate inside the measured window (the counter is process-global).
 
@@ -21,10 +26,17 @@ fn steady_decode_iterations_do_not_allocate() {
     assert!(alloc_count() > before, "setup itself allocates; the counter is live");
     assert_eq!(probe.iterations, 100);
     assert!(probe.ns_per_iter > 0.0);
+    assert!(
+        probe.trace_events >= probe.iterations,
+        "tracing must be live inside the window ({} events over {} iterations) — \
+         a zero-alloc pass with tracing off would not test the recorder",
+        probe.trace_events,
+        probe.iterations
+    );
     assert_eq!(
         probe.allocs_total, 0,
         "steady-state decode iterations allocated {} times over {} iterations \
-         (contract: zero once scratch buffers are warm)",
+         with tracing enabled (contract: zero once scratch buffers are warm)",
         probe.allocs_total, probe.iterations
     );
 }
