@@ -22,7 +22,7 @@ lint:
 	cargo run --release -- lint
 
 # Regenerate both tracked perf-trajectory files
-# (BENCH_sched.json + BENCH_e2e.json).
+# (BENCH_sched.json + BENCH_e2e.json + BENCH_prefix.csv).
 bench: bench-sched bench-replay
 
 # Scheduling-overhead trajectory (10k-request mixed trace + scaling probe)
@@ -31,13 +31,16 @@ bench-sched:
 	cargo run --release -- bench-sched
 
 # End-to-end replay trajectory (multi-scale mixed-trace replay +
-# zero-allocation steady-decode probe) -> BENCH_e2e.json
+# zero-allocation steady-decode probe with live cache churn + O(1)
+# block-recycling probe + prefix shape sweep)
+# -> BENCH_e2e.json + BENCH_prefix.csv
 bench-replay:
 	cargo run --release -- bench-replay
 
-# Multi-replica router comparison on the calibrated mixed trace
-# (1/2/4/8 replicas x round-robin/jsq/slo-headroom, with the
-# slo-headroom-vs-round-robin acceptance gate)
+# Multi-replica router comparison on the mixed + mooncake-prefix
+# workloads (1/2/4/8 replicas x round-robin/jsq/slo-headroom/
+# prefix-affinity, with the slo-headroom-vs-round-robin and
+# prefix-affinity-vs-slo-headroom acceptance gates)
 # -> artifacts/cluster_compare.csv
 cluster:
 	cargo run --release -- cluster-sim --check

@@ -43,6 +43,7 @@ pub mod replica;
 pub mod router;
 pub mod sim;
 
+use crate::coordinator::block_manager::PROBE_SLOTS;
 use crate::coordinator::classes::MAX_CLASSES;
 use crate::coordinator::request::Class;
 use crate::engine::{Engine, ExecutionBackend};
@@ -92,6 +93,13 @@ pub struct ReplicaSnapshot {
     /// draining flags gate placement; the generation lets observers tell
     /// "recovered" apart from "never died".
     pub generation: u64,
+    /// Direct-mapped prefix-residency probe exported by the replica's
+    /// block manager: `(root-block fingerprint, resident prefix tokens)`
+    /// per slot, fingerprint 0 = empty. A fixed-size census summary —
+    /// routers query it through [`cached_prefix_tokens`]
+    /// (ReplicaSnapshot::cached_prefix_tokens) without ever touching the
+    /// replica's cache map.
+    pub prefix_probe: [(u64, u32); PROBE_SLOTS],
 }
 
 impl Default for ReplicaSnapshot {
@@ -108,6 +116,7 @@ impl Default for ReplicaSnapshot {
             failed: false,
             draining: false,
             generation: 0,
+            prefix_probe: [(0, 0); PROBE_SLOTS],
         }
     }
 }
@@ -135,6 +144,7 @@ impl ReplicaSnapshot {
             free_kv_tokens: state.blocks.free_tokens(),
             predicted_iter_ms: engine.scheduler.predictor.predict(&f),
             latency_budget_ms: engine.scheduler.cfg.latency_budget_ms.unwrap_or(f64::INFINITY),
+            prefix_probe: *state.blocks.prefix_probe(),
             ..ReplicaSnapshot::default()
         };
         let mut min_present = f64::INFINITY;
@@ -182,6 +192,28 @@ impl ReplicaSnapshot {
     /// Per-class waiting count.
     pub fn class_waiting(&self, class: Class) -> usize {
         self.waiting[class.index()]
+    }
+
+    /// Prefix tokens of `chain` (a request's full-block hash chain, root
+    /// first) already resident in this replica's KV cache, according to
+    /// the probe summary. A direct-mapped lookup on the root-block
+    /// fingerprint: exact when the prefix family is tracked in its slot, 0
+    /// (a conservative miss) when the family was displaced. O(1),
+    /// allocation-free — the `PrefixAffinity` router calls it once per
+    /// replica per routing decision.
+    // lint: alloc-free
+    pub fn cached_prefix_tokens(&self, chain: &[u64]) -> usize {
+        let Some(&fp) = chain.first() else { return 0 };
+        if fp == 0 {
+            return 0;
+        }
+        let slot = (fp % PROBE_SLOTS as u64) as usize;
+        let (slot_fp, tokens) = self.prefix_probe[slot];
+        if slot_fp == fp {
+            tokens as usize
+        } else {
+            0
+        }
     }
 
     /// Predicted slack (ms) between the replica's effective latency
@@ -234,6 +266,24 @@ mod tests {
         let s2 = ReplicaSnapshot::of(&e);
         assert!(s2.running[0] + s2.running[1] > 0);
         assert!(s2.predicted_iter_ms > s.predicted_iter_ms, "load raises the estimate");
+    }
+
+    #[test]
+    fn snapshot_probe_reports_resident_prefixes() {
+        use crate::coordinator::block_manager::chain_hashes;
+        let mut e = engine(Some(40.0));
+        let prompt: std::sync::Arc<[u32]> = (0..64u32).collect::<Vec<_>>().into();
+        e.submit(Request::new(1, Class::ONLINE, 0.0, 64, 2).with_prompt(prompt.clone()));
+        while e.has_work() {
+            e.step().unwrap();
+        }
+        let chain = chain_hashes(&prompt, 16);
+        let s = ReplicaSnapshot::of(&e);
+        assert_eq!(s.cached_prefix_tokens(&chain), 64, "whole prompt resident after run");
+        assert_eq!(s.cached_prefix_tokens(&chain[..1]), 64, "probe keys on the chain root");
+        assert_eq!(s.cached_prefix_tokens(&[0xdead_beef]), 0, "foreign family misses");
+        assert_eq!(s.cached_prefix_tokens(&[]), 0, "empty chain is cold");
+        assert_eq!(ReplicaSnapshot::default().cached_prefix_tokens(&chain), 0);
     }
 
     #[test]

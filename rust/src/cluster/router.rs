@@ -30,6 +30,16 @@ pub trait Router: Send {
     /// error or holds the work).
     fn route_online(&mut self, snaps: &[ReplicaSnapshot]) -> usize;
 
+    /// Replica for an arriving interactive request whose prompt's
+    /// full-block hash chain is known. Prefix-blind policies ignore the
+    /// chain (this default delegates to [`route_online`]
+    /// (Router::route_online)); [`PrefixAffinity`] weighs each replica's
+    /// [`ReplicaSnapshot::cached_prefix_tokens`] against its SLO headroom.
+    fn route_online_with_prefix(&mut self, snaps: &[ReplicaSnapshot], chain: &[u64]) -> usize {
+        let _ = chain;
+        self.route_online(snaps)
+    }
+
     /// Replica for the next shared-backlog elastic request, or `None` to
     /// defer placement to a later rebalance tick.
     fn route_offline(&mut self, snaps: &[ReplicaSnapshot]) -> Option<usize>;
@@ -41,17 +51,23 @@ pub enum RouterPolicy {
     RoundRobin,
     JoinShortestQueue,
     SloHeadroom,
+    PrefixAffinity,
 }
 
 impl RouterPolicy {
-    pub const ALL: [RouterPolicy; 3] =
-        [RouterPolicy::RoundRobin, RouterPolicy::JoinShortestQueue, RouterPolicy::SloHeadroom];
+    pub const ALL: [RouterPolicy; 4] = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::JoinShortestQueue,
+        RouterPolicy::SloHeadroom,
+        RouterPolicy::PrefixAffinity,
+    ];
 
     pub fn parse(s: &str) -> Option<RouterPolicy> {
         match s {
             "round-robin" | "rr" => Some(RouterPolicy::RoundRobin),
             "jsq" | "join-shortest-queue" => Some(RouterPolicy::JoinShortestQueue),
             "slo-headroom" | "slo" => Some(RouterPolicy::SloHeadroom),
+            "prefix-affinity" | "affinity" => Some(RouterPolicy::PrefixAffinity),
             _ => None,
         }
     }
@@ -61,6 +77,7 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => "round-robin",
             RouterPolicy::JoinShortestQueue => "jsq",
             RouterPolicy::SloHeadroom => "slo-headroom",
+            RouterPolicy::PrefixAffinity => "prefix-affinity",
         }
     }
 
@@ -70,6 +87,7 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => Box::new(RoundRobin::default()),
             RouterPolicy::JoinShortestQueue => Box::new(JoinShortestQueue),
             RouterPolicy::SloHeadroom => Box::new(SloHeadroom::default()),
+            RouterPolicy::PrefixAffinity => Box::new(PrefixAffinity::default()),
         }
     }
 }
@@ -207,6 +225,70 @@ impl Router for SloHeadroom {
     }
 }
 
+/// Prefix-affinity routing: send an interactive request to the replica
+/// that already holds its prompt prefix in KV cache — *unless* that
+/// replica is short on SLO headroom. Each routable replica is scored
+///
+/// ```text
+/// score = weight_ms_per_token × cached_prefix_tokens(chain) + headroom_ms
+/// ```
+///
+/// and the highest score wins (ties: smaller online depth, then lower
+/// index). `weight_ms_per_token` converts resident prefix tokens into
+/// the same milliseconds currency as headroom — it is roughly "prefill
+/// milliseconds saved per cached token", so a warm replica can outbid a
+/// cold one with up to `weight × cached` extra predicted load, and no
+/// more. When every replica is cold for the chain (or the chain is
+/// empty/unknown), the decision is exactly [`SloHeadroom`]'s, and
+/// offline placement always delegates to the embedded fallback.
+#[derive(Debug)]
+pub struct PrefixAffinity {
+    /// Milliseconds of headroom one cached prefix token is worth.
+    pub weight_ms_per_token: f64,
+    /// Cold-path policy (also serves `route_online` when no chain is
+    /// available, and all offline placement).
+    pub fallback: SloHeadroom,
+}
+
+impl Default for PrefixAffinity {
+    fn default() -> Self {
+        PrefixAffinity { weight_ms_per_token: 0.1, fallback: SloHeadroom::default() }
+    }
+}
+
+impl Router for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        RouterPolicy::PrefixAffinity.name()
+    }
+
+    fn route_online(&mut self, snaps: &[ReplicaSnapshot]) -> usize {
+        // No chain in hand: indistinguishable from SloHeadroom.
+        self.fallback.route_online(snaps)
+    }
+
+    fn route_online_with_prefix(&mut self, snaps: &[ReplicaSnapshot], chain: &[u64]) -> usize {
+        let mut any_warm = false;
+        for s in snaps {
+            if routable(s) && s.cached_prefix_tokens(chain) > 0 {
+                any_warm = true;
+                break;
+            }
+        }
+        if !any_warm {
+            return self.fallback.route_online(snaps);
+        }
+        let w = self.weight_ms_per_token;
+        argmin_live(snaps, |s| {
+            let score = w * s.cached_prefix_tokens(chain) as f64 + s.headroom_ms();
+            (-score, s.online_depth())
+        })
+    }
+
+    fn route_offline(&mut self, snaps: &[ReplicaSnapshot]) -> Option<usize> {
+        self.fallback.route_offline(snaps)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,6 +392,66 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Mark `s` warm for the family rooted at `fp`, holding `tokens`.
+    fn warm(s: &mut ReplicaSnapshot, fp: u64, tokens: u32) {
+        use crate::coordinator::block_manager::PROBE_SLOTS;
+        s.prefix_probe[(fp % PROBE_SLOTS as u64) as usize] = (fp, tokens);
+    }
+
+    #[test]
+    fn prefix_affinity_routes_to_warm_replica() {
+        let mut r = PrefixAffinity::default();
+        let fp = 0x1234_5678_9abc_def0u64;
+        let mut snaps = vec![snap(0, 20.0), snap(0, 20.0), snap(0, 20.0)];
+        warm(&mut snaps[2], fp, 512);
+        assert_eq!(r.route_online_with_prefix(&snaps, &[fp]), 2, "warm replica wins at equal headroom");
+        // A different family's chain is cold everywhere: exact SloHeadroom
+        // behaviour (lowest index at equal headroom).
+        assert_eq!(r.route_online_with_prefix(&snaps, &[fp ^ 1]), 0);
+        assert_eq!(r.route_online_with_prefix(&snaps, &[]), 0);
+        assert_eq!(r.route_online(&snaps), 0, "chain-less entry point is SloHeadroom");
+    }
+
+    #[test]
+    fn prefix_affinity_weight_trades_against_headroom() {
+        let fp = 77u64;
+        // Warm replica has 10 ms less headroom; 256 cached tokens at the
+        // default 0.1 ms/token are worth 25.6 ms — affinity wins.
+        let mut snaps = vec![snap(0, 30.0), snap(0, 20.0)];
+        warm(&mut snaps[1], fp, 256);
+        let mut r = PrefixAffinity::default();
+        assert_eq!(r.route_online_with_prefix(&snaps, &[fp]), 1);
+        // Tiny weight: the cached tokens cannot cover the headroom gap.
+        let mut r = PrefixAffinity { weight_ms_per_token: 0.01, ..PrefixAffinity::default() };
+        assert_eq!(r.route_online_with_prefix(&snaps, &[fp]), 0, "headroom dominates at low weight");
+    }
+
+    #[test]
+    fn prefix_affinity_skips_failed_and_draining_warm_replicas() {
+        let fp = 9u64;
+        let mut snaps = vec![snap(0, 10.0), snap(0, 30.0), snap(0, 20.0)];
+        warm(&mut snaps[1], fp, 4096);
+        snaps[1].failed = true;
+        let mut r = PrefixAffinity::default();
+        assert_ne!(r.route_online_with_prefix(&snaps, &[fp]), 1, "failed warm replica skipped");
+        snaps[1].failed = false;
+        snaps[1].draining = true;
+        assert_ne!(r.route_online_with_prefix(&snaps, &[fp]), 1, "draining warm replica skipped");
+        // Offline placement delegates to the SloHeadroom fallback.
+        assert_eq!(r.route_offline(&snaps), Some(2));
+    }
+
+    #[test]
+    fn default_prefix_route_ignores_chain() {
+        // Prefix-blind policies get the trait default: the chain is a
+        // no-op and both entry points agree.
+        let fp = 5u64;
+        let mut snaps = vec![snap(2, 10.0), snap(1, 10.0)];
+        warm(&mut snaps[0], fp, 1024);
+        let mut jsq = JoinShortestQueue;
+        assert_eq!(jsq.route_online_with_prefix(&snaps, &[fp]), jsq.route_online(&snaps));
     }
 
     #[test]

@@ -40,6 +40,7 @@
 use super::autoscale::{Autoscaler, ScaleDecision};
 use super::router::Router;
 use super::ReplicaSnapshot;
+use crate::coordinator::block_manager::chain_hashes_into;
 use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::metrics::{Metrics, Report};
 use crate::coordinator::request::{Class, Request, RequestId};
@@ -214,6 +215,9 @@ pub struct ClusterSim<B: ExecutionBackend> {
     scale_ups: usize,
     scale_downs: usize,
     rerouted_delay_s: f64,
+    /// Reused prompt hash-chain buffer for prefix-aware online routing
+    /// (one chain per interactive arrival; capacity persists).
+    chain_scratch: Vec<u64>,
 }
 
 impl<B: ExecutionBackend> ClusterSim<B> {
@@ -253,6 +257,7 @@ impl<B: ExecutionBackend> ClusterSim<B> {
             scale_ups: 0,
             scale_downs: 0,
             rerouted_delay_s: 0.0,
+            chain_scratch: Vec::new(),
         }
     }
 
@@ -650,8 +655,20 @@ impl<B: ExecutionBackend> ClusterSim<B> {
                     self.backlog[e.class.index()].push_back(e);
                 } else {
                     interactive_ahead -= 1;
+                    // Hash the prompt's full-block chain so prefix-aware
+                    // policies can weigh replica cache residency;
+                    // prefix-blind policies ignore it via the trait
+                    // default. All replicas share one block size.
+                    let mut chain = std::mem::take(&mut self.chain_scratch);
+                    if e.prompt.is_empty() {
+                        chain.clear();
+                    } else {
+                        let bs = self.engines[0].state.blocks.block_size();
+                        chain_hashes_into(&e.prompt, bs, &mut chain);
+                    }
                     let snaps = self.snaps();
-                    let i = self.router.route_online(&snaps);
+                    let i = self.router.route_online_with_prefix(&snaps, &chain);
+                    self.chain_scratch = chain;
                     anyhow::ensure!(i < self.engines.len(), "router index out of range");
                     if self.alive[i] && !self.draining[i] {
                         self.submit_event(i, &e);
@@ -910,6 +927,45 @@ mod tests {
             sim.run(&mixed_trace(20, 30), 600.0).unwrap().aggregate
         };
         assert_eq!(run(), run(), "cluster replay must be deterministic");
+    }
+
+    #[test]
+    fn prefix_affinity_pins_families_and_matches_ledger() {
+        // Four prefix families cycling through dense online arrivals: the
+        // affinity router should keep each family on its warm replica, so
+        // the cluster-wide block-cache hit count can only match or exceed
+        // the prefix-blind headroom router's (both runs are deterministic).
+        let family = |tag: u32| -> std::sync::Arc<[u32]> {
+            (0..64u32).map(|i| i.wrapping_mul(2654435761).wrapping_add(tag)).collect::<Vec<_>>().into()
+        };
+        let fams = [family(1), family(2), family(3), family(4)];
+        let mut events = Vec::new();
+        for k in 0..32usize {
+            events.push(TraceEvent {
+                arrival_s: k as f64 * 0.02,
+                class: Class::ONLINE,
+                prompt_len: 64,
+                output_len: 8,
+                prompt: fams[k % 4].clone(),
+            });
+        }
+        let trace = Trace::new(events);
+        let hits = |policy: RouterPolicy| {
+            let mut sim = ClusterSim::new(engines(2, Some(40.0)), policy.build(), 0.5);
+            let r = sim.run(&trace, 600.0).unwrap();
+            assert_eq!(r.aggregate.online_finished, 32, "{}", policy.name());
+            assert_eq!(r.lost, 0, "{}", policy.name());
+            let c = r.aggregate.classes[0].cache;
+            assert!(c.hits + c.misses > 0, "{}: admissions hashed their chains", policy.name());
+            c.hits
+        };
+        let affinity = hits(RouterPolicy::PrefixAffinity);
+        let headroom = hits(RouterPolicy::SloHeadroom);
+        assert!(affinity > 0, "repeat families hit the warm replica's cache");
+        assert!(
+            affinity >= headroom,
+            "affinity routing lost cache hits: {affinity} < {headroom}"
+        );
     }
 
     #[test]

@@ -4,7 +4,8 @@
 
 use crate::cluster::autoscale::AutoscaleConfig;
 use crate::cluster::replica::SupervisorConfig;
-use crate::cluster::router::RouterPolicy;
+use crate::cluster::router::{PrefixAffinity, Router, RouterPolicy};
+use crate::coordinator::block_manager::EvictionPolicy;
 use crate::coordinator::classes::ClassRegistry;
 use crate::coordinator::queues::OfflinePolicy;
 use crate::server::OverloadConfig;
@@ -21,6 +22,14 @@ pub struct ClusterConfig {
     /// instance).
     pub replicas: usize,
     pub router: RouterPolicy,
+    /// KV prefix-cache eviction order (`tier-lru` = sacrifice
+    /// harvest-class prefixes first, LRU within a tier; `lru` = global
+    /// least-recently-released).
+    pub kv_eviction: EvictionPolicy,
+    /// `prefix-affinity` router weight: how many milliseconds of SLO
+    /// headroom one cached prefix token is worth when scoring replicas
+    /// (0 = affinity degenerates to slo-headroom).
+    pub affinity_weight: f64,
     /// Offline rebalance / census refresh cadence (seconds) — the tick at
     /// which the cluster re-places shared offline work in simulation.
     pub rebalance_interval_s: f64,
@@ -85,6 +94,8 @@ impl Default for ClusterConfig {
         ClusterConfig {
             replicas: 1,
             router: RouterPolicy::SloHeadroom,
+            kv_eviction: EvictionPolicy::TierLru,
+            affinity_weight: PrefixAffinity::default().weight_ms_per_token,
             rebalance_interval_s: 1.0,
             drain_s: 5.0,
             max_restarts: sup.max_restarts,
@@ -117,6 +128,16 @@ impl ClusterConfig {
                 .ok_or_else(|| anyhow::anyhow!("unknown router '{name}'"))?,
             None => d.router,
         };
+        let kv_eviction = match j.get("kv_eviction") {
+            Json::Null => d.kv_eviction,
+            v => {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("kv_eviction must be a string"))?;
+                EvictionPolicy::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown kv_eviction '{name}'"))?
+            }
+        };
         // Present-but-invalid values must error, not silently fall back
         // to defaults (an operator expecting 8 replicas must not get 1).
         let num_field = |key: &str, default: f64| -> anyhow::Result<f64> {
@@ -142,6 +163,11 @@ impl ClusterConfig {
                 as usize,
         };
         anyhow::ensure!(replicas >= 1, "cluster needs at least one replica");
+        let affinity_weight = num_field("affinity_weight", d.affinity_weight)?;
+        anyhow::ensure!(
+            affinity_weight.is_finite() && affinity_weight >= 0.0,
+            "affinity_weight must be a finite non-negative number"
+        );
         let rebalance_interval_s = num_field("rebalance_interval_s", d.rebalance_interval_s)?;
         anyhow::ensure!(
             rebalance_interval_s.is_finite() && rebalance_interval_s > 0.0,
@@ -232,6 +258,8 @@ impl ClusterConfig {
         Ok(ClusterConfig {
             replicas,
             router,
+            kv_eviction,
+            affinity_weight,
             rebalance_interval_s,
             drain_s,
             max_restarts,
@@ -259,6 +287,8 @@ impl ClusterConfig {
         vec![
             ("replicas", Json::from(self.replicas)),
             ("router", Json::from(self.router.name())),
+            ("kv_eviction", Json::from(self.kv_eviction.name())),
+            ("affinity_weight", Json::from(self.affinity_weight)),
             ("rebalance_interval_s", Json::from(self.rebalance_interval_s)),
             ("drain_s", Json::from(self.drain_s)),
             ("max_restarts", Json::from(self.max_restarts)),
@@ -280,6 +310,19 @@ impl ClusterConfig {
             ("trace_capacity", Json::from(self.trace_capacity)),
             ("trace_enabled", Json::from(self.trace_enabled)),
         ]
+    }
+
+    /// Build the routing policy this config describes. Unlike the
+    /// arg-less [`RouterPolicy::build`], this carries `affinity_weight`
+    /// into the `prefix-affinity` router.
+    pub fn build_router(&self) -> Box<dyn Router> {
+        match self.router {
+            RouterPolicy::PrefixAffinity => Box::new(PrefixAffinity {
+                weight_ms_per_token: self.affinity_weight,
+                ..PrefixAffinity::default()
+            }),
+            p => p.build(),
+        }
     }
 
     /// The supervisor restart policy this config describes.
@@ -592,6 +635,37 @@ mod tests {
         // Present-but-mistyped values error instead of silently
         // defaulting.
         for bad in [r#"{"trace_capacity": "big"}"#, r#"{"trace_enabled": "yes"}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ServeConfig::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn parses_prefix_cache_knobs() {
+        let j = Json::parse(
+            r#"{"router": "prefix-affinity", "kv_eviction": "lru", "affinity_weight": 0.25}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster.router, RouterPolicy::PrefixAffinity);
+        assert_eq!(c.cluster.kv_eviction, EvictionPolicy::Lru);
+        assert_eq!(c.cluster.affinity_weight, 0.25);
+        assert_eq!(c.cluster.build_router().name(), "prefix-affinity");
+        // Defaults: tier-LRU eviction, the router's stock weight.
+        let d = ServeConfig::default();
+        assert_eq!(d.cluster.kv_eviction, EvictionPolicy::TierLru);
+        assert_eq!(d.cluster.affinity_weight, PrefixAffinity::default().weight_ms_per_token);
+        assert_eq!(d.cluster.build_router().name(), d.cluster.router.name());
+        // Flat-JSON round trip, like the rest of the cluster shape.
+        let c2 = ServeConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.cluster, c.cluster);
+        // Present-but-invalid values error instead of silently defaulting.
+        for bad in [
+            r#"{"kv_eviction": "mru"}"#,
+            r#"{"kv_eviction": 3}"#,
+            r#"{"affinity_weight": -0.5}"#,
+            r#"{"affinity_weight": "heavy"}"#,
+        ] {
             let j = Json::parse(bad).unwrap();
             assert!(ServeConfig::from_json(&j).is_err(), "should reject {bad}");
         }

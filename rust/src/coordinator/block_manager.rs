@@ -1,16 +1,118 @@
 //! Paged KV-cache block manager (vLLM-style) with hash-chain prefix
-//! caching.
+//! caching and tiered-LRU eviction.
 //!
 //! The scheduler treats memory as the third budget dimension (Alg. 1's
 //! `m`): every scheduled token must have a KV slot. Blocks hold
 //! `block_size` tokens; full *prompt* blocks are content-addressed by a
 //! rolling hash chain so requests sharing a prefix share physical blocks —
 //! this is what makes PSM's "schedule prefix-sharers together" pay off.
+//!
+//! ## Recycling core (intrusive lists, all O(1))
+//!
+//! Free capacity lives on intrusive doubly-linked lists stored *inline*
+//! in the `Block` array (`prev`/`next` indices, `u32::MAX` = nil), so no
+//! recycling operation allocates or scans:
+//!
+//! * **untracked list** — never-hashed blocks (fresh pool, released
+//!   decode blocks). LIFO: the most recently released block is reused
+//!   first.
+//! * **per-tier LRU lists** — refcount-0 *cached* blocks, one list per
+//!   producing tier bucket (`tier.min(MAX_CLASSES-1)`). A block is
+//!   appended at the tail on release, so each list's head is its
+//!   least-recently-released member and LRU order *is* release order.
+//!
+//! `take_free` consumes the untracked list first; only when it is empty
+//! does it evict a cached block, chosen by [`EvictionPolicy`]:
+//! lowest producing tier first, then LRU within the tier (`TierLru`,
+//! the default — offline-produced prefixes die before online ones), or
+//! globally least-recently-released (`Lru`, a min over the ≤8 list
+//! heads' release stamps — still O(1)). Resurrecting a refcount-0 cache
+//! hit is a single unlink; the old `Vec::retain` free-list scan is gone.
+//!
+//! Per-request block Vecs are pooled (`release` returns them with
+//! capacity intact), so steady-state admission churn does not allocate
+//! once the pool is warm. Per-class hit/miss/eviction/resurrection
+//! counters ([`BlockCacheStats`]) feed `Metrics`/`/metrics`, and a small
+//! direct-mapped probe table summarises which prefix families are
+//! resident for the cluster router's `cached_prefix_tokens` signal.
 
+use super::classes::MAX_CLASSES;
 use super::request::RequestId;
 use std::collections::HashMap;
 
 pub type BlockId = u32;
+
+/// Nil link in the intrusive lists.
+const NIL: u32 = u32::MAX;
+/// `Block::list`: not on any free list (referenced by ≥1 sequence).
+const LIST_NONE: u8 = u8::MAX;
+/// `Block::list`: on the untracked (never-hashed) free list.
+const LIST_UNTRACKED: u8 = u8::MAX - 1;
+
+/// Slots in the direct-mapped prefix-family probe table (keyed by the
+/// chain's root hash). Small and `Copy` so `ReplicaSnapshot` can carry
+/// it verbatim.
+pub const PROBE_SLOTS: usize = 16;
+
+/// How `take_free` picks an eviction victim among refcount-0 cached
+/// blocks (the untracked list is always consumed first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionPolicy {
+    /// Lowest producing tier first, LRU within the tier (default):
+    /// harvest-class prefixes are sacrificed before interactive ones.
+    #[default]
+    TierLru,
+    /// Globally least-recently-released regardless of tier.
+    Lru,
+}
+
+impl EvictionPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictionPolicy::TierLru => "tier-lru",
+            EvictionPolicy::Lru => "lru",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EvictionPolicy> {
+        match s {
+            "tier-lru" => Some(EvictionPolicy::TierLru),
+            "lru" => Some(EvictionPolicy::Lru),
+            _ => None,
+        }
+    }
+}
+
+/// Per-class prefix-cache counters (monotonic absolutes; the metrics
+/// layer snapshots them each engine step and `absorb` sums replicas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BlockCacheStats {
+    /// Full prompt blocks served from cache at admission.
+    pub hits: u64,
+    /// Cacheable prompt blocks that had to be freshly written.
+    pub misses: u64,
+    /// Cached blocks reclaimed for fresh allocations, charged to the
+    /// class that last produced/consumed the victim.
+    pub evictions: u64,
+    /// Refcount-0 cached blocks revived off a free list by a new sharer.
+    pub resurrections: u64,
+    /// Prompt tokens satisfied from cache (prefill work saved).
+    pub cached_tokens: u64,
+}
+
+/// Read-only view of one block's bookkeeping (property-test probe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockView {
+    pub refcount: u32,
+    pub hash: Option<u64>,
+    /// True when the block sits on some free/LRU list.
+    pub listed: bool,
+    /// True when it sits on the untracked (never-hashed) list.
+    pub untracked: bool,
+    /// Producing class index / tier bucket (meaningful for cached blocks).
+    pub class: u8,
+    pub tier: u8,
+}
 
 #[derive(Debug, Clone)]
 struct Block {
@@ -18,6 +120,46 @@ struct Block {
     /// Content hash for full, immutable prompt blocks (prefix-cacheable);
     /// None for partially-filled or decode blocks.
     hash: Option<u64>,
+    /// Class index that last produced or consumed this cached block
+    /// (eviction accounting).
+    class: u8,
+    /// Producing tier bucket — selects the LRU list the block joins when
+    /// it becomes evictable.
+    tier: u8,
+    /// Which list the block is on: `LIST_NONE`, `LIST_UNTRACKED`, or a
+    /// tier bucket index.
+    list: u8,
+    prev: u32,
+    next: u32,
+    /// Monotonic release stamp (global LRU tie-break across buckets).
+    stamp: u64,
+}
+
+impl Block {
+    fn fresh() -> Block {
+        Block {
+            refcount: 0,
+            hash: None,
+            class: 0,
+            tier: 0,
+            list: LIST_NONE,
+            prev: NIL,
+            next: NIL,
+            stamp: 0,
+        }
+    }
+}
+
+/// One intrusive list's endpoints.
+#[derive(Debug, Clone, Copy)]
+struct ListHead {
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl ListHead {
+    const EMPTY: ListHead = ListHead { head: NIL, tail: NIL, len: 0 };
 }
 
 /// Per-request allocation state.
@@ -32,16 +174,36 @@ struct SeqAlloc {
 pub struct BlockManager {
     block_size: usize,
     blocks: Vec<Block>,
-    free: Vec<BlockId>,
+    /// Never-hashed free blocks (LIFO).
+    untracked: ListHead,
+    /// Refcount-0 cached blocks, one LRU list per producing tier bucket
+    /// (head = least recently released).
+    lru: [ListHead; MAX_CLASSES],
+    /// Total blocks on any free list (untracked + all LRU lists).
+    free_count: usize,
+    eviction: EvictionPolicy,
     /// content hash -> cached block (prefix cache).
     cache: HashMap<u64, BlockId>,
     seqs: HashMap<RequestId, SeqAlloc>,
+    /// Recycled per-request block Vecs (capacity kept across requests so
+    /// steady-state admission does not allocate).
+    pool: Vec<Vec<BlockId>>,
+    stats: [BlockCacheStats; MAX_CLASSES],
+    /// Direct-mapped prefix-family residency summary:
+    /// (root chain hash, resident prefix tokens). Slot 0-fingerprint =
+    /// empty. Consumed by `ReplicaSnapshot::cached_prefix_tokens`.
+    probe: [(u64, u32); PROBE_SLOTS],
+    next_stamp: u64,
+    peak_used: usize,
 }
 
-/// Hash chain over token-block contents: block i's identity commits to all
-/// preceding tokens, exactly like vLLM's prefix-caching key.
-pub fn chain_hashes(tokens: &[u32], block_size: usize) -> Vec<u64> {
-    let mut out = Vec::with_capacity(tokens.len() / block_size);
+/// Hash chain over token-block contents into a caller-owned scratch
+/// buffer: block i's identity commits to all preceding tokens, exactly
+/// like vLLM's prefix-caching key. Clears `out` first; with warmed
+/// capacity this is allocation-free on the admission path.
+// lint: alloc-free
+pub fn chain_hashes_into(tokens: &[u32], block_size: usize, out: &mut Vec<u64>) {
+    out.clear();
     let mut h: u64 = 0xcbf29ce484222325;
     for chunk in tokens.chunks(block_size) {
         if chunk.len() < block_size {
@@ -52,6 +214,14 @@ pub fn chain_hashes(tokens: &[u32], block_size: usize) -> Vec<u64> {
         }
         out.push(h);
     }
+}
+
+/// Allocating convenience wrapper around [`chain_hashes_into`] for tests
+/// and cold paths.
+// lint: allow(alloc, reason=cold-path wrapper; admissions use chain_hashes_into with a reused scratch)
+pub fn chain_hashes(tokens: &[u32], block_size: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / block_size.max(1));
+    chain_hashes_into(tokens, block_size, &mut out);
     out
 }
 
@@ -74,13 +244,27 @@ pub fn synthetic_chain(group: u64, shared_blocks: usize, unique_tag: u64, total_
 impl BlockManager {
     pub fn new(num_blocks: usize, block_size: usize) -> BlockManager {
         assert!(block_size > 0 && num_blocks > 0);
-        BlockManager {
+        let mut bm = BlockManager {
             block_size,
-            blocks: vec![Block { refcount: 0, hash: None }; num_blocks],
-            free: (0..num_blocks as BlockId).rev().collect(),
+            blocks: vec![Block::fresh(); num_blocks],
+            untracked: ListHead::EMPTY,
+            lru: [ListHead::EMPTY; MAX_CLASSES],
+            free_count: 0,
+            eviction: EvictionPolicy::default(),
             cache: HashMap::new(),
             seqs: HashMap::new(),
+            pool: Vec::new(),
+            stats: [BlockCacheStats::default(); MAX_CLASSES],
+            probe: [(0, 0); PROBE_SLOTS],
+            next_stamp: 0,
+            peak_used: 0,
+        };
+        // Seed the untracked list in ascending id order (matching the old
+        // free-stack pop order for fresh allocations).
+        for b in (0..num_blocks as BlockId).rev() {
+            bm.push_front(LIST_UNTRACKED, b);
         }
+        bm
     }
 
     pub fn block_size(&self) -> usize {
@@ -92,98 +276,287 @@ impl BlockManager {
     }
 
     pub fn free_blocks(&self) -> usize {
-        self.free.len()
+        self.free_count
     }
 
     pub fn used_blocks(&self) -> usize {
-        self.blocks.len() - self.free.len()
+        self.blocks.len() - self.free_count
+    }
+
+    /// High-water mark of `used_blocks` (effective-KV-capacity reporting).
+    pub fn peak_used_blocks(&self) -> usize {
+        self.peak_used
     }
 
     /// Token capacity still allocatable (ignoring prefix-cache hits, so a
     /// conservative lower bound — the scheduler's memory budget `m`).
     pub fn free_tokens(&self) -> usize {
-        self.free.len() * self.block_size
+        self.free_count * self.block_size
     }
 
     pub fn is_allocated(&self, id: RequestId) -> bool {
         self.seqs.contains_key(&id)
     }
 
+    pub fn eviction_policy(&self) -> EvictionPolicy {
+        self.eviction
+    }
+
+    pub fn set_eviction_policy(&mut self, p: EvictionPolicy) {
+        self.eviction = p;
+    }
+
+    /// Per-class prefix-cache counters (monotonic absolutes).
+    pub fn cache_stats(&self) -> &[BlockCacheStats; MAX_CLASSES] {
+        &self.stats
+    }
+
+    /// Prefix-family residency summary for cluster snapshots.
+    pub fn prefix_probe(&self) -> &[(u64, u32); PROBE_SLOTS] {
+        &self.probe
+    }
+
     fn blocks_needed(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
     }
 
-    fn take_free(&mut self) -> Option<BlockId> {
-        while let Some(b) = self.free.pop() {
-            // A cached block may sit in the free list with refcount 0
-            // (evictable). Claim it, dropping its cache entry.
-            let hash = self.blocks[b as usize].hash.take();
-            if let Some(h) = hash {
-                self.cache.remove(&h);
+    // ---- intrusive list plumbing (all O(1)) ----
+
+    fn heads_mut(&mut self, list: u8) -> &mut ListHead {
+        if list == LIST_UNTRACKED {
+            &mut self.untracked
+        } else {
+            &mut self.lru[list as usize]
+        }
+    }
+
+    /// Append to `list`'s tail (MRU end of an LRU list).
+    fn push_back(&mut self, list: u8, b: BlockId) {
+        debug_assert_eq!(self.blocks[b as usize].list, LIST_NONE);
+        let old_tail = self.heads_mut(list).tail;
+        {
+            let blk = &mut self.blocks[b as usize];
+            blk.list = list;
+            blk.prev = old_tail;
+            blk.next = NIL;
+        }
+        if old_tail != NIL {
+            self.blocks[old_tail as usize].next = b;
+        }
+        let h = self.heads_mut(list);
+        if h.head == NIL {
+            h.head = b;
+        }
+        h.tail = b;
+        h.len += 1;
+        self.free_count += 1;
+    }
+
+    /// Prepend to `list`'s head (LIFO reuse for untracked blocks).
+    fn push_front(&mut self, list: u8, b: BlockId) {
+        debug_assert_eq!(self.blocks[b as usize].list, LIST_NONE);
+        let old_head = self.heads_mut(list).head;
+        {
+            let blk = &mut self.blocks[b as usize];
+            blk.list = list;
+            blk.prev = NIL;
+            blk.next = old_head;
+        }
+        if old_head != NIL {
+            self.blocks[old_head as usize].prev = b;
+        }
+        let h = self.heads_mut(list);
+        if h.tail == NIL {
+            h.tail = b;
+        }
+        h.head = b;
+        h.len += 1;
+        self.free_count += 1;
+    }
+
+    /// Remove `b` from whichever list it is on.
+    fn unlink(&mut self, b: BlockId) {
+        let (list, prev, next) = {
+            let blk = &self.blocks[b as usize];
+            (blk.list, blk.prev, blk.next)
+        };
+        debug_assert_ne!(list, LIST_NONE, "unlink of an unlisted block");
+        if prev != NIL {
+            self.blocks[prev as usize].next = next;
+        } else {
+            self.heads_mut(list).head = next;
+        }
+        if next != NIL {
+            self.blocks[next as usize].prev = prev;
+        } else {
+            self.heads_mut(list).tail = prev;
+        }
+        {
+            let blk = &mut self.blocks[b as usize];
+            blk.list = LIST_NONE;
+            blk.prev = NIL;
+            blk.next = NIL;
+        }
+        self.heads_mut(list).len -= 1;
+        self.free_count -= 1;
+    }
+
+    /// Eviction victim among refcount-0 cached blocks, per policy.
+    fn pick_victim(&self) -> Option<BlockId> {
+        match self.eviction {
+            // Lowest tier bucket with an evictable block; its head is the
+            // least recently released member.
+            EvictionPolicy::TierLru => self.lru.iter().find(|h| h.head != NIL).map(|h| h.head),
+            // Oldest release stamp across the ≤MAX_CLASSES list heads.
+            EvictionPolicy::Lru => {
+                let mut best = NIL;
+                let mut best_stamp = u64::MAX;
+                for h in &self.lru {
+                    if h.head != NIL {
+                        let s = self.blocks[h.head as usize].stamp;
+                        if s < best_stamp {
+                            best_stamp = s;
+                            best = h.head;
+                        }
+                    }
+                }
+                if best == NIL { None } else { Some(best) }
             }
+        }
+    }
+
+    /// Claim a free block: untracked pool first, then evict a cached
+    /// block per the eviction policy. O(1) either way.
+    fn take_free(&mut self) -> Option<BlockId> {
+        if self.untracked.head != NIL {
+            let b = self.untracked.head;
+            self.unlink(b);
             debug_assert_eq!(self.blocks[b as usize].refcount, 0);
             return Some(b);
         }
-        None
+        let victim = self.pick_victim()?;
+        self.unlink(victim);
+        debug_assert_eq!(self.blocks[victim as usize].refcount, 0);
+        let hash = self.blocks[victim as usize].hash.take();
+        let class = self.blocks[victim as usize].class as usize;
+        if let Some(h) = hash {
+            // The entry may have been shadowed by a newer block with the
+            // same hash; only drop it when it still points at the victim.
+            if self.cache.get(&h) == Some(&victim) {
+                self.cache.remove(&h);
+            }
+            self.probe_invalidate(h);
+        }
+        self.stats[class.min(MAX_CLASSES - 1)].evictions += 1;
+        Some(victim)
+    }
+
+    fn probe_invalidate(&mut self, h: u64) {
+        let slot = (h % PROBE_SLOTS as u64) as usize;
+        if self.probe[slot].0 == h {
+            self.probe[slot] = (0, 0);
+        }
     }
 
     /// Admit a sequence: allocate blocks for `total_tokens`, reusing
     /// prefix-cache hits from `hash_chain` (one hash per *full* prompt
-    /// block, in order). Returns the number of tokens satisfied from cache
-    /// (the prefill work saved), or `None` if memory is insufficient —
-    /// in which case nothing is allocated.
-    // lint: allow(alloc, reason=admission/resume path only; steady decode grows in place)
-    pub fn allocate(
+    /// block, in order). Returns the number of tokens satisfied from
+    /// cache (the prefill work saved), or `None` if memory is
+    /// insufficient — in which case nothing is allocated. Untagged
+    /// convenience form: attributes to class 0 / tier 0.
+    pub fn allocate(&mut self, id: RequestId, total_tokens: usize, hash_chain: &[u64]) -> Option<usize> {
+        self.allocate_tagged(id, total_tokens, hash_chain, 0, 0)
+    }
+
+    /// Tagged admission: `class` attributes hit/miss/eviction counters
+    /// and `tier` selects the LRU bucket the blocks join once evictable
+    /// (hot shared blocks inherit their latest consumer's tags, so a
+    /// prefix re-used by an interactive class is protected accordingly).
+    // lint: allow(alloc, reason=admission/resume path only; the blocks Vec comes from the per-manager pool and only reserves on cold start)
+    pub fn allocate_tagged(
         &mut self,
         id: RequestId,
         total_tokens: usize,
         hash_chain: &[u64],
+        class: usize,
+        tier: u8,
     ) -> Option<usize> {
         assert!(!self.seqs.contains_key(&id), "request {id} already allocated");
+        let class_idx = class.min(MAX_CLASSES - 1);
+        let tier_bucket = (tier as usize).min(MAX_CLASSES - 1) as u8;
         let needed = self.blocks_needed(total_tokens.max(1));
-        // Count cache hits along the chain prefix (must be contiguous).
-        let mut hit_blocks = Vec::new();
+        // Pass 1: count contiguous chain hits — no side effects, no
+        // buffer (cache lookups are repeated in pass 2, which is O(blocks
+        // touched), not O(free list)).
+        let mut n_hits = 0usize;
+        let mut evictable_hits = 0usize;
         for h in hash_chain.iter().take(needed) {
             match self.cache.get(h) {
-                Some(&b) => hit_blocks.push(b),
+                Some(&b) => {
+                    if self.blocks[b as usize].refcount == 0 {
+                        evictable_hits += 1;
+                    }
+                    n_hits += 1;
+                }
                 None => break,
             }
         }
-        let fresh_needed = needed - hit_blocks.len();
-        // Evictable cache hits (refcount 0) still sit in the free list and
-        // will be resurrected out of it — count them against free capacity
+        let fresh_needed = needed - n_hits;
+        // Evictable cache hits (refcount 0) sit on the LRU lists and will
+        // be resurrected out of them — count them against free capacity
         // alongside the fresh blocks.
-        let evictable_hits = hit_blocks
-            .iter()
-            .filter(|&&b| self.blocks[b as usize].refcount == 0)
-            .count();
-        if fresh_needed + evictable_hits > self.free.len() {
+        if fresh_needed + evictable_hits > self.free_count {
             return None;
         }
-        let mut alloc = SeqAlloc { blocks: Vec::with_capacity(needed), tokens_used: total_tokens };
-        for &b in &hit_blocks {
-            let blk = &mut self.blocks[b as usize];
-            if blk.refcount == 0 {
-                // resurrect from the evictable free list
-                self.free.retain(|&x| x != b);
+        let mut seq_blocks = self.pool.pop().unwrap_or_default();
+        seq_blocks.clear();
+        seq_blocks.reserve(needed);
+        // Pass 2a: claim the hits. Resurrection is a single unlink.
+        for h in hash_chain.iter().take(n_hits) {
+            let b = *self.cache.get(h).expect("hit counted in pass 1");
+            if self.blocks[b as usize].refcount == 0 {
+                self.unlink(b);
+                self.stats[class_idx].resurrections += 1;
             }
-            blk.refcount += 1;
-            alloc.blocks.push(b);
-        }
-        for i in 0..fresh_needed {
-            let b = self.take_free().expect("checked above");
             let blk = &mut self.blocks[b as usize];
-            blk.refcount = 1;
-            // register full prompt blocks in the prefix cache
-            let chain_idx = hit_blocks.len() + i;
-            blk.hash = hash_chain.get(chain_idx).copied();
-            if let Some(h) = blk.hash {
+            blk.refcount += 1;
+            blk.class = class_idx as u8;
+            blk.tier = tier_bucket;
+            seq_blocks.push(b);
+        }
+        // Pass 2b: fresh blocks (may evict cold cached blocks).
+        for i in 0..fresh_needed {
+            let b = self.take_free().expect("feasibility checked above");
+            let chain_idx = n_hits + i;
+            let h = hash_chain.get(chain_idx).copied();
+            {
+                let blk = &mut self.blocks[b as usize];
+                blk.refcount = 1;
+                blk.hash = h;
+                blk.class = class_idx as u8;
+                blk.tier = tier_bucket;
+            }
+            if let Some(h) = h {
+                // register full prompt blocks in the prefix cache
                 self.cache.insert(h, b);
             }
-            alloc.blocks.push(b);
+            seq_blocks.push(b);
         }
-        let cached_tokens = (hit_blocks.len() * self.block_size).min(total_tokens);
-        self.seqs.insert(id, alloc);
+        let cached_tokens = (n_hits * self.block_size).min(total_tokens);
+        let st = &mut self.stats[class_idx];
+        st.hits += n_hits as u64;
+        st.misses += (hash_chain.len().min(needed) - n_hits) as u64;
+        st.cached_tokens += cached_tokens as u64;
+        // Probe summary: the family keyed by the chain root is resident
+        // up to every full prompt block this admission touched.
+        if let Some(&fp) = hash_chain.first() {
+            if fp != 0 {
+                let resident = (hash_chain.len().min(needed) * self.block_size).min(total_tokens);
+                self.probe[(fp % PROBE_SLOTS as u64) as usize] = (fp, resident as u32);
+            }
+        }
+        self.seqs.insert(id, SeqAlloc { blocks: seq_blocks, tokens_used: total_tokens });
+        self.peak_used = self.peak_used.max(self.used_blocks());
         Some(cached_tokens)
     }
 
@@ -202,7 +575,7 @@ impl BlockManager {
             return true;
         }
         let extra = need - have;
-        if extra > self.free.len() {
+        if extra > self.free_count {
             return false;
         }
         // No temporary buffer: blocks are claimed and appended one at a
@@ -216,24 +589,36 @@ impl BlockManager {
         }
         let a = self.seqs.get_mut(&id).expect("checked above");
         a.tokens_used = new_total_tokens;
+        self.peak_used = self.peak_used.max(self.used_blocks());
         true
     }
 
-    /// Release a sequence's blocks. Cached (hashed) blocks go to the free
-    /// list but stay in the prefix cache until reclaimed — so a later
-    /// prefix-sharing request can still hit them.
+    /// Release a sequence's blocks. Cached (hashed) blocks join their
+    /// tier bucket's LRU tail (stamped, so LRU order = release order) and
+    /// stay addressable in the prefix cache until evicted; unhashed
+    /// blocks return to the untracked pool. The request's block Vec is
+    /// recycled into the pool with its capacity intact.
+    // lint: alloc-free
     pub fn release(&mut self, id: RequestId) {
-        let Some(alloc) = self.seqs.remove(&id) else { return };
-        for b in alloc.blocks {
-            let blk = &mut self.blocks[b as usize];
-            debug_assert!(blk.refcount > 0);
-            blk.refcount -= 1;
-            if blk.refcount == 0 {
-                // Evictable: hashed blocks keep their cache entry until the
-                // block is actually reused by take_free().
-                self.free.push(b);
+        let Some(mut alloc) = self.seqs.remove(&id) else { return };
+        for i in 0..alloc.blocks.len() {
+            let b = alloc.blocks[i];
+            let idx = b as usize;
+            debug_assert!(self.blocks[idx].refcount > 0);
+            self.blocks[idx].refcount -= 1;
+            if self.blocks[idx].refcount == 0 {
+                if self.blocks[idx].hash.is_some() {
+                    let bucket = self.blocks[idx].tier.min(MAX_CLASSES as u8 - 1);
+                    self.blocks[idx].stamp = self.next_stamp;
+                    self.next_stamp += 1;
+                    self.push_back(bucket, b);
+                } else {
+                    self.push_front(LIST_UNTRACKED, b);
+                }
             }
         }
+        alloc.blocks.clear();
+        self.pool.push(alloc.blocks);
     }
 
     /// Tokens currently allocated for `id` (0 if unknown).
@@ -249,6 +634,49 @@ impl BlockManager {
     /// Prefix-cache entries currently addressable.
     pub fn cache_entries(&self) -> usize {
         self.cache.len()
+    }
+
+    // ---- read-only probes for the property suite / tests ----
+
+    /// Bookkeeping view of one block.
+    pub fn block_view(&self, b: BlockId) -> Option<BlockView> {
+        self.blocks.get(b as usize).map(|blk| BlockView {
+            refcount: blk.refcount,
+            hash: blk.hash,
+            listed: blk.list != LIST_NONE,
+            untracked: blk.list == LIST_UNTRACKED,
+            class: blk.class,
+            tier: blk.tier,
+        })
+    }
+
+    /// Current cache mapping for a hash (tests enumerate their own hash
+    /// universe; the manager never iterates the map).
+    pub fn cache_lookup(&self, h: u64) -> Option<BlockId> {
+        self.cache.get(&h).copied()
+    }
+
+    /// Walk one tier bucket's LRU list head→tail (LRU→MRU) into `out`.
+    pub fn lru_order(&self, bucket: usize, out: &mut Vec<BlockId>) {
+        out.clear();
+        if bucket >= MAX_CLASSES {
+            return;
+        }
+        let mut b = self.lru[bucket].head;
+        while b != NIL {
+            out.push(b);
+            b = self.blocks[b as usize].next;
+        }
+    }
+
+    /// Walk the untracked free list head→tail into `out`.
+    pub fn untracked_order(&self, out: &mut Vec<BlockId>) {
+        out.clear();
+        let mut b = self.untracked.head;
+        while b != NIL {
+            out.push(b);
+            b = self.blocks[b as usize].next;
+        }
     }
 }
 
@@ -362,6 +790,18 @@ mod tests {
     }
 
     #[test]
+    fn chain_hashes_into_matches_wrapper_and_reuses_scratch() {
+        let a: Vec<u32> = (0..64).collect();
+        let mut scratch = Vec::with_capacity(8);
+        chain_hashes_into(&a, 16, &mut scratch);
+        assert_eq!(scratch, chain_hashes(&a, 16));
+        let cap = scratch.capacity();
+        chain_hashes_into(&a[..32], 16, &mut scratch);
+        assert_eq!(scratch.len(), 2);
+        assert_eq!(scratch.capacity(), cap, "scratch is cleared, not reallocated");
+    }
+
+    #[test]
     fn synthetic_chain_shares_exactly_prefix() {
         let x = synthetic_chain(7, 3, 100, 6);
         let y = synthetic_chain(7, 3, 200, 6);
@@ -376,5 +816,114 @@ mod tests {
         let mut bm = BlockManager::new(4, 16);
         bm.allocate(1, 0, &[]).unwrap();
         assert_eq!(bm.used_blocks(), 1);
+    }
+
+    #[test]
+    fn lru_order_is_release_order() {
+        let mut bm = BlockManager::new(16, 16);
+        let a = chain_hashes(&(0..32).collect::<Vec<u32>>(), 16);
+        let b = chain_hashes(&(100..132).collect::<Vec<u32>>(), 16);
+        bm.allocate(1, 32, &a).unwrap();
+        bm.allocate(2, 32, &b).unwrap();
+        bm.release(1); // a's blocks released first -> nearer the LRU head
+        bm.release(2);
+        let mut order = Vec::new();
+        bm.lru_order(0, &mut order);
+        assert_eq!(order.len(), 4);
+        let first_two: Vec<Option<u64>> =
+            order[..2].iter().map(|&x| bm.block_view(x).unwrap().hash).collect();
+        assert_eq!(first_two, a.iter().map(|&h| Some(h)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tier_lru_evicts_lowest_tier_first() {
+        let mut bm = BlockManager::new(4, 16);
+        let low = chain_hashes(&(0..32).collect::<Vec<u32>>(), 16);
+        let high = chain_hashes(&(100..132).collect::<Vec<u32>>(), 16);
+        bm.allocate_tagged(1, 32, &low, 1, 0).unwrap(); // offline-ish, tier 0
+        bm.allocate_tagged(2, 32, &high, 0, 1).unwrap(); // online-ish, tier 1
+        bm.release(1);
+        bm.release(2);
+        // One fresh unhashed block forces exactly one eviction: the tier-0
+        // (low) prefix must die first even though it shares LRU age.
+        bm.allocate(3, 16, &[]).unwrap();
+        assert!(bm.cache_lookup(low[0]).is_none(), "tier-0 block evicted first");
+        assert!(bm.cache_lookup(high[0]).is_some(), "tier-1 blocks survive");
+        assert_eq!(bm.cache_stats()[1].evictions, 1, "charged to the producing class");
+    }
+
+    #[test]
+    fn plain_lru_ignores_tiers() {
+        let mut bm = BlockManager::new(4, 16);
+        bm.set_eviction_policy(EvictionPolicy::Lru);
+        assert_eq!(bm.eviction_policy(), EvictionPolicy::Lru);
+        let high = chain_hashes(&(100..132).collect::<Vec<u32>>(), 16);
+        let low = chain_hashes(&(0..32).collect::<Vec<u32>>(), 16);
+        bm.allocate_tagged(1, 32, &high, 0, 1).unwrap(); // tier 1, released FIRST
+        bm.allocate_tagged(2, 32, &low, 1, 0).unwrap(); // tier 0, released second
+        bm.release(1);
+        bm.release(2);
+        bm.allocate(3, 16, &[]).unwrap();
+        assert!(bm.cache_lookup(high[0]).is_none(), "globally oldest dies first");
+        assert!(bm.cache_lookup(low[0]).is_some());
+    }
+
+    #[test]
+    fn stats_count_hits_misses_resurrections() {
+        let mut bm = BlockManager::new(16, 16);
+        let chain = chain_hashes(&(0..64).collect::<Vec<u32>>(), 16);
+        bm.allocate_tagged(1, 64, &chain, 0, 1).unwrap();
+        assert_eq!(bm.cache_stats()[0].misses, 4);
+        assert_eq!(bm.cache_stats()[0].hits, 0);
+        // Live share: hits without resurrection.
+        bm.allocate_tagged(2, 64, &chain, 0, 1).unwrap();
+        assert_eq!(bm.cache_stats()[0].hits, 4);
+        assert_eq!(bm.cache_stats()[0].resurrections, 0);
+        assert_eq!(bm.cache_stats()[0].cached_tokens, 64);
+        bm.release(1);
+        bm.release(2);
+        // Cold share: every hit resurrects an evictable block.
+        bm.allocate_tagged(3, 64, &chain, 0, 1).unwrap();
+        assert_eq!(bm.cache_stats()[0].hits, 8);
+        assert_eq!(bm.cache_stats()[0].resurrections, 4);
+    }
+
+    #[test]
+    fn probe_tracks_family_residency_until_root_eviction() {
+        let mut bm = BlockManager::new(4, 16);
+        let chain = chain_hashes(&(0..32).collect::<Vec<u32>>(), 16);
+        bm.allocate(1, 32, &chain).unwrap();
+        let slot = (chain[0] % PROBE_SLOTS as u64) as usize;
+        assert_eq!(bm.prefix_probe()[slot], (chain[0], 32));
+        bm.release(1);
+        // Churn through enough fresh blocks to evict the whole family.
+        bm.allocate(2, 64, &[]).unwrap();
+        assert_eq!(bm.prefix_probe()[slot], (0, 0), "root eviction clears the probe");
+    }
+
+    #[test]
+    fn peak_used_blocks_high_water_mark() {
+        let mut bm = BlockManager::new(8, 16);
+        bm.allocate(1, 96, &[]).unwrap(); // 6 blocks
+        bm.release(1);
+        bm.allocate(2, 16, &[]).unwrap(); // 1 block
+        assert_eq!(bm.used_blocks(), 1);
+        assert_eq!(bm.peak_used_blocks(), 6);
+    }
+
+    #[test]
+    fn pooled_vecs_are_reused_across_admissions() {
+        let mut bm = BlockManager::new(8, 16);
+        bm.allocate(1, 64, &[]).unwrap();
+        bm.release(1);
+        // Same-size readmission must reuse the pooled Vec (no growth);
+        // indirectly observable: the free structure stays consistent.
+        bm.allocate(2, 64, &[]).unwrap();
+        assert_eq!(bm.used_blocks(), 4);
+        bm.release(2);
+        assert_eq!(bm.free_blocks(), 8);
+        let mut order = Vec::new();
+        bm.untracked_order(&mut order);
+        assert_eq!(order.len(), 8, "every block is back on the untracked list");
     }
 }

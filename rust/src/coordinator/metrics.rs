@@ -19,6 +19,8 @@
 //! bounds-checked index with zero hashing and zero allocation (the slab
 //! only grows at admission time, amortized).
 
+use super::block_manager::BlockCacheStats;
+use super::classes::MAX_CLASSES;
 use super::request::{Class, RequestId, Slo, SloMetric};
 use crate::obs::histogram::{shape_bucket, Histogram, SignedHistogram, PRED_SHAPES};
 use crate::util::json::Json;
@@ -45,6 +47,10 @@ pub struct ClassReport {
     pub p99_tbt_ms: f64,
     pub ttft_hist: Histogram,
     pub tbt_hist: Histogram,
+    /// Prefix-cache counters for admissions issued by this class (hits /
+    /// misses are per *block*, `cached_tokens` is the prefill work the
+    /// cache saved). Absolute since run start; replica-additive.
+    pub cache: BlockCacheStats,
 }
 
 impl ClassReport {
@@ -62,6 +68,11 @@ impl ClassReport {
             ("p99_tbt_ms", self.p99_tbt_ms.into()),
             ("ttft_hist", self.ttft_hist.to_json()),
             ("tbt_hist", self.tbt_hist.to_json()),
+            ("cache_hit_blocks", self.cache.hits.into()),
+            ("cache_miss_blocks", self.cache.misses.into()),
+            ("cache_evictions", self.cache.evictions.into()),
+            ("cache_resurrections", self.cache.resurrections.into()),
+            ("cached_tokens", self.cache.cached_tokens.into()),
         ])
     }
 }
@@ -209,6 +220,13 @@ struct ClassAgg {
     tbt_hist: Histogram,
     tps_series: WindowSeries,
     qps_series: WindowSeries,
+    /// Local prefix-cache counters, overwritten wholesale by
+    /// [`Metrics::set_cache_stats`] (the block manager owns the truth).
+    cache: BlockCacheStats,
+    /// Cache counters merged in from other replicas via [`Metrics::absorb`]
+    /// — kept apart from `cache` so a later `set_cache_stats` overwrite
+    /// (absolute local counters) cannot erase absorbed remote ones.
+    cache_absorbed: BlockCacheStats,
 }
 
 impl ClassAgg {
@@ -223,6 +241,18 @@ impl ClassAgg {
             tbt_hist: Histogram::new(),
             tps_series: WindowSeries::new(window_s),
             qps_series: WindowSeries::new(window_s),
+            cache: BlockCacheStats::default(),
+            cache_absorbed: BlockCacheStats::default(),
+        }
+    }
+
+    fn cache_total(&self) -> BlockCacheStats {
+        BlockCacheStats {
+            hits: self.cache.hits + self.cache_absorbed.hits,
+            misses: self.cache.misses + self.cache_absorbed.misses,
+            evictions: self.cache.evictions + self.cache_absorbed.evictions,
+            resurrections: self.cache.resurrections + self.cache_absorbed.resurrections,
+            cached_tokens: self.cache.cached_tokens + self.cache_absorbed.cached_tokens,
         }
     }
 
@@ -239,6 +269,7 @@ impl ClassAgg {
             p99_tbt_ms: self.tbt.p99(),
             ttft_hist: self.ttft_hist,
             tbt_hist: self.tbt_hist,
+            cache: self.cache_total(),
         }
     }
 }
@@ -397,6 +428,19 @@ impl Metrics {
         self.classes[slot.class.index()].finished += 1;
     }
 
+    /// Overwrite the local per-class prefix-cache counters with the block
+    /// manager's absolute counters (called once per engine step; the
+    /// manager's counters are monotone, so overwrite ≡ latest snapshot).
+    /// Only classes the collector has materialized are touched — the
+    /// manager's fixed-size array covers every addressable class, and the
+    /// steady-state decode loop must not grow the class vec here.
+    // lint: alloc-free
+    pub fn set_cache_stats(&mut self, stats: &[BlockCacheStats; MAX_CLASSES]) {
+        for (agg, s) in self.classes.iter_mut().zip(stats.iter()) {
+            agg.cache = *s;
+        }
+    }
+
     /// Merge another collector's latency samples and counters into this
     /// one — cluster-wide aggregation over per-replica collectors, class
     /// by class. The merged percentiles are exact (sample-by-sample via
@@ -413,6 +457,12 @@ impl Metrics {
             agg.tbt_hist.merge(&o.tbt_hist);
             agg.tokens += o.tokens;
             agg.finished += o.finished;
+            let oc = o.cache_total();
+            agg.cache_absorbed.hits += oc.hits;
+            agg.cache_absorbed.misses += oc.misses;
+            agg.cache_absorbed.evictions += oc.evictions;
+            agg.cache_absorbed.resurrections += oc.resurrections;
+            agg.cache_absorbed.cached_tokens += oc.cached_tokens;
         }
         self.batch_latency.merge(&other.batch_latency);
         for (h, oh) in self.pred_err.iter_mut().zip(other.pred_err.iter()) {
@@ -736,5 +786,43 @@ mod tests {
         }
         assert_eq!(m.slots.capacity(), cap, "slab pre-sized, no growth");
         assert_eq!(m.report(Some(1.0)).offline_tps, 100.0);
+    }
+
+    #[test]
+    fn cache_stats_overwrite_and_absorb() {
+        let stats = |hits: u64, tok: u64| {
+            let mut s = [BlockCacheStats::default(); MAX_CLASSES];
+            s[0] = BlockCacheStats {
+                hits,
+                misses: 2,
+                evictions: 1,
+                resurrections: hits,
+                cached_tokens: tok,
+            };
+            s
+        };
+        let mut a = Metrics::new(1.0);
+        // Two snapshots: overwrite semantics means the latest wins, not
+        // the sum (the block manager's counters are already cumulative).
+        a.set_cache_stats(&stats(3, 48));
+        a.set_cache_stats(&stats(5, 80));
+        let r = a.report(Some(1.0));
+        assert_eq!(r.classes[0].cache.hits, 5);
+        assert_eq!(r.classes[0].cache.cached_tokens, 80);
+        assert_eq!(r.classes[1].cache, BlockCacheStats::default());
+
+        // Absorb adds across replicas, and a later local overwrite must
+        // not erase the absorbed remote counters.
+        let mut b = Metrics::new(1.0);
+        b.set_cache_stats(&stats(7, 112));
+        a.absorb(&b);
+        a.set_cache_stats(&stats(5, 80));
+        let r = a.report(Some(1.0));
+        assert_eq!(r.classes[0].cache.hits, 12);
+        assert_eq!(r.classes[0].cache.cached_tokens, 192);
+        let j = r.to_json();
+        let c0 = &j.get("classes").as_arr().unwrap()[0];
+        assert_eq!(c0.get("cache_hit_blocks").as_u64(), Some(12));
+        assert_eq!(c0.get("cached_tokens").as_u64(), Some(192));
     }
 }

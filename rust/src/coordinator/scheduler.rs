@@ -160,6 +160,9 @@ pub struct HybridScheduler {
     /// Reused id buffer for the per-phase passes (no per-iteration
     /// allocation once warm).
     scratch: Vec<RequestId>,
+    /// Reused prompt hash-chain buffer for admissions/resumes (no
+    /// per-request allocation once warm).
+    chain_scratch: Vec<u64>,
 }
 
 impl HybridScheduler {
@@ -171,6 +174,7 @@ impl HybridScheduler {
             limiters_key: 0,
             last_stats: ScheduleStats::default(),
             scratch: Vec::new(),
+            chain_scratch: Vec::new(),
         }
     }
 
@@ -434,10 +438,13 @@ impl HybridScheduler {
             if state.num_running() >= self.cfg.max_running || (!bypass && *t <= 0.0) {
                 break;
             }
-            let req = state.req(id);
-            let ctx = req.context_len().max(1);
-            let chain = state.prompt_chain(req);
-            if state.blocks.allocate(id, ctx, &chain).is_none() {
+            let ctx = state.req(id).context_len().max(1);
+            let mut chain = std::mem::take(&mut self.chain_scratch);
+            state.prompt_chain_into(state.req(id), &mut chain);
+            let allocated =
+                state.blocks.allocate_tagged(id, ctx, &chain, ci, tier).is_some();
+            self.chain_scratch = chain;
+            if !allocated {
                 break; // not enough memory yet
             }
             let Some(resumed_phase) = state.resume_front_of(class) else {
@@ -548,8 +555,12 @@ impl HybridScheduler {
                 ));
                 break;
             };
-            let chain = state.prompt_chain(&req);
-            let cached = match state.blocks.allocate(req.id, prompt_len.max(1), &chain) {
+            let mut chain = std::mem::take(&mut self.chain_scratch);
+            state.prompt_chain_into(&req, &mut chain);
+            let allocated =
+                state.blocks.allocate_tagged(req.id, prompt_len.max(1), &chain, ci, tier);
+            self.chain_scratch = chain;
+            let cached = match allocated {
                 Some(cached) => cached,
                 None => {
                     // racing watermark arithmetic; requeue and stop
@@ -557,6 +568,18 @@ impl HybridScheduler {
                     break;
                 }
             };
+            if cached > 0 {
+                // Flight-recorder audit: prefill work skipped via the
+                // prefix cache (a = cached tokens, b = prompt length).
+                state.recorder.record(
+                    EventKind::CacheHit,
+                    req.id,
+                    ci as u16,
+                    cached as f64,
+                    prompt_len as f64,
+                    0.0,
+                );
+            }
             // Prefix reuse: cache hits (real prompts) or the queue's
             // consecutive-LCP estimate (simulated prompts) skip work, but
             // at least one token must be processed to produce the first

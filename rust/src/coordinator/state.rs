@@ -16,7 +16,7 @@
 //! running requests sit in each (class, phase) bucket so scheduler passes
 //! with no candidates are skipped without touching the sets at all.
 
-use super::block_manager::{chain_hashes, BlockManager};
+use super::block_manager::{chain_hashes, chain_hashes_into, BlockManager};
 use super::classes::{AdmissionPolicy, ClassRegistry, MAX_CLASSES};
 use super::queues::{ClassQueue, FcfsQueue, OfflinePolicy, OfflineQueue};
 use super::request::{Class, Phase, Request, RequestId};
@@ -304,12 +304,24 @@ impl EngineState {
 
     /// KV hash chain for a request's prompt (prefix-cache key). Empty
     /// when prefix caching is disabled (real backend).
-    // lint: allow(alloc, reason=admission/resume path only; steady decode never rebuilds a chain)
+    // lint: allow(alloc, reason=cold-path wrapper; the scheduler uses prompt_chain_into with a reused scratch)
     pub fn prompt_chain(&self, req: &Request) -> Vec<u64> {
         if !self.prefix_caching {
             return Vec::new();
         }
         chain_hashes(&req.prompt, self.blocks.block_size())
+    }
+
+    /// Scratch-buffer form of [`prompt_chain`](Self::prompt_chain): fills
+    /// a caller-owned Vec (cleared first) so admission/resume passes reuse
+    /// one buffer across every request instead of allocating per call.
+    // lint: alloc-free
+    pub fn prompt_chain_into(&self, req: &Request, out: &mut Vec<u64>) {
+        if !self.prefix_caching {
+            out.clear();
+            return;
+        }
+        chain_hashes_into(&req.prompt, self.blocks.block_size(), out);
     }
 
     /// Move an admitted request (blocks already allocated, phase set to

@@ -239,6 +239,10 @@ impl<B: ExecutionBackend> Engine<B> {
         self.scheduler.schedule(&mut self.state, self.clock_s, &mut self.batch);
         let sched_ns = t0.elapsed();
         self.sched_overhead += sched_ns;
+        // Snapshot the block manager's prefix-cache counters (admissions
+        // just happened inside `schedule`); overwrite semantics, so doing
+        // it every iteration is idempotent and allocation-free.
+        self.metrics.set_cache_stats(self.state.blocks.cache_stats());
         if self.batch.is_empty() {
             return Ok(0);
         }
@@ -565,6 +569,34 @@ mod tests {
         assert_eq!(err_obs, r.iterations);
         // Queue delay observed for the admitted class.
         assert_eq!(e.state.recorder.queue_delay(0).map(|h| h.count()), Some(1));
+    }
+
+    #[test]
+    fn prefix_cache_stats_reach_report() {
+        let mut e = engine(SchedulerConfig { latency_budget_ms: None, ..Default::default() });
+        let prompt: std::sync::Arc<[u32]> = (0..64u32).collect::<Vec<_>>().into();
+        let mk = |t: f64| TraceEvent {
+            arrival_s: t,
+            class: Class::ONLINE,
+            prompt_len: 64,
+            output_len: 2,
+            prompt: prompt.clone(),
+        };
+        let r = e.run_trace(&Trace::new(vec![mk(0.0), mk(1.0)]), 100.0, true).unwrap();
+        assert_eq!(r.finished_online, 2);
+        let c = &r.report.classes[0].cache;
+        assert!(c.misses > 0, "first admission populates the cache: {c:?}");
+        assert!(c.hits > 0, "identical second prompt hits the cache: {c:?}");
+        assert!(c.cached_tokens > 0, "cached prefill work reported: {c:?}");
+        // The admission also left a CacheHit audit event in the recorder.
+        let mut cache_hits = 0u64;
+        e.state.recorder.for_each(|ev| {
+            if matches!(ev.kind, crate::obs::EventKind::CacheHit) {
+                cache_hits += 1;
+                assert!(ev.a > 0.0, "cached-token payload recorded");
+            }
+        });
+        assert_eq!(cache_hits, 1);
     }
 
     #[test]

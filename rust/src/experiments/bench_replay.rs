@@ -16,12 +16,26 @@
 //!    pre-sized KV/metrics storage, stepped directly. After warmup, a
 //!    measured window of engine iterations must perform **zero heap
 //!    allocations** (the allocation-free-loop contract; also asserted by
-//!    `tests/alloc_free_loop.rs` with its own counting allocator).
+//!    `tests/alloc_free_loop.rs` with its own counting allocator). The
+//!    window is not pure decode: a churn companion drives live prefix-
+//!    cache hits *and* evictions through the block manager every
+//!    iteration, so the zero-alloc contract covers the recycle paths.
+//! 3. **Prefix shape sweep** — Mooncake-shaped traces at 0/50/90%
+//!    shared-prefix ratios replayed end to end; reports cache hit-rate,
+//!    simulated tokens/s and peak KV blocks per ratio. Virtual-time
+//!    metrics only, so the CSV (`BENCH_prefix.csv`) is byte-identical
+//!    across runs and any `-j` — CI replays it twice and `cmp`s.
+//! 4. **Recycling cost probe** — allocate/release cycles against a
+//!    saturated prefix cache at a small and a 16x larger block pool;
+//!    per-op cost must stay ~flat (O(1) intrusive-list recycling). A
+//!    free-list scan sneaking back in tracks the pool-size ratio and
+//!    trips the gate.
 //!
 //! JSON schema: README §"Tests and benches". The gates applied by the
 //! subcommand live in `main.rs` next to the bench-sched gates.
 
 use crate::baselines::SimSetup;
+use crate::coordinator::block_manager::{synthetic_chain, BlockManager};
 use crate::coordinator::predictor::LatencyPredictor;
 use crate::coordinator::queues::OfflinePolicy;
 use crate::coordinator::request::{Class, Phase, Request};
@@ -48,6 +62,11 @@ pub struct ReplayConfig {
     pub steady_n: usize,
     /// Measured iterations in the steady-state probe (after warmup).
     pub steady_iters: usize,
+    /// Worker threads for the prefix shape sweep (the wallclock-timed
+    /// parts stay serial — parallel runs would perturb their timings).
+    /// Results are collected in submission order, so the CSV is
+    /// byte-identical for any value.
+    pub jobs: usize,
     pub seed: u64,
 }
 
@@ -60,6 +79,7 @@ impl ReplayConfig {
             trace_s: 300.0,
             steady_n: 256,
             steady_iters: 200,
+            jobs: 1,
             seed: 0,
         }
     }
@@ -72,6 +92,7 @@ impl ReplayConfig {
             trace_s: 60.0,
             steady_n: 64,
             steady_iters: 100,
+            jobs: 1,
             seed: 0,
         }
     }
@@ -116,6 +137,50 @@ pub struct SteadyProbe {
     /// proves the zero-allocation contract holds with tracing ON, not
     /// because tracing was off.
     pub trace_events: u64,
+    /// Prefix-cache block hits that landed *inside* the measured window
+    /// (the churn companion) — proves the zero-alloc contract covers hit
+    /// resurrection, not just pure decode.
+    pub cache_hits: u64,
+    /// Cached-block evictions inside the measured window — proves the
+    /// contract covers the eviction path too.
+    pub cache_evictions: u64,
+}
+
+/// Recycling-cost probe result (module docs, part 4): per-op cost of
+/// allocate/release cycles against a saturated prefix cache at two pool
+/// sizes. O(1) intrusive-list recycling keeps `ratio` ~1; an O(free-list)
+/// scan tracks `large_blocks / small_blocks` (16x) and trips the gate.
+#[derive(Debug, Clone)]
+pub struct RecycleProbe {
+    pub small_blocks: usize,
+    pub large_blocks: usize,
+    pub ns_small: f64,
+    pub ns_large: f64,
+    /// `ns_large / ns_small` — the super-linear-recycling signal.
+    pub ratio: f64,
+}
+
+/// One prefix-share datapoint of the shape sweep (module docs, part 3).
+/// Every field is virtual-time / counter data — no wallclock — so the
+/// derived CSV is byte-identical across runs and any `-j`.
+#[derive(Debug, Clone)]
+pub struct PrefixShapeResult {
+    /// Shared-prefix request share, percent (0 / 50 / 90).
+    pub share_pct: u32,
+    pub requests: usize,
+    pub finished: u64,
+    pub hit_blocks: u64,
+    pub miss_blocks: u64,
+    /// hits / (hits + misses) over cacheable prompt blocks.
+    pub hit_rate: f64,
+    /// Prompt tokens served from cache (prefill work saved).
+    pub cached_tokens: u64,
+    pub evictions: u64,
+    /// Simulated-time generated tokens/s (virtual throughput).
+    pub sim_tps: f64,
+    /// High-water KV usage — lower at equal work = effective capacity
+    /// gained by sharing.
+    pub peak_kv_blocks: usize,
 }
 
 /// Everything the bench measured (also serialized to `BENCH_e2e.json`).
@@ -123,6 +188,8 @@ pub struct SteadyProbe {
 pub struct ReplayOutcome {
     pub scales: Vec<ScaleResult>,
     pub steady: SteadyProbe,
+    pub recycle: RecycleProbe,
+    pub prefix: Vec<PrefixShapeResult>,
     /// wall-ns-per-token at the largest scale over the smallest: ~1 when
     /// replay cost is linear in trace size.
     pub wall_per_token_ratio: f64,
@@ -168,11 +235,71 @@ impl ReplayOutcome {
                     ("allocs_per_iter", round3(self.steady.allocs_per_iter).into()),
                     ("ns_per_iter", round2(self.steady.ns_per_iter).into()),
                     ("trace_events", self.steady.trace_events.into()),
+                    ("cache_hits", self.steady.cache_hits.into()),
+                    ("cache_evictions", self.steady.cache_evictions.into()),
                 ]),
+            ),
+            (
+                "recycle",
+                Json::obj(vec![
+                    ("small_blocks", self.recycle.small_blocks.into()),
+                    ("large_blocks", self.recycle.large_blocks.into()),
+                    ("ns_small", round2(self.recycle.ns_small).into()),
+                    ("ns_large", round2(self.recycle.ns_large).into()),
+                    ("ratio", round2(self.recycle.ratio).into()),
+                ]),
+            ),
+            (
+                "prefix_sweep",
+                Json::Arr(
+                    self.prefix
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("share_pct", (p.share_pct as u64).into()),
+                                ("requests", p.requests.into()),
+                                ("finished", p.finished.into()),
+                                ("hit_blocks", p.hit_blocks.into()),
+                                ("miss_blocks", p.miss_blocks.into()),
+                                ("hit_rate", round3(p.hit_rate).into()),
+                                ("cached_tokens", p.cached_tokens.into()),
+                                ("evictions", p.evictions.into()),
+                                ("sim_tps", round2(p.sim_tps).into()),
+                                ("peak_kv_blocks", p.peak_kv_blocks.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
             ("wall_per_token_ratio_largest_vs_smallest", round2(self.wall_per_token_ratio).into()),
         ])
     }
+}
+
+/// The deterministic CSV view of the prefix shape sweep — the artifact CI
+/// byte-compares across two runs and `-j` values. Fixed-precision
+/// formatting, no wallclock columns.
+pub fn prefix_csv(rows: &[PrefixShapeResult]) -> String {
+    let mut s = String::from(
+        "prefix_share_pct,requests,finished,hit_blocks,miss_blocks,hit_rate,\
+         cached_tokens,evictions,sim_tps,peak_kv_blocks\n",
+    );
+    for p in rows {
+        s.push_str(&format!(
+            "{},{},{},{},{},{:.4},{},{},{:.2},{}\n",
+            p.share_pct,
+            p.requests,
+            p.finished,
+            p.hit_blocks,
+            p.miss_blocks,
+            p.hit_rate,
+            p.cached_tokens,
+            p.evictions,
+            p.sim_tps,
+            p.peak_kv_blocks
+        ));
+    }
+    s
 }
 
 fn round2(x: f64) -> f64 {
@@ -288,19 +415,60 @@ pub fn steady_probe(n: usize, iters: usize) -> anyhow::Result<SteadyProbe> {
     for _ in 0..warmup {
         anyhow::ensure!(engine.step()? == n, "probe must schedule all {n} decodes");
     }
+    // Cache-churn companion: a pinned tier-1 prefix family (resurrected
+    // every iteration => in-window hits) plus a rotating ring of tier-0
+    // families sized past the spare block pool (each admission evicts the
+    // least-recently-released ring family => in-window evictions). The
+    // measured window therefore exercises admission, resurrection and
+    // eviction through the block manager — not just pure decode — and
+    // must still allocate nothing once the scratch Vec pool and both
+    // hash maps are warm.
+    let churn_blocks = 4usize;
+    let churn_tokens = churn_blocks * block_size;
+    let pinned_chain = synthetic_chain(1, churn_blocks, 0, churn_blocks);
+    let spare = engine.state.blocks.free_blocks();
+    let ring = spare / churn_blocks + 2;
+    let ring_chains: Vec<Vec<u64>> =
+        (2..2 + ring as u64).map(|g| synthetic_chain(g, churn_blocks, 0, churn_blocks)).collect();
+    let pinned_id = u64::MAX - 1;
+    let mut churn_seq = 0usize;
+    let mut churn = |state: &mut EngineState| -> anyhow::Result<()> {
+        state
+            .blocks
+            .allocate_tagged(pinned_id, churn_tokens, &pinned_chain, 1, 1)
+            .ok_or_else(|| anyhow::anyhow!("pinned churn family must fit"))?;
+        state.blocks.release(pinned_id);
+        let c = &ring_chains[churn_seq % ring_chains.len()];
+        state
+            .blocks
+            .allocate_tagged(u64::MAX / 2 + churn_seq as u64, churn_tokens, c, 0, 0)
+            .ok_or_else(|| anyhow::anyhow!("ring churn family must fit"))?;
+        state.blocks.release(u64::MAX / 2 + churn_seq as u64);
+        churn_seq += 1;
+        Ok(())
+    };
+    // Pre-window churn warmup: cycle the whole ring (plus slack) so the
+    // spare pool is saturated, evictions have begun, and the prefix-cache
+    // map has reached its steady size before measurement starts.
+    for _ in 0..ring + 8 {
+        churn(&mut engine.state)?;
+    }
     // The probe measures the tracing-ON contract: the flight recorder's
     // ring is preallocated, so recording inside the window must not
     // allocate either.
     anyhow::ensure!(engine.state.recorder.enabled, "probe runs with tracing enabled");
     let e0 = engine.state.recorder.recorded();
+    let (h0, v0) = cache_totals(&engine.state.blocks);
     let a0 = alloc_count();
     let t0 = Instant::now();
     for _ in 0..iters {
         engine.step()?;
+        churn(&mut engine.state)?;
     }
     let elapsed = t0.elapsed();
     let allocs_total = alloc_count() - a0;
     let trace_events = engine.state.recorder.recorded() - e0;
+    let (h1, v1) = cache_totals(&engine.state.blocks);
     Ok(SteadyProbe {
         n_running: n,
         iterations: iters as u64,
@@ -308,23 +476,143 @@ pub fn steady_probe(n: usize, iters: usize) -> anyhow::Result<SteadyProbe> {
         allocs_per_iter: allocs_total as f64 / iters.max(1) as f64,
         ns_per_iter: elapsed.as_nanos() as f64 / iters.max(1) as f64,
         trace_events,
+        cache_hits: h1 - h0,
+        cache_evictions: v1 - v0,
     })
 }
 
-/// Run both parts and combine.
+/// Sum hits/evictions across all class counters.
+fn cache_totals(bm: &BlockManager) -> (u64, u64) {
+    bm.cache_stats().iter().fold((0, 0), |(h, e), s| (h + s.hits, e + s.evictions))
+}
+
+/// Recycling-cost probe (module docs, part 4): saturate a pool's prefix
+/// cache with refcount-0 families, then time allocate/release cycles that
+/// alternate full resurrection (every block a cache hit) with fresh
+/// admissions (every block an eviction victim). Both paths are
+/// O(blocks-per-request) under intrusive-list recycling, so per-op cost
+/// is flat in pool size; a linear free-list scan makes the large pool
+/// ~16x slower per op.
+pub fn recycle_probe() -> RecycleProbe {
+    let small = 512usize;
+    let large = 8192usize;
+    let ns_per_op = |num_blocks: usize| -> f64 {
+        let block_size = 16usize;
+        let chain_len = 8usize;
+        let iters = 2000usize;
+        let fams = num_blocks / chain_len;
+        let chains: Vec<Vec<u64>> =
+            (0..fams).map(|f| synthetic_chain(f as u64 + 1, chain_len, 0, chain_len)).collect();
+        let fresh: Vec<Vec<u64>> = (0..iters / 2 + 1)
+            .map(|k| synthetic_chain(1_000_000 + k as u64, chain_len, 0, chain_len))
+            .collect();
+        // Best of three passes: the probe gates on a ratio of medians of
+        // sub-microsecond ops, so take the least-noisy observation.
+        let mut best = f64::INFINITY;
+        for _pass in 0..3 {
+            let mut bm = BlockManager::new(num_blocks, block_size);
+            for (i, c) in chains.iter().enumerate() {
+                bm.allocate(i as u64, chain_len * block_size, c).expect("probe pool sized exactly");
+            }
+            for i in 0..fams {
+                bm.release(i as u64);
+            }
+            let t0 = Instant::now();
+            for k in 0..iters {
+                let id = 1_000_000 + k as u64;
+                let chain = if k % 2 == 0 { &chains[(k / 2) % fams] } else { &fresh[k / 2] };
+                bm.allocate(id, chain_len * block_size, chain).expect("cycle fits in pool");
+                bm.release(id);
+            }
+            best = best.min(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        best
+    };
+    let ns_small = ns_per_op(small);
+    let ns_large = ns_per_op(large);
+    RecycleProbe {
+        small_blocks: small,
+        large_blocks: large,
+        ns_small,
+        ns_large,
+        ratio: ns_large / ns_small.max(1e-9),
+    }
+}
+
+/// Prefix shape sweep (module docs, part 3): Mooncake-shaped traces at
+/// 0/50/90% shared-prefix share replayed end to end on the sim backend.
+/// Only virtual-time metrics and block-manager counters are recorded, so
+/// the result (and its CSV) is byte-identical across runs and `-j`.
+pub fn prefix_sweep(cfg: &ReplayConfig) -> anyhow::Result<Vec<PrefixShapeResult>> {
+    let run_shape = |share_pct: u32| -> anyhow::Result<PrefixShapeResult> {
+        let trace = crate::workload::mooncake::generate(
+            &crate::workload::mooncake::MooncakeTraceConfig {
+                duration_s: cfg.trace_s,
+                mean_qps: cfg.online_qps,
+                prefix_share: share_pct as f64 / 100.0,
+                ..Default::default()
+            },
+            cfg.seed,
+        );
+        let setup = SimSetup::with_seed_predictor(CostModel::a100_llama7b())
+            .with_policy(OfflinePolicy::Psm)
+            .with_seed(cfg.seed);
+        let mut engine = setup.build_with_config(SchedulerConfig {
+            latency_budget_ms: Some(40.0),
+            chunk_tokens: 512,
+            max_running: 1024,
+            ..SchedulerConfig::default()
+        });
+        engine.state.keep_finished = false;
+        let r = engine.run_trace(&trace, 1e6, true)?;
+        let (hits, misses, evictions, cached_tokens) =
+            engine.state.blocks.cache_stats().iter().fold((0u64, 0u64, 0u64, 0u64), |acc, s| {
+                (acc.0 + s.hits, acc.1 + s.misses, acc.2 + s.evictions, acc.3 + s.cached_tokens)
+            });
+        Ok(PrefixShapeResult {
+            share_pct,
+            requests: trace.len(),
+            finished: (r.finished_online + r.finished_offline) as u64,
+            hit_blocks: hits,
+            miss_blocks: misses,
+            hit_rate: hits as f64 / (hits + misses).max(1) as f64,
+            cached_tokens,
+            evictions,
+            sim_tps: r.report.total_tps,
+            peak_kv_blocks: engine.state.blocks.peak_used_blocks(),
+        })
+    };
+    // Each shape builds its own engine from shared immutable inputs, so
+    // the sweep fans out like `figures -j`: results land in submission
+    // order and the CSV bytes are identical for any worker count.
+    let jobs: Vec<crate::util::parallel::Job<'_, anyhow::Result<PrefixShapeResult>>> =
+        [0u32, 50, 90].iter().map(|&p| crate::util::parallel::job(move || run_shape(p))).collect();
+    crate::util::parallel::run_jobs(cfg.jobs.max(1), jobs).into_iter().collect()
+}
+
+/// Run all four parts and combine.
 pub fn run(cfg: &ReplayConfig) -> anyhow::Result<ReplayOutcome> {
     let mut scales = Vec::new();
     for &n in &cfg.scales {
         scales.push(replay_scale(cfg, n)?);
     }
     let steady = steady_probe(cfg.steady_n, cfg.steady_iters)?;
+    let recycle = recycle_probe();
+    let prefix = prefix_sweep(cfg)?;
     let wall_per_token_ratio = match (scales.first(), scales.last()) {
         (Some(a), Some(b)) if a.wall_ns_per_token > 0.0 => {
             b.wall_ns_per_token / a.wall_ns_per_token
         }
         _ => 0.0,
     };
-    Ok(ReplayOutcome { scales, steady, wall_per_token_ratio, counting_allocator: counting_active() })
+    Ok(ReplayOutcome {
+        scales,
+        steady,
+        recycle,
+        prefix,
+        wall_per_token_ratio,
+        counting_allocator: counting_active(),
+    })
 }
 
 /// The embedded regression gates, shared by `hygen bench-replay` and the
@@ -335,7 +623,14 @@ pub fn run(cfg: &ReplayConfig) -> anyhow::Result<ReplayOutcome> {
 ///    threshold is generous — a super-linear hot path tracks the scale
 ///    ratio, far beyond 4x);
 /// 2. the steady-state decode loop must be allocation-free (enforceable
-///    only when a counting allocator is registered in the process).
+///    only when a counting allocator is registered in the process) —
+///    and the measured window must contain live prefix-cache hits and
+///    evictions, so a pass cannot come from an idle cache;
+/// 3. block recycling must stay O(1) in pool size: the per-op cost ratio
+///    between the 16x pools stays far under the pool-size ratio (a
+///    free-list scan tracks it);
+/// 4. the prefix sweep must show the cache working: hit-rate strictly
+///    rises from the 0% to the 90% shared-prefix shape.
 pub fn check_gates(outcome: &ReplayOutcome) -> anyhow::Result<()> {
     anyhow::ensure!(
         outcome.wall_per_token_ratio < 4.0,
@@ -343,20 +638,46 @@ pub fn check_gates(outcome: &ReplayOutcome) -> anyhow::Result<()> {
          (threshold 4.0) — super-linear replay cost",
         outcome.wall_per_token_ratio
     );
+    anyhow::ensure!(
+        outcome.steady.cache_hits > 0 && outcome.steady.cache_evictions > 0,
+        "steady-state window saw {} cache hits / {} evictions — the churn companion must keep \
+         the recycle paths live inside the measured window",
+        outcome.steady.cache_hits,
+        outcome.steady.cache_evictions
+    );
     if outcome.counting_allocator {
         anyhow::ensure!(
             outcome.steady.allocs_total == 0,
             "steady-state decode iterations performed {} heap allocations over {} iterations \
-             (contract: zero)",
+             with live cache churn (contract: zero)",
             outcome.steady.allocs_total,
             outcome.steady.iterations
+        );
+    }
+    anyhow::ensure!(
+        outcome.recycle.ratio < 8.0,
+        "block recycling per-op cost grew {:.1}x from a {}-block to a {}-block pool \
+         (threshold 8.0) — an O(free-list) scan is back in a BlockManager hot path",
+        outcome.recycle.ratio,
+        outcome.recycle.small_blocks,
+        outcome.recycle.large_blocks
+    );
+    if let (Some(cold), Some(hot)) = (outcome.prefix.first(), outcome.prefix.last()) {
+        anyhow::ensure!(
+            hot.hit_rate > cold.hit_rate,
+            "prefix sweep: hit-rate at {}% share ({:.3}) does not beat {}% share ({:.3})",
+            hot.share_pct,
+            hot.hit_rate,
+            cold.share_pct,
+            cold.hit_rate
         );
     }
     Ok(())
 }
 
-/// Run, print a human summary, and write `BENCH_e2e.json` to `out`.
-pub fn run_and_save(cfg: &ReplayConfig, out: &str) -> anyhow::Result<ReplayOutcome> {
+/// Run, print a human summary, write `BENCH_e2e.json` to `out` and the
+/// deterministic prefix-sweep CSV to `prefix_out`.
+pub fn run_and_save(cfg: &ReplayConfig, out: &str, prefix_out: &str) -> anyhow::Result<ReplayOutcome> {
     let outcome = run(cfg)?;
     for s in &outcome.scales {
         println!(
@@ -375,20 +696,38 @@ pub fn run_and_save(cfg: &ReplayConfig, out: &str) -> anyhow::Result<ReplayOutco
         );
     }
     println!(
-        "steady decode (n={}): {:.1} µs/iter, {} allocs, {} trace events over {} iters ({})",
+        "steady decode (n={}): {:.1} µs/iter, {} allocs, {} trace events, {} cache hits / {} evictions over {} iters ({})",
         outcome.steady.n_running,
         outcome.steady.ns_per_iter / 1e3,
         outcome.steady.allocs_total,
         outcome.steady.trace_events,
+        outcome.steady.cache_hits,
+        outcome.steady.cache_evictions,
         outcome.steady.iterations,
         if outcome.counting_allocator { "counting allocator active" } else { "no counting allocator: alloc columns are 0" }
     );
+    println!(
+        "recycle probe: {:.0} ns/op at {} blocks vs {:.0} ns/op at {} blocks (ratio {:.2}, ~1 = O(1) recycling)",
+        outcome.recycle.ns_small,
+        outcome.recycle.small_blocks,
+        outcome.recycle.ns_large,
+        outcome.recycle.large_blocks,
+        outcome.recycle.ratio
+    );
+    for p in &outcome.prefix {
+        println!(
+            "prefix share {:>2}%: {} reqs, hit-rate {:.3}, {} cached tokens, {} evictions, {:.0} tok/s sim, peak KV {} blocks",
+            p.share_pct, p.requests, p.hit_rate, p.cached_tokens, p.evictions, p.sim_tps, p.peak_kv_blocks
+        );
+    }
     println!(
         "wall-ns-per-token largest-vs-smallest ratio: {:.2} (~1 linear replay cost)",
         outcome.wall_per_token_ratio
     );
     std::fs::write(out, outcome.to_json().to_pretty())?;
     println!("wrote {out}");
+    std::fs::write(prefix_out, prefix_csv(&outcome.prefix))?;
+    println!("wrote {prefix_out}");
     Ok(outcome)
 }
 
@@ -404,6 +743,7 @@ mod tests {
             trace_s: 5.0,
             steady_n: 8,
             steady_iters: 10,
+            jobs: 1,
             seed: 1,
         };
         let o = run(&cfg).unwrap();
@@ -429,14 +769,70 @@ mod tests {
         assert_eq!(j.get("bench").as_str(), Some("e2e-replay"));
         assert!(matches!(j.get("scales"), Json::Arr(a) if a.len() == 2));
         assert!(j.get("steady_decode").get("ns_per_iter").as_f64().unwrap() > 0.0);
+        assert!(j.get("steady_decode").get("cache_hits").as_u64().unwrap() > 0);
+        assert!(j.get("recycle").get("ratio").as_f64().is_some());
+        assert!(matches!(j.get("prefix_sweep"), Json::Arr(a) if a.len() == 3));
         assert!(j.get("wall_per_token_ratio_largest_vs_smallest").as_f64().is_some());
     }
 
     #[test]
-    fn steady_probe_is_pure_decode() {
+    fn steady_probe_churns_the_cache() {
         let p = steady_probe(16, 5).unwrap();
         assert_eq!(p.n_running, 16);
         assert!(p.ns_per_iter > 0.0);
+        // The churn companion keeps hit resurrection AND eviction live
+        // inside the measured window (4 blocks each per iteration).
+        assert!(p.cache_hits >= 4 * p.iterations, "hits {} over {} iters", p.cache_hits, p.iterations);
+        assert!(p.cache_evictions >= 4 * p.iterations, "evictions {}", p.cache_evictions);
+    }
+
+    #[test]
+    fn recycle_probe_is_flat_in_pool_size() {
+        let p = recycle_probe();
+        assert_eq!(p.large_blocks / p.small_blocks, 16);
+        assert!(p.ns_small > 0.0 && p.ns_large > 0.0);
+        assert!(
+            p.ratio < 8.0,
+            "per-op recycle cost ratio {:.2} — free-list scan is back",
+            p.ratio
+        );
+    }
+
+    #[test]
+    fn prefix_sweep_is_deterministic_and_monotone() {
+        let cfg = ReplayConfig {
+            scales: vec![],
+            online_qps: 3.0,
+            trace_s: 20.0,
+            steady_n: 8,
+            steady_iters: 4,
+            jobs: 1,
+            seed: 7,
+        };
+        let a = prefix_sweep(&cfg).unwrap();
+        let b = prefix_sweep(&cfg).unwrap();
+        assert_eq!(prefix_csv(&a), prefix_csv(&b), "sweep CSV must be byte-stable");
+        let par = prefix_sweep(&ReplayConfig { jobs: 2, ..cfg.clone() }).unwrap();
+        assert_eq!(prefix_csv(&a), prefix_csv(&par), "-j must not change CSV bytes");
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].share_pct, 0);
+        assert_eq!(a[2].share_pct, 90);
+        // Identical arrival/length streams across shares (the content RNG
+        // is separate) — only the sharing differs.
+        assert_eq!(a[0].requests, a[2].requests);
+        assert!(a[2].hit_rate > a[0].hit_rate, "{:.3} vs {:.3}", a[2].hit_rate, a[0].hit_rate);
+        assert!(a[2].cached_tokens > a[0].cached_tokens);
+        // Sharing dedups resident prefixes; a small slack absorbs the
+        // second-order effect of faster admission raising concurrency.
+        assert!(
+            a[2].peak_kv_blocks <= a[0].peak_kv_blocks + 64,
+            "sharing must not blow up peak KV: {} vs {}",
+            a[2].peak_kv_blocks,
+            a[0].peak_kv_blocks
+        );
+        let csv = prefix_csv(&a);
+        assert!(csv.starts_with("prefix_share_pct,"));
+        assert_eq!(csv.lines().count(), 4);
     }
 
     #[test]

@@ -3,11 +3,17 @@
 //! offline backlog, the `bench-replay` recipe) against 1/2/4/8
 //! sim-backend replicas, writing `artifacts/cluster_compare.csv`.
 //!
-//! Per (policy, replica-count) cell the CSV reports total/online/offline
-//! throughput, online p50/p99 TTFT and TBT (cluster-wide, merged
-//! sample-by-sample), offline starvation age, and per-replica utilization
-//! imbalance — so the policy comparison is measured, not asserted. Cells
-//! are independent seeded jobs on `jobs` worker threads with
+//! Per (workload, policy, replica-count) cell the CSV reports
+//! total/online/offline throughput, online p50/p99 TTFT and TBT
+//! (cluster-wide, merged sample-by-sample), offline starvation age,
+//! per-replica utilization imbalance, and the aggregate prefix-cache
+//! hit-rate / cached-token savings — so the policy comparison is
+//! measured, not asserted. Two workloads run: the calibrated mixed trace
+//! and a Mooncake-style prefix-heavy stream whose shared-template
+//! families are what the `prefix-affinity` router pins to warm replicas
+//! (more template families than one replica's KV pool holds, so
+//! scattering a family across replicas costs real evictions). Cells are
+//! independent seeded jobs on `jobs` worker threads with
 //! order-preserving collection: the CSV is byte-identical for any job
 //! count and bit-reproducible for a fixed seed (CI compares two runs).
 
@@ -23,7 +29,28 @@ use crate::sim::SimBackend;
 use crate::util::parallel::{job, run_jobs, Job};
 use crate::workload::azure::{self, AzureTraceConfig};
 use crate::workload::datasets::{self, Dataset};
+use crate::workload::mooncake::{self, MooncakeTraceConfig};
 use crate::workload::trace::Trace;
+
+/// Which workload a grid cell replays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// Azure-shaped online arrivals + an arXiv offline backlog (the
+    /// `bench-replay` recipe).
+    Mixed,
+    /// Mooncake-style prefix-heavy online stream + the same offline
+    /// backlog — the shape where prefix-affinity routing matters.
+    MooncakePrefix,
+}
+
+impl Workload {
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Mixed => "mixed",
+            Workload::MooncakePrefix => "mooncake-prefix",
+        }
+    }
+}
 
 /// Grid + workload shape; see [`ClusterSimConfig::full`] and
 /// [`ClusterSimConfig::quick`].
@@ -31,6 +58,7 @@ use crate::workload::trace::Trace;
 pub struct ClusterSimConfig {
     pub replica_counts: Vec<usize>,
     pub policies: Vec<RouterPolicy>,
+    pub workloads: Vec<Workload>,
     /// Online arrival rate of the *cluster-wide* Azure-shaped stream
     /// (per-replica load is `online_qps / replicas`).
     pub online_qps: f64,
@@ -55,6 +83,7 @@ impl ClusterSimConfig {
         ClusterSimConfig {
             replica_counts: vec![1, 2, 4, 8],
             policies: RouterPolicy::ALL.to_vec(),
+            workloads: vec![Workload::Mixed, Workload::MooncakePrefix],
             online_qps: 8.0,
             trace_s: 300.0,
             offline_n: 1600,
@@ -71,6 +100,7 @@ impl ClusterSimConfig {
         ClusterSimConfig {
             replica_counts: vec![1, 2, 4],
             policies: RouterPolicy::ALL.to_vec(),
+            workloads: vec![Workload::Mixed, Workload::MooncakePrefix],
             online_qps: 4.0,
             trace_s: 40.0,
             offline_n: 160,
@@ -85,9 +115,29 @@ impl ClusterSimConfig {
 
 /// One grid cell's measurement.
 pub struct CellOutcome {
+    pub workload: Workload,
     pub policy: RouterPolicy,
     pub replicas: usize,
     pub result: ClusterRunResult,
+}
+
+impl CellOutcome {
+    /// Aggregate prefix-cache hit-rate over cacheable prompt blocks,
+    /// summed across classes and replicas.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let (h, m) = self
+            .result
+            .aggregate
+            .classes
+            .iter()
+            .fold((0u64, 0u64), |(h, m), c| (h + c.cache.hits, m + c.cache.misses));
+        h as f64 / (h + m).max(1) as f64
+    }
+
+    /// Prompt tokens served from cache across classes and replicas.
+    pub fn cached_tokens(&self) -> u64 {
+        self.result.aggregate.classes.iter().map(|c| c.cache.cached_tokens).sum()
+    }
 }
 
 /// The calibrated mixed trace (the `bench-replay` recipe at cluster
@@ -97,6 +147,32 @@ pub fn mixed_trace(cfg: &ClusterSimConfig) -> Trace {
         &AzureTraceConfig {
             duration_s: cfg.trace_s,
             mean_qps: cfg.online_qps,
+            ..Default::default()
+        },
+        cfg.seed,
+    );
+    let offline = datasets::generate(Dataset::ArxivSummarization, cfg.offline_n, cfg.seed);
+    online.merged(offline)
+}
+
+/// The Mooncake-style prefix workload: the prefix-heavy online stream
+/// (more shared-template families than one replica's KV pool can keep
+/// resident, so routing decides how often prefixes are found warm) plus
+/// the same offline backlog.
+pub fn mooncake_prefix_trace(cfg: &ClusterSimConfig) -> Trace {
+    let online = mooncake::generate(
+        &MooncakeTraceConfig {
+            duration_s: cfg.trace_s,
+            mean_qps: cfg.online_qps,
+            // 64 families x 64 cached blocks each overflows a single
+            // 3000-block replica pool: scattering a family across
+            // replicas costs real evictions, pinning it does not.
+            prefix_share: 0.7,
+            prefix_groups: 64,
+            prefix_len: 1024,
+            // Cap prompts below the default long tail so the 1-replica
+            // cells stay inside `max_clock_s`.
+            max_prompt: 4000,
             ..Default::default()
         },
         cfg.seed,
@@ -125,21 +201,29 @@ fn build_engines(cfg: &ClusterSimConfig, n: usize) -> Vec<Engine<SimBackend>> {
         .collect()
 }
 
-/// Run the whole (policy × replica-count) grid. Cells execute as
-/// independent seeded jobs; results come back in grid order.
+/// Run the whole (workload × policy × replica-count) grid. Cells execute
+/// as independent seeded jobs; results come back in grid order.
 pub fn run_grid(cfg: &ClusterSimConfig) -> anyhow::Result<Vec<CellOutcome>> {
-    let cells: Vec<(RouterPolicy, usize)> = cfg
-        .policies
+    let cells: Vec<(Workload, RouterPolicy, usize)> = cfg
+        .workloads
         .iter()
-        .flat_map(|&p| cfg.replica_counts.iter().map(move |&n| (p, n)))
+        .flat_map(|&w| {
+            cfg.policies
+                .iter()
+                .flat_map(move |&p| cfg.replica_counts.iter().map(move |&n| (w, p, n)))
+        })
         .collect();
-    // One trace, shared read-only by every cell — it depends on cfg only,
-    // not on (policy, replicas).
-    let trace = mixed_trace(cfg);
-    let trace_ref = &trace;
+    // One trace per workload, shared read-only by every cell — traces
+    // depend on cfg only, not on (policy, replicas).
+    let mixed = cfg.workloads.contains(&Workload::Mixed).then(|| mixed_trace(cfg));
+    let moon = cfg.workloads.contains(&Workload::MooncakePrefix).then(|| mooncake_prefix_trace(cfg));
     let jobs: Vec<Job<'_, anyhow::Result<ClusterRunResult>>> = cells
         .iter()
-        .map(|&(policy, n)| {
+        .map(|&(workload, policy, n)| {
+            let trace_ref: &Trace = match workload {
+                Workload::Mixed => mixed.as_ref().expect("generated for its cells"),
+                Workload::MooncakePrefix => moon.as_ref().expect("generated for its cells"),
+            };
             job(move || {
                 let engines = build_engines(cfg, n);
                 let mut sim = ClusterSim::new(engines, policy.build(), cfg.rebalance_interval_s);
@@ -149,8 +233,8 @@ pub fn run_grid(cfg: &ClusterSimConfig) -> anyhow::Result<Vec<CellOutcome>> {
         .collect();
     let results = run_jobs(cfg.jobs.max(1), jobs);
     let mut outcomes = Vec::with_capacity(cells.len());
-    for (&(policy, replicas), result) in cells.iter().zip(results) {
-        outcomes.push(CellOutcome { policy, replicas, result: result? });
+    for (&(workload, policy, replicas), result) in cells.iter().zip(results) {
+        outcomes.push(CellOutcome { workload, policy, replicas, result: result? });
     }
     Ok(outcomes)
 }
@@ -160,6 +244,7 @@ pub fn table(outcomes: &[CellOutcome]) -> Table {
     let mut t = Table::new(
         "cluster_compare",
         &[
+            "workload",
             "policy",
             "replicas",
             "total_tps",
@@ -173,12 +258,15 @@ pub fn table(outcomes: &[CellOutcome]) -> Table {
             "offline_finished",
             "starvation_age_s",
             "util_imbalance",
+            "cache_hit_rate",
+            "cached_tokens",
             "duration_s",
         ],
     );
     for o in outcomes {
         let a = &o.result.aggregate;
         t.row(vec![
+            o.workload.name().into(),
             o.policy.name().into(),
             format!("{}", o.replicas),
             f1(a.total_tps),
@@ -192,6 +280,8 @@ pub fn table(outcomes: &[CellOutcome]) -> Table {
             format!("{}", a.offline_finished),
             f2(o.result.offline_starvation_age_s),
             f2(o.result.util_imbalance),
+            format!("{:.4}", o.cache_hit_rate()),
+            format!("{}", o.cached_tokens()),
             f1(o.result.duration_s),
         ]);
     }
@@ -207,7 +297,9 @@ pub fn check_slo_headroom_wins(
     tbt_slo_ms: f64,
 ) -> anyhow::Result<()> {
     let find = |p: RouterPolicy| {
-        outcomes.iter().find(|o| o.policy == p && o.replicas == replicas_at)
+        outcomes
+            .iter()
+            .find(|o| o.workload == Workload::Mixed && o.policy == p && o.replicas == replicas_at)
     };
     let (slo, rr) = match (find(RouterPolicy::SloHeadroom), find(RouterPolicy::RoundRobin)) {
         (Some(s), Some(r)) => (s, r),
@@ -230,6 +322,54 @@ pub fn check_slo_headroom_wins(
     Ok(())
 }
 
+/// The prefix-affinity acceptance gate (`cluster-sim --check`): on the
+/// Mooncake-style prefix workload at `replicas_at` replicas, affinity
+/// routing must match-or-beat slo-headroom on aggregate cache hit-rate
+/// at equal SLO attainment — no fewer online requests finished, and
+/// online p99 TBT within the same SLO bound slo-headroom is held to.
+pub fn check_prefix_affinity_wins(
+    outcomes: &[CellOutcome],
+    replicas_at: usize,
+    tbt_slo_ms: f64,
+) -> anyhow::Result<()> {
+    let find = |p: RouterPolicy| {
+        outcomes.iter().find(|o| {
+            o.workload == Workload::MooncakePrefix && o.policy == p && o.replicas == replicas_at
+        })
+    };
+    let (aff, slo) = match (find(RouterPolicy::PrefixAffinity), find(RouterPolicy::SloHeadroom)) {
+        (Some(a), Some(s)) => (a, s),
+        _ => anyhow::bail!(
+            "grid lacks the {replicas_at}-replica mooncake-prefix affinity/slo-headroom cells"
+        ),
+    };
+    anyhow::ensure!(
+        aff.cache_hit_rate() >= slo.cache_hit_rate(),
+        "prefix-affinity cache hit-rate {:.4} < slo-headroom {:.4} at {} replicas on the \
+         prefix workload",
+        aff.cache_hit_rate(),
+        slo.cache_hit_rate(),
+        replicas_at
+    );
+    anyhow::ensure!(
+        aff.cache_hit_rate() > 0.0,
+        "prefix-affinity routing produced no cache hits on the prefix workload"
+    );
+    anyhow::ensure!(
+        aff.result.aggregate.online_finished >= slo.result.aggregate.online_finished,
+        "prefix-affinity finished {} online requests vs slo-headroom's {} — hit-rate was \
+         not bought at equal attainment",
+        aff.result.aggregate.online_finished,
+        slo.result.aggregate.online_finished
+    );
+    anyhow::ensure!(
+        aff.result.aggregate.p99_tbt_ms <= tbt_slo_ms,
+        "prefix-affinity online p99 TBT {:.2} ms exceeds the {tbt_slo_ms:.2} ms SLO",
+        aff.result.aggregate.p99_tbt_ms
+    );
+    Ok(())
+}
+
 /// Run the grid, print the table, and write `<out_dir>/cluster_compare.csv`.
 pub fn run_and_save(cfg: &ClusterSimConfig, out_dir: &str) -> anyhow::Result<Vec<CellOutcome>> {
     let outcomes = run_grid(cfg)?;
@@ -248,6 +388,7 @@ mod tests {
         ClusterSimConfig {
             replica_counts: vec![1, 2],
             policies: vec![RouterPolicy::RoundRobin, RouterPolicy::SloHeadroom],
+            workloads: vec![Workload::Mixed],
             online_qps: 2.0,
             trace_s: 8.0,
             offline_n: 20,
@@ -269,10 +410,46 @@ mod tests {
         assert_eq!(outcomes[3].policy, RouterPolicy::SloHeadroom);
         assert_eq!(outcomes[3].replicas, 2);
         for o in &outcomes {
+            assert_eq!(o.workload, Workload::Mixed);
             assert!(o.result.aggregate.online_finished > 0, "{}", o.policy.name());
         }
         let t = table(&outcomes);
         assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.header[0], "workload");
+        assert!(t.header.contains(&"cache_hit_rate".to_string()));
+    }
+
+    #[test]
+    fn mooncake_prefix_dimension_measures_affinity() {
+        let cfg = ClusterSimConfig {
+            replica_counts: vec![2],
+            policies: vec![RouterPolicy::SloHeadroom, RouterPolicy::PrefixAffinity],
+            workloads: vec![Workload::MooncakePrefix],
+            online_qps: 3.0,
+            trace_s: 30.0,
+            offline_n: 10,
+            latency_budget_ms: 40.0,
+            rebalance_interval_s: 0.5,
+            max_clock_s: 240.0,
+            seed: 11,
+            jobs: 1,
+        };
+        let outcomes = run_grid(&cfg).unwrap();
+        assert_eq!(outcomes.len(), 2);
+        for o in &outcomes {
+            assert_eq!(o.workload, Workload::MooncakePrefix);
+            assert!(
+                o.cache_hit_rate() > 0.0,
+                "{}: prefix workload must produce cache hits",
+                o.policy.name()
+            );
+        }
+        // Pinning families to warm replicas can only save cold misses
+        // relative to scattering them (>= guards CI determinism; the
+        // full artifact shape shows the strict win).
+        check_prefix_affinity_wins(&outcomes, 2, cfg.latency_budget_ms * 2.0).unwrap();
+        // Absent cells are a hard error, not a silent pass.
+        assert!(check_prefix_affinity_wins(&outcomes, 4, 80.0).is_err());
     }
 
     #[test]

@@ -50,7 +50,8 @@ hygen — elastic online/offline LLM request co-location (HyGen reproduction)
 USAGE:
   hygen serve        [--config serve.json] [--bind ADDR] [--budget-ms N]
                      [--policy fcfs|psm|psm-fair] [--artifacts DIR]
-                     [--replicas N] [--router round-robin|jsq|slo-headroom]
+                     [--replicas N]
+                     [--router round-robin|jsq|slo-headroom|prefix-affinity]
                      [--drain-s N]
                      (requires a build with `--features pjrt` + `make artifacts`)
   hygen run-trace    [--system hygen|hygen-star|sarathi|sarathi++|sarathi-offline]
@@ -70,17 +71,23 @@ USAGE:
   hygen bench-sched  [--out FILE] [--quick] [--n N] [--seed N]
                      (10k-request mixed trace by default; --quick is the
                      few-hundred-request CI smoke shape)
-  hygen bench-replay [--out FILE] [--quick] [--seed N]
+  hygen bench-replay [--out FILE] [--prefix-out FILE] [--quick] [--seed N] [-j N]
                      (end-to-end mixed-trace replay at several scales +
-                     the zero-allocation steady-decode probe; writes
-                     BENCH_e2e.json and fails on regression ratios)
+                     the zero-allocation steady-decode probe with live
+                     prefix-cache churn + the O(1) block-recycling probe
+                     + the 0/50/90% shared-prefix shape sweep; writes
+                     BENCH_e2e.json and the deterministic
+                     BENCH_prefix.csv, and fails on regression ratios)
   hygen cluster-sim  [--out DIR] [--quick] [--seed N] [-j/--jobs N]
                      [--replicas 1,2,4,8] [--check] [--tbt-slo-ms N]
-                     (replay the calibrated mixed trace against N
+                     (replay the calibrated mixed trace AND the
+                     Mooncake-style prefix-heavy trace against N
                      sim-backend replicas per router policy; writes
-                     artifacts/cluster_compare.csv, byte-identical for a
-                     fixed seed; --check enforces the slo-headroom-vs-
-                     round-robin gate at 4 replicas)
+                     artifacts/cluster_compare.csv — incl. per-cell
+                     prefix-cache hit-rate — byte-identical for a fixed
+                     seed; --check enforces the slo-headroom-vs-
+                     round-robin gate and the prefix-affinity-vs-
+                     slo-headroom cache gate at 4 replicas)
   hygen multi-slo    [--out DIR] [--quick] [--seed N] [-j/--jobs N]
                      [--replicas 1,2,4]
                      (replay the calibrated 4-class trace — chat /
@@ -231,6 +238,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                         .state
                         .recorder
                         .configure(cfg.cluster.trace_capacity, cfg.cluster.trace_enabled);
+                    engine.state.blocks.set_eviction_policy(cfg.cluster.kv_eviction);
                     println!(
                         "replica {i} ready: {} slots, max chunk {}, max request len {}",
                         engine.backend.nslots(),
@@ -244,7 +252,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Server::start_cluster_with_registry(
             &cfg.bind,
             factories,
-            cfg.cluster.router.build(),
+            cfg.cluster.build_router(),
             cfg.http_workers,
             std::time::Duration::from_secs_f64(cfg.cluster.drain_s),
             std::sync::Arc::clone(&registry),
@@ -398,10 +406,14 @@ fn cmd_bench_replay(args: &Args) -> anyhow::Result<()> {
     use hygen::experiments::bench_replay::{self, ReplayConfig};
     let mut cfg = if args.get_bool("quick") { ReplayConfig::quick() } else { ReplayConfig::full() };
     cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.jobs = args.get_usize_alias("jobs", "j", cfg.jobs).max(1);
     let out = args.get_or("out", "BENCH_e2e.json");
-    let outcome = bench_replay::run_and_save(&cfg, out)?;
-    // Both regression gates (linear replay cost across scales; zero-alloc
-    // steady decode — live here because this binary registers `ALLOC`).
+    let prefix_out = args.get_or("prefix-out", "BENCH_prefix.csv");
+    let outcome = bench_replay::run_and_save(&cfg, out, prefix_out)?;
+    // All regression gates (linear replay cost across scales; zero-alloc
+    // steady decode with live cache churn — enforceable here because this
+    // binary registers `ALLOC`; O(1) block recycling; prefix-sweep
+    // hit-rate monotonicity).
     bench_replay::check_gates(&outcome)
 }
 
@@ -440,6 +452,15 @@ fn cmd_cluster_sim(args: &Args) -> anyhow::Result<()> {
         println!(
             "check passed: slo-headroom >= round-robin at {at} replicas \
              (p99 TBT within {tbt_slo:.0} ms)"
+        );
+        // The prefix-cache acceptance gate: on the Mooncake-style
+        // prefix workload, affinity routing must match-or-beat
+        // slo-headroom on aggregate cache hit-rate at equal SLO
+        // attainment.
+        cluster_sim::check_prefix_affinity_wins(&outcomes, at, tbt_slo)?;
+        println!(
+            "check passed: prefix-affinity cache hit-rate >= slo-headroom at {at} replicas \
+             on the mooncake-prefix workload (equal attainment, p99 TBT within {tbt_slo:.0} ms)"
         );
     }
     Ok(())

@@ -31,6 +31,7 @@ pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
 /// |----------------|----------------------|-----------------------|----------------|
 /// | `Admit`        | prompt_len           | output_len            | —              |
 /// | `QueuePop`     | tier                 | residual budget ms    | predicted ms   |
+/// | `CacheHit`     | cached tokens        | prompt_len            | —              |
 /// | `PrefillStart` | prompt_len           | already prefilled     | —              |
 /// | `DecodeStep`   | batch size           | predicted batch ms    | actual ms      |
 /// | `Preempt`      | preemptor tier       | residual budget ms    | 1 = discard    |
@@ -45,6 +46,8 @@ pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
 pub enum EventKind {
     Admit,
     QueuePop,
+    /// Admission satisfied part of its prefill from the prefix cache.
+    CacheHit,
     PrefillStart,
     DecodeStep,
     Preempt,
@@ -61,6 +64,7 @@ impl EventKind {
         match self {
             EventKind::Admit => "admit",
             EventKind::QueuePop => "queue_pop",
+            EventKind::CacheHit => "cache_hit",
             EventKind::PrefillStart => "prefill_start",
             EventKind::DecodeStep => "decode_step",
             EventKind::Preempt => "preempt",

@@ -445,7 +445,18 @@ const WORST_FIELDS: [&str; 7] = [
 
 /// Per-class block fields that sum across replicas; the rest of the
 /// block (latency means/percentiles) takes the per-replica worst.
-const CLASS_SUM_FIELDS: [&str; 3] = ["finished", "tps", "qps"];
+/// Prefix-cache counters are replica-additive by construction (each
+/// replica's block manager counts its own admissions).
+const CLASS_SUM_FIELDS: [&str; 8] = [
+    "finished",
+    "tps",
+    "qps",
+    "cache_hit_blocks",
+    "cache_miss_blocks",
+    "cache_evictions",
+    "cache_resurrections",
+    "cached_tokens",
+];
 const CLASS_WORST_FIELDS: [&str; 6] = [
     "mean_ttft_ms",
     "p50_ttft_ms",
@@ -1329,14 +1340,16 @@ mod tests {
     fn aggregate_merges_per_class_blocks_element_wise() {
         let a = Json::parse(
             r#"{"total_tps": 1.0, "classes": [
-                {"class": 0, "finished": 2, "tps": 5.0, "p99_ttft_ms": 10.0},
+                {"class": 0, "finished": 2, "tps": 5.0, "p99_ttft_ms": 10.0,
+                 "cache_hit_blocks": 8, "cached_tokens": 128},
                 {"class": 1, "finished": 1, "tps": 3.0, "p99_ttft_ms": 0.0}
             ]}"#,
         )
         .unwrap();
         let b = Json::parse(
             r#"{"total_tps": 2.0, "classes": [
-                {"class": 0, "finished": 4, "tps": 7.0, "p99_ttft_ms": 25.0}
+                {"class": 0, "finished": 4, "tps": 7.0, "p99_ttft_ms": 25.0,
+                 "cache_hit_blocks": 3, "cached_tokens": 48}
             ]}"#,
         )
         .unwrap();
@@ -1346,6 +1359,8 @@ mod tests {
         assert_eq!(classes[0].get("finished").as_f64(), Some(6.0), "additive summed");
         assert_eq!(classes[0].get("tps").as_f64(), Some(12.0));
         assert_eq!(classes[0].get("p99_ttft_ms").as_f64(), Some(25.0), "latency = worst");
+        assert_eq!(classes[0].get("cache_hit_blocks").as_f64(), Some(11.0), "cache counters sum");
+        assert_eq!(classes[0].get("cached_tokens").as_f64(), Some(176.0));
         assert_eq!(classes[1].get("finished").as_f64(), Some(1.0), "missing block = absent");
     }
 

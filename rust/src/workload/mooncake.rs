@@ -6,6 +6,18 @@
 //! shorter outputs, and *spikier* arrivals (request storms on ten-minute
 //! scales). We model it as a gamma-modulated Poisson process with a
 //! heavier burst tail plus occasional storm windows.
+//!
+//! Mooncake's other signature property is **prefix reuse**: most requests
+//! open with one of a small set of shared system/context templates, which
+//! is exactly what the KV prefix cache (and the `prefix-affinity` router)
+//! exploit. A configurable share of generated requests therefore draws its
+//! opening `prefix_len` tokens from a per-group deterministic template —
+//! same group ⇒ byte-identical opening tokens ⇒ identical full-block hash
+//! chains, the `synthetic_chain` sharing semantics carried by real prompt
+//! content. Prefix decisions come from a *separate* RNG stream, so
+//! arrival times and length distributions are bit-identical across
+//! `prefix_share` settings (and to pre-prefix versions of this
+//! generator).
 
 use super::trace::{Trace, TraceEvent};
 use crate::coordinator::request::Class;
@@ -28,6 +40,14 @@ pub struct MooncakeTraceConfig {
     pub output_sigma: f64,
     pub max_prompt: usize,
     pub max_output: usize,
+    /// Fraction of requests opening with a shared group template
+    /// (Mooncake-style system-prompt reuse). 0 = all-unique prompts.
+    pub prefix_share: f64,
+    /// Number of distinct shared templates in rotation.
+    pub prefix_groups: usize,
+    /// Length (tokens) of each shared template; clamped to the prompt.
+    /// Keep it a multiple of the engines' block size for full-block reuse.
+    pub prefix_len: usize,
 }
 
 impl Default for MooncakeTraceConfig {
@@ -45,12 +65,27 @@ impl Default for MooncakeTraceConfig {
             output_sigma: 0.6,
             max_prompt: 8000,
             max_output: 800,
+            prefix_share: 0.5,
+            prefix_groups: 12,
+            prefix_len: 1024,
         }
     }
 }
 
+/// Token `i` of group `g`'s shared template: deterministic, and disjoint
+/// from the `uniq`-counter tail tokens (templates set the top bit; the
+/// tail counter starts at `1 << 24` and wraps far below it).
+fn template_token(group: usize, i: usize) -> u32 {
+    let mix = ((group as u32) << 20).wrapping_add((i as u32).wrapping_mul(0x9E37_79B9));
+    0x8000_0000 | (mix & 0x7FFF_FFFF)
+}
+
 pub fn generate(cfg: &MooncakeTraceConfig, seed: u64) -> Trace {
     let mut rng = Rng::new(seed ^ 0x3A00Cu64.rotate_left(24));
+    // Prefix-group decisions draw from their own stream so the arrival /
+    // length streams above are untouched by `prefix_share` (and identical
+    // to the pre-prefix generator for any setting).
+    let mut content = Rng::new(seed ^ 0xC0DE_5EEDu64.rotate_left(32));
     let mut events = Vec::new();
     let mut t = 0.0f64;
     let mut window_end = 0.0f64;
@@ -72,7 +107,27 @@ pub fn generate(cfg: &MooncakeTraceConfig, seed: u64) -> Trace {
             (rng.lognormal(cfg.prompt_mu, cfg.prompt_sigma) as usize).clamp(8, cfg.max_prompt);
         let output_len =
             (rng.lognormal(cfg.output_mu, cfg.output_sigma) as usize).clamp(1, cfg.max_output);
-        let prompt: Vec<u32> = (0..prompt_len as u32).map(|i| uniq.wrapping_add(i)).collect();
+        // Shared-template opening: `shared` tokens of group identity, the
+        // tail from the per-request unique counter. Groups are drawn even
+        // for non-sharing requests to keep the content stream aligned.
+        let group = if cfg.prefix_groups > 0 { content.range_usize(0, cfg.prefix_groups) } else { 0 };
+        let shared = if cfg.prefix_share > 0.0
+            && cfg.prefix_groups > 0
+            && content.chance(cfg.prefix_share)
+        {
+            cfg.prefix_len.min(prompt_len)
+        } else {
+            0
+        };
+        let prompt: Vec<u32> = (0..prompt_len)
+            .map(|i| {
+                if i < shared {
+                    template_token(group, i)
+                } else {
+                    uniq.wrapping_add(i as u32)
+                }
+            })
+            .collect();
         uniq = uniq.wrapping_add(prompt_len as u32 + 29);
         events.push(TraceEvent {
             arrival_s: t,
@@ -129,5 +184,53 @@ mod tests {
     fn deterministic_per_seed() {
         let cfg = MooncakeTraceConfig { duration_s: 120.0, ..Default::default() };
         assert_eq!(generate(&cfg, 9).events, generate(&cfg, 9).events);
+    }
+
+    #[test]
+    fn shared_prefixes_carry_real_block_identity() {
+        use crate::coordinator::block_manager::chain_hashes;
+        let cfg = MooncakeTraceConfig { duration_s: 1200.0, ..Default::default() };
+        let tr = generate(&cfg, 3);
+        // Root-block hashes repeat across requests of the same group —
+        // the prefix cache can actually hit on replay.
+        let mut roots: Vec<u64> =
+            tr.events.iter().filter_map(|e| chain_hashes(&e.prompt, 16).first().copied()).collect();
+        let total = roots.len();
+        roots.sort_unstable();
+        roots.dedup();
+        assert!(
+            roots.len() < total,
+            "no shared root blocks in {total} requests — prefix families missing"
+        );
+        assert!(
+            roots.len() <= total - total / 4,
+            "sharing too rare: {} distinct roots in {total}",
+            roots.len()
+        );
+        // With sharing disabled every root is unique (the old behaviour).
+        let cold =
+            generate(&MooncakeTraceConfig { prefix_share: 0.0, ..cfg.clone() }, 3);
+        let mut cold_roots: Vec<u64> = cold
+            .events
+            .iter()
+            .filter_map(|e| chain_hashes(&e.prompt, 16).first().copied())
+            .collect();
+        let n = cold_roots.len();
+        cold_roots.sort_unstable();
+        cold_roots.dedup();
+        assert_eq!(cold_roots.len(), n, "prefix_share 0 keeps prompts all-unique");
+    }
+
+    #[test]
+    fn prefix_share_leaves_arrival_and_length_streams_unchanged() {
+        let cfg = MooncakeTraceConfig { duration_s: 600.0, ..Default::default() };
+        let warm = generate(&MooncakeTraceConfig { prefix_share: 0.9, ..cfg.clone() }, 5);
+        let cold = generate(&MooncakeTraceConfig { prefix_share: 0.0, ..cfg.clone() }, 5);
+        assert_eq!(warm.len(), cold.len());
+        for (w, c) in warm.events.iter().zip(cold.events.iter()) {
+            assert_eq!(w.arrival_s, c.arrival_s, "arrival stream must not depend on sharing");
+            assert_eq!(w.prompt_len, c.prompt_len);
+            assert_eq!(w.output_len, c.output_len);
+        }
     }
 }

@@ -9,6 +9,11 @@
 //! histograms are preallocated, and the probe reports how many trace
 //! events landed inside the measured window.
 //!
+//! The window is not pure decode: the probe's churn companion drives
+//! prefix-cache hits (resurrections) *and* evictions through the block
+//! manager every iteration, so the zero-allocation contract is asserted
+//! over the cache's recycle paths too.
+//!
 //! This file holds exactly one test so no concurrent test thread can
 //! allocate inside the measured window (the counter is process-global).
 
@@ -33,10 +38,19 @@ fn steady_decode_iterations_do_not_allocate() {
         probe.trace_events,
         probe.iterations
     );
+    assert!(
+        probe.cache_hits >= probe.iterations && probe.cache_evictions >= probe.iterations,
+        "cache churn must be live inside the window ({} hits / {} evictions over {} \
+         iterations) — a zero-alloc pass with an idle cache would not test recycling",
+        probe.cache_hits,
+        probe.cache_evictions,
+        probe.iterations
+    );
     assert_eq!(
         probe.allocs_total, 0,
         "steady-state decode iterations allocated {} times over {} iterations \
-         with tracing enabled (contract: zero once scratch buffers are warm)",
+         with tracing enabled and live cache churn (contract: zero once scratch \
+         buffers are warm)",
         probe.allocs_total, probe.iterations
     );
 }

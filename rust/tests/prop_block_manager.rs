@@ -1,0 +1,271 @@
+//! Seeded property suite for the intrusive-list `BlockManager` (the
+//! prefix-cache recycling core). Random interleavings of
+//! `allocate_tagged` / `grow` / `release` against small pools — sized so
+//! evictions, resurrections, and out-of-memory rejections all fire —
+//! with the full invariant set re-checked after **every** operation:
+//!
+//! 1. refcount conservation — `used_blocks + free_blocks == num_blocks`,
+//!    recounted from per-block views, not the manager's own counters;
+//! 2. every prefix-cache entry points at a block whose inline hash
+//!    matches the entry's key (the map and the block array never drift);
+//! 3. no block is simultaneously on a free/LRU list and referenced by a
+//!    sequence (`refcount > 0` xor `listed`);
+//! 4. the free/LRU lists are well-formed partitions: walking every tier
+//!    bucket plus the untracked list visits each free block exactly
+//!    once, LRU members are hashed refcount-0 blocks in their tier's
+//!    bucket, untracked members are unhashed.
+//!
+//! LRU order itself (release order = eviction order within a bucket,
+//! resurrection moves a family to the MRU end) is pinned by the
+//! deterministic scenarios at the bottom — the random walk cannot know
+//! which physical block a shared hash resolves to once entries shadow.
+//!
+//! Tests enumerate their own hash universe (every chain hash they ever
+//! passed in) so cache contents are checked without iterating the
+//! manager's maps.
+
+use std::collections::HashSet;
+
+use hygen::coordinator::block_manager::{synthetic_chain, BlockManager, EvictionPolicy};
+use hygen::coordinator::classes::MAX_CLASSES;
+use hygen::util::rng::Rng;
+
+const BLOCK_SIZE: usize = 4;
+
+/// Re-derive every invariant from read-only probes. `universe` is every
+/// hash any chain ever contained (superset of live cache keys).
+fn check_invariants(bm: &BlockManager, universe: &[u64], ctx: &str) {
+    let n = bm.num_blocks();
+    // Per-block recount: listed xor referenced, and the counts add up.
+    let mut listed = 0usize;
+    let mut referenced = 0usize;
+    for b in 0..n as u32 {
+        let v = bm.block_view(b).expect("block id in range");
+        assert!(
+            (v.refcount > 0) != v.listed,
+            "{ctx}: block {b} refcount={} listed={} — must be exactly one",
+            v.refcount,
+            v.listed
+        );
+        if v.listed {
+            listed += 1;
+            if v.untracked {
+                assert!(v.hash.is_none(), "{ctx}: untracked block {b} carries a hash");
+            } else {
+                assert!(v.hash.is_some(), "{ctx}: LRU-listed block {b} has no hash");
+            }
+        } else {
+            referenced += 1;
+        }
+    }
+    assert_eq!(listed, bm.free_blocks(), "{ctx}: free_blocks drifted from per-block recount");
+    assert_eq!(referenced, bm.used_blocks(), "{ctx}: used_blocks drifted from per-block recount");
+    assert_eq!(listed + referenced, n, "{ctx}: conservation used + free == num_blocks");
+
+    // Cache entries resolve to blocks that still carry the same hash.
+    let mut distinct: HashSet<u64> = HashSet::new();
+    let mut cached = 0usize;
+    for &h in universe {
+        if !distinct.insert(h) {
+            continue;
+        }
+        if let Some(b) = bm.cache_lookup(h) {
+            cached += 1;
+            let v = bm.block_view(b).expect("cached block id in range");
+            assert_eq!(
+                v.hash,
+                Some(h),
+                "{ctx}: cache entry {h:#x} points at block {b} whose hash is {:?}",
+                v.hash
+            );
+        }
+    }
+    assert_eq!(
+        cached,
+        bm.cache_entries(),
+        "{ctx}: cache holds entries outside the test's hash universe"
+    );
+
+    // The lists partition the free blocks exactly.
+    let mut walk = Vec::new();
+    let mut seen: HashSet<u32> = HashSet::new();
+    let mut total = 0usize;
+    for bucket in 0..MAX_CLASSES {
+        bm.lru_order(bucket, &mut walk);
+        for &b in &walk {
+            assert!(seen.insert(b), "{ctx}: block {b} on two free lists");
+            let v = bm.block_view(b).expect("listed block id in range");
+            assert_eq!(v.refcount, 0, "{ctx}: LRU block {b} still referenced");
+            assert!(v.hash.is_some() && !v.untracked);
+            assert_eq!(
+                (v.tier as usize).min(MAX_CLASSES - 1),
+                bucket,
+                "{ctx}: block {b} filed under bucket {bucket} but tagged tier {}",
+                v.tier
+            );
+        }
+        total += walk.len();
+    }
+    bm.untracked_order(&mut walk);
+    for &b in &walk {
+        assert!(seen.insert(b), "{ctx}: block {b} on two free lists");
+        let v = bm.block_view(b).expect("listed block id in range");
+        assert_eq!(v.refcount, 0, "{ctx}: untracked block {b} still referenced");
+    }
+    total += walk.len();
+    assert_eq!(total, bm.free_blocks(), "{ctx}: list walks disagree with free_blocks");
+}
+
+/// One random interleaving, invariants re-checked after every op.
+fn random_walk(seed: u64, num_blocks: usize, ops: usize, policy: EvictionPolicy) {
+    let mut rng = Rng::new(seed);
+    let mut bm = BlockManager::new(num_blocks, BLOCK_SIZE);
+    bm.set_eviction_policy(policy);
+    let mut universe: Vec<u64> = Vec::new();
+    // (id, chain) for live sequences; ids are never reused so shadowed
+    // cache entries genuinely occur.
+    let mut live: Vec<(u64, Vec<u64>)> = Vec::new();
+    let mut next_id = 1u64;
+
+    for op in 0..ops {
+        let ctx = format!("seed {seed} policy {policy:?} op {op}");
+        match rng.range(0, 10) {
+            // allocate: shared-prefix families force hits/resurrections,
+            // unique tails force fresh blocks and evictions.
+            0..=4 => {
+                let group = rng.range(1, 7);
+                let total_blocks = rng.range_usize(1, 7);
+                let shared = rng.range_usize(0, total_blocks + 1);
+                let chain = synthetic_chain(group, shared, next_id, total_blocks);
+                universe.extend_from_slice(&chain);
+                let tokens = total_blocks * BLOCK_SIZE - rng.range_usize(0, BLOCK_SIZE);
+                let class = rng.range_usize(0, MAX_CLASSES);
+                let tier = rng.range(0, 4) as u8;
+                let before = (bm.free_blocks(), bm.num_seqs(), bm.cache_entries());
+                match bm.allocate_tagged(next_id, tokens, &chain, class, tier) {
+                    Some(cached) => {
+                        assert!(cached <= tokens, "{ctx}: cached tokens exceed request");
+                        assert!(bm.is_allocated(next_id));
+                        assert_eq!(bm.tokens_of(next_id), tokens);
+                        live.push((next_id, chain));
+                    }
+                    None => {
+                        // Rejection must be a no-op.
+                        assert_eq!(
+                            (bm.free_blocks(), bm.num_seqs(), bm.cache_entries()),
+                            before,
+                            "{ctx}: failed allocate mutated state"
+                        );
+                    }
+                }
+                next_id += 1;
+            }
+            // grow a live sequence (decode append), possibly refused.
+            5..=6 if !live.is_empty() => {
+                let i = rng.range_usize(0, live.len());
+                let id = live[i].0;
+                let target = bm.tokens_of(id) + rng.range_usize(1, 3 * BLOCK_SIZE);
+                let before = bm.tokens_of(id);
+                if bm.grow(id, target) {
+                    assert_eq!(bm.tokens_of(id), target, "{ctx}: grow lost tokens");
+                } else {
+                    assert_eq!(bm.tokens_of(id), before, "{ctx}: failed grow mutated tokens");
+                }
+            }
+            // release a live sequence.
+            _ if !live.is_empty() => {
+                let i = rng.range_usize(0, live.len());
+                let (id, _) = live.swap_remove(i);
+                bm.release(id);
+                assert!(!bm.is_allocated(id));
+            }
+            _ => {}
+        }
+        check_invariants(&bm, &universe, &ctx);
+    }
+    // Drain: after releasing everything, every block is free again and
+    // the invariants still hold with an all-cached pool.
+    for (id, _) in live.drain(..) {
+        bm.release(id);
+    }
+    assert_eq!(bm.free_blocks(), num_blocks, "seed {seed}: leaked blocks after drain");
+    check_invariants(&bm, &universe, &format!("seed {seed} drained"));
+}
+
+#[test]
+fn random_interleavings_hold_invariants_tier_lru() {
+    for seed in 0..12u64 {
+        random_walk(0xB10C_0000 + seed, 24, 160, EvictionPolicy::TierLru);
+    }
+}
+
+#[test]
+fn random_interleavings_hold_invariants_lru() {
+    for seed in 0..12u64 {
+        random_walk(0x1B10_0000 + seed, 24, 160, EvictionPolicy::Lru);
+    }
+}
+
+#[test]
+fn tiny_pool_is_eviction_heavy_and_safe() {
+    // 6 blocks and 6-block requests: nearly every admission must evict
+    // or be refused; the walk exercises the full/empty edges.
+    for seed in 0..8u64 {
+        random_walk(0x71FF_0000 + seed, 6, 120, EvictionPolicy::TierLru);
+    }
+}
+
+/// LRU order within a bucket is release order, and resurrection moves a
+/// family to the MRU end — eviction takes the stalest family first.
+#[test]
+fn lru_order_tracks_release_and_resurrection() {
+    let mut bm = BlockManager::new(16, BLOCK_SIZE);
+    let chains: Vec<Vec<u64>> = (1..=3).map(|g| synthetic_chain(g, 2, 0, 2)).collect();
+    for (i, c) in chains.iter().enumerate() {
+        bm.allocate_tagged(i as u64, 2 * BLOCK_SIZE, c, 0, 0).expect("fits");
+    }
+    let block_of = |bm: &BlockManager, h: u64| bm.cache_lookup(h).expect("cached");
+    // Release A, B, C in order: bucket 0 reads [A.., B.., C..] LRU→MRU.
+    for i in 0..3u64 {
+        bm.release(i);
+    }
+    let mut order = Vec::new();
+    bm.lru_order(0, &mut order);
+    assert_eq!(order.len(), 6, "three 2-block families released");
+    assert_eq!(order[0], block_of(&bm, chains[0][0]), "A released first = LRU head");
+    assert_eq!(order[4], block_of(&bm, chains[2][0]), "C released last = MRU end");
+    // Resurrect A (a pure cache hit) and re-release: A moves behind C.
+    let cached = bm.allocate_tagged(10, 2 * BLOCK_SIZE, &chains[0], 0, 0).expect("fits");
+    assert_eq!(cached, 2 * BLOCK_SIZE, "fully served from cache");
+    bm.release(10);
+    bm.lru_order(0, &mut order);
+    assert_eq!(order[0], block_of(&bm, chains[1][0]), "B is now the eviction frontier");
+    assert_eq!(order[4], block_of(&bm, chains[0][0]), "resurrected A moved to MRU end");
+}
+
+/// TierLru spends low-tier blocks first; plain Lru ignores tiers and
+/// takes the globally stalest release.
+#[test]
+fn eviction_policy_orders_victims() {
+    let mk = || {
+        let mut bm = BlockManager::new(4, BLOCK_SIZE);
+        let hot = synthetic_chain(1, 2, 0, 2); // tier 2, released FIRST (stalest)
+        let cold = synthetic_chain(2, 2, 0, 2); // tier 0, released second
+        bm.allocate_tagged(1, 2 * BLOCK_SIZE, &hot, 1, 2).expect("fits");
+        bm.release(1);
+        bm.allocate_tagged(2, 2 * BLOCK_SIZE, &cold, 0, 0).expect("fits");
+        bm.release(2);
+        (bm, hot, cold)
+    };
+    // TierLru: the tier-0 family is evicted even though tier-2 is staler.
+    let (mut bm, hot, cold) = mk();
+    bm.allocate(3, 2 * BLOCK_SIZE, &[]).expect("evicts to fit");
+    assert!(bm.cache_lookup(hot[0]).is_some(), "tier-2 family survives under tier-lru");
+    assert!(bm.cache_lookup(cold[0]).is_none(), "tier-0 family evicted first");
+    // Lru: the stalest release (the tier-2 family) goes first.
+    let (mut bm, hot, cold) = mk();
+    bm.set_eviction_policy(EvictionPolicy::Lru);
+    bm.allocate(3, 2 * BLOCK_SIZE, &[]).expect("evicts to fit");
+    assert!(bm.cache_lookup(hot[0]).is_none(), "stalest family evicted under lru");
+    assert!(bm.cache_lookup(cold[0]).is_some(), "fresher family survives");
+}
